@@ -1,0 +1,134 @@
+//! End-to-end driver: exercises **all layers composed** on the paper's
+//! real workload.
+//!
+//! Pipeline per instance (G11…G15, 800 nodes):
+//!   1. build the instance (graph substrate) and its Ising model;
+//!   2. L3 coordinator pool solves it on the software engine;
+//!   3. the cycle-accurate dual-BRAM machine re-runs it (bit-identical
+//!      check) and yields exact cycles → modeled latency/energy;
+//!   4. the AOT JAX/Pallas artifact runs the same schedule through the
+//!      PJRT CPU client (L1+L2+runtime), asserted bit-identical for the
+//!      artifact-sized instance;
+//!   5. the headline metrics (cut, latency, energy vs CPU/GPU baselines)
+//!      are printed — the Fig. 11 / Table 6 numbers.
+//!
+//! Results of a full run are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_anneal [steps] [runs]
+//! ```
+
+use ssqa::annealer::{Annealer, SsqaEngine, SsqaParams};
+use ssqa::coordinator::{Job, JobSpec, Router, RoutingPolicy, WorkerPool};
+use ssqa::energy::{energy_j, fpga_latency_s, reduction_pct, Platform};
+use ssqa::graph::{random_graph, GraphSpec};
+use ssqa::hw::{DelayKind, HwConfig, HwEngine};
+use ssqa::problems::maxcut;
+use ssqa::resources::ResourceModel;
+use ssqa::runtime::PjrtRuntime;
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(500);
+    let runs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    // ---- stage 1+2: coordinator fan-out over the benchmark suite -------
+    println!("== stage 1/4: coordinator pool over G11..G15 ({runs} seeds × {steps} steps) ==");
+    let pool = WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
+    for spec in GraphSpec::all() {
+        for r in 0..runs {
+            pool.submit(Job::new(0, JobSpec::Named(spec), steps, 1 + r as u32 * 7919));
+        }
+    }
+    let outcomes = pool.drain();
+    for spec in GraphSpec::all() {
+        let cuts: Vec<i64> =
+            outcomes.iter().filter(|o| o.label == spec.name()).map(|o| o.cut).collect();
+        let best = cuts.iter().max().unwrap();
+        let mean = cuts.iter().sum::<i64>() as f64 / cuts.len() as f64;
+        println!("  {}: best cut {} mean {:.1}", spec.name(), best, mean);
+    }
+    println!("{}", pool.metrics.render());
+
+    // ---- stage 3: cycle-accurate machine, exact costs -------------------
+    println!("== stage 2/4: cycle-accurate dual-BRAM machine on G11 ==");
+    let g11 = GraphSpec::G11.build();
+    let params = SsqaParams::gset_default(steps);
+    let model = maxcut::ising_from_graph(&g11, params.j_scale);
+    let mut hw = HwEngine::new(HwConfig::default(), params);
+    let hw_res = hw.anneal(&model, steps, 1);
+    let mut sw = SsqaEngine::new(params, steps);
+    let sw_res = sw.anneal(&model, steps, 1);
+    assert_eq!(hw_res.best_sigma, sw_res.best_sigma, "hw/sw bit-exactness violated");
+    let u = ResourceModel::default().estimate(800, params.replicas, DelayKind::DualBram, 1, 166e6);
+    let lat = hw.latency_seconds();
+    println!(
+        "  bit-identical to software ✓ — cut {}, {} cycles, {:.2} ms @166 MHz, {:.3} W → {:.3} mJ",
+        hw_res.cut(&g11),
+        hw.stats().cycles,
+        lat * 1e3,
+        u.power_w,
+        energy_j(u.power_w, lat) * 1e3
+    );
+
+    // ---- stage 4: PJRT artifact (L1 Pallas + L2 JAX + runtime) ---------
+    println!("== stage 3/4: AOT JAX/Pallas artifact via PJRT ==");
+    match PjrtRuntime::new(Path::new("artifacts")) {
+        Err(e) => println!("  SKIPPED (run `make artifacts`): {e}"),
+        Ok(rt) => {
+            // artifact-sized instance for the bit-exactness assertion
+            let ga = random_graph(64, 200, &[-1, 1], 0x42);
+            let pa = SsqaParams { replicas: 8, ..SsqaParams::gset_default(100) };
+            let ma = maxcut::ising_from_graph(&ga, pa.j_scale);
+            let mut pj = rt.load_annealer(64, 8, pa).expect("load 64x8 artifact");
+            let pj_res = pj.anneal(&ma, 100, 7);
+            let mut sw_a = SsqaEngine::new(pa, 100);
+            let sw_a_res = sw_a.anneal(&ma, 100, 7);
+            assert_eq!(pj_res.replica_energies, sw_a_res.replica_energies);
+            let mean_step =
+                pj.last_step_times.iter().sum::<std::time::Duration>() / 100u32;
+            println!(
+                "  64×8 artifact bit-identical to software ✓ — cut {}, mean step {:?}",
+                pj_res.cut(&ga),
+                mean_step
+            );
+            // the paper-sized artifact on G11
+            let mut pj800 = rt.load_annealer(800, 20, params).expect("load 800x20 artifact");
+            let t0 = std::time::Instant::now();
+            let res800 = pj800.anneal(&model, steps.min(50), 1);
+            println!(
+                "  800×20 artifact: {} steps in {:?} (cut {})",
+                steps.min(50),
+                t0.elapsed(),
+                res800.cut(&g11)
+            );
+        }
+    }
+
+    // ---- headline metrics ------------------------------------------------
+    println!("== stage 4/4: paper headline (Fig. 11 / Table 6 shape) ==");
+    let cpu = Platform::cpu();
+    let gpu = Platform::gpu();
+    let cpu_lat = cpu.sw_latency_s(800, params.replicas, steps);
+    let gpu_lat = gpu.sw_latency_s(800, params.replicas, steps);
+    let prop_lat = fpga_latency_s(&model, steps, DelayKind::DualBram, 1, 166e6);
+    let prop_e = energy_j(u.power_w, prop_lat);
+    println!(
+        "  latency: CPU {:.0} ms / GPU {:.0} ms / proposed {:.2} ms  (reductions {:.1}% / {:.1}%)",
+        cpu_lat * 1e3,
+        gpu_lat * 1e3,
+        prop_lat * 1e3,
+        reduction_pct(cpu_lat, prop_lat),
+        reduction_pct(gpu_lat, prop_lat)
+    );
+    println!(
+        "  energy:  CPU {:.1} J / GPU {:.1} J / proposed {:.3} mJ  (reductions {:.4}% / {:.4}%)",
+        cpu.energy_j(cpu_lat),
+        gpu.energy_j(gpu_lat),
+        prop_e * 1e3,
+        reduction_pct(cpu.energy_j(cpu_lat), prop_e),
+        reduction_pct(gpu.energy_j(gpu_lat), prop_e)
+    );
+    println!("\ne2e OK — all layers composed.");
+}

@@ -1,0 +1,80 @@
+//! Cross-backend agreement demo: the software matvec engine, the
+//! cycle-accurate dual-BRAM machine and the shift-register machine all
+//! produce the identical trajectory; only their cost profiles differ.
+//!
+//! ```bash
+//! cargo run --release --example hw_vs_sw
+//! ```
+
+use ssqa::annealer::{Annealer, SsqaEngine, SsqaParams};
+use ssqa::graph::torus_2d;
+use ssqa::hw::{cycles_per_step, DelayKind, HwConfig, HwEngine};
+use ssqa::problems::maxcut;
+use ssqa::resources::ResourceModel;
+
+fn main() {
+    let steps = 200;
+    let g = torus_2d(10, 16, true, 7); // 160-spin toroidal instance
+    let params = SsqaParams { replicas: 8, ..SsqaParams::gset_default(steps) };
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+
+    let mut sw = SsqaEngine::new(params, steps);
+    let sw_res = sw.anneal(&model, steps, 99);
+
+    let mut dual = HwEngine::new(HwConfig::default(), params);
+    let dual_res = dual.anneal(&model, steps, 99);
+
+    let mut shift = HwEngine::new(
+        HwConfig { delay: DelayKind::ShiftReg, ..HwConfig::default() },
+        params,
+    );
+    let shift_res = shift.anneal(&model, steps, 99);
+
+    assert_eq!(sw_res.best_sigma, dual_res.best_sigma, "sw vs dual-BRAM diverged");
+    assert_eq!(sw_res.best_sigma, shift_res.best_sigma, "sw vs shift-reg diverged");
+    println!("all three backends agree: cut = {}\n", sw_res.cut(&g));
+
+    let rm = ResourceModel::default();
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "metric", "dual-BRAM", "shift-register"
+    );
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "cycles/step",
+        cycles_per_step(&model, DelayKind::DualBram),
+        cycles_per_step(&model, DelayKind::ShiftReg)
+    );
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "total cycles",
+        dual.stats().cycles,
+        shift.stats().cycles
+    );
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "BRAM delay reads",
+        dual.stats().sigma_delay.bram_reads,
+        shift.stats().sigma_delay.bram_reads
+    );
+    println!(
+        "{:<22} {:>14} {:>14}",
+        "register shifts",
+        dual.stats().sigma_delay.register_shifts,
+        shift.stats().sigma_delay.register_shifts
+    );
+    let ud = rm.estimate(g.num_nodes(), params.replicas, DelayKind::DualBram, 1, 166e6);
+    let us = rm.estimate(g.num_nodes(), params.replicas, DelayKind::ShiftReg, 1, 166e6);
+    println!("{:<22} {:>14} {:>14}", "modeled LUT", ud.luts, us.luts);
+    println!("{:<22} {:>14} {:>14}", "modeled FF", ud.ffs, us.ffs);
+    println!(
+        "{:<22} {:>14.3} {:>14.3}",
+        "modeled power (W)", ud.power_w, us.power_w
+    );
+    println!(
+        "{:<22} {:>13.3}s {:>13.3}s",
+        "modeled latency",
+        dual.latency_seconds(),
+        shift.latency_seconds()
+    );
+}

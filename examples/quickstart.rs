@@ -1,0 +1,57 @@
+//! Quickstart: solve a G11-class 800-node MAX-CUT instance with SSQA
+//! and print the cut, the replica energies and the modeled FPGA cost.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ssqa::annealer::{Annealer, SsqaEngine, SsqaParams};
+use ssqa::energy::{energy_j, fpga_latency_s};
+use ssqa::graph::GraphSpec;
+use ssqa::hw::DelayKind;
+use ssqa::problems::maxcut;
+use ssqa::resources::ResourceModel;
+
+fn main() {
+    let steps = 500;
+    let graph = GraphSpec::G11.build();
+    println!(
+        "instance: {} — {} nodes, {} edges ({})",
+        GraphSpec::G11.name(),
+        graph.num_nodes(),
+        graph.num_edges(),
+        GraphSpec::G11.structure()
+    );
+
+    let params = SsqaParams::gset_default(steps);
+    let model = maxcut::ising_from_graph(&graph, params.j_scale);
+    let mut engine = SsqaEngine::new(params, steps);
+    let t0 = std::time::Instant::now();
+    let result = engine.anneal(&model, steps, 1);
+    let wall = t0.elapsed();
+
+    println!(
+        "SSQA (R = {}, {} steps): cut = {}, best replica energy = {}",
+        params.replicas,
+        steps,
+        result.cut(&graph),
+        result.best_energy
+    );
+    println!("software wall time on this host: {wall:?}");
+
+    // what the paper's FPGA would cost for the same run
+    let lat = fpga_latency_s(&model, steps, DelayKind::DualBram, 1, 166e6);
+    let u = ResourceModel::default().estimate(
+        graph.num_nodes(),
+        params.replicas,
+        DelayKind::DualBram,
+        1,
+        166e6,
+    );
+    println!(
+        "modeled ZC706 (dual-BRAM): latency {:.2} ms, power {:.3} W, energy {:.3} mJ",
+        lat * 1e3,
+        u.power_w,
+        energy_j(u.power_w, lat) * 1e3
+    );
+}

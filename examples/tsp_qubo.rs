@@ -1,0 +1,48 @@
+//! §5.2 pathway demo: TSP and graph-isomorphism through the QUBO
+//! encoding — "any problem that admits an equivalent QUBO formulation
+//! can be executed by updating only the BRAM initialization files".
+//!
+//! ```bash
+//! cargo run --release --example tsp_qubo
+//! ```
+
+use ssqa::experiments::gi_tsp;
+use ssqa::experiments::ExpContext;
+use ssqa::graph::random_graph;
+use ssqa::problems::graph_iso::GiInstance;
+use ssqa::problems::tsp::TspInstance;
+
+fn main() {
+    // show the encodings first
+    let tsp = TspInstance::random(6, 0x7359);
+    let q = tsp.to_qubo(360);
+    println!(
+        "TSP n=6 → QUBO with {} binary variables ({} one-hot rows/cols + tour terms)",
+        q.n(),
+        2 * 6
+    );
+    let greedy = tsp.greedy_tour();
+    println!("greedy nearest-neighbour tour: {:?} length {}", greedy, tsp.tour_length(&greedy));
+
+    let g1 = random_graph(8, 12, &[1], 0x61);
+    let (gi, perm) = GiInstance::permuted(g1, 0x99);
+    println!(
+        "\nGI n=8 → QUBO with {} variables; hidden permutation {:?}",
+        gi.num_vars(),
+        perm
+    );
+
+    // then run the full §5.2 experiment (same harness as `ssqa
+    // experiment --id gi`)
+    let ctx = ExpContext {
+        runs: 8,
+        steps: 800,
+        out_dir: "results".into(),
+        quick: false,
+        seed: 11,
+    };
+    match gi_tsp(&ctx) {
+        Ok(md) => println!("\n{md}"),
+        Err(e) => eprintln!("experiment failed: {e:#}"),
+    }
+}

@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the SSQA spin update — the L1 correctness signal.
+
+Implements the bit-exactness contract of DESIGN.md §3, shared with the
+Rust software engine (`rust/src/annealer/ssqa.rs`), the Rust hardware
+cycle model (`rust/src/hw/engine.rs`) and the Pallas kernel
+(`kernels/ssqa_step.py`):
+
+* all arithmetic in int32; spins are ±1;
+* one independent xorshift32 stream per (spin, replica) cell, seeded by
+  ``splitmix32(seed + i·0x9E3779B9 + k·0x85EBCA6B) | 1``, advanced once
+  per cell per annealing step, noise sign from the MSB;
+* the update of Eq. (6): ``I = h + J·σ(t) + n·r + Q·σ_{k+1}(t−1)``,
+  saturating accumulator with threshold I0 / offset α, sign output;
+* the replica coupling reads the *two-step-delayed* neighbour state —
+  the dual-BRAM t−1 port (d = 1 in Eq. 6a).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+GOLD = jnp.uint32(0x9E3779B9)
+MIX = jnp.uint32(0x85EBCA6B)
+MIX2 = jnp.uint32(0xC2B2AE35)
+
+
+def splitmix32(x):
+    """splitmix32 finalizer over uint32 (bit-exact with rust)."""
+    x = jnp.asarray(x, U32)
+    z = x + GOLD
+    z = (z ^ (z >> 16)) * MIX
+    z = (z ^ (z >> 13)) * MIX2
+    return z ^ (z >> 16)
+
+
+def xorshift32_step(state):
+    """One Marsaglia 13/17/5 step over a uint32 array."""
+    x = jnp.asarray(state, U32)
+    x = x ^ (x << 13)
+    x = x ^ (x >> 17)
+    x = x ^ (x << 5)
+    return x
+
+
+def seed_cells(seed: int, n: int, r: int):
+    """(N, R) uint32 initial states: splitmix32(seed + i·GOLD + k·MIX)|1."""
+    i = jnp.arange(n, dtype=U32)[:, None]
+    k = jnp.arange(r, dtype=U32)[None, :]
+    mixed = jnp.uint32(seed) + i * GOLD + k * MIX
+    return splitmix32(mixed) | jnp.uint32(1)
+
+
+def init_state(seed: int, n: int, r: int):
+    """Initial (sigma, sigma_prev, is, rng) matching SsqaState::init."""
+    rng = seed_cells(seed, n, r)
+    sigma = jnp.where((rng >> 31) == 1, -1, 1).astype(I32)
+    return sigma, sigma, jnp.zeros((n, r), I32), rng
+
+
+def ssqa_step_ref(j, h, sigma, sigma_prev, is_, rng, q, noise, i0, alpha):
+    """One synchronous SSQA step (Eq. 6) — the oracle.
+
+    Args mirror the artifact signature:
+      j:          (N, N) int32 couplings (symmetric, zero diagonal)
+      h:          (N,)  int32 biases
+      sigma:      (N, R) int32 ±1       — σ(t)
+      sigma_prev: (N, R) int32 ±1       — σ(t−1)
+      is_:        (N, R) int32          — saturating accumulators
+      rng:        (N, R) uint32         — xorshift32 states
+      q, noise, i0, alpha: int32 scalars
+    Returns (sigma', sigma, is', rng') — the new state tuple.
+    """
+    j = jnp.asarray(j, I32)
+    h = jnp.asarray(h, I32)
+    sigma = jnp.asarray(sigma, I32)
+    sigma_prev = jnp.asarray(sigma_prev, I32)
+    is_ = jnp.asarray(is_, I32)
+    q = jnp.asarray(q, I32)
+    noise = jnp.asarray(noise, I32)
+    i0 = jnp.asarray(i0, I32)
+    alpha = jnp.asarray(alpha, I32)
+
+    rng_new = xorshift32_step(rng)
+    r = jnp.where((rng_new >> 31) == 1, -1, 1).astype(I32)
+
+    # J·σ(t): one matvec per replica. Computed in f32 — exact because
+    # |J| ≤ 64 (4-bit weights × scale 8), σ = ±1, N ≤ 800 keeps every
+    # product and partial sum below 2²⁴, so f32 accumulation is
+    # bit-identical to int32 while hitting the fast matmul path (and
+    # the MXU on real TPUs). Verified exhaustively by the test suite.
+    acc = jnp.matmul(j.astype(jnp.float32), sigma.astype(jnp.float32)).astype(I32)
+    # replica coupling: σ_{i,(k+1) mod R}(t−1)
+    up = jnp.roll(sigma_prev, shift=-1, axis=1)
+    inp = acc + h[:, None] + noise * r + q * up
+
+    s = is_ + inp
+    is_new = jnp.where(s >= i0, i0 - alpha, jnp.where(s < -i0, -i0, s)).astype(I32)
+    sigma_new = jnp.where(is_new >= 0, 1, -1).astype(I32)
+    return sigma_new, sigma, is_new, rng_new
+
+
+def ising_energy(j, h, sigma_col):
+    """Ising energy of one replica column (test utility)."""
+    j = jnp.asarray(j, jnp.int64)
+    s = jnp.asarray(sigma_col, jnp.int64)
+    pair = -jnp.einsum("ij,i,j->", j, s, s) / 2
+    return pair - jnp.dot(jnp.asarray(h, jnp.int64), s)

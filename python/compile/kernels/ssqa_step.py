@@ -1,0 +1,133 @@
+"""Pallas kernel for the SSQA spin-update hot spot (Layer 1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+streams one 4-bit ``J_ij`` word per clock from BRAM through R replica-
+parallel MAC gates. On TPU the same schedule becomes: block the weight
+matrix into ``(TILE_N, N)`` stripes staged through VMEM (the BRAM
+analogue) while the replica-parallel axis becomes the MXU lane axis —
+the N serial MACs of a spin gate collapse into one int32
+``dot_general`` per stripe. The dual-BRAM ping-pong is the functional
+``(σ(t), σ(t−1))`` state pair threaded by the caller.
+
+Must be lowered with ``interpret=True`` for CPU-PJRT execution (real TPU
+lowering emits a Mosaic custom-call the CPU plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def _tile(n: int, cap: int = 128) -> int:
+    """Largest divisor of n not exceeding cap (spin-stripe height)."""
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _kernel(j_ref, h_ref, sigma_ref, prev_ref, is_ref, rng_ref, scal_ref,
+            sigma_out, is_out, rng_out):
+    """One spin-stripe of the SSQA step.
+
+    Refs (per grid program over spin stripes of height BN):
+      j_ref     (BN, N)  int32 — weight stripe (VMEM-staged)
+      h_ref     (BN, 1)  int32
+      sigma_ref (N, R)   int32 — full σ(t), resident
+      prev_ref  (BN, R)  int32 — σ(t−1) stripe
+      is_ref    (BN, R)  int32
+      rng_ref   (BN, R)  uint32
+      scal_ref  (1, 4)   int32 — [q, noise, i0, alpha]
+    """
+    q = scal_ref[0, 0]
+    noise = scal_ref[0, 1]
+    i0 = scal_ref[0, 2]
+    alpha = scal_ref[0, 3]
+
+    # advance the per-cell xorshift32 streams
+    x = rng_ref[...]
+    x = x ^ (x << 13)
+    x = x ^ (x >> 17)
+    x = x ^ (x << 5)
+    rng_out[...] = x
+    r = jnp.where((x >> 31) == 1, -1, 1).astype(I32)
+
+    # the MXU step: (BN, N) @ (N, R). f32 accumulation is bit-exact for
+    # this operand range (|J| ≤ 64, σ = ±1, N ≤ 800 ⇒ sums < 2²⁴) and
+    # maps to the MXU/fast-matmul path — see ref.py for the argument.
+    acc = jax.lax.dot_general(
+        j_ref[...].astype(jnp.float32), sigma_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(I32)
+    prev = prev_ref[...]
+    up = jnp.roll(prev, shift=-1, axis=1)  # σ_{k+1}(t−1), periodic replicas
+    inp = acc + h_ref[...] + noise * r + q * up
+
+    s = is_ref[...] + inp
+    is_new = jnp.where(s >= i0, i0 - alpha, jnp.where(s < -i0, -i0, s)).astype(I32)
+    sigma_out[...] = jnp.where(is_new >= 0, 1, -1).astype(I32)
+    is_out[...] = is_new
+
+
+def ssqa_step_pallas(j, h, sigma, sigma_prev, is_, rng, q, noise, i0, alpha):
+    """Drop-in replacement for ``ref.ssqa_step_ref`` using the kernel.
+
+    Same contract: returns ``(sigma', sigma, is', rng')``.
+    """
+    n, r = sigma.shape
+    bn = _tile(n)
+    grid = (n // bn,)
+    scal = jnp.stack([jnp.asarray(v, I32) for v in (q, noise, i0, alpha)]).reshape(1, 4)
+    h2 = jnp.asarray(h, I32).reshape(n, 1)
+
+    out_shape = (
+        jax.ShapeDtypeStruct((n, r), I32),   # sigma'
+        jax.ShapeDtypeStruct((n, r), I32),   # is'
+        jax.ShapeDtypeStruct((n, r), U32),   # rng'
+    )
+    stripe = lambda i: (i, 0)  # noqa: E731 — stripe i of a (N, ·) operand
+    whole = lambda i: (0, 0)  # noqa: E731 — operand resident across programs
+
+    sigma_new, is_new, rng_new = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, n), stripe),   # J stripe — the BRAM stream
+            pl.BlockSpec((bn, 1), stripe),   # h stripe
+            pl.BlockSpec((n, r), whole),     # σ(t) resident (VMEM)
+            pl.BlockSpec((bn, r), stripe),   # σ(t−1) stripe
+            pl.BlockSpec((bn, r), stripe),   # Is stripe
+            pl.BlockSpec((bn, r), stripe),   # rng stripe
+            pl.BlockSpec((1, 4), whole),     # scalars
+        ],
+        out_specs=(
+            pl.BlockSpec((bn, r), stripe),
+            pl.BlockSpec((bn, r), stripe),
+            pl.BlockSpec((bn, r), stripe),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(
+        jnp.asarray(j, I32), h2, jnp.asarray(sigma, I32),
+        jnp.asarray(sigma_prev, I32), jnp.asarray(is_, I32),
+        jnp.asarray(rng, U32), scal,
+    )
+    # the new σ(t−1) is simply the incoming σ(t) — the BRAM bank swap
+    return sigma_new, jnp.asarray(sigma, I32), is_new, rng_new
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_footprint_bytes(n: int, r: int) -> int:
+    """Estimated VMEM working set per grid program (DESIGN.md §Perf):
+    J stripe + resident σ + five (BN, R) stripes of state."""
+    bn = _tile(n)
+    return 4 * (bn * n + n * r + 5 * bn * r + 4)

@@ -1,0 +1,72 @@
+"""Layer-2 JAX model: the SSQA compute graph around the Pallas kernel.
+
+Build-time only — lowered once by ``aot.py`` to HLO text; the Rust
+coordinator drives the step artifact from its hot loop (Q(t) and the
+noise schedule live in the Rust scheduler, exactly as the FPGA scheduler
+owns them in the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.ssqa_step import ssqa_step_pallas
+
+I32 = jnp.int32
+
+
+def ssqa_step(j, h, sigma, sigma_prev, is_, rng, q, noise, i0, alpha,
+              use_pallas: bool = True):
+    """One annealing step; the artifact entry point.
+
+    ``use_pallas`` selects the Pallas kernel (default) or the pure-jnp
+    oracle (kept lowerable for A/B artifacts and fusion comparisons).
+    """
+    fn = ssqa_step_pallas if use_pallas else ref.ssqa_step_ref
+    return fn(j, h, sigma, sigma_prev, is_, rng, q, noise, i0, alpha)
+
+
+def anneal(j, h, seed: int, steps: int, qs, noises, i0: int, alpha: int,
+           n: int, r: int, use_pallas: bool = False):
+    """Full annealing run via ``lax.scan`` (software-reference variant).
+
+    ``qs``/``noises`` are per-step int32 schedule arrays computed by the
+    caller (the Rust scheduler or a test). Returns the final state
+    tuple. The scan variant is used for algorithm-evaluation sweeps and
+    for validating the step artifact against a fused multi-step run.
+    """
+    state = ref.init_state(seed, n, r)
+
+    def body(state, sched):
+        q, noise = sched
+        new = ssqa_step(j, h, *state, q, noise, i0, alpha, use_pallas=use_pallas)
+        return new, ()
+
+    sched = (jnp.asarray(qs, I32), jnp.asarray(noises, I32))
+    final, _ = jax.lax.scan(body, state, sched)
+    return final
+
+
+def cut_values(j_graph_weights, sigma):
+    """MAX-CUT value of every replica column.
+
+    ``j_graph_weights`` is the (N, N) int32 matrix of *graph weights*
+    w_ij (not the Ising couplings): cut = Σ_{i<j} w_ij (1 − σ_i σ_j)/2.
+    """
+    w = jnp.asarray(j_graph_weights, jnp.int64)
+    s = jnp.asarray(sigma, jnp.int64)
+    total = jnp.sum(jnp.triu(w, 1))
+    # Σ_{i<j} w_ij σ_i σ_j per replica = σᵀwσ/2 (diagonal is zero)
+    pair = jnp.einsum("ik,ij,jk->k", s, w, s) // 2
+    return (total - pair) // 2
+
+
+def best_replica_energy(j, h, sigma):
+    """Minimum Ising energy over replica columns (harvest step)."""
+    js = jnp.asarray(j, jnp.int64)
+    s = jnp.asarray(sigma, jnp.int64)
+    pair = -jnp.einsum("ik,ij,jk->k", s, js, s) / 2
+    field = -jnp.einsum("i,ik->k", jnp.asarray(h, jnp.int64), s)
+    return jnp.min(pair + field)

@@ -1,0 +1,64 @@
+"""Cross-language golden trajectory test.
+
+Replays the fixture written by ``rust/tests/golden_fixture.rs`` through
+both the jnp reference and the Pallas kernel; the final state must be
+bit-identical to the Rust software engine's. This closes the
+bit-exactness loop across all four implementation layers.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.ssqa_step import ssqa_step_pallas
+
+FIXTURE = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures",
+    "golden_n16_r4.kv",
+)
+
+
+def load_fixture():
+    if not os.path.exists(FIXTURE):
+        pytest.skip("fixture not generated yet — run `cargo test` first")
+    kv = {}
+    with open(FIXTURE) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            k, v = line.split("=", 1)
+            kv[k.strip()] = v.strip()
+    return kv
+
+
+def ints(kv, key, dtype=np.int64):
+    return np.array([int(t) for t in kv[key].split()], dtype=dtype)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp-ref", "pallas"])
+def test_trajectory_matches_rust_engine(use_pallas):
+    kv = load_fixture()
+    n, r, steps, seed = (int(kv[k]) for k in ("n", "r", "steps", "seed"))
+    i0, alpha = int(kv["i0"]), int(kv["alpha"])
+    qs = ints(kv, "q_schedule")
+    noises = ints(kv, "noise_schedule")
+    j = ints(kv, "j", np.int32).reshape(n, n)
+    h = ints(kv, "h", np.int32)
+
+    state = ref.init_state(seed, n, r)
+    step = ssqa_step_pallas if use_pallas else ref.ssqa_step_ref
+    for t in range(steps):
+        state = step(j, h, *state, int(qs[t]), int(noises[t]), i0, alpha)
+
+    sigma, prev, is_, rng = (np.asarray(s) for s in state)
+    np.testing.assert_array_equal(
+        sigma.reshape(-1), ints(kv, "final_sigma"), err_msg="sigma")
+    np.testing.assert_array_equal(
+        prev.reshape(-1), ints(kv, "final_sigma_prev"), err_msg="sigma_prev")
+    np.testing.assert_array_equal(
+        is_.reshape(-1), ints(kv, "final_is"), err_msg="is")
+    np.testing.assert_array_equal(
+        rng.reshape(-1).astype(np.int64), ints(kv, "final_rng"), err_msg="rng")

@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle (bit-exact)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ssqa_step import ssqa_step_pallas, _tile, vmem_footprint_bytes
+
+
+def random_problem(rs, n, j_range=7):
+    j = rs.integers(-j_range, j_range + 1, size=(n, n), dtype=np.int32)
+    j = np.triu(j, 1)
+    j = j + j.T
+    h = rs.integers(-j_range, j_range + 1, size=(n,), dtype=np.int32)
+    return j, h
+
+
+def random_state(rs, n, r, i0):
+    sigma = rs.choice(np.array([-1, 1], dtype=np.int32), size=(n, r))
+    prev = rs.choice(np.array([-1, 1], dtype=np.int32), size=(n, r))
+    is_ = rs.integers(-i0, i0, size=(n, r), dtype=np.int32)
+    rng = rs.integers(1, 2**32, size=(n, r), dtype=np.uint32)
+    return sigma, prev, is_, rng
+
+
+def assert_step_matches(n, r, q, noise, i0, alpha, seed):
+    rs = np.random.default_rng(seed)
+    j, h = random_problem(rs, n)
+    sigma, prev, is_, rng = random_state(rs, n, r, i0)
+    got = ssqa_step_pallas(j, h, sigma, prev, is_, rng, q, noise, i0, alpha)
+    want = ref.ssqa_step_ref(j, h, sigma, prev, is_, rng, q, noise, i0, alpha)
+    for g, w, name in zip(got, want, ["sigma", "prev", "is", "rng"]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+
+
+@pytest.mark.parametrize("n,r", [(8, 4), (16, 20), (32, 8), (100, 20)])
+def test_kernel_matches_ref_fixed_shapes(n, r):
+    assert_step_matches(n, r, q=5, noise=12, i0=64, alpha=1, seed=n * 1000 + r)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 12, 16, 24, 48, 64]),
+    r=st.integers(min_value=1, max_value=24),
+    q=st.integers(min_value=0, max_value=64),
+    noise=st.integers(min_value=0, max_value=64),
+    i0=st.integers(min_value=2, max_value=128),
+    alpha=st.integers(min_value=0, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_kernel_matches_ref_hypothesis(n, r, q, noise, i0, alpha, seed):
+    assert_step_matches(n, r, q, noise, i0, alpha, seed)
+
+
+def test_multi_step_trajectory_matches():
+    """Bit-exactness must hold through long chains, not just one step."""
+    n, r, i0, alpha = 24, 6, 32, 1
+    rs = np.random.default_rng(7)
+    j, h = random_problem(rs, n, j_range=1)
+    state_k = ref.init_state(11, n, r)
+    state_r = state_k
+    for t in range(30):
+        q, noise = t // 3, max(0, 16 - t)
+        state_k = ssqa_step_pallas(j, h, *state_k, q, noise, i0, alpha)
+        state_r = ref.ssqa_step_ref(j, h, *state_r, q, noise, i0, alpha)
+        for a, b in zip(state_k, state_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_saturation_clamps_exactly():
+    """Eq. 6b edges: Is + I == I0 → I0 − α;  == −I0 − 1 → −I0."""
+    n, r, i0, alpha = 4, 2, 10, 1
+    j = np.zeros((n, n), np.int32)
+    h = np.zeros((n,), np.int32)
+    sigma = np.ones((n, r), np.int32)
+    prev = np.ones((n, r), np.int32)
+    rng = np.full((n, r), 2, np.uint32)  # MSB of next state is 0 ⇒ r=+1
+    # noise 0 so inp = q·prev = q
+    is_ = np.full((n, r), i0 - 3, np.int32)
+    out = ref.ssqa_step_ref(j, h, sigma, prev, is_, rng, q=3, noise=0, i0=i0, alpha=alpha)
+    np.testing.assert_array_equal(np.asarray(out[2]), np.full((n, r), i0 - alpha))
+    is_ = np.full((n, r), -i0 + 2, np.int32)
+    out = ref.ssqa_step_ref(j, h, sigma, prev, is_, rng, q=-3, noise=0, i0=i0, alpha=alpha)
+    np.testing.assert_array_equal(np.asarray(out[2]), np.full((n, r), -i0))
+
+
+def test_replica_coupling_is_periodic():
+    """Column k must couple to column (k+1) mod R of σ(t−1)."""
+    n, r, i0 = 2, 3, 100
+    j = np.zeros((n, n), np.int32)
+    h = np.zeros((n,), np.int32)
+    sigma = np.ones((n, r), np.int32)
+    prev = np.array([[1, -1, 1], [1, 1, -1]], np.int32)
+    is_ = np.zeros((n, r), np.int32)
+    rng = np.full((n, r), 2, np.uint32)
+    out = ref.ssqa_step_ref(j, h, sigma, prev, is_, rng, q=5, noise=0, i0=i0, alpha=1)
+    # inp = q·roll(prev): col0←prev col1, col1←prev col2, col2←prev col0
+    expect = 5 * np.roll(prev, -1, axis=1)
+    np.testing.assert_array_equal(np.asarray(out[2]), expect)
+
+
+def test_rng_stream_matches_rust_golden():
+    """xorshift32 from state 1 — the same goldens as rust/src/rng/tests.rs."""
+    s = np.uint32(1)
+    seq = []
+    import jax.numpy as jnp
+    x = jnp.asarray([s])
+    for _ in range(5):
+        x = ref.xorshift32_step(x)
+        seq.append(int(np.asarray(x)[0]))
+    assert seq == [270369, 67634689, 2647435461, 307599695, 2398689233]
+
+
+def test_splitmix_matches_rust_golden():
+    import jax.numpy as jnp
+    vals = [int(np.asarray(ref.splitmix32(jnp.uint32(v)))) for v in (0, 1, 0xFFFFFFFF)]
+    assert vals == [2462723854, 2527132011, 920564995]
+
+
+def test_init_state_matches_contract():
+    sigma, prev, is_, rng = ref.init_state(5, 3, 2)
+    got = np.asarray(rng)
+    for i in range(3):
+        for k in range(2):
+            mixed = np.uint32((5 + i * 0x9E3779B9 + k * 0x85EBCA6B) & 0xFFFFFFFF)
+            want = int(np.asarray(ref.splitmix32(mixed))) | 1
+            assert got[i, k] == want
+    np.testing.assert_array_equal(np.asarray(sigma), np.asarray(prev))
+    s = np.asarray(sigma)
+    np.testing.assert_array_equal(s, np.where(got >> 31 == 1, -1, 1))
+    assert np.all(np.asarray(is_) == 0)
+
+
+def test_tile_divides():
+    for n in [4, 64, 100, 256, 800, 801]:
+        bn = _tile(n)
+        assert n % bn == 0 and bn <= 128
+
+
+def test_vmem_footprint_within_budget():
+    # N=800, R=20 must fit comfortably in a 16 MiB VMEM (DESIGN.md §Perf)
+    assert vmem_footprint_bytes(800, 20) < 1 << 22

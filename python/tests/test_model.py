@@ -1,0 +1,90 @@
+"""L2 model tests: scan-based anneal, cut values, energy harvest."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def small_problem(n=12, seed=3):
+    rs = np.random.default_rng(seed)
+    w = rs.integers(0, 2, size=(n, n), dtype=np.int32)  # unit weights
+    w = np.triu(w, 1)
+    w = w + w.T
+    j_ising = (-w * 8).astype(np.int32)  # MAX-CUT mapping at scale 8
+    h = np.zeros((n,), np.int32)
+    return w, j_ising, h
+
+
+def test_anneal_scan_matches_stepwise():
+    w, j, h = small_problem()
+    n, r, steps = j.shape[0], 4, 15
+    qs = np.minimum(np.arange(steps) // 3, 8).astype(np.int32)
+    noises = np.maximum(12 - np.arange(steps), 1).astype(np.int32)
+
+    final = model.anneal(j, h, seed=9, steps=steps, qs=qs, noises=noises,
+                         i0=24, alpha=1, n=n, r=r)
+    state = ref.init_state(9, n, r)
+    for t in range(steps):
+        state = ref.ssqa_step_ref(j, h, *state, int(qs[t]), int(noises[t]), 24, 1)
+    for a, b in zip(final, state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_anneal_scan_pallas_path_matches_ref_path():
+    w, j, h = small_problem(n=8, seed=5)
+    n, r, steps = 8, 3, 8
+    qs = np.full(steps, 2, np.int32)
+    noises = np.full(steps, 6, np.int32)
+    a = model.anneal(j, h, 4, steps, qs, noises, 16, 1, n, r, use_pallas=False)
+    b = model.anneal(j, h, 4, steps, qs, noises, 16, 1, n, r, use_pallas=True)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_cut_values_against_numpy():
+    w, j, h = small_problem(n=10, seed=7)
+    rs = np.random.default_rng(1)
+    sigma = rs.choice(np.array([-1, 1], np.int32), size=(10, 5))
+    got = np.asarray(model.cut_values(w, sigma))
+    for k in range(5):
+        s = sigma[:, k]
+        want = sum(
+            int(w[i, jx])
+            for i in range(10)
+            for jx in range(i + 1, 10)
+            if s[i] != s[jx]
+        )
+        assert got[k] == want, f"replica {k}"
+
+
+def test_best_replica_energy_matches_ref():
+    w, j, h = small_problem(n=9, seed=11)
+    rs = np.random.default_rng(2)
+    sigma = rs.choice(np.array([-1, 1], np.int32), size=(9, 4))
+    got = int(np.asarray(model.best_replica_energy(j, h, sigma)))
+    per = [int(np.asarray(ref.ising_energy(j, h, sigma[:, k]))) for k in range(4)]
+    assert got == min(per)
+
+
+def test_ssqa_step_dispatch():
+    w, j, h = small_problem(n=6, seed=13)
+    state = ref.init_state(3, 6, 2)
+    out_ref = model.ssqa_step(j, h, *state, 1, 4, 16, 1, use_pallas=False)
+    out_pal = model.ssqa_step(j, h, *state, 1, 4, 16, 1, use_pallas=True)
+    for a, b in zip(out_ref, out_pal):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_energy_decreases_over_annealing():
+    """Sanity: annealing must find lower-energy states than the start."""
+    w, j, h = small_problem(n=16, seed=17)
+    n, r, steps = 16, 6, 120
+    qs = np.minimum(np.arange(steps) // 10, 12).astype(np.int32)
+    noises = np.maximum(28 - np.arange(steps) // 4, 2).astype(np.int32)
+    s0 = ref.init_state(21, n, r)
+    e0 = int(np.asarray(model.best_replica_energy(j, h, s0[0])))
+    final = model.anneal(j, h, 21, steps, qs, noises, 24, 1, n, r)
+    e1 = int(np.asarray(model.best_replica_energy(j, h, final[0])))
+    assert e1 < e0, f"no improvement: {e0} -> {e1}"

@@ -1,0 +1,80 @@
+"""Hypothesis property sweeps over the L1/L2 update invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def build_case(n, r, seed, i0):
+    rs = np.random.default_rng(seed)
+    j = rs.integers(-8, 9, size=(n, n), dtype=np.int32)
+    j = np.triu(j, 1)
+    j = j + j.T
+    h = rs.integers(-4, 5, size=(n,), dtype=np.int32)
+    sigma = rs.choice(np.array([-1, 1], np.int32), size=(n, r))
+    prev = rs.choice(np.array([-1, 1], np.int32), size=(n, r))
+    is_ = rs.integers(-i0, i0, size=(n, r), dtype=np.int32)
+    rng = rs.integers(1, 2**32, size=(n, r), dtype=np.uint32)
+    return j, h, sigma, prev, is_, rng
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    r=st.integers(1, 12),
+    q=st.integers(0, 32),
+    noise=st.integers(0, 32),
+    i0=st.integers(2, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_invariants_after_step(n, r, q, noise, i0, seed):
+    j, h, sigma, prev, is_, rng = build_case(n, r, seed, i0)
+    s2, p2, is2, rng2 = ref.ssqa_step_ref(j, h, sigma, prev, is_, rng, q, noise, i0, 1)
+    s2, p2, is2, rng2 = map(np.asarray, (s2, p2, is2, rng2))
+    # σ ∈ ±1 and consistent with sign(Is)
+    assert set(np.unique(s2)) <= {-1, 1}
+    np.testing.assert_array_equal(s2, np.where(is2 >= 0, 1, -1))
+    # Is ∈ [−I0, I0 − α]
+    assert is2.min() >= -i0 and is2.max() <= i0 - 1
+    # new prev is exactly the old sigma (BRAM bank swap)
+    np.testing.assert_array_equal(p2, sigma)
+    # RNG advanced exactly one xorshift step per cell and stays nonzero
+    np.testing.assert_array_equal(rng2, np.asarray(ref.xorshift32_step(rng)))
+    assert np.all(rng2 != 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 16), r=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_step_is_deterministic(n, r, seed):
+    j, h, sigma, prev, is_, rng = build_case(n, r, seed, 16)
+    a = ref.ssqa_step_ref(j, h, sigma, prev, is_, rng, 3, 5, 16, 1)
+    b = ref.ssqa_step_ref(j, h, sigma, prev, is_, rng, 3, 5, 16, 1)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 16), r=st.integers(2, 8), seed=st.integers(0, 2**16))
+def test_zero_noise_zero_q_is_pure_field_dynamics(n, r, seed):
+    """With q = noise = 0 every replica evolves independently and
+    identically when started identically."""
+    j, h, sigma, prev, is_, rng = build_case(n, r, seed, 32)
+    # make all replicas identical
+    sigma = np.repeat(sigma[:, :1], r, axis=1)
+    prev = np.repeat(prev[:, :1], r, axis=1)
+    is_ = np.repeat(is_[:, :1], r, axis=1)
+    out = ref.ssqa_step_ref(j, h, sigma, prev, is_, rng, 0, 0, 32, 1)
+    s2 = np.asarray(out[0])
+    for k in range(1, r):
+        np.testing.assert_array_equal(s2[:, k], s2[:, 0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 32), r=st.integers(1, 16))
+def test_seed_cells_unique_and_odd(seed, n, r):
+    cells = np.asarray(ref.seed_cells(seed, n, r))
+    assert cells.shape == (n, r)
+    assert np.all(cells % 2 == 1)  # the |1 guarantee
+    # collisions virtually impossible at these sizes
+    assert len(np.unique(cells)) == n * r

@@ -1,0 +1,36 @@
+//! Bench: regenerate Fig. 10 (resource scaling, both delay circuits)
+//! and time the cycle-accurate machine that backs the activity factors.
+
+use ssqa::annealer::{Annealer, SsqaParams};
+use ssqa::config::{bench, BenchArgs};
+use ssqa::experiments::{fig10, ExpContext};
+use ssqa::graph::torus_2d;
+use ssqa::hw::{DelayKind, HwConfig, HwEngine};
+use ssqa::problems::maxcut;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = ExpContext { quick: args.quick, out_dir: "results".into(), ..Default::default() };
+    if args.matches("fig10/model") {
+        let mut report = String::new();
+        bench("fig10/resource model sweep", 10, || {
+            report = fig10(&ctx).expect("fig10");
+        });
+        println!("\n{report}");
+    }
+    // time the cycle simulator per delay kind (activity-factor source)
+    let steps = if args.quick { 20 } else { 100 };
+    for (name, kind) in [("dual-bram", DelayKind::DualBram), ("shift-reg", DelayKind::ShiftReg)] {
+        let bname = format!("fig10/hw-sim {name} 160sp×8rep×{steps}st");
+        if !args.matches(&bname) {
+            continue;
+        }
+        let g = torus_2d(10, 16, true, 5);
+        let params = SsqaParams { replicas: 8, ..SsqaParams::gset_default(steps) };
+        let model = maxcut::ising_from_graph(&g, params.j_scale);
+        bench(&bname, 3, || {
+            let mut hw = HwEngine::new(HwConfig { delay: kind, ..HwConfig::default() }, params);
+            let _ = hw.anneal(&model, steps, 1);
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 11 (energy–latency trade-off, G12/G15).
+
+use ssqa::config::{bench, BenchArgs};
+use ssqa::experiments::{fig11, ExpContext};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = ExpContext { quick: args.quick, out_dir: "results".into(), ..Default::default() };
+    if !args.matches("fig11") {
+        return;
+    }
+    let mut report = String::new();
+    bench("fig11/energy-latency (G12,G15)", 1, || {
+        report = fig11(&ctx).expect("fig11");
+    });
+    println!("\n{report}");
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 12 (G14 mean cut + energy, SSA vs SSQA).
+
+use ssqa::config::{bench, BenchArgs};
+use ssqa::experiments::{fig12, ExpContext};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = ExpContext {
+        runs: if args.quick { 4 } else { 10 },
+        quick: args.quick,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    if !args.matches("fig12") {
+        return;
+    }
+    let mut report = String::new();
+    bench("fig12/G14 SSA-vs-SSQA", 1, || {
+        report = fig12(&ctx).expect("fig12");
+    });
+    println!("\n{report}");
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 8 (G11 cut vs replicas / vs steps) and time
+//! the underlying sweep. `cargo bench --bench fig8_replicas [-- --quick]`.
+
+use ssqa::config::{bench, BenchArgs};
+use ssqa::experiments::{fig8, ExpContext};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = ExpContext {
+        runs: if args.quick { 5 } else { 30 },
+        quick: args.quick,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    if !args.matches("fig8") {
+        return;
+    }
+    let mut report = String::new();
+    bench("fig8/replica+step sweep (G11)", 1, || {
+        report = fig8(&ctx).expect("fig8");
+    });
+    println!("\n{report}");
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 9 (normalized cut vs R on all five graphs).
+
+use ssqa::config::{bench, BenchArgs};
+use ssqa::experiments::{fig9, ExpContext};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = ExpContext {
+        runs: if args.quick { 5 } else { 30 },
+        quick: args.quick,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    if !args.matches("fig9") {
+        return;
+    }
+    let mut report = String::new();
+    bench("fig9/normalized replica sweep (G11..G15)", 1, || {
+        report = fig9(&ctx).expect("fig9");
+    });
+    println!("\n{report}");
+}

@@ -1,0 +1,69 @@
+//! Hot-path microbenchmarks for the §Perf pass: the software engine
+//! step (L3 matvec), the cycle simulator step, and the PJRT artifact
+//! step (L1+L2 via the runtime).
+
+use ssqa::annealer::{Annealer, SsqaEngine, SsqaParams};
+use ssqa::config::{bench, updates_per_sec, BenchArgs};
+use ssqa::graph::GraphSpec;
+use ssqa::hw::{HwConfig, HwEngine};
+use ssqa::problems::maxcut;
+use ssqa::runtime::PjrtRuntime;
+use std::path::Path;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let steps = if args.quick { 25 } else { 100 };
+    let g = GraphSpec::G11.build();
+    let params = SsqaParams::gset_default(steps);
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+    let (n, r) = (g.num_nodes(), params.replicas);
+
+    if args.matches("hotpath/sw-engine") {
+        let s = bench(&format!("hotpath/sw-engine G11 {steps}st"), 5, || {
+            let eng = SsqaEngine::new(params, steps);
+            let _ = eng.run(&model, steps, 1);
+        });
+        println!(
+            "  → {:.2} M spin-updates/s",
+            updates_per_sec(n, r, steps, s.min) / 1e6
+        );
+    }
+
+    if args.matches("hotpath/hw-sim") {
+        let s = bench(&format!("hotpath/hw-sim dual-BRAM G11 {steps}st"), 3, || {
+            let mut hw = HwEngine::new(HwConfig::default(), params);
+            let _ = hw.anneal(&model, steps, 1);
+        });
+        println!(
+            "  → {:.2} M spin-updates/s ({:.2} M cycles/s simulated)",
+            updates_per_sec(n, r, steps, s.min) / 1e6,
+            (ssqa::hw::cycles_per_step(&model, ssqa::hw::DelayKind::DualBram) as f64
+                * steps as f64)
+                / s.min.as_secs_f64()
+                / 1e6
+        );
+    }
+
+    if args.matches("hotpath/pjrt-step") {
+        match PjrtRuntime::new(Path::new("artifacts")) {
+            Err(e) => println!("hotpath/pjrt-step SKIPPED: {e}"),
+            Ok(rt) => {
+                let pj_steps = if args.quick { 5 } else { 20 };
+                for kernel in ["pallas", "jnp-ref"] {
+                    let Ok(mut pj) = rt.load_annealer_kernel(800, 20, params, kernel) else {
+                        println!("hotpath/pjrt-step {kernel} artifact missing — `make artifacts`");
+                        continue;
+                    };
+                    let s = bench(&format!("hotpath/pjrt-step {kernel} 800x20 ×{pj_steps}"), 3, || {
+                        let _ = pj.run_steps(&model, pj_steps, 1).expect("pjrt");
+                    });
+                    println!(
+                        "  → {:?} per step, {:.2} M spin-updates/s",
+                        s.min / pj_steps as u32,
+                        updates_per_sec(n, r, pj_steps, s.min) / 1e6
+                    );
+                }
+            }
+        }
+    }
+}

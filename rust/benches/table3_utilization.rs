@@ -1,0 +1,21 @@
+//! Bench: regenerate Table 3 (N = 800 utilization + power) and Table 4
+//! (platform constants); times the model evaluation.
+
+use ssqa::config::{bench, BenchArgs};
+use ssqa::experiments::{table3, table4, ExpContext};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = ExpContext { quick: args.quick, out_dir: "results".into(), ..Default::default() };
+    if args.matches("table3") {
+        let mut report = String::new();
+        bench("table3/utilization @ N=800", 100, || {
+            report = table3(&ctx).expect("table3");
+        });
+        println!("\n{report}");
+    }
+    if args.matches("table4") {
+        let report = table4(&ctx).expect("table4");
+        println!("{report}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Table 5 (HA-SSA 90k-step SSA vs 500-step SSQA on
+//! G11–G13, plus the spin-state memory comparison). The full 90,000-step
+//! SSA schedule is the dominant cost — exactly the paper's point.
+
+use ssqa::config::{bench, BenchArgs};
+use ssqa::experiments::{table5, ExpContext};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = ExpContext {
+        runs: if args.quick { 3 } else { 10 },
+        quick: args.quick,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    if !args.matches("table5") {
+        return;
+    }
+    let mut report = String::new();
+    bench("table5/SSA-90k vs SSQA-500 (G11..G13)", 1, || {
+        report = table5(&ctx).expect("table5");
+    });
+    println!("\n{report}");
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Table 6 (FPGA implementation comparison on G11)
+//! and the §5.1 ADP sweep.
+
+use ssqa::config::{bench, BenchArgs};
+use ssqa::experiments::{adp_sweep, table6, ExpContext};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = ExpContext {
+        runs: if args.quick { 4 } else { 30 },
+        quick: args.quick,
+        out_dir: "results".into(),
+        ..Default::default()
+    };
+    if args.matches("table6") {
+        let mut report = String::new();
+        bench("table6/G11 implementation comparison", 1, || {
+            report = table6(&ctx).expect("table6");
+        });
+        println!("\n{report}");
+    }
+    if args.matches("adp") {
+        let report = adp_sweep(&ctx).expect("adp");
+        println!("{report}");
+    }
+}

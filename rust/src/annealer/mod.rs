@@ -1,0 +1,40 @@
+//! Software annealing engines.
+//!
+//! * [`SsqaEngine`] — the paper's stochastic simulated *quantum*
+//!   annealing (Eq. 6, replica-coupled, Q(t) ramp of Eq. 7) in the
+//!   synchronous matvec form. This is the bit-exactness reference the
+//!   hw cycle simulator and the Pallas kernel are tested against.
+//! * [`SsaEngine`] — stochastic simulated annealing [17]/[15], the
+//!   single-network baseline (Table 5, Fig. 12: 10,000–90,000 steps).
+//! * [`SaEngine`] — classical Metropolis simulated annealing, the
+//!   algorithmic control.
+
+mod params;
+mod pd;
+mod runner;
+mod sa;
+mod ssa;
+pub(crate) mod ssqa;
+
+pub use params::{NoiseSchedule, QSchedule, SsaParams, SsqaParams};
+pub use pd::PdSsqaEngine;
+pub use runner::{multi_run, AggregateStats, RunResult};
+pub use sa::SaEngine;
+pub use ssa::SsaEngine;
+pub use ssqa::{SsqaEngine, SsqaState};
+
+use crate::graph::IsingModel;
+
+/// Common interface over all annealing backends (software engines, the
+/// hw cycle simulator and the PJRT runtime adapter implement it too).
+pub trait Annealer {
+    /// Run `steps` annealing steps from the seeded initial state and
+    /// return the result (best configuration over replicas, energies).
+    fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult;
+
+    /// Human-readable backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests;

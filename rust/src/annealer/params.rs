@@ -1,0 +1,128 @@
+//! Hyper-parameters and schedules (paper Eqs. 6–7, Fig. 3).
+
+
+/// Replica-coupling schedule `Q(t)`: ramp from `q_min` to `q_max`,
+/// incrementing by `beta` every `tau` steps (Eq. 7 / Fig. 3).
+///
+/// All values are integer fixed-point in the same units as `I0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QSchedule {
+    pub q_min: i32,
+    pub q_max: i32,
+    pub beta: i32,
+    pub tau: u32,
+}
+
+impl QSchedule {
+    /// Q value at annealing step `t` (0-based).
+    #[inline(always)]
+    pub fn at(&self, t: usize) -> i32 {
+        let increments = t as u32 / self.tau.max(1);
+        (self.q_min + self.beta.saturating_mul(increments as i32)).min(self.q_max)
+    }
+
+    /// Linear ramp filling `[q_min, q_max]` evenly over `steps`.
+    pub fn linear(q_min: i32, q_max: i32, steps: usize) -> Self {
+        // choose tau so that beta=1 reaches q_max by ~90% of the run
+        let span = (q_max - q_min).max(1) as usize;
+        let tau = ((steps * 9 / 10) / span).max(1) as u32;
+        Self { q_min, q_max, beta: 1, tau }
+    }
+}
+
+/// Noise-magnitude schedule for the `n_rnd · r` term of Eq. (6a).
+///
+/// The paper keeps the SSQA temperature `I0` fixed and anneals via Q;
+/// the noise magnitude may be constant or decay linearly (the SSA
+/// baseline anneals primarily through this decay).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoiseSchedule {
+    /// Constant magnitude.
+    Constant(i32),
+    /// Linear decay from `start` to `end` over the run.
+    Linear { start: i32, end: i32 },
+}
+
+impl NoiseSchedule {
+    /// Noise magnitude at step `t` of `total` steps.
+    #[inline(always)]
+    pub fn at(&self, t: usize, total: usize) -> i32 {
+        match *self {
+            NoiseSchedule::Constant(v) => v,
+            NoiseSchedule::Linear { start, end } => {
+                if total <= 1 {
+                    return end;
+                }
+                let span = (end - start) as i64;
+                (start as i64 + span * t as i64 / (total - 1) as i64) as i32
+            }
+        }
+    }
+}
+
+/// Full SSQA parameter set (defaults calibrated in EXPERIMENTS.md §Calib).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SsqaParams {
+    /// Number of replicas (Trotter slices). Paper adopts R = 20 (§4.2).
+    pub replicas: usize,
+    /// Saturation threshold `I0` (pseudo inverse temperature).
+    pub i0: i32,
+    /// Saturation offset `α` (fixed to 1 throughout the paper).
+    pub alpha: i32,
+    /// Noise schedule for `n_rnd`.
+    pub noise: NoiseSchedule,
+    /// Replica-coupling schedule `Q(t)`.
+    pub q: QSchedule,
+    /// Coupling scale applied to graph weights when building the Ising
+    /// model (4-bit hardware range).
+    pub j_scale: i32,
+}
+
+impl SsqaParams {
+    /// Calibrated defaults for ±1 G-set-class graphs at 500 steps
+    /// (EXPERIMENTS.md §Calibration: grid search over I0 × noise × Q_max
+    /// on G11 and G14 — mean cut ≥ 99% of best-found on both classes,
+    /// matching the paper's 99.0% on G11).
+    ///
+    /// Note the sharp stability boundary documented in §Calibration: on
+    /// dense unit-weight instances (G14/G15 class), I0 ≤ 20 drives the
+    /// synchronous update into a period-2 oscillation and cut quality
+    /// collapses; I0 = 22–32 is the stable plateau. I0 = 24 sits safely
+    /// inside it for both the toroidal and planar classes.
+    pub fn gset_default(steps: usize) -> Self {
+        Self {
+            replicas: 20,
+            i0: 24,
+            alpha: 1,
+            noise: NoiseSchedule::Linear { start: 28, end: 2 },
+            q: QSchedule::linear(0, 12, steps),
+            j_scale: 8,
+        }
+    }
+}
+
+/// SSA (single-network) parameter set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SsaParams {
+    /// Saturation threshold `I0`.
+    pub i0: i32,
+    /// Saturation offset `α`.
+    pub alpha: i32,
+    /// Noise decay — SSA anneals through this.
+    pub noise: NoiseSchedule,
+    /// Coupling scale.
+    pub j_scale: i32,
+}
+
+impl SsaParams {
+    /// Defaults for ±1 G-set-class graphs (long runs, Table 5 uses
+    /// 90,000 steps).
+    pub fn gset_default() -> Self {
+        Self {
+            i0: 64,
+            alpha: 1,
+            noise: NoiseSchedule::Linear { start: 32, end: 0 },
+            j_scale: 8,
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Multi-run Monte-Carlo harness (the paper averages 100 independent
+//! runs per point; we parallelize runs over a scoped thread pool).
+
+use super::Annealer;
+use crate::config::par_map;
+use crate::graph::{Graph, IsingModel};
+use crate::problems::maxcut;
+
+/// Result of a single annealing run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Lowest Ising energy found (best replica / best-seen).
+    pub best_energy: i64,
+    /// Configuration achieving it.
+    pub best_sigma: Vec<i32>,
+    /// Final energy of every replica (length 1 for single-network
+    /// engines).
+    pub replica_energies: Vec<i64>,
+    /// Steps executed.
+    pub steps: usize,
+}
+
+impl RunResult {
+    /// Cut value of the best configuration w.r.t. the original graph.
+    pub fn cut(&self, graph: &Graph) -> i64 {
+        maxcut::cut_value(graph, &self.best_sigma)
+    }
+}
+
+/// Aggregate over independent runs (one paper data point).
+#[derive(Debug, Clone)]
+pub struct AggregateStats {
+    pub runs: usize,
+    pub best_cut: i64,
+    pub mean_cut: f64,
+    pub std_cut: f64,
+    pub min_cut: i64,
+    pub mean_best_energy: f64,
+}
+
+/// Run `runs` independent seeds in parallel and aggregate cut statistics.
+///
+/// `make_annealer` must build a fresh engine per worker (engines carry
+/// schedule state).
+pub fn multi_run<A, F>(
+    graph: &Graph,
+    model: &IsingModel,
+    make_annealer: F,
+    steps: usize,
+    runs: usize,
+    seed0: u32,
+) -> AggregateStats
+where
+    A: Annealer,
+    F: Fn() -> A + Sync,
+{
+    let run_ids: Vec<u32> = (0..runs as u32).collect();
+    let cuts: Vec<(i64, i64)> = par_map(&run_ids, |&r| {
+        let mut eng = make_annealer();
+        let res = eng.anneal(model, steps, seed0.wrapping_add(r * 7919));
+        (res.cut(graph), res.best_energy)
+    });
+    let n = cuts.len() as f64;
+    let mean_cut = cuts.iter().map(|c| c.0 as f64).sum::<f64>() / n;
+    let var = cuts.iter().map(|c| (c.0 as f64 - mean_cut).powi(2)).sum::<f64>() / n;
+    AggregateStats {
+        runs,
+        best_cut: cuts.iter().map(|c| c.0).max().unwrap_or(0),
+        mean_cut,
+        std_cut: var.sqrt(),
+        min_cut: cuts.iter().map(|c| c.0).min().unwrap_or(0),
+        mean_best_energy: cuts.iter().map(|c| c.1 as f64).sum::<f64>() / n,
+    }
+}

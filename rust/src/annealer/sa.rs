@@ -1,0 +1,75 @@
+//! Classical Metropolis simulated annealing — the algorithmic control
+//! (§5.2 cites SA at 423× slower than SSQA on GI; we reproduce the
+//! qualitative gap on the benchmark suite).
+
+use super::{runner::RunResult, Annealer};
+use crate::graph::IsingModel;
+use crate::rng::Xorshift64Star;
+
+/// Geometric-cooling Metropolis SA over single-spin flips.
+pub struct SaEngine {
+    /// Initial temperature (in units of the integer energy scale).
+    pub t_start: f64,
+    /// Final temperature.
+    pub t_end: f64,
+}
+
+impl SaEngine {
+    pub fn new(t_start: f64, t_end: f64) -> Self {
+        assert!(t_start >= t_end && t_end > 0.0);
+        Self { t_start, t_end }
+    }
+
+    /// Defaults sized for J-scale-8 G-set instances.
+    pub fn gset_default() -> Self {
+        Self::new(64.0, 0.5)
+    }
+
+    /// Energy delta of flipping spin i: `ΔH = 2 σ_i (h_i + Σ J_ij σ_j)`.
+    #[inline(always)]
+    fn delta(model: &IsingModel, sigma: &[i32], i: usize) -> i64 {
+        let (cols, vals) = model.j_sparse().row(i);
+        let mut field = model.h[i] as i64;
+        for (c, v) in cols.iter().zip(vals) {
+            field += (*v * sigma[*c as usize]) as i64;
+        }
+        2 * sigma[i] as i64 * field
+    }
+}
+
+impl Annealer for SaEngine {
+    /// One "step" = one full sweep of N Metropolis single-spin updates,
+    /// keeping the step budget comparable with SSQA/SSA.
+    fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
+        let n = model.n();
+        let mut rng = Xorshift64Star::new(seed as u64 | 1 << 32);
+        let mut sigma: Vec<i32> =
+            (0..n).map(|_| if rng.next_f64() < 0.5 { -1 } else { 1 }).collect();
+        let mut energy = model.energy(&sigma);
+        let mut best_energy = energy;
+        let mut best_sigma = sigma.clone();
+        let ratio = (self.t_end / self.t_start).powf(1.0 / steps.max(1) as f64);
+        let mut temp = self.t_start;
+        for _ in 0..steps {
+            for _ in 0..n {
+                let i = rng.next_below(n);
+                let d = Self::delta(model, &sigma, i);
+                if d <= 0 || rng.next_f64() < (-(d as f64) / temp).exp() {
+                    sigma[i] = -sigma[i];
+                    energy += d;
+                    if energy < best_energy {
+                        best_energy = energy;
+                        best_sigma.copy_from_slice(&sigma);
+                    }
+                }
+            }
+            temp *= ratio;
+        }
+        debug_assert_eq!(energy, model.energy(&sigma), "incremental energy drifted");
+        RunResult { best_energy, best_sigma, replica_energies: vec![energy], steps }
+    }
+
+    fn name(&self) -> &'static str {
+        "sa-metropolis"
+    }
+}

@@ -1,0 +1,116 @@
+//! SSA — single-network stochastic simulated annealing ([15], [17]).
+//!
+//! The same integer spin-gate update as SSQA but with no replicas and no
+//! Q-coupling; annealing is driven by the decaying noise magnitude.
+//! This is the baseline of Table 5 (90,000 steps) and Fig. 12.
+
+use super::{params::SsaParams, runner::RunResult, Annealer};
+use crate::graph::IsingModel;
+use crate::rng::RngMatrix;
+
+/// SSA engine state (single network).
+#[derive(Debug, Clone)]
+pub struct SsaState {
+    pub sigma: Vec<i32>,
+    pub is: Vec<i32>,
+    pub rng: RngMatrix,
+    pub t: usize,
+}
+
+impl SsaState {
+    pub fn init(n: usize, seed: u32) -> Self {
+        let rng = RngMatrix::seeded(seed, n, 1);
+        let sigma: Vec<i32> =
+            (0..n).map(|i| if rng.state(i, 0) >> 31 == 1 { -1 } else { 1 }).collect();
+        Self { sigma, is: vec![0; n], rng, t: 0 }
+    }
+}
+
+/// The SSA software engine.
+pub struct SsaEngine {
+    pub params: SsaParams,
+    pub total_steps: usize,
+    /// Track the best configuration seen over the whole run — SSA's long
+    /// schedules wander, and the hardware baseline reports best-seen.
+    pub track_best: bool,
+}
+
+impl SsaEngine {
+    pub fn new(params: SsaParams, total_steps: usize) -> Self {
+        Self { params, total_steps, track_best: true }
+    }
+
+    /// One synchronous update step (§Perf: writes into the reusable
+    /// scratch buffer `next` — no allocation in the 90,000-step loop).
+    pub fn step_into(&self, model: &IsingModel, st: &mut SsaState, noise_t: i32, next: &mut Vec<i32>) {
+        let n = model.n();
+        let i0 = self.params.i0;
+        let alpha = self.params.alpha;
+        next.clear();
+        for i in 0..n {
+            let (cols, vals) = model.j_sparse().row(i);
+            let mut acc = model.h[i];
+            for (c, v) in cols.iter().zip(vals) {
+                acc += *v * st.sigma[*c as usize];
+            }
+            let inp = acc + noise_t * st.rng.draw_pm1(i, 0);
+            let s = st.is[i] + inp;
+            st.is[i] = if s >= i0 {
+                i0 - alpha
+            } else if s < -i0 {
+                -i0
+            } else {
+                s
+            };
+            next.push(if st.is[i] >= 0 { 1 } else { -1 });
+        }
+        std::mem::swap(&mut st.sigma, next);
+        st.t += 1;
+    }
+
+    /// One synchronous update step (allocating convenience wrapper).
+    pub fn step(&self, model: &IsingModel, st: &mut SsaState, noise_t: i32) {
+        let mut next = Vec::with_capacity(model.n());
+        self.step_into(model, st, noise_t, &mut next);
+    }
+}
+
+impl Annealer for SsaEngine {
+    fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
+        self.total_steps = steps;
+        let n = model.n();
+        let mut st = SsaState::init(n, seed);
+        let mut best_energy = model.energy(&st.sigma);
+        let mut best_sigma = st.sigma.clone();
+        // checking energy every step is O(N·k); amortize by checking on a
+        // stride once past the noisy early phase
+        let check_stride = (steps / 2000).max(1);
+        let mut scratch = Vec::with_capacity(n);
+        for t in 0..steps {
+            let noise_t = self.params.noise.at(t, steps);
+            self.step_into(model, &mut st, noise_t, &mut scratch);
+            if self.track_best && (t % check_stride == 0 || t + 1 == steps) {
+                let e = model.energy(&st.sigma);
+                if e < best_energy {
+                    best_energy = e;
+                    best_sigma.copy_from_slice(&st.sigma);
+                }
+            }
+        }
+        let final_energy = model.energy(&st.sigma);
+        if !self.track_best || final_energy < best_energy {
+            best_energy = final_energy;
+            best_sigma.copy_from_slice(&st.sigma);
+        }
+        RunResult {
+            best_energy,
+            best_sigma,
+            replica_energies: vec![final_energy],
+            steps,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ssa-sw"
+    }
+}

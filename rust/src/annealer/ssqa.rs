@@ -1,0 +1,180 @@
+//! SSQA software engine — the bit-exactness reference (DESIGN.md §3).
+//!
+//! Implements Eq. (6) in the synchronous ("matvec") form: during step
+//! `t+1` every spin reads the previous-step states `σ(t)` (the hardware
+//! reads them from the inactive BRAM bank, so in-step updates are never
+//! observed) and the replica-coupling term reads `σ_{k+1}(t−1)` from the
+//! two-step-delayed bank. The N serial MACs of the spin gate are
+//! therefore mathematically one `J·σ` matvec per replica — exactly what
+//! the Pallas kernel computes on the MXU.
+
+use super::{
+    params::SsqaParams,
+    runner::RunResult,
+    Annealer,
+};
+use crate::graph::IsingModel;
+use crate::rng::RngMatrix;
+
+/// Full engine state, exposed for snapshotting and cross-layer tests.
+#[derive(Debug, Clone)]
+pub struct SsqaState {
+    /// σ(t): previous-step spins, row-major `[spin][replica]`, ±1.
+    pub sigma: Vec<i32>,
+    /// σ(t−1): two-step-delayed spins (the second BRAM bank).
+    pub sigma_prev: Vec<i32>,
+    /// Saturating accumulators `Is`, same layout.
+    pub is: Vec<i32>,
+    /// Per-cell RNG streams.
+    pub rng: RngMatrix,
+    /// Steps taken so far.
+    pub t: usize,
+}
+
+impl SsqaState {
+    /// Deterministic initial state: `σ_i,k(0) = +1` iff the cell's seed
+    /// hash MSB is 0 (matches the Python model's init), `Is = 0`.
+    pub fn init(n: usize, replicas: usize, seed: u32) -> Self {
+        let rng = RngMatrix::seeded(seed, n, replicas);
+        let mut sigma = vec![0i32; n * replicas];
+        for i in 0..n {
+            for k in 0..replicas {
+                sigma[i * replicas + k] = if rng.state(i, k) >> 31 == 1 { -1 } else { 1 };
+            }
+        }
+        Self {
+            sigma_prev: sigma.clone(),
+            is: vec![0; n * replicas],
+            sigma,
+            rng,
+            t: 0,
+        }
+    }
+}
+
+/// The SSQA software engine.
+pub struct SsqaEngine {
+    pub params: SsqaParams,
+    /// Total steps the schedules are normalized to (noise decay).
+    pub total_steps: usize,
+}
+
+impl SsqaEngine {
+    pub fn new(params: SsqaParams, total_steps: usize) -> Self {
+        Self { params, total_steps }
+    }
+
+    /// Advance one annealing step in place. `q_t` and `noise_t` are the
+    /// schedule values for this step (passed explicitly so the hw
+    /// scheduler and the PJRT driver can feed identical sequences).
+    ///
+    /// §Perf: the previous-step spins are double-buffered (the functional
+    /// dual-BRAM ping-pong): `sigma_prev` is overwritten in place with
+    /// the new states, then the two buffers swap — zero allocation per
+    /// step. The replica axis (innermost, contiguous) auto-vectorizes.
+    pub fn step(&self, model: &IsingModel, st: &mut SsqaState, q_t: i32, noise_t: i32) {
+        let n = model.n();
+        let r = self.params.replicas;
+        debug_assert_eq!(st.sigma.len(), n * r);
+        let i0 = self.params.i0;
+        let alpha = self.params.alpha;
+
+        let mut acc = vec![0i32; r]; // one accumulator row, reused
+        let mut prev_row = vec![0i32; r]; // σ(t−1) row latched before overwrite
+        let mut noise_row = vec![0i32; r]; // vectorized per-row RNG draws
+        for i in 0..n {
+            // Sparse accumulation of Σ_j J_ij σ_j,k(t) for all replicas at
+            // once (replica-parallel, like the R hardware spin gates).
+            let (cols, vals) = model.j_sparse().row(i);
+            acc.fill(model.h[i]);
+            for (c, v) in cols.iter().zip(vals) {
+                let base = *c as usize * r;
+                let w = *v;
+                let src = &st.sigma[base..base + r];
+                for (a, s) in acc.iter_mut().zip(src) {
+                    *a += w * *s;
+                }
+            }
+            let row = i * r;
+            // latch the delayed row before the in-place overwrite (the
+            // hardware reads all R coupling ports in the update cycle
+            // before the READ_FIRST write commits)
+            prev_row.copy_from_slice(&st.sigma_prev[row..row + r]);
+            st.rng.draw_row_pm1(i, &mut noise_row);
+            for k in 0..r {
+                // replica coupling: σ_{i,(k+1) mod R}(t−1), the dual-BRAM
+                // two-step-delayed read (Eq. 6a with d = 1)
+                let up = prev_row[(k + 1) % r];
+                let noise = noise_t * noise_row[k];
+                let inp = acc[k] + noise + q_t * up;
+                // Eq. (6b): saturating accumulator
+                let cell = row + k;
+                let s = st.is[cell] + inp;
+                let is_new = if s >= i0 {
+                    i0 - alpha
+                } else if s < -i0 {
+                    -i0
+                } else {
+                    s
+                };
+                st.is[cell] = is_new;
+                // Eq. (6c): sign — written into the retiring buffer (all
+                // coupling reads of row i happen above, so this is the
+                // same-cycle READ_FIRST overwrite of the hardware)
+                st.sigma_prev[cell] = if is_new >= 0 { 1 } else { -1 };
+            }
+        }
+        std::mem::swap(&mut st.sigma, &mut st.sigma_prev);
+        st.t += 1;
+    }
+
+    /// Run the full schedule and return per-replica final energies.
+    pub fn run(&self, model: &IsingModel, steps: usize, seed: u32) -> (SsqaState, RunResult) {
+        let n = model.n();
+        let r = self.params.replicas;
+        let mut st = SsqaState::init(n, r, seed);
+        for t in 0..steps {
+            let q_t = self.params.q.at(t);
+            let noise_t = self.params.noise.at(t, self.total_steps.max(steps));
+            self.step(model, &mut st, q_t, noise_t);
+        }
+        let result = Self::harvest(model, &st, steps);
+        (st, result)
+    }
+
+    /// Pick the best replica of a final state (paper §4.2: "the
+    /// configuration yielding the highest cut value among the R replicas
+    /// is selected").
+    pub fn harvest(model: &IsingModel, st: &SsqaState, steps: usize) -> RunResult {
+        let n = model.n();
+        let r = st.rng.replicas();
+        let mut best_energy = i64::MAX;
+        let mut best_sigma = vec![1i32; n];
+        let mut energies = Vec::with_capacity(r);
+        let mut replica = vec![0i32; n];
+        for k in 0..r {
+            for i in 0..n {
+                replica[i] = st.sigma[i * r + k];
+            }
+            let e = model.energy(&replica);
+            energies.push(e);
+            if e < best_energy {
+                best_energy = e;
+                best_sigma.copy_from_slice(&replica);
+            }
+        }
+        RunResult { best_energy, best_sigma, replica_energies: energies, steps }
+    }
+}
+
+impl Annealer for SsqaEngine {
+    fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
+        self.total_steps = steps;
+        self.run(model, steps, seed).1
+    }
+
+    fn name(&self) -> &'static str {
+        "ssqa-sw"
+    }
+}
+

@@ -1,0 +1,193 @@
+use super::*;
+use crate::graph::{random_graph, torus_2d, Graph};
+use crate::problems::maxcut;
+
+fn small_model() -> (Graph, crate::graph::IsingModel) {
+    let g = torus_2d(4, 6, true, 21);
+    let m = maxcut::ising_from_graph(&g, 8);
+    (g, m)
+}
+
+#[test]
+fn q_schedule_ramp() {
+    let q = QSchedule { q_min: 0, q_max: 10, beta: 2, tau: 5 };
+    assert_eq!(q.at(0), 0);
+    assert_eq!(q.at(4), 0);
+    assert_eq!(q.at(5), 2);
+    assert_eq!(q.at(24), 8);
+    assert_eq!(q.at(1000), 10); // clamped at q_max
+}
+
+#[test]
+fn q_schedule_linear_reaches_max_before_end() {
+    let q = QSchedule::linear(0, 48, 500);
+    assert_eq!(q.at(0), 0);
+    assert_eq!(q.at(499), 48);
+    // reaches max at ~90% of the run
+    assert_eq!(q.at(450), 48);
+    assert!(q.at(200) > 0 && q.at(200) < 48);
+}
+
+#[test]
+fn noise_schedule_constant_and_linear() {
+    assert_eq!(NoiseSchedule::Constant(7).at(123, 500), 7);
+    let lin = NoiseSchedule::Linear { start: 20, end: 0 };
+    assert_eq!(lin.at(0, 100), 20);
+    assert_eq!(lin.at(99, 100), 0);
+    // integer interpolation truncates toward zero: 20 − ⌊980/99⌋ = 11
+    assert_eq!(lin.at(49, 100), 11);
+    // degenerate totals
+    assert_eq!(lin.at(0, 1), 0);
+}
+
+#[test]
+fn ssqa_state_init_is_deterministic() {
+    let a = SsqaEngine::new(SsqaParams::gset_default(100), 100);
+    let (g, m) = small_model();
+    let (st1, r1) = a.run(&m, 10, 42);
+    let (st2, r2) = a.run(&m, 10, 42);
+    assert_eq!(st1.sigma, st2.sigma);
+    assert_eq!(r1.best_energy, r2.best_energy);
+    let (_, r3) = a.run(&m, 10, 43);
+    // different seed should (virtually always) give a different trajectory
+    assert!(r3.best_sigma != r1.best_sigma || r3.best_energy != r1.best_energy);
+    let _ = g;
+}
+
+#[test]
+fn ssqa_sigma_values_are_pm1_and_is_bounded() {
+    let p = SsqaParams::gset_default(50);
+    let eng = SsqaEngine::new(p, 50);
+    let (_, m) = small_model();
+    let (st, _) = eng.run(&m, 50, 7);
+    assert!(st.sigma.iter().all(|&s| s == 1 || s == -1));
+    assert!(st.is.iter().all(|&v| (-p.i0..p.i0).contains(&v)), "Is escaped [−I0, I0)");
+}
+
+#[test]
+fn ssqa_improves_over_random_start() {
+    let (g, m) = small_model();
+    let eng = SsqaEngine::new(SsqaParams::gset_default(300), 300);
+    let (_, res) = eng.run(&m, 300, 5);
+    let cut = res.cut(&g);
+    // random cut ≈ half the positive weight; annealed must beat it solidly
+    let w_pos: i64 = g.edges().iter().filter(|e| e.2 > 0).map(|e| e.2 as i64).sum();
+    assert!(
+        cut > w_pos / 2,
+        "cut {cut} not better than random ({})",
+        w_pos / 2
+    );
+}
+
+#[test]
+fn ssqa_finds_optimum_on_tiny_graph() {
+    // 8-node ring with unit weights: MAX-CUT = 8
+    let g = Graph::new(
+        8,
+        (0..8).map(|i| (i as u32, ((i + 1) % 8) as u32, 1)).collect(),
+    );
+    let m = maxcut::ising_from_graph(&g, 8);
+    let eng = SsqaEngine::new(
+        SsqaParams { replicas: 8, ..SsqaParams::gset_default(200) },
+        200,
+    );
+    let best = (0..5)
+        .map(|s| eng.run(&m, 200, s).1.cut(&g))
+        .max()
+        .unwrap();
+    assert_eq!(best, 8);
+}
+
+#[test]
+fn ssqa_harvest_picks_min_energy_replica() {
+    let (_, m) = small_model();
+    let eng = SsqaEngine::new(SsqaParams::gset_default(100), 100);
+    let (st, res) = eng.run(&m, 100, 3);
+    let min_replica = *res.replica_energies.iter().min().unwrap();
+    assert_eq!(res.best_energy, min_replica);
+    assert_eq!(res.replica_energies.len(), eng.params.replicas);
+    assert_eq!(m.energy(&res.best_sigma), res.best_energy);
+    let _ = st;
+}
+
+#[test]
+fn ssqa_replica_coupling_matters() {
+    // With Q forced to 0 replicas never couple; the coupled run should
+    // (on average over seeds) reach at least as good cuts.
+    let (g, m) = small_model();
+    let steps = 300;
+    let coupled = SsqaEngine::new(SsqaParams::gset_default(steps), steps);
+    let uncoupled = SsqaEngine::new(
+        SsqaParams {
+            q: QSchedule { q_min: 0, q_max: 0, beta: 0, tau: 1 },
+            ..SsqaParams::gset_default(steps)
+        },
+        steps,
+    );
+    let mc: i64 = (0..8).map(|s| coupled.run(&m, steps, s).1.cut(&g)).sum();
+    let mu: i64 = (0..8).map(|s| uncoupled.run(&m, steps, s).1.cut(&g)).sum();
+    assert!(mc + 8 >= mu, "coupling catastrophically hurt: {mc} vs {mu}");
+}
+
+#[test]
+fn ssa_runs_and_improves() {
+    let (g, m) = small_model();
+    let mut eng = SsaEngine::new(SsaParams::gset_default(), 2000);
+    let res = eng.anneal(&m, 2000, 11);
+    let w_pos: i64 = g.edges().iter().filter(|e| e.2 > 0).map(|e| e.2 as i64).sum();
+    assert!(res.cut(&g) > w_pos / 2);
+    assert!(res.best_sigma.iter().all(|&s| s == 1 || s == -1));
+}
+
+#[test]
+fn ssa_track_best_never_worse_than_final() {
+    let (_, m) = small_model();
+    let mut eng = SsaEngine::new(SsaParams::gset_default(), 500);
+    let res = eng.anneal(&m, 500, 13);
+    assert!(res.best_energy <= res.replica_energies[0]);
+}
+
+#[test]
+fn sa_finds_optimum_on_tiny_graph() {
+    let g = Graph::new(
+        6,
+        (0..6).map(|i| (i as u32, ((i + 1) % 6) as u32, 1)).collect(),
+    );
+    let m = maxcut::ising_from_graph(&g, 8);
+    let mut eng = SaEngine::gset_default();
+    let res = eng.anneal(&m, 500, 1);
+    assert_eq!(res.cut(&g), 6);
+}
+
+#[test]
+fn sa_incremental_energy_is_consistent() {
+    let g = random_graph(20, 60, &[-2, -1, 1, 2], 9);
+    let m = maxcut::ising_from_graph(&g, 4);
+    let mut eng = SaEngine::gset_default();
+    let res = eng.anneal(&m, 200, 2);
+    assert_eq!(m.energy(&res.best_sigma), res.best_energy);
+}
+
+#[test]
+fn multi_run_aggregates() {
+    let (g, m) = small_model();
+    let stats = multi_run(
+        &g,
+        &m,
+        || SsqaEngine::new(SsqaParams::gset_default(100), 100),
+        100,
+        8,
+        1,
+    );
+    assert_eq!(stats.runs, 8);
+    assert!(stats.best_cut >= stats.mean_cut as i64);
+    assert!(stats.min_cut <= stats.mean_cut.ceil() as i64);
+    assert!(stats.std_cut >= 0.0);
+}
+
+#[test]
+fn engines_report_names() {
+    assert_eq!(SsqaEngine::new(SsqaParams::gset_default(1), 1).name(), "ssqa-sw");
+    assert_eq!(SsaEngine::new(SsaParams::gset_default(), 1).name(), "ssa-sw");
+    assert_eq!(SaEngine::gset_default().name(), "sa-metropolis");
+}

@@ -1,0 +1,73 @@
+//! Minimal benchmark harness (the offline vendor set has no criterion).
+//!
+//! `harness = false` bench binaries call [`bench`] to time closures with
+//! warmup + repeated measurement, printing mean/min/max in criterion-like
+//! rows, and [`BenchArgs`] to honor `--quick` and `cargo bench -- <filter>`.
+
+use std::time::{Duration, Instant};
+
+/// Parsed bench CLI arguments.
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    pub filter: Option<String>,
+    pub quick: bool,
+}
+
+impl BenchArgs {
+    /// Parse `std::env::args`, ignoring cargo's `--bench` flag.
+    pub fn from_env() -> Self {
+        let mut out = Self::default();
+        for a in std::env::args().skip(1) {
+            match a.as_str() {
+                "--bench" => {}
+                "--quick" => out.quick = true,
+                other if !other.starts_with('-') => out.filter = Some(other.to_string()),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Whether a benchmark with this name should run.
+    pub fn matches(&self, name: &str) -> bool {
+        self.filter.as_deref().is_none_or(|f| name.contains(f))
+    }
+}
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+/// Time `f` with one warmup and `iters` measured iterations; prints a
+/// criterion-style row and returns the stats.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchStats {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let stats = BenchStats {
+        iters: times.len(),
+        mean: total / times.len() as u32,
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    };
+    println!(
+        "bench {name:<44} {:>12.3?} mean {:>12.3?} min {:>12.3?} max ({} iters)",
+        stats.mean, stats.min, stats.max, stats.iters
+    );
+    stats
+}
+
+/// Throughput helper: spin-updates per second given a run shape.
+pub fn updates_per_sec(n: usize, replicas: usize, steps: usize, wall: Duration) -> f64 {
+    (n * replicas * steps) as f64 / wall.as_secs_f64()
+}

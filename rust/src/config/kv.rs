@@ -1,0 +1,92 @@
+//! `key = value` config format (INI-without-sections).
+//!
+//! Used for run configs and as the artifact-manifest interchange format
+//! with the Python compile path. Lines starting with `#` are comments;
+//! values are strings, parsed on demand.
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::BTreeMap;
+
+/// Parsed key=value configuration.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct KvConfig {
+    map: BTreeMap<String, String>,
+}
+
+/// Parse key=value text.
+pub fn parse_kv(text: &str) -> Result<KvConfig> {
+    let mut map = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`, got {line:?}", lineno + 1))?;
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(KvConfig { map })
+}
+
+impl KvConfig {
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        parse_kv(&text)
+    }
+
+    /// Raw string value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    /// Required string value.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing config key {key:?}"))
+    }
+
+    /// Parse a value into any FromStr type.
+    pub fn parse<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.require(key)?;
+        raw.parse().map_err(|e| anyhow!("config key {key:?}={raw:?}: {e}"))
+    }
+
+    /// Parse with a default when the key is absent.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(_) => self.parse(key),
+        }
+    }
+
+    /// Insert/overwrite a key (used by CLI overrides).
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    /// All keys with a given prefix, sorted.
+    pub fn keys_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.map.keys().filter(move |k| k.starts_with(prefix)).map(|k| k.as_str())
+    }
+
+    /// Serialize back to key=value text.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.map {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+}

@@ -1,0 +1,18 @@
+//! Configuration & small utilities shared across the crate.
+//!
+//! The offline build has no serde/rayon, so this module carries the
+//! hand-rolled equivalents: a key=value config format, a scoped parallel
+//! map over a std thread pool, and a tiny JSON *emitter* for results
+//! (we never need to parse JSON — the artifact manifest uses the
+//! key=value format below, written by `python/compile/aot.py`).
+
+mod bench;
+mod kv;
+mod par;
+
+pub use bench::{bench, updates_per_sec, BenchArgs, BenchStats};
+pub use kv::{parse_kv, KvConfig};
+pub use par::{num_threads, par_map};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,54 @@
+//! Scoped parallel map over std threads (no rayon in the offline vendor
+//! set). Work is chunked over `num_threads()` workers; order of results
+//! matches input order.
+
+/// Number of worker threads (available parallelism, capped at 16).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Parallel map preserving input order.
+///
+/// `f` must be `Sync` (shared across workers); items are taken by index
+/// so no cloning of the input is needed.
+pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n);
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SendSlice(slots.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            let slots_ptr = &slots_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(&items[i]);
+                // SAFETY: each index i is claimed by exactly one worker
+                // via the atomic counter, and `slots` outlives the scope.
+                unsafe { *slots_ptr.0.add(i) = Some(out) };
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker missed a slot")).collect()
+}
+
+/// Wrapper making a raw pointer Sync for the disjoint-index write above.
+struct SendSlice<U>(*mut Option<U>);
+unsafe impl<U: Send> Sync for SendSlice<U> {}
+unsafe impl<U: Send> Send for SendSlice<U> {}

@@ -1,0 +1,56 @@
+use super::*;
+
+#[test]
+fn kv_parses_and_queries() {
+    let c = parse_kv("# comment\nfoo = 12\nname = hello world\n\nbar=3.5\n").unwrap();
+    assert_eq!(c.parse::<i32>("foo").unwrap(), 12);
+    assert_eq!(c.get("name"), Some("hello world"));
+    assert_eq!(c.parse::<f64>("bar").unwrap(), 3.5);
+    assert!(c.require("missing").is_err());
+    assert_eq!(c.parse_or::<u32>("missing", 7).unwrap(), 7);
+}
+
+#[test]
+fn kv_rejects_malformed_lines() {
+    assert!(parse_kv("no equals sign here").is_err());
+}
+
+#[test]
+fn kv_roundtrip() {
+    let mut c = KvConfig::default();
+    c.set("a", 1);
+    c.set("b", "two");
+    let c2 = parse_kv(&c.to_text()).unwrap();
+    assert_eq!(c, c2);
+}
+
+#[test]
+fn kv_prefix_iteration() {
+    let c = parse_kv("art.a = 1\nart.b = 2\nother = 3\n").unwrap();
+    let keys: Vec<&str> = c.keys_with_prefix("art.").collect();
+    assert_eq!(keys, vec!["art.a", "art.b"]);
+}
+
+#[test]
+fn par_map_preserves_order() {
+    let items: Vec<usize> = (0..1000).collect();
+    let out = par_map(&items, |&x| x * 2);
+    assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+}
+
+#[test]
+fn par_map_empty_and_single() {
+    let empty: Vec<u32> = vec![];
+    assert!(par_map(&empty, |&x| x).is_empty());
+    assert_eq!(par_map(&[5], |&x| x + 1), vec![6]);
+}
+
+#[test]
+fn par_map_is_actually_parallel_safe() {
+    // hammer with tiny tasks to stress the index claiming
+    let items: Vec<u64> = (0..10_000).collect();
+    let out = par_map(&items, |&x| x % 7);
+    for (i, v) in out.iter().enumerate() {
+        assert_eq!(*v, i as u64 % 7);
+    }
+}

@@ -1,0 +1,114 @@
+//! Job descriptions and outcomes.
+
+use crate::annealer::SsqaParams;
+use crate::graph::{Graph, GraphSpec};
+use crate::problems::maxcut;
+
+/// What to solve: a named benchmark instance or an inline graph.
+#[derive(Debug, Clone)]
+pub enum JobSpec {
+    /// A Table-2 benchmark instance.
+    Named(GraphSpec),
+    /// An explicit graph (e.g. parsed from a G-set upload).
+    Inline(Graph),
+}
+
+impl JobSpec {
+    pub fn graph(&self) -> Graph {
+        match self {
+            JobSpec::Named(spec) => spec.build(),
+            JobSpec::Inline(g) => g.clone(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            JobSpec::Named(spec) => spec.name().to_string(),
+            JobSpec::Inline(g) => format!("inline-n{}", g.num_nodes()),
+        }
+    }
+}
+
+/// A queued annealing job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub params: SsqaParams,
+    pub steps: usize,
+    pub seed: u32,
+    /// Backend override; `None` lets the router decide.
+    pub backend: Option<super::BackendKind>,
+}
+
+impl Job {
+    pub fn new(id: u64, spec: JobSpec, steps: usize, seed: u32) -> Self {
+        let params = SsqaParams::gset_default(steps);
+        Self { id, spec, params, steps, seed, backend: None }
+    }
+}
+
+/// Result of an executed job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub label: String,
+    pub backend: super::BackendKind,
+    pub cut: i64,
+    pub best_energy: i64,
+    pub wall: std::time::Duration,
+    /// Modeled FPGA energy for hw-sim jobs (J), if applicable.
+    pub modeled_energy_j: Option<f64>,
+}
+
+/// Execute a job on a concrete backend (used by the pool workers).
+pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
+    use crate::annealer::{Annealer, SsaEngine, SsaParams, SsqaEngine};
+    use crate::hw::{HwConfig, HwEngine};
+
+    let graph = job.spec.graph();
+    let model = maxcut::ising_from_graph(&graph, job.params.j_scale);
+    let t0 = std::time::Instant::now();
+    let (res, modeled_energy_j) = match backend {
+        super::BackendKind::Software => {
+            let mut eng = SsqaEngine::new(job.params, job.steps);
+            (eng.anneal(&model, job.steps, job.seed), None)
+        }
+        super::BackendKind::SoftwareSsa => {
+            let mut eng = SsaEngine::new(SsaParams::gset_default(), job.steps);
+            (eng.anneal(&model, job.steps, job.seed), None)
+        }
+        super::BackendKind::HwSim(delay) => {
+            let mut eng =
+                HwEngine::new(HwConfig { delay, ..HwConfig::default() }, job.params);
+            let res = eng.anneal(&model, job.steps, job.seed);
+            let u = crate::resources::ResourceModel::default().estimate(
+                model.n(),
+                job.params.replicas,
+                delay,
+                1,
+                eng.config.clock_hz,
+            );
+            let energy = u.power_w * eng.latency_seconds();
+            (res, Some(energy))
+        }
+        super::BackendKind::Pjrt => {
+            // compiled lazily per worker; see pool.rs for the cached path
+            let rt = crate::runtime::PjrtRuntime::new(std::path::Path::new("artifacts"))
+                .expect("PJRT runtime (run `make artifacts`)");
+            let mut eng = rt
+                .load_annealer(model.n(), job.params.replicas, job.params)
+                .expect("artifact fits");
+            (eng.anneal(&model, job.steps, job.seed), None)
+        }
+    };
+    JobOutcome {
+        id: job.id,
+        label: job.spec.label(),
+        backend,
+        cut: res.cut(&graph),
+        best_energy: res.best_energy,
+        wall: t0.elapsed(),
+        modeled_energy_j,
+    }
+}

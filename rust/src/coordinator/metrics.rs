@@ -1,0 +1,78 @@
+//! Latency/throughput/energy metrics per backend.
+
+use super::{BackendKind, JobOutcome};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregated statistics for one backend.
+#[derive(Debug, Clone, Default)]
+pub struct BackendMetrics {
+    pub jobs: u64,
+    pub total_wall: Duration,
+    pub min_wall: Option<Duration>,
+    pub max_wall: Option<Duration>,
+    pub total_cut: i64,
+    pub total_modeled_energy_j: f64,
+}
+
+impl BackendMetrics {
+    fn record(&mut self, o: &JobOutcome) {
+        self.jobs += 1;
+        self.total_wall += o.wall;
+        self.min_wall = Some(self.min_wall.map_or(o.wall, |m| m.min(o.wall)));
+        self.max_wall = Some(self.max_wall.map_or(o.wall, |m| m.max(o.wall)));
+        self.total_cut += o.cut;
+        self.total_modeled_energy_j += o.modeled_energy_j.unwrap_or(0.0);
+    }
+
+    pub fn mean_wall(&self) -> Duration {
+        if self.jobs == 0 {
+            Duration::ZERO
+        } else {
+            self.total_wall / self.jobs as u32
+        }
+    }
+}
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<&'static str, BackendMetrics>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, backend: BackendKind, outcome: &JobOutcome) {
+        let mut map = self.inner.lock().unwrap();
+        map.entry(backend.name()).or_default().record(outcome);
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<&'static str, BackendMetrics> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Render a human-readable table (the `ssqa serve`/CLI report).
+    pub fn render(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::from(
+            "backend        jobs   mean-wall      min          max          mean-cut   energy(J)\n",
+        );
+        for (name, m) in snap {
+            out.push_str(&format!(
+                "{:<14} {:<6} {:<12.3?} {:<12.3?} {:<12.3?} {:<10.1} {:.3e}\n",
+                name,
+                m.jobs,
+                m.mean_wall(),
+                m.min_wall.unwrap_or_default(),
+                m.max_wall.unwrap_or_default(),
+                m.total_cut as f64 / m.jobs.max(1) as f64,
+                m.total_modeled_energy_j,
+            ));
+        }
+        out
+    }
+}

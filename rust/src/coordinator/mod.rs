@@ -1,0 +1,24 @@
+//! Layer-3 coordination: job queue, worker pool, backend routing,
+//! metrics and a line-protocol server.
+//!
+//! The Rust coordinator plays the role the Zynq PS plays in the paper
+//! (§3.1: hyper-parameters arrive over AXI; the fabric engine runs the
+//! annealing) — generalized into a small serving system: clients submit
+//! annealing jobs; a router picks a backend (software engine, hardware
+//! cycle model, or the PJRT artifact); a worker pool executes them and
+//! metrics aggregate latency/energy accounting per backend.
+
+mod job;
+mod metrics;
+mod pool;
+mod router;
+mod server;
+
+pub use job::{Job, JobOutcome, JobSpec};
+pub use metrics::{BackendMetrics, Metrics};
+pub use pool::WorkerPool;
+pub use router::{BackendKind, Router, RoutingPolicy};
+pub use server::{handle_request, serve};
+
+#[cfg(test)]
+mod tests;

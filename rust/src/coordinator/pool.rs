@@ -1,0 +1,97 @@
+//! Worker pool: a leader thread feeds jobs over an mpsc channel to N
+//! worker threads; outcomes flow back over a result channel in
+//! completion order.
+
+use super::{job, BackendKind, Job, JobOutcome, Metrics, Router};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// A running pool. Jobs submitted through [`Self::submit`] are executed
+/// by `workers` threads; call [`Self::drain`] to collect outcomes.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<(Job, BackendKind)>>,
+    rx_out: mpsc::Receiver<JobOutcome>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    router: Router,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    submitted: AtomicU64,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` threads.
+    pub fn new(workers: usize, router: Router) -> Self {
+        let (tx, rx) = mpsc::channel::<(Job, BackendKind)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (tx_out, rx_out) = mpsc::channel::<JobOutcome>();
+        let metrics = Arc::new(Metrics::new());
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let tx_out = tx_out.clone();
+            let metrics = Arc::clone(&metrics);
+            handles.push(std::thread::spawn(move || loop {
+                let msg = rx.lock().unwrap().recv();
+                match msg {
+                    Ok((job, backend)) => {
+                        let outcome = job::execute(&job, backend);
+                        metrics.record(backend, &outcome);
+                        if tx_out.send(outcome).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break, // channel closed: shut down
+                }
+            }));
+        }
+        Self {
+            tx: Some(tx),
+            rx_out,
+            handles,
+            router,
+            metrics,
+            next_id: AtomicU64::new(1),
+            submitted: AtomicU64::new(0),
+        }
+    }
+
+    /// Queue a job; returns its id.
+    pub fn submit(&self, mut job: Job) -> u64 {
+        if job.id == 0 {
+            job.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        let backend = self.router.route(&job);
+        let id = job.id;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send((job, backend))
+            .expect("workers alive");
+        id
+    }
+
+    /// Collect all outstanding outcomes (blocks until every submitted
+    /// job has completed).
+    pub fn drain(&self) -> Vec<JobOutcome> {
+        let n = self.submitted.swap(0, Ordering::Relaxed);
+        (0..n).map(|_| self.rx_out.recv().expect("worker delivered")).collect()
+    }
+
+    /// Shut the pool down, joining all workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Backend routing policy.
+
+use crate::hw::DelayKind;
+
+/// Execution backends the coordinator can dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Rust SSQA software engine (fastest on this host).
+    Software,
+    /// Rust SSA baseline engine.
+    SoftwareSsa,
+    /// Cycle-accurate FPGA model (exact cycle/energy accounting).
+    HwSim(DelayKind),
+    /// AOT JAX/Pallas artifact on the PJRT CPU client.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Software => "sw-ssqa",
+            BackendKind::SoftwareSsa => "sw-ssa",
+            BackendKind::HwSim(DelayKind::DualBram) => "hw-dual-bram",
+            BackendKind::HwSim(DelayKind::ShiftReg) => "hw-shift-reg",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a CLI/server token.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sw" | "sw-ssqa" | "software" => BackendKind::Software,
+            "ssa" | "sw-ssa" => BackendKind::SoftwareSsa,
+            "hw" | "hw-dual-bram" => BackendKind::HwSim(DelayKind::DualBram),
+            "hw-shift-reg" | "shiftreg" => BackendKind::HwSim(DelayKind::ShiftReg),
+            "pjrt" | "artifact" => BackendKind::Pjrt,
+            _ => return None,
+        })
+    }
+}
+
+/// How the router chooses when a job has no explicit backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Everything to the software engine.
+    AllSoftware,
+    /// Jobs that fit an artifact go to PJRT; the rest to software.
+    PreferPjrt { max_n: usize, max_r: usize },
+    /// Jobs needing exact hardware cost accounting go to the hw model.
+    PreferHwSim,
+}
+
+/// The router.
+#[derive(Debug, Clone, Copy)]
+pub struct Router {
+    pub policy: RoutingPolicy,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Pick a backend for a job (explicit override wins).
+    pub fn route(&self, job: &super::Job) -> BackendKind {
+        if let Some(b) = job.backend {
+            return b;
+        }
+        match self.policy {
+            RoutingPolicy::AllSoftware => BackendKind::Software,
+            RoutingPolicy::PreferPjrt { max_n, max_r } => {
+                let n = job.spec.graph().num_nodes();
+                if n <= max_n && job.params.replicas <= max_r {
+                    BackendKind::Pjrt
+                } else {
+                    BackendKind::Software
+                }
+            }
+            RoutingPolicy::PreferHwSim => BackendKind::HwSim(DelayKind::DualBram),
+        }
+    }
+}

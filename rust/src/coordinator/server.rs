@@ -1,0 +1,110 @@
+//! Line-protocol server: the embedded-deployment face of the
+//! coordinator (`ssqa serve --port 7090`).
+//!
+//! Protocol (one request per line, one response per line):
+//!
+//! ```text
+//! solve graph=G11 steps=500 seed=1 [backend=sw|hw|pjrt|ssa] [replicas=20]
+//! metrics
+//! ping
+//! quit
+//! ```
+//!
+//! Responses: `ok id=<id> graph=<label> backend=<name> cut=<cut>
+//! energy=<H> wall_us=<t>` or `err <message>`.
+
+use super::{BackendKind, Job, JobSpec, Router, RoutingPolicy, WorkerPool};
+use crate::graph::GraphSpec;
+use crate::Result;
+use anyhow::anyhow;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+
+/// Parse and execute one request line against a pool.
+pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
+    let mut parts = line.split_whitespace();
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "ping" => Ok("pong".to_string()),
+        "metrics" => Ok(pool.metrics.render().replace('\n', ";")),
+        "solve" => {
+            let mut graph = None;
+            let mut steps = 500usize;
+            let mut seed = 1u32;
+            let mut backend = None;
+            let mut replicas = None;
+            for tok in parts {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("malformed token {tok:?}"))?;
+                match k {
+                    "graph" => {
+                        graph = Some(match v {
+                            "G11" => GraphSpec::G11,
+                            "G12" => GraphSpec::G12,
+                            "G13" => GraphSpec::G13,
+                            "G14" => GraphSpec::G14,
+                            "G15" => GraphSpec::G15,
+                            _ => return Err(anyhow!("unknown graph {v:?}")),
+                        });
+                    }
+                    "steps" => steps = v.parse()?,
+                    "seed" => seed = v.parse()?,
+                    "replicas" => replicas = Some(v.parse()?),
+                    "backend" => {
+                        backend = Some(
+                            BackendKind::parse(v).ok_or_else(|| anyhow!("unknown backend {v:?}"))?,
+                        )
+                    }
+                    _ => return Err(anyhow!("unknown key {k:?}")),
+                }
+            }
+            let spec = JobSpec::Named(graph.ok_or_else(|| anyhow!("graph= required"))?);
+            let mut job = Job::new(0, spec, steps, seed);
+            job.backend = backend;
+            if let Some(r) = replicas {
+                job.params.replicas = r;
+            }
+            pool.submit(job);
+            let outcome = pool.drain().pop().expect("one outcome");
+            Ok(format!(
+                "ok id={} graph={} backend={} cut={} energy={} wall_us={}",
+                outcome.id,
+                outcome.label,
+                outcome.backend.name(),
+                outcome.cut,
+                outcome.best_energy,
+                outcome.wall.as_micros()
+            ))
+        }
+        "" => Err(anyhow!("empty request")),
+        other => Err(anyhow!("unknown verb {other:?}")),
+    }
+}
+
+/// Serve forever on `addr` (e.g. `127.0.0.1:7090`). One session at a
+/// time per connection; `quit` closes the session. Returns only on
+/// listener failure.
+pub fn serve(addr: &str, workers: usize) -> Result<()> {
+    let pool = WorkerPool::new(workers, Router::new(RoutingPolicy::AllSoftware));
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("ssqa coordinator listening on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim() == "quit" {
+                break;
+            }
+            let resp = match handle_request(&pool, line.trim()) {
+                Ok(r) => r,
+                Err(e) => format!("err {e}"),
+            };
+            writer.write_all(resp.as_bytes())?;
+            writer.write_all(b"\n")?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,130 @@
+use super::*;
+use crate::graph::{torus_2d, GraphSpec};
+use crate::hw::DelayKind;
+
+fn tiny_job(id: u64, steps: usize) -> Job {
+    let g = torus_2d(4, 6, true, 5);
+    let mut job = Job::new(id, JobSpec::Inline(g), steps, 3);
+    job.params.replicas = 4;
+    job
+}
+
+#[test]
+fn backend_names_and_parse_roundtrip() {
+    for b in [
+        BackendKind::Software,
+        BackendKind::SoftwareSsa,
+        BackendKind::HwSim(DelayKind::DualBram),
+        BackendKind::HwSim(DelayKind::ShiftReg),
+        BackendKind::Pjrt,
+    ] {
+        assert_eq!(BackendKind::parse(b.name()), Some(b), "{}", b.name());
+    }
+    assert_eq!(BackendKind::parse("nope"), None);
+}
+
+#[test]
+fn router_respects_override_and_policy() {
+    let r = Router::new(RoutingPolicy::AllSoftware);
+    let mut job = tiny_job(1, 10);
+    assert_eq!(r.route(&job), BackendKind::Software);
+    job.backend = Some(BackendKind::HwSim(DelayKind::DualBram));
+    assert_eq!(r.route(&job), BackendKind::HwSim(DelayKind::DualBram));
+
+    let r = Router::new(RoutingPolicy::PreferPjrt { max_n: 64, max_r: 8 });
+    let mut small = tiny_job(2, 10);
+    small.params.replicas = 8;
+    assert_eq!(r.route(&small), BackendKind::Pjrt);
+    let big = Job::new(3, JobSpec::Named(GraphSpec::G11), 10, 1);
+    assert_eq!(r.route(&big), BackendKind::Software);
+}
+
+#[test]
+fn execute_software_and_hw_agree() {
+    let job = tiny_job(7, 40);
+    let sw = job::execute(&job, BackendKind::Software);
+    let hw = job::execute(&job, BackendKind::HwSim(DelayKind::DualBram));
+    assert_eq!(sw.cut, hw.cut, "bit-exact backends must agree");
+    assert_eq!(sw.best_energy, hw.best_energy);
+    assert!(hw.modeled_energy_j.unwrap() > 0.0);
+    assert!(sw.modeled_energy_j.is_none());
+}
+
+#[test]
+fn pool_executes_and_drains_in_any_order() {
+    let pool = WorkerPool::new(4, Router::new(RoutingPolicy::AllSoftware));
+    let ids: Vec<u64> = (0..8).map(|i| pool.submit(tiny_job(0, 20 + i as usize))).collect();
+    let outcomes = pool.drain();
+    assert_eq!(outcomes.len(), 8);
+    let mut seen: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+    seen.sort_unstable();
+    let mut want = ids.clone();
+    want.sort_unstable();
+    assert_eq!(seen, want);
+    pool.shutdown();
+}
+
+#[test]
+fn pool_metrics_accumulate() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    for _ in 0..3 {
+        pool.submit(tiny_job(0, 15));
+    }
+    pool.drain();
+    let snap = pool.metrics.snapshot();
+    let m = snap.get("sw-ssqa").expect("software metrics present");
+    assert_eq!(m.jobs, 3);
+    assert!(m.mean_wall() > std::time::Duration::ZERO);
+    assert!(m.min_wall.unwrap() <= m.max_wall.unwrap());
+    let render = pool.metrics.render();
+    assert!(render.contains("sw-ssqa"));
+}
+
+#[test]
+fn handle_request_protocol() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    assert_eq!(handle_request(&pool, "ping").unwrap(), "pong");
+    let resp = handle_request(&pool, "solve graph=G11 steps=5 seed=1 replicas=4").unwrap();
+    assert!(resp.starts_with("ok id="), "{resp}");
+    assert!(resp.contains("graph=G11"));
+    assert!(resp.contains("backend=sw-ssqa"));
+    assert!(handle_request(&pool, "solve steps=5").is_err()); // graph missing
+    assert!(handle_request(&pool, "solve graph=G99").is_err());
+    assert!(handle_request(&pool, "bogus").is_err());
+    let metrics = handle_request(&pool, "metrics").unwrap();
+    assert!(metrics.contains("sw-ssqa"));
+}
+
+#[test]
+fn serve_over_tcp_end_to_end() {
+    use std::io::{BufRead, BufReader, Write};
+    // bind on an ephemeral port by trying a few
+    let addr = "127.0.0.1:47911";
+    let addr_owned = addr.to_string();
+    std::thread::spawn(move || {
+        let _ = serve(&addr_owned, 2);
+    });
+    // retry connect until the listener is up
+    let mut stream = None;
+    for _ in 0..50 {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    }
+    let stream = stream.expect("server came up");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    w.write_all(b"ping\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "pong");
+    w.write_all(b"solve graph=G11 steps=3 seed=2 replicas=4\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ok id="), "{line}");
+    w.write_all(b"quit\n").unwrap();
+}

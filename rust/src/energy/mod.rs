@@ -1,0 +1,44 @@
+//! Latency / energy models and platform constants (Table 4, Table 5,
+//! Table 6, Figs. 11–12).
+//!
+//! FPGA latency comes from the exact cycle count of the hw model at the
+//! configured clock; CPU/GPU latency uses per-spin-update cost models
+//! calibrated to the paper's published gaps (97% / 70% latency reduction
+//! vs CPU / GPU on G12, Fig. 11), with this machine's *measured*
+//! software-engine throughput also reported alongside (see
+//! `experiments::fig11`).
+
+mod memory;
+mod platforms;
+
+pub use memory::{spin_state_memory_bits, MemoryReport};
+pub use platforms::{Platform, PlatformKind};
+
+use crate::graph::IsingModel;
+use crate::hw::{cycles_per_step, DelayKind};
+
+/// Latency of a full annealing run on the FPGA (seconds).
+pub fn fpga_latency_s(
+    model: &IsingModel,
+    steps: usize,
+    delay: DelayKind,
+    parallel: usize,
+    clock_hz: f64,
+) -> f64 {
+    let cycles = cycles_per_step(model, delay) * steps as u64;
+    cycles.div_ceil(parallel as u64) as f64 / clock_hz
+}
+
+/// Energy in joules = power × latency.
+pub fn energy_j(power_w: f64, latency_s: f64) -> f64 {
+    power_w * latency_s
+}
+
+/// Percentage reduction of `ours` relative to `theirs` (the paper's
+/// "99.998% reduction" phrasing).
+pub fn reduction_pct(theirs: f64, ours: f64) -> f64 {
+    100.0 * (1.0 - ours / theirs)
+}
+
+#[cfg(test)]
+mod tests;

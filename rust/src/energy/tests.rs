@@ -1,0 +1,105 @@
+use super::*;
+use crate::graph::GraphSpec;
+use crate::problems::maxcut;
+
+#[test]
+fn fpga_latency_matches_table6_g11() {
+    // paper Table 6: 12.01 ms for G11 at 166 MHz, 500 steps
+    // (800 spins × 5 cycles × 500 steps / 166 MHz = 12.05 ms)
+    let g = GraphSpec::G11.build();
+    let m = maxcut::ising_from_graph(&g, 8);
+    let lat = fpga_latency_s(&m, 500, DelayKind::DualBram, 1, 166e6);
+    assert!((lat - 12.0e-3).abs() < 0.2e-3, "latency {lat}");
+}
+
+#[test]
+fn table6_energy_for_g11() {
+    // paper: 1.093 mJ = 0.091 W × 12.01 ms
+    let g = GraphSpec::G11.build();
+    let m = maxcut::ising_from_graph(&g, 8);
+    let lat = fpga_latency_s(&m, 500, DelayKind::DualBram, 1, 166e6);
+    let e = energy_j(0.091, lat);
+    assert!((e - 1.093e-3).abs() < 0.05e-3, "energy {e}");
+}
+
+#[test]
+fn parallel_divides_latency() {
+    let g = GraphSpec::G11.build();
+    let m = maxcut::ising_from_graph(&g, 8);
+    let l1 = fpga_latency_s(&m, 500, DelayKind::DualBram, 1, 166e6);
+    let l10 = fpga_latency_s(&m, 500, DelayKind::DualBram, 10, 166e6);
+    assert!((l1 / l10 - 10.0).abs() < 0.01, "p=10 speedup {}", l1 / l10);
+    // §5.1: 12.0 ms → 1.2 ms
+    assert!((l10 - 1.2e-3).abs() < 0.05e-3);
+}
+
+#[test]
+fn g15_costs_more_than_g12() {
+    // Fig. 11: higher connectivity ⇒ higher latency and energy
+    let g12 = GraphSpec::G12.build();
+    let g15 = GraphSpec::G15.build();
+    let m12 = maxcut::ising_from_graph(&g12, 8);
+    let m15 = maxcut::ising_from_graph(&g15, 8);
+    let l12 = fpga_latency_s(&m12, 500, DelayKind::DualBram, 1, 166e6);
+    let l15 = fpga_latency_s(&m15, 500, DelayKind::DualBram, 1, 166e6);
+    assert!(l15 > 2.0 * l12, "G15 should cost >2× G12 (degree ~11.7 vs 4)");
+}
+
+#[test]
+fn platform_constants_match_table4() {
+    let cpu = Platform::cpu();
+    assert_eq!(cpu.power_w, 140.0);
+    assert_eq!(cpu.clock_hz, 3.4e9);
+    let gpu = Platform::gpu();
+    assert_eq!(gpu.power_w, 450.0);
+    let fp = Platform::fpga_dual_bram();
+    assert_eq!(fp.power_w, 0.091);
+    let fc = Platform::fpga_shift_reg();
+    assert_eq!(fc.power_w, 0.306);
+    assert_eq!(Platform::all().len(), 4);
+}
+
+#[test]
+fn fig11_gaps_reproduced_on_g12() {
+    // paper: proposed vs CPU — 97% latency, 99.998% energy reduction;
+    // vs GPU — 70% latency, 99.994% energy reduction
+    let g = GraphSpec::G12.build();
+    let m = maxcut::ising_from_graph(&g, 8);
+    let steps = 500;
+    let fpga_lat = fpga_latency_s(&m, steps, DelayKind::DualBram, 1, 166e6);
+    let fpga_e = energy_j(Platform::fpga_dual_bram().power_w, fpga_lat);
+    let cpu = Platform::cpu();
+    let cpu_lat = cpu.sw_latency_s(800, 20, steps);
+    let cpu_e = cpu.energy_j(cpu_lat);
+    let gpu = Platform::gpu();
+    let gpu_lat = gpu.sw_latency_s(800, 20, steps);
+    let gpu_e = gpu.energy_j(gpu_lat);
+    let lat_red_cpu = reduction_pct(cpu_lat, fpga_lat);
+    let lat_red_gpu = reduction_pct(gpu_lat, fpga_lat);
+    let e_red_cpu = reduction_pct(cpu_e, fpga_e);
+    let e_red_gpu = reduction_pct(gpu_e, fpga_e);
+    assert!((lat_red_cpu - 97.0).abs() < 1.5, "CPU latency reduction {lat_red_cpu}");
+    assert!((lat_red_gpu - 70.0).abs() < 3.0, "GPU latency reduction {lat_red_gpu}");
+    assert!(e_red_cpu > 99.99, "CPU energy reduction {e_red_cpu}");
+    assert!(e_red_gpu > 99.98, "GPU energy reduction {e_red_gpu}");
+}
+
+#[test]
+fn sw_latency_panics_for_fpga() {
+    let r = std::panic::catch_unwind(|| Platform::fpga_dual_bram().sw_latency_s(10, 2, 5));
+    assert!(r.is_err());
+}
+
+#[test]
+fn table5_memory_reduction() {
+    let rep = MemoryReport::new(800, 20);
+    assert_eq!(rep.proposed_bits, 32_000); // the paper's "32 kb"
+    assert_eq!(rep.ha_ssa_bits, 13_200_000); // "13.2 Mb"
+    assert!((rep.reduction_pct() - 99.8).abs() < 0.1);
+}
+
+#[test]
+fn reduction_pct_basics() {
+    assert!((reduction_pct(100.0, 50.0) - 50.0).abs() < 1e-12);
+    assert!((reduction_pct(2.138, 1.093) - 48.9).abs() < 0.5); // Table 6 energy: ~50%
+}

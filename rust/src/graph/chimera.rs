@@ -1,0 +1,115 @@
+//! Chimera-topology generator (paper §5.3).
+//!
+//! The paper contrasts its native fully-connected support with
+//! superconducting annealers' "sparse Chimera/Pegasus connectivity,
+//! necessitating costly minor-embedding". This generator builds the
+//! D-Wave Chimera C(m, n, t) graph — an m×n grid of K_{t,t} unit cells
+//! with inter-cell couplers — so that embedding-overhead experiments
+//! can be run against the same engines, plus a minor-embedding cost
+//! estimator for the comparison the paper makes qualitatively.
+
+use super::Graph;
+use crate::rng::Xorshift64Star;
+
+/// Build Chimera C(m, n, t): `2·t·m·n` nodes. Within a cell, the left
+/// shore (t nodes) fully connects to the right shore (K_{t,t});
+/// left-shore nodes couple vertically between row-adjacent cells and
+/// right-shore nodes horizontally between column-adjacent cells.
+/// Weights drawn uniformly from `weights`.
+pub fn chimera(m: usize, n: usize, t: usize, weights: &[i32], seed: u64) -> Graph {
+    let mut rng = Xorshift64Star::new(seed);
+    let cell = |r: usize, c: usize| (r * n + c) * 2 * t;
+    let mut edges = Vec::new();
+    let mut w = |rng: &mut Xorshift64Star| weights[rng.next_below(weights.len())];
+    for r in 0..m {
+        for c in 0..n {
+            let base = cell(r, c);
+            // K_{t,t} unit cell: left shore [0,t), right shore [t,2t)
+            for i in 0..t {
+                for j in 0..t {
+                    edges.push((
+                        (base + i) as u32,
+                        (base + t + j) as u32,
+                        w(&mut rng),
+                    ));
+                }
+            }
+            // vertical couplers: left shore to the cell below
+            if r + 1 < m {
+                let below = cell(r + 1, c);
+                for i in 0..t {
+                    edges.push(((base + i) as u32, (below + i) as u32, w(&mut rng)));
+                }
+            }
+            // horizontal couplers: right shore to the cell to the right
+            if c + 1 < n {
+                let right = cell(r, c + 1);
+                for j in 0..t {
+                    edges.push((
+                        (base + t + j) as u32,
+                        (right + t + j) as u32,
+                        w(&mut rng),
+                    ));
+                }
+            }
+        }
+    }
+    Graph::new(2 * t * m * n, edges)
+}
+
+/// Minor-embedding cost estimate for a fully-connected K_N problem on
+/// Chimera with cell size t: the standard triangle embedding needs
+/// chains of length ⌈N/t⌉ + 1 and ⌈N/(2t)⌉·(N + …) ≈ N²/(4t) cells —
+/// we report the qubit blow-up factor the paper alludes to ("costly
+/// minor-embedding"): physical qubits ≈ N·(⌈N/(2t)⌉ + 1).
+pub fn k_n_embedding_qubits(n: usize, t: usize) -> u64 {
+    let chain = n.div_ceil(2 * t) + 1;
+    (n * chain) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chimera_c222_shape() {
+        // 2×2 grid of K_{2,2}: 16 nodes, 4 cells × 4 intra + vertical
+        // 2 cells-pairs × 2 + horizontal 2 × 2 = 16 + 4 + 4 = 24 edges
+        let g = chimera(2, 2, 2, &[1], 1);
+        assert_eq!(g.num_nodes(), 16);
+        assert_eq!(g.num_edges(), 24);
+    }
+
+    #[test]
+    fn chimera_c444_matches_dwave_2000q_tile_density() {
+        // C(4,4,4): 128 qubits; intra 4·16·... per cell 16 edges × 16
+        // cells = 256, vertical 4·(3·4) = 48, horizontal 48 ⇒ 352
+        let g = chimera(4, 4, 4, &[-1, 1], 7);
+        assert_eq!(g.num_nodes(), 128);
+        assert_eq!(g.num_edges(), 256 + 48 + 48);
+        // max degree: shore node = t intra + 2 inter = 6
+        assert_eq!(g.max_degree(), 6);
+    }
+
+    #[test]
+    fn chimera_solvable_by_ssqa() {
+        use crate::annealer::{Annealer, SsqaEngine, SsqaParams};
+        use crate::problems::maxcut;
+        let g = chimera(2, 2, 4, &[-1, 1], 3);
+        let steps = 300;
+        let p = SsqaParams { replicas: 8, ..SsqaParams::gset_default(steps) };
+        let model = maxcut::ising_from_graph(&g, p.j_scale);
+        let res = SsqaEngine::new(p, steps).anneal(&model, steps, 5);
+        let w_pos: i64 = g.edges().iter().filter(|e| e.2 > 0).map(|e| e.2 as i64).sum();
+        assert!(res.cut(&g) > w_pos / 2, "cut {} vs random {}", res.cut(&g), w_pos / 2);
+    }
+
+    #[test]
+    fn embedding_blowup_is_quadratic_ish() {
+        // the §5.3 point: embedding K_800 on Chimera t=4 needs ~100
+        // physical qubits per logical one; native support needs 1
+        let q = k_n_embedding_qubits(800, 4);
+        assert!(q > 80_000, "blow-up {q}");
+        assert_eq!(k_n_embedding_qubits(8, 4), 8 * 2);
+    }
+}

@@ -1,0 +1,169 @@
+//! Deterministic instance generators reproducing Table 2's structures.
+//!
+//! We cannot ship the original Stanford G-set files, so each generator
+//! reproduces the *structural class* of its paper counterpart (node
+//! count, topology, weight alphabet, edge count) from a fixed seed; see
+//! DESIGN.md §2. Real G-set files parse through [`super::parse_gset`]
+//! and run unchanged.
+
+use super::Graph;
+use crate::rng::Xorshift64Star;
+
+/// Named instance specs mirroring Table 2 of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphSpec {
+    /// G11-like: 800-node toroidal, ±1 weights, 1600 edges.
+    G11,
+    /// G12-like: same class, different seed.
+    G12,
+    /// G13-like: same class, different seed.
+    G13,
+    /// G14-like: 800-node planar-construction, +1 weights, ~4694 edges.
+    G14,
+    /// G15-like: same class, different seed (~4661 edges).
+    G15,
+}
+
+impl GraphSpec {
+    /// All five benchmark specs in Table 2 order.
+    pub fn all() -> [GraphSpec; 5] {
+        [Self::G11, Self::G12, Self::G13, Self::G14, Self::G15]
+    }
+
+    /// Instance name as used in tables/figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::G11 => "G11",
+            Self::G12 => "G12",
+            Self::G13 => "G13",
+            Self::G14 => "G14",
+            Self::G15 => "G15",
+        }
+    }
+
+    /// Structure label as in Table 2.
+    pub fn structure(&self) -> &'static str {
+        match self {
+            Self::G11 | Self::G12 | Self::G13 => "toroidal",
+            Self::G14 | Self::G15 => "planar",
+        }
+    }
+
+    /// Weight alphabet as in Table 2.
+    pub fn weights(&self) -> &'static str {
+        match self {
+            Self::G11 | Self::G12 | Self::G13 => "{+1,-1}",
+            Self::G14 | Self::G15 => "{+1}",
+        }
+    }
+
+    /// Build the deterministic instance.
+    pub fn build(&self) -> Graph {
+        match self {
+            Self::G11 => torus_2d(20, 40, true, 0x6_11),
+            Self::G12 => torus_2d(20, 40, true, 0x6_12),
+            Self::G13 => torus_2d(20, 40, true, 0x6_13),
+            Self::G14 => planar_like(800, 4694, 0x6_14),
+            Self::G15 => planar_like(800, 4661, 0x6_15),
+        }
+    }
+}
+
+/// 2-D torus (rows × cols nodes, wraparound, degree 4 ⇒ 2·rows·cols
+/// edges). `signed` draws weights uniformly from {−1,+1}; otherwise all
+/// weights are +1. Matches the G11–G13 class: 20×40 ⇒ 800 nodes, 1600
+/// edges.
+pub fn torus_2d(rows: usize, cols: usize, signed: bool, seed: u64) -> Graph {
+    let mut rng = Xorshift64Star::new(seed);
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut edges = Vec::with_capacity(2 * rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            let w = |rng: &mut Xorshift64Star| {
+                if signed {
+                    if rng.next_f64() < 0.5 {
+                        -1
+                    } else {
+                        1
+                    }
+                } else {
+                    1
+                }
+            };
+            // right and down neighbours (wraparound) cover each edge once
+            edges.push((id(r, c), id(r, (c + 1) % cols), w(&mut rng)));
+            edges.push((id(r, c), id((r + 1) % rows, c), w(&mut rng)));
+        }
+    }
+    Graph::new(rows * cols, edges)
+}
+
+/// Planar-construction graph of the G14/G15 class: unit weights, ~target
+/// edge count, bounded degree, locally-clustered structure.
+///
+/// Construction: place nodes on a jittered ring; connect each node to its
+/// `d` nearest ring successors at random spans ≤ `max_span`, rejecting
+/// duplicates, until the edge budget is met. This yields a sparse,
+/// near-planar, unit-weight graph with the same density as G14/G15
+/// (mean degree ≈ 11.7); the exact planarity certificate is irrelevant
+/// to the annealer — only density/degree distribution matter for the
+/// cycle/energy models.
+pub fn planar_like(n: usize, target_edges: usize, seed: u64) -> Graph {
+    let mut rng = Xorshift64Star::new(seed);
+    let mut present = std::collections::HashSet::with_capacity(target_edges * 2);
+    let mut edges = Vec::with_capacity(target_edges);
+    // ring backbone keeps the graph connected
+    for i in 0..n {
+        let j = (i + 1) % n;
+        let (a, b) = (i.min(j) as u32, i.max(j) as u32);
+        present.insert((a, b));
+        edges.push((a, b, 1));
+    }
+    let max_span = (n / 16).max(4);
+    while edges.len() < target_edges {
+        let i = rng.next_below(n);
+        let span = 2 + rng.next_below(max_span - 1);
+        let j = (i + span) % n;
+        let (a, b) = (i.min(j) as u32, i.max(j) as u32);
+        if a != b && present.insert((a, b)) {
+            edges.push((a, b, 1));
+        }
+    }
+    Graph::new(n, edges)
+}
+
+/// Erdős–Rényi-style random graph with exactly `m` edges and weights
+/// drawn uniformly from `weights`.
+pub fn random_graph(n: usize, m: usize, weights: &[i32], seed: u64) -> Graph {
+    assert!(m <= n * (n - 1) / 2, "too many edges requested");
+    let mut rng = Xorshift64Star::new(seed);
+    let mut present = std::collections::HashSet::with_capacity(m * 2);
+    let mut edges = Vec::with_capacity(m);
+    while edges.len() < m {
+        let i = rng.next_below(n);
+        let j = rng.next_below(n);
+        if i == j {
+            continue;
+        }
+        let (a, b) = (i.min(j) as u32, i.max(j) as u32);
+        if present.insert((a, b)) {
+            let w = weights[rng.next_below(weights.len())];
+            edges.push((a, b, w));
+        }
+    }
+    Graph::new(n, edges)
+}
+
+/// Fully-connected graph (the connectivity class the paper's architecture
+/// targets: up to N−1 connections per spin, Table 6).
+pub fn complete_graph(n: usize, weights: &[i32], seed: u64) -> Graph {
+    let mut rng = Xorshift64Star::new(seed);
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let w = weights[rng.next_below(weights.len())];
+            edges.push((i as u32, j as u32, w));
+        }
+    }
+    Graph::new(n, edges)
+}

@@ -1,0 +1,57 @@
+//! Standard G-set text format: first line `n m`, then one `i j w` edge
+//! per line with **1-based** node indices.
+//!
+//! Real Stanford G-set files (G11, G14, …) drop into the benchmark
+//! harness through this parser; our generated instances can be exported
+//! in the same format for use with other solvers.
+
+use super::Graph;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+
+/// Parse G-set text.
+pub fn parse_gset(text: &str) -> Result<Graph> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| anyhow!("empty G-set file"))?;
+    let mut it = header.split_whitespace();
+    let n: usize = it
+        .next()
+        .ok_or_else(|| anyhow!("missing node count"))?
+        .parse()
+        .context("node count")?;
+    let m: usize = it
+        .next()
+        .ok_or_else(|| anyhow!("missing edge count"))?
+        .parse()
+        .context("edge count")?;
+    let mut edges = Vec::with_capacity(m);
+    for (lineno, line) in lines.enumerate() {
+        let mut f = line.split_whitespace();
+        let (i, j, w) = (f.next(), f.next(), f.next());
+        let (i, j, w) = match (i, j, w) {
+            (Some(a), Some(b), Some(c)) => (a, b, c),
+            _ => bail!("line {}: expected `i j w`, got {line:?}", lineno + 2),
+        };
+        let i: u32 = i.parse().with_context(|| format!("line {}", lineno + 2))?;
+        let j: u32 = j.parse().with_context(|| format!("line {}", lineno + 2))?;
+        let w: i32 = w.parse().with_context(|| format!("line {}", lineno + 2))?;
+        if i == 0 || j == 0 {
+            bail!("line {}: G-set nodes are 1-based", lineno + 2);
+        }
+        edges.push((i - 1, j - 1, w));
+    }
+    if edges.len() != m {
+        bail!("header says {m} edges, file has {}", edges.len());
+    }
+    Ok(Graph::new(n, edges))
+}
+
+/// Serialize to G-set text (1-based indices).
+pub fn write_gset(g: &Graph) -> String {
+    let mut out = String::with_capacity(16 * g.num_edges() + 16);
+    out.push_str(&format!("{} {}\n", g.num_nodes(), g.num_edges()));
+    for &(i, j, w) in g.edges() {
+        out.push_str(&format!("{} {} {}\n", i + 1, j + 1, w));
+    }
+    out
+}

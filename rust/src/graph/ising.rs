@@ -1,0 +1,167 @@
+//! Ising model `H(σ) = −Σ h_i σ_i − Σ_{i<j} J_ij σ_i σ_j` (Eq. 2) with
+//! both dense and CSR coupling storage.
+//!
+//! The dense form feeds the matvec-style software engine and mirrors the
+//! weight-matrix BRAM of the hardware (stored as N² words, Fig. 10c);
+//! the CSR form feeds the sparse-skipping scheduler (paper §4.4: the
+//! scheduler bypasses zero-weight placeholders, giving `N·(k+1)` cycles
+//! per step for degree-k graphs).
+
+use super::Graph;
+
+/// Compressed sparse row matrix over i32 weights (symmetric couplings,
+/// both triangles stored for row-major streaming).
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    n: usize,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    values: Vec<i32>,
+}
+
+impl CsrMatrix {
+    /// Build the symmetric CSR from an edge list.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, i32)]) -> Self {
+        let mut deg = vec![0u32; n];
+        for &(i, j, _) in edges {
+            deg[i as usize] += 1;
+            deg[j as usize] += 1;
+        }
+        let mut row_ptr = vec![0u32; n + 1];
+        for i in 0..n {
+            row_ptr[i + 1] = row_ptr[i] + deg[i];
+        }
+        let nnz = row_ptr[n] as usize;
+        let mut col_idx = vec![0u32; nnz];
+        let mut values = vec![0i32; nnz];
+        let mut cursor = row_ptr[..n].to_vec();
+        for &(i, j, w) in edges {
+            let ci = cursor[i as usize] as usize;
+            col_idx[ci] = j;
+            values[ci] = w;
+            cursor[i as usize] += 1;
+            let cj = cursor[j as usize] as usize;
+            col_idx[cj] = i;
+            values[cj] = w;
+            cursor[j as usize] += 1;
+        }
+        // sort columns within each row for deterministic iteration
+        for i in 0..n {
+            let (s, e) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+            let mut pairs: Vec<(u32, i32)> =
+                col_idx[s..e].iter().copied().zip(values[s..e].iter().copied()).collect();
+            pairs.sort_unstable_by_key(|p| p.0);
+            for (off, (c, v)) in pairs.into_iter().enumerate() {
+                col_idx[s + off] = c;
+                values[s + off] = v;
+            }
+        }
+        Self { n, row_ptr, col_idx, values }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored nonzeros (2 × edge count).
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row i as (columns, values) slices.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> (&[u32], &[i32]) {
+        let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        (&self.col_idx[s..e], &self.values[s..e])
+    }
+}
+
+/// The Ising problem instance every backend consumes.
+#[derive(Debug, Clone)]
+pub struct IsingModel {
+    n: usize,
+    /// Bias vector `h` (4-bit range in hardware).
+    pub h: Vec<i32>,
+    /// Dense symmetric couplings, row-major N×N, zero diagonal.
+    j_dense: Vec<i32>,
+    /// Sparse couplings for the skipping scheduler.
+    j_sparse: CsrMatrix,
+}
+
+impl IsingModel {
+    /// Build from a graph with all-zero biases (MAX-CUT mapping uses
+    /// `J_ij = −w_ij`, see `problems::maxcut`). `scale` multiplies every
+    /// coupling (the annealer works in integer fixed-point; Table 6's
+    /// 4-bit J supports |scaled| ≤ 7).
+    pub fn from_graph(g: &Graph, scale: i32) -> Self {
+        let n = g.num_nodes();
+        let mut j_dense = vec![0i32; n * n];
+        let scaled: Vec<(u32, u32, i32)> =
+            g.edges().iter().map(|&(i, j, w)| (i, j, w * scale)).collect();
+        for &(i, j, w) in &scaled {
+            j_dense[i as usize * n + j as usize] = w;
+            j_dense[j as usize * n + i as usize] = w;
+        }
+        Self { n, h: vec![0; n], j_dense, j_sparse: CsrMatrix::from_edges(n, &scaled) }
+    }
+
+    /// Build from explicit dense parts (QUBO conversions use this).
+    pub fn from_dense(n: usize, h: Vec<i32>, j_dense: Vec<i32>) -> Self {
+        assert_eq!(h.len(), n);
+        assert_eq!(j_dense.len(), n * n);
+        let mut edges = Vec::new();
+        for i in 0..n {
+            assert_eq!(j_dense[i * n + i], 0, "nonzero diagonal at {i}");
+            for j in (i + 1)..n {
+                assert_eq!(j_dense[i * n + j], j_dense[j * n + i], "J not symmetric");
+                if j_dense[i * n + j] != 0 {
+                    edges.push((i as u32, j as u32, j_dense[i * n + j]));
+                }
+            }
+        }
+        let j_sparse = CsrMatrix::from_edges(n, &edges);
+        Self { n, h, j_dense, j_sparse }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dense row i of J.
+    #[inline(always)]
+    pub fn j_row(&self, i: usize) -> &[i32] {
+        &self.j_dense[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Full dense J (row-major) — streamed into the PJRT artifact.
+    pub fn j_dense(&self) -> &[i32] {
+        &self.j_dense
+    }
+
+    /// Sparse couplings.
+    pub fn j_sparse(&self) -> &CsrMatrix {
+        &self.j_sparse
+    }
+
+    /// Maximum row degree (paper's k).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.j_sparse.row(i).0.len()).max().unwrap_or(0)
+    }
+
+    /// Ising energy `H(σ)` of a ±1 configuration (Eq. 2).
+    pub fn energy(&self, sigma: &[i32]) -> i64 {
+        assert_eq!(sigma.len(), self.n);
+        let mut e: i64 = 0;
+        for i in 0..self.n {
+            e -= (self.h[i] * sigma[i]) as i64;
+            let (cols, vals) = self.j_sparse.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                let j = *c as usize;
+                if j > i {
+                    e -= (*v * sigma[i] * sigma[j]) as i64;
+                }
+            }
+        }
+        e
+    }
+}

@@ -1,0 +1,101 @@
+//! Graph / Ising-model substrate.
+//!
+//! The paper evaluates on G-set MAX-CUT instances (Table 2). This module
+//! provides the weighted-graph type, a parser/writer for the standard
+//! G-set text format, instance generators that reproduce the *structure*
+//! of G11–G15 (toroidal ±1 and planar-construction +1 graphs — see
+//! DESIGN.md §2 for the substitution rationale), and the [`IsingModel`]
+//! consumed by every annealing backend.
+
+mod chimera;
+mod generate;
+mod gset;
+mod ising;
+mod quantize;
+
+pub use chimera::{chimera, k_n_embedding_qubits};
+pub use generate::{complete_graph, planar_like, random_graph, torus_2d, GraphSpec};
+pub use gset::{parse_gset, write_gset};
+pub use ising::{CsrMatrix, IsingModel};
+pub use quantize::{quantize, sparsify, QuantizeReport};
+
+
+/// An undirected weighted graph stored as an edge list.
+///
+/// Nodes are `0..n`. Parallel edges are not allowed; weights are small
+/// signed integers (the paper's hardware supports 4-bit `h`/`J`).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(u32, u32, i32)>,
+}
+
+impl Graph {
+    /// Build from an edge list; panics on out-of-range or self edges.
+    pub fn new(n: usize, mut edges: Vec<(u32, u32, i32)>) -> Self {
+        for e in &mut edges {
+            assert!(e.0 != e.1, "self edge {}-{}", e.0, e.1);
+            assert!((e.0 as usize) < n && (e.1 as usize) < n, "edge out of range");
+            if e.0 > e.1 {
+                std::mem::swap(&mut e.0, &mut e.1);
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup_by_key(|e| (e.0, e.1));
+        Self { n, edges }
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Number of (deduplicated, undirected) edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Edge list, canonical order (i < j, sorted).
+    pub fn edges(&self) -> &[(u32, u32, i32)] {
+        &self.edges
+    }
+
+    /// Degree of every node.
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.n];
+        for &(i, j, _) in &self.edges {
+            d[i as usize] += 1;
+            d[j as usize] += 1;
+        }
+        d
+    }
+
+    /// Maximum node degree (the paper's `k`; cycle count per step is
+    /// `N·(k+1)` for the sparse-skipping scheduler).
+    pub fn max_degree(&self) -> usize {
+        self.degrees().into_iter().max().unwrap_or(0)
+    }
+
+    /// Mean node degree.
+    pub fn mean_degree(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        2.0 * self.num_edges() as f64 / self.n as f64
+    }
+
+    /// True if every weight is in the given inclusive range (hardware
+    /// bit-width check; the paper supports 4-bit `J`, i.e. [-8, 7]).
+    pub fn weights_within(&self, lo: i32, hi: i32) -> bool {
+        self.edges.iter().all(|&(_, _, w)| (lo..=hi).contains(&w))
+    }
+
+    /// Sum of |w| over all edges — the trivial MAX-CUT upper bound for
+    /// non-negative-weight graphs, and a useful normalizer elsewhere.
+    pub fn total_abs_weight(&self) -> i64 {
+        self.edges.iter().map(|&(_, _, w)| w.abs() as i64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests;

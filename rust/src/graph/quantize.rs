@@ -1,0 +1,117 @@
+//! Weight quantization and sparsification (paper §6 future work:
+//! "reducing BRAM usage through sparsification, quantization, or
+//! compression of the weight matrix").
+//!
+//! * [`quantize`] — rescale arbitrary integer couplings into a b-bit
+//!   signed alphabet (round-to-nearest on a symmetric scale), reporting
+//!   the max relative error.
+//! * [`sparsify`] — drop couplings below a magnitude threshold, keeping
+//!   the top fraction by |weight|.
+
+use super::{Graph, IsingModel};
+
+/// Result of a quantization pass.
+#[derive(Debug, Clone)]
+pub struct QuantizeReport {
+    /// Scale factor applied before rounding (dense_w ≈ q_w × scale).
+    pub scale: f64,
+    /// Largest |w − ŵ·scale| / max|w| over all couplings.
+    pub max_rel_error: f64,
+    /// The quantized model.
+    pub model: IsingModel,
+}
+
+/// Quantize a graph's weights into `bits`-wide signed couplings.
+///
+/// The alphabet is `[−2^{bits−1}, 2^{bits−1}−1]`; the scale maps the
+/// largest |weight| to the most negative/positive code symmetrically
+/// (we use `2^{bits−1}−1` both ways so +max and −max stay mirrored,
+/// matching the 4-bit h/J hardware of Table 6).
+pub fn quantize(g: &Graph, bits: u32) -> QuantizeReport {
+    assert!(bits >= 2 && bits <= 16);
+    let qmax = (1i64 << (bits - 1)) - 1;
+    let wmax = g.edges().iter().map(|e| e.2.abs()).max().unwrap_or(1) as f64;
+    let scale = wmax / qmax as f64;
+    let n = g.num_nodes();
+    let mut j = vec![0i32; n * n];
+    let mut max_err: f64 = 0.0;
+    for &(a, b, w) in g.edges() {
+        let q = (w as f64 / scale).round().clamp(-(qmax as f64), qmax as f64) as i32;
+        let err = (w as f64 - q as f64 * scale).abs() / wmax;
+        max_err = max_err.max(err);
+        // MAX-CUT mapping sign convention is applied by the caller; here
+        // we quantize the raw couplings
+        j[a as usize * n + b as usize] = q;
+        j[b as usize * n + a as usize] = q;
+    }
+    QuantizeReport {
+        scale,
+        max_rel_error: max_err,
+        model: IsingModel::from_dense(n, vec![0; n], j),
+    }
+}
+
+/// Keep only the strongest `keep_fraction` of edges by |weight|.
+pub fn sparsify(g: &Graph, keep_fraction: f64) -> Graph {
+    assert!((0.0..=1.0).contains(&keep_fraction));
+    let mut edges: Vec<_> = g.edges().to_vec();
+    edges.sort_by_key(|e| std::cmp::Reverse(e.2.abs()));
+    let keep = ((edges.len() as f64 * keep_fraction).round() as usize).max(1);
+    edges.truncate(keep);
+    Graph::new(g.num_nodes(), edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random_graph;
+
+    #[test]
+    fn quantize_pm1_is_lossless_at_any_width() {
+        let g = random_graph(20, 60, &[-1, 1], 3);
+        for bits in [2u32, 4, 8] {
+            let rep = quantize(&g, bits);
+            assert!(rep.max_rel_error < 1e-12, "bits={bits} err={}", rep.max_rel_error);
+        }
+    }
+
+    #[test]
+    fn quantize_wide_weights_bounded_error() {
+        let g = random_graph(20, 60, &[-100, -37, 12, 99], 7);
+        let rep = quantize(&g, 4);
+        // 4-bit: worst-case rounding error ≤ scale/2 / wmax = 1/(2·7)
+        assert!(rep.max_rel_error <= 0.5 / 7.0 + 1e-9, "err {}", rep.max_rel_error);
+        // codes stay in [−7, 7]
+        assert!(rep.model.j_dense().iter().all(|&v| (-7..=7).contains(&v)));
+    }
+
+    #[test]
+    fn quantized_model_structure_preserved() {
+        let g = random_graph(15, 40, &[-5, 5], 9);
+        let rep = quantize(&g, 4);
+        assert_eq!(rep.model.n(), 15);
+        assert_eq!(rep.model.j_sparse().nnz(), 80);
+    }
+
+    #[test]
+    fn sparsify_keeps_strongest() {
+        let g = random_graph(20, 100, &[-9, -1, 1, 9], 11);
+        let s = sparsify(&g, 0.3);
+        assert_eq!(s.num_edges(), 30);
+        let min_kept = s.edges().iter().map(|e| e.2.abs()).min().unwrap();
+        // no dropped edge may be strictly stronger than the weakest kept
+        let strongest_possible: Vec<_> = {
+            let mut e = g.edges().to_vec();
+            e.sort_by_key(|e| std::cmp::Reverse(e.2.abs()));
+            e
+        };
+        assert!(strongest_possible[29].2.abs() >= min_kept);
+    }
+
+    #[test]
+    fn sparsify_bounds() {
+        let g = random_graph(10, 20, &[1], 1);
+        assert_eq!(sparsify(&g, 1.0).num_edges(), 20);
+        assert_eq!(sparsify(&g, 0.0).num_edges(), 1); // keeps at least one
+    }
+}

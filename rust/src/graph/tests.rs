@@ -1,0 +1,171 @@
+use super::*;
+
+#[test]
+fn graph_dedups_and_canonicalizes() {
+    let g = Graph::new(4, vec![(1, 0, 2), (0, 1, 2), (2, 3, -1)]);
+    assert_eq!(g.num_edges(), 2);
+    assert_eq!(g.edges()[0], (0, 1, 2));
+}
+
+#[test]
+#[should_panic(expected = "self edge")]
+fn graph_rejects_self_edges() {
+    Graph::new(3, vec![(1, 1, 1)]);
+}
+
+#[test]
+#[should_panic(expected = "out of range")]
+fn graph_rejects_out_of_range() {
+    Graph::new(3, vec![(0, 3, 1)]);
+}
+
+#[test]
+fn degrees_and_mean_degree() {
+    let g = Graph::new(4, vec![(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 0, 1)]);
+    assert_eq!(g.degrees(), vec![2, 2, 2, 2]);
+    assert_eq!(g.max_degree(), 2);
+    assert!((g.mean_degree() - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn torus_matches_table2_shape() {
+    // G11-class: 800 nodes, 1600 edges, degree exactly 4, ±1 weights
+    let g = torus_2d(20, 40, true, 1);
+    assert_eq!(g.num_nodes(), 800);
+    assert_eq!(g.num_edges(), 1600);
+    assert!(g.degrees().iter().all(|&d| d == 4));
+    assert!(g.edges().iter().all(|&(_, _, w)| w == 1 || w == -1));
+    // weights should be roughly balanced
+    let pos = g.edges().iter().filter(|e| e.2 == 1).count();
+    assert!((600..=1000).contains(&pos), "unbalanced weights: {pos}");
+}
+
+#[test]
+fn torus_is_deterministic_per_seed() {
+    let a = torus_2d(20, 40, true, 7);
+    let b = torus_2d(20, 40, true, 7);
+    let c = torus_2d(20, 40, true, 8);
+    assert_eq!(a.edges(), b.edges());
+    assert_ne!(a.edges(), c.edges());
+}
+
+#[test]
+fn planar_like_matches_table2_shape() {
+    // G14-class: 800 nodes, 4694 unit-weight edges
+    let g = planar_like(800, 4694, 2);
+    assert_eq!(g.num_nodes(), 800);
+    assert_eq!(g.num_edges(), 4694);
+    assert!(g.edges().iter().all(|&(_, _, w)| w == 1));
+    assert!((g.mean_degree() - 11.7).abs() < 0.1);
+}
+
+#[test]
+fn random_graph_exact_edge_count() {
+    let g = random_graph(50, 200, &[-1, 1], 3);
+    assert_eq!(g.num_edges(), 200);
+    assert!(g.weights_within(-1, 1));
+}
+
+#[test]
+fn complete_graph_has_all_pairs() {
+    let g = complete_graph(10, &[1], 0);
+    assert_eq!(g.num_edges(), 45);
+    assert!(g.degrees().iter().all(|&d| d == 9));
+}
+
+#[test]
+fn spec_builds_match_table2() {
+    for spec in GraphSpec::all() {
+        let g = spec.build();
+        assert_eq!(g.num_nodes(), 800, "{}", spec.name());
+        match spec {
+            GraphSpec::G11 | GraphSpec::G12 | GraphSpec::G13 => {
+                assert_eq!(g.num_edges(), 1600)
+            }
+            GraphSpec::G14 => assert_eq!(g.num_edges(), 4694),
+            GraphSpec::G15 => assert_eq!(g.num_edges(), 4661),
+        }
+        assert!(g.weights_within(-1, 1));
+    }
+}
+
+#[test]
+fn gset_roundtrip() {
+    let g = torus_2d(4, 5, true, 9);
+    let text = write_gset(&g);
+    let g2 = parse_gset(&text).unwrap();
+    assert_eq!(g.num_nodes(), g2.num_nodes());
+    assert_eq!(g.edges(), g2.edges());
+}
+
+#[test]
+fn gset_parser_errors() {
+    assert!(parse_gset("").is_err());
+    assert!(parse_gset("2 1\n0 1 1\n").is_err()); // 0-based index
+    assert!(parse_gset("2 2\n1 2 1\n").is_err()); // edge count mismatch
+    assert!(parse_gset("2 1\n1 2\n").is_err()); // missing weight
+    assert!(parse_gset("x 1\n").is_err()); // bad header
+}
+
+#[test]
+fn csr_is_symmetric_and_sorted() {
+    let g = random_graph(30, 100, &[-2, -1, 1, 2], 5);
+    let m = CsrMatrix::from_edges(g.num_nodes(), g.edges());
+    assert_eq!(m.nnz(), 200);
+    for i in 0..30 {
+        let (cols, vals) = m.row(i);
+        assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} not sorted");
+        for (c, v) in cols.iter().zip(vals) {
+            let (cc, vv) = m.row(*c as usize);
+            let pos = cc.binary_search(&(i as u32)).expect("missing mirror entry");
+            assert_eq!(vv[pos], *v, "asymmetric at ({i},{c})");
+        }
+    }
+}
+
+#[test]
+fn ising_dense_sparse_agree() {
+    let g = random_graph(40, 150, &[-1, 1], 11);
+    let m = IsingModel::from_graph(&g, 1);
+    for i in 0..40 {
+        let dense = m.j_row(i);
+        let (cols, vals) = m.j_sparse().row(i);
+        let mut from_sparse = vec![0i32; 40];
+        for (c, v) in cols.iter().zip(vals) {
+            from_sparse[*c as usize] = *v;
+        }
+        assert_eq!(dense, &from_sparse[..], "row {i}");
+    }
+}
+
+#[test]
+fn ising_energy_matches_bruteforce() {
+    let g = random_graph(8, 12, &[-2, 1, 3], 13);
+    let m = IsingModel::from_graph(&g, 1);
+    // brute-force pairwise sum
+    let sigma: Vec<i32> = (0..8).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+    let mut expect: i64 = 0;
+    for &(i, j, w) in g.edges() {
+        expect -= (w * sigma[i as usize] * sigma[j as usize]) as i64;
+    }
+    assert_eq!(m.energy(&sigma), expect);
+}
+
+#[test]
+fn ising_scaling_applies_to_couplings() {
+    let g = Graph::new(2, vec![(0, 1, 1)]);
+    let m = IsingModel::from_graph(&g, 8);
+    assert_eq!(m.j_row(0)[1], 8);
+    assert_eq!(m.energy(&[1, 1]), -8);
+    assert_eq!(m.energy(&[1, -1]), 8);
+}
+
+#[test]
+fn ising_from_dense_roundtrip() {
+    let g = random_graph(12, 30, &[-1, 1], 17);
+    let m = IsingModel::from_graph(&g, 2);
+    let m2 = IsingModel::from_dense(12, m.h.clone(), m.j_dense().to_vec());
+    let sigma: Vec<i32> = (0..12).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+    assert_eq!(m.energy(&sigma), m2.energy(&sigma));
+    assert_eq!(m.max_degree(), m2.max_degree());
+}

@@ -1,0 +1,135 @@
+//! AXI-Lite register map model.
+//!
+//! The paper's scheduler "receives these hyperparameters via AXI
+//! communication from a CPU integrated into the Zynq FPGA" (§3.1). The
+//! Rust coordinator plays the Zynq PS role: it programs this register
+//! file, then launches the engine. Round-tripping every hyper-parameter
+//! through the 32-bit register file (rather than passing structs around)
+//! keeps the model faithful to the configuration path of the silicon.
+
+use crate::annealer::{NoiseSchedule, QSchedule, SsqaParams};
+use crate::Result;
+use anyhow::bail;
+
+/// Word-addressed configuration registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum RegAddr {
+    I0 = 0x00,
+    Alpha = 0x01,
+    NrndStart = 0x02,
+    NrndEnd = 0x03,
+    QMin = 0x04,
+    QMax = 0x05,
+    Beta = 0x06,
+    Tau = 0x07,
+    Steps = 0x08,
+    Seed = 0x09,
+    Replicas = 0x0A,
+    JScale = 0x0B,
+    /// bit0 = start, bit1 = soft reset
+    Ctrl = 0x0C,
+    /// bit0 = busy, bit1 = done (read-only from PS side)
+    Status = 0x0D,
+}
+
+const NUM_REGS: usize = 0x0E;
+
+/// The register file.
+#[derive(Debug, Clone)]
+pub struct AxiRegisterMap {
+    regs: [u32; NUM_REGS],
+}
+
+impl Default for AxiRegisterMap {
+    fn default() -> Self {
+        Self { regs: [0; NUM_REGS] }
+    }
+}
+
+impl AxiRegisterMap {
+    /// PS-side register write.
+    pub fn write(&mut self, addr: RegAddr, value: u32) {
+        self.regs[addr as usize] = value;
+    }
+
+    /// PS-side register read.
+    pub fn read(&self, addr: RegAddr) -> u32 {
+        self.regs[addr as usize]
+    }
+
+    /// Program the whole parameter set (what the host driver does before
+    /// pulsing CTRL.start).
+    pub fn program(&mut self, params: &SsqaParams, steps: usize, seed: u32) {
+        let (ns, ne) = match params.noise {
+            NoiseSchedule::Constant(v) => (v, v),
+            NoiseSchedule::Linear { start, end } => (start, end),
+        };
+        self.write(RegAddr::I0, params.i0 as u32);
+        self.write(RegAddr::Alpha, params.alpha as u32);
+        self.write(RegAddr::NrndStart, ns as u32);
+        self.write(RegAddr::NrndEnd, ne as u32);
+        self.write(RegAddr::QMin, params.q.q_min as u32);
+        self.write(RegAddr::QMax, params.q.q_max as u32);
+        self.write(RegAddr::Beta, params.q.beta as u32);
+        self.write(RegAddr::Tau, params.q.tau);
+        self.write(RegAddr::Steps, steps as u32);
+        self.write(RegAddr::Seed, seed);
+        self.write(RegAddr::Replicas, params.replicas as u32);
+        self.write(RegAddr::JScale, params.j_scale as u32);
+    }
+
+    /// Decode the register file back into engine parameters (what the PL
+    /// scheduler latches on CTRL.start).
+    pub fn decode(&self) -> Result<(SsqaParams, usize, u32)> {
+        let replicas = self.read(RegAddr::Replicas) as usize;
+        if replicas == 0 {
+            bail!("REPLICAS register not programmed");
+        }
+        let steps = self.read(RegAddr::Steps) as usize;
+        if steps == 0 {
+            bail!("STEPS register not programmed");
+        }
+        let i0 = self.read(RegAddr::I0) as i32;
+        if i0 <= 0 {
+            bail!("I0 must be positive, got {i0}");
+        }
+        let (ns, ne) = (self.read(RegAddr::NrndStart) as i32, self.read(RegAddr::NrndEnd) as i32);
+        let noise = if ns == ne {
+            NoiseSchedule::Constant(ns)
+        } else {
+            NoiseSchedule::Linear { start: ns, end: ne }
+        };
+        let params = SsqaParams {
+            replicas,
+            i0,
+            alpha: self.read(RegAddr::Alpha) as i32,
+            noise,
+            q: QSchedule {
+                q_min: self.read(RegAddr::QMin) as i32,
+                q_max: self.read(RegAddr::QMax) as i32,
+                beta: self.read(RegAddr::Beta) as i32,
+                tau: self.read(RegAddr::Tau),
+            },
+            j_scale: self.read(RegAddr::JScale) as i32,
+        };
+        Ok((params, steps, self.read(RegAddr::Seed)))
+    }
+
+    /// Pulse CTRL.start.
+    pub fn start(&mut self) {
+        self.regs[RegAddr::Ctrl as usize] |= 1;
+        self.regs[RegAddr::Status as usize] = 1; // busy
+    }
+
+    /// Engine-side completion.
+    pub fn set_done(&mut self) {
+        self.regs[RegAddr::Ctrl as usize] &= !1;
+        self.regs[RegAddr::Status as usize] = 2; // done
+    }
+
+    /// PS-side poll.
+    pub fn is_done(&self) -> bool {
+        self.read(RegAddr::Status) & 2 != 0
+    }
+}

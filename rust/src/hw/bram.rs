@@ -1,0 +1,70 @@
+//! Dual-port block-RAM model.
+//!
+//! Xilinx BRAM36 macros are true dual-port with WRITE_FIRST /
+//! READ_FIRST modes; the paper relies on **READ_FIRST** ("BRAM
+//! inherently performs read operations before writes when accessing the
+//! same address simultaneously", §3.3). [`Bram::read_before_write`]
+//! models exactly that collision case; plain reads/writes model the
+//! separate-port accesses. All accesses are counted — the power model
+//! derives BRAM dynamic energy from these counters.
+
+/// A word-addressable memory bank with access accounting.
+#[derive(Debug, Clone)]
+pub struct Bram {
+    data: Vec<i32>,
+    /// Total read-port accesses.
+    pub reads: u64,
+    /// Total write-port accesses.
+    pub writes: u64,
+}
+
+impl Bram {
+    /// Allocate a bank of `size` words initialized to `init`.
+    pub fn new(size: usize, init: i32) -> Self {
+        Self { data: vec![init; size], reads: 0, writes: 0 }
+    }
+
+    /// Allocate from explicit contents (BRAM initialization file — the
+    /// paper reprograms problems "by updating only the BRAM
+    /// initialization files", §5.2).
+    pub fn from_words(words: Vec<i32>) -> Self {
+        Self { data: words, reads: 0, writes: 0 }
+    }
+
+    /// Capacity in words.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Read port access.
+    #[inline(always)]
+    pub fn read(&mut self, addr: usize) -> i32 {
+        self.reads += 1;
+        self.data[addr]
+    }
+
+    /// Write port access.
+    #[inline(always)]
+    pub fn write(&mut self, addr: usize, value: i32) {
+        self.writes += 1;
+        self.data[addr] = value;
+    }
+
+    /// Same-cycle collision on one address: returns the **old** word
+    /// (READ_FIRST) while committing the new one.
+    #[inline(always)]
+    pub fn read_before_write(&mut self, addr: usize, value: i32) -> i32 {
+        self.reads += 1;
+        self.writes += 1;
+        std::mem::replace(&mut self.data[addr], value)
+    }
+
+    /// Peek without counting (testing/debug only).
+    pub fn peek(&self, addr: usize) -> i32 {
+        self.data[addr]
+    }
+}

@@ -1,0 +1,168 @@
+//! BRAM initialization files.
+//!
+//! The paper's §5.2 reprogramming story: "those GI and TSP instances —
+//! and any problem that admits an equivalent QUBO formulation — can be
+//! executed by updating only the BRAM initialization files, without
+//! architectural changes." This module produces and parses those files
+//! in the Xilinx `.coe` (coefficient) format: the dense row-major `J`
+//! matrix in two's-complement words of `j_bits`, plus the `h` vector.
+
+use crate::graph::IsingModel;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Encode a signed word into `bits`-wide two's complement.
+fn to_twos(v: i32, bits: u32) -> Result<u32> {
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    if (v as i64) < lo || (v as i64) > hi {
+        bail!("value {v} exceeds {bits}-bit signed range [{lo}, {hi}]");
+    }
+    Ok((v as u32) & ((1u32 << bits) - 1))
+}
+
+/// Decode `bits`-wide two's complement.
+fn from_twos(raw: u32, bits: u32) -> i32 {
+    let sign = 1u32 << (bits - 1);
+    let mask = (1u32 << bits) - 1;
+    let raw = raw & mask;
+    if raw & sign != 0 {
+        (raw as i32) - (1i32 << bits)
+    } else {
+        raw as i32
+    }
+}
+
+/// Render a `.coe` file from words (radix 16).
+fn render_coe(words: impl Iterator<Item = u32>) -> String {
+    let mut out = String::from("memory_initialization_radix=16;\nmemory_initialization_vector=\n");
+    let mut first = true;
+    for w in words {
+        if !first {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!("{w:X}"));
+        first = false;
+    }
+    out.push_str(";\n");
+    out
+}
+
+/// Parse a `.coe` file back into raw words.
+fn parse_coe(text: &str) -> Result<Vec<u32>> {
+    let vec_part = text
+        .split("memory_initialization_vector=")
+        .nth(1)
+        .ok_or_else(|| anyhow!("missing memory_initialization_vector"))?;
+    let radix = if text.contains("radix=16") {
+        16
+    } else if text.contains("radix=10") {
+        10
+    } else if text.contains("radix=2") {
+        2
+    } else {
+        bail!("unsupported or missing radix");
+    };
+    vec_part
+        .split(|c| c == ',' || c == ';')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| u32::from_str_radix(t, radix).map_err(|e| anyhow!("word {t:?}: {e}")))
+        .collect()
+}
+
+/// The pair of init files programming one problem into the fabric.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BramInit {
+    /// Word width for J entries (paper: 4).
+    pub j_bits: u32,
+    /// Dense row-major J words.
+    pub j_coe: String,
+    /// h vector words (same width).
+    pub h_coe: String,
+}
+
+impl BramInit {
+    /// Serialize a model into `.coe` init files.
+    pub fn from_model(model: &IsingModel, j_bits: u32) -> Result<Self> {
+        let j_words: Result<Vec<u32>> =
+            model.j_dense().iter().map(|&v| to_twos(v, j_bits)).collect();
+        let h_words: Result<Vec<u32>> = model.h.iter().map(|&v| to_twos(v, j_bits)).collect();
+        Ok(Self {
+            j_bits,
+            j_coe: render_coe(j_words?.into_iter()),
+            h_coe: render_coe(h_words?.into_iter()),
+        })
+    }
+
+    /// Reconstruct the model from init files (n must be known — it is
+    /// the fabric's configured spin count).
+    pub fn to_model(&self, n: usize) -> Result<IsingModel> {
+        let j_raw = parse_coe(&self.j_coe)?;
+        let h_raw = parse_coe(&self.h_coe)?;
+        if j_raw.len() != n * n {
+            bail!("J init has {} words, fabric expects {}", j_raw.len(), n * n);
+        }
+        if h_raw.len() != n {
+            bail!("h init has {} words, fabric expects {n}", h_raw.len());
+        }
+        let j: Vec<i32> = j_raw.into_iter().map(|w| from_twos(w, self.j_bits)).collect();
+        let h: Vec<i32> = h_raw.into_iter().map(|w| from_twos(w, self.j_bits)).collect();
+        Ok(IsingModel::from_dense(n, h, j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::random_graph;
+    use crate::problems::maxcut;
+
+    #[test]
+    fn twos_complement_roundtrip() {
+        for bits in [2u32, 4, 8, 12] {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            for v in lo..=hi {
+                assert_eq!(from_twos(to_twos(v, bits).unwrap(), bits), v, "bits={bits}");
+            }
+            assert!(to_twos(hi + 1, bits).is_err());
+            assert!(to_twos(lo - 1, bits).is_err());
+        }
+    }
+
+    #[test]
+    fn coe_roundtrip_model() {
+        let g = random_graph(12, 30, &[-1, 1], 3);
+        let m = maxcut::ising_from_graph(&g, 4); // |J| ≤ 4 fits 4 bits
+        let init = BramInit::from_model(&m, 4).unwrap();
+        assert!(init.j_coe.starts_with("memory_initialization_radix=16;"));
+        let m2 = init.to_model(12).unwrap();
+        assert_eq!(m.j_dense(), m2.j_dense());
+        assert_eq!(m.h, m2.h);
+    }
+
+    #[test]
+    fn rejects_overflowing_weights() {
+        let g = random_graph(6, 8, &[1], 5);
+        let m = maxcut::ising_from_graph(&g, 8); // J = −8 < 4-bit min? −8 fits; +8 doesn't
+        // scale 8 on −1 weights gives +8 which overflows 4-bit [−8, 7]
+        let res = BramInit::from_model(&m, 4);
+        let has_plus8 = m.j_dense().iter().any(|&v| v == 8);
+        assert_eq!(res.is_err(), has_plus8);
+    }
+
+    #[test]
+    fn wrong_sizes_rejected() {
+        let g = random_graph(8, 10, &[1], 7);
+        let m = maxcut::ising_from_graph(&g, 4);
+        let init = BramInit::from_model(&m, 4).unwrap();
+        assert!(init.to_model(9).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_coe("no vector here").is_err());
+        assert!(parse_coe("memory_initialization_radix=7;\nmemory_initialization_vector=1;").is_err());
+    }
+}

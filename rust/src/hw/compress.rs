@@ -1,0 +1,244 @@
+//! Weight-matrix compression (paper §5.1 enhancement iii):
+//! "Compression schemes such as run-length or delta encoding would
+//! release additional BRAM blocks, enabling graphs well beyond 10,000
+//! spins to fit on mid-range FPGAs."
+//!
+//! Two schemes over the row-major dense J stream:
+//!
+//! * [`rle_encode`] — run-length over zero runs (sparse rows are mostly
+//!   zero placeholders): `(zero_run_len: u16, value: i8)` pairs.
+//! * [`delta_encode`] — column-index deltas of the nonzeros per row
+//!   (the classic CSR-style compaction the scheduler can decode with a
+//!   single adder): `(col_delta: u8 varint, value: i8)`.
+//!
+//! [`CompressionReport`] feeds the resource model: compressed footprint
+//! → BRAM blocks → maximum spin count per device.
+
+use crate::graph::IsingModel;
+use crate::Result;
+use anyhow::bail;
+
+/// Run-length encode the dense row-major stream.
+///
+/// Token stream: `[run_lo, run_hi, value]` — a u16 count of zeros
+/// preceding a nonzero `value` (i8). A terminal run with value 0 flushes
+/// trailing zeros.
+pub fn rle_encode(dense: &[i32]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut run: u32 = 0;
+    for &v in dense {
+        if v == 0 {
+            run += 1;
+            if run == u16::MAX as u32 {
+                out.extend_from_slice(&(u16::MAX).to_le_bytes());
+                out.push(0); // continuation token
+                run = 0;
+            }
+            continue;
+        }
+        if !(-128..=127).contains(&v) {
+            bail!("value {v} exceeds i8 range for RLE tokens");
+        }
+        out.extend_from_slice(&(run as u16).to_le_bytes());
+        out.push(v as i8 as u8);
+        run = 0;
+    }
+    if run > 0 {
+        out.extend_from_slice(&(run as u16).to_le_bytes());
+        out.push(0);
+    }
+    Ok(out)
+}
+
+/// Decode an RLE stream back to `len` dense words.
+pub fn rle_decode(stream: &[u8], len: usize) -> Result<Vec<i32>> {
+    let mut out = Vec::with_capacity(len);
+    let mut it = stream.chunks_exact(3);
+    for tok in &mut it {
+        let run = u16::from_le_bytes([tok[0], tok[1]]) as usize;
+        let val = tok[2] as i8 as i32;
+        out.extend(std::iter::repeat_n(0, run));
+        if val != 0 {
+            out.push(val);
+        }
+    }
+    if !it.remainder().is_empty() {
+        bail!("truncated RLE stream");
+    }
+    if out.len() > len {
+        bail!("RLE decoded {} words, expected {len}", out.len());
+    }
+    out.resize(len, 0);
+    Ok(out)
+}
+
+/// Delta-encode the nonzeros of each row: per row, a u16 nonzero count,
+/// then `(col_delta varint, value i8)` pairs.
+pub fn delta_encode(model: &IsingModel) -> Result<Vec<u8>> {
+    let n = model.n();
+    let mut out = Vec::new();
+    for i in 0..n {
+        let (cols, vals) = model.j_sparse().row(i);
+        out.extend_from_slice(&(cols.len() as u16).to_le_bytes());
+        let mut prev: i64 = -1;
+        for (c, v) in cols.iter().zip(vals) {
+            if !(-128..=127).contains(v) {
+                bail!("value {v} exceeds i8 range for delta tokens");
+            }
+            let mut delta = (*c as i64 - prev) as u64; // ≥ 1
+            prev = *c as i64;
+            // LEB128-style varint
+            loop {
+                let byte = (delta & 0x7F) as u8;
+                delta >>= 7;
+                if delta == 0 {
+                    out.push(byte);
+                    break;
+                }
+                out.push(byte | 0x80);
+            }
+            out.push(*v as i8 as u8);
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a delta stream back into a dense row-major matrix.
+pub fn delta_decode(stream: &[u8], n: usize) -> Result<Vec<i32>> {
+    let mut dense = vec![0i32; n * n];
+    let mut pos = 0usize;
+    let mut take = |len: usize| -> Result<&[u8]> {
+        if pos + len > stream.len() {
+            bail!("truncated delta stream");
+        }
+        let s = &stream[pos..pos + len];
+        pos += len;
+        Ok(s)
+    };
+    for i in 0..n {
+        let cnt = u16::from_le_bytes(take(2)?.try_into().unwrap()) as usize;
+        let mut col: i64 = -1;
+        for _ in 0..cnt {
+            let mut delta: u64 = 0;
+            let mut shift = 0;
+            loop {
+                let b = take(1)?[0];
+                delta |= ((b & 0x7F) as u64) << shift;
+                shift += 7;
+                if b & 0x80 == 0 {
+                    break;
+                }
+            }
+            col += delta as i64;
+            if col as usize >= n {
+                bail!("column {col} out of range in row {i}");
+            }
+            let v = take(1)?[0] as i8 as i32;
+            dense[i * n + col as usize] = v;
+        }
+    }
+    Ok(dense)
+}
+
+/// Footprint comparison for the §5.1 capacity analysis.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressionReport {
+    /// Dense storage at `j_bits` per word, in bits.
+    pub dense_bits: u64,
+    /// RLE stream size in bits.
+    pub rle_bits: u64,
+    /// Delta stream size in bits.
+    pub delta_bits: u64,
+}
+
+impl CompressionReport {
+    pub fn for_model(model: &IsingModel, j_bits: u32) -> Result<Self> {
+        let n = model.n() as u64;
+        Ok(Self {
+            dense_bits: n * n * j_bits as u64,
+            rle_bits: rle_encode(model.j_dense())?.len() as u64 * 8,
+            delta_bits: delta_encode(model)?.len() as u64 * 8,
+        })
+    }
+
+    /// Compression ratio of the best scheme vs dense.
+    pub fn best_ratio(&self) -> f64 {
+        self.dense_bits as f64 / self.rle_bits.min(self.delta_bits) as f64
+    }
+
+    /// BRAM36 blocks for the best compressed stream.
+    pub fn best_bram36(&self) -> f64 {
+        (self.rle_bits.min(self.delta_bits) as f64 / 36_864.0).ceil()
+    }
+
+    /// Maximum spin count of a degree-k-regular graph whose *compressed*
+    /// weights fit a BRAM budget (the ">10,000 spins on mid-range
+    /// FPGAs" claim): compressed bits ≈ N·k·(bits per token).
+    pub fn max_spins_for_budget(bram36_budget: f64, mean_degree: f64, bits_per_token: f64) -> u64 {
+        let capacity_bits = bram36_budget * 36_864.0;
+        (capacity_bits / (mean_degree * bits_per_token)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{random_graph, torus_2d, GraphSpec};
+    use crate::problems::maxcut;
+
+    #[test]
+    fn rle_roundtrip_dense_and_sparse() {
+        for (n, m) in [(10, 10), (20, 40), (30, 200)] {
+            let g = random_graph(n, m, &[-3, -1, 1, 3], n as u64);
+            let model = maxcut::ising_from_graph(&g, 2);
+            let enc = rle_encode(model.j_dense()).unwrap();
+            let dec = rle_decode(&enc, n * n).unwrap();
+            assert_eq!(model.j_dense(), &dec[..]);
+        }
+    }
+
+    #[test]
+    fn rle_handles_all_zero_and_long_runs() {
+        let zeros = vec![0i32; 200_000]; // exceeds u16::MAX run
+        let enc = rle_encode(&zeros).unwrap();
+        assert_eq!(rle_decode(&enc, 200_000).unwrap(), zeros);
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let g = torus_2d(6, 8, true, 5);
+        let model = maxcut::ising_from_graph(&g, 4);
+        let enc = delta_encode(&model).unwrap();
+        let dec = delta_decode(&enc, model.n()).unwrap();
+        assert_eq!(model.j_dense(), &dec[..]);
+    }
+
+    #[test]
+    fn truncated_streams_rejected() {
+        let g = torus_2d(4, 4, true, 1);
+        let model = maxcut::ising_from_graph(&g, 4);
+        let enc = delta_encode(&model).unwrap();
+        assert!(delta_decode(&enc[..enc.len() - 1], model.n()).is_err());
+        let renc = rle_encode(model.j_dense()).unwrap();
+        assert!(rle_decode(&renc[..renc.len() - 1], 256).is_err());
+    }
+
+    #[test]
+    fn g11_compression_releases_bram() {
+        // the §5.1 claim on the real benchmark shape: G11's sparse J
+        // compresses far below the 78.5-block dense footprint
+        let g = GraphSpec::G11.build();
+        let model = maxcut::ising_from_graph(&g, 4);
+        let rep = CompressionReport::for_model(&model, 4).unwrap();
+        assert!(rep.best_ratio() > 10.0, "ratio {}", rep.best_ratio());
+        assert!(rep.best_bram36() < 10.0, "blocks {}", rep.best_bram36());
+    }
+
+    #[test]
+    fn capacity_projection_beyond_10k_spins() {
+        // with delta tokens ≈ 16 bits and degree 4, a mid-range 545-block
+        // budget must admit >10,000 spins (the paper's projection)
+        let max = CompressionReport::max_spins_for_budget(400.0, 4.0, 16.0);
+        assert!(max > 10_000, "max spins {max}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Delay circuits: the paper's central architectural comparison.
+//!
+//! A spin-gate update needs three generations of spin state (Eq. 6a):
+//! σ(t+1) being produced, σ(t) for the J-interaction reads, and σ(t−1)
+//! for the replica-coupling read. Both circuits below expose the same
+//! three-generation contract through [`DelayLine`]; they differ in cost:
+//!
+//! * [`ShiftRegDelay`] (Fig. 6): three N-register blocks; every access
+//!   shifts a register chain, so control fan-out and register count grow
+//!   with N (the scalability problem of §3.2).
+//! * [`DualBramDelay`] (Fig. 7): two BRAM banks alternating each step.
+//!   During step t+1 the *write bank* still holds σ(t−1) — the coupling
+//!   read for spin i happens in the same cycle as the σ_i(t+1) write at
+//!   the same address, resolved by BRAM READ_FIRST semantics — while the
+//!   *other* bank holds σ(t) for interaction reads.
+
+use super::bram::Bram;
+
+/// Which delay-line architecture to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DelayKind {
+    /// Conventional shift-register circuit [16] (Fig. 6).
+    ShiftReg,
+    /// Proposed dual-BRAM circuit (Fig. 7).
+    DualBram,
+}
+
+impl DelayKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DelayKind::ShiftReg => "shift-register",
+            DelayKind::DualBram => "dual-BRAM",
+        }
+    }
+}
+
+/// Activity statistics accumulated by a delay line — inputs to the
+/// power model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DelayStats {
+    /// Individual register-shift operations (shift-reg variant only).
+    pub register_shifts: u64,
+    /// BRAM read-port accesses (dual-BRAM variant only).
+    pub bram_reads: u64,
+    /// BRAM write-port accesses.
+    pub bram_writes: u64,
+}
+
+/// The three-generation spin-state store of one replicated spin gate.
+///
+/// Engine calling contract per annealing step:
+/// 1. for each spin `i` (serial): any number of `read_state(j)` calls
+///    (the J-interaction scans), then exactly one `read_delayed(i)`
+///    followed by one `write_new(i, σ)` in the update cycle;
+/// 2. one `step_boundary()` call.
+pub trait DelayLine {
+    /// σ_j(t) — previous-step state of spin j.
+    fn read_state(&mut self, j: usize) -> i32;
+    /// σ_i(t−1) — two-step-delayed state of spin i (replica coupling).
+    fn read_delayed(&mut self, i: usize) -> i32;
+    /// Commit σ_i(t+1). Must follow `read_delayed(i)` in the same
+    /// conceptual cycle (READ_FIRST collision in the BRAM variant).
+    fn write_new(&mut self, i: usize, value: i32);
+    /// Advance one annealing step (bank swap / block transfer).
+    fn step_boundary(&mut self);
+    /// Activity counters.
+    fn stats(&self) -> DelayStats;
+    /// Architecture tag.
+    fn kind(&self) -> DelayKind;
+}
+
+/// Fig. 6: three sequential register blocks of N registers each.
+///
+/// Block 1 collects σ(t+1) as spins are produced; block 2 holds σ(t)
+/// and is consumed serially during the interaction scans; block 3 holds
+/// σ(t−1) for the coupling reads. At every step boundary block 2 → 3 and
+/// block 1 → 2 transfer in parallel (the paper's simultaneous load).
+///
+/// Every serial access shifts the chain by one position — we count one
+/// `register_shift` per *register bit moved*, i.e. N per access-window
+/// advance, which is what makes the measured activity (and hence power)
+/// grow linearly with N exactly as Fig. 10d reports.
+#[derive(Debug, Clone)]
+pub struct ShiftRegDelay {
+    n: usize,
+    block1: Vec<i32>, // σ(t+1) accumulating
+    block2: Vec<i32>, // σ(t)
+    block3: Vec<i32>, // σ(t−1)
+    stats: DelayStats,
+}
+
+impl ShiftRegDelay {
+    /// Initialize all generations to `init` (σ(0) = σ(−1) = init).
+    pub fn new(init: &[i32]) -> Self {
+        Self {
+            n: init.len(),
+            block1: init.to_vec(),
+            block2: init.to_vec(),
+            block3: init.to_vec(),
+            stats: DelayStats::default(),
+        }
+    }
+}
+
+impl DelayLine for ShiftRegDelay {
+    fn read_state(&mut self, j: usize) -> i32 {
+        // serial access: the chain shifts one register per cycle while
+        // scanning; one access toggles one register in each of the N
+        // positions of block 2
+        self.stats.register_shifts += 1;
+        self.block2[j]
+    }
+
+    fn read_delayed(&mut self, i: usize) -> i32 {
+        self.stats.register_shifts += 1;
+        self.block3[i]
+    }
+
+    fn write_new(&mut self, i: usize, value: i32) {
+        // new state enters block 1; the entry shift ripples the chain
+        self.stats.register_shifts += 1;
+        self.block1[i] = value;
+    }
+
+    fn step_boundary(&mut self) {
+        // simultaneous parallel load: block2 → block3, block1 → block2.
+        // every register toggles once: 2N shifts of activity
+        self.stats.register_shifts += 2 * self.n as u64;
+        std::mem::swap(&mut self.block3, &mut self.block2);
+        // block1 must remain intact as the new block2; block3's old
+        // contents are dead and become the new accumulation target
+        std::mem::swap(&mut self.block2, &mut self.block1);
+    }
+
+    fn stats(&self) -> DelayStats {
+        self.stats
+    }
+
+    fn kind(&self) -> DelayKind {
+        DelayKind::ShiftReg
+    }
+}
+
+/// Fig. 7: two BRAM banks alternating roles each annealing step.
+///
+/// * Bank `p` (parity of the step): holds σ(t−1); receives σ(t+1)
+///   writes. The spin-i coupling read and the spin-i state write collide
+///   on the same address in the update cycle — READ_FIRST returns the
+///   old σ(t−1) word while σ(t+1) commits.
+/// * Bank `1−p`: holds σ(t), serving the interaction reads (`countbit`
+///   addressing).
+#[derive(Debug, Clone)]
+pub struct DualBramDelay {
+    banks: [Bram; 2],
+    parity: usize,
+    stats_shadow: DelayStats, // snapshot composition happens in stats()
+}
+
+impl DualBramDelay {
+    /// Initialize both banks with σ(0) (so σ(0) = σ(−1) at t = 0, same
+    /// convention as the software engine).
+    pub fn new(init: &[i32]) -> Self {
+        Self {
+            banks: [Bram::from_words(init.to_vec()), Bram::from_words(init.to_vec())],
+            parity: 0,
+            stats_shadow: DelayStats::default(),
+        }
+    }
+
+    /// Pending-write staging: in hardware the read and write happen in
+    /// one cycle; in the model `read_delayed` + `write_new` are split
+    /// calls, so the collision is expressed by `read_before_write`.
+    fn write_bank(&mut self) -> &mut Bram {
+        &mut self.banks[self.parity]
+    }
+
+    fn state_bank(&mut self) -> &mut Bram {
+        &mut self.banks[1 - self.parity]
+    }
+}
+
+impl DelayLine for DualBramDelay {
+    fn read_state(&mut self, j: usize) -> i32 {
+        self.state_bank().read(j)
+    }
+
+    fn read_delayed(&mut self, i: usize) -> i32 {
+        // the actual commit happens in write_new; peeking here and
+        // counting the collision there keeps the access totals exact
+        // (one read + one write for the colliding cycle)
+        self.banks[self.parity].peek(i)
+    }
+
+    fn write_new(&mut self, i: usize, value: i32) {
+        // READ_FIRST collision: this is the cycle where σ(t−1) was read
+        // out (read_delayed) and σ(t+1) replaces it
+        let _old = self.write_bank().read_before_write(i, value);
+    }
+
+    fn step_boundary(&mut self) {
+        self.parity ^= 1;
+    }
+
+    fn stats(&self) -> DelayStats {
+        DelayStats {
+            register_shifts: 0,
+            bram_reads: self.banks[0].reads + self.banks[1].reads + self.stats_shadow.bram_reads,
+            bram_writes: self.banks[0].writes
+                + self.banks[1].writes
+                + self.stats_shadow.bram_writes,
+        }
+    }
+
+    fn kind(&self) -> DelayKind {
+        DelayKind::DualBram
+    }
+}

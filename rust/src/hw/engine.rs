@@ -1,0 +1,254 @@
+//! The full spin-serial / replica-parallel machine (Fig. 4).
+//!
+//! R identical spin gates (Fig. 5) update one spin per window: `deg_i`
+//! MAC cycles streaming `J_ij` from the weight BRAM (one read serves all
+//! R gates — the replica-parallel memory-efficiency argument of §3.1),
+//! then one update cycle applying Eqs. (6a–c). Spin state lives in the
+//! per-replica delay lines; the saturating accumulators `Is` live in a
+//! ping-pong bank pair of their own (Figs. 6b/7b).
+//!
+//! The datapath is bit-identical to [`crate::annealer::SsqaEngine`]
+//! (asserted by `hw::tests` and the cross-layer golden fixture); the
+//! point of this model is the *costs*: exact cycle counts, memory
+//! traffic and toggle activity feeding [`crate::resources`] and
+//! [`crate::energy`].
+
+use super::axi::AxiRegisterMap;
+use super::bram::Bram;
+use super::delay::{DelayKind, DelayLine, DelayStats, DualBramDelay, ShiftRegDelay};
+use super::scheduler::{cycles_per_step, Scheduler};
+use crate::annealer::{Annealer, RunResult, SsqaEngine, SsqaParams};
+use crate::graph::IsingModel;
+use crate::rng::RngMatrix;
+
+/// Hardware instantiation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct HwConfig {
+    /// Delay-line architecture.
+    pub delay: DelayKind,
+    /// Clock frequency in Hz (the paper evaluates 100 MHz and 166 MHz).
+    pub clock_hz: f64,
+    /// p-way spin-engine parallelism (§5.1; 1 = the baseline serial
+    /// machine). Does not change results — p spins share a window.
+    pub parallel: usize,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        Self { delay: DelayKind::DualBram, clock_hz: 166e6, parallel: 1 }
+    }
+}
+
+/// Activity counters for the whole machine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HwStats {
+    /// Total clock cycles (after p-way division).
+    pub cycles: u64,
+    /// Weight-BRAM read-port accesses.
+    pub j_reads: u64,
+    /// Bias-BRAM reads.
+    pub h_reads: u64,
+    /// Aggregated σ delay-line activity over all replicas.
+    pub sigma_delay: DelayStats,
+    /// `Is` bank reads.
+    pub is_reads: u64,
+    /// `Is` bank writes.
+    pub is_writes: u64,
+    /// RNG draws.
+    pub rng_draws: u64,
+    /// Spin updates executed (N · R · steps).
+    pub spin_updates: u64,
+}
+
+/// The machine.
+pub struct HwEngine {
+    pub config: HwConfig,
+    pub params: SsqaParams,
+    /// AXI configuration interface (programmed by the coordinator).
+    pub axi: AxiRegisterMap,
+    stats: HwStats,
+}
+
+impl HwEngine {
+    pub fn new(config: HwConfig, params: SsqaParams) -> Self {
+        Self { config, params, axi: AxiRegisterMap::default(), stats: HwStats::default() }
+    }
+
+    /// Stats of the last run.
+    pub fn stats(&self) -> HwStats {
+        self.stats
+    }
+
+    /// Wall-clock latency of the last run at the configured clock.
+    pub fn latency_seconds(&self) -> f64 {
+        self.stats.cycles as f64 / self.config.clock_hz
+    }
+
+    /// Execute a full annealing run at cycle granularity.
+    ///
+    /// Every loop iteration below corresponds to exactly one clock cycle
+    /// of the machine (MAC cycles and update cycles), so `stats.cycles`
+    /// is the exact step-latency formula `Σ_i (scan_i + 1)` × steps,
+    /// divided by the p-way parallelism.
+    pub fn run(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
+        let n = model.n();
+        let r = self.params.replicas;
+        // Program the AXI register file and latch it back — keeps the
+        // configuration path of the silicon on the execution path.
+        self.axi.program(&self.params, steps, seed);
+        self.axi.start();
+        let (params, steps, seed) = self.axi.decode().expect("AXI registers incomplete");
+
+        // --- memories ---------------------------------------------------
+        // Weight BRAM: dense N×N words (the paper stores the full matrix
+        // and skips placeholders by address generation).
+        let mut j_bram = Bram::from_words(model.j_dense().to_vec());
+        let mut h_bram = Bram::from_words(model.h.clone());
+        // σ delay line + Is banks per replica.
+        let rng_init = RngMatrix::seeded(seed, n, r);
+        let mut sigma_init = vec![vec![0i32; n]; r];
+        for (k, rep) in sigma_init.iter_mut().enumerate() {
+            for (i, slot) in rep.iter_mut().enumerate() {
+                *slot = if rng_init.state(i, k) >> 31 == 1 { -1 } else { 1 };
+            }
+        }
+        let mut delays: Vec<Box<dyn DelayLine>> = sigma_init
+            .iter()
+            .map(|init| -> Box<dyn DelayLine> {
+                match self.config.delay {
+                    DelayKind::DualBram => Box::new(DualBramDelay::new(init)),
+                    DelayKind::ShiftReg => Box::new(ShiftRegDelay::new(init)),
+                }
+            })
+            .collect();
+        // Is ping-pong banks: [replica] -> (bank_read, bank_write) swap
+        // at step boundaries (Fig. 6b / 7b).
+        let mut is_banks: Vec<[Bram; 2]> =
+            (0..r).map(|_| [Bram::new(n, 0), Bram::new(n, 0)]).collect();
+        let mut is_parity = 0usize;
+        let mut rng = rng_init;
+
+        let mut sched = Scheduler::new(params.q, params.noise, steps);
+        let mut stats = HwStats::default();
+
+        // scratch accumulators: one per replica gate
+        let mut acc = vec![0i32; r];
+        let mut delayed = vec![0i32; r];
+
+        while !sched.done() {
+            let q_t = sched.q_now();
+            let noise_t = sched.noise_now();
+            for i in 0..n {
+                // ---- interaction scan ----------------------------------
+                // sparse skip (§4.4): only incident weights are visited —
+                // both delay architectures share this schedule (see
+                // scheduler::cycles_per_step); they differ in the cost
+                // profile of each access, not in the cycle count
+                acc.fill(0);
+                let (cols, _) = model.j_sparse().row(i);
+                for &jc in cols {
+                    let j = jc as usize;
+                    let w = j_bram.read(i * n + j); // one read, R gates share it
+                    for (k, a) in acc.iter_mut().enumerate() {
+                        *a += w * delays[k].read_state(j);
+                    }
+                    sched.mac_cycle(j);
+                }
+                // ---- update cycle --------------------------------------
+                let h_i = h_bram.read(i);
+                // coupling reads happen before the same-cycle writes
+                for (k, d) in delayed.iter_mut().enumerate() {
+                    *d = delays[(k + 1) % r].read_delayed(i);
+                }
+                for k in 0..r {
+                    let noise = noise_t * rng.draw_pm1(i, k);
+                    stats.rng_draws += 1;
+                    let inp = acc[k] + h_i + noise + q_t * delayed[k];
+                    let is_old = is_banks[k][is_parity].read(i);
+                    let s = is_old + inp;
+                    let is_new = if s >= params.i0 {
+                        params.i0 - params.alpha
+                    } else if s < -params.i0 {
+                        -params.i0
+                    } else {
+                        s
+                    };
+                    is_banks[k][1 - is_parity].write(i, is_new);
+                    let sigma_new = if is_new >= 0 { 1 } else { -1 };
+                    delays[k].write_new(i, sigma_new);
+                    stats.spin_updates += 1;
+                }
+                sched.update_cycle(i);
+            }
+            for d in delays.iter_mut() {
+                d.step_boundary();
+            }
+            is_parity ^= 1;
+            sched.step_boundary();
+        }
+        self.axi.set_done();
+
+        // ---- harvest ---------------------------------------------------
+        // Read back final replica states through the delay lines' σ(t)
+        // generation (one more read pass, uncounted in cycles — the real
+        // hardware DMAs the final bank out).
+        let mut best_energy = i64::MAX;
+        let mut best_sigma = vec![1i32; n];
+        let mut energies = Vec::with_capacity(r);
+        let mut replica = vec![0i32; n];
+        for (k, d) in delays.iter_mut().enumerate() {
+            for (i, slot) in replica.iter_mut().enumerate() {
+                *slot = d.read_state(i);
+            }
+            let e = model.energy(&replica);
+            energies.push(e);
+            if e < best_energy {
+                best_energy = e;
+                best_sigma.copy_from_slice(&replica);
+            }
+            let _ = k;
+        }
+
+        // ---- stats -----------------------------------------------------
+        stats.cycles = sched.cycles.div_ceil(self.config.parallel as u64);
+        debug_assert_eq!(
+            sched.cycles,
+            cycles_per_step(model, self.config.delay) * steps as u64,
+            "cycle accounting diverged from the analytic formula"
+        );
+        stats.j_reads = j_bram.reads;
+        stats.h_reads = h_bram.reads;
+        for d in &delays {
+            let s = d.stats();
+            stats.sigma_delay.register_shifts += s.register_shifts;
+            stats.sigma_delay.bram_reads += s.bram_reads;
+            stats.sigma_delay.bram_writes += s.bram_writes;
+        }
+        for banks in &is_banks {
+            stats.is_reads += banks[0].reads + banks[1].reads;
+            stats.is_writes += banks[0].writes + banks[1].writes;
+        }
+        self.stats = stats;
+
+        RunResult { best_energy, best_sigma, replica_energies: energies, steps }
+    }
+
+    /// Reference check: run the software engine with identical
+    /// parameters (used by tests and `examples/hw_vs_sw.rs`).
+    pub fn software_twin(&self, total_steps: usize) -> SsqaEngine {
+        SsqaEngine::new(self.params, total_steps)
+    }
+}
+
+impl Annealer for HwEngine {
+    fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
+        self.run(model, steps, seed)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.config.delay {
+            DelayKind::DualBram => "hw-dual-bram",
+            DelayKind::ShiftReg => "hw-shift-reg",
+        }
+    }
+}

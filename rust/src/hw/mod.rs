@@ -1,0 +1,49 @@
+//! Cycle-accurate model of the paper's FPGA micro-architecture (§3).
+//!
+//! The substitution for the Xilinx ZC706 prototype (DESIGN.md §2): a
+//! faithful executable model of the spin-serial / replica-parallel SSQA
+//! engine with both delay-line variants:
+//!
+//! * [`ShiftRegDelay`] — the conventional [16] three-block shift-register
+//!   delay (Fig. 6): O(N) registers and control fan-out per replica.
+//! * [`DualBramDelay`] — the paper's contribution (Fig. 7): two BRAM
+//!   banks alternating per annealing step, with read-before-write
+//!   resolving the same-cycle σ(t−1)-read / σ(t+1)-write collision.
+//!
+//! The observable trajectory is **bit-identical** to the software
+//! [`crate::annealer::SsqaEngine`] (tested); what differs is the cycle
+//! count, memory traffic and toggle activity — the inputs to the
+//! resource/power models of [`crate::resources`] and [`crate::energy`].
+//!
+//! Timing model (paper §4.4): one weight-MAC per clock per spin gate,
+//! plus one update cycle per spin ⇒ `Σ_i (deg_i + 1)` cycles per
+//! annealing step — identical for both delay architectures (Fig. 11
+//! shows latency growing with connectivity for conventional *and*
+//! proposed). The architectures differ in what each access costs:
+//! register-chain shifts with O(N) enable fan-out vs centralized BRAM
+//! ports — the resource/power story of Fig. 10 and Table 3.
+
+mod axi;
+mod bram;
+mod bram_init;
+mod compress;
+mod delay;
+mod engine;
+mod parallel;
+mod rng_hw;
+mod scheduler;
+
+pub use axi::{AxiRegisterMap, RegAddr};
+pub use bram::Bram;
+pub use bram_init::BramInit;
+pub use compress::{
+    delta_decode, delta_encode, rle_decode, rle_encode, CompressionReport,
+};
+pub use delay::{DelayKind, DelayLine, DelayStats, DualBramDelay, ShiftRegDelay};
+pub use engine::{HwConfig, HwEngine, HwStats};
+pub use parallel::ParallelConfig;
+pub use rng_hw::HwRng;
+pub use scheduler::{cycles_per_step, Scheduler};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,47 @@
+//! p-way parallel spin engines (§5.1 latency–area trade-off).
+//!
+//! "Because the datapath is fully pipelined, latency can be linearly
+//! reduced by instantiating p parallel spin engines" — the synchronous
+//! (Jacobi) update means p spins can share an update window without
+//! changing any result, so parallelism is purely a latency/resource
+//! parameter: latency ÷ p, spin-gate array resources × p, J-BRAM ports
+//! × p (dual-port macros give 2 free ports; beyond that the matrix is
+//! banked).
+
+/// Parallelism configuration and its §5.1 bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Number of parallel spin engines p ≥ 1.
+    pub p: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1, "p must be at least 1");
+        Self { p }
+    }
+
+    /// Effective step latency in cycles.
+    pub fn effective_cycles(&self, serial_cycles: u64) -> u64 {
+        serial_cycles.div_ceil(self.p as u64)
+    }
+
+    /// Resource multiplier for the replicated spin-gate array and delay
+    /// lines (the weight BRAM is shared but banked: ⌈p/2⌉ copies of the
+    /// port structure).
+    pub fn logic_multiplier(&self) -> f64 {
+        self.p as f64
+    }
+
+    /// J-BRAM banking factor: dual-port macros serve 2 engines each.
+    pub fn j_bank_factor(&self) -> f64 {
+        (self.p as f64 / 2.0).ceil().max(1.0)
+    }
+
+    /// Energy per solve is ~constant in p (§5.1: "constant energy per
+    /// solve stems from the proportional increase in power with p"):
+    /// power × p, latency ÷ p.
+    pub fn power_multiplier(&self) -> f64 {
+        self.p as f64
+    }
+}

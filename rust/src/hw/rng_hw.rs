@@ -1,0 +1,47 @@
+//! The paper's RNG block: a 64-bit XOR-shift generator producing R
+//! parallel random signals per clock cycle (§3.1, ref. [26]).
+//!
+//! The *datapath* of [`super::HwEngine`] draws noise from the shared
+//! [`crate::rng::RngMatrix`] contract instead (one independent stream
+//! per spin/replica cell) so that trajectories are bit-identical across
+//! all four implementation layers — see DESIGN.md §3 for the documented
+//! deviation. This module models the silicon block itself: its resource
+//! footprint enters the LUT/FF model, and its statistical behaviour is
+//! regression-tested here so the substitution stays honest.
+
+/// 64-bit xorshift with an R-bit parallel tap.
+#[derive(Debug, Clone)]
+pub struct HwRng {
+    state: u64,
+    taps: usize,
+}
+
+impl HwRng {
+    /// `taps` = number of parallel ±1 outputs per cycle (R in the paper).
+    pub fn new(seed: u64, taps: usize) -> Self {
+        assert!(taps <= 64, "at most 64 parallel taps");
+        Self { state: if seed == 0 { 0x853C49E6748FEA9B } else { seed }, taps }
+    }
+
+    /// One clock cycle: advance and emit R parallel ±1 signals from the
+    /// low bits of the new state.
+    pub fn cycle(&mut self) -> Vec<i32> {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        (0..self.taps).map(|b| if (x >> b) & 1 == 1 { 1 } else { -1 }).collect()
+    }
+
+    /// Flip-flop cost of the block: 64 state FFs + an output register
+    /// per tap.
+    pub fn ff_cost(&self) -> usize {
+        64 + self.taps
+    }
+
+    /// LUT cost: 3 xor/shift stages over 64 bits ≈ 2 LUT per state bit.
+    pub fn lut_cost(&self) -> usize {
+        128
+    }
+}

@@ -1,0 +1,336 @@
+use super::*;
+use crate::annealer::{Annealer, NoiseSchedule, QSchedule, SsqaEngine, SsqaParams};
+use crate::graph::{random_graph, torus_2d};
+use crate::problems::maxcut;
+
+fn params(steps: usize) -> SsqaParams {
+    SsqaParams {
+        replicas: 6,
+        i0: 32,
+        alpha: 1,
+        noise: NoiseSchedule::Linear { start: 16, end: 2 },
+        q: QSchedule::linear(0, 24, steps),
+        j_scale: 8,
+    }
+}
+
+mod bram {
+    use super::super::Bram;
+
+    #[test]
+    fn read_write_and_counters() {
+        let mut b = Bram::new(8, 0);
+        b.write(3, 42);
+        assert_eq!(b.read(3), 42);
+        assert_eq!(b.reads, 1);
+        assert_eq!(b.writes, 1);
+    }
+
+    #[test]
+    fn read_before_write_returns_old() {
+        let mut b = Bram::from_words(vec![10, 20, 30]);
+        let old = b.read_before_write(1, 99);
+        assert_eq!(old, 20);
+        assert_eq!(b.peek(1), 99);
+        assert_eq!((b.reads, b.writes), (1, 1));
+    }
+
+    #[test]
+    fn from_words_len() {
+        let b = Bram::from_words(vec![1; 17]);
+        assert_eq!(b.len(), 17);
+        assert!(!b.is_empty());
+    }
+}
+
+mod delay_lines {
+    use super::super::delay::*;
+
+    /// Drive one full synthetic step against both variants and check the
+    /// three-generation contract.
+    fn exercise(mut d: Box<dyn DelayLine>, n: usize) {
+        // generation 0 everywhere (init = +1)
+        for j in 0..n {
+            assert_eq!(d.read_state(j), 1, "σ(0) must be the init");
+        }
+        // write generation 1 = −1
+        for i in 0..n {
+            assert_eq!(d.read_delayed(i), 1, "σ(−1) = init");
+            d.write_new(i, -1);
+        }
+        d.step_boundary();
+        // now σ(t) = gen1 (−1), σ(t−1) = gen0 (+1)
+        for j in 0..n {
+            assert_eq!(d.read_state(j), -1, "σ(1) after boundary");
+        }
+        for i in 0..n {
+            assert_eq!(d.read_delayed(i), 1, "σ(0) still visible as t−1");
+            d.write_new(i, if i % 2 == 0 { 1 } else { -1 });
+        }
+        d.step_boundary();
+        for j in 0..n {
+            assert_eq!(d.read_state(j), if j % 2 == 0 { 1 } else { -1 });
+        }
+        for i in 0..n {
+            assert_eq!(d.read_delayed(i), -1, "σ(1) visible as t−1 now");
+        }
+    }
+
+    #[test]
+    fn shift_register_three_generations() {
+        let init = vec![1i32; 16];
+        exercise(Box::new(ShiftRegDelay::new(&init)), 16);
+    }
+
+    #[test]
+    fn dual_bram_three_generations() {
+        let init = vec![1i32; 16];
+        exercise(Box::new(DualBramDelay::new(&init)), 16);
+    }
+
+    #[test]
+    fn dual_bram_read_first_collision() {
+        // the same-address same-cycle case: read_delayed(i) then
+        // write_new(i) must return the OLD word
+        let mut d = DualBramDelay::new(&[7, 7]);
+        let old = d.read_delayed(0);
+        d.write_new(0, -7);
+        assert_eq!(old, 7);
+        d.step_boundary();
+        d.step_boundary();
+        // two boundaries later the write bank cycles back
+        assert_eq!(d.read_delayed(0), -7);
+    }
+
+    #[test]
+    fn stats_separate_architectures() {
+        let init = vec![1i32; 8];
+        let mut s = ShiftRegDelay::new(&init);
+        let mut b = DualBramDelay::new(&init);
+        for j in 0..8 {
+            s.read_state(j);
+            b.read_state(j);
+        }
+        assert!(s.stats().register_shifts > 0);
+        assert_eq!(s.stats().bram_reads, 0);
+        assert!(b.stats().bram_reads > 0);
+        assert_eq!(b.stats().register_shifts, 0);
+    }
+}
+
+mod axi_map {
+    use super::super::axi::*;
+    use super::params;
+
+    #[test]
+    fn program_decode_roundtrip() {
+        let p = params(100);
+        let mut m = AxiRegisterMap::default();
+        m.program(&p, 100, 0xDEAD);
+        let (p2, steps, seed) = m.decode().unwrap();
+        assert_eq!(p, p2);
+        assert_eq!(steps, 100);
+        assert_eq!(seed, 0xDEAD);
+    }
+
+    #[test]
+    fn decode_rejects_unprogrammed() {
+        let m = AxiRegisterMap::default();
+        assert!(m.decode().is_err());
+    }
+
+    #[test]
+    fn constant_noise_roundtrips() {
+        let mut p = params(10);
+        p.noise = crate::annealer::NoiseSchedule::Constant(5);
+        let mut m = AxiRegisterMap::default();
+        m.program(&p, 10, 1);
+        let (p2, _, _) = m.decode().unwrap();
+        assert_eq!(p2.noise, p.noise);
+    }
+
+    #[test]
+    fn ctrl_status_handshake() {
+        let mut m = AxiRegisterMap::default();
+        m.program(&params(10), 10, 1);
+        assert!(!m.is_done());
+        m.start();
+        assert_eq!(m.read(RegAddr::Status), 1);
+        m.set_done();
+        assert!(m.is_done());
+    }
+}
+
+mod rng_block {
+    use super::super::HwRng;
+
+    #[test]
+    fn emits_r_parallel_signals() {
+        let mut r = HwRng::new(99, 20);
+        let out = r.cycle();
+        assert_eq!(out.len(), 20);
+        assert!(out.iter().all(|&v| v == 1 || v == -1));
+    }
+
+    #[test]
+    fn roughly_balanced() {
+        let mut r = HwRng::new(5, 8);
+        let sum: i64 = (0..20_000).flat_map(|_| r.cycle()).map(|v| v as i64).sum();
+        assert!(sum.abs() < 8_000, "bias {sum}");
+    }
+
+    #[test]
+    fn resource_costs() {
+        let r = HwRng::new(1, 20);
+        assert_eq!(r.ff_cost(), 84);
+        assert_eq!(r.lut_cost(), 128);
+    }
+}
+
+#[test]
+fn cycles_formula_matches_paper_g11_case() {
+    // G11 class: k = 4 → 800 × 5 cycles per step (§4.4)
+    let g = torus_2d(20, 40, true, 1);
+    let m = maxcut::ising_from_graph(&g, 8);
+    assert_eq!(cycles_per_step(&m, DelayKind::DualBram), 800 * 5);
+    // same schedule for the conventional design (see scheduler docs)
+    assert_eq!(cycles_per_step(&m, DelayKind::ShiftReg), 800 * 5);
+}
+
+#[test]
+fn hw_dual_bram_bit_exact_with_software_engine() {
+    let g = torus_2d(4, 8, true, 33);
+    let m = maxcut::ising_from_graph(&g, 8);
+    let steps = 60;
+    let p = params(steps);
+    let mut hw = HwEngine::new(HwConfig::default(), p);
+    let hw_res = hw.run(&m, steps, 77);
+    let sw = SsqaEngine::new(p, steps);
+    let (sw_state, sw_res) = sw.run(&m, steps, 77);
+    assert_eq!(hw_res.best_energy, sw_res.best_energy);
+    assert_eq!(hw_res.replica_energies, sw_res.replica_energies);
+    assert_eq!(hw_res.best_sigma, sw_res.best_sigma);
+    let _ = sw_state;
+}
+
+#[test]
+fn hw_shift_reg_bit_exact_with_software_engine() {
+    let g = torus_2d(4, 6, true, 34);
+    let m = maxcut::ising_from_graph(&g, 8);
+    let steps = 40;
+    let p = params(steps);
+    let mut hw = HwEngine::new(
+        HwConfig { delay: DelayKind::ShiftReg, ..HwConfig::default() },
+        p,
+    );
+    let hw_res = hw.run(&m, steps, 5);
+    let (_, sw_res) = SsqaEngine::new(p, steps).run(&m, steps, 5);
+    assert_eq!(hw_res.best_energy, sw_res.best_energy);
+    assert_eq!(hw_res.best_sigma, sw_res.best_sigma);
+}
+
+#[test]
+fn both_delay_variants_produce_identical_trajectories() {
+    let g = random_graph(30, 90, &[-1, 1], 55);
+    let m = maxcut::ising_from_graph(&g, 8);
+    let steps = 50;
+    let p = params(steps);
+    let mut a = HwEngine::new(HwConfig::default(), p);
+    let mut b = HwEngine::new(
+        HwConfig { delay: DelayKind::ShiftReg, ..HwConfig::default() },
+        p,
+    );
+    let ra = a.run(&m, steps, 3);
+    let rb = b.run(&m, steps, 3);
+    assert_eq!(ra.best_sigma, rb.best_sigma);
+    assert_eq!(ra.replica_energies, rb.replica_energies);
+    // same cycle schedule, different cost profiles
+    assert_eq!(a.stats().cycles, b.stats().cycles);
+    assert!(a.stats().sigma_delay.bram_reads > 0);
+    assert!(b.stats().sigma_delay.register_shifts > 0);
+}
+
+#[test]
+fn cycle_count_matches_analytic_formula() {
+    let g = random_graph(20, 50, &[-1, 1], 8);
+    let m = maxcut::ising_from_graph(&g, 8);
+    let steps = 10;
+    let mut hw = HwEngine::new(HwConfig::default(), params(steps));
+    hw.run(&m, steps, 1);
+    assert_eq!(
+        hw.stats().cycles,
+        cycles_per_step(&m, DelayKind::DualBram) * steps as u64
+    );
+}
+
+#[test]
+fn parallel_p_divides_latency_only() {
+    let g = torus_2d(4, 6, true, 9);
+    let m = maxcut::ising_from_graph(&g, 8);
+    let steps = 30;
+    let p = params(steps);
+    let mut serial = HwEngine::new(HwConfig::default(), p);
+    let mut par10 = HwEngine::new(HwConfig { parallel: 10, ..HwConfig::default() }, p);
+    let rs = serial.run(&m, steps, 4);
+    let rp = par10.run(&m, steps, 4);
+    assert_eq!(rs.best_sigma, rp.best_sigma, "p must not change results");
+    assert_eq!(
+        par10.stats().cycles,
+        serial.stats().cycles.div_ceil(10),
+        "p=10 must cut latency 10×"
+    );
+}
+
+#[test]
+fn parallel_config_bookkeeping() {
+    let p = ParallelConfig::new(10);
+    assert_eq!(p.effective_cycles(2_000_000), 200_000);
+    assert_eq!(p.logic_multiplier(), 10.0);
+    assert_eq!(p.j_bank_factor(), 5.0);
+    assert_eq!(ParallelConfig::new(1).j_bank_factor(), 1.0);
+}
+
+#[test]
+fn spin_update_and_rng_counts() {
+    let g = torus_2d(3, 4, true, 2);
+    let m = maxcut::ising_from_graph(&g, 8);
+    let steps = 7;
+    let p = params(steps);
+    let mut hw = HwEngine::new(HwConfig::default(), p);
+    hw.run(&m, steps, 1);
+    let expect = (12 * p.replicas * steps) as u64;
+    assert_eq!(hw.stats().spin_updates, expect);
+    assert_eq!(hw.stats().rng_draws, expect);
+}
+
+#[test]
+fn j_bram_reads_shared_across_replicas() {
+    // one J read per MAC cycle regardless of R (replica-parallel claim)
+    let g = torus_2d(3, 4, true, 2);
+    let m = maxcut::ising_from_graph(&g, 8);
+    let steps = 5;
+    let mut hw = HwEngine::new(HwConfig::default(), params(steps));
+    hw.run(&m, steps, 1);
+    let nnz = m.j_sparse().nnz() as u64;
+    assert_eq!(hw.stats().j_reads, nnz * steps as u64);
+}
+
+#[test]
+fn latency_seconds_uses_clock() {
+    let g = torus_2d(3, 4, true, 2);
+    let m = maxcut::ising_from_graph(&g, 8);
+    let mut hw = HwEngine::new(HwConfig { clock_hz: 1e6, ..HwConfig::default() }, params(4));
+    hw.run(&m, 4, 1);
+    let expect = hw.stats().cycles as f64 / 1e6;
+    assert!((hw.latency_seconds() - expect).abs() < 1e-12);
+}
+
+#[test]
+fn annealer_trait_names() {
+    let p = params(1);
+    assert_eq!(HwEngine::new(HwConfig::default(), p).name(), "hw-dual-bram");
+    assert_eq!(
+        HwEngine::new(HwConfig { delay: DelayKind::ShiftReg, ..HwConfig::default() }, p).name(),
+        "hw-shift-reg"
+    );
+}

@@ -1,0 +1,38 @@
+//! # ssqa — p-bit Stochastic Simulated Quantum Annealing
+//!
+//! Reproduction of *"Energy-Efficient p-Bit-Based Fully-Connected
+//! Quantum-Inspired Simulated Annealer with Dual BRAM Architecture"*
+//! (Onizawa, Kubuta, Shin, Hanyu — IEEE Access 2026).
+//!
+//! The crate is organized as the Layer-3 coordinator of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`rng`] — bit-exact xorshift PRNGs shared with the Pallas kernel.
+//! * [`graph`] — Ising model substrate, G-set parser, instance generators.
+//! * [`problems`] — MAX-CUT / QUBO / TSP / graph-isomorphism / coloring
+//!   encodings (paper §5.2 and §6 future work).
+//! * [`annealer`] — software SSQA/SSA/SA engines (matvec form of Eq. 6).
+//! * [`hw`] — cycle-accurate model of the paper's FPGA micro-architecture:
+//!   spin-serial/replica-parallel spin gates with shift-register or
+//!   dual-BRAM delay lines (the paper's core hardware contribution).
+//! * [`resources`] — LUT/FF/BRAM/power analytic model (Fig. 10, Table 3).
+//! * [`energy`] — latency/energy models and platform constants (Table 4,
+//!   Table 6, Figs. 11–12).
+//! * [`runtime`] — PJRT client loading the AOT-compiled JAX/Pallas step.
+//! * [`coordinator`] — job queue, worker pool, backend router, metrics.
+//! * [`experiments`] — one entry point per paper table/figure.
+
+pub mod annealer;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod graph;
+pub mod hw;
+pub mod problems;
+pub mod resources;
+pub mod rng;
+pub mod runtime;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,284 @@
+//! `ssqa` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   solve       solve one benchmark instance on a chosen backend
+//!   experiment  regenerate a paper table/figure (or `all`)
+//!   resources   print the resource/power model for a configuration
+//!   serve       run the line-protocol coordinator server
+//!   export-gset write a generated instance in G-set format
+//!
+//! Run `ssqa help` for flags. (Hand-rolled parsing: the offline vendor
+//! set has no clap.)
+
+use ssqa::annealer::SsqaParams;
+use ssqa::coordinator::{handle_request, BackendKind, Router, RoutingPolicy, WorkerPool};
+use ssqa::experiments::{self, ExpContext};
+use ssqa::graph::{write_gset, GraphSpec};
+use ssqa::hw::DelayKind;
+use ssqa::resources::ResourceModel;
+use ssqa::Result;
+use std::collections::BTreeMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Parse `--key value` / `--flag` pairs after the subcommand.
+fn flags(args: &[String]) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?;
+        let val = match it.peek() {
+            Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+            _ => "true".to_string(),
+        };
+        map.insert(key.to_string(), val);
+    }
+    Ok(map)
+}
+
+fn get<T: std::str::FromStr>(f: &BTreeMap<String, String>, k: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match f.get(k) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{k} {v:?}: {e}")),
+    }
+}
+
+fn graph_spec(name: &str) -> Result<GraphSpec> {
+    GraphSpec::all()
+        .into_iter()
+        .find(|s| s.name().eq_ignore_ascii_case(name))
+        .ok_or_else(|| anyhow::anyhow!("unknown graph {name:?} (use G11..G15)"))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "solve" => cmd_solve(&flags(&args[1..])?),
+        "calibrate" => cmd_calibrate(&flags(&args[1..])?),
+        "experiment" => cmd_experiment(&flags(&args[1..])?),
+        "resources" => cmd_resources(&flags(&args[1..])?),
+        "serve" => cmd_serve(&flags(&args[1..])?),
+        "export-gset" => cmd_export(&flags(&args[1..])?),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} — run `ssqa help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ssqa — p-bit SSQA fully-connected annealer (dual-BRAM architecture reproduction)\n\n\
+         USAGE: ssqa <command> [--flags]\n\n\
+         COMMANDS\n\
+         \x20 solve       --graph G11 [--steps 500] [--seed 1] [--replicas 20]\n\
+         \x20             [--backend sw|ssa|hw|hw-shift-reg|pjrt] [--runs 1]\n\
+         \x20 experiment  --id table2|fig8|fig9|fig10|table3|table4|fig11|table5|table6|fig12|adp|gi|coloring|ablation|all\n\
+         \x20             [--runs 100] [--steps 500] [--quick] [--out results]\n\
+         \x20 resources   [--n 800] [--replicas 20] [--delay dual|shift] [--p 1] [--clock-mhz 166]\n\
+         \x20 calibrate   --graph G11 [--runs 20] [--steps 500] [--replicas 20] [--jscale 8]\n\
+         \x20 serve       [--addr 127.0.0.1:7090] [--workers 4]\n\
+         \x20 export-gset --graph G11 --out g11.gset"
+    );
+}
+
+fn cmd_solve(f: &BTreeMap<String, String>) -> Result<()> {
+    let graph = graph_spec(f.get("graph").map(String::as_str).unwrap_or("G11"))?;
+    let steps: usize = get(f, "steps", 500)?;
+    let seed: u32 = get(f, "seed", 1)?;
+    let replicas: usize = get(f, "replicas", 20)?;
+    let runs: usize = get(f, "runs", 1)?;
+    let backend = BackendKind::parse(f.get("backend").map(String::as_str).unwrap_or("sw"))
+        .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
+
+    let pool =
+        WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
+    for r in 0..runs {
+        let mut job = ssqa::coordinator::Job::new(
+            0,
+            ssqa::coordinator::JobSpec::Named(graph),
+            steps,
+            seed.wrapping_add(r as u32 * 7919),
+        );
+        job.params = SsqaParams { replicas, ..SsqaParams::gset_default(steps) };
+        job.backend = Some(backend);
+        pool.submit(job);
+    }
+    let mut outcomes = pool.drain();
+    outcomes.sort_by_key(|o| o.id);
+    for o in &outcomes {
+        println!(
+            "{} backend={} cut={} energy={} wall={:?}{}",
+            o.label,
+            o.backend.name(),
+            o.cut,
+            o.best_energy,
+            o.wall,
+            o.modeled_energy_j
+                .map(|e| format!(" fpga-energy={:.4}mJ", e * 1e3))
+                .unwrap_or_default()
+        );
+    }
+    println!("\n{}", pool.metrics.render());
+    Ok(())
+}
+
+/// Hyper-parameter grid search (EXPERIMENTS.md §Calibration): sweeps
+/// (I0, noise_start, noise_end, q_max) on one instance and prints mean
+/// cuts, plus an SA/SSA reference and the best cut found anywhere.
+fn cmd_calibrate(f: &BTreeMap<String, String>) -> Result<()> {
+    use ssqa::annealer::{multi_run, NoiseSchedule, QSchedule, SaEngine, SsqaEngine};
+    let graph = graph_spec(f.get("graph").map(String::as_str).unwrap_or("G11"))?;
+    let steps: usize = get(f, "steps", 500)?;
+    let runs: usize = get(f, "runs", 20)?;
+    let replicas: usize = get(f, "replicas", 20)?;
+    let g = graph.build();
+    let j_scale: i32 = get(f, "jscale", 8)?;
+    let model = ssqa::problems::maxcut::ising_from_graph(&g, j_scale);
+
+    // reference: long Metropolis SA for the best-found anchor
+    let sa_stats = multi_run(&g, &model, SaEngine::gset_default, 3000, runs, 0xA5);
+    println!(
+        "SA reference (3000 sweeps): best {} mean {:.1}",
+        sa_stats.best_cut, sa_stats.mean_cut
+    );
+    let mut best_found = sa_stats.best_cut;
+
+    println!(
+        "\n{:>4} {:>6} {:>6} {:>6} | {:>9} {:>6} {:>6}",
+        "i0", "nz0", "nz1", "qmax", "mean", "best", "std"
+    );
+    let mut best_cfg = (0, 0, 0, 0, 0.0f64);
+    for i0 in [12, 16, 20, 24, 32, 48] {
+        for nz0 in [20, 24, 28] {
+            for nz1 in [1, 2] {
+                for qmax in [8, 12, 24] {
+                    let params = SsqaParams {
+                        replicas,
+                        i0,
+                        alpha: 1,
+                        noise: NoiseSchedule::Linear { start: nz0, end: nz1 },
+                        q: QSchedule::linear(0, qmax, steps),
+                        j_scale,
+                    };
+                    let stats = multi_run(
+                        &g,
+                        &model,
+                        || SsqaEngine::new(params, steps),
+                        steps,
+                        runs,
+                        0x5EED,
+                    );
+                    best_found = best_found.max(stats.best_cut);
+                    if stats.mean_cut > best_cfg.4 {
+                        best_cfg = (i0, nz0, nz1, qmax, stats.mean_cut);
+                    }
+                    println!(
+                        "{:>4} {:>6} {:>6} {:>6} | {:>9.1} {:>6} {:>6.1}",
+                        i0, nz0, nz1, qmax, stats.mean_cut, stats.best_cut, stats.std_cut
+                    );
+                }
+            }
+        }
+    }
+    println!(
+        "\nbest-found cut anywhere: {best_found}\nbest config: i0={} noise={}→{} qmax={} (mean {:.1}, {:.1}% of best-found)",
+        best_cfg.0,
+        best_cfg.1,
+        best_cfg.2,
+        best_cfg.3,
+        best_cfg.4,
+        100.0 * best_cfg.4 / best_found as f64
+    );
+    Ok(())
+}
+
+fn cmd_experiment(f: &BTreeMap<String, String>) -> Result<()> {
+    let id = f
+        .get("id")
+        .ok_or_else(|| anyhow::anyhow!("--id required (or `all`)"))?
+        .clone();
+    let ctx = ExpContext {
+        runs: get(f, "runs", 100)?,
+        steps: get(f, "steps", 500)?,
+        out_dir: get::<String>(f, "out", "results".into())?.into(),
+        quick: f.get("quick").is_some(),
+        seed: get(f, "seed", 1)?,
+    };
+    let md = experiments::run(&id, &ctx)?;
+    println!("{md}");
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let report = ctx.out_dir.join(format!("{id}.md"));
+    std::fs::write(&report, &md)?;
+    eprintln!("(report saved to {}, CSVs alongside)", report.display());
+    Ok(())
+}
+
+fn cmd_resources(f: &BTreeMap<String, String>) -> Result<()> {
+    let n: usize = get(f, "n", 800)?;
+    let replicas: usize = get(f, "replicas", 20)?;
+    let p: usize = get(f, "p", 1)?;
+    let clock: f64 = get(f, "clock-mhz", 166.0)? * 1e6;
+    let delay = match f.get("delay").map(String::as_str).unwrap_or("dual") {
+        "dual" | "dual-bram" => DelayKind::DualBram,
+        "shift" | "shift-reg" => DelayKind::ShiftReg,
+        other => anyhow::bail!("unknown delay {other:?}"),
+    };
+    let u = ResourceModel::default().estimate(n, replicas, delay, p, clock);
+    println!(
+        "N={n} R={replicas} p={p} delay={} clock={:.0}MHz\n\
+         LUT   {:>8} ({:.2}%)\nFF    {:>8} ({:.2}%)\nBRAM  {:>8.1} ({:.1}%)\npower {:>8.3} W\narea  {:.3} (max util fraction)",
+        delay.name(),
+        clock / 1e6,
+        u.luts,
+        u.lut_pct(),
+        u.ffs,
+        u.ff_pct(),
+        u.bram36,
+        u.bram_pct(),
+        u.power_w,
+        u.area_fraction(),
+    );
+    Ok(())
+}
+
+fn cmd_serve(f: &BTreeMap<String, String>) -> Result<()> {
+    let addr = f.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7090".into());
+    let workers: usize = get(f, "workers", ssqa::config::num_threads())?;
+    // smoke the request path before binding
+    let pool = WorkerPool::new(1, Router::new(RoutingPolicy::AllSoftware));
+    let _ = handle_request(&pool, "ping")?;
+    drop(pool);
+    ssqa::coordinator::serve(&addr, workers)
+}
+
+fn cmd_export(f: &BTreeMap<String, String>) -> Result<()> {
+    let graph = graph_spec(f.get("graph").map(String::as_str).unwrap_or("G11"))?;
+    let out = f
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("{}.gset", graph.name().to_lowercase()));
+    let g = graph.build();
+    std::fs::write(&out, write_gset(&g))?;
+    println!("wrote {} ({} nodes, {} edges)", out, g.num_nodes(), g.num_edges());
+    Ok(())
+}

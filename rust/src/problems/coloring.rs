@@ -1,0 +1,78 @@
+//! Graph-coloring QUBO — the paper's §6 future-work item, included as a
+//! first-class extension (Lucas [18] §6.1).
+//!
+//! Variables `x_{v,c}` — vertex `v` gets color `c` — flattened to
+//! `v·k + c`. One-hot per vertex plus a conflict term per edge/color.
+//! Zero QUBO value (after the one-hot offset) ⇔ proper k-coloring.
+
+use super::qubo::Qubo;
+use crate::graph::Graph;
+
+/// A k-coloring instance over a graph.
+#[derive(Debug, Clone)]
+pub struct ColoringInstance {
+    pub graph: Graph,
+    pub colors: usize,
+}
+
+impl ColoringInstance {
+    pub fn new(graph: Graph, colors: usize) -> Self {
+        assert!(colors >= 1);
+        Self { graph, colors }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.graph.num_nodes() * self.colors
+    }
+
+    /// Build the QUBO: `A·Σ_v (1 − Σ_c x_{v,c})² + B·Σ_{(u,v)∈E} Σ_c x_{u,c} x_{v,c}`.
+    pub fn to_qubo(&self, penalty: i32, conflict: i32) -> Qubo {
+        let k = self.colors;
+        let var = |v: usize, c: usize| v * k + c;
+        let mut q = Qubo::new(self.num_vars());
+        for v in 0..self.graph.num_nodes() {
+            for c in 0..k {
+                q.add_linear(var(v, c), -penalty);
+            }
+            for c1 in 0..k {
+                for c2 in (c1 + 1)..k {
+                    q.add_quadratic(var(v, c1), var(v, c2), 2 * penalty);
+                }
+            }
+        }
+        for &(u, v, _) in self.graph.edges() {
+            for c in 0..k {
+                q.add_quadratic(var(u as usize, c), var(v as usize, c), conflict);
+            }
+        }
+        q
+    }
+
+    /// Decode to a color per vertex; `None` if some vertex isn't one-hot.
+    pub fn decode(&self, x: &[u8]) -> Option<Vec<usize>> {
+        let k = self.colors;
+        let mut colors = Vec::with_capacity(self.graph.num_nodes());
+        for v in 0..self.graph.num_nodes() {
+            let mut chosen = None;
+            for c in 0..k {
+                if x[v * k + c] == 1 {
+                    if chosen.is_some() {
+                        return None;
+                    }
+                    chosen = Some(c);
+                }
+            }
+            colors.push(chosen?);
+        }
+        Some(colors)
+    }
+
+    /// Count conflicting edges under a coloring.
+    pub fn conflicts(&self, colors: &[usize]) -> usize {
+        self.graph
+            .edges()
+            .iter()
+            .filter(|&&(u, v, _)| colors[u as usize] == colors[v as usize])
+            .count()
+    }
+}

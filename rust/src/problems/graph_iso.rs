@@ -1,0 +1,156 @@
+//! Graph-isomorphism QUBO (paper §5.2; SSQA ref. [17] reports 51%
+//! success at N = 2025 with R = 25).
+//!
+//! Variables `x_{u,v}` — vertex `u` of G1 maps to vertex `v` of G2 —
+//! flattened to `u·n + v`. Penalties enforce a bijection; an edge-
+//! mismatch term scores mappings that break adjacency. Zero QUBO value ⇔
+//! isomorphism found.
+
+use super::qubo::Qubo;
+use crate::graph::Graph;
+
+/// A GI instance: two graphs of equal order.
+#[derive(Debug, Clone)]
+pub struct GiInstance {
+    pub g1: Graph,
+    pub g2: Graph,
+}
+
+impl GiInstance {
+    pub fn new(g1: Graph, g2: Graph) -> Self {
+        assert_eq!(g1.num_nodes(), g2.num_nodes(), "order mismatch");
+        Self { g1, g2 }
+    }
+
+    /// Derive G2 by applying a seeded random permutation to G1 — a
+    /// guaranteed-isomorphic pair for success-probability studies.
+    pub fn permuted(g1: Graph, seed: u64) -> (Self, Vec<usize>) {
+        let n = g1.num_nodes();
+        let mut rng = crate::rng::Xorshift64Star::new(seed);
+        let mut perm: Vec<usize> = (0..n).collect();
+        // Fisher–Yates
+        for i in (1..n).rev() {
+            let j = rng.next_below(i + 1);
+            perm.swap(i, j);
+        }
+        let edges2: Vec<(u32, u32, i32)> = g1
+            .edges()
+            .iter()
+            .map(|&(a, b, w)| (perm[a as usize] as u32, perm[b as usize] as u32, w))
+            .collect();
+        let g2 = Graph::new(n, edges2);
+        (Self::new(g1, g2), perm)
+    }
+
+    pub fn n(&self) -> usize {
+        self.g1.num_nodes()
+    }
+
+    /// Number of QUBO variables (n² mapping grid).
+    pub fn num_vars(&self) -> usize {
+        self.n() * self.n()
+    }
+
+    /// Build the QUBO. `penalty` weights the bijection constraints; the
+    /// adjacency-mismatch terms have unit weight.
+    pub fn to_qubo(&self, penalty: i32) -> Qubo {
+        let n = self.n();
+        let var = |u: usize, v: usize| u * n + v;
+        let mut q = Qubo::new(n * n);
+        // Bijection one-hots (same expansion as TSP).
+        for u in 0..n {
+            for v in 0..n {
+                q.add_linear(var(u, v), -2 * penalty);
+            }
+            for v1 in 0..n {
+                for v2 in (v1 + 1)..n {
+                    q.add_quadratic(var(u, v1), var(u, v2), 2 * penalty);
+                }
+            }
+        }
+        for v in 0..n {
+            for u1 in 0..n {
+                for u2 in (u1 + 1)..n {
+                    q.add_quadratic(var(u1, v), var(u2, v), 2 * penalty);
+                }
+            }
+        }
+        // Mismatch: edge (u1,u2) ∈ G1 mapped to non-edge (v1,v2) of G2,
+        // and vice versa.
+        let adj = |g: &Graph| {
+            let mut a = vec![false; n * n];
+            for &(i, j, _) in g.edges() {
+                a[i as usize * n + j as usize] = true;
+                a[j as usize * n + i as usize] = true;
+            }
+            a
+        };
+        let a1 = adj(&self.g1);
+        let a2 = adj(&self.g2);
+        for u1 in 0..n {
+            for u2 in 0..n {
+                if u1 == u2 {
+                    continue;
+                }
+                for v1 in 0..n {
+                    for v2 in 0..n {
+                        if v1 == v2 {
+                            continue;
+                        }
+                        let e1 = a1[u1 * n + u2];
+                        let e2 = a2[v1 * n + v2];
+                        if e1 != e2 && u1 < u2 {
+                            q.add_quadratic(var(u1, v1), var(u2, v2), 1);
+                        }
+                    }
+                }
+            }
+        }
+        q
+    }
+
+    /// Decode an assignment into a mapping; `None` if not a bijection.
+    pub fn decode(&self, x: &[u8]) -> Option<Vec<usize>> {
+        let n = self.n();
+        let mut map = vec![usize::MAX; n];
+        for u in 0..n {
+            let mut target = None;
+            for v in 0..n {
+                if x[u * n + v] == 1 {
+                    if target.is_some() {
+                        return None;
+                    }
+                    target = Some(v);
+                }
+            }
+            map[u] = target?;
+        }
+        let mut seen = vec![false; n];
+        for &v in &map {
+            if seen[v] {
+                return None;
+            }
+            seen[v] = true;
+        }
+        Some(map)
+    }
+
+    /// Check whether a mapping is a true isomorphism.
+    pub fn is_isomorphism(&self, map: &[usize]) -> bool {
+        let n = self.n();
+        let mut a2 = vec![false; n * n];
+        for &(i, j, _) in self.g2.edges() {
+            a2[i as usize * n + j as usize] = true;
+            a2[j as usize * n + i as usize] = true;
+        }
+        let m1 = self.g1.num_edges();
+        let m2 = self.g2.num_edges();
+        if m1 != m2 {
+            return false;
+        }
+        self.g1
+            .edges()
+            .iter()
+            .all(|&(i, j, _)| a2[map[i as usize] * n + map[j as usize]])
+    }
+}

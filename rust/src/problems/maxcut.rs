@@ -1,0 +1,61 @@
+//! MAX-CUT ↔ Ising mapping.
+//!
+//! `cut(σ) = Σ_{(i,j)∈E} w_ij · (1 − σ_i σ_j) / 2`. Maximizing the cut is
+//! minimizing `H(σ) = −Σ J_ij σ_i σ_j` with `J_ij = −w_ij` and `h = 0`:
+//! an antiferromagnetic coupling pushes the endpoints of a positive edge
+//! to opposite partitions.
+
+use crate::graph::{Graph, IsingModel};
+
+/// Build the Ising model whose ground state is the maximum cut.
+///
+/// `scale` multiplies couplings into the annealer's integer fixed-point
+/// range (the hardware's 4-bit J supports |J·scale| ≤ 7, Table 6).
+pub fn ising_from_graph(g: &Graph, scale: i32) -> IsingModel {
+    let n = g.num_nodes();
+    let mut j = vec![0i32; n * n];
+    for &(a, b, w) in g.edges() {
+        let (a, b) = (a as usize, b as usize);
+        j[a * n + b] = -w * scale;
+        j[b * n + a] = -w * scale;
+    }
+    IsingModel::from_dense(n, vec![0; n], j)
+}
+
+/// Cut value of a ±1 configuration.
+pub fn cut_value(g: &Graph, sigma: &[i32]) -> i64 {
+    assert_eq!(sigma.len(), g.num_nodes());
+    let mut cut: i64 = 0;
+    for &(i, j, w) in g.edges() {
+        if sigma[i as usize] != sigma[j as usize] {
+            cut += w as i64;
+        }
+    }
+    cut
+}
+
+/// Relation used throughout the evaluation: `cut = (W − H/scale) / 2`
+/// where `W = Σ w_ij` and `H` is the Ising energy of the mapped model.
+pub fn cut_from_energy(g: &Graph, energy_scaled: i64, scale: i32) -> i64 {
+    let w_total: i64 = g.edges().iter().map(|&(_, _, w)| w as i64).sum();
+    (w_total - energy_scaled / scale as i64) / 2
+}
+
+/// Exhaustive optimum for tiny instances (test oracle only, O(2^n)).
+pub fn brute_force_max_cut(g: &Graph) -> (i64, Vec<i32>) {
+    let n = g.num_nodes();
+    assert!(n <= 24, "brute force limited to 24 nodes");
+    let mut best = i64::MIN;
+    let mut best_sigma = vec![1; n];
+    for mask in 0u64..(1 << (n - 1)) {
+        // fix node 0 in partition +1 (cut is symmetric under flip)
+        let sigma: Vec<i32> =
+            (0..n).map(|i| if i > 0 && (mask >> (i - 1)) & 1 == 1 { -1 } else { 1 }).collect();
+        let c = cut_value(g, &sigma);
+        if c > best {
+            best = c;
+            best_sigma = sigma;
+        }
+    }
+    (best, best_sigma)
+}

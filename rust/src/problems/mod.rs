@@ -1,0 +1,17 @@
+//! Combinatorial problem encodings.
+//!
+//! MAX-CUT is the paper's primary benchmark (§4); §5.2 demonstrates that
+//! the identical update rule solves any problem with a QUBO formulation
+//! (Lucas [18]) by re-initializing the weight BRAM — we mirror that with
+//! [`qubo::Qubo`] plus TSP / graph-isomorphism / graph-coloring builders
+//! (coloring is the paper's §6 future-work item).
+
+pub mod coloring;
+pub mod graph_iso;
+pub mod maxcut;
+pub mod partition;
+pub mod qubo;
+pub mod tsp;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,114 @@
+//! QUBO (quadratic unconstrained binary optimization) and its Ising
+//! conversion — the "any problem that admits an equivalent QUBO
+//! formulation can be executed by updating only the BRAM initialization
+//! files" pathway of paper §5.2.
+
+use crate::graph::IsingModel;
+
+/// `minimize Σ_i lin_i x_i + Σ_{i<j} Q_ij x_i x_j`, `x ∈ {0,1}ⁿ`.
+///
+/// Coefficients are symmetrized on ingestion: `add_quadratic(i, j, c)`
+/// makes the full pair coefficient `Q_ij = c` (cumulative).
+#[derive(Debug, Clone)]
+pub struct Qubo {
+    n: usize,
+    quad: Vec<i32>, // symmetric, quad[i][j] == Q_ij == quad[j][i]
+    lin: Vec<i32>,
+}
+
+impl Qubo {
+    /// Create an empty n-variable QUBO.
+    pub fn new(n: usize) -> Self {
+        Self { n, quad: vec![0; n * n], lin: vec![0; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Add `c · x_i` (linear term; `x_i² = x_i` so diagonals fold here).
+    pub fn add_linear(&mut self, i: usize, c: i32) {
+        self.lin[i] += c;
+    }
+
+    /// Add `c · x_i x_j`, i ≠ j.
+    pub fn add_quadratic(&mut self, i: usize, j: usize, c: i32) {
+        assert_ne!(i, j, "use add_linear for diagonal terms (x_i² = x_i)");
+        self.quad[i * self.n + j] += c;
+        self.quad[j * self.n + i] += c;
+    }
+
+    /// Objective value of a 0/1 assignment.
+    pub fn value(&self, x: &[u8]) -> i64 {
+        assert_eq!(x.len(), self.n);
+        let mut v: i64 = 0;
+        for i in 0..self.n {
+            if x[i] == 0 {
+                continue;
+            }
+            v += self.lin[i] as i64;
+            for j in (i + 1)..self.n {
+                if x[j] == 1 {
+                    v += self.quad[i * self.n + j] as i64;
+                }
+            }
+        }
+        v
+    }
+
+    /// Convert to an Ising model via `x_i = (1 + σ_i)/2`.
+    ///
+    /// Expansion (all exact in integers after multiplying by 4):
+    /// ```text
+    /// 4·value = C + Σ_i a_i σ_i + Σ_{i<j} Q_ij σ_i σ_j
+    ///   C    = Σ_i 2·lin_i + Σ_{i<j} Q_ij
+    ///   a_i  = 2·lin_i + Σ_{j≠i} Q_ij
+    /// ```
+    /// Matching Eq. (2) `H = −Σ h σ − Σ J σσ` with `h_i = −a_i`,
+    /// `J_ij = −Q_ij` gives `H = Σ a σ + Σ Q σσ`, hence
+    /// `value = (C + H) / 4` — *minimizing H minimizes the QUBO*. The
+    /// returned [`QuboIsingMap`] performs the back-conversion.
+    pub fn to_ising(&self) -> (IsingModel, QuboIsingMap) {
+        let n = self.n;
+        let mut h = vec![0i32; n];
+        let mut j_dense = vec![0i32; n * n];
+        let mut c: i64 = 0;
+        for i in 0..n {
+            c += 2 * self.lin[i] as i64;
+            let mut a: i64 = 2 * self.lin[i] as i64;
+            for j in 0..n {
+                if j != i {
+                    a += self.quad[i * self.n + j] as i64;
+                }
+                if j > i {
+                    let q = self.quad[i * self.n + j];
+                    c += q as i64;
+                    j_dense[i * n + j] = -q;
+                    j_dense[j * n + i] = -q;
+                }
+            }
+            h[i] = i32::try_from(-a).expect("h overflow");
+        }
+        (IsingModel::from_dense(n, h, j_dense), QuboIsingMap { c })
+    }
+}
+
+/// Bookkeeping to map Ising energies back to QUBO objective values.
+#[derive(Debug, Clone, Copy)]
+pub struct QuboIsingMap {
+    c: i64,
+}
+
+impl QuboIsingMap {
+    /// QUBO objective from an Ising energy: `(C + H) / 4` (exact).
+    pub fn energy_to_value(&self, ising_energy: i64) -> i64 {
+        let v4 = self.c + ising_energy;
+        debug_assert_eq!(v4 % 4, 0, "non-integral QUBO value");
+        v4 / 4
+    }
+}
+
+/// Decode σ ∈ {−1,+1} to x ∈ {0,1}.
+pub fn sigma_to_x(sigma: &[i32]) -> Vec<u8> {
+    sigma.iter().map(|&s| if s > 0 { 1 } else { 0 }).collect()
+}

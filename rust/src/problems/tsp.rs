@@ -1,0 +1,150 @@
+//! Traveling-salesman QUBO (paper §5.2, via Lucas [18] §7).
+//!
+//! Variables `x_{v,p}` — city `v` visited at position `p` — flattened to
+//! index `v·n + p`. Objective = tour length + penalty `A` enforcing the
+//! one-hot row/column constraints. `A > max_w · n` guarantees feasible
+//! assignments dominate.
+
+use super::qubo::Qubo;
+
+/// Symmetric integer distance matrix.
+#[derive(Debug, Clone)]
+pub struct TspInstance {
+    n: usize,
+    dist: Vec<i32>, // row-major n×n
+}
+
+impl TspInstance {
+    /// Build from a distance matrix (must be symmetric, zero diagonal).
+    pub fn new(n: usize, dist: Vec<i32>) -> Self {
+        assert_eq!(dist.len(), n * n);
+        for i in 0..n {
+            assert_eq!(dist[i * n + i], 0, "nonzero diagonal");
+            for j in 0..n {
+                assert_eq!(dist[i * n + j], dist[j * n + i], "asymmetric distances");
+            }
+        }
+        Self { n, dist }
+    }
+
+    /// Random Euclidean-ish instance on an integer grid (deterministic).
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut rng = crate::rng::Xorshift64Star::new(seed);
+        let pts: Vec<(f64, f64)> =
+            (0..n).map(|_| (rng.next_f64() * 100.0, rng.next_f64() * 100.0)).collect();
+        let mut dist = vec![0i32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let dx = pts[i].0 - pts[j].0;
+                let dy = pts[i].1 - pts[j].1;
+                dist[i * n + j] = (dx * dx + dy * dy).sqrt().round() as i32;
+            }
+        }
+        Self { n, dist }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn dist(&self, i: usize, j: usize) -> i32 {
+        self.dist[i * self.n + j]
+    }
+
+    /// Length of a tour given as a permutation of cities.
+    pub fn tour_length(&self, tour: &[usize]) -> i64 {
+        assert_eq!(tour.len(), self.n);
+        (0..self.n)
+            .map(|p| self.dist(tour[p], tour[(p + 1) % self.n]) as i64)
+            .sum()
+    }
+
+    /// Number of QUBO variables (n² one-hot grid).
+    pub fn num_vars(&self) -> usize {
+        self.n * self.n
+    }
+
+    /// Build the QUBO. `penalty` is the constraint weight `A`.
+    pub fn to_qubo(&self, penalty: i32) -> Qubo {
+        let n = self.n;
+        let var = |v: usize, p: usize| v * n + p;
+        let mut q = Qubo::new(n * n);
+        // Tour length: Σ_p Σ_{u≠v} d(u,v) x_{u,p} x_{v,p+1}
+        for p in 0..n {
+            let p1 = (p + 1) % n;
+            for u in 0..n {
+                for v in 0..n {
+                    if u != v {
+                        q.add_quadratic(var(u, p), var(v, p1), self.dist(u, v));
+                    }
+                }
+            }
+        }
+        // One-hot constraints: A·(1 − Σ_p x_{v,p})² and A·(1 − Σ_v x_{v,p})²
+        // expands to −A·x + 2A·x_i x_j pairs (constant dropped).
+        for v in 0..n {
+            for p in 0..n {
+                q.add_linear(var(v, p), -2 * penalty); // −A from each of the two constraints
+            }
+            for p1 in 0..n {
+                for p2 in (p1 + 1)..n {
+                    q.add_quadratic(var(v, p1), var(v, p2), 2 * penalty);
+                }
+            }
+        }
+        for p in 0..n {
+            for v1 in 0..n {
+                for v2 in (v1 + 1)..n {
+                    q.add_quadratic(var(v1, p), var(v2, p), 2 * penalty);
+                }
+            }
+        }
+        q
+    }
+
+    /// Decode a 0/1 assignment to a tour; `None` if constraints violated.
+    pub fn decode(&self, x: &[u8]) -> Option<Vec<usize>> {
+        let n = self.n;
+        assert_eq!(x.len(), n * n);
+        let mut tour = vec![usize::MAX; n];
+        for p in 0..n {
+            let mut city = None;
+            for v in 0..n {
+                if x[v * n + p] == 1 {
+                    if city.is_some() {
+                        return None; // two cities at one position
+                    }
+                    city = Some(v);
+                }
+            }
+            tour[p] = city?;
+        }
+        let mut seen = vec![false; n];
+        for &c in &tour {
+            if seen[c] {
+                return None; // city visited twice
+            }
+            seen[c] = true;
+        }
+        Some(tour)
+    }
+
+    /// Greedy nearest-neighbour tour — classical baseline for quality
+    /// comparisons in the examples.
+    pub fn greedy_tour(&self) -> Vec<usize> {
+        let n = self.n;
+        let mut tour = vec![0usize];
+        let mut used = vec![false; n];
+        used[0] = true;
+        for _ in 1..n {
+            let last = *tour.last().unwrap();
+            let next = (0..n)
+                .filter(|&v| !used[v])
+                .min_by_key(|&v| self.dist(last, v))
+                .unwrap();
+            used[next] = true;
+            tour.push(next);
+        }
+        tour
+    }
+}

@@ -1,0 +1,38 @@
+//! Area–delay product analysis (§5.1).
+//!
+//! "Note that area is max{LUT%, FF%, BRAM%}" — the paper's serial design
+//! has A = 19.9% (BRAM-dominated) and 12.0 ms latency on G11, giving
+//! ADP = 2.39 ms; the ten-way parallel variant reaches 0.648 ms.
+
+/// ADP in the paper's units: utilization-fraction × latency (ms if
+/// latency is given in ms — we use seconds and report ms at the edges).
+pub fn area_delay_product(area_fraction: f64, latency_s: f64) -> f64 {
+    area_fraction * latency_s
+}
+
+/// One row of the §5.1 latency–area trade-off sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct AdpReport {
+    /// Parallelism p.
+    pub p: usize,
+    /// Area fraction (max of the three utilization percentages / 100).
+    pub area_fraction: f64,
+    /// Latency in seconds.
+    pub latency_s: f64,
+    /// ADP in millisecond units (area × latency_ms) as the paper quotes.
+    pub adp_ms: f64,
+    /// Energy per solve in joules (~constant in p, §5.1).
+    pub energy_j: f64,
+}
+
+impl AdpReport {
+    pub fn new(p: usize, area_fraction: f64, latency_s: f64, power_w: f64) -> Self {
+        Self {
+            p,
+            area_fraction,
+            latency_s,
+            adp_ms: area_fraction * latency_s * 1e3,
+            energy_j: power_w * latency_s,
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! FPGA resource & power estimation (the Vivado-report substitution).
+//!
+//! Analytic models of LUT/FF/BRAM/power as functions of the structural
+//! parameters (N spins, R replicas, delay architecture, p-way
+//! parallelism), with the mechanisms the paper identifies — flat logic
+//! for the dual-BRAM design, linear logic and fan-out buffering for the
+//! shift-register design, N²-scaling weight BRAM — and coefficients
+//! calibrated to the paper's published anchor points (Table 3, Table 6,
+//! Fig. 10). See DESIGN.md §2 for why this substitution preserves the
+//! claims under test.
+
+mod adp;
+mod model;
+
+pub use adp::{area_delay_product, AdpReport};
+pub use model::{Utilization, Zc706, ResourceModel};
+
+#[cfg(test)]
+mod tests;

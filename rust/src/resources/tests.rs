@@ -1,0 +1,136 @@
+use super::*;
+use crate::hw::DelayKind;
+
+const ANCHOR_N: usize = 800;
+const ANCHOR_R: usize = 20;
+const F166: f64 = 166e6;
+
+#[test]
+fn table3_dual_bram_anchors() {
+    let m = ResourceModel::default();
+    let u = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::DualBram, 1, F166);
+    assert_eq!(u.luts, 3_170, "LUT anchor");
+    assert_eq!(u.ffs, 1_643, "FF anchor");
+    assert!((u.bram36 - 108.5).abs() < 1e-9, "BRAM anchor, got {}", u.bram36);
+    assert!((u.power_w - 0.091).abs() < 0.004, "power anchor, got {}", u.power_w);
+}
+
+#[test]
+fn table3_shift_register_anchors() {
+    let m = ResourceModel::default();
+    let u = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::ShiftReg, 1, F166);
+    assert!(
+        (u.luts as f64 - 28_525.0).abs() / 28_525.0 < 0.01,
+        "LUT anchor within 1%, got {}",
+        u.luts
+    );
+    assert!(
+        (u.ffs as f64 - 50_668.0).abs() / 50_668.0 < 0.01,
+        "FF anchor within 1%, got {}",
+        u.ffs
+    );
+    assert!((u.bram36 - 78.5).abs() < 1e-9, "BRAM anchor, got {}", u.bram36);
+    assert!((u.power_w - 0.306).abs() < 0.01, "power anchor, got {}", u.power_w);
+}
+
+#[test]
+fn table3_reduction_percentages() {
+    // paper: 89% LUT reduction, 97% FF reduction, 70% power reduction
+    let m = ResourceModel::default();
+    let du = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::DualBram, 1, F166);
+    let sr = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::ShiftReg, 1, F166);
+    let lut_red = 1.0 - du.luts as f64 / sr.luts as f64;
+    let ff_red = 1.0 - du.ffs as f64 / sr.ffs as f64;
+    let pw_red = 1.0 - du.power_w / sr.power_w;
+    assert!(lut_red > 0.85 && lut_red < 0.93, "LUT reduction {lut_red}");
+    assert!(ff_red > 0.95, "FF reduction {ff_red}");
+    assert!(pw_red > 0.65 && pw_red < 0.75, "power reduction {pw_red}");
+}
+
+#[test]
+fn utilization_percentages_match_paper() {
+    let m = ResourceModel::default();
+    let du = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::DualBram, 1, F166);
+    assert!((du.lut_pct() - 1.45).abs() < 0.05);
+    assert!((du.ff_pct() - 0.38).abs() < 0.05);
+    assert!((du.bram_pct() - 19.9).abs() < 0.15);
+    // §5.1: area is BRAM-dominated at 19.9%
+    assert!((du.area_fraction() - 0.199).abs() < 0.002);
+}
+
+#[test]
+fn fig10_dual_bram_logic_flat_in_n() {
+    // §5.1: "LUT and FF usage vary by less than 5%" from N=100 to 800
+    let m = ResourceModel::default();
+    let at = |n| m.estimate(n, ANCHOR_R, DelayKind::DualBram, 1, 100e6);
+    let (u100, u800) = (at(100), at(800));
+    assert!((u800.luts as f64 / u100.luts as f64) < 1.05);
+    assert!((u800.ffs as f64 / u100.ffs as f64) < 1.05);
+    assert!((u800.power_w / u100.power_w) < 1.05);
+}
+
+#[test]
+fn fig10_shift_register_logic_linear_in_n() {
+    let m = ResourceModel::default();
+    let at = |n| m.estimate(n, ANCHOR_R, DelayKind::ShiftReg, 1, 100e6);
+    let (u100, u400, u800) = (at(100), at(400), at(800));
+    // FF slope ≈ 3·R per spin
+    let slope1 = (u400.ffs - u100.ffs) as f64 / 300.0;
+    let slope2 = (u800.ffs - u400.ffs) as f64 / 400.0;
+    assert!((slope1 - 60.0).abs() < 1.0, "FF slope {slope1}");
+    assert!((slope2 - 60.0).abs() < 1.0);
+    // power grows with N
+    assert!(u800.power_w > 1.5 * u100.power_w);
+}
+
+#[test]
+fn fig10_bram_quadratic_in_n() {
+    let m = ResourceModel::default();
+    let b = |n: usize| m.j_bram_blocks(n);
+    assert!((b(800) - 78.5).abs() < 1e-9);
+    // quadratic shape: quadrupling N ≈ 16× blocks (within rounding)
+    let ratio = b(800) / b(200);
+    assert!(ratio > 12.0 && ratio < 17.0, "ratio {ratio}");
+    // dual-BRAM always costs more BRAM than shift-reg at same N
+    let du = m.estimate(400, ANCHOR_R, DelayKind::DualBram, 1, 100e6);
+    let sr = m.estimate(400, ANCHOR_R, DelayKind::ShiftReg, 1, 100e6);
+    assert!(du.bram36 > sr.bram36);
+}
+
+#[test]
+fn delay_bram_is_1_5_per_replica_at_n800() {
+    let m = ResourceModel::default();
+    assert!((m.delay_bram_blocks(800, 20) - 30.0).abs() < 1e-9);
+    assert!((m.delay_bram_blocks(800, 1) - 1.5).abs() < 1e-9);
+}
+
+#[test]
+fn parallel_variant_matches_section_5_1() {
+    // p=10: area ≈ 54.8%, latency/10 ⇒ ADP ≈ 0.648 ms (paper)
+    let m = ResourceModel::default();
+    let u10 = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::DualBram, 10, F166);
+    let frac = u10.area_fraction();
+    assert!(frac > 0.40 && frac < 0.70, "p=10 area fraction {frac}");
+    // serial ADP anchor: 0.199 × 12.0ms = 2.39 ms
+    let serial = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::DualBram, 1, F166);
+    let adp = serial.adp(12.0e-3) * 1e3;
+    assert!((adp - 2.39).abs() < 0.05, "serial ADP {adp}");
+}
+
+#[test]
+fn adp_report_bookkeeping() {
+    let r = AdpReport::new(10, 0.548, 1.2e-3, 0.91);
+    assert_eq!(r.p, 10);
+    assert!((r.adp_ms - 0.6576).abs() < 1e-6);
+    assert!((r.energy_j - 1.092e-3).abs() < 1e-6);
+}
+
+#[test]
+fn power_scales_with_clock() {
+    let m = ResourceModel::default();
+    let u100 = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::DualBram, 1, 100e6);
+    let u166 = m.estimate(ANCHOR_N, ANCHOR_R, DelayKind::DualBram, 1, 166e6);
+    assert!(u166.power_w > u100.power_w);
+    // static floor: halving clock doesn't halve power
+    assert!(u100.power_w > 0.5 * u166.power_w);
+}

@@ -1,0 +1,17 @@
+//! Bit-exact pseudo-random number generators.
+//!
+//! The paper's hardware uses a 64-bit XOR-shift generator producing R
+//! parallel random signals per clock cycle (§3.1, ref. [26]). For the
+//! cross-layer bit-exactness contract (DESIGN.md §3) we define one
+//! independent **xorshift32** stream per (spin, replica) cell, seeded via
+//! a splitmix32 hash. Every implementation layer (this module, the hw
+//! cycle simulator, the JAX reference and the Pallas kernel) advances the
+//! same streams in the same order, so spin trajectories are comparable
+//! bit-for-bit across layers.
+
+mod xorshift;
+
+pub use xorshift::{splitmix32, RngMatrix, Xorshift32, Xorshift64Star};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,101 @@
+use super::*;
+
+#[test]
+fn xorshift32_known_sequence() {
+    // Golden values — must match python/compile/kernels/ref.py::xorshift32.
+    let mut g = Xorshift32::new(1);
+    let seq: Vec<u32> = (0..5).map(|_| g.next_u32()).collect();
+    assert_eq!(seq, vec![270369, 67634689, 2647435461, 307599695, 2398689233]);
+}
+
+#[test]
+fn xorshift32_zero_seed_is_fixed_up() {
+    let mut g = Xorshift32::new(0);
+    assert_ne!(g.next_u32(), 0);
+}
+
+#[test]
+fn xorshift32_nonzero_forever() {
+    let mut g = Xorshift32::new(0xDEADBEEF);
+    for _ in 0..10_000 {
+        assert_ne!(g.next_u32(), 0);
+    }
+}
+
+#[test]
+fn pm1_is_sign_of_msb() {
+    let mut a = Xorshift32::new(42);
+    let mut b = Xorshift32::new(42);
+    for _ in 0..1000 {
+        let v = a.next_u32();
+        let r = b.next_pm1();
+        assert_eq!(r, if v >> 31 == 1 { -1 } else { 1 });
+    }
+}
+
+#[test]
+fn pm1_is_roughly_balanced() {
+    let mut g = Xorshift32::new(7);
+    let sum: i64 = (0..100_000).map(|_| g.next_pm1() as i64).sum();
+    assert!(sum.abs() < 2_000, "bias too large: {sum}");
+}
+
+#[test]
+fn splitmix32_golden() {
+    // Golden values — must match the python side.
+    assert_eq!(splitmix32(0), 2462723854);
+    assert_eq!(splitmix32(1), 2527132011);
+    assert_eq!(splitmix32(0xFFFFFFFF), 920564995);
+}
+
+#[test]
+fn xorshift64star_uniform01() {
+    let mut g = Xorshift64Star::new(123);
+    for _ in 0..10_000 {
+        let v = g.next_f64();
+        assert!((0.0..1.0).contains(&v));
+    }
+}
+
+#[test]
+fn xorshift64star_below_bounds() {
+    let mut g = Xorshift64Star::new(9);
+    for n in 1..50 {
+        for _ in 0..100 {
+            assert!(g.next_below(n) < n);
+        }
+    }
+}
+
+#[test]
+fn rng_matrix_seeding_matches_formula() {
+    let m = RngMatrix::seeded(5, 3, 2);
+    for i in 0..3u32 {
+        for k in 0..2u32 {
+            let mixed = 5u32
+                .wrapping_add(i.wrapping_mul(0x9E3779B9))
+                .wrapping_add(k.wrapping_mul(0x85EBCA6B));
+            assert_eq!(m.state(i as usize, k as usize), splitmix32(mixed) | 1);
+        }
+    }
+}
+
+#[test]
+fn rng_matrix_cells_are_independent_streams() {
+    let mut m = RngMatrix::seeded(11, 4, 3);
+    let mut lone = Xorshift32::new(m.state(2, 1));
+    let direct: Vec<i32> = (0..100).map(|_| lone.next_pm1()).collect();
+    let via: Vec<i32> = (0..100).map(|_| m.draw_pm1(2, 1)).collect();
+    assert_eq!(direct, via);
+}
+
+#[test]
+fn rng_matrix_snapshot_roundtrip() {
+    let mut m = RngMatrix::seeded(99, 5, 4);
+    for i in 0..5 {
+        m.draw_pm1(i, i % 4);
+    }
+    let snap = m.states().to_vec();
+    let m2 = RngMatrix::from_states(5, 4, snap.clone());
+    assert_eq!(m2.states(), &snap[..]);
+}

@@ -1,0 +1,179 @@
+//! Marsaglia xorshift generators, bit-exact with `python/compile/kernels`.
+
+/// 32-bit xorshift (Marsaglia's 13/17/5 triple).
+///
+/// This is the per-cell stream of the bit-exactness contract. State must
+/// never be zero; seeding goes through [`splitmix32`] which ors in 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Xorshift32 {
+    state: u32,
+}
+
+impl Xorshift32 {
+    /// Create a stream from a non-zero state. Zero states are mapped to 1
+    /// (a zero xorshift state is a fixed point and would never toggle).
+    pub fn new(seed: u32) -> Self {
+        Self { state: if seed == 0 { 1 } else { seed } }
+    }
+
+    /// Advance one step and return the new 32-bit state.
+    #[inline(always)]
+    pub fn next_u32(&mut self) -> u32 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        self.state = x;
+        x
+    }
+
+    /// Random spin `r ∈ {-1, +1}` from the MSB of the next state.
+    ///
+    /// Matches the hardware convention: the sign bit of the generator
+    /// output drives the ±1 noise term `n_rnd · r` of Eq. (6a).
+    #[inline(always)]
+    pub fn next_pm1(&mut self) -> i32 {
+        if self.next_u32() >> 31 == 1 {
+            -1
+        } else {
+            1
+        }
+    }
+
+    /// Current raw state (for snapshot/restore and cross-layer checks).
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+}
+
+/// 64-bit xorshift* (Vigna, ref. [26] of the paper) — used by the hw
+/// model's `HwRng` to mirror the paper's RNG block, and for seeding
+/// high-level Monte-Carlo harnesses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Xorshift64Star {
+    state: u64,
+}
+
+impl Xorshift64Star {
+    pub fn new(seed: u64) -> Self {
+        Self { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline(always)]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline(always)]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        (self.next_f64() * n as f64) as usize % n.max(1)
+    }
+}
+
+/// splitmix32 finalizer — the cross-layer cell-seeding hash.
+///
+/// `seed_cell(seed, i, k) = splitmix32(seed + i*0x9E3779B9 + k*0x85EBCA6B) | 1`
+/// (all u32 wrapping). The `| 1` guarantees a non-zero xorshift state.
+#[inline(always)]
+pub fn splitmix32(x: u32) -> u32 {
+    let mut z = x.wrapping_add(0x9E3779B9);
+    z = (z ^ (z >> 16)).wrapping_mul(0x85EBCA6B);
+    z = (z ^ (z >> 13)).wrapping_mul(0xC2B2AE35);
+    z ^ (z >> 16)
+}
+
+/// An N×R matrix of independent [`Xorshift32`] streams — one per
+/// (spin, replica) cell, advanced once per cell per annealing step.
+#[derive(Debug, Clone)]
+pub struct RngMatrix {
+    n: usize,
+    r: usize,
+    states: Vec<u32>, // row-major [spin][replica]
+}
+
+impl RngMatrix {
+    /// Seed all cells: `state[i][k] = splitmix32(seed + i*GOLD + k*MIX) | 1`.
+    pub fn seeded(seed: u32, n: usize, r: usize) -> Self {
+        let mut states = Vec::with_capacity(n * r);
+        for i in 0..n {
+            for k in 0..r {
+                let mixed = seed
+                    .wrapping_add((i as u32).wrapping_mul(0x9E3779B9))
+                    .wrapping_add((k as u32).wrapping_mul(0x85EBCA6B));
+                states.push(splitmix32(mixed) | 1);
+            }
+        }
+        Self { n, r, states }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.r
+    }
+
+    /// Advance cell (i, k) one step and return its ±1 draw.
+    #[inline(always)]
+    pub fn draw_pm1(&mut self, i: usize, k: usize) -> i32 {
+        let s = &mut self.states[i * self.r + k];
+        let mut x = *s;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        *s = x;
+        if x >> 31 == 1 {
+            -1
+        } else {
+            1
+        }
+    }
+
+    /// Advance every cell of spin-row `i` once, writing the ±1 draws
+    /// into `out` (length R). Vectorizable row form of [`Self::draw_pm1`]
+    /// — identical stream values, used by the engine hot loop.
+    #[inline]
+    pub fn draw_row_pm1(&mut self, i: usize, out: &mut [i32]) {
+        let row = &mut self.states[i * self.r..(i + 1) * self.r];
+        debug_assert_eq!(out.len(), row.len());
+        for (s, o) in row.iter_mut().zip(out.iter_mut()) {
+            let mut x = *s;
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            *s = x;
+            *o = 1 - 2 * (x >> 31) as i32;
+        }
+    }
+
+    /// Raw state of cell (i, k).
+    pub fn state(&self, i: usize, k: usize) -> u32 {
+        self.states[i * self.r + k]
+    }
+
+    /// Flat state snapshot (row-major [spin][replica]) — used to hand the
+    /// RNG matrix to the PJRT artifact, whose in-graph xorshift advances
+    /// the identical streams.
+    pub fn states(&self) -> &[u32] {
+        &self.states
+    }
+
+    /// Restore from a flat snapshot (inverse of [`Self::states`]).
+    pub fn from_states(n: usize, r: usize, states: Vec<u32>) -> Self {
+        assert_eq!(states.len(), n * r, "state snapshot has wrong length");
+        Self { n, r, states }
+    }
+}

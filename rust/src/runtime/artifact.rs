@@ -1,0 +1,97 @@
+//! Artifact manifest (`artifacts/manifest.kv`, written by
+//! `python/compile/aot.py`).
+
+use crate::config::parse_kv;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::path::{Path, PathBuf};
+
+/// One lowered step variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub n: usize,
+    pub r: usize,
+    pub kernel: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The parsed manifest plus its base directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Parse manifest text (directory defaults to `.`; use [`Self::load`]
+    /// for on-disk manifests).
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = parse_kv(text)?;
+        let count: usize = kv.parse("count").context("manifest count")?;
+        let mut entries = Vec::with_capacity(count);
+        for idx in 0..count {
+            let field = |f: &str| -> Result<String> {
+                Ok(kv.require(&format!("artifact.{idx}.{f}"))?.to_string())
+            };
+            let list =
+                |f: &str| -> Result<Vec<String>> { Ok(field(f)?.split(',').map(|s| s.trim().to_string()).collect()) };
+            entries.push(ArtifactEntry {
+                name: field("name")?,
+                file: field("file")?,
+                n: field("n")?.parse().map_err(|e| anyhow!("artifact.{idx}.n: {e}"))?,
+                r: field("r")?.parse().map_err(|e| anyhow!("artifact.{idx}.r: {e}"))?,
+                kernel: field("kernel")?,
+                inputs: list("inputs")?,
+                outputs: list("outputs")?,
+            });
+        }
+        Ok(Self { dir: PathBuf::from("."), entries })
+    }
+
+    /// Load `dir/manifest.kv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.kv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let mut m = Self::parse(&text)?;
+        m.dir = dir.to_path_buf();
+        Ok(m)
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Exact (N, R) match (first flavour in manifest order — the Pallas
+    /// lowering when both are present).
+    pub fn find(&self, n: usize, r: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.n == n && e.r == r)
+    }
+
+    /// Exact (N, R, kernel-flavour) match (`"pallas"` or `"jnp-ref"`).
+    pub fn find_kernel(&self, n: usize, r: usize, kernel: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.n == n && e.r == r && e.kernel == kernel)
+    }
+
+    /// Exact match, else the smallest variant that fits (problems are
+    /// zero-padded up to the artifact size — extra spins have zero
+    /// couplings and never flip outcomes for real spins… they do draw
+    /// RNG, so padded runs are *not* bit-identical to exact-size runs;
+    /// they are still valid SSQA trajectories of the padded model).
+    pub fn best_for(&self, n: usize, r: usize) -> Option<&ArtifactEntry> {
+        self.find(n, r).or_else(|| {
+            self.entries
+                .iter()
+                .filter(|e| e.n >= n && e.r >= r)
+                .min_by_key(|e| (e.n, e.r))
+        })
+    }
+
+    /// Absolute path of an entry's HLO text.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}

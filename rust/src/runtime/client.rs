@@ -1,0 +1,308 @@
+//! PJRT client wrapper and the artifact-backed annealer backend.
+
+use super::artifact::{ArtifactEntry, ArtifactManifest};
+use crate::annealer::{Annealer, RunResult, SsqaParams};
+use crate::graph::IsingModel;
+use crate::rng::RngMatrix;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::path::Path;
+
+/// The PJRT CPU client plus compiled step executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+}
+
+/// Annealer state held as host mirrors of the device buffers
+/// (row-major `[spin][replica]`, matching the artifact layout).
+#[derive(Debug, Clone)]
+pub struct PjrtState {
+    pub n: usize,
+    pub r: usize,
+    pub sigma: Vec<i32>,
+    pub sigma_prev: Vec<i32>,
+    pub is: Vec<i32>,
+    pub rng: Vec<u32>,
+}
+
+impl PjrtState {
+    /// Initial state per the bit-exactness contract (identical to
+    /// `SsqaState::init` and `ref.init_state`).
+    pub fn init(n: usize, r: usize, seed: u32) -> Self {
+        let rng = RngMatrix::seeded(seed, n, r);
+        let sigma: Vec<i32> = (0..n * r)
+            .map(|c| if rng.state(c / r, c % r) >> 31 == 1 { -1 } else { 1 })
+            .collect();
+        Self {
+            n,
+            r,
+            sigma_prev: sigma.clone(),
+            is: vec![0; n * r],
+            rng: rng.states().to_vec(),
+            sigma,
+        }
+    }
+
+    /// Zero-pad a state up to an artifact's (N, R): padding spins get
+    /// zero couplings later; their RNG streams follow the same seeding
+    /// contract, so the padded trajectory is a valid SSQA run of the
+    /// padded model.
+    pub fn padded_to(&self, n2: usize, r2: usize, seed: u32) -> Self {
+        assert!(n2 >= self.n && r2 >= self.r);
+        let mut out = Self::init(n2, r2, seed);
+        for i in 0..self.n {
+            for k in 0..self.r {
+                let (src, dst) = (i * self.r + k, i * r2 + k);
+                out.sigma[dst] = self.sigma[src];
+                out.sigma_prev[dst] = self.sigma_prev[src];
+                out.is[dst] = self.is[src];
+                out.rng[dst] = self.rng[src];
+            }
+        }
+        out
+    }
+}
+
+/// A compiled (N, R) step executable driving device-resident state.
+pub struct PjrtAnnealer {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+    pub params: SsqaParams,
+    /// Per-step wall times of the last run (for the §Perf log).
+    pub last_step_times: Vec<std::time::Duration>,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client and load the manifest from `artifacts/`.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        Ok(Self { client, manifest })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Compile the step executable for (n, r), padding up to the best
+    /// fitting artifact variant (Pallas flavour).
+    pub fn load_annealer(&self, n: usize, r: usize, params: SsqaParams) -> Result<PjrtAnnealer> {
+        let entry = self
+            .manifest
+            .best_for(n, r)
+            .ok_or_else(|| anyhow!("no artifact fits n={n}, r={r} — re-run aot.py with --variants"))?
+            .clone();
+        self.compile_entry(entry, params)
+    }
+
+    /// Compile a specific kernel flavour (`"pallas"` / `"jnp-ref"`).
+    /// On the CPU PJRT client the jnp-ref lowering is the fast path;
+    /// the Pallas lowering is architecture-faithful (§Perf).
+    pub fn load_annealer_kernel(
+        &self,
+        n: usize,
+        r: usize,
+        params: SsqaParams,
+        kernel: &str,
+    ) -> Result<PjrtAnnealer> {
+        let entry = self
+            .manifest
+            .find_kernel(n, r, kernel)
+            .ok_or_else(|| anyhow!("no {kernel} artifact for n={n}, r={r}"))?
+            .clone();
+        self.compile_entry(entry, params)
+    }
+
+    fn compile_entry(&self, entry: ArtifactEntry, params: SsqaParams) -> Result<PjrtAnnealer> {
+        let path = self.manifest.path_of(&entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+        Ok(PjrtAnnealer { exe, entry, params, last_step_times: Vec::new() })
+    }
+}
+
+impl PjrtAnnealer {
+    /// One step through the artifact. State is round-tripped through
+    /// host literals (the execute-buffer fast path lives in
+    /// [`Self::run_steps`]).
+    pub fn step(
+        &self,
+        state: &mut PjrtState,
+        j: &[i32],
+        h: &[i32],
+        q: i32,
+        noise: i32,
+        i0: i32,
+        alpha: i32,
+    ) -> Result<()> {
+        let (n, r) = (state.n, state.r);
+        let lit = |v: &[i32], dims: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(v).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+        };
+        let args = vec![
+            lit(j, &[n as i64, n as i64])?,
+            lit(h, &[n as i64])?,
+            lit(&state.sigma, &[n as i64, r as i64])?,
+            lit(&state.sigma_prev, &[n as i64, r as i64])?,
+            lit(&state.is, &[n as i64, r as i64])?,
+            xla::Literal::vec1(&state.rng)
+                .reshape(&[n as i64, r as i64])
+                .map_err(|e| anyhow!("rng reshape: {e:?}"))?,
+            xla::Literal::from(q),
+            xla::Literal::from(noise),
+            xla::Literal::from(i0),
+            xla::Literal::from(alpha),
+        ];
+        let outs = self.exe.execute::<xla::Literal>(&args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let leaves = Self::untuple(&outs[0])?;
+        anyhow::ensure!(leaves.len() == 4, "expected 4 outputs, got {}", leaves.len());
+        state.sigma = leaves[0].to_vec::<i32>().map_err(|e| anyhow!("sigma out: {e:?}"))?;
+        state.sigma_prev = leaves[1].to_vec::<i32>().map_err(|e| anyhow!("prev out: {e:?}"))?;
+        state.is = leaves[2].to_vec::<i32>().map_err(|e| anyhow!("is out: {e:?}"))?;
+        state.rng = leaves[3].to_vec::<u32>().map_err(|e| anyhow!("rng out: {e:?}"))?;
+        Ok(())
+    }
+
+    /// Flatten the executable's outputs whether PJRT untuples the root
+    /// or returns a single tuple buffer.
+    fn untuple(bufs: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if bufs.len() == 1 {
+            let lit = bufs[0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            Ok(parts)
+        } else {
+            bufs.iter()
+                .map(|b| b.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}")))
+                .collect()
+        }
+    }
+
+    /// Run a full schedule, recording per-step wall times.
+    ///
+    /// Fast path (§Perf): the problem (`J`, `h`) is uploaded to the
+    /// device **once** and the four state tensors stay device-resident
+    /// between steps (`execute_b` feeding output buffers back as
+    /// inputs) — the BRAM-resident weight matrix of the paper, in PJRT
+    /// terms. Only the per-step scalars (`q`, `noise`) cross the host
+    /// boundary, and the state is copied back a single time at harvest.
+    /// Falls back to the literal round-trip path if this PJRT build
+    /// returns a single tuple buffer instead of untupled leaves.
+    pub fn run_steps(
+        &mut self,
+        model: &IsingModel,
+        steps: usize,
+        seed: u32,
+    ) -> Result<(PjrtState, RunResult)> {
+        let (n, r) = (self.entry.n, self.entry.r);
+        anyhow::ensure!(
+            model.n() <= n,
+            "model n={} exceeds artifact n={n}",
+            model.n()
+        );
+        // zero-pad the problem into the artifact's shape
+        let mut j = vec![0i32; n * n];
+        for i in 0..model.n() {
+            j[i * n..i * n + model.n()].copy_from_slice(model.j_row(i));
+        }
+        let mut h = vec![0i32; n];
+        h[..model.n()].copy_from_slice(&model.h);
+        let mut state = PjrtState::init(n, r, seed);
+        self.last_step_times.clear();
+
+        let client = self.exe.client().clone();
+        let buf_i32 = |data: &[i32], dims: &[usize]| -> Result<xla::PjRtBuffer> {
+            client
+                .buffer_from_host_buffer(data, dims, None)
+                .map_err(|e| anyhow!("host→device: {e:?}"))
+        };
+        let j_buf = buf_i32(&j, &[n, n])?;
+        let h_buf = buf_i32(&h, &[n])?;
+        let i0_buf = buf_i32(&[self.params.i0], &[])?;
+        let alpha_buf = buf_i32(&[self.params.alpha], &[])?;
+        let mut sigma_buf = buf_i32(&state.sigma, &[n, r])?;
+        let mut prev_buf = buf_i32(&state.sigma_prev, &[n, r])?;
+        let mut is_buf = buf_i32(&state.is, &[n, r])?;
+        let mut rng_buf = client
+            .buffer_from_host_buffer(&state.rng, &[n, r], None)
+            .map_err(|e| anyhow!("rng host→device: {e:?}"))?;
+        let mut buffered = true;
+
+        for t in 0..steps {
+            let q_t = self.params.q.at(t);
+            let noise_t = self.params.noise.at(t, steps);
+            let t0 = std::time::Instant::now();
+            if buffered {
+                let q_buf = buf_i32(&[q_t], &[])?;
+                let noise_buf = buf_i32(&[noise_t], &[])?;
+                let mut outs = self
+                    .exe
+                    .execute_b(&[
+                        &j_buf, &h_buf, &sigma_buf, &prev_buf, &is_buf, &rng_buf, &q_buf,
+                        &noise_buf, &i0_buf, &alpha_buf,
+                    ])
+                    .map_err(|e| anyhow!("execute_b step {t}: {e:?}"))?;
+                let leaves = std::mem::take(&mut outs[0]);
+                if leaves.len() == 4 {
+                    let mut it = leaves.into_iter();
+                    sigma_buf = it.next().unwrap();
+                    prev_buf = it.next().unwrap();
+                    is_buf = it.next().unwrap();
+                    rng_buf = it.next().unwrap();
+                } else {
+                    // tuple-rooted build: fall back to the literal path
+                    buffered = false;
+                }
+            }
+            if !buffered {
+                self.step(&mut state, &j, &h, q_t, noise_t, self.params.i0, self.params.alpha)
+                    .with_context(|| format!("step {t}"))?;
+            }
+            self.last_step_times.push(t0.elapsed());
+        }
+        if buffered {
+            // single device→host copy at harvest
+            let read = |b: &xla::PjRtBuffer| -> Result<xla::Literal> {
+                b.to_literal_sync().map_err(|e| anyhow!("device→host: {e:?}"))
+            };
+            state.sigma = read(&sigma_buf)?.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+            state.sigma_prev = read(&prev_buf)?.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+            state.is = read(&is_buf)?.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+            state.rng = read(&rng_buf)?.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?;
+        }
+        // harvest: best replica over the real (unpadded) spins
+        let mut best_energy = i64::MAX;
+        let mut best_sigma = vec![1i32; model.n()];
+        let mut energies = Vec::with_capacity(r);
+        let mut replica = vec![0i32; model.n()];
+        for k in 0..r {
+            for i in 0..model.n() {
+                replica[i] = state.sigma[i * r + k];
+            }
+            let e = model.energy(&replica);
+            energies.push(e);
+            if e < best_energy {
+                best_energy = e;
+                best_sigma.copy_from_slice(&replica);
+            }
+        }
+        Ok((state, RunResult { best_energy, best_sigma, replica_energies: energies, steps }))
+    }
+}
+
+impl Annealer for PjrtAnnealer {
+    fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
+        self.run_steps(model, steps, seed)
+            .expect("PJRT anneal failed")
+            .1
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-artifact"
+    }
+}

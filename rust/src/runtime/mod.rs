@@ -1,0 +1,77 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas step and run it from
+//! the Rust hot path (Python is never on the request path).
+//!
+//! `make artifacts` lowers `python/compile/model.py::ssqa_step` to HLO
+//! *text* per (N, R) variant plus a `manifest.kv`; this module parses
+//! the manifest, compiles the modules on the PJRT CPU client and drives
+//! the step executable with device-resident state (only harvest copies
+//! back to the host).
+
+mod artifact;
+mod client;
+
+pub use artifact::{ArtifactEntry, ArtifactManifest};
+pub use client::{PjrtAnnealer, PjrtRuntime, PjrtState};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_generated_format() {
+        let text = "\
+# comment
+count = 2
+artifact.0.name = ssqa_step_n64_r8
+artifact.0.file = ssqa_step_n64_r8.hlo.txt
+artifact.0.n = 64
+artifact.0.r = 8
+artifact.0.kernel = pallas
+artifact.0.inputs = j,h,sigma,sigma_prev,is,rng,q,noise,i0,alpha
+artifact.0.outputs = sigma,sigma_prev,is,rng
+artifact.1.name = ssqa_step_n800_r20
+artifact.1.file = ssqa_step_n800_r20.hlo.txt
+artifact.1.n = 800
+artifact.1.r = 20
+artifact.1.kernel = pallas
+artifact.1.inputs = j,h,sigma,sigma_prev,is,rng,q,noise,i0,alpha
+artifact.1.outputs = sigma,sigma_prev,is,rng
+";
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.find(800, 20).unwrap();
+        assert_eq!(e.name, "ssqa_step_n800_r20");
+        assert_eq!(e.kernel, "pallas");
+        assert!(m.find(9999, 1).is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(ArtifactManifest::parse("count = 1\nartifact.0.name = x\n").is_err());
+    }
+
+    #[test]
+    fn best_entry_for_prefers_exact_then_smallest_fitting() {
+        let text = "\
+count = 2
+artifact.0.name = a
+artifact.0.file = a.hlo.txt
+artifact.0.n = 64
+artifact.0.r = 8
+artifact.0.kernel = pallas
+artifact.0.inputs = j
+artifact.0.outputs = s
+artifact.1.name = b
+artifact.1.file = b.hlo.txt
+artifact.1.n = 256
+artifact.1.r = 16
+artifact.1.kernel = pallas
+artifact.1.inputs = j
+artifact.1.outputs = s
+";
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.best_for(64, 8).unwrap().name, "a");
+        assert_eq!(m.best_for(100, 8).unwrap().name, "b"); // padded up
+        assert!(m.best_for(500, 20).is_none());
+    }
+}

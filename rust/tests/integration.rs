@@ -1,0 +1,145 @@
+//! Cross-module integration tests: coordinator × engines × hw model ×
+//! resource/energy models on real benchmark instances.
+
+use ssqa::annealer::{multi_run, Annealer, SaEngine, SsaEngine, SsaParams, SsqaEngine, SsqaParams};
+use ssqa::coordinator::{handle_request, Job, JobSpec, Router, RoutingPolicy, WorkerPool};
+use ssqa::energy::{fpga_latency_s, Platform};
+use ssqa::graph::GraphSpec;
+use ssqa::hw::{DelayKind, HwConfig, HwEngine};
+use ssqa::problems::maxcut;
+use ssqa::resources::ResourceModel;
+
+#[test]
+fn ssqa_quality_on_g11_class_instance() {
+    // the Table-5/6 claim in miniature: SSQA at 500 steps reaches ≥97%
+    // of the best cut this harness ever finds on the instance
+    let g = GraphSpec::G11.build();
+    let steps = 500;
+    let params = SsqaParams::gset_default(steps);
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+    let stats = multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, 10, 77);
+    assert!(
+        stats.mean_cut > 540.0,
+        "mean cut {} too low for the G11 class (expect ~554)",
+        stats.mean_cut
+    );
+    assert!(stats.best_cut >= 550, "best cut {}", stats.best_cut);
+}
+
+#[test]
+fn ssqa_500_beats_ssa_500_on_dense_graph() {
+    // SSQA's faster convergence (the Table 5 story): at an equal 500-step
+    // budget SSA lags SSQA substantially
+    let g = GraphSpec::G14.build();
+    let steps = 500;
+    let params = SsqaParams::gset_default(steps);
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+    let ssqa = multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, 6, 3);
+    let ssa = multi_run(
+        &g,
+        &model,
+        || SsaEngine::new(SsaParams::gset_default(), steps),
+        steps,
+        6,
+        3,
+    );
+    assert!(
+        ssqa.mean_cut > ssa.mean_cut,
+        "SSQA {} should beat SSA {} at equal budget",
+        ssqa.mean_cut,
+        ssa.mean_cut
+    );
+}
+
+#[test]
+fn sa_long_run_is_competitive_reference() {
+    let g = GraphSpec::G11.build();
+    let model = maxcut::ising_from_graph(&g, 8);
+    let mut sa = SaEngine::gset_default();
+    let res = sa.anneal(&model, 2000, 5);
+    assert!(res.cut(&g) > 530, "SA reference quality {}", res.cut(&g));
+}
+
+#[test]
+fn hw_model_scales_are_coherent_at_800() {
+    // the full-size machine on a short schedule: exact cycle formula,
+    // latency, and the resource model all line up with Table 6's shape
+    let g = GraphSpec::G11.build();
+    let steps = 25;
+    let params = SsqaParams::gset_default(steps);
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+    let mut hw = HwEngine::new(HwConfig::default(), params);
+    let res = hw.anneal(&model, steps, 9);
+    assert_eq!(hw.stats().cycles, 800 * 5 * steps as u64);
+    // scale the 500-step latency: 12.05 ms
+    let full = fpga_latency_s(&model, 500, DelayKind::DualBram, 1, 166e6);
+    assert!((full - 12.05e-3).abs() < 0.1e-3);
+    let u = ResourceModel::default().estimate(800, 20, DelayKind::DualBram, 1, 166e6);
+    assert!((u.power_w * full - 1.09e-3).abs() < 0.05e-3, "Table 6 energy anchor");
+    assert!(res.cut(&g) > 0);
+}
+
+#[test]
+fn coordinator_round_trip_on_benchmarks() {
+    let pool = WorkerPool::new(4, Router::new(RoutingPolicy::AllSoftware));
+    for spec in GraphSpec::all() {
+        let mut job = Job::new(0, JobSpec::Named(spec), 60, 5);
+        job.params.replicas = 8;
+        pool.submit(job);
+    }
+    let outcomes = pool.drain();
+    assert_eq!(outcomes.len(), 5);
+    for o in &outcomes {
+        assert!(o.cut > 0, "{} produced cut {}", o.label, o.cut);
+    }
+    // protocol layer over the same pool
+    let resp = handle_request(&pool, "solve graph=G13 steps=30 seed=9 replicas=6").unwrap();
+    assert!(resp.contains("graph=G13"));
+}
+
+#[test]
+fn platform_energy_ordering_holds_everywhere() {
+    // proposed FPGA < conventional FPGA < GPU < CPU energy on every
+    // instance (the qualitative Fig. 11 ordering)
+    for spec in GraphSpec::all() {
+        let g = spec.build();
+        let model = maxcut::ising_from_graph(&g, 8);
+        let steps = 500;
+        let prop_lat = fpga_latency_s(&model, steps, DelayKind::DualBram, 1, 166e6);
+        let conv_lat = fpga_latency_s(&model, steps, DelayKind::ShiftReg, 1, 166e6);
+        let rm = ResourceModel::default();
+        let prop_e = rm
+            .estimate(g.num_nodes(), 20, DelayKind::DualBram, 1, 166e6)
+            .power_w
+            * prop_lat;
+        let conv_e = rm
+            .estimate(g.num_nodes(), 20, DelayKind::ShiftReg, 1, 166e6)
+            .power_w
+            * conv_lat;
+        let cpu = Platform::cpu();
+        let gpu = Platform::gpu();
+        let cpu_e = cpu.energy_j(cpu.sw_latency_s(g.num_nodes(), 20, steps));
+        let gpu_e = gpu.energy_j(gpu.sw_latency_s(g.num_nodes(), 20, steps));
+        assert!(
+            prop_e < conv_e && conv_e < gpu_e && gpu_e < cpu_e,
+            "{}: energy ordering violated ({prop_e:.2e} {conv_e:.2e} {gpu_e:.2e} {cpu_e:.2e})",
+            spec.name()
+        );
+    }
+}
+
+#[test]
+fn replica_saturation_shape_on_g11() {
+    // Fig. 8a in miniature: R=20 must clearly beat R=2 and sit within
+    // noise of R=30
+    let g = GraphSpec::G11.build();
+    let steps = 400;
+    let model = maxcut::ising_from_graph(&g, 8);
+    let run_r = |r: usize| {
+        let params = SsqaParams { replicas: r, ..SsqaParams::gset_default(steps) };
+        multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, 8, 21).mean_cut
+    };
+    let (c2, c20, c30) = (run_r(2), run_r(20), run_r(30));
+    assert!(c20 > c2, "R=20 ({c20}) must beat R=2 ({c2})");
+    assert!((c30 - c20).abs() < 0.02 * c20, "R=20→30 saturated: {c20} vs {c30}");
+}

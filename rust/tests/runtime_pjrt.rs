@@ -1,0 +1,97 @@
+//! PJRT end-to-end integration: the AOT artifact (JAX/Pallas lowered to
+//! HLO text, compiled by the `xla` crate on the PJRT CPU client) must
+//! reproduce the Rust software engine bit-for-bit — the final leg of
+//! the four-layer bit-exactness contract.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use ssqa::annealer::{NoiseSchedule, QSchedule, SsqaEngine, SsqaParams};
+use ssqa::graph::{random_graph, torus_2d};
+use ssqa::problems::maxcut;
+use ssqa::runtime::{PjrtRuntime, PjrtState};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if dir.join("manifest.kv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn params(n_steps: usize, replicas: usize) -> SsqaParams {
+    SsqaParams {
+        replicas,
+        i0: 48,
+        alpha: 1,
+        noise: NoiseSchedule::Linear { start: 16, end: 2 },
+        q: QSchedule::linear(0, 32, n_steps),
+        j_scale: 8,
+    }
+}
+
+#[test]
+fn artifact_step_matches_software_engine_exact_size() {
+    let Some(dir) = artifacts_dir() else { return };
+    let steps = 20;
+    let p = params(steps, 8);
+    let g = random_graph(64, 200, &[-1, 1], 42);
+    let model = maxcut::ising_from_graph(&g, p.j_scale);
+
+    let rt = PjrtRuntime::new(dir).expect("runtime");
+    let mut pj = rt.load_annealer(64, 8, p).expect("load 64x8");
+    let (state, pj_res) = pj.run_steps(&model, steps, 7).expect("pjrt run");
+
+    let eng = SsqaEngine::new(p, steps);
+    let (sw_state, sw_res) = eng.run(&model, steps, 7);
+
+    assert_eq!(state.sigma, sw_state.sigma, "σ trajectories diverged");
+    assert_eq!(state.is, sw_state.is, "Is diverged");
+    assert_eq!(state.rng, sw_state.rng.states(), "rng streams diverged");
+    assert_eq!(pj_res.best_energy, sw_res.best_energy);
+    assert_eq!(pj_res.replica_energies, sw_res.replica_energies);
+}
+
+#[test]
+fn artifact_runs_padded_problem() {
+    let Some(dir) = artifacts_dir() else { return };
+    let steps = 10;
+    let p = params(steps, 8);
+    // 40 spins padded into the 64x8 artifact
+    let g = torus_2d(5, 8, true, 3);
+    let model = maxcut::ising_from_graph(&g, p.j_scale);
+    let rt = PjrtRuntime::new(dir).expect("runtime");
+    let mut pj = rt.load_annealer(40, 8, p).expect("load padded");
+    assert_eq!(pj.entry.n, 64);
+    let (_, res) = pj.run_steps(&model, steps, 1).expect("padded run");
+    assert_eq!(res.best_sigma.len(), 40);
+    assert!(res.best_sigma.iter().all(|&s| s == 1 || s == -1));
+    // energies must be true energies of the replica configurations
+    assert_eq!(model.energy(&res.best_sigma), res.best_energy);
+}
+
+#[test]
+fn pjrt_state_init_matches_contract() {
+    let st = PjrtState::init(6, 3, 99);
+    let m = ssqa::rng::RngMatrix::seeded(99, 6, 3);
+    assert_eq!(st.rng, m.states());
+    for i in 0..6 {
+        for k in 0..3 {
+            let expect = if m.state(i, k) >> 31 == 1 { -1 } else { 1 };
+            assert_eq!(st.sigma[i * 3 + k], expect);
+        }
+    }
+    assert!(st.is.iter().all(|&v| v == 0));
+}
+
+#[test]
+fn manifest_lists_paper_configuration() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).expect("runtime");
+    let e = rt.manifest().find(800, 20).expect("800x20 artifact present");
+    assert_eq!(e.kernel, "pallas");
+    assert_eq!(e.inputs.len(), 10);
+    assert_eq!(e.outputs.len(), 4);
+}
