@@ -6,7 +6,7 @@
 //! cargo run --release --example maxcut_sweep [runs] [steps]
 //! ```
 
-use ssqa::annealer::{multi_run, SsqaEngine, SsqaParams};
+use ssqa::annealer::{multi_run_batched, SsqaParams};
 use ssqa::graph::GraphSpec;
 use ssqa::problems::maxcut;
 
@@ -23,8 +23,7 @@ fn main() {
         for r in [1usize, 5, 10, 15, 20, 25, 30] {
             let params = SsqaParams { replicas: r, ..SsqaParams::gset_default(steps) };
             let model = maxcut::ising_from_graph(&g, params.j_scale);
-            let stats =
-                multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, runs, 42);
+            let stats = multi_run_batched(&g, &model, params, steps, runs, 42);
             println!(
                 "{:<6} {:>4} {:>10.1} {:>8} {:>8.1}",
                 spec.name(),

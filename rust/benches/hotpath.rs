@@ -1,6 +1,11 @@
 //! Hot-path microbenchmarks for the §Perf pass: the software engine
-//! step (L3 matvec), the cycle simulator step, and the PJRT artifact
-//! step (L1+L2 via the runtime).
+//! step (L3 matvec), single-seed vs batched multi-seed execution on the
+//! paper's 800-node benchmark scale, the cycle simulator step, and the
+//! PJRT artifact step (L1+L2 via the runtime).
+//!
+//! The `hotpath/batch` section appends its numbers to
+//! `BENCH_hotpath.json` at the repository root so successive PRs leave
+//! a perf trajectory.
 
 use ssqa::annealer::{Annealer, SsqaEngine, SsqaParams};
 use ssqa::config::{bench, updates_per_sec, BenchArgs};
@@ -27,6 +32,88 @@ fn main() {
             "  → {:.2} M spin-updates/s",
             updates_per_sec(n, r, steps, s.min) / 1e6
         );
+    }
+
+    if args.matches("hotpath/batch") {
+        // single-seed loop vs batched multi-seed on the paper's 800-node
+        // dense benchmark (G14 class) — the batch reuses one scratch,
+        // one state buffer and one CSR traversal across seeds
+        let g800 = GraphSpec::G14.build();
+        let bsteps = if args.quick { 20 } else { 60 };
+        let bparams = SsqaParams::gset_default(bsteps);
+        let bmodel = maxcut::ising_from_graph(&g800, bparams.j_scale);
+        let seeds: Vec<u32> = if args.quick { (1..=3).collect() } else { (1..=8).collect() };
+        let (n8, r8) = (g800.num_nodes(), bparams.replicas);
+
+        let single = bench(
+            &format!("hotpath/batch single G14 {bsteps}st ×{}", seeds.len()),
+            3,
+            || {
+                for &s in &seeds {
+                    let eng = SsqaEngine::new(bparams, bsteps);
+                    let _ = eng.run(&bmodel, bsteps, s);
+                }
+            },
+        );
+        let batched = bench(
+            &format!("hotpath/batch run_batch G14 {bsteps}st ×{}", seeds.len()),
+            3,
+            || {
+                let eng = SsqaEngine::new(bparams, bsteps);
+                let _ = eng.run_batch(&bmodel, bsteps, &seeds);
+            },
+        );
+        let per_seed = |d: std::time::Duration| d.as_secs_f64() / seeds.len() as f64;
+        let single_sps = bsteps as f64 / per_seed(single.min);
+        let batched_sps = bsteps as f64 / per_seed(batched.min);
+        let speedup = per_seed(single.min) / per_seed(batched.min);
+        println!(
+            "  → single {:.1} steps/s/seed, batched {:.1} steps/s/seed ({:.3}× per seed)",
+            single_sps, batched_sps, speedup
+        );
+        println!(
+            "  → batched {:.2} M spin-updates/s",
+            updates_per_sec(n8, r8, bsteps * seeds.len(), batched.min) / 1e6
+        );
+
+        // append to the perf trajectory at the repo root
+        let stamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let record = format!(
+            "{{\"unix_time\": {stamp}, \"bench\": \"hotpath/batch\", \"graph\": \"G14\", \
+             \"n\": {n8}, \"replicas\": {r8}, \"steps\": {bsteps}, \"seeds\": {}, \
+             \"single_s\": {:.6}, \"batched_s\": {:.6}, \
+             \"single_steps_per_s_per_seed\": {:.1}, \"batched_steps_per_s_per_seed\": {:.1}, \
+             \"per_seed_speedup\": {:.4}}}",
+            seeds.len(),
+            single.min.as_secs_f64(),
+            batched.min.as_secs_f64(),
+            single_sps,
+            batched_sps,
+            speedup,
+        );
+        let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+        let mut records: Vec<String> = std::fs::read_to_string(json_path)
+            .ok()
+            .and_then(|s| {
+                // stored as a JSON array of flat records, one per line
+                let body = s.trim().strip_prefix('[')?.strip_suffix(']')?.trim().to_string();
+                Some(
+                    body.lines()
+                        .map(|l| l.trim().trim_end_matches(',').to_string())
+                        .filter(|l| !l.is_empty() && !l.starts_with("//"))
+                        .collect(),
+                )
+            })
+            .unwrap_or_default();
+        records.push(record);
+        let out = format!("[\n  {}\n]\n", records.join(",\n  "));
+        match std::fs::write(json_path, out) {
+            Ok(()) => println!("  → recorded in BENCH_hotpath.json"),
+            Err(e) => println!("  → could not write BENCH_hotpath.json: {e}"),
+        }
     }
 
     if args.matches("hotpath/hw-sim") {

@@ -61,6 +61,14 @@ impl NoiseSchedule {
 }
 
 /// Full SSQA parameter set (defaults calibrated in EXPERIMENTS.md §Calib).
+///
+/// §Schedule normalization (DESIGN.md §3.4): engines carry a
+/// `total_steps` horizon alongside these parameters, and the noise
+/// schedule decays over `total_steps.max(steps_run)` — running fewer
+/// steps than the horizon executes a *prefix* of the longer schedule,
+/// never a silently renormalized one. `Annealer::anneal` and
+/// `SsqaEngine::run` follow the same rule, so partial runs and trait
+/// runs of the same engine are bit-identical.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SsqaParams {
     /// Number of replicas (Trotter slices). Paper adopts R = 20 (§4.2).

@@ -12,6 +12,7 @@
 
 use super::{Annealer, RunResult, SsqaEngine, SsqaParams};
 use super::ssqa::SsqaState;
+use crate::dynamics::StepScratch;
 use crate::graph::IsingModel;
 use crate::rng::Xorshift64Star;
 
@@ -38,6 +39,7 @@ impl PdSsqaEngine {
         &self,
         model: &IsingModel,
         st: &mut SsqaState,
+        scratch: &mut StepScratch,
         q_t: i32,
         noise_t: i32,
         d_t: f64,
@@ -61,19 +63,22 @@ impl PdSsqaEngine {
                 )
             })
             .collect();
-        self.inner.step(model, st, q_t, noise_t);
+        self.inner.step(model, st, scratch, q_t, noise_t);
         // undo the frozen rows: σ(t+1) = σ(t) for them, Is and RNG kept
-        let mut rng_states = st.rng.states().to_vec();
-        for (i, sigma, _prev, is, rng) in &frozen {
-            let row = i * r;
-            // after step(): st.sigma = new, st.sigma_prev = old sigma
-            st.sigma[row..row + r].copy_from_slice(sigma);
-            st.is[row..row + r].copy_from_slice(is);
-            for k in 0..r {
-                rng_states[row + k] = rng[k];
-            }
-        }
+        // (all restore work — including the RNG snapshot copy — is
+        // gated on rows actually being frozen, keeping the d_t → 0
+        // tail of a run on the zero-allocation step path)
         if !frozen.is_empty() {
+            let mut rng_states = st.rng.states().to_vec();
+            for (i, sigma, _prev, is, rng) in &frozen {
+                let row = i * r;
+                // after step(): st.sigma = new, st.sigma_prev = old sigma
+                st.sigma[row..row + r].copy_from_slice(sigma);
+                st.is[row..row + r].copy_from_slice(is);
+                for k in 0..r {
+                    rng_states[row + k] = rng[k];
+                }
+            }
             st.rng = crate::rng::RngMatrix::from_states(n, r, rng_states);
         }
     }
@@ -89,16 +94,19 @@ impl PdSsqaEngine {
 
 impl Annealer for PdSsqaEngine {
     fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
-        self.inner.total_steps = steps;
+        let horizon = self.inner.schedule_horizon(steps);
         let n = model.n();
         let r = self.inner.params.replicas;
         let mut st = SsqaState::init(n, r, seed);
+        let mut scratch = StepScratch::new(r);
         let mut lottery = Xorshift64Star::new(self.mask_seed ^ (seed as u64) << 16);
         for t in 0..steps {
             let q_t = self.inner.params.q.at(t);
-            let noise_t = self.inner.params.noise.at(t, steps);
-            let d_t = self.d_at(t, steps);
-            self.masked_step(model, &mut st, q_t, noise_t, d_t, &mut lottery);
+            let noise_t = self.inner.params.noise.at(t, horizon);
+            // the deactivation lottery decays over the same horizon as
+            // the noise schedule (§3.4 prefix semantics)
+            let d_t = self.d_at(t, horizon);
+            self.masked_step(model, &mut st, &mut scratch, q_t, noise_t, d_t, &mut lottery);
         }
         SsqaEngine::harvest(model, &st, steps)
     }

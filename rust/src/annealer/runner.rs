@@ -1,8 +1,8 @@
 //! Multi-run Monte-Carlo harness (the paper averages 100 independent
 //! runs per point; we parallelize runs over a scoped thread pool).
 
-use super::Annealer;
-use crate::config::par_map;
+use super::{Annealer, SsqaEngine, SsqaParams};
+use crate::config::{chunk_per_worker, num_threads, par_map};
 use crate::graph::{Graph, IsingModel};
 use crate::problems::maxcut;
 
@@ -38,10 +38,43 @@ pub struct AggregateStats {
     pub mean_best_energy: f64,
 }
 
+/// The seed of run `r` in a `runs`-wide sweep starting at `seed0` —
+/// shared by the batched and unbatched harnesses so their aggregates are
+/// bit-identical.
+#[inline]
+pub fn run_seed(seed0: u32, r: u32) -> u32 {
+    seed0.wrapping_add(r.wrapping_mul(7919))
+}
+
+fn aggregate(cuts: Vec<(i64, i64)>) -> AggregateStats {
+    if cuts.is_empty() {
+        return AggregateStats {
+            runs: 0,
+            best_cut: 0,
+            mean_cut: 0.0,
+            std_cut: 0.0,
+            min_cut: 0,
+            mean_best_energy: 0.0,
+        };
+    }
+    let n = cuts.len() as f64;
+    let mean_cut = cuts.iter().map(|c| c.0 as f64).sum::<f64>() / n;
+    let var = cuts.iter().map(|c| (c.0 as f64 - mean_cut).powi(2)).sum::<f64>() / n;
+    AggregateStats {
+        runs: cuts.len(),
+        best_cut: cuts.iter().map(|c| c.0).max().unwrap_or(0),
+        mean_cut,
+        std_cut: var.sqrt(),
+        min_cut: cuts.iter().map(|c| c.0).min().unwrap_or(0),
+        mean_best_energy: cuts.iter().map(|c| c.1 as f64).sum::<f64>() / n,
+    }
+}
+
 /// Run `runs` independent seeds in parallel and aggregate cut statistics.
 ///
 /// `make_annealer` must build a fresh engine per worker (engines carry
-/// schedule state).
+/// schedule state). For SSQA sweeps prefer [`multi_run_batched`], which
+/// amortizes state allocation across the runs each worker executes.
 pub fn multi_run<A, F>(
     graph: &Graph,
     model: &IsingModel,
@@ -57,18 +90,35 @@ where
     let run_ids: Vec<u32> = (0..runs as u32).collect();
     let cuts: Vec<(i64, i64)> = par_map(&run_ids, |&r| {
         let mut eng = make_annealer();
-        let res = eng.anneal(model, steps, seed0.wrapping_add(r * 7919));
+        let res = eng.anneal(model, steps, run_seed(seed0, r));
         (res.cut(graph), res.best_energy)
     });
-    let n = cuts.len() as f64;
-    let mean_cut = cuts.iter().map(|c| c.0 as f64).sum::<f64>() / n;
-    let var = cuts.iter().map(|c| (c.0 as f64 - mean_cut).powi(2)).sum::<f64>() / n;
-    AggregateStats {
-        runs,
-        best_cut: cuts.iter().map(|c| c.0).max().unwrap_or(0),
-        mean_cut,
-        std_cut: var.sqrt(),
-        min_cut: cuts.iter().map(|c| c.0).min().unwrap_or(0),
-        mean_best_energy: cuts.iter().map(|c| c.1 as f64).sum::<f64>() / n,
-    }
+    aggregate(cuts)
+}
+
+/// Batched variant of [`multi_run`] for the SSQA engine: the seed list
+/// is split into one contiguous chunk per worker and each worker drives
+/// its chunk through [`SsqaEngine::run_batch`] — one `StepScratch`, one
+/// reused state buffer and one CSR traversal order per worker instead of
+/// per run. Seed derivation matches [`multi_run`] ([`run_seed`]), and
+/// every trajectory is bit-identical to an independent run, so the two
+/// harnesses aggregate to the same statistics.
+pub fn multi_run_batched(
+    graph: &Graph,
+    model: &IsingModel,
+    params: SsqaParams,
+    steps: usize,
+    runs: usize,
+    seed0: u32,
+) -> AggregateStats {
+    let seeds: Vec<u32> = (0..runs as u32).map(|r| run_seed(seed0, r)).collect();
+    let chunks: Vec<&[u32]> = chunk_per_worker(&seeds, num_threads()).collect();
+    let per_chunk: Vec<Vec<(i64, i64)>> = par_map(&chunks, |chunk| {
+        let eng = SsqaEngine::new(params, steps);
+        eng.run_batch(model, steps, chunk)
+            .into_iter()
+            .map(|res| (res.cut(graph), res.best_energy))
+            .collect()
+    });
+    aggregate(per_chunk.into_iter().flatten().collect())
 }

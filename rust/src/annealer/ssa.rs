@@ -2,9 +2,13 @@
 //!
 //! The same integer spin-gate update as SSQA but with no replicas and no
 //! Q-coupling; annealing is driven by the decaying noise magnitude.
-//! This is the baseline of Table 5 (90,000 steps) and Fig. 12.
+//! This is the baseline of Table 5 (90,000 steps) and Fig. 12. The cell
+//! arithmetic is the shared [`crate::dynamics::CellUpdate`] with
+//! `q_t = 0` — SSA is structurally the R = 1 degenerate case of the
+//! datapath.
 
 use super::{params::SsaParams, runner::RunResult, Annealer};
+use crate::dynamics::{self, CellUpdate};
 use crate::graph::IsingModel;
 use crate::rng::RngMatrix;
 
@@ -20,8 +24,7 @@ pub struct SsaState {
 impl SsaState {
     pub fn init(n: usize, seed: u32) -> Self {
         let rng = RngMatrix::seeded(seed, n, 1);
-        let sigma: Vec<i32> =
-            (0..n).map(|i| if rng.state(i, 0) >> 31 == 1 { -1 } else { 1 }).collect();
+        let sigma = dynamics::init_sigma(&rng);
         Self { sigma, is: vec![0; n], rng, t: 0 }
     }
 }
@@ -29,6 +32,8 @@ impl SsaState {
 /// The SSA software engine.
 pub struct SsaEngine {
     pub params: SsaParams,
+    /// Noise-decay horizon (same `total_steps.max(steps)` semantic as
+    /// `SsqaEngine::schedule_horizon`).
     pub total_steps: usize,
     /// Track the best configuration seen over the whole run — SSA's long
     /// schedules wander, and the hardware baseline reports best-seen.
@@ -42,27 +47,24 @@ impl SsaEngine {
 
     /// One synchronous update step (§Perf: writes into the reusable
     /// scratch buffer `next` — no allocation in the 90,000-step loop).
-    pub fn step_into(&self, model: &IsingModel, st: &mut SsaState, noise_t: i32, next: &mut Vec<i32>) {
+    pub fn step_into(
+        &self,
+        model: &IsingModel,
+        st: &mut SsaState,
+        noise_t: i32,
+        next: &mut Vec<i32>,
+    ) {
         let n = model.n();
-        let i0 = self.params.i0;
-        let alpha = self.params.alpha;
+        let cell = CellUpdate::new(self.params.i0, self.params.alpha);
         next.clear();
         for i in 0..n {
             let (cols, vals) = model.j_sparse().row(i);
-            let mut acc = model.h[i];
+            let mut field = model.h[i];
             for (c, v) in cols.iter().zip(vals) {
-                acc += *v * st.sigma[*c as usize];
+                field += *v * st.sigma[*c as usize];
             }
-            let inp = acc + noise_t * st.rng.draw_pm1(i, 0);
-            let s = st.is[i] + inp;
-            st.is[i] = if s >= i0 {
-                i0 - alpha
-            } else if s < -i0 {
-                -i0
-            } else {
-                s
-            };
-            next.push(if st.is[i] >= 0 { 1 } else { -1 });
+            let inp = CellUpdate::input(field, noise_t, st.rng.draw_pm1(i, 0), 0, 0);
+            next.push(cell.apply(&mut st.is[i], inp));
         }
         std::mem::swap(&mut st.sigma, next);
         st.t += 1;
@@ -77,7 +79,7 @@ impl SsaEngine {
 
 impl Annealer for SsaEngine {
     fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
-        self.total_steps = steps;
+        let horizon = self.total_steps.max(steps);
         let n = model.n();
         let mut st = SsaState::init(n, seed);
         let mut best_energy = model.energy(&st.sigma);
@@ -87,7 +89,7 @@ impl Annealer for SsaEngine {
         let check_stride = (steps / 2000).max(1);
         let mut scratch = Vec::with_capacity(n);
         for t in 0..steps {
-            let noise_t = self.params.noise.at(t, steps);
+            let noise_t = self.params.noise.at(t, horizon);
             self.step_into(model, &mut st, noise_t, &mut scratch);
             if self.track_best && (t % check_stride == 0 || t + 1 == steps) {
                 let e = model.energy(&st.sigma);

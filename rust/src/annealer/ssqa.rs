@@ -7,12 +7,13 @@
 //! two-step-delayed bank. The N serial MACs of the spin gate are
 //! therefore mathematically one `J·σ` matvec per replica — exactly what
 //! the Pallas kernel computes on the MXU.
+//!
+//! The Eq. (6a–c) arithmetic itself lives in [`crate::dynamics`] — this
+//! engine owns only the traversal order, the double-buffering and the
+//! schedules.
 
-use super::{
-    params::SsqaParams,
-    runner::RunResult,
-    Annealer,
-};
+use super::{params::SsqaParams, runner::RunResult, Annealer};
+use crate::dynamics::{self, CellUpdate, StepScratch};
 use crate::graph::IsingModel;
 use crate::rng::RngMatrix;
 
@@ -33,15 +34,11 @@ pub struct SsqaState {
 
 impl SsqaState {
     /// Deterministic initial state: `σ_i,k(0) = +1` iff the cell's seed
-    /// hash MSB is 0 (matches the Python model's init), `Is = 0`.
+    /// hash MSB is 0 (the shared [`dynamics::init_sigma`] convention,
+    /// matching the Python model's init), `Is = 0`.
     pub fn init(n: usize, replicas: usize, seed: u32) -> Self {
         let rng = RngMatrix::seeded(seed, n, replicas);
-        let mut sigma = vec![0i32; n * replicas];
-        for i in 0..n {
-            for k in 0..replicas {
-                sigma[i * replicas + k] = if rng.state(i, k) >> 31 == 1 { -1 } else { 1 };
-            }
-        }
+        let sigma = dynamics::init_sigma(&rng);
         Self {
             sigma_prev: sigma.clone(),
             is: vec![0; n * replicas],
@@ -50,12 +47,23 @@ impl SsqaState {
             t: 0,
         }
     }
+
+    /// Re-seed in place — the batched runner reuses one state's buffers
+    /// across seeds instead of reallocating N×R×4 words per run.
+    pub fn reinit(&mut self, seed: u32) {
+        self.rng.reseed(seed);
+        dynamics::init_sigma_into(&self.rng, &mut self.sigma);
+        self.sigma_prev.copy_from_slice(&self.sigma);
+        self.is.fill(0);
+        self.t = 0;
+    }
 }
 
 /// The SSQA software engine.
 pub struct SsqaEngine {
     pub params: SsqaParams,
-    /// Total steps the schedules are normalized to (noise decay).
+    /// Noise-decay horizon: schedules are normalized to
+    /// `total_steps.max(steps_run)` (see [`Self::schedule_horizon`]).
     pub total_steps: usize,
 }
 
@@ -64,24 +72,43 @@ impl SsqaEngine {
         Self { params, total_steps }
     }
 
+    /// The horizon the noise schedule decays over when running `steps`
+    /// steps: `total_steps.max(steps)`.
+    ///
+    /// This is the **one** normalization semantic (see `SsqaParams`
+    /// docs): an engine built with `total_steps > steps` executes a
+    /// prefix of the longer schedule; it is never silently renormalized
+    /// — `anneal` and `run` agree.
+    #[inline]
+    pub fn schedule_horizon(&self, steps: usize) -> usize {
+        self.total_steps.max(steps)
+    }
+
     /// Advance one annealing step in place. `q_t` and `noise_t` are the
     /// schedule values for this step (passed explicitly so the hw
-    /// scheduler and the PJRT driver can feed identical sequences).
+    /// scheduler and the PJRT driver can feed identical sequences);
+    /// `scratch` carries the reusable per-row buffers — zero heap
+    /// allocations happen inside this function.
     ///
     /// §Perf: the previous-step spins are double-buffered (the functional
     /// dual-BRAM ping-pong): `sigma_prev` is overwritten in place with
-    /// the new states, then the two buffers swap — zero allocation per
-    /// step. The replica axis (innermost, contiguous) auto-vectorizes.
-    pub fn step(&self, model: &IsingModel, st: &mut SsqaState, q_t: i32, noise_t: i32) {
+    /// the new states, then the two buffers swap. The replica axis
+    /// (innermost, contiguous) auto-vectorizes.
+    pub fn step(
+        &self,
+        model: &IsingModel,
+        st: &mut SsqaState,
+        scratch: &mut StepScratch,
+        q_t: i32,
+        noise_t: i32,
+    ) {
         let n = model.n();
         let r = self.params.replicas;
         debug_assert_eq!(st.sigma.len(), n * r);
-        let i0 = self.params.i0;
-        let alpha = self.params.alpha;
+        scratch.ensure(r);
+        let cell = CellUpdate::new(self.params.i0, self.params.alpha);
+        let StepScratch { acc, prev_row, noise_row } = scratch;
 
-        let mut acc = vec![0i32; r]; // one accumulator row, reused
-        let mut prev_row = vec![0i32; r]; // σ(t−1) row latched before overwrite
-        let mut noise_row = vec![0i32; r]; // vectorized per-row RNG draws
         for i in 0..n {
             // Sparse accumulation of Σ_j J_ij σ_j,k(t) for all replicas at
             // once (replica-parallel, like the R hardware spin gates).
@@ -100,28 +127,17 @@ impl SsqaEngine {
             // hardware reads all R coupling ports in the update cycle
             // before the READ_FIRST write commits)
             prev_row.copy_from_slice(&st.sigma_prev[row..row + r]);
-            st.rng.draw_row_pm1(i, &mut noise_row);
+            st.rng.draw_row_pm1(i, noise_row);
             for k in 0..r {
                 // replica coupling: σ_{i,(k+1) mod R}(t−1), the dual-BRAM
                 // two-step-delayed read (Eq. 6a with d = 1)
                 let up = prev_row[(k + 1) % r];
-                let noise = noise_t * noise_row[k];
-                let inp = acc[k] + noise + q_t * up;
-                // Eq. (6b): saturating accumulator
-                let cell = row + k;
-                let s = st.is[cell] + inp;
-                let is_new = if s >= i0 {
-                    i0 - alpha
-                } else if s < -i0 {
-                    -i0
-                } else {
-                    s
-                };
-                st.is[cell] = is_new;
-                // Eq. (6c): sign — written into the retiring buffer (all
+                let inp = CellUpdate::input(acc[k], noise_t, noise_row[k], q_t, up);
+                let slot = row + k;
+                // Eq. (6b)+(6c) — written into the retiring buffer (all
                 // coupling reads of row i happen above, so this is the
                 // same-cycle READ_FIRST overwrite of the hardware)
-                st.sigma_prev[cell] = if is_new >= 0 { 1 } else { -1 };
+                st.sigma_prev[slot] = cell.apply(&mut st.is[slot], inp);
             }
         }
         std::mem::swap(&mut st.sigma, &mut st.sigma_prev);
@@ -130,46 +146,64 @@ impl SsqaEngine {
 
     /// Run the full schedule and return per-replica final energies.
     pub fn run(&self, model: &IsingModel, steps: usize, seed: u32) -> (SsqaState, RunResult) {
-        let n = model.n();
-        let r = self.params.replicas;
-        let mut st = SsqaState::init(n, r, seed);
-        for t in 0..steps {
-            let q_t = self.params.q.at(t);
-            let noise_t = self.params.noise.at(t, self.total_steps.max(steps));
-            self.step(model, &mut st, q_t, noise_t);
-        }
+        let mut st = SsqaState::init(model.n(), self.params.replicas, seed);
+        let mut scratch = StepScratch::new(self.params.replicas);
+        self.drive(model, &mut st, &mut scratch, steps);
         let result = Self::harvest(model, &st, steps);
         (st, result)
     }
 
-    /// Pick the best replica of a final state (paper §4.2: "the
-    /// configuration yielding the highest cut value among the R replicas
-    /// is selected").
-    pub fn harvest(model: &IsingModel, st: &SsqaState, steps: usize) -> RunResult {
-        let n = model.n();
-        let r = st.rng.replicas();
-        let mut best_energy = i64::MAX;
-        let mut best_sigma = vec![1i32; n];
-        let mut energies = Vec::with_capacity(r);
-        let mut replica = vec![0i32; n];
-        for k in 0..r {
-            for i in 0..n {
-                replica[i] = st.sigma[i * r + k];
+    /// Run the schedule for every seed, reusing one [`StepScratch`], one
+    /// state's buffers and one CSR traversal across the whole batch.
+    /// Each seed's trajectory is bit-identical to an independent
+    /// [`Self::run`] with that seed (asserted in `annealer::tests`) —
+    /// batching only removes per-run allocation and cold-cache costs.
+    pub fn run_batch(&self, model: &IsingModel, steps: usize, seeds: &[u32]) -> Vec<RunResult> {
+        let Some(&first) = seeds.first() else { return Vec::new() };
+        let mut st = SsqaState::init(model.n(), self.params.replicas, first);
+        let mut scratch = StepScratch::new(self.params.replicas);
+        let mut out = Vec::with_capacity(seeds.len());
+        for (idx, &seed) in seeds.iter().enumerate() {
+            if idx > 0 {
+                st.reinit(seed);
             }
-            let e = model.energy(&replica);
-            energies.push(e);
-            if e < best_energy {
-                best_energy = e;
-                best_sigma.copy_from_slice(&replica);
-            }
+            self.drive(model, &mut st, &mut scratch, steps);
+            out.push(Self::harvest(model, &st, steps));
         }
-        RunResult { best_energy, best_sigma, replica_energies: energies, steps }
+        out
+    }
+
+    /// Step the schedule `steps` times against an initialized state.
+    fn drive(
+        &self,
+        model: &IsingModel,
+        st: &mut SsqaState,
+        scratch: &mut StepScratch,
+        steps: usize,
+    ) {
+        let horizon = self.schedule_horizon(steps);
+        for t in 0..steps {
+            let q_t = self.params.q.at(t);
+            let noise_t = self.params.noise.at(t, horizon);
+            self.step(model, st, scratch, q_t, noise_t);
+        }
+    }
+
+    /// Pick the best replica of a final state (paper §4.2) — the shared
+    /// [`dynamics::harvest`] readout.
+    pub fn harvest(model: &IsingModel, st: &SsqaState, steps: usize) -> RunResult {
+        let h = dynamics::harvest(model, &st.sigma, st.rng.replicas());
+        RunResult {
+            best_energy: h.best_energy,
+            best_sigma: h.best_sigma,
+            replica_energies: h.replica_energies,
+            steps,
+        }
     }
 }
 
 impl Annealer for SsqaEngine {
     fn anneal(&mut self, model: &IsingModel, steps: usize, seed: u32) -> RunResult {
-        self.total_steps = steps;
         self.run(model, steps, seed).1
     }
 
@@ -177,4 +211,3 @@ impl Annealer for SsqaEngine {
         "ssqa-sw"
     }
 }
-

@@ -186,6 +186,82 @@ fn multi_run_aggregates() {
 }
 
 #[test]
+fn schedule_horizon_is_total_steps_max_steps() {
+    use crate::dynamics::StepScratch;
+    let (_, m) = small_model();
+    let p = SsqaParams::gset_default(200);
+    // an engine with a 200-step horizon runs a 50-step *prefix* of the
+    // long schedule…
+    let long = SsqaEngine::new(p, 200);
+    assert_eq!(long.schedule_horizon(50), 200);
+    assert_eq!(long.schedule_horizon(500), 500);
+    let (st_prefix, prefix) = long.run(&m, 50, 9);
+    // …identical to manually stepping with noise normalized over 200
+    let mut st = SsqaState::init(m.n(), p.replicas, 9);
+    let mut scratch = StepScratch::new(p.replicas);
+    for t in 0..50 {
+        long.step(&m, &mut st, &mut scratch, p.q.at(t), p.noise.at(t, 200));
+    }
+    assert_eq!(st.sigma, st_prefix.sigma);
+    assert_eq!(st.is, st_prefix.is);
+    // `anneal` follows the same semantic — no silent renormalization
+    let mut long2 = SsqaEngine::new(p, 200);
+    let a = long2.anneal(&m, 50, 9);
+    assert_eq!(a.replica_energies, prefix.replica_energies);
+    assert_eq!(a.best_sigma, prefix.best_sigma);
+    // and the prefix genuinely differs from a 50-step-horizon schedule
+    let (st_short, _) = SsqaEngine::new(p, 50).run(&m, 50, 9);
+    assert_ne!(st_short.sigma, st_prefix.sigma);
+}
+
+#[test]
+fn run_batch_bit_identical_to_independent_runs() {
+    let (_, m) = small_model();
+    let steps = 80;
+    let p = SsqaParams { replicas: 5, ..SsqaParams::gset_default(steps) };
+    let eng = SsqaEngine::new(p, steps);
+    let seeds = [3u32, 11, 42, 7, 3]; // includes a repeated seed
+    let batch = eng.run_batch(&m, steps, &seeds);
+    assert_eq!(batch.len(), seeds.len());
+    for (res, &seed) in batch.iter().zip(&seeds) {
+        let (_, solo) = eng.run(&m, steps, seed);
+        assert_eq!(res.replica_energies, solo.replica_energies, "seed {seed}");
+        assert_eq!(res.best_sigma, solo.best_sigma, "seed {seed}");
+        assert_eq!(res.best_energy, solo.best_energy, "seed {seed}");
+    }
+    assert!(eng.run_batch(&m, steps, &[]).is_empty());
+}
+
+#[test]
+fn ssqa_state_reinit_equals_fresh_init() {
+    let (_, m) = small_model();
+    let eng = SsqaEngine::new(SsqaParams::gset_default(30), 30);
+    let (mut st, _) = eng.run(&m, 30, 5); // dirty state
+    st.reinit(77);
+    let fresh = SsqaState::init(m.n(), eng.params.replicas, 77);
+    assert_eq!(st.sigma, fresh.sigma);
+    assert_eq!(st.sigma_prev, fresh.sigma_prev);
+    assert_eq!(st.is, fresh.is);
+    assert_eq!(st.rng.states(), fresh.rng.states());
+    assert_eq!(st.t, 0);
+}
+
+#[test]
+fn multi_run_batched_matches_unbatched() {
+    let (g, m) = small_model();
+    let steps = 60;
+    let p = SsqaParams { replicas: 4, ..SsqaParams::gset_default(steps) };
+    let a = multi_run(&g, &m, || SsqaEngine::new(p, steps), steps, 9, 5);
+    let b = multi_run_batched(&g, &m, p, steps, 9, 5);
+    assert_eq!(a.runs, b.runs);
+    assert_eq!(a.best_cut, b.best_cut);
+    assert_eq!(a.min_cut, b.min_cut);
+    assert!((a.mean_cut - b.mean_cut).abs() < 1e-9);
+    assert!((a.std_cut - b.std_cut).abs() < 1e-9);
+    assert!((a.mean_best_energy - b.mean_best_energy).abs() < 1e-9);
+}
+
+#[test]
 fn engines_report_names() {
     assert_eq!(SsqaEngine::new(SsqaParams::gset_default(1), 1).name(), "ssqa-sw");
     assert_eq!(SsaEngine::new(SsaParams::gset_default(), 1).name(), "ssa-sw");

@@ -12,7 +12,7 @@ mod par;
 
 pub use bench::{bench, updates_per_sec, BenchArgs, BenchStats};
 pub use kv::{parse_kv, KvConfig};
-pub use par::{num_threads, par_map};
+pub use par::{chunk_per_worker, num_threads, par_map};
 
 #[cfg(test)]
 mod tests;

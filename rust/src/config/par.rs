@@ -7,6 +7,15 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
+/// Split `items` into one contiguous chunk per worker (at most
+/// `workers` chunks, sized evenly). The single fan-out policy shared by
+/// `annealer::multi_run_batched` and the coordinator's batch
+/// submission, so both produce identically ordered chunks.
+pub fn chunk_per_worker<T>(items: &[T], workers: usize) -> std::slice::Chunks<'_, T> {
+    let w = workers.min(items.len()).max(1);
+    items.chunks(items.len().div_ceil(w).max(1))
+}
+
 /// Parallel map preserving input order.
 ///
 /// `f` must be `Sync` (shared across workers); items are taken by index

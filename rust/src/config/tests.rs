@@ -46,6 +46,21 @@ fn par_map_empty_and_single() {
 }
 
 #[test]
+fn chunk_per_worker_covers_all_items_in_order() {
+    let items: Vec<u32> = (0..7).collect();
+    let chunks: Vec<&[u32]> = chunk_per_worker(&items, 3).collect();
+    assert_eq!(chunks.len(), 3);
+    assert_eq!(chunks.iter().map(|c| c.len()).sum::<usize>(), 7);
+    let flat: Vec<u32> = chunks.concat();
+    assert_eq!(flat, items);
+    // degenerate shapes
+    assert_eq!(chunk_per_worker(&items, 100).count(), 7); // one item per chunk
+    assert_eq!(chunk_per_worker(&items, 0).count(), 1); // clamped to one worker
+    let empty: Vec<u32> = vec![];
+    assert_eq!(chunk_per_worker(&empty, 4).count(), 0);
+}
+
+#[test]
 fn par_map_is_actually_parallel_safe() {
     // hammer with tiny tasks to stress the index claiming
     let items: Vec<u64> = (0..10_000).collect();

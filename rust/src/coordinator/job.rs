@@ -1,8 +1,9 @@
 //! Job descriptions and outcomes.
 
-use crate::annealer::SsqaParams;
-use crate::graph::{Graph, GraphSpec};
+use crate::annealer::{run_seed, SsqaParams};
+use crate::graph::{Graph, GraphSpec, IsingModel};
 use crate::problems::maxcut;
+use std::sync::Arc;
 
 /// What to solve: a named benchmark instance or an inline graph.
 #[derive(Debug, Clone)]
@@ -29,7 +30,7 @@ impl JobSpec {
     }
 }
 
-/// A queued annealing job.
+/// A queued annealing job (one seed).
 #[derive(Debug, Clone)]
 pub struct Job {
     pub id: u64,
@@ -48,67 +49,252 @@ impl Job {
     }
 }
 
-/// Result of an executed job.
+/// A multi-seed job: one problem, many independent seeds. The pool
+/// builds the graph and [`IsingModel`] **once**, shares them across its
+/// workers via `Arc` (instead of the per-[`Job`] rebuild/clone), and
+/// fans the seeds out as [`BatchChunk`]s so a wide batch saturates every
+/// worker thread.
+#[derive(Debug, Clone)]
+pub struct BatchJob {
+    pub spec: JobSpec,
+    pub params: SsqaParams,
+    pub steps: usize,
+    pub seeds: Vec<u32>,
+    /// Backend override; `None` lets the router decide.
+    pub backend: Option<super::BackendKind>,
+}
+
+impl BatchJob {
+    /// A batch carries no id of its own — `WorkerPool::submit_batch`
+    /// assigns one fresh id per chunk and returns them.
+    pub fn new(spec: JobSpec, steps: usize, seeds: Vec<u32>) -> Self {
+        let params = SsqaParams::gset_default(steps);
+        Self { spec, params, steps, seeds, backend: None }
+    }
+
+    /// Batch over the standard sweep seeds (`run_seed(seed0, 0..runs)`,
+    /// the same derivation as `annealer::multi_run`).
+    pub fn from_seed_range(spec: JobSpec, steps: usize, seed0: u32, runs: usize) -> Self {
+        let seeds = (0..runs as u32).map(|r| run_seed(seed0, r)).collect();
+        Self::new(spec, steps, seeds)
+    }
+}
+
+/// One worker's share of a [`BatchJob`]: a contiguous seed slice plus
+/// the `Arc`-shared problem. Built by `WorkerPool::submit_batch`.
+#[derive(Debug, Clone)]
+pub(crate) struct BatchChunk {
+    pub id: u64,
+    pub label: String,
+    pub params: SsqaParams,
+    pub steps: usize,
+    pub seeds: Vec<u32>,
+    pub graph: Arc<Graph>,
+    pub model: Arc<IsingModel>,
+}
+
+/// What flows over the pool's work channel.
+#[derive(Debug, Clone)]
+pub(crate) enum WorkItem {
+    Single(Job),
+    Chunk(BatchChunk),
+}
+
+/// Result of an executed job or batch chunk.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
     pub id: u64,
     pub label: String,
     pub backend: super::BackendKind,
+    /// Best cut over the outcome's seeds.
     pub cut: i64,
+    /// Lowest Ising energy over the outcome's seeds.
     pub best_energy: i64,
+    /// Seeds this outcome covers (1 for a single [`Job`]).
+    pub runs: usize,
+    /// Mean cut over the covered seeds (== `cut` when `runs == 1`).
+    pub mean_cut: f64,
     pub wall: std::time::Duration,
-    /// Modeled FPGA energy for hw-sim jobs (J), if applicable.
+    /// Modeled FPGA energy for hw-sim jobs (J), summed over seeds.
     pub modeled_energy_j: Option<f64>,
+    /// Why execution failed, if it did (cut/energy fields are zeroed).
+    /// Workers must always deliver an outcome — a missing backend (e.g.
+    /// PJRT without artifacts or the `pjrt` feature) reports here
+    /// instead of panicking the worker and hanging `drain`.
+    pub error: Option<String>,
+}
+
+impl JobOutcome {
+    /// An outcome reporting a failed execution.
+    pub(crate) fn failed(
+        id: u64,
+        label: String,
+        backend: super::BackendKind,
+        runs: usize,
+        wall: std::time::Duration,
+        error: String,
+    ) -> Self {
+        Self {
+            id,
+            label,
+            backend,
+            cut: 0,
+            best_energy: 0,
+            runs,
+            mean_cut: 0.0,
+            wall,
+            modeled_energy_j: None,
+            error: Some(error),
+        }
+    }
+}
+
+/// A backend instance reusable across the seeds of a chunk. Building
+/// one is where the amortizable cost lives (PJRT artifact load, hw
+/// resource estimate); running a seed is the per-seed marginal cost.
+enum BackendInstance {
+    Software(crate::annealer::SsqaEngine),
+    Ssa(crate::annealer::SsaEngine),
+    Hw { eng: crate::hw::HwEngine, power_w: f64 },
+    Pjrt(crate::runtime::PjrtAnnealer),
+}
+
+impl BackendInstance {
+    fn build(
+        backend: super::BackendKind,
+        params: SsqaParams,
+        n: usize,
+        steps: usize,
+    ) -> crate::Result<Self> {
+        use crate::annealer::{SsaEngine, SsaParams, SsqaEngine};
+        use crate::hw::{HwConfig, HwEngine};
+
+        Ok(match backend {
+            super::BackendKind::Software => Self::Software(SsqaEngine::new(params, steps)),
+            super::BackendKind::SoftwareSsa => {
+                Self::Ssa(SsaEngine::new(SsaParams::gset_default(), steps))
+            }
+            super::BackendKind::HwSim(delay) => {
+                let eng = HwEngine::new(HwConfig { delay, ..HwConfig::default() }, params);
+                let power_w = crate::resources::ResourceModel::default()
+                    .estimate(n, params.replicas, delay, 1, eng.config.clock_hz)
+                    .power_w;
+                Self::Hw { eng, power_w }
+            }
+            super::BackendKind::Pjrt => {
+                let rt = crate::runtime::PjrtRuntime::new(std::path::Path::new("artifacts"))?;
+                Self::Pjrt(rt.load_annealer(n, params.replicas, params)?)
+            }
+        })
+    }
+
+    /// Run one seed, returning (result, modeled energy).
+    fn run(
+        &mut self,
+        model: &IsingModel,
+        steps: usize,
+        seed: u32,
+    ) -> (crate::annealer::RunResult, Option<f64>) {
+        use crate::annealer::Annealer;
+        match self {
+            Self::Software(eng) => (eng.anneal(model, steps, seed), None),
+            Self::Ssa(eng) => (eng.anneal(model, steps, seed), None),
+            Self::Hw { eng, power_w } => {
+                let res = eng.anneal(model, steps, seed);
+                let energy = *power_w * eng.latency_seconds();
+                (res, Some(energy))
+            }
+            Self::Pjrt(eng) => (eng.anneal(model, steps, seed), None),
+        }
+    }
 }
 
 /// Execute a job on a concrete backend (used by the pool workers).
 pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
-    use crate::annealer::{Annealer, SsaEngine, SsaParams, SsqaEngine};
-    use crate::hw::{HwConfig, HwEngine};
-
     let graph = job.spec.graph();
     let model = maxcut::ising_from_graph(&graph, job.params.j_scale);
     let t0 = std::time::Instant::now();
-    let (res, modeled_energy_j) = match backend {
-        super::BackendKind::Software => {
-            let mut eng = SsqaEngine::new(job.params, job.steps);
-            (eng.anneal(&model, job.steps, job.seed), None)
-        }
-        super::BackendKind::SoftwareSsa => {
-            let mut eng = SsaEngine::new(SsaParams::gset_default(), job.steps);
-            (eng.anneal(&model, job.steps, job.seed), None)
-        }
-        super::BackendKind::HwSim(delay) => {
-            let mut eng =
-                HwEngine::new(HwConfig { delay, ..HwConfig::default() }, job.params);
-            let res = eng.anneal(&model, job.steps, job.seed);
-            let u = crate::resources::ResourceModel::default().estimate(
-                model.n(),
-                job.params.replicas,
-                delay,
+    let mut instance = match BackendInstance::build(backend, job.params, model.n(), job.steps) {
+        Ok(b) => b,
+        Err(e) => {
+            return JobOutcome::failed(
+                job.id,
+                job.spec.label(),
+                backend,
                 1,
-                eng.config.clock_hz,
-            );
-            let energy = u.power_w * eng.latency_seconds();
-            (res, Some(energy))
-        }
-        super::BackendKind::Pjrt => {
-            // compiled lazily per worker; see pool.rs for the cached path
-            let rt = crate::runtime::PjrtRuntime::new(std::path::Path::new("artifacts"))
-                .expect("PJRT runtime (run `make artifacts`)");
-            let mut eng = rt
-                .load_annealer(model.n(), job.params.replicas, job.params)
-                .expect("artifact fits");
-            (eng.anneal(&model, job.steps, job.seed), None)
+                t0.elapsed(),
+                e.to_string(),
+            )
         }
     };
+    let (res, modeled_energy_j) = instance.run(&model, job.steps, job.seed);
+    let cut = res.cut(&graph);
     JobOutcome {
         id: job.id,
         label: job.spec.label(),
         backend,
-        cut: res.cut(&graph),
+        cut,
         best_energy: res.best_energy,
+        runs: 1,
+        mean_cut: cut as f64,
         wall: t0.elapsed(),
         modeled_energy_j,
+        error: None,
+    }
+}
+
+/// Execute one batch chunk: every seed against the shared model, one
+/// outcome aggregating the chunk. The software SSQA backend drives the
+/// whole chunk through `SsqaEngine::run_batch` (shared scratch/state);
+/// the other backends build their engine **once** per chunk (one PJRT
+/// artifact load, one hw resource estimate) and loop seeds against the
+/// `Arc`-shared model.
+pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> JobOutcome {
+    let t0 = std::time::Instant::now();
+    let mut cuts: Vec<i64> = Vec::with_capacity(chunk.seeds.len());
+    let mut best_energy = i64::MAX;
+    let mut modeled_energy_j: Option<f64> = None;
+    match BackendInstance::build(backend, chunk.params, chunk.model.n(), chunk.steps) {
+        Err(e) => {
+            return JobOutcome::failed(
+                chunk.id,
+                chunk.label.clone(),
+                backend,
+                chunk.seeds.len(),
+                t0.elapsed(),
+                e.to_string(),
+            )
+        }
+        Ok(BackendInstance::Software(eng)) => {
+            for res in eng.run_batch(&chunk.model, chunk.steps, &chunk.seeds) {
+                cuts.push(res.cut(&chunk.graph));
+                best_energy = best_energy.min(res.best_energy);
+            }
+        }
+        Ok(mut instance) => {
+            for &seed in &chunk.seeds {
+                let (res, energy) = instance.run(&chunk.model, chunk.steps, seed);
+                cuts.push(res.cut(&chunk.graph));
+                best_energy = best_energy.min(res.best_energy);
+                if let Some(e) = energy {
+                    *modeled_energy_j.get_or_insert(0.0) += e;
+                }
+            }
+        }
+    }
+    let runs = cuts.len();
+    let cut = cuts.iter().copied().max().unwrap_or(0);
+    let mean_cut = cuts.iter().sum::<i64>() as f64 / runs.max(1) as f64;
+    JobOutcome {
+        id: chunk.id,
+        label: chunk.label.clone(),
+        backend,
+        cut,
+        best_energy: if runs == 0 { 0 } else { best_energy },
+        runs,
+        mean_cut,
+        wall: t0.elapsed(),
+        modeled_energy_j,
+        error: None,
     }
 }

@@ -8,29 +8,44 @@ use std::time::Duration;
 /// Aggregated statistics for one backend.
 #[derive(Debug, Clone, Default)]
 pub struct BackendMetrics {
+    /// Outcomes recorded (a batch chunk counts once; failures too).
     pub jobs: u64,
+    /// Seeds covered by successful outcomes (a batch chunk counts its
+    /// whole seed slice).
+    pub runs: u64,
+    /// Failed outcomes (excluded from wall/cut/energy aggregates).
+    pub errors: u64,
     pub total_wall: Duration,
     pub min_wall: Option<Duration>,
     pub max_wall: Option<Duration>,
-    pub total_cut: i64,
+    /// Sum of per-run cuts (a chunk contributes `mean_cut · runs`, not
+    /// its best cut), so `total_cut / runs` is the true per-run mean.
+    pub total_cut: f64,
     pub total_modeled_energy_j: f64,
 }
 
 impl BackendMetrics {
     fn record(&mut self, o: &JobOutcome) {
         self.jobs += 1;
+        if o.error.is_some() {
+            self.errors += 1;
+            return;
+        }
+        self.runs += o.runs as u64;
         self.total_wall += o.wall;
         self.min_wall = Some(self.min_wall.map_or(o.wall, |m| m.min(o.wall)));
         self.max_wall = Some(self.max_wall.map_or(o.wall, |m| m.max(o.wall)));
-        self.total_cut += o.cut;
+        self.total_cut += o.mean_cut * o.runs as f64;
         self.total_modeled_energy_j += o.modeled_energy_j.unwrap_or(0.0);
     }
 
     pub fn mean_wall(&self) -> Duration {
-        if self.jobs == 0 {
+        // failures contribute no wall time, so divide by successes only
+        let ok = self.jobs - self.errors;
+        if ok == 0 {
             Duration::ZERO
         } else {
-            self.total_wall / self.jobs as u32
+            self.total_wall / ok as u32
         }
     }
 }
@@ -59,17 +74,19 @@ impl Metrics {
     pub fn render(&self) -> String {
         let snap = self.snapshot();
         let mut out = String::from(
-            "backend        jobs   mean-wall      min          max          mean-cut   energy(J)\n",
+            "backend        jobs   runs   errs   mean-wall      min          max          mean-cut   energy(J)\n",
         );
         for (name, m) in snap {
             out.push_str(&format!(
-                "{:<14} {:<6} {:<12.3?} {:<12.3?} {:<12.3?} {:<10.1} {:.3e}\n",
+                "{:<14} {:<6} {:<6} {:<6} {:<12.3?} {:<12.3?} {:<12.3?} {:<10.1} {:.3e}\n",
                 name,
                 m.jobs,
+                m.runs,
+                m.errors,
                 m.mean_wall(),
                 m.min_wall.unwrap_or_default(),
                 m.max_wall.unwrap_or_default(),
-                m.total_cut as f64 / m.jobs.max(1) as f64,
+                m.total_cut / m.runs.max(1) as f64,
                 m.total_modeled_energy_j,
             ));
         }

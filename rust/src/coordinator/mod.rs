@@ -14,7 +14,7 @@ mod pool;
 mod router;
 mod server;
 
-pub use job::{Job, JobOutcome, JobSpec};
+pub use job::{BatchJob, Job, JobOutcome, JobSpec};
 pub use metrics::{BackendMetrics, Metrics};
 pub use pool::WorkerPool;
 pub use router::{BackendKind, Router, RoutingPolicy};

@@ -1,27 +1,36 @@
-//! Worker pool: a leader thread feeds jobs over an mpsc channel to N
+//! Worker pool: a leader thread feeds work over an mpsc channel to N
 //! worker threads; outcomes flow back over a result channel in
 //! completion order.
 
-use super::{job, BackendKind, Job, JobOutcome, Metrics, Router};
+use super::job::{BatchChunk, WorkItem};
+use super::{job, BackendKind, BatchJob, Job, JobOutcome, Metrics, Router};
+use crate::problems::maxcut;
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
-/// A running pool. Jobs submitted through [`Self::submit`] are executed
-/// by `workers` threads; call [`Self::drain`] to collect outcomes.
+/// A running pool. Work submitted through [`Self::submit`] /
+/// [`Self::submit_batch`] is executed by `workers` threads; call
+/// [`Self::drain`] to collect outcomes.
 pub struct WorkerPool {
-    tx: Option<mpsc::Sender<(Job, BackendKind)>>,
-    rx_out: mpsc::Receiver<JobOutcome>,
+    tx: Option<mpsc::Sender<(WorkItem, BackendKind)>>,
+    rx_out: Mutex<mpsc::Receiver<JobOutcome>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     router: Router,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    submitted: AtomicU64,
+    /// Ids submitted but not yet drained. Tracking ids (rather than a
+    /// bare counter) makes [`Self::drain`] robust against concurrent
+    /// [`Self::submit`]s: an outcome is only ever accounted against the
+    /// id it belongs to, so a submit racing a drain can never leak its
+    /// outcome into a later drain's count.
+    pending: Mutex<HashSet<u64>>,
 }
 
 impl WorkerPool {
     /// Spawn a pool with `workers` threads.
     pub fn new(workers: usize, router: Router) -> Self {
-        let (tx, rx) = mpsc::channel::<(Job, BackendKind)>();
+        let (tx, rx) = mpsc::channel::<(WorkItem, BackendKind)>();
         let rx = Arc::new(Mutex::new(rx));
         let (tx_out, rx_out) = mpsc::channel::<JobOutcome>();
         let metrics = Arc::new(Metrics::new());
@@ -33,8 +42,11 @@ impl WorkerPool {
             handles.push(std::thread::spawn(move || loop {
                 let msg = rx.lock().unwrap().recv();
                 match msg {
-                    Ok((job, backend)) => {
-                        let outcome = job::execute(&job, backend);
+                    Ok((item, backend)) => {
+                        let outcome = match &item {
+                            WorkItem::Single(job) => job::execute(job, backend),
+                            WorkItem::Chunk(chunk) => job::execute_chunk(chunk, backend),
+                        };
                         metrics.record(backend, &outcome);
                         if tx_out.send(outcome).is_err() {
                             break;
@@ -46,36 +58,97 @@ impl WorkerPool {
         }
         Self {
             tx: Some(tx),
-            rx_out,
+            rx_out: Mutex::new(rx_out),
             handles,
             router,
             metrics,
             next_id: AtomicU64::new(1),
-            submitted: AtomicU64::new(0),
+            pending: Mutex::new(HashSet::new()),
         }
     }
 
-    /// Queue a job; returns its id.
-    pub fn submit(&self, mut job: Job) -> u64 {
-        if job.id == 0 {
-            job.id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        }
-        let backend = self.router.route(&job);
-        let id = job.id;
-        self.submitted.fetch_add(1, Ordering::Relaxed);
+    /// Worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn dispatch(&self, id: u64, item: WorkItem, backend: BackendKind) {
+        // the id enters `pending` before the work is visible to any
+        // worker, so its outcome can never arrive unaccounted; a
+        // duplicate in-flight id would silently lose an outcome in
+        // `drain`, so reject it loudly at the submission site
+        assert!(
+            self.pending.lock().unwrap().insert(id),
+            "job id {id} is already in flight (explicit ids must be unique)"
+        );
         self.tx
             .as_ref()
             .expect("pool already shut down")
-            .send((job, backend))
+            .send((item, backend))
             .expect("workers alive");
+    }
+
+    /// Queue a job; returns its id. Explicit (nonzero) ids must be
+    /// unique among in-flight work — `0` auto-assigns a fresh one.
+    pub fn submit(&self, mut job: Job) -> u64 {
+        if job.id == 0 {
+            job.id = self.fresh_id();
+        }
+        let backend = self.router.route(&job);
+        let id = job.id;
+        self.dispatch(id, WorkItem::Single(job), backend);
         id
     }
 
-    /// Collect all outstanding outcomes (blocks until every submitted
-    /// job has completed).
+    /// Queue a multi-seed batch: the graph and Ising model are built
+    /// once here, shared via `Arc`, and the seeds are split into one
+    /// contiguous chunk per worker thread. Returns the chunk outcome
+    /// ids (each [`JobOutcome`] aggregates its chunk's seeds).
+    pub fn submit_batch(&self, batch: BatchJob) -> Vec<u64> {
+        if batch.seeds.is_empty() {
+            return Vec::new();
+        }
+        let graph = Arc::new(batch.spec.graph());
+        let model = Arc::new(maxcut::ising_from_graph(&graph, batch.params.j_scale));
+        let backend = self.router.route_batch(&batch, graph.num_nodes());
+        let label = batch.spec.label();
+        let mut ids = Vec::new();
+        for seeds in crate::config::chunk_per_worker(&batch.seeds, self.workers()) {
+            let id = self.fresh_id();
+            let chunk = BatchChunk {
+                id,
+                label: label.clone(),
+                params: batch.params,
+                steps: batch.steps,
+                seeds: seeds.to_vec(),
+                graph: Arc::clone(&graph),
+                model: Arc::clone(&model),
+            };
+            self.dispatch(id, WorkItem::Chunk(chunk), backend);
+            ids.push(id);
+        }
+        ids
+    }
+
+    /// Collect outcomes until no submitted work remains outstanding
+    /// (blocks for every id in flight, including work submitted by other
+    /// threads while the drain is in progress).
     pub fn drain(&self) -> Vec<JobOutcome> {
-        let n = self.submitted.swap(0, Ordering::Relaxed);
-        (0..n).map(|_| self.rx_out.recv().expect("worker delivered")).collect()
+        let rx = self.rx_out.lock().unwrap();
+        let mut out = Vec::new();
+        loop {
+            if self.pending.lock().unwrap().is_empty() {
+                break;
+            }
+            let outcome = rx.recv().expect("worker delivered");
+            self.pending.lock().unwrap().remove(&outcome.id);
+            out.push(outcome);
+        }
+        out
     }
 
     /// Shut the pool down, joining all workers.

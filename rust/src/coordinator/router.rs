@@ -66,11 +66,26 @@ impl Router {
         if let Some(b) = job.backend {
             return b;
         }
+        self.route_shape(job.spec.graph().num_nodes(), job.params.replicas)
+    }
+
+    /// Pick a backend for a batch. Same policy as [`Self::route`]; the
+    /// caller passes the node count of the already-built shared graph so
+    /// routing does not rebuild it. A PJRT-routed batch amortizes one
+    /// artifact load over every seed in a chunk.
+    pub fn route_batch(&self, batch: &super::BatchJob, n: usize) -> BackendKind {
+        if let Some(b) = batch.backend {
+            return b;
+        }
+        self.route_shape(n, batch.params.replicas)
+    }
+
+    /// Policy decision for a problem shape (n spins, r replicas).
+    fn route_shape(&self, n: usize, replicas: usize) -> BackendKind {
         match self.policy {
             RoutingPolicy::AllSoftware => BackendKind::Software,
             RoutingPolicy::PreferPjrt { max_n, max_r } => {
-                let n = job.spec.graph().num_nodes();
-                if n <= max_n && job.params.replicas <= max_r {
+                if n <= max_n && replicas <= max_r {
                     BackendKind::Pjrt
                 } else {
                     BackendKind::Software

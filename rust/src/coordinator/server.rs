@@ -4,16 +4,18 @@
 //! Protocol (one request per line, one response per line):
 //!
 //! ```text
-//! solve graph=G11 steps=500 seed=1 [backend=sw|hw|pjrt|ssa] [replicas=20]
+//! solve graph=G11 steps=500 seed=1 [backend=sw|hw|pjrt|ssa] [replicas=20] [runs=100]
 //! metrics
 //! ping
 //! quit
 //! ```
 //!
 //! Responses: `ok id=<id> graph=<label> backend=<name> cut=<cut>
-//! energy=<H> wall_us=<t>` or `err <message>`.
+//! energy=<H> wall_us=<t> [runs=<n> mean_cut=<c>]` or `err <message>`.
+//! `runs > 1` submits a [`BatchJob`]: the model is built once and the
+//! seeds fan out across the pool's workers (`seed`, `seed+7919`, …).
 
-use super::{BackendKind, Job, JobSpec, Router, RoutingPolicy, WorkerPool};
+use super::{BackendKind, BatchJob, Job, JobSpec, Router, RoutingPolicy, WorkerPool};
 use crate::graph::GraphSpec;
 use crate::Result;
 use anyhow::anyhow;
@@ -33,6 +35,7 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
             let mut seed = 1u32;
             let mut backend = None;
             let mut replicas = None;
+            let mut runs = 1usize;
             for tok in parts {
                 let (k, v) = tok
                     .split_once('=')
@@ -51,6 +54,7 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
                     "steps" => steps = v.parse()?,
                     "seed" => seed = v.parse()?,
                     "replicas" => replicas = Some(v.parse()?),
+                    "runs" => runs = v.parse()?,
                     "backend" => {
                         backend = Some(
                             BackendKind::parse(v).ok_or_else(|| anyhow!("unknown backend {v:?}"))?,
@@ -60,6 +64,31 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
                 }
             }
             let spec = JobSpec::Named(graph.ok_or_else(|| anyhow!("graph= required"))?);
+            if runs > 1 {
+                let mut batch = BatchJob::from_seed_range(spec, steps, seed, runs);
+                batch.backend = backend;
+                if let Some(r) = replicas {
+                    batch.params.replicas = r;
+                }
+                pool.submit_batch(batch);
+                let outcomes = pool.drain();
+                if let Some(failed) = outcomes.iter().find_map(|o| o.error.as_deref()) {
+                    return Err(anyhow!("backend failed: {failed}"));
+                }
+                let first = outcomes.first().ok_or_else(|| anyhow!("no outcome"))?;
+                let total_runs: usize = outcomes.iter().map(|o| o.runs).sum();
+                let cut = outcomes.iter().map(|o| o.cut).max().unwrap_or(0);
+                let energy = outcomes.iter().map(|o| o.best_energy).min().unwrap_or(0);
+                let wall_us: u128 = outcomes.iter().map(|o| o.wall.as_micros()).max().unwrap_or(0);
+                let mean_cut = outcomes.iter().map(|o| o.mean_cut * o.runs as f64).sum::<f64>()
+                    / total_runs.max(1) as f64;
+                return Ok(format!(
+                    "ok id={} graph={} backend={} cut={cut} energy={energy} wall_us={wall_us} runs={total_runs} mean_cut={mean_cut:.1}",
+                    first.id,
+                    first.label,
+                    first.backend.name(),
+                ));
+            }
             let mut job = Job::new(0, spec, steps, seed);
             job.backend = backend;
             if let Some(r) = replicas {
@@ -67,6 +96,9 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
             }
             pool.submit(job);
             let outcome = pool.drain().pop().expect("one outcome");
+            if let Some(failed) = outcome.error {
+                return Err(anyhow!("backend failed: {failed}"));
+            }
             Ok(format!(
                 "ok id={} graph={} backend={} cut={} energy={} wall_us={}",
                 outcome.id,

@@ -81,6 +81,101 @@ fn pool_metrics_accumulate() {
 }
 
 #[test]
+fn drain_does_not_lose_outcomes_submitted_concurrently() {
+    // regression for the submit/drain race: the old counter-swap drain
+    // could account a mid-drain submission's outcome against an earlier
+    // submission and leak work across drains
+    let pool = WorkerPool::new(4, Router::new(RoutingPolicy::AllSoftware));
+    for _ in 0..4 {
+        pool.submit(tiny_job(0, 25));
+    }
+    let mut total = 0;
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            for _ in 0..4 {
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                pool.submit(tiny_job(0, 25));
+            }
+        });
+        total += pool.drain().len();
+    });
+    // anything submitted after the in-scope drain observed an empty
+    // pending set is picked up here; nothing is ever lost or double-counted
+    total += pool.drain().len();
+    assert_eq!(total, 8);
+    pool.shutdown();
+}
+
+#[test]
+fn submit_batch_fans_out_and_matches_single_jobs() {
+    let pool = WorkerPool::new(3, Router::new(RoutingPolicy::AllSoftware));
+    let g = torus_2d(4, 6, true, 5);
+    let seeds: Vec<u32> = (0..7u32).map(|i| 3 + i * 13).collect();
+    let mut batch = BatchJob::new(JobSpec::Inline(g), 30, seeds.clone());
+    batch.params.replicas = 4;
+    let ids = pool.submit_batch(batch);
+    assert_eq!(ids.len(), 3, "one chunk per worker");
+    let outcomes = pool.drain();
+    assert_eq!(outcomes.len(), 3);
+    assert_eq!(outcomes.iter().map(|o| o.runs).sum::<usize>(), seeds.len());
+    let batch_best = outcomes.iter().map(|o| o.cut).max().unwrap();
+    let batch_min_energy = outcomes.iter().map(|o| o.best_energy).min().unwrap();
+    // bit-identical to the same seeds as individual jobs
+    let mut single_cuts = Vec::new();
+    let mut single_energy = i64::MAX;
+    for &s in &seeds {
+        let mut j = tiny_job(1, 30);
+        j.seed = s;
+        let o = job::execute(&j, BackendKind::Software);
+        single_cuts.push(o.cut);
+        single_energy = single_energy.min(o.best_energy);
+    }
+    assert_eq!(batch_best, single_cuts.iter().copied().max().unwrap());
+    assert_eq!(batch_min_energy, single_energy);
+    let m = pool.metrics.snapshot();
+    assert_eq!(m.get("sw-ssqa").unwrap().runs, seeds.len() as u64);
+    pool.shutdown();
+}
+
+#[test]
+fn submit_batch_empty_is_noop() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    let empty = BatchJob::new(JobSpec::Named(GraphSpec::G11), 5, vec![]);
+    assert!(pool.submit_batch(empty).is_empty());
+    assert!(pool.drain().is_empty());
+    pool.shutdown();
+}
+
+#[test]
+fn route_batch_honors_override_and_policy() {
+    let g = torus_2d(4, 6, true, 5);
+    let mut batch = BatchJob::new(JobSpec::Inline(g), 10, vec![1, 2, 3]);
+    batch.params.replicas = 4;
+    let r = Router::new(RoutingPolicy::PreferPjrt { max_n: 64, max_r: 8 });
+    assert_eq!(r.route_batch(&batch, 24), BackendKind::Pjrt);
+    assert_eq!(r.route_batch(&batch, 100), BackendKind::Software);
+    batch.backend = Some(BackendKind::HwSim(DelayKind::ShiftReg));
+    assert_eq!(r.route_batch(&batch, 24), BackendKind::HwSim(DelayKind::ShiftReg));
+}
+
+#[test]
+fn execute_batch_on_hw_backend_accumulates_energy() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    let g = torus_2d(4, 6, true, 5);
+    let mut batch = BatchJob::new(JobSpec::Inline(g), 15, vec![1, 2, 3, 4]);
+    batch.params.replicas = 4;
+    batch.backend = Some(BackendKind::HwSim(DelayKind::DualBram));
+    pool.submit_batch(batch);
+    let outcomes = pool.drain();
+    assert_eq!(outcomes.iter().map(|o| o.runs).sum::<usize>(), 4);
+    for o in &outcomes {
+        assert_eq!(o.backend, BackendKind::HwSim(DelayKind::DualBram));
+        assert!(o.modeled_energy_j.unwrap() > 0.0);
+    }
+    pool.shutdown();
+}
+
+#[test]
 fn handle_request_protocol() {
     let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
     assert_eq!(handle_request(&pool, "ping").unwrap(), "pong");
@@ -93,6 +188,44 @@ fn handle_request_protocol() {
     assert!(handle_request(&pool, "bogus").is_err());
     let metrics = handle_request(&pool, "metrics").unwrap();
     assert!(metrics.contains("sw-ssqa"));
+}
+
+#[test]
+fn unavailable_backend_reports_error_instead_of_hanging() {
+    // without artifacts (or the `pjrt` feature) the PJRT backend must
+    // deliver a failed outcome — a panicking worker would leave the id
+    // pending and block drain forever
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    let mut job = tiny_job(0, 5);
+    job.backend = Some(BackendKind::Pjrt);
+    pool.submit(job);
+    let outcomes = pool.drain();
+    assert_eq!(outcomes.len(), 1);
+    assert!(outcomes[0].error.is_some(), "{:?}", outcomes[0]);
+    assert_eq!(outcomes[0].runs, 1);
+    // the pool stays fully operational afterwards
+    pool.submit(tiny_job(0, 5));
+    assert!(pool.drain()[0].error.is_none());
+    pool.shutdown();
+}
+
+#[test]
+#[should_panic(expected = "already in flight")]
+fn duplicate_in_flight_id_is_rejected() {
+    let pool = WorkerPool::new(1, Router::new(RoutingPolicy::AllSoftware));
+    pool.submit(tiny_job(9, 5));
+    pool.submit(tiny_job(9, 5)); // same explicit id while outstanding
+}
+
+#[test]
+fn handle_request_batch_runs() {
+    let pool = WorkerPool::new(3, Router::new(RoutingPolicy::AllSoftware));
+    let resp =
+        handle_request(&pool, "solve graph=G11 steps=5 seed=1 replicas=4 runs=6").unwrap();
+    assert!(resp.starts_with("ok id="), "{resp}");
+    assert!(resp.contains("runs=6"), "{resp}");
+    assert!(resp.contains("mean_cut="), "{resp}");
+    assert!(resp.contains("backend=sw-ssqa"), "{resp}");
 }
 
 #[test]

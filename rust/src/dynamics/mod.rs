@@ -1,0 +1,156 @@
+//! The shared, bit-exact SSQA cell-update datapath (DESIGN.md §3.1).
+//!
+//! This module is the **single** implementation of the paper's Eq. (6)
+//! spin-gate arithmetic. Every execution layer — the software engines
+//! ([`crate::annealer::SsqaEngine`], [`crate::annealer::SsaEngine`]),
+//! the cycle-accurate hardware model ([`crate::hw::HwEngine`]) and the
+//! batched runners — delegates here, so cross-layer bit-exactness is
+//! structural rather than merely asserted by tests: there is exactly one
+//! saturation clamp, one sign rule and one σ-init convention in the
+//! crate.
+//!
+//! The decomposition mirrors the hardware spin gate (Fig. 5):
+//!
+//! * Eq. (6a): `I_i = Σ_j J_ij σ_j + h_i + n_rnd·r + Q·σ'` — assembled
+//!   by [`CellUpdate::input`] from the locally-accumulated field, the
+//!   noise draw and the replica-coupling read.
+//! * Eq. (6b): the saturating accumulator `Is ← clamp(Is + I_i)` with
+//!   the asymmetric `[−I0, I0−α]` range — [`CellUpdate::saturate`].
+//! * Eq. (6c): `σ = sign(Is)` with `sign(0) = +1` — [`CellUpdate::sign`].
+//!
+//! [`StepScratch`] carries the per-row working buffers (accumulator,
+//! delayed-σ latch, noise draws) so hot loops run allocation-free, and
+//! [`init_sigma`]/[`harvest`] are the shared run-boundary conventions.
+
+mod scratch;
+
+pub use scratch::StepScratch;
+
+use crate::graph::IsingModel;
+use crate::rng::RngMatrix;
+
+/// The Eq. (6) cell update: saturation threshold `I0` (pseudo inverse
+/// temperature) and saturation offset `α` (1 throughout the paper).
+///
+/// Copy-cheap; build one per run from the engine parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellUpdate {
+    /// Saturation threshold `I0`.
+    pub i0: i32,
+    /// Saturation offset `α`.
+    pub alpha: i32,
+}
+
+impl CellUpdate {
+    pub fn new(i0: i32, alpha: i32) -> Self {
+        Self { i0, alpha }
+    }
+
+    /// Eq. (6a): compose the spin-gate input from the accumulated local
+    /// field (`Σ_j J_ij σ_j + h_i`, already summed by the caller's MAC
+    /// loop), the signed noise draw `rnd ∈ {−1, +1}` scaled by the
+    /// schedule magnitude, and the replica-coupling term `Q·σ'`.
+    /// Single-network SSA passes `q_t = 0`.
+    #[inline(always)]
+    pub fn input(field: i32, noise_t: i32, rnd: i32, q_t: i32, coupled: i32) -> i32 {
+        field + noise_t * rnd + q_t * coupled
+    }
+
+    /// Eq. (6b): the saturating accumulator. The upper clamp is
+    /// `I0 − α`, the lower clamp `−I0` — the asymmetry is the hardware's
+    /// two's-complement trick that keeps `sign(Is)` a plain MSB test.
+    #[inline(always)]
+    pub fn saturate(&self, is_old: i32, inp: i32) -> i32 {
+        let s = is_old + inp;
+        if s >= self.i0 {
+            self.i0 - self.alpha
+        } else if s < -self.i0 {
+            -self.i0
+        } else {
+            s
+        }
+    }
+
+    /// Eq. (6c): `σ = sign(Is)`, with `sign(0) = +1` (MSB convention).
+    #[inline(always)]
+    pub fn sign(is_new: i32) -> i32 {
+        if is_new >= 0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Fused Eq. (6b)+(6c): advance the accumulator in place and return
+    /// the new spin.
+    #[inline(always)]
+    pub fn apply(&self, is: &mut i32, inp: i32) -> i32 {
+        let is_new = self.saturate(*is, inp);
+        *is = is_new;
+        Self::sign(is_new)
+    }
+}
+
+/// Deterministic initial spins shared by every layer (DESIGN.md §3.2):
+/// `σ_i,k(0) = +1` iff the MSB of the cell's seeded RNG state is 0.
+/// Returns the row-major `[spin][replica]` layout of the engines; the
+/// hardware model transposes into its per-replica delay lines.
+pub fn init_sigma(rng: &RngMatrix) -> Vec<i32> {
+    let (n, r) = (rng.n(), rng.replicas());
+    let mut sigma = vec![0i32; n * r];
+    init_sigma_into(rng, &mut sigma);
+    sigma
+}
+
+/// Allocation-free form of [`init_sigma`] for state reuse across batched
+/// seeds. `sigma` must be `n × replicas` long.
+pub fn init_sigma_into(rng: &RngMatrix, sigma: &mut [i32]) {
+    let (n, r) = (rng.n(), rng.replicas());
+    assert_eq!(sigma.len(), n * r, "sigma buffer shape mismatch");
+    for i in 0..n {
+        for k in 0..r {
+            sigma[i * r + k] = if rng.state(i, k) >> 31 == 1 { -1 } else { 1 };
+        }
+    }
+}
+
+/// Final-state readout of one run (paper §4.2: "the configuration
+/// yielding the highest cut value among the R replicas is selected" —
+/// equivalently the lowest Ising energy).
+#[derive(Debug, Clone)]
+pub struct Harvest {
+    /// Lowest Ising energy over the replicas.
+    pub best_energy: i64,
+    /// Configuration achieving it (length N).
+    pub best_sigma: Vec<i32>,
+    /// Final energy of every replica, in replica order.
+    pub replica_energies: Vec<i64>,
+}
+
+/// Evaluate every replica column of a row-major `[spin][replica]` state
+/// and pick the lowest-energy one. Shared by the software engines and
+/// the hardware model (which first reads its delay lines back into the
+/// row-major layout).
+pub fn harvest(model: &IsingModel, sigma: &[i32], replicas: usize) -> Harvest {
+    let n = model.n();
+    assert_eq!(sigma.len(), n * replicas, "state shape mismatch");
+    let mut best_energy = i64::MAX;
+    let mut best_sigma = vec![1i32; n];
+    let mut energies = Vec::with_capacity(replicas);
+    let mut replica = vec![0i32; n];
+    for k in 0..replicas {
+        for (i, slot) in replica.iter_mut().enumerate() {
+            *slot = sigma[i * replicas + k];
+        }
+        let e = model.energy(&replica);
+        energies.push(e);
+        if e < best_energy {
+            best_energy = e;
+            best_sigma.copy_from_slice(&replica);
+        }
+    }
+    Harvest { best_energy, best_sigma, replica_energies: energies }
+}
+
+#[cfg(test)]
+mod tests;

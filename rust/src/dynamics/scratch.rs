@@ -1,0 +1,43 @@
+//! Reusable per-step working buffers for the replica-parallel hot loop.
+
+/// Scratch rows for one spin-window update: the replica-parallel
+/// accumulator, the latched σ(t−1) coupling row and the vectorized noise
+/// draws. Hoisted out of the step loop so `SsqaEngine::step` (and the
+/// batched runners) perform zero heap allocations per step; one scratch
+/// serves any number of sequential runs of the same replica count, and
+/// [`Self::ensure`] resizes it when an engine with a different R reuses
+/// it.
+#[derive(Debug, Clone, Default)]
+pub struct StepScratch {
+    /// `Σ_j J_ij σ_j,k(t) + h_i` per replica.
+    pub acc: Vec<i32>,
+    /// σ_i,·(t−1) latched before the in-place overwrite.
+    pub prev_row: Vec<i32>,
+    /// Per-replica ±1 noise draws for the current row.
+    pub noise_row: Vec<i32>,
+}
+
+impl StepScratch {
+    /// Scratch sized for `replicas` gates.
+    pub fn new(replicas: usize) -> Self {
+        Self {
+            acc: vec![0; replicas],
+            prev_row: vec![0; replicas],
+            noise_row: vec![0; replicas],
+        }
+    }
+
+    /// Resize (once, amortized) to `replicas`; no-op when already sized.
+    pub fn ensure(&mut self, replicas: usize) {
+        if self.acc.len() != replicas {
+            self.acc.resize(replicas, 0);
+            self.prev_row.resize(replicas, 0);
+            self.noise_row.resize(replicas, 0);
+        }
+    }
+
+    /// Current replica capacity.
+    pub fn replicas(&self) -> usize {
+        self.acc.len()
+    }
+}

@@ -1,0 +1,103 @@
+use super::*;
+use crate::graph::random_graph;
+use crate::problems::maxcut;
+
+#[test]
+fn saturate_clamps_to_asymmetric_range() {
+    let cell = CellUpdate::new(24, 1);
+    // inside the range: plain accumulation
+    assert_eq!(cell.saturate(5, 3), 8);
+    assert_eq!(cell.saturate(-5, -3), -8);
+    // upper clamp is I0 − α
+    assert_eq!(cell.saturate(20, 100), 23);
+    assert_eq!(cell.saturate(23, 1), 23);
+    // lower clamp is −I0
+    assert_eq!(cell.saturate(-20, -100), -24);
+    assert_eq!(cell.saturate(-24, 0), -24);
+    // boundary: s == I0 clamps, s == −I0 does not (range is [−I0, I0))
+    assert_eq!(cell.saturate(0, 24), 23);
+    assert_eq!(cell.saturate(0, -24), -24);
+}
+
+#[test]
+fn saturate_honors_alpha_zero() {
+    let cell = CellUpdate::new(16, 0);
+    assert_eq!(cell.saturate(10, 100), 16);
+    assert_eq!(cell.saturate(-10, -100), -16);
+}
+
+#[test]
+fn sign_is_msb_convention() {
+    assert_eq!(CellUpdate::sign(0), 1);
+    assert_eq!(CellUpdate::sign(17), 1);
+    assert_eq!(CellUpdate::sign(-1), -1);
+}
+
+#[test]
+fn input_composes_eq6a() {
+    // field + noise·rnd + Q·σ'
+    assert_eq!(CellUpdate::input(10, 3, -1, 2, 1), 10 - 3 + 2);
+    // SSA: no coupling term
+    assert_eq!(CellUpdate::input(-4, 5, 1, 0, 0), 1);
+}
+
+#[test]
+fn apply_advances_accumulator_and_returns_spin() {
+    let cell = CellUpdate::new(8, 1);
+    let mut is = 6;
+    let s = cell.apply(&mut is, 5);
+    assert_eq!(is, 7); // clamped to I0 − α
+    assert_eq!(s, 1);
+    let s = cell.apply(&mut is, -20);
+    assert_eq!(is, -8);
+    assert_eq!(s, -1);
+}
+
+#[test]
+fn init_sigma_matches_rng_msb() {
+    let rng = crate::rng::RngMatrix::seeded(42, 7, 3);
+    let sigma = init_sigma(&rng);
+    assert_eq!(sigma.len(), 21);
+    for i in 0..7 {
+        for k in 0..3 {
+            let expect = if rng.state(i, k) >> 31 == 1 { -1 } else { 1 };
+            assert_eq!(sigma[i * 3 + k], expect);
+        }
+    }
+    // in-place form writes the identical pattern
+    let mut buf = vec![0; 21];
+    init_sigma_into(&rng, &mut buf);
+    assert_eq!(buf, sigma);
+}
+
+#[test]
+fn harvest_picks_lowest_energy_replica() {
+    let g = random_graph(10, 20, &[-1, 1], 3);
+    let model = maxcut::ising_from_graph(&g, 4);
+    let r = 4;
+    // hand-build a state whose columns are distinct configurations
+    let mut sigma = vec![1i32; 10 * r];
+    for i in 0..10 {
+        sigma[i * r + 1] = if i % 2 == 0 { 1 } else { -1 };
+        sigma[i * r + 2] = -1;
+        sigma[i * r + 3] = if i < 5 { -1 } else { 1 };
+    }
+    let h = harvest(&model, &sigma, r);
+    assert_eq!(h.replica_energies.len(), r);
+    let min = *h.replica_energies.iter().min().unwrap();
+    assert_eq!(h.best_energy, min);
+    assert_eq!(model.energy(&h.best_sigma), min);
+    // first replica column is all-ones
+    let ones = [1i32; 10];
+    assert_eq!(h.replica_energies[0], model.energy(&ones));
+}
+
+#[test]
+fn scratch_resizes_once_and_reports_capacity() {
+    let mut s = StepScratch::new(4);
+    assert_eq!(s.replicas(), 4);
+    s.ensure(4);
+    assert_eq!(s.acc.len(), 4);
+    s.ensure(9);
+    assert_eq!((s.acc.len(), s.prev_row.len(), s.noise_row.len()), (9, 9, 9));
+}

@@ -10,7 +10,7 @@
 //!   executable A/B: identical trajectories, diverging cost curves.
 
 use super::ExpContext;
-use crate::annealer::{multi_run, Annealer, PdSsqaEngine, SsqaEngine, SsqaParams};
+use crate::annealer::{multi_run, multi_run_batched, Annealer, PdSsqaEngine, SsqaParams};
 use crate::graph::{quantize, GraphSpec};
 use crate::hw::{CompressionReport, DelayKind, HwConfig, HwEngine};
 use crate::problems::maxcut;
@@ -72,8 +72,7 @@ pub fn quantization(ctx: &ExpContext) -> Result<String> {
     let g = GraphSpec::G14.build();
     let params = SsqaParams::gset_default(steps);
     let full_model = maxcut::ising_from_graph(&g, params.j_scale);
-    let full =
-        multi_run(&g, &full_model, || SsqaEngine::new(params, steps), steps, runs, ctx.seed);
+    let full = multi_run_batched(&g, &full_model, params, steps, runs, ctx.seed);
     let mut rows = Vec::new();
     for bits in [2u32, 3, 4] {
         let qrep = quantize(&g, bits);
@@ -101,7 +100,7 @@ pub fn quantization(ctx: &ExpContext) -> Result<String> {
             crate::graph::Graph::new(n, edges)
         };
         let model = maxcut::ising_from_graph(&qg, scale);
-        let stats = multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, runs, ctx.seed);
+        let stats = multi_run_batched(&g, &model, params, steps, runs, ctx.seed);
         let _ = writeln!(
             md,
             "| {bits} | {:.3} | {:.1} | {:+.1} |",
@@ -129,8 +128,7 @@ pub fn partial_deactivation(ctx: &ExpContext) -> Result<String> {
         let g = spec.build();
         let params = SsqaParams::gset_default(steps);
         let model = maxcut::ising_from_graph(&g, params.j_scale);
-        let plain =
-            multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, runs, ctx.seed);
+        let plain = multi_run_batched(&g, &model, params, steps, runs, ctx.seed);
         let pd3 = multi_run(
             &g,
             &model,

@@ -2,7 +2,7 @@
 //! cut-quality columns).
 
 use super::ExpContext;
-use crate::annealer::{multi_run, SsaEngine, SsaParams, SsqaEngine, SsqaParams};
+use crate::annealer::{multi_run, multi_run_batched, SsaEngine, SsaParams, SsqaParams};
 use crate::graph::GraphSpec;
 use crate::problems::maxcut;
 use crate::Result;
@@ -55,7 +55,7 @@ fn sweep_point(
     let g = spec.build();
     let params = SsqaParams { replicas, ..SsqaParams::gset_default(steps) };
     let model = maxcut::ising_from_graph(&g, params.j_scale);
-    let stats = multi_run(&g, &model, || SsqaEngine::new(params, steps), steps, runs, seed);
+    let stats = multi_run_batched(&g, &model, params, steps, runs, seed);
     (stats.mean_cut, stats.best_cut, stats.std_cut)
 }
 
@@ -170,14 +170,7 @@ pub fn table5_cuts(ctx: &ExpContext) -> Result<Vec<(String, i64, f64, i64, f64)>
         let g = spec.build();
         let params = SsqaParams::gset_default(ssqa_steps);
         let model = maxcut::ising_from_graph(&g, params.j_scale);
-        let ssqa = multi_run(
-            &g,
-            &model,
-            || SsqaEngine::new(params, ssqa_steps),
-            ssqa_steps,
-            runs,
-            ctx.seed,
-        );
+        let ssqa = multi_run_batched(&g, &model, params, ssqa_steps, runs, ctx.seed);
         let ssa = multi_run(
             &g,
             &model,

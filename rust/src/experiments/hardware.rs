@@ -226,14 +226,8 @@ pub fn table6(ctx: &ExpContext) -> Result<String> {
     let du = rm.estimate(800, R, DelayKind::DualBram, 1, F166);
     let lat = fpga_latency_s(&model, ctx.steps, DelayKind::DualBram, 1, F166);
     let e = energy_j(du.power_w, lat);
-    let stats = crate::annealer::multi_run(
-        &g,
-        &model,
-        || SsqaEngine::new(params, ctx.steps),
-        ctx.steps,
-        ctx.runs_eff(),
-        ctx.seed,
-    );
+    let stats =
+        crate::annealer::multi_run_batched(&g, &model, params, ctx.steps, ctx.runs_eff(), ctx.seed);
     let mut md = String::from("## Table 6 — FPGA implementation comparison (G11)\n\n");
     let _ = writeln!(
         md,
@@ -293,14 +287,7 @@ pub fn fig12(ctx: &ExpContext) -> Result<String> {
     let runs = ctx.runs_eff().min(if ctx.quick { 3 } else { 20 });
     let ssa_steps = if ctx.quick { 1_000 } else { 10_000 };
 
-    let ssqa = crate::annealer::multi_run(
-        &g,
-        &model,
-        || SsqaEngine::new(params, ctx.steps),
-        ctx.steps,
-        runs,
-        ctx.seed,
-    );
+    let ssqa = crate::annealer::multi_run_batched(&g, &model, params, ctx.steps, runs, ctx.seed);
     let ssa = crate::annealer::multi_run(
         &g,
         &model,

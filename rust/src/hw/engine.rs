@@ -18,6 +18,7 @@ use super::bram::Bram;
 use super::delay::{DelayKind, DelayLine, DelayStats, DualBramDelay, ShiftRegDelay};
 use super::scheduler::{cycles_per_step, Scheduler};
 use crate::annealer::{Annealer, RunResult, SsqaEngine, SsqaParams};
+use crate::dynamics::{self, CellUpdate};
 use crate::graph::IsingModel;
 use crate::rng::RngMatrix;
 
@@ -104,20 +105,17 @@ impl HwEngine {
         // and skips placeholders by address generation).
         let mut j_bram = Bram::from_words(model.j_dense().to_vec());
         let mut h_bram = Bram::from_words(model.h.clone());
-        // σ delay line + Is banks per replica.
+        // σ delay line + Is banks per replica. Initial spins come from
+        // the shared cross-layer convention; the row-major layout is
+        // transposed into one column per replica delay line.
         let rng_init = RngMatrix::seeded(seed, n, r);
-        let mut sigma_init = vec![vec![0i32; n]; r];
-        for (k, rep) in sigma_init.iter_mut().enumerate() {
-            for (i, slot) in rep.iter_mut().enumerate() {
-                *slot = if rng_init.state(i, k) >> 31 == 1 { -1 } else { 1 };
-            }
-        }
-        let mut delays: Vec<Box<dyn DelayLine>> = sigma_init
-            .iter()
-            .map(|init| -> Box<dyn DelayLine> {
+        let flat_init = dynamics::init_sigma(&rng_init);
+        let mut delays: Vec<Box<dyn DelayLine>> = (0..r)
+            .map(|k| -> Box<dyn DelayLine> {
+                let column: Vec<i32> = (0..n).map(|i| flat_init[i * r + k]).collect();
                 match self.config.delay {
-                    DelayKind::DualBram => Box::new(DualBramDelay::new(init)),
-                    DelayKind::ShiftReg => Box::new(ShiftRegDelay::new(init)),
+                    DelayKind::DualBram => Box::new(DualBramDelay::new(&column)),
+                    DelayKind::ShiftReg => Box::new(ShiftRegDelay::new(&column)),
                 }
             })
             .collect();
@@ -130,6 +128,7 @@ impl HwEngine {
 
         let mut sched = Scheduler::new(params.q, params.noise, steps);
         let mut stats = HwStats::default();
+        let cell = CellUpdate::new(params.i0, params.alpha);
 
         // scratch accumulators: one per replica gate
         let mut acc = vec![0i32; r];
@@ -161,21 +160,15 @@ impl HwEngine {
                     *d = delays[(k + 1) % r].read_delayed(i);
                 }
                 for k in 0..r {
-                    let noise = noise_t * rng.draw_pm1(i, k);
+                    let rnd = rng.draw_pm1(i, k);
                     stats.rng_draws += 1;
-                    let inp = acc[k] + h_i + noise + q_t * delayed[k];
+                    // Eq. (6a–c) — the shared dynamics datapath; this
+                    // model contributes only the memory traffic around it
+                    let inp = CellUpdate::input(acc[k] + h_i, noise_t, rnd, q_t, delayed[k]);
                     let is_old = is_banks[k][is_parity].read(i);
-                    let s = is_old + inp;
-                    let is_new = if s >= params.i0 {
-                        params.i0 - params.alpha
-                    } else if s < -params.i0 {
-                        -params.i0
-                    } else {
-                        s
-                    };
+                    let is_new = cell.saturate(is_old, inp);
                     is_banks[k][1 - is_parity].write(i, is_new);
-                    let sigma_new = if is_new >= 0 { 1 } else { -1 };
-                    delays[k].write_new(i, sigma_new);
+                    delays[k].write_new(i, CellUpdate::sign(is_new));
                     stats.spin_updates += 1;
                 }
                 sched.update_cycle(i);
@@ -191,23 +184,15 @@ impl HwEngine {
         // ---- harvest ---------------------------------------------------
         // Read back final replica states through the delay lines' σ(t)
         // generation (one more read pass, uncounted in cycles — the real
-        // hardware DMAs the final bank out).
-        let mut best_energy = i64::MAX;
-        let mut best_sigma = vec![1i32; n];
-        let mut energies = Vec::with_capacity(r);
-        let mut replica = vec![0i32; n];
+        // hardware DMAs the final bank out), then apply the shared
+        // best-replica readout.
+        let mut final_sigma = vec![0i32; n * r];
         for (k, d) in delays.iter_mut().enumerate() {
-            for (i, slot) in replica.iter_mut().enumerate() {
-                *slot = d.read_state(i);
+            for i in 0..n {
+                final_sigma[i * r + k] = d.read_state(i);
             }
-            let e = model.energy(&replica);
-            energies.push(e);
-            if e < best_energy {
-                best_energy = e;
-                best_sigma.copy_from_slice(&replica);
-            }
-            let _ = k;
         }
+        let harvest = dynamics::harvest(model, &final_sigma, r);
 
         // ---- stats -----------------------------------------------------
         stats.cycles = sched.cycles.div_ceil(self.config.parallel as u64);
@@ -230,7 +215,12 @@ impl HwEngine {
         }
         self.stats = stats;
 
-        RunResult { best_energy, best_sigma, replica_energies: energies, steps }
+        RunResult {
+            best_energy: harvest.best_energy,
+            best_sigma: harvest.best_sigma,
+            replica_energies: harvest.replica_energies,
+            steps,
+        }
     }
 
     /// Reference check: run the software engine with identical

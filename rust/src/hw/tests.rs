@@ -198,35 +198,27 @@ fn cycles_formula_matches_paper_g11_case() {
 }
 
 #[test]
-fn hw_dual_bram_bit_exact_with_software_engine() {
+fn hw_bit_exact_with_software_engine_both_delays() {
+    // in-module smoke version of the full property test
+    // (tests/proptests.rs::prop_hw_sw_bit_exact): both delay
+    // architectures × replica counts including a non-power-of-two
     let g = torus_2d(4, 8, true, 33);
     let m = maxcut::ising_from_graph(&g, 8);
     let steps = 60;
-    let p = params(steps);
-    let mut hw = HwEngine::new(HwConfig::default(), p);
-    let hw_res = hw.run(&m, steps, 77);
-    let sw = SsqaEngine::new(p, steps);
-    let (sw_state, sw_res) = sw.run(&m, steps, 77);
-    assert_eq!(hw_res.best_energy, sw_res.best_energy);
-    assert_eq!(hw_res.replica_energies, sw_res.replica_energies);
-    assert_eq!(hw_res.best_sigma, sw_res.best_sigma);
-    let _ = sw_state;
-}
-
-#[test]
-fn hw_shift_reg_bit_exact_with_software_engine() {
-    let g = torus_2d(4, 6, true, 34);
-    let m = maxcut::ising_from_graph(&g, 8);
-    let steps = 40;
-    let p = params(steps);
-    let mut hw = HwEngine::new(
-        HwConfig { delay: DelayKind::ShiftReg, ..HwConfig::default() },
-        p,
-    );
-    let hw_res = hw.run(&m, steps, 5);
-    let (_, sw_res) = SsqaEngine::new(p, steps).run(&m, steps, 5);
-    assert_eq!(hw_res.best_energy, sw_res.best_energy);
-    assert_eq!(hw_res.best_sigma, sw_res.best_sigma);
+    for delay in [DelayKind::DualBram, DelayKind::ShiftReg] {
+        for replicas in [3usize, 6] {
+            let p = SsqaParams { replicas, ..params(steps) };
+            let mut hw = HwEngine::new(HwConfig { delay, ..HwConfig::default() }, p);
+            let hw_res = hw.run(&m, steps, 77);
+            let (_, sw_res) = SsqaEngine::new(p, steps).run(&m, steps, 77);
+            assert_eq!(hw_res.best_energy, sw_res.best_energy, "{delay:?} R={replicas}");
+            assert_eq!(
+                hw_res.replica_energies, sw_res.replica_energies,
+                "{delay:?} R={replicas}"
+            );
+            assert_eq!(hw_res.best_sigma, sw_res.best_sigma, "{delay:?} R={replicas}");
+        }
+    }
 }
 
 #[test]

@@ -11,6 +11,8 @@
 //! * [`graph`] — Ising model substrate, G-set parser, instance generators.
 //! * [`problems`] — MAX-CUT / QUBO / TSP / graph-isomorphism / coloring
 //!   encodings (paper §5.2 and §6 future work).
+//! * [`dynamics`] — the single Eq. (6a–c) cell-update datapath every
+//!   execution layer shares (bit-exactness by construction).
 //! * [`annealer`] — software SSQA/SSA/SA engines (matvec form of Eq. 6).
 //! * [`hw`] — cycle-accurate model of the paper's FPGA micro-architecture:
 //!   spin-serial/replica-parallel spin gates with shift-register or
@@ -25,6 +27,7 @@
 pub mod annealer;
 pub mod config;
 pub mod coordinator;
+pub mod dynamics;
 pub mod energy;
 pub mod experiments;
 pub mod graph;

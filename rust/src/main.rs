@@ -112,25 +112,39 @@ fn cmd_solve(f: &BTreeMap<String, String>) -> Result<()> {
 
     let pool =
         WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
-    for r in 0..runs {
-        let mut job = ssqa::coordinator::Job::new(
-            0,
+    if runs > 1 {
+        // one BatchJob: the model is built once and the seeds fan out
+        // across the pool's workers as Arc-sharing chunks
+        let mut batch = ssqa::coordinator::BatchJob::from_seed_range(
             ssqa::coordinator::JobSpec::Named(graph),
             steps,
-            seed.wrapping_add(r as u32 * 7919),
+            seed,
+            runs,
         );
+        batch.params = SsqaParams { replicas, ..SsqaParams::gset_default(steps) };
+        batch.backend = Some(backend);
+        pool.submit_batch(batch);
+    } else if runs == 1 {
+        let mut job =
+            ssqa::coordinator::Job::new(0, ssqa::coordinator::JobSpec::Named(graph), steps, seed);
         job.params = SsqaParams { replicas, ..SsqaParams::gset_default(steps) };
         job.backend = Some(backend);
         pool.submit(job);
-    }
+    } // runs == 0: nothing to submit
     let mut outcomes = pool.drain();
     outcomes.sort_by_key(|o| o.id);
     for o in &outcomes {
+        if let Some(err) = &o.error {
+            println!("{} backend={} FAILED: {err}", o.label, o.backend.name());
+            continue;
+        }
         println!(
-            "{} backend={} cut={} energy={} wall={:?}{}",
+            "{} backend={} cut={} mean_cut={:.1} runs={} energy={} wall={:?}{}",
             o.label,
             o.backend.name(),
             o.cut,
+            o.mean_cut,
+            o.runs,
             o.best_energy,
             o.wall,
             o.modeled_energy_j
@@ -146,7 +160,7 @@ fn cmd_solve(f: &BTreeMap<String, String>) -> Result<()> {
 /// (I0, noise_start, noise_end, q_max) on one instance and prints mean
 /// cuts, plus an SA/SSA reference and the best cut found anywhere.
 fn cmd_calibrate(f: &BTreeMap<String, String>) -> Result<()> {
-    use ssqa::annealer::{multi_run, NoiseSchedule, QSchedule, SaEngine, SsqaEngine};
+    use ssqa::annealer::{multi_run, multi_run_batched, NoiseSchedule, QSchedule, SaEngine};
     let graph = graph_spec(f.get("graph").map(String::as_str).unwrap_or("G11"))?;
     let steps: usize = get(f, "steps", 500)?;
     let runs: usize = get(f, "runs", 20)?;
@@ -180,14 +194,7 @@ fn cmd_calibrate(f: &BTreeMap<String, String>) -> Result<()> {
                         q: QSchedule::linear(0, qmax, steps),
                         j_scale,
                     };
-                    let stats = multi_run(
-                        &g,
-                        &model,
-                        || SsqaEngine::new(params, steps),
-                        steps,
-                        runs,
-                        0x5EED,
-                    );
+                    let stats = multi_run_batched(&g, &model, params, steps, runs, 0x5EED);
                     best_found = best_found.max(stats.best_cut);
                     if stats.mean_cut > best_cfg.4 {
                         best_cfg = (i0, nz0, nz1, qmax, stats.mean_cut);

@@ -106,16 +106,22 @@ pub struct RngMatrix {
 impl RngMatrix {
     /// Seed all cells: `state[i][k] = splitmix32(seed + i*GOLD + k*MIX) | 1`.
     pub fn seeded(seed: u32, n: usize, r: usize) -> Self {
-        let mut states = Vec::with_capacity(n * r);
-        for i in 0..n {
-            for k in 0..r {
+        let mut m = Self { n, r, states: vec![0; n * r] };
+        m.reseed(seed);
+        m
+    }
+
+    /// Re-seed every cell in place (identical contract to [`Self::seeded`])
+    /// — allocation-free state reuse for batched multi-seed runs.
+    pub fn reseed(&mut self, seed: u32) {
+        for i in 0..self.n {
+            for k in 0..self.r {
                 let mixed = seed
                     .wrapping_add((i as u32).wrapping_mul(0x9E3779B9))
                     .wrapping_add((k as u32).wrapping_mul(0x85EBCA6B));
-                states.push(splitmix32(mixed) | 1);
+                self.states[i * self.r + k] = splitmix32(mixed) | 1;
             }
         }
-        Self { n, r, states }
     }
 
     pub fn n(&self) -> usize {

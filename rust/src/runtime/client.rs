@@ -1,9 +1,9 @@
 //! PJRT client wrapper and the artifact-backed annealer backend.
 
 use super::artifact::{ArtifactEntry, ArtifactManifest};
+use super::state::PjrtState;
 use crate::annealer::{Annealer, RunResult, SsqaParams};
 use crate::graph::IsingModel;
-use crate::rng::RngMatrix;
 use crate::Result;
 use anyhow::{anyhow, Context};
 use std::path::Path;
@@ -12,56 +12,6 @@ use std::path::Path;
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     manifest: ArtifactManifest,
-}
-
-/// Annealer state held as host mirrors of the device buffers
-/// (row-major `[spin][replica]`, matching the artifact layout).
-#[derive(Debug, Clone)]
-pub struct PjrtState {
-    pub n: usize,
-    pub r: usize,
-    pub sigma: Vec<i32>,
-    pub sigma_prev: Vec<i32>,
-    pub is: Vec<i32>,
-    pub rng: Vec<u32>,
-}
-
-impl PjrtState {
-    /// Initial state per the bit-exactness contract (identical to
-    /// `SsqaState::init` and `ref.init_state`).
-    pub fn init(n: usize, r: usize, seed: u32) -> Self {
-        let rng = RngMatrix::seeded(seed, n, r);
-        let sigma: Vec<i32> = (0..n * r)
-            .map(|c| if rng.state(c / r, c % r) >> 31 == 1 { -1 } else { 1 })
-            .collect();
-        Self {
-            n,
-            r,
-            sigma_prev: sigma.clone(),
-            is: vec![0; n * r],
-            rng: rng.states().to_vec(),
-            sigma,
-        }
-    }
-
-    /// Zero-pad a state up to an artifact's (N, R): padding spins get
-    /// zero couplings later; their RNG streams follow the same seeding
-    /// contract, so the padded trajectory is a valid SSQA run of the
-    /// padded model.
-    pub fn padded_to(&self, n2: usize, r2: usize, seed: u32) -> Self {
-        assert!(n2 >= self.n && r2 >= self.r);
-        let mut out = Self::init(n2, r2, seed);
-        for i in 0..self.n {
-            for k in 0..self.r {
-                let (src, dst) = (i * self.r + k, i * r2 + k);
-                out.sigma[dst] = self.sigma[src];
-                out.sigma_prev[dst] = self.sigma_prev[src];
-                out.is[dst] = self.is[src];
-                out.rng[dst] = self.rng[src];
-            }
-        }
-        out
-    }
 }
 
 /// A compiled (N, R) step executable driving device-resident state.

@@ -1,0 +1,79 @@
+//! Stub PJRT client for builds without the optional `xla` dependency
+//! (`--features pjrt` enables the real one in `client.rs`).
+//!
+//! Keeps the full public API surface so downstream code (coordinator
+//! `Pjrt` backend, benches, integration tests) compiles unchanged;
+//! [`PjrtRuntime::new`] reports the missing feature and nothing else is
+//! ever reachable. The runtime-free [`super::state::PjrtState`] carries
+//! the bit-exactness state contract in both builds.
+
+use super::artifact::{ArtifactEntry, ArtifactManifest};
+use super::state::PjrtState;
+use crate::annealer::{Annealer, RunResult, SsqaParams};
+use crate::graph::IsingModel;
+use crate::Result;
+use anyhow::anyhow;
+use std::path::Path;
+
+/// Stub runtime: construction always fails with a build-feature hint.
+pub struct PjrtRuntime {
+    manifest: ArtifactManifest,
+}
+
+/// Stub annealer: never constructed (the runtime cannot be built).
+pub struct PjrtAnnealer {
+    pub entry: ArtifactEntry,
+    pub params: SsqaParams,
+    /// Per-step wall times of the last run (for the §Perf log).
+    pub last_step_times: Vec<std::time::Duration>,
+}
+
+fn unavailable() -> anyhow::Error {
+    anyhow!("built without the `pjrt` feature (xla crate): rebuild with `--features pjrt`")
+}
+
+impl PjrtRuntime {
+    /// Always errors: the PJRT client needs the `xla` crate.
+    pub fn new(_artifacts_dir: &Path) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn load_annealer(&self, _n: usize, _r: usize, _params: SsqaParams) -> Result<PjrtAnnealer> {
+        Err(unavailable())
+    }
+
+    pub fn load_annealer_kernel(
+        &self,
+        _n: usize,
+        _r: usize,
+        _params: SsqaParams,
+        _kernel: &str,
+    ) -> Result<PjrtAnnealer> {
+        Err(unavailable())
+    }
+}
+
+impl PjrtAnnealer {
+    pub fn run_steps(
+        &mut self,
+        _model: &IsingModel,
+        _steps: usize,
+        _seed: u32,
+    ) -> Result<(PjrtState, RunResult)> {
+        Err(unavailable())
+    }
+}
+
+impl Annealer for PjrtAnnealer {
+    fn anneal(&mut self, _model: &IsingModel, _steps: usize, _seed: u32) -> RunResult {
+        unreachable!("stub PjrtAnnealer cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}

@@ -8,10 +8,16 @@
 //! back to the host).
 
 mod artifact;
+#[cfg(feature = "pjrt")]
 mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
+mod client;
+mod state;
 
 pub use artifact::{ArtifactEntry, ArtifactManifest};
-pub use client::{PjrtAnnealer, PjrtRuntime, PjrtState};
+pub use client::{PjrtAnnealer, PjrtRuntime};
+pub use state::PjrtState;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,55 @@
+//! Host-side annealer state mirroring the artifact's device buffers.
+//! Lives outside the `pjrt`-gated client so stub builds (no `xla`
+//! crate) keep the full state contract and its tests.
+
+use crate::dynamics;
+use crate::rng::RngMatrix;
+
+/// Annealer state held as host mirrors of the device buffers
+/// (row-major `[spin][replica]`, matching the artifact layout).
+#[derive(Debug, Clone)]
+pub struct PjrtState {
+    pub n: usize,
+    pub r: usize,
+    pub sigma: Vec<i32>,
+    pub sigma_prev: Vec<i32>,
+    pub is: Vec<i32>,
+    pub rng: Vec<u32>,
+}
+
+impl PjrtState {
+    /// Initial state per the bit-exactness contract (the shared
+    /// [`dynamics::init_sigma`] convention — identical to
+    /// `SsqaState::init` and `ref.init_state`).
+    pub fn init(n: usize, r: usize, seed: u32) -> Self {
+        let rng = RngMatrix::seeded(seed, n, r);
+        let sigma = dynamics::init_sigma(&rng);
+        Self {
+            n,
+            r,
+            sigma_prev: sigma.clone(),
+            is: vec![0; n * r],
+            rng: rng.states().to_vec(),
+            sigma,
+        }
+    }
+
+    /// Zero-pad a state up to an artifact's (N, R): padding spins get
+    /// zero couplings later; their RNG streams follow the same seeding
+    /// contract, so the padded trajectory is a valid SSQA run of the
+    /// padded model.
+    pub fn padded_to(&self, n2: usize, r2: usize, seed: u32) -> Self {
+        assert!(n2 >= self.n && r2 >= self.r);
+        let mut out = Self::init(n2, r2, seed);
+        for i in 0..self.n {
+            for k in 0..self.r {
+                let (src, dst) = (i * self.r + k, i * r2 + k);
+                out.sigma[dst] = self.sigma[src];
+                out.sigma_prev[dst] = self.sigma_prev[src];
+                out.is[dst] = self.is[src];
+                out.rng[dst] = self.rng[src];
+            }
+        }
+        out
+    }
+}

@@ -34,21 +34,61 @@ fn arb_params(rng: &mut Xorshift64Star, steps: usize) -> SsqaParams {
 }
 
 /// Property: the cycle-accurate hw model and the software engine are
-/// bit-identical on arbitrary problems and parameter draws.
+/// bit-identical on arbitrary problems and parameter draws, for **both**
+/// delay architectures and replica counts that include non-powers of
+/// two (replaces the earlier single-fixture per-architecture assertion).
 #[test]
 fn prop_hw_sw_bit_exact() {
+    // every R in 1..=10 plus the paper's R = 20; odd/prime values
+    // exercise the (k + 1) mod R coupling ring off the power-of-two path
+    const REPLICAS: [usize; 11] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 20];
     for case in 0..CASES {
         let mut rng = Xorshift64Star::new(0x1000 + case);
         let g = arb_graph(&mut rng);
         let steps = 5 + rng.next_below(30);
-        let p = arb_params(&mut rng, steps);
+        let mut p = arb_params(&mut rng, steps);
+        p.replicas = REPLICAS[rng.next_below(REPLICAS.len())];
         let model = maxcut::ising_from_graph(&g, p.j_scale);
         let seed = rng.next_u64() as u32;
         let (_, sw) = SsqaEngine::new(p, steps).run(&model, steps, seed);
-        let mut hw = HwEngine::new(HwConfig::default(), p);
-        let hwr = hw.run(&model, steps, seed);
-        assert_eq!(sw.replica_energies, hwr.replica_energies, "case {case}");
-        assert_eq!(sw.best_sigma, hwr.best_sigma, "case {case}");
+        for delay in [DelayKind::DualBram, DelayKind::ShiftReg] {
+            let mut hw = HwEngine::new(HwConfig { delay, ..HwConfig::default() }, p);
+            let hwr = hw.run(&model, steps, seed);
+            assert_eq!(
+                sw.replica_energies, hwr.replica_energies,
+                "case {case} R={} {delay:?}",
+                p.replicas
+            );
+            assert_eq!(sw.best_sigma, hwr.best_sigma, "case {case} R={} {delay:?}", p.replicas);
+            assert_eq!(
+                sw.best_energy, hwr.best_energy,
+                "case {case} R={} {delay:?}",
+                p.replicas
+            );
+        }
+    }
+}
+
+/// Property: batched multi-seed execution is bit-identical to running
+/// each seed independently (the batch reuses scratch/state buffers —
+/// nothing may leak between seeds).
+#[test]
+fn prop_run_batch_equals_independent_runs() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x9000 + case);
+        let g = arb_graph(&mut rng);
+        let steps = 5 + rng.next_below(20);
+        let p = arb_params(&mut rng, steps);
+        let model = maxcut::ising_from_graph(&g, p.j_scale);
+        let seeds: Vec<u32> =
+            (0..2 + rng.next_below(4)).map(|_| rng.next_u64() as u32).collect();
+        let eng = SsqaEngine::new(p, steps);
+        let batch = eng.run_batch(&model, steps, &seeds);
+        for (res, &seed) in batch.iter().zip(&seeds) {
+            let (_, solo) = eng.run(&model, steps, seed);
+            assert_eq!(res.replica_energies, solo.replica_energies, "case {case} seed {seed}");
+            assert_eq!(res.best_sigma, solo.best_sigma, "case {case} seed {seed}");
+        }
     }
 }
 
