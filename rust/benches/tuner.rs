@@ -1,0 +1,128 @@
+//! Tuner benchmarks: racing overhead vs a fixed-config batched sweep
+//! of equal decision power, and the convergence monitor's observation
+//! cost. The `tuner/race` section appends its numbers to
+//! `BENCH_tuner.json` at the repository root (same shape as
+//! `BENCH_hotpath.json`) so successive PRs leave a perf trajectory.
+
+use ssqa::annealer::SsqaParams;
+use ssqa::config::{bench, BenchArgs};
+use ssqa::graph::GraphSpec;
+use ssqa::problems::maxcut;
+use ssqa::tuner::{race, tune, InlineEval, MonitorConfig, RaceConfig, TunerConfig};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let g = GraphSpec::G11.build();
+
+    // one shared quick-ish configuration: big enough to exercise the
+    // rung loop, small enough for a bench iteration
+    let mut cfg = TunerConfig::quick(7);
+    cfg.space.steps = if args.quick { vec![60, 100] } else { vec![120, 200] };
+    cfg.race = RaceConfig {
+        candidates: 4,
+        seeds_rung0: 2,
+        monitor: MonitorConfig::default(),
+        ..RaceConfig::default()
+    };
+    cfg.portfolio.seeds = 2;
+    let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+
+    if args.matches("tuner/race") {
+        // the comparator: a fixed-config batched sweep spending the
+        // race's *full* budget (every candidate, final seed count, no
+        // early stop) — what an untuned grid evaluation would run
+        let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
+        let probe = race(&g, &model, cands.clone(), &cfg.race, &InlineEval);
+        // seed-evidence the race accumulated on its winner (the
+        // RaceOutcome::full_budget_updates comparator)
+        let rungs = probe.trace.iter().map(|r| r.rung).max().unwrap_or(0) + 1;
+        let full_seeds: usize =
+            (0..rungs).map(|r| cfg.race.seeds_rung0 * cfg.race.eta.pow(r as u32)).sum();
+
+        let fixed = bench(&format!("tuner/race fixed-sweep G11 ×{}", cands.len()), 3, || {
+            for cand in &cands {
+                let eng = ssqa::annealer::SsqaEngine::new(cand.params, cand.steps);
+                let seeds: Vec<u32> = (0..full_seeds as u32).collect();
+                let _ = eng.run_batch(&model, cand.steps, &seeds);
+            }
+        });
+        let raced = bench(&format!("tuner/race halving G11 ×{}", cands.len()), 3, || {
+            let _ = race(&g, &model, cands.clone(), &cfg.race, &InlineEval);
+        });
+        let speedup = fixed.min.as_secs_f64() / raced.min.as_secs_f64();
+        println!(
+            "  → racing {:.2}× faster than the fixed full-budget sweep ({} vs {} spin-updates, {:.1}% saved)",
+            speedup,
+            probe.total_spin_updates,
+            probe.full_budget_updates,
+            100.0 * probe.saved_fraction(),
+        );
+
+        // append to the perf trajectory at the repo root
+        let stamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let record = format!(
+            "{{\"unix_time\": {stamp}, \"bench\": \"tuner/race\", \"graph\": \"G11\", \
+             \"candidates\": {}, \"seeds_rung0\": {}, \"fixed_s\": {:.6}, \"raced_s\": {:.6}, \
+             \"speedup\": {:.4}, \"raced_spin_updates\": {}, \"full_budget_updates\": {}, \
+             \"saved_fraction\": {:.4}}}",
+            cands.len(),
+            cfg.race.seeds_rung0,
+            fixed.min.as_secs_f64(),
+            raced.min.as_secs_f64(),
+            speedup,
+            probe.total_spin_updates,
+            probe.full_budget_updates,
+            probe.saved_fraction(),
+        );
+        let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_tuner.json");
+        let mut records: Vec<String> = std::fs::read_to_string(json_path)
+            .ok()
+            .and_then(|s| {
+                // stored as a JSON array of flat records, one per line
+                let body = s.trim().strip_prefix('[')?.strip_suffix(']')?.trim().to_string();
+                Some(
+                    body.lines()
+                        .map(|l| l.trim().trim_end_matches(',').to_string())
+                        .filter(|l| !l.is_empty() && !l.starts_with("//"))
+                        .collect(),
+                )
+            })
+            .unwrap_or_default();
+        records.push(record);
+        let out = format!("[\n  {}\n]\n", records.join(",\n  "));
+        match std::fs::write(json_path, out) {
+            Ok(()) => println!("  → recorded in BENCH_tuner.json"),
+            Err(e) => println!("  → could not write BENCH_tuner.json: {e}"),
+        }
+    }
+
+    if args.matches("tuner/monitor") {
+        // the monitor's marginal cost over an unobserved run
+        let steps = if args.quick { 60 } else { 200 };
+        let params = SsqaParams::gset_default(steps);
+        let eng = ssqa::annealer::SsqaEngine::new(params, steps);
+        let plain = bench(&format!("tuner/monitor unobserved G11 {steps}st"), 3, || {
+            let _ = eng.run(&model, steps, 1);
+        });
+        let observed = bench(&format!("tuner/monitor observed G11 {steps}st"), 3, || {
+            let mut mon =
+                ssqa::tuner::ConvergenceMonitor::new(MonitorConfig::never_stop(), &model);
+            let _ = eng.run_observed(&model, steps, 1, &mut mon);
+        });
+        println!(
+            "  → monitoring overhead {:.2}% (stride {})",
+            100.0 * (observed.min.as_secs_f64() / plain.min.as_secs_f64() - 1.0),
+            MonitorConfig::default().stride,
+        );
+    }
+
+    if args.matches("tuner/end-to-end") {
+        let s = bench("tuner/end-to-end quick G11", 3, || {
+            let _ = tune(&g, &cfg);
+        });
+        println!("  → full tune (race + portfolio) in {:?}", s.min);
+    }
+}

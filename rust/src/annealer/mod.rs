@@ -18,7 +18,7 @@ pub(crate) mod ssqa;
 
 pub use params::{NoiseSchedule, QSchedule, SsaParams, SsqaParams};
 pub use pd::PdSsqaEngine;
-pub use runner::{multi_run, multi_run_batched, run_seed, AggregateStats, RunResult};
+pub use runner::{multi_run, multi_run_batched, run_seed, AggregateStats, RunResult, StepObserver};
 pub use sa::SaEngine;
 pub use ssa::SsaEngine;
 pub use ssqa::{SsqaEngine, SsqaState};

@@ -1,10 +1,42 @@
 //! Multi-run Monte-Carlo harness (the paper averages 100 independent
-//! runs per point; we parallelize runs over a scoped thread pool).
+//! runs per point; we parallelize runs over a scoped thread pool) and
+//! the per-step observation hook engines expose for trajectory-aware
+//! control (the tuner's convergence-based early stopping).
 
-use super::{Annealer, SsqaEngine, SsqaParams};
+use super::{Annealer, SsqaEngine, SsqaParams, SsqaState};
 use crate::config::{chunk_per_worker, num_threads, par_map};
 use crate::graph::{Graph, IsingModel};
 use crate::problems::maxcut;
+
+/// Per-step observation hook for engines that support trajectory
+/// inspection and early stopping ([`SsqaEngine::run_observed`] /
+/// [`SsqaEngine::run_batch_observed`]).
+///
+/// §Perf contract: `observe` runs inside the annealing loop, so
+/// implementations must not allocate per call — preallocate buffers in
+/// the observer and reuse them (see `tuner::ConvergenceMonitor`).
+pub trait StepObserver {
+    /// Called once before a run's first step with the run's seed.
+    /// Batched runners call this at every seed boundary, so observers
+    /// reset their per-run state here.
+    fn begin_run(&mut self, seed: u32) {
+        let _ = seed;
+    }
+
+    /// Called after step `t` (0-based) has been applied to `state`.
+    /// Return `true` to stop the run early; the engine harvests the
+    /// state as-is and reports the number of steps actually executed.
+    fn observe(&mut self, t: usize, state: &SsqaState) -> bool;
+}
+
+/// The no-op observer: watches nothing, never stops. `drive`-ing with
+/// `&mut ()` compiles down to the plain unobserved loop.
+impl StepObserver for () {
+    #[inline(always)]
+    fn observe(&mut self, _t: usize, _state: &SsqaState) -> bool {
+        false
+    }
+}
 
 /// Result of a single annealing run.
 #[derive(Debug, Clone)]

@@ -12,7 +12,7 @@
 //! engine owns only the traversal order, the double-buffering and the
 //! schedules.
 
-use super::{params::SsqaParams, runner::RunResult, Annealer};
+use super::{params::SsqaParams, runner::RunResult, runner::StepObserver, Annealer};
 use crate::dynamics::{self, CellUpdate, StepScratch};
 use crate::graph::IsingModel;
 use crate::rng::RngMatrix;
@@ -146,10 +146,26 @@ impl SsqaEngine {
 
     /// Run the full schedule and return per-replica final energies.
     pub fn run(&self, model: &IsingModel, steps: usize, seed: u32) -> (SsqaState, RunResult) {
+        self.run_observed(model, steps, seed, &mut ())
+    }
+
+    /// [`Self::run`] with a per-step observation hook: `observer` sees
+    /// the state after every step and may stop the run early (the
+    /// tuner's convergence monitor). `RunResult::steps` reports the
+    /// steps actually executed. With the no-op `&mut ()` observer this
+    /// is bit-identical to [`Self::run`].
+    pub fn run_observed<O: StepObserver>(
+        &self,
+        model: &IsingModel,
+        steps: usize,
+        seed: u32,
+        observer: &mut O,
+    ) -> (SsqaState, RunResult) {
         let mut st = SsqaState::init(model.n(), self.params.replicas, seed);
         let mut scratch = StepScratch::new(self.params.replicas);
-        self.drive(model, &mut st, &mut scratch, steps);
-        let result = Self::harvest(model, &st, steps);
+        observer.begin_run(seed);
+        let executed = self.drive_observed(model, &mut st, &mut scratch, steps, observer);
+        let result = Self::harvest(model, &st, executed);
         (st, result)
     }
 
@@ -159,6 +175,21 @@ impl SsqaEngine {
     /// [`Self::run`] with that seed (asserted in `annealer::tests`) —
     /// batching only removes per-run allocation and cold-cache costs.
     pub fn run_batch(&self, model: &IsingModel, steps: usize, seeds: &[u32]) -> Vec<RunResult> {
+        self.run_batch_observed(model, steps, seeds, &mut ())
+    }
+
+    /// [`Self::run_batch`] with a per-step observation hook. The
+    /// observer's `begin_run` fires at every seed boundary, so one
+    /// observer (and its preallocated buffers) serves the whole batch;
+    /// each seed may stop early independently, and each
+    /// `RunResult::steps` reports that seed's executed step count.
+    pub fn run_batch_observed<O: StepObserver>(
+        &self,
+        model: &IsingModel,
+        steps: usize,
+        seeds: &[u32],
+        observer: &mut O,
+    ) -> Vec<RunResult> {
         let Some(&first) = seeds.first() else { return Vec::new() };
         let mut st = SsqaState::init(model.n(), self.params.replicas, first);
         let mut scratch = StepScratch::new(self.params.replicas);
@@ -167,26 +198,37 @@ impl SsqaEngine {
             if idx > 0 {
                 st.reinit(seed);
             }
-            self.drive(model, &mut st, &mut scratch, steps);
-            out.push(Self::harvest(model, &st, steps));
+            observer.begin_run(seed);
+            let executed = self.drive_observed(model, &mut st, &mut scratch, steps, observer);
+            out.push(Self::harvest(model, &st, executed));
         }
         out
     }
 
-    /// Step the schedule `steps` times against an initialized state.
-    fn drive(
+    /// Step the schedule against an initialized state, consulting the
+    /// observer after every step; returns the number of steps executed
+    /// (`steps`, unless the observer stopped the run early). The
+    /// schedule is always evaluated at the true step index — an early
+    /// stop executes a *prefix* of the schedule, consistent with the
+    /// §3.4 normalization semantic.
+    pub fn drive_observed<O: StepObserver>(
         &self,
         model: &IsingModel,
         st: &mut SsqaState,
         scratch: &mut StepScratch,
         steps: usize,
-    ) {
+        observer: &mut O,
+    ) -> usize {
         let horizon = self.schedule_horizon(steps);
         for t in 0..steps {
             let q_t = self.params.q.at(t);
             let noise_t = self.params.noise.at(t, horizon);
             self.step(model, st, scratch, q_t, noise_t);
+            if observer.observe(t, st) {
+                return t + 1;
+            }
         }
+        steps
     }
 
     /// Pick the best replica of a final state (paper §4.2) — the shared

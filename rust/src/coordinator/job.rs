@@ -98,6 +98,39 @@ pub(crate) struct BatchChunk {
 pub(crate) enum WorkItem {
     Single(Job),
     Chunk(BatchChunk),
+    TuneEval(TuneEvalChunk),
+}
+
+/// An auto-tuning job: race candidate configurations for one problem
+/// and report the winning (config, engine) pair. Like [`BatchJob`], the
+/// pool builds the graph and [`IsingModel`] once and `Arc`-shares them;
+/// each rung's candidate evaluations then fan out across the workers as
+/// [`TuneEvalChunk`]s.
+#[derive(Debug, Clone)]
+pub struct TuneJob {
+    pub spec: JobSpec,
+    pub config: crate::tuner::TunerConfig,
+}
+
+impl TuneJob {
+    pub fn new(spec: JobSpec, tuner_seed: u64) -> Self {
+        Self { spec, config: crate::tuner::TunerConfig::gset_default(tuner_seed) }
+    }
+}
+
+/// One worker's tuner evaluation: a racing candidate, the rung's seed
+/// slice and the `Arc`-shared problem (the same sharing scheme as
+/// [`BatchChunk`]). Built by `WorkerPool::run_tune`, executed by
+/// [`execute_tune_eval`].
+#[derive(Debug, Clone)]
+pub(crate) struct TuneEvalChunk {
+    pub id: u64,
+    pub label: String,
+    pub cand: crate::tuner::Candidate,
+    pub seeds: Vec<u32>,
+    pub monitor: crate::tuner::MonitorConfig,
+    pub graph: Arc<Graph>,
+    pub model: Arc<IsingModel>,
 }
 
 /// Result of an executed job or batch chunk.
@@ -114,6 +147,15 @@ pub struct JobOutcome {
     pub runs: usize,
     /// Mean cut over the covered seeds (== `cut` when `runs == 1`).
     pub mean_cut: f64,
+    /// Mean best energy over the covered seeds (== `best_energy` when
+    /// `runs == 1`) — the tuner's ranking key.
+    pub mean_energy: f64,
+    /// Spin updates executed across the covered seeds (early-stopped
+    /// tuner evaluations report the *actual* count, not the budget).
+    pub spin_updates: u64,
+    /// Runs stopped before their step budget by convergence monitoring
+    /// (only tuner evaluations monitor; 0 for plain jobs/batches).
+    pub early_stops: usize,
     pub wall: std::time::Duration,
     /// Modeled FPGA energy for hw-sim jobs (J), summed over seeds.
     pub modeled_energy_j: Option<f64>,
@@ -142,10 +184,23 @@ impl JobOutcome {
             best_energy: 0,
             runs,
             mean_cut: 0.0,
+            mean_energy: 0.0,
+            spin_updates: 0,
+            early_stops: 0,
             wall,
             modeled_energy_j: None,
             error: Some(error),
         }
+    }
+}
+
+/// Spin updates one run of `steps` steps executes on an `n`-spin
+/// instance: the single-network engines update `n` cells per step, the
+/// replica engines `n·R`.
+fn updates_per_run(backend: super::BackendKind, n: usize, replicas: usize, steps: usize) -> u64 {
+    match backend {
+        super::BackendKind::SoftwareSsa | super::BackendKind::SoftwareSa => (n * steps) as u64,
+        _ => (n * replicas * steps) as u64,
     }
 }
 
@@ -155,6 +210,7 @@ impl JobOutcome {
 enum BackendInstance {
     Software(crate::annealer::SsqaEngine),
     Ssa(crate::annealer::SsaEngine),
+    Sa(crate::annealer::SaEngine),
     Hw { eng: crate::hw::HwEngine, power_w: f64 },
     Pjrt(crate::runtime::PjrtAnnealer),
 }
@@ -166,7 +222,7 @@ impl BackendInstance {
         n: usize,
         steps: usize,
     ) -> crate::Result<Self> {
-        use crate::annealer::{SsaEngine, SsaParams, SsqaEngine};
+        use crate::annealer::{SaEngine, SsaEngine, SsaParams, SsqaEngine};
         use crate::hw::{HwConfig, HwEngine};
 
         Ok(match backend {
@@ -174,6 +230,7 @@ impl BackendInstance {
             super::BackendKind::SoftwareSsa => {
                 Self::Ssa(SsaEngine::new(SsaParams::gset_default(), steps))
             }
+            super::BackendKind::SoftwareSa => Self::Sa(SaEngine::gset_default()),
             super::BackendKind::HwSim(delay) => {
                 let eng = HwEngine::new(HwConfig { delay, ..HwConfig::default() }, params);
                 let power_w = crate::resources::ResourceModel::default()
@@ -199,6 +256,7 @@ impl BackendInstance {
         match self {
             Self::Software(eng) => (eng.anneal(model, steps, seed), None),
             Self::Ssa(eng) => (eng.anneal(model, steps, seed), None),
+            Self::Sa(eng) => (eng.anneal(model, steps, seed), None),
             Self::Hw { eng, power_w } => {
                 let res = eng.anneal(model, steps, seed);
                 let energy = *power_w * eng.latency_seconds();
@@ -237,6 +295,9 @@ pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
         best_energy: res.best_energy,
         runs: 1,
         mean_cut: cut as f64,
+        mean_energy: res.best_energy as f64,
+        spin_updates: updates_per_run(backend, model.n(), job.params.replicas, res.steps),
+        early_stops: 0,
         wall: t0.elapsed(),
         modeled_energy_j,
         error: None,
@@ -252,7 +313,7 @@ pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
 pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> JobOutcome {
     let t0 = std::time::Instant::now();
     let mut cuts: Vec<i64> = Vec::with_capacity(chunk.seeds.len());
-    let mut best_energy = i64::MAX;
+    let mut energies: Vec<i64> = Vec::with_capacity(chunk.seeds.len());
     let mut modeled_energy_j: Option<f64> = None;
     match BackendInstance::build(backend, chunk.params, chunk.model.n(), chunk.steps) {
         Err(e) => {
@@ -268,14 +329,14 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
         Ok(BackendInstance::Software(eng)) => {
             for res in eng.run_batch(&chunk.model, chunk.steps, &chunk.seeds) {
                 cuts.push(res.cut(&chunk.graph));
-                best_energy = best_energy.min(res.best_energy);
+                energies.push(res.best_energy);
             }
         }
         Ok(mut instance) => {
             for &seed in &chunk.seeds {
                 let (res, energy) = instance.run(&chunk.model, chunk.steps, seed);
                 cuts.push(res.cut(&chunk.graph));
-                best_energy = best_energy.min(res.best_energy);
+                energies.push(res.best_energy);
                 if let Some(e) = energy {
                     *modeled_energy_j.get_or_insert(0.0) += e;
                 }
@@ -285,16 +346,52 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
     let runs = cuts.len();
     let cut = cuts.iter().copied().max().unwrap_or(0);
     let mean_cut = cuts.iter().sum::<i64>() as f64 / runs.max(1) as f64;
+    let best_energy = energies.iter().copied().min().unwrap_or(0);
+    let mean_energy = energies.iter().sum::<i64>() as f64 / runs.max(1) as f64;
     JobOutcome {
         id: chunk.id,
         label: chunk.label.clone(),
         backend,
         cut,
-        best_energy: if runs == 0 { 0 } else { best_energy },
+        best_energy,
         runs,
         mean_cut,
+        mean_energy,
+        spin_updates: updates_per_run(backend, chunk.model.n(), chunk.params.replicas, chunk.steps)
+            * runs as u64,
+        early_stops: 0,
         wall: t0.elapsed(),
         modeled_energy_j,
+        error: None,
+    }
+}
+
+/// Execute one tuner candidate evaluation (used by the pool workers):
+/// the shared [`crate::tuner::evaluate_candidate`] against the
+/// `Arc`-shared model, repackaged as a [`JobOutcome`] so it flows over
+/// the ordinary result channel and into the metrics registry.
+pub(crate) fn execute_tune_eval(chunk: &TuneEvalChunk, backend: super::BackendKind) -> JobOutcome {
+    let t0 = std::time::Instant::now();
+    let score = crate::tuner::evaluate_candidate(
+        &chunk.graph,
+        &chunk.model,
+        &chunk.cand,
+        &chunk.seeds,
+        chunk.monitor,
+    );
+    JobOutcome {
+        id: chunk.id,
+        label: chunk.label.clone(),
+        backend,
+        cut: score.best_cut,
+        best_energy: score.best_energy,
+        runs: score.runs,
+        mean_cut: score.mean_cut,
+        mean_energy: score.mean_energy,
+        spin_updates: score.spin_updates,
+        early_stops: score.early_stops,
+        wall: t0.elapsed(),
+        modeled_energy_j: None,
         error: None,
     }
 }

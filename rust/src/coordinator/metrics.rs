@@ -22,6 +22,9 @@ pub struct BackendMetrics {
     /// its best cut), so `total_cut / runs` is the true per-run mean.
     pub total_cut: f64,
     pub total_modeled_energy_j: f64,
+    /// Spin updates executed by successful outcomes (the tuner's
+    /// budget currency; early-stopped runs count what they ran).
+    pub total_spin_updates: u64,
 }
 
 impl BackendMetrics {
@@ -37,6 +40,7 @@ impl BackendMetrics {
         self.max_wall = Some(self.max_wall.map_or(o.wall, |m| m.max(o.wall)));
         self.total_cut += o.mean_cut * o.runs as f64;
         self.total_modeled_energy_j += o.modeled_energy_j.unwrap_or(0.0);
+        self.total_spin_updates += o.spin_updates;
     }
 
     pub fn mean_wall(&self) -> Duration {
@@ -51,6 +55,13 @@ impl BackendMetrics {
 }
 
 /// Thread-safe metrics registry.
+///
+/// §Robustness: the registry is shared with every worker thread, and a
+/// worker may panic mid-job (a bad artifact, a poisoned assertion).
+/// All lock acquisitions therefore go through the coordinator's shared
+/// poison-tolerant [`super::lock_clean`] — recording must keep working
+/// after a panic rather than cascading `PoisonError` unwinds through
+/// the coordinator (asserted in `coordinator::tests`).
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<BTreeMap<&'static str, BackendMetrics>>,
@@ -62,23 +73,38 @@ impl Metrics {
     }
 
     pub fn record(&self, backend: BackendKind, outcome: &JobOutcome) {
-        let mut map = self.inner.lock().unwrap();
+        let mut map = super::lock_clean(&self.inner);
         map.entry(backend.name()).or_default().record(outcome);
     }
 
     pub fn snapshot(&self) -> BTreeMap<&'static str, BackendMetrics> {
-        self.inner.lock().unwrap().clone()
+        super::lock_clean(&self.inner).clone()
+    }
+
+    /// Poison the inner mutex (panic while holding it) — test hook for
+    /// the poison-tolerance contract.
+    #[cfg(test)]
+    pub(crate) fn poison_for_test(&self) {
+        let inner = &self.inner;
+        std::thread::scope(|s| {
+            let handle = s.spawn(|| {
+                let _guard = inner.lock().unwrap();
+                panic!("intentional poison");
+            });
+            assert!(handle.join().is_err(), "poisoning thread must panic");
+        });
+        assert!(self.inner.is_poisoned(), "mutex should be poisoned");
     }
 
     /// Render a human-readable table (the `ssqa serve`/CLI report).
     pub fn render(&self) -> String {
         let snap = self.snapshot();
         let mut out = String::from(
-            "backend        jobs   runs   errs   mean-wall      min          max          mean-cut   energy(J)\n",
+            "backend        jobs   runs   errs   mean-wall      min          max          mean-cut   energy(J)   spin-upd\n",
         );
         for (name, m) in snap {
             out.push_str(&format!(
-                "{:<14} {:<6} {:<6} {:<6} {:<12.3?} {:<12.3?} {:<12.3?} {:<10.1} {:.3e}\n",
+                "{:<14} {:<6} {:<6} {:<6} {:<12.3?} {:<12.3?} {:<12.3?} {:<10.1} {:<11.3e} {}\n",
                 name,
                 m.jobs,
                 m.runs,
@@ -88,6 +114,7 @@ impl Metrics {
                 m.max_wall.unwrap_or_default(),
                 m.total_cut / m.runs.max(1) as f64,
                 m.total_modeled_energy_j,
+                m.total_spin_updates,
             ));
         }
         out

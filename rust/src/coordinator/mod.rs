@@ -14,11 +14,21 @@ mod pool;
 mod router;
 mod server;
 
-pub use job::{BatchJob, Job, JobOutcome, JobSpec};
+pub use job::{BatchJob, Job, JobOutcome, JobSpec, TuneJob};
 pub use metrics::{BackendMetrics, Metrics};
 pub use pool::WorkerPool;
 pub use router::{BackendKind, Router, RoutingPolicy};
 pub use server::{handle_request, serve};
+
+/// Poison-tolerant lock (§Robustness, shared by the pool and metrics):
+/// a worker that panics while holding a coordinator lock must not
+/// cascade the panic into the leader or the other workers — the guarded
+/// state (a channel receiver, the pending-id set, a metrics map) is
+/// structurally valid at every unlock point, so continuing past the
+/// poison flag is sound.
+pub(crate) fn lock_clean<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 #[cfg(test)]
 mod tests;

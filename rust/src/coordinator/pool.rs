@@ -1,11 +1,17 @@
 //! Worker pool: a leader thread feeds work over an mpsc channel to N
 //! worker threads; outcomes flow back over a result channel in
 //! completion order.
+//!
+//! §Robustness: every mutex acquisition here and in [`Metrics`] goes
+//! through the shared poison-tolerant [`lock_clean`] — a worker that
+//! panics while holding a lock must not cascade into the leader or the
+//! other workers.
 
-use super::job::{BatchChunk, WorkItem};
-use super::{job, BackendKind, BatchJob, Job, JobOutcome, Metrics, Router};
+use super::job::{BatchChunk, TuneEvalChunk, WorkItem};
+use super::{job, lock_clean, BackendKind, BatchJob, Job, JobOutcome, Metrics, Router, TuneJob};
 use crate::problems::maxcut;
-use std::collections::HashSet;
+use crate::tuner;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -40,12 +46,13 @@ impl WorkerPool {
             let tx_out = tx_out.clone();
             let metrics = Arc::clone(&metrics);
             handles.push(std::thread::spawn(move || loop {
-                let msg = rx.lock().unwrap().recv();
+                let msg = lock_clean(&rx).recv();
                 match msg {
                     Ok((item, backend)) => {
                         let outcome = match &item {
                             WorkItem::Single(job) => job::execute(job, backend),
                             WorkItem::Chunk(chunk) => job::execute_chunk(chunk, backend),
+                            WorkItem::TuneEval(chunk) => job::execute_tune_eval(chunk, backend),
                         };
                         metrics.record(backend, &outcome);
                         if tx_out.send(outcome).is_err() {
@@ -82,7 +89,7 @@ impl WorkerPool {
         // duplicate in-flight id would silently lose an outcome in
         // `drain`, so reject it loudly at the submission site
         assert!(
-            self.pending.lock().unwrap().insert(id),
+            lock_clean(&self.pending).insert(id),
             "job id {id} is already in flight (explicit ids must be unique)"
         );
         self.tx
@@ -134,18 +141,42 @@ impl WorkerPool {
         ids
     }
 
+    /// Run a [`TuneJob`] to completion: the graph and Ising model are
+    /// built **once** and `Arc`-shared; each racing rung then fans its
+    /// candidate evaluations across the workers (one [`TuneEvalChunk`]
+    /// per candidate) and drains before pruning — the same fan-out
+    /// shape as [`Self::submit_batch`], driven by the tuner's rung
+    /// loop.
+    ///
+    /// The result is bit-identical to `tuner::tune` with the same
+    /// config (asserted in `coordinator::tests`): evaluations are
+    /// deterministic and the rung barrier reorders outcomes back into
+    /// candidate order. Like every submit→drain caller, this assumes
+    /// the pool is not processing unrelated work concurrently.
+    pub fn run_tune(&self, job: &TuneJob) -> tuner::TuneReport {
+        let graph = Arc::new(job.spec.graph());
+        let model = Arc::new(maxcut::ising_from_graph(&graph, job.config.space.j_scale));
+        let eval = PoolEval {
+            pool: self,
+            graph: Arc::clone(&graph),
+            model: Arc::clone(&model),
+            label: job.spec.label(),
+        };
+        tuner::tune_shared(&graph, &model, &job.config, &eval)
+    }
+
     /// Collect outcomes until no submitted work remains outstanding
     /// (blocks for every id in flight, including work submitted by other
     /// threads while the drain is in progress).
     pub fn drain(&self) -> Vec<JobOutcome> {
-        let rx = self.rx_out.lock().unwrap();
+        let rx = lock_clean(&self.rx_out);
         let mut out = Vec::new();
         loop {
-            if self.pending.lock().unwrap().is_empty() {
+            if lock_clean(&self.pending).is_empty() {
                 break;
             }
             let outcome = rx.recv().expect("worker delivered");
-            self.pending.lock().unwrap().remove(&outcome.id);
+            lock_clean(&self.pending).remove(&outcome.id);
             out.push(outcome);
         }
         out
@@ -166,5 +197,57 @@ impl Drop for WorkerPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Tuner evaluation backend that fans candidates across the pool.
+struct PoolEval<'p> {
+    pool: &'p WorkerPool,
+    graph: Arc<crate::graph::Graph>,
+    model: Arc<crate::graph::IsingModel>,
+    label: String,
+}
+
+impl tuner::EvalBackend for PoolEval<'_> {
+    fn evaluate(
+        &self,
+        ctx: &tuner::EvalContext<'_>,
+        cands: &[tuner::Candidate],
+    ) -> Vec<tuner::EvalScore> {
+        let backend = self.pool.router.route_tune_eval();
+        let mut id_to_idx = HashMap::with_capacity(cands.len());
+        for (idx, cand) in cands.iter().enumerate() {
+            let id = self.pool.fresh_id();
+            let chunk = TuneEvalChunk {
+                id,
+                label: format!("{}#c{}", self.label, cand.id),
+                cand: cand.clone(),
+                seeds: ctx.seeds.to_vec(),
+                monitor: ctx.monitor,
+                graph: Arc::clone(&self.graph),
+                model: Arc::clone(&self.model),
+            };
+            self.pool.dispatch(id, WorkItem::TuneEval(chunk), backend);
+            id_to_idx.insert(id, idx);
+        }
+        // rung barrier: collect every evaluation, then restore
+        // candidate order (workers complete in arbitrary order)
+        let mut scores: Vec<Option<tuner::EvalScore>> = vec![None; cands.len()];
+        for o in self.pool.drain() {
+            let Some(&idx) = id_to_idx.get(&o.id) else { continue };
+            scores[idx] = Some(tuner::EvalScore {
+                mean_energy: o.mean_energy,
+                best_energy: o.best_energy,
+                mean_cut: o.mean_cut,
+                best_cut: o.cut,
+                spin_updates: o.spin_updates,
+                early_stops: o.early_stops,
+                runs: o.runs,
+            });
+        }
+        scores
+            .into_iter()
+            .map(|s| s.expect("every candidate evaluation delivered an outcome"))
+            .collect()
     }
 }

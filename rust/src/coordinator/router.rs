@@ -9,6 +9,9 @@ pub enum BackendKind {
     Software,
     /// Rust SSA baseline engine.
     SoftwareSsa,
+    /// Classical Metropolis SA control (the tuner portfolio's fourth
+    /// engine; also dispatchable as an explicit job backend).
+    SoftwareSa,
     /// Cycle-accurate FPGA model (exact cycle/energy accounting).
     HwSim(DelayKind),
     /// AOT JAX/Pallas artifact on the PJRT CPU client.
@@ -20,6 +23,7 @@ impl BackendKind {
         match self {
             BackendKind::Software => "sw-ssqa",
             BackendKind::SoftwareSsa => "sw-ssa",
+            BackendKind::SoftwareSa => "sw-sa",
             BackendKind::HwSim(DelayKind::DualBram) => "hw-dual-bram",
             BackendKind::HwSim(DelayKind::ShiftReg) => "hw-shift-reg",
             BackendKind::Pjrt => "pjrt",
@@ -31,6 +35,7 @@ impl BackendKind {
         Some(match s {
             "sw" | "sw-ssqa" | "software" => BackendKind::Software,
             "ssa" | "sw-ssa" => BackendKind::SoftwareSsa,
+            "sa" | "sw-sa" => BackendKind::SoftwareSa,
             "hw" | "hw-dual-bram" => BackendKind::HwSim(DelayKind::DualBram),
             "hw-shift-reg" | "shiftreg" => BackendKind::HwSim(DelayKind::ShiftReg),
             "pjrt" | "artifact" => BackendKind::Pjrt,
@@ -78,6 +83,14 @@ impl Router {
             return b;
         }
         self.route_shape(n, batch.params.replicas)
+    }
+
+    /// Backend for a tuner candidate evaluation. Evaluations must be
+    /// cheap and bit-exact with the racing contract, so they always run
+    /// on the software SSQA engine regardless of policy — the hardware
+    /// and PJRT backends re-enter only in the final portfolio.
+    pub fn route_tune_eval(&self) -> BackendKind {
+        BackendKind::Software
     }
 
     /// Policy decision for a problem shape (n spins, r replicas).

@@ -1,10 +1,12 @@
 //! Line-protocol server: the embedded-deployment face of the
 //! coordinator (`ssqa serve --port 7090`).
 //!
-//! Protocol (one request per line, one response per line):
+//! Protocol — authoritative reference, mirrored in DESIGN.md §5.6 (one
+//! request per line, one response per line):
 //!
 //! ```text
-//! solve graph=G11 steps=500 seed=1 [backend=sw|hw|pjrt|ssa] [replicas=20] [runs=100]
+//! solve graph=G11 steps=500 seed=1 [backend=sw|ssa|sa|hw|pjrt] [replicas=20] [runs=100]
+//! tune  graph=G11 [tuner_seed=7] [candidates=8] [seeds=3] [quick=1]
 //! metrics
 //! ping
 //! quit
@@ -14,13 +16,28 @@
 //! energy=<H> wall_us=<t> [runs=<n> mean_cut=<c>]` or `err <message>`.
 //! `runs > 1` submits a [`BatchJob`]: the model is built once and the
 //! seeds fan out across the pool's workers (`seed`, `seed+7919`, …).
+//! `tune` runs a [`TuneJob`] (model built once, candidate evaluations
+//! fanned across the pool per racing rung) and responds `ok tuner
+//! graph=<label> engine=<name> config="<winner>" mean_cut=<c>
+//! spin_updates=<u> saved_pct=<p>`.
 
-use super::{BackendKind, BatchJob, Job, JobSpec, Router, RoutingPolicy, WorkerPool};
+use super::{BackendKind, BatchJob, Job, JobSpec, Router, RoutingPolicy, TuneJob, WorkerPool};
 use crate::graph::GraphSpec;
 use crate::Result;
 use anyhow::anyhow;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
+
+fn parse_graph(v: &str) -> Result<GraphSpec> {
+    Ok(match v {
+        "G11" => GraphSpec::G11,
+        "G12" => GraphSpec::G12,
+        "G13" => GraphSpec::G13,
+        "G14" => GraphSpec::G14,
+        "G15" => GraphSpec::G15,
+        _ => return Err(anyhow!("unknown graph {v:?}")),
+    })
+}
 
 /// Parse and execute one request line against a pool.
 pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
@@ -29,6 +46,57 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
     match verb {
         "ping" => Ok("pong".to_string()),
         "metrics" => Ok(pool.metrics.render().replace('\n', ";")),
+        "tune" => {
+            let mut graph = None;
+            let mut tuner_seed = 7u64;
+            let mut candidates = None;
+            let mut seeds = None;
+            let mut quick = false;
+            for tok in parts {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("malformed token {tok:?}"))?;
+                match k {
+                    "graph" => graph = Some(parse_graph(v)?),
+                    "tuner_seed" => tuner_seed = v.parse()?,
+                    "candidates" => candidates = Some(v.parse()?),
+                    "seeds" => seeds = Some(v.parse()?),
+                    "quick" => quick = v != "0",
+                    _ => return Err(anyhow!("unknown key {k:?}")),
+                }
+            }
+            let spec = JobSpec::Named(graph.ok_or_else(|| anyhow!("graph= required"))?);
+            let mut job = TuneJob::new(spec, tuner_seed);
+            if quick {
+                job.config = crate::tuner::TunerConfig::quick(tuner_seed);
+            }
+            if let Some(c) = candidates {
+                // a race needs ≥ 2 candidates to prune (0 would panic
+                // the race, 1 would crown an unevaluated winner); cap
+                // the pool so a client can't request an unbounded sweep
+                if !(2..=64).contains(&c) {
+                    return Err(anyhow!("candidates= must be in 2..=64, got {c}"));
+                }
+                job.config.race.candidates = c;
+            }
+            if let Some(s) = seeds {
+                if !(1..=64).contains(&s) {
+                    return Err(anyhow!("seeds= must be in 1..=64, got {s}"));
+                }
+                job.config.race.seeds_rung0 = s;
+            }
+            let report = pool.run_tune(&job);
+            let w = report.portfolio.winner_entry();
+            Ok(format!(
+                "ok tuner graph={} engine={} config=\"{}\" mean_cut={:.1} spin_updates={} saved_pct={:.1}",
+                job.spec.label(),
+                w.backend.name(),
+                report.winner().describe(),
+                w.mean_cut,
+                report.race.total_spin_updates,
+                100.0 * report.race.saved_fraction(),
+            ))
+        }
         "solve" => {
             let mut graph = None;
             let mut steps = 500usize;
@@ -41,16 +109,7 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
                     .split_once('=')
                     .ok_or_else(|| anyhow!("malformed token {tok:?}"))?;
                 match k {
-                    "graph" => {
-                        graph = Some(match v {
-                            "G11" => GraphSpec::G11,
-                            "G12" => GraphSpec::G12,
-                            "G13" => GraphSpec::G13,
-                            "G14" => GraphSpec::G14,
-                            "G15" => GraphSpec::G15,
-                            _ => return Err(anyhow!("unknown graph {v:?}")),
-                        });
-                    }
+                    "graph" => graph = Some(parse_graph(v)?),
                     "steps" => steps = v.parse()?,
                     "seed" => seed = v.parse()?,
                     "replicas" => replicas = Some(v.parse()?),

@@ -14,6 +14,7 @@ fn backend_names_and_parse_roundtrip() {
     for b in [
         BackendKind::Software,
         BackendKind::SoftwareSsa,
+        BackendKind::SoftwareSa,
         BackendKind::HwSim(DelayKind::DualBram),
         BackendKind::HwSim(DelayKind::ShiftReg),
         BackendKind::Pjrt,
@@ -21,6 +22,17 @@ fn backend_names_and_parse_roundtrip() {
         assert_eq!(BackendKind::parse(b.name()), Some(b), "{}", b.name());
     }
     assert_eq!(BackendKind::parse("nope"), None);
+}
+
+#[test]
+fn sa_backend_executes_jobs() {
+    let mut job = tiny_job(0, 60);
+    job.backend = Some(BackendKind::SoftwareSa);
+    let o = job::execute(&job, BackendKind::SoftwareSa);
+    assert!(o.error.is_none());
+    assert!(o.cut > 0);
+    // single-network budget accounting: n updates per sweep
+    assert_eq!(o.spin_updates, (24 * 60) as u64);
 }
 
 #[test]
@@ -226,6 +238,89 @@ fn handle_request_batch_runs() {
     assert!(resp.contains("runs=6"), "{resp}");
     assert!(resp.contains("mean_cut="), "{resp}");
     assert!(resp.contains("backend=sw-ssqa"), "{resp}");
+}
+
+#[test]
+fn poisoned_metrics_lock_still_records_and_drains() {
+    // a worker that panics while holding the metrics lock must not
+    // cascade: recording, snapshots and pool drains keep working
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    pool.submit(tiny_job(0, 10));
+    pool.drain();
+    pool.metrics.poison_for_test();
+    // the registry still accepts and serves entries past the poison flag
+    pool.submit(tiny_job(0, 10));
+    let outcomes = pool.drain();
+    assert_eq!(outcomes.len(), 1);
+    assert!(outcomes[0].error.is_none());
+    let snap = pool.metrics.snapshot();
+    assert_eq!(snap.get("sw-ssqa").unwrap().jobs, 2);
+    assert!(pool.metrics.render().contains("sw-ssqa"));
+    pool.shutdown();
+}
+
+#[test]
+fn outcome_spin_update_accounting() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    let job = tiny_job(0, 20); // 24 nodes × 4 replicas × 20 steps
+    pool.submit(job);
+    let o = pool.drain().pop().unwrap();
+    assert_eq!(o.spin_updates, 24 * 4 * 20);
+    assert_eq!(o.mean_energy, o.best_energy as f64);
+    assert_eq!(o.early_stops, 0);
+    assert_eq!(pool.metrics.snapshot().get("sw-ssqa").unwrap().total_spin_updates, 24 * 4 * 20);
+    pool.shutdown();
+}
+
+fn tiny_tune_job() -> TuneJob {
+    let g = torus_2d(4, 8, true, 0xC0);
+    let mut job = TuneJob::new(JobSpec::Inline(g), 11);
+    job.config = crate::tuner::TunerConfig::quick(11);
+    job.config.space.steps = vec![60, 90];
+    job.config.race.candidates = 4;
+    job.config.race.seeds_rung0 = 2;
+    job.config.race.monitor =
+        crate::tuner::MonitorConfig { stride: 8, patience: 3, min_steps: 24, tol: 0 };
+    job.config.portfolio.seeds = 2;
+    job
+}
+
+#[test]
+fn run_tune_matches_inline_tuner_bit_for_bit() {
+    // the pool fans candidate evaluations across workers; the report
+    // must be identical to the single-threaded inline tuner
+    let job = tiny_tune_job();
+    let graph = job.spec.graph();
+    let inline_report = crate::tuner::tune(&graph, &job.config);
+    let pool = WorkerPool::new(3, Router::new(RoutingPolicy::AllSoftware));
+    let pool_report = pool.run_tune(&job);
+    assert_eq!(inline_report.race.winner, pool_report.race.winner);
+    assert_eq!(inline_report.race.trace, pool_report.race.trace);
+    assert_eq!(inline_report.race.total_spin_updates, pool_report.race.total_spin_updates);
+    assert_eq!(inline_report.portfolio, pool_report.portfolio);
+    // evaluations were recorded against the software backend
+    let snap = pool.metrics.snapshot();
+    assert!(snap.get("sw-ssqa").unwrap().jobs >= 4, "rung evaluations metered");
+    pool.shutdown();
+}
+
+#[test]
+fn handle_request_tune_verb() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    let resp =
+        handle_request(&pool, "tune graph=G11 tuner_seed=3 quick=1 candidates=4 seeds=2")
+            .unwrap();
+    assert!(resp.starts_with("ok tuner graph=G11"), "{resp}");
+    assert!(resp.contains("engine="), "{resp}");
+    assert!(resp.contains("config=\"R="), "{resp}");
+    assert!(resp.contains("saved_pct="), "{resp}");
+    assert!(handle_request(&pool, "tune").is_err()); // graph missing
+    assert!(handle_request(&pool, "tune graph=G11 bogus=1").is_err());
+    // degenerate race sizes must come back as `err`, not a panic or a
+    // never-evaluated "winner"
+    assert!(handle_request(&pool, "tune graph=G11 candidates=0").is_err());
+    assert!(handle_request(&pool, "tune graph=G11 candidates=1").is_err());
+    assert!(handle_request(&pool, "tune graph=G11 seeds=0").is_err());
 }
 
 #[test]

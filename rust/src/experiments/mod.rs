@@ -11,11 +11,13 @@ mod ablation;
 mod algo;
 mod applications;
 mod hardware;
+mod tuner;
 
 pub use ablation::{compression, delay_ablation, partial_deactivation, quantization};
 pub use algo::{fig8, fig9, table2, table5_cuts};
 pub use applications::{coloring_demo, gi_tsp};
 pub use hardware::{adp_sweep, fig10, fig11, fig12, table3, table4, table5, table6};
+pub use tuner::tuner_study;
 
 use crate::Result;
 use std::path::PathBuf;
@@ -75,7 +77,7 @@ impl ExpContext {
 /// All experiment ids in paper order.
 pub const ALL_IDS: &[&str] = &[
     "table2", "fig8", "fig9", "fig10", "table3", "table4", "fig11", "table5", "table6", "fig12",
-    "adp", "gi", "coloring", "ablation",
+    "adp", "gi", "coloring", "ablation", "tuner",
 ];
 
 /// Dispatch by id; returns the Markdown fragment.
@@ -95,6 +97,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<String> {
         "gi" => gi_tsp(ctx)?,
         "coloring" => coloring_demo(ctx)?,
         "ablation" => ablation::all(ctx)?,
+        "tuner" => tuner_study(ctx)?,
         "all" => {
             let mut out = String::new();
             for id in ALL_IDS {

@@ -11,6 +11,20 @@ fn quick_ctx() -> ExpContext {
 }
 
 #[test]
+fn tuner_study_runs_quick_and_writes_csv() {
+    let ctx = quick_ctx();
+    let md = tuner_study(&ctx).unwrap();
+    assert!(md.contains("Tuner"), "{md}");
+    assert!(md.contains("G11") && md.contains("G14"), "{md}");
+    let csv = std::fs::read_to_string(ctx.out_dir.join("tuner.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 3, "header + one row per instance: {csv}");
+    for line in csv.lines().skip(1) {
+        let saved: f64 = line.split(',').nth(6).unwrap().parse().unwrap();
+        assert!(saved > 0.0, "racing must save budget: {line}");
+    }
+}
+
+#[test]
 fn table2_lists_all_five_graphs() {
     let ctx = quick_ctx();
     let md = table2(&ctx).unwrap();

@@ -22,6 +22,8 @@
 //!   Table 6, Figs. 11–12).
 //! * [`runtime`] — PJRT client loading the AOT-compiled JAX/Pallas step.
 //! * [`coordinator`] — job queue, worker pool, backend router, metrics.
+//! * [`tuner`] — adaptive auto-tuning: parameter racing, convergence
+//!   early stopping, engine portfolio selection.
 //! * [`experiments`] — one entry point per paper table/figure.
 
 pub mod annealer;
@@ -36,6 +38,7 @@ pub mod problems;
 pub mod resources;
 pub mod rng;
 pub mod runtime;
+pub mod tuner;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   solve       solve one benchmark instance on a chosen backend
+//!   tune        auto-tune parameters + engine for an instance (racing)
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!   resources   print the resource/power model for a configuration
 //!   serve       run the line-protocol coordinator server
@@ -32,18 +33,38 @@ fn main() {
 }
 
 /// Parse `--key value` / `--flag` pairs after the subcommand.
+///
+/// Indexed single-pass walk (no peek-then-`next().unwrap()` double
+/// advance): a `--key` consumes the following token as its value unless
+/// that token is itself a flag, in which case the key is a bare boolean
+/// (`"true"`). Dangling values and repeated keys are hard errors —
+/// a silently overwritten `--seed` would change results without a
+/// trace.
 fn flags(args: &[String]) -> Result<BTreeMap<String, String>> {
     let mut map = BTreeMap::new();
-    let mut it = args.iter().peekable();
-    while let Some(a) = it.next() {
-        let key = a
-            .strip_prefix("--")
-            .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?;
-        let val = match it.peek() {
-            Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+    let mut i = 0;
+    while i < args.len() {
+        let Some(key) = args[i].strip_prefix("--") else {
+            anyhow::bail!(
+                "dangling value {:?}: values must follow a --flag (write `--key {}`)",
+                args[i],
+                args[i]
+            );
+        };
+        if key.is_empty() {
+            anyhow::bail!("empty flag name (bare `--`)");
+        }
+        let val = match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => {
+                i += 1;
+                v.clone()
+            }
             _ => "true".to_string(),
         };
-        map.insert(key.to_string(), val);
+        if map.insert(key.to_string(), val).is_some() {
+            anyhow::bail!("flag --{key} given more than once");
+        }
+        i += 1;
     }
     Ok(map)
 }
@@ -72,6 +93,7 @@ fn run(args: &[String]) -> Result<()> {
     };
     match cmd.as_str() {
         "solve" => cmd_solve(&flags(&args[1..])?),
+        "tune" => cmd_tune(&flags(&args[1..])?),
         "calibrate" => cmd_calibrate(&flags(&args[1..])?),
         "experiment" => cmd_experiment(&flags(&args[1..])?),
         "resources" => cmd_resources(&flags(&args[1..])?),
@@ -91,8 +113,10 @@ fn print_help() {
          USAGE: ssqa <command> [--flags]\n\n\
          COMMANDS\n\
          \x20 solve       --graph G11 [--steps 500] [--seed 1] [--replicas 20]\n\
-         \x20             [--backend sw|ssa|hw|hw-shift-reg|pjrt] [--runs 1]\n\
-         \x20 experiment  --id table2|fig8|fig9|fig10|table3|table4|fig11|table5|table6|fig12|adp|gi|coloring|ablation|all\n\
+         \x20             [--backend sw|ssa|sa|hw|hw-shift-reg|pjrt] [--runs 1]\n\
+         \x20 tune        --problem maxcut --nodes 800 | --graph G11 [--tuner-seed 7]\n\
+         \x20             [--candidates 8] [--seeds 3] [--workers N] [--quick]\n\
+         \x20 experiment  --id table2|fig8|fig9|fig10|table3|table4|fig11|table5|table6|fig12|adp|gi|coloring|ablation|tuner|all\n\
          \x20             [--runs 100] [--steps 500] [--quick] [--out results]\n\
          \x20 resources   [--n 800] [--replicas 20] [--delay dual|shift] [--p 1] [--clock-mhz 166]\n\
          \x20 calibrate   --graph G11 [--runs 20] [--steps 500] [--replicas 20] [--jscale 8]\n\
@@ -153,6 +177,64 @@ fn cmd_solve(f: &BTreeMap<String, String>) -> Result<()> {
         );
     }
     println!("\n{}", pool.metrics.render());
+    Ok(())
+}
+
+/// Auto-tune an instance: sample a candidate pool, race it to one
+/// surviving configuration (successive halving + convergence-aware
+/// early stopping), then race the SA/SSA/SSQA/hw engines on the
+/// winner's budget. Runs through the coordinator so candidate
+/// evaluations fan out across the worker pool; deterministic under a
+/// fixed `--tuner-seed`.
+fn cmd_tune(f: &BTreeMap<String, String>) -> Result<()> {
+    let tuner_seed: u64 = get(f, "tuner-seed", 7)?;
+    let problem = f.get("problem").map(String::as_str).unwrap_or("maxcut");
+    if problem != "maxcut" {
+        anyhow::bail!("unknown problem {problem:?} (the tuner currently races MAX-CUT)");
+    }
+    let spec = if let Some(name) = f.get("graph") {
+        ssqa::coordinator::JobSpec::Named(graph_spec(name)?)
+    } else {
+        // generated instance of the requested size: the G11-class torus
+        // when the node count tiles 40 columns, a ±1 random graph of
+        // matching density otherwise — deterministic either way
+        let nodes: usize = get(f, "nodes", 800)?;
+        anyhow::ensure!(nodes >= 8, "--nodes must be at least 8");
+        let g = if nodes % 40 == 0 {
+            ssqa::graph::torus_2d(nodes / 40, 40, true, 0x70E_5EED)
+        } else {
+            ssqa::graph::random_graph(nodes, 2 * nodes, &[-1, 1], 0x70E_5EED)
+        };
+        ssqa::coordinator::JobSpec::Inline(g)
+    };
+
+    let mut job = ssqa::coordinator::TuneJob::new(spec, tuner_seed);
+    if f.get("quick").is_some() {
+        job.config = ssqa::tuner::TunerConfig::quick(tuner_seed);
+    }
+    if let Some(c) = f.get("candidates") {
+        let c: usize = c.parse().map_err(|e| anyhow::anyhow!("--candidates: {e}"))?;
+        anyhow::ensure!(c >= 2, "--candidates must be at least 2 (a race has to prune)");
+        job.config.race.candidates = c;
+    }
+    if let Some(s) = f.get("seeds") {
+        let s: usize = s.parse().map_err(|e| anyhow::anyhow!("--seeds: {e}"))?;
+        anyhow::ensure!(s >= 1, "--seeds must be at least 1");
+        job.config.race.seeds_rung0 = s;
+    }
+    let workers: usize = get(f, "workers", ssqa::config::num_threads())?;
+
+    let pool = WorkerPool::new(workers, Router::new(RoutingPolicy::AllSoftware));
+    println!(
+        "tuning {} (tuner seed {tuner_seed}, {} candidates × {} rung-0 seeds, {} workers)\n",
+        job.spec.label(),
+        job.config.race.candidates,
+        job.config.race.seeds_rung0,
+        pool.workers(),
+    );
+    let report = pool.run_tune(&job);
+    println!("{}", report.render());
+    println!("{}", pool.metrics.render());
     Ok(())
 }
 
@@ -276,6 +358,48 @@ fn cmd_serve(f: &BTreeMap<String, String>) -> Result<()> {
     let _ = handle_request(&pool, "ping")?;
     drop(pool);
     ssqa::coordinator::serve(&addr, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::flags;
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parses_key_value_and_bare_flags() {
+        let f = flags(&strs(&["--graph", "G11", "--quick", "--steps", "500"])).unwrap();
+        assert_eq!(f.get("graph").map(String::as_str), Some("G11"));
+        assert_eq!(f.get("quick").map(String::as_str), Some("true"));
+        assert_eq!(f.get("steps").map(String::as_str), Some("500"));
+    }
+
+    #[test]
+    fn flags_bare_flag_at_end_and_negative_values() {
+        let f = flags(&strs(&["--qmin", "-5", "--quick"])).unwrap();
+        assert_eq!(f.get("qmin").map(String::as_str), Some("-5"));
+        assert_eq!(f.get("quick").map(String::as_str), Some("true"));
+        assert!(flags(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn flags_rejects_dangling_value() {
+        let err = flags(&strs(&["G11", "--steps", "500"])).unwrap_err();
+        assert!(err.to_string().contains("dangling value"), "{err}");
+        // a value can never follow a completed key/value pair either
+        let err = flags(&strs(&["--graph", "G11", "stray"])).unwrap_err();
+        assert!(err.to_string().contains("dangling value"), "{err}");
+    }
+
+    #[test]
+    fn flags_rejects_repeated_key_and_bare_dashes() {
+        let err = flags(&strs(&["--seed", "1", "--seed", "2"])).unwrap_err();
+        assert!(err.to_string().contains("more than once"), "{err}");
+        let err = flags(&strs(&["--"])).unwrap_err();
+        assert!(err.to_string().contains("empty flag"), "{err}");
+    }
 }
 
 fn cmd_export(f: &BTreeMap<String, String>) -> Result<()> {

@@ -1,0 +1,141 @@
+//! Convergence-aware early stopping (DESIGN.md §5.2).
+//!
+//! The paper's headline observation is that SSQA converges fast enough
+//! that only the **final replica states** are needed (no best-seen
+//! tracking in hardware). [`ConvergenceMonitor`] turns that observation
+//! into a runtime control: it watches the best-replica energy on a
+//! stride and stops a run once the energy has plateaued — the remaining
+//! schedule would only re-confirm the final state the paper already
+//! trusts.
+//!
+//! The monitor implements [`StepObserver`], so it plugs into
+//! `SsqaEngine::run_observed` / `run_batch_observed` directly. §Perf:
+//! all buffers (the replica-column scratch and the trace) are allocated
+//! once in `new`; `observe` is allocation-free, and off-stride steps
+//! cost one branch.
+
+use crate::annealer::{StepObserver, SsqaState};
+use crate::graph::IsingModel;
+
+/// Plateau-detection knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MonitorConfig {
+    /// Observe every `stride` steps (energy evaluation is `O(R·(N+nnz))`
+    /// per observation — the stride amortizes it below the cost of the
+    /// steps in between).
+    pub stride: usize,
+    /// Stop after this many consecutive observations without an
+    /// improvement greater than `tol`.
+    pub patience: usize,
+    /// Never stop before this many steps (the noisy early phase always
+    /// plateaus briefly while Q is still near zero).
+    pub min_steps: usize,
+    /// Absolute energy-improvement threshold: an observation only
+    /// resets the patience counter if it improves the best seen by
+    /// more than this.
+    pub tol: i64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        Self { stride: 16, patience: 4, min_steps: 96, tol: 0 }
+    }
+}
+
+impl MonitorConfig {
+    /// Config that never stops a run (monitoring/tracing only).
+    pub fn never_stop() -> Self {
+        Self { patience: usize::MAX, ..Self::default() }
+    }
+}
+
+/// Watches the best-replica energy of an SSQA run and requests an early
+/// stop when it plateaus. One monitor serves a whole batched seed set:
+/// `begin_run` resets the per-run state at every seed boundary.
+pub struct ConvergenceMonitor<'m> {
+    pub cfg: MonitorConfig,
+    model: &'m IsingModel,
+    /// Replica-column scratch for the energy evaluation (preallocated).
+    col: Vec<i32>,
+    /// Best energy seen in the current run.
+    best: i64,
+    /// Consecutive observations without improvement.
+    stale: usize,
+    /// Whether the current (or last) run was stopped by the monitor.
+    stopped_early: bool,
+    /// `(step, best_replica_energy)` observations of the current run.
+    trace: Vec<(usize, i64)>,
+}
+
+impl<'m> ConvergenceMonitor<'m> {
+    pub fn new(cfg: MonitorConfig, model: &'m IsingModel) -> Self {
+        assert!(cfg.stride > 0, "stride must be positive");
+        Self {
+            cfg,
+            model,
+            col: vec![0; model.n()],
+            best: i64::MAX,
+            stale: 0,
+            stopped_early: false,
+            trace: Vec::with_capacity(64),
+        }
+    }
+
+    /// Whether the last observed run was stopped before its budget.
+    pub fn stopped_early(&self) -> bool {
+        self.stopped_early
+    }
+
+    /// `(step, best_replica_energy)` observations of the last run.
+    pub fn trace(&self) -> &[(usize, i64)] {
+        &self.trace
+    }
+
+    /// Lowest energy over all replica columns of `state` (the paper's
+    /// final-replica readout, evaluated mid-run).
+    fn best_replica_energy(&mut self, st: &SsqaState) -> i64 {
+        let r = st.rng.replicas();
+        let n = self.model.n();
+        debug_assert_eq!(st.sigma.len(), n * r);
+        let mut best = i64::MAX;
+        for k in 0..r {
+            for (i, slot) in self.col.iter_mut().enumerate() {
+                *slot = st.sigma[i * r + k];
+            }
+            best = best.min(self.model.energy(&self.col));
+        }
+        best
+    }
+}
+
+impl StepObserver for ConvergenceMonitor<'_> {
+    fn begin_run(&mut self, _seed: u32) {
+        self.best = i64::MAX;
+        self.stale = 0;
+        self.stopped_early = false;
+        self.trace.clear();
+    }
+
+    fn observe(&mut self, t: usize, state: &SsqaState) -> bool {
+        let done = t + 1;
+        if done % self.cfg.stride != 0 {
+            return false;
+        }
+        let e = self.best_replica_energy(state);
+        self.trace.push((t, e));
+        if e < self.best.saturating_sub(self.cfg.tol) {
+            self.best = e;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+        }
+        if done < self.cfg.min_steps {
+            return false;
+        }
+        if self.stale >= self.cfg.patience {
+            self.stopped_early = true;
+            return true;
+        }
+        false
+    }
+}

@@ -1,0 +1,181 @@
+//! Adaptive auto-tuning: parameter-space sampling, successive-halving
+//! racing, convergence-aware early stopping and an engine portfolio
+//! (DESIGN.md §5).
+//!
+//! The paper fixes one hand-calibrated configuration (R = 20, 500
+//! steps); pc-COP and Raimondo et al. show SQA quality is highly
+//! sensitive to exactly these knobs. This subsystem closes the loop the
+//! batched runners opened: [`ParamSpace`] describes the searchable
+//! knobs, [`race`] prunes a sampled candidate pool on cheap batched
+//! seed sets (early-stopped by [`ConvergenceMonitor`]), and
+//! [`run_portfolio`] pits the tuned SSQA configuration against the
+//! SA/SSA baselines and the cycle-accurate hardware model under one
+//! spin-update budget.
+//!
+//! Everything is bit-reproducible from `TunerConfig::tuner_seed`: same
+//! seed + instance ⇒ identical winning configuration, identical racing
+//! trace (asserted by `tests/proptests.rs`).
+//!
+//! Entry points: [`tune`] runs inline (scoped threads);
+//! `WorkerPool::run_tune` fans the same race across the coordinator's
+//! workers; `ssqa tune` is the CLI face.
+
+mod converge;
+mod portfolio;
+mod race;
+mod space;
+
+pub use converge::{ConvergenceMonitor, MonitorConfig};
+pub use portfolio::{
+    fpga_estimate, run_portfolio, FpgaEstimate, PortfolioConfig, PortfolioEntry, PortfolioReport,
+};
+pub use race::{
+    evaluate_candidate, race, EvalBackend, EvalContext, EvalScore, InlineEval, RaceConfig,
+    RaceOutcome, RungRow,
+};
+pub use space::{Candidate, ParamSpace};
+
+use crate::graph::{Graph, IsingModel};
+use crate::problems::maxcut;
+use std::fmt::Write as _;
+
+/// Full tuner configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunerConfig {
+    pub space: ParamSpace,
+    pub race: RaceConfig,
+    pub portfolio: PortfolioConfig,
+    /// Seeds candidate sampling (and, via `race.seed0`, evaluation).
+    pub tuner_seed: u64,
+}
+
+impl TunerConfig {
+    /// Defaults for G-set-class instances.
+    pub fn gset_default(tuner_seed: u64) -> Self {
+        Self {
+            space: ParamSpace::gset_default(),
+            race: RaceConfig::default(),
+            portfolio: PortfolioConfig::default(),
+            tuner_seed,
+        }
+    }
+
+    /// Shrunken configuration for smoke tests and `--quick` runs.
+    pub fn quick(tuner_seed: u64) -> Self {
+        Self {
+            space: ParamSpace::quick(),
+            race: RaceConfig::quick(),
+            portfolio: PortfolioConfig { seeds: 2, ..PortfolioConfig::default() },
+            tuner_seed,
+        }
+    }
+}
+
+/// Everything a tuning run produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneReport {
+    pub race: RaceOutcome,
+    pub portfolio: PortfolioReport,
+}
+
+impl TuneReport {
+    /// The tuned configuration.
+    pub fn winner(&self) -> &Candidate {
+        &self.race.winner
+    }
+
+    /// Render the racing table, the portfolio table and the verdict as
+    /// the CLI/server report.
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "== racing table ==\n\
+             rung cand  config                                   seeds  mean-E     best-E   mean-cut  spin-upd  early  fate\n",
+        );
+        for row in &self.race.trace {
+            let _ = writeln!(
+                out,
+                "{:>4} {:>4}  {:<40} {:>5} {:>9.1} {:>8} {:>9.1} {:>9} {:>5}  {}",
+                row.rung,
+                row.cand.id,
+                row.cand.describe(),
+                row.seeds,
+                row.score.mean_energy,
+                row.score.best_energy,
+                row.score.mean_cut,
+                row.score.spin_updates,
+                row.score.early_stops,
+                if row.survived { "kept" } else { "cut" },
+            );
+        }
+        let _ = writeln!(
+            out,
+            "\nracing spent {} spin-updates vs {} untuned full-budget ({:.1}% saved; {} without early stopping)",
+            self.race.total_spin_updates,
+            self.race.full_budget_updates,
+            100.0 * self.race.saved_fraction(),
+            self.race.no_earlystop_updates,
+        );
+
+        out.push_str(
+            "\n== engine portfolio ==\n\
+             backend         steps  runs   mean-E     best-E   mean-cut   best  spin-upd     fpga-lat    fpga-E\n",
+        );
+        for e in &self.portfolio.entries {
+            let (lat, enj) = e
+                .fpga
+                .map(|f| {
+                    (format!("{:.3}ms", f.latency_s * 1e3), format!("{:.3}mJ", f.energy_j * 1e3))
+                })
+                .unwrap_or_else(|| ("-".into(), "-".into()));
+            let _ = writeln!(
+                out,
+                "{:<15} {:>5} {:>5} {:>9.1} {:>9} {:>9.1} {:>6} {:>9}  {:>10} {:>9}",
+                e.backend.name(),
+                e.steps,
+                e.runs,
+                e.mean_energy,
+                e.best_energy,
+                e.mean_cut,
+                e.best_cut,
+                e.spin_updates,
+                lat,
+                enj,
+            );
+        }
+        let w = self.portfolio.winner_entry();
+        let _ = writeln!(
+            out,
+            "\nwinner: {} with {} (mean cut {:.1}, mean energy {:.1})",
+            w.backend.name(),
+            self.race.winner.describe(),
+            w.mean_cut,
+            w.mean_energy,
+        );
+        out
+    }
+}
+
+/// Tune against a prebuilt (graph, model) pair through any evaluation
+/// backend — the coordinator path passes its `Arc`-shared model and a
+/// pool-fanning backend here.
+pub fn tune_shared<E: EvalBackend>(
+    graph: &Graph,
+    model: &IsingModel,
+    cfg: &TunerConfig,
+    eval: &E,
+) -> TuneReport {
+    let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
+    let race = race::race(graph, model, cands, &cfg.race, eval);
+    let portfolio = portfolio::run_portfolio(graph, model, &race.winner, &cfg.portfolio);
+    TuneReport { race, portfolio }
+}
+
+/// Tune an instance end-to-end inline: build the model once, race with
+/// the scoped-thread evaluation backend, then run the portfolio.
+pub fn tune(graph: &Graph, cfg: &TunerConfig) -> TuneReport {
+    let model = maxcut::ising_from_graph(graph, cfg.space.j_scale);
+    tune_shared(graph, &model, cfg, &InlineEval)
+}
+
+#[cfg(test)]
+mod tests;

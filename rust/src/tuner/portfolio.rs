@@ -1,0 +1,227 @@
+//! Engine portfolio: race SA vs SSA vs SSQA vs the hardware cycle
+//! model under one spin-update budget (DESIGN.md §5.4).
+//!
+//! The racing winner fixes the SSQA configuration; the classical
+//! baselines get the *same* spin-update budget (`n·R·steps` per run,
+//! re-expressed as sweeps for the single-network engines), so the
+//! portfolio compares algorithms, not budgets. The hardware entry runs
+//! the paper's cycle-accurate dual-BRAM machine — bit-identical to the
+//! SSQA software engine by construction — and contributes the modeled
+//! deployment cost via [`energy::fpga_latency_s`]/[`energy::energy_j`].
+//!
+//! Winner selection uses mean best energy only (never wall-clock), so
+//! the portfolio is deterministic across hosts and thread counts.
+
+use super::space::Candidate;
+use crate::annealer::{
+    run_seed, Annealer, RunResult, SaEngine, SsaEngine, SsaParams, SsqaEngine,
+};
+use crate::coordinator::BackendKind;
+use crate::energy::{energy_j, fpga_latency_s};
+use crate::graph::{Graph, IsingModel};
+use crate::hw::{DelayKind, HwConfig, HwEngine};
+use crate::problems::maxcut;
+use crate::resources::ResourceModel;
+
+/// Portfolio knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PortfolioConfig {
+    /// Independent seeds per software engine.
+    pub seeds: usize,
+    /// Base seed (per-run seeds derive via [`run_seed`]).
+    pub seed0: u32,
+    /// Seeds for the cycle-accurate hardware model. It is bit-identical
+    /// to the SSQA engine, so one seed suffices to anchor the cost
+    /// model; more only slow the cycle simulation down.
+    pub hw_seeds: usize,
+    /// Clock for the FPGA latency/energy estimate (Hz).
+    pub clock_hz: f64,
+}
+
+impl Default for PortfolioConfig {
+    fn default() -> Self {
+        Self { seeds: 4, seed0: 0xB0A7, hw_seeds: 1, clock_hz: 166e6 }
+    }
+}
+
+/// Modeled FPGA deployment cost of a configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaEstimate {
+    pub latency_s: f64,
+    pub power_w: f64,
+    pub energy_j: f64,
+}
+
+/// One engine's row in the portfolio table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortfolioEntry {
+    pub backend: BackendKind,
+    /// Steps per run on this engine (budget-matched across engines).
+    pub steps: usize,
+    pub runs: usize,
+    pub mean_energy: f64,
+    pub best_energy: i64,
+    pub mean_cut: f64,
+    pub best_cut: i64,
+    /// Spin updates executed across the entry's runs.
+    pub spin_updates: u64,
+    /// Modeled FPGA deployment cost (replica engines only — the
+    /// single-network baselines have no counterpart on the paper's
+    /// machine).
+    pub fpga: Option<FpgaEstimate>,
+}
+
+/// The portfolio verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortfolioReport {
+    /// One entry per engine, in racing order
+    /// (SSQA, hardware model, SSA, SA).
+    pub entries: Vec<PortfolioEntry>,
+    /// Index of the winning entry (lowest mean energy; ties go to the
+    /// earlier entry).
+    pub winner: usize,
+}
+
+impl PortfolioReport {
+    pub fn winner_entry(&self) -> &PortfolioEntry {
+        &self.entries[self.winner]
+    }
+}
+
+fn entry_from_results(
+    backend: BackendKind,
+    graph: &Graph,
+    steps: usize,
+    updates_per_run: u64,
+    results: &[RunResult],
+    fpga: Option<FpgaEstimate>,
+) -> PortfolioEntry {
+    let runs = results.len();
+    let mut sum_energy = 0i64;
+    let mut sum_cut = 0i64;
+    let mut best_energy = i64::MAX;
+    let mut best_cut = i64::MIN;
+    for res in results {
+        sum_energy += res.best_energy;
+        best_energy = best_energy.min(res.best_energy);
+        let cut = maxcut::cut_value(graph, &res.best_sigma);
+        sum_cut += cut;
+        best_cut = best_cut.max(cut);
+    }
+    PortfolioEntry {
+        backend,
+        steps,
+        runs,
+        mean_energy: if runs == 0 { 0.0 } else { sum_energy as f64 / runs as f64 },
+        best_energy: if runs == 0 { 0 } else { best_energy },
+        mean_cut: if runs == 0 { 0.0 } else { sum_cut as f64 / runs as f64 },
+        best_cut: if runs == 0 { 0 } else { best_cut },
+        spin_updates: updates_per_run * runs as u64,
+        fpga,
+    }
+}
+
+/// Modeled cost of running `cand` for its full budget on the paper's
+/// machine at `clock_hz`.
+pub fn fpga_estimate(
+    model: &IsingModel,
+    cand: &Candidate,
+    delay: DelayKind,
+    clock_hz: f64,
+) -> FpgaEstimate {
+    let latency_s = fpga_latency_s(model, cand.steps, delay, 1, clock_hz);
+    let power_w = ResourceModel::default()
+        .estimate(model.n(), cand.params.replicas, delay, 1, clock_hz)
+        .power_w;
+    FpgaEstimate { latency_s, power_w, energy_j: energy_j(power_w, latency_s) }
+}
+
+/// Race the four engines on `winner`'s budget. Runs at the full step
+/// budget with no early stopping: the portfolio's question is which
+/// *algorithm* wins at a fixed budget, and full-budget runs keep the
+/// software SSQA entry and the hardware model bit-comparable.
+pub fn run_portfolio(
+    graph: &Graph,
+    model: &IsingModel,
+    winner: &Candidate,
+    cfg: &PortfolioConfig,
+) -> PortfolioReport {
+    let n = model.n();
+    let r = winner.params.replicas;
+    let seeds: Vec<u32> = (0..cfg.seeds as u32).map(|s| run_seed(cfg.seed0, s)).collect();
+    // equal currency: one SSQA run spends n·R·steps updates; the
+    // single-network engines spend n per sweep, so R·steps sweeps match
+    let sweep_steps = r * winner.steps;
+    let ssqa_updates = winner.full_budget_updates(n);
+    let fpga = fpga_estimate(model, winner, winner.delay, cfg.clock_hz);
+
+    let mut entries = Vec::with_capacity(4);
+
+    // SSQA software engine (the racing winner's configuration)
+    let eng = SsqaEngine::new(winner.params, winner.steps);
+    let ssqa_results = eng.run_batch(model, winner.steps, &seeds);
+    entries.push(entry_from_results(
+        BackendKind::Software,
+        graph,
+        winner.steps,
+        ssqa_updates,
+        &ssqa_results,
+        Some(fpga),
+    ));
+
+    // cycle-accurate hardware model — bit-identical trajectories, so a
+    // single seed anchors the deployment estimate
+    let hw_results: Vec<RunResult> = seeds
+        .iter()
+        .take(cfg.hw_seeds.max(1))
+        .map(|&s| {
+            let mut hw = HwEngine::new(
+                HwConfig { delay: winner.delay, clock_hz: cfg.clock_hz, ..HwConfig::default() },
+                winner.params,
+            );
+            hw.anneal(model, winner.steps, s)
+        })
+        .collect();
+    entries.push(entry_from_results(
+        BackendKind::HwSim(winner.delay),
+        graph,
+        winner.steps,
+        ssqa_updates,
+        &hw_results,
+        Some(fpga),
+    ));
+
+    // SSA baseline at the matched sweep budget
+    let ssa_results: Vec<RunResult> = crate::config::par_map(&seeds, |&s| {
+        SsaEngine::new(SsaParams::gset_default(), sweep_steps).anneal(model, sweep_steps, s)
+    });
+    entries.push(entry_from_results(
+        BackendKind::SoftwareSsa,
+        graph,
+        sweep_steps,
+        (n * sweep_steps) as u64,
+        &ssa_results,
+        None,
+    ));
+
+    // classical Metropolis SA at the matched sweep budget
+    let sa_results: Vec<RunResult> = crate::config::par_map(&seeds, |&s| {
+        SaEngine::gset_default().anneal(model, sweep_steps, s)
+    });
+    entries.push(entry_from_results(
+        BackendKind::SoftwareSa,
+        graph,
+        sweep_steps,
+        (n * sweep_steps) as u64,
+        &sa_results,
+        None,
+    ));
+
+    let winner_idx = entries
+        .iter()
+        .enumerate()
+        .min_by(|(ai, a), (bi, b)| a.mean_energy.total_cmp(&b.mean_energy).then(ai.cmp(bi)))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    PortfolioReport { entries, winner: winner_idx }
+}

@@ -1,0 +1,290 @@
+//! Successive-halving racing over candidate configurations
+//! (DESIGN.md §5.3).
+//!
+//! Each rung evaluates every surviving candidate on a shared batched
+//! seed set (through `SsqaEngine::run_batch_observed`, with the
+//! convergence monitor stopping plateaued runs early), ranks them by
+//! mean best-replica energy, prunes the bottom half and doubles the
+//! seed budget for the survivors. Everything is deterministic given the
+//! tuner seed: sampling, seed derivation (`annealer::run_seed`),
+//! ranking tie-breaks and the recorded trace.
+//!
+//! Evaluation is abstracted behind [`EvalBackend`] so the same racing
+//! loop runs inline (scoped-thread [`par_map`] over candidates) or
+//! fanned across the coordinator's `WorkerPool` (`TuneJob`).
+
+use super::converge::{ConvergenceMonitor, MonitorConfig};
+use super::space::Candidate;
+use crate::annealer::{run_seed, SsqaEngine};
+use crate::config::par_map;
+use crate::graph::{Graph, IsingModel};
+use crate::problems::maxcut;
+
+/// Racing knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RaceConfig {
+    /// Initial candidate-pool size (halved every rung).
+    pub candidates: usize,
+    /// Seeds per candidate in the first rung (multiplied by `eta` every
+    /// rung a candidate survives).
+    pub seeds_rung0: usize,
+    /// Prune factor and budget-growth factor (classic halving: 2).
+    pub eta: usize,
+    /// Base evaluation seed; per-run seeds derive via
+    /// [`run_seed`] so racing statistics are comparable with
+    /// `multi_run`/`multi_run_batched` sweeps of the same seed.
+    pub seed0: u32,
+    /// Early-stopping criterion applied to every evaluation run.
+    pub monitor: MonitorConfig,
+}
+
+impl Default for RaceConfig {
+    fn default() -> Self {
+        Self {
+            candidates: 8,
+            seeds_rung0: 3,
+            eta: 2,
+            seed0: 0x5EED,
+            monitor: MonitorConfig::default(),
+        }
+    }
+}
+
+impl RaceConfig {
+    /// Shrunken race for smoke tests and `--quick` experiments.
+    pub fn quick() -> Self {
+        Self { candidates: 4, seeds_rung0: 2, ..Self::default() }
+    }
+}
+
+/// Aggregate score of one candidate on one rung's seed set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalScore {
+    /// Mean best-replica energy over the seeds (the ranking key —
+    /// energy generalizes beyond MAX-CUT, and for MAX-CUT it orders
+    /// identically to mean cut).
+    pub mean_energy: f64,
+    /// Lowest energy over the seeds.
+    pub best_energy: i64,
+    /// Mean cut over the seeds (reporting only).
+    pub mean_cut: f64,
+    /// Best cut over the seeds.
+    pub best_cut: i64,
+    /// Spin updates actually executed (`Σ_runs n·R·steps_run` — early
+    /// stops make this less than the full budget).
+    pub spin_updates: u64,
+    /// Runs that the convergence monitor stopped before their budget.
+    pub early_stops: usize,
+    /// Seeds evaluated.
+    pub runs: usize,
+}
+
+/// One row of the racing trace: candidate × rung × score × verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RungRow {
+    pub rung: usize,
+    pub cand: Candidate,
+    pub seeds: usize,
+    pub score: EvalScore,
+    pub survived: bool,
+}
+
+/// Result of a race.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RaceOutcome {
+    /// The surviving configuration.
+    pub winner: Candidate,
+    /// Every (rung, candidate) evaluation in rung-then-rank order.
+    pub trace: Vec<RungRow>,
+    /// Spin updates the race actually executed.
+    pub total_spin_updates: u64,
+    /// Spin updates an untuned full-budget sweep would execute: every
+    /// initial candidate at its full step budget, no early stopping,
+    /// over the seed-evidence the race accumulated on its winner
+    /// (`seeds_rung0·Σ_r eta^r`) — the brute-force sweep that reaches
+    /// the same final confidence. Racing always costs strictly less
+    /// (the alive set shrinks every rung), before early stopping saves
+    /// more.
+    pub full_budget_updates: u64,
+    /// Same racing schedule without early stopping (isolates the
+    /// convergence monitor's share of the savings).
+    pub no_earlystop_updates: u64,
+}
+
+impl RaceOutcome {
+    /// Fraction of the brute-force budget the race saved.
+    pub fn saved_fraction(&self) -> f64 {
+        if self.full_budget_updates == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_spin_updates as f64 / self.full_budget_updates as f64
+    }
+}
+
+/// Shared inputs of one rung's evaluations.
+pub struct EvalContext<'a> {
+    pub graph: &'a Graph,
+    pub model: &'a IsingModel,
+    /// The rung's seed list (shared by every candidate).
+    pub seeds: &'a [u32],
+    pub monitor: MonitorConfig,
+}
+
+/// Where candidate evaluations execute. Implementations must be
+/// deterministic and order-preserving: `evaluate` returns one score per
+/// candidate, in candidate order, each bit-identical to
+/// [`evaluate_candidate`] on the same inputs.
+pub trait EvalBackend {
+    fn evaluate(&self, ctx: &EvalContext<'_>, cands: &[Candidate]) -> Vec<EvalScore>;
+}
+
+/// Evaluate one candidate on a seed set: one engine, one batched state,
+/// one convergence monitor across all the seeds.
+pub fn evaluate_candidate(
+    graph: &Graph,
+    model: &IsingModel,
+    cand: &Candidate,
+    seeds: &[u32],
+    monitor: MonitorConfig,
+) -> EvalScore {
+    let eng = SsqaEngine::new(cand.params, cand.steps);
+    let mut mon = ConvergenceMonitor::new(monitor, model);
+    let n = model.n();
+    let r = cand.params.replicas;
+    let mut score = EvalScore {
+        mean_energy: 0.0,
+        best_energy: i64::MAX,
+        mean_cut: 0.0,
+        best_cut: i64::MIN,
+        spin_updates: 0,
+        early_stops: 0,
+        runs: 0,
+    };
+    let mut sum_energy = 0i64;
+    let mut sum_cut = 0i64;
+    for res in eng.run_batch_observed(model, cand.steps, seeds, &mut mon) {
+        sum_energy += res.best_energy;
+        score.best_energy = score.best_energy.min(res.best_energy);
+        let cut = maxcut::cut_value(graph, &res.best_sigma);
+        sum_cut += cut;
+        score.best_cut = score.best_cut.max(cut);
+        score.spin_updates += (n * r * res.steps) as u64;
+        score.early_stops += (res.steps < cand.steps) as usize;
+        score.runs += 1;
+    }
+    if score.runs > 0 {
+        score.mean_energy = sum_energy as f64 / score.runs as f64;
+        score.mean_cut = sum_cut as f64 / score.runs as f64;
+    } else {
+        score.best_energy = 0;
+        score.best_cut = 0;
+    }
+    score
+}
+
+/// Inline evaluation backend: candidates fan out over the scoped thread
+/// pool ([`par_map`] preserves candidate order, and every evaluation is
+/// independent and deterministic, so the fan-out does not perturb the
+/// race).
+pub struct InlineEval;
+
+impl EvalBackend for InlineEval {
+    fn evaluate(&self, ctx: &EvalContext<'_>, cands: &[Candidate]) -> Vec<EvalScore> {
+        par_map(cands, |c| evaluate_candidate(ctx.graph, ctx.model, c, ctx.seeds, ctx.monitor))
+    }
+}
+
+/// The rung's seed list: the first `count` sweep seeds off `seed0`,
+/// XOR-tagged with the rung so successive rungs re-draw fresh
+/// trajectories rather than replaying the previous rung's.
+fn rung_seeds(seed0: u32, rung: usize, count: usize) -> Vec<u32> {
+    let base = seed0 ^ (rung as u32).wrapping_mul(0x9E37_79B9);
+    (0..count as u32).map(|r| run_seed(base, r)).collect()
+}
+
+/// Run the full race over a sampled pool. `cands` must be non-empty
+/// (use [`super::ParamSpace::sample_n`]); the pool is halved every rung
+/// until one candidate survives.
+pub fn race<E: EvalBackend>(
+    graph: &Graph,
+    model: &IsingModel,
+    cands: Vec<Candidate>,
+    cfg: &RaceConfig,
+    eval: &E,
+) -> RaceOutcome {
+    assert!(!cands.is_empty(), "race needs at least one candidate");
+    assert!(cfg.eta >= 2, "eta must be at least 2");
+    assert!(cfg.seeds_rung0 >= 1, "each rung needs at least one evaluation seed");
+    let n = model.n();
+
+    // the brute-force comparator: every initial candidate, full budget,
+    // no early stops, at the seed-evidence the race accumulates on its
+    // winner (`seeds_rung0·Σ_r eta^r` over the executed rungs — the
+    // seed count an untuned grid needs to match the winner's final
+    // confidence). Racing strictly undercuts this even without early
+    // stopping: rung r costs `seeds_rung0·eta^r·Σ_{alive_r} b_c` and
+    // the alive set only shrinks.
+    let mut rungs_needed = 0usize;
+    let mut pool = cands.len();
+    while pool > 1 {
+        pool = pool.div_ceil(cfg.eta);
+        rungs_needed += 1;
+    }
+    let mut evidence_seeds = 0usize;
+    let mut rung_seed_count = cfg.seeds_rung0;
+    for _ in 0..rungs_needed {
+        evidence_seeds = evidence_seeds.saturating_add(rung_seed_count);
+        rung_seed_count = rung_seed_count.saturating_mul(cfg.eta);
+    }
+    let full_budget_updates: u64 =
+        cands.iter().map(|c| c.full_budget_updates(n) * evidence_seeds as u64).sum();
+
+    let mut alive = cands;
+    let mut trace: Vec<RungRow> = Vec::new();
+    let mut total_spin_updates = 0u64;
+    let mut no_earlystop_updates = 0u64;
+    let mut seeds_per = cfg.seeds_rung0;
+    let mut rung = 0usize;
+    while alive.len() > 1 {
+        let seeds = rung_seeds(cfg.seed0, rung, seeds_per);
+        let ctx = EvalContext { graph, model, seeds: &seeds, monitor: cfg.monitor };
+        let scores = eval.evaluate(&ctx, &alive);
+        debug_assert_eq!(scores.len(), alive.len(), "backend dropped an evaluation");
+
+        // rank: lower mean energy wins; ties resolve on the cheaper
+        // evaluation, then on candidate id — fully deterministic
+        let mut order: Vec<usize> = (0..alive.len()).collect();
+        order.sort_by(|&a, &b| {
+            scores[a]
+                .mean_energy
+                .total_cmp(&scores[b].mean_energy)
+                .then(scores[a].spin_updates.cmp(&scores[b].spin_updates))
+                .then(alive[a].id.cmp(&alive[b].id))
+        });
+        let keep = alive.len().div_ceil(cfg.eta);
+        for (rank, &idx) in order.iter().enumerate() {
+            total_spin_updates += scores[idx].spin_updates;
+            no_earlystop_updates += alive[idx].full_budget_updates(n) * scores[idx].runs as u64;
+            trace.push(RungRow {
+                rung,
+                cand: alive[idx].clone(),
+                seeds: seeds_per,
+                score: scores[idx].clone(),
+                survived: rank < keep,
+            });
+        }
+        let survivors: Vec<Candidate> =
+            order[..keep].iter().map(|&idx| alive[idx].clone()).collect();
+        alive = survivors;
+        seeds_per = seeds_per.saturating_mul(cfg.eta);
+        rung += 1;
+    }
+
+    RaceOutcome {
+        winner: alive.into_iter().next().expect("one survivor"),
+        trace,
+        total_spin_updates,
+        full_budget_updates,
+        no_earlystop_updates,
+    }
+}

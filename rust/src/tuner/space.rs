@@ -1,0 +1,163 @@
+//! The searchable hyper-parameter space (DESIGN.md §5.1).
+//!
+//! pc-COP (arXiv 2504.04543) makes every annealing knob a runtime
+//! register; this module is the software twin of that register file: a
+//! [`ParamSpace`] lists the admissible values of each knob and samples
+//! concrete [`Candidate`] configurations deterministically from a tuner
+//! seed, via the crate's own [`Xorshift64Star`] (no global RNG — the
+//! whole tuner is bit-reproducible).
+
+use crate::annealer::{NoiseSchedule, QSchedule, SsqaParams};
+use crate::hw::DelayKind;
+use crate::rng::Xorshift64Star;
+
+/// One concrete configuration under evaluation: a full [`SsqaParams`]
+/// plus its step budget and the delay architecture used for hardware
+/// cost estimates. `id` is the candidate's index in the sampled pool
+/// (stable across rungs — racing tables refer to it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Candidate {
+    pub id: usize,
+    pub params: SsqaParams,
+    pub steps: usize,
+    pub delay: DelayKind,
+}
+
+impl Candidate {
+    /// Compact one-line description for racing tables.
+    pub fn describe(&self) -> String {
+        let (nz0, nz1) = match self.params.noise {
+            NoiseSchedule::Constant(v) => (v, v),
+            NoiseSchedule::Linear { start, end } => (start, end),
+        };
+        format!(
+            "R={} i0={} nz={}→{} qmax={} steps={}",
+            self.params.replicas, self.params.i0, nz0, nz1, self.params.q.q_max, self.steps
+        )
+    }
+
+    /// Spin updates one full-budget run of this candidate costs on an
+    /// `n`-spin instance (the racing currency: `n · R · steps`).
+    pub fn full_budget_updates(&self, n: usize) -> u64 {
+        (n * self.params.replicas * self.steps) as u64
+    }
+}
+
+/// The searchable knobs. Every field lists the admissible values; the
+/// sampler draws one per knob. `j_scale` is deliberately **fixed**
+/// across the space so all candidates share one Ising model (the
+/// coordinator builds it once and `Arc`-shares it, like `BatchJob`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpace {
+    /// Replica counts (Trotter slices). Paper adopts R = 20.
+    pub replicas: Vec<usize>,
+    /// Saturation thresholds `I0` (the stable plateau is 22–32 on the
+    /// G-set classes — see `SsqaParams::gset_default`).
+    pub i0: Vec<i32>,
+    /// Noise-schedule start magnitudes (β₀).
+    pub noise_start: Vec<i32>,
+    /// Noise-schedule end magnitudes (β₁).
+    pub noise_end: Vec<i32>,
+    /// Q-ramp ceilings (the Γ schedule of Eq. 7 — `QSchedule::linear`
+    /// fills `[0, q_max]` over the step budget).
+    pub q_max: Vec<i32>,
+    /// Step budgets.
+    pub steps: Vec<usize>,
+    /// Delay architectures for the hardware cost estimate.
+    pub delay: Vec<DelayKind>,
+    /// Coupling scale shared by every candidate (one model per race).
+    pub j_scale: i32,
+}
+
+impl ParamSpace {
+    /// Space around the calibrated G-set defaults: the plateau-stable
+    /// `I0` band, noise ramps bracketing 28→2, Q ceilings bracketing 12
+    /// and replica/step budgets bracketing the paper's R = 20 × 500.
+    pub fn gset_default() -> Self {
+        Self {
+            replicas: vec![10, 15, 20, 25],
+            i0: vec![22, 24, 28, 32],
+            noise_start: vec![20, 24, 28, 32],
+            noise_end: vec![0, 1, 2, 4],
+            q_max: vec![8, 12, 16, 24],
+            steps: vec![300, 500, 800],
+            delay: vec![DelayKind::DualBram],
+            j_scale: 8,
+        }
+    }
+
+    /// Shrunken space for smoke tests and `--quick` experiments.
+    pub fn quick() -> Self {
+        Self {
+            replicas: vec![4, 8],
+            i0: vec![24, 32],
+            noise_start: vec![24, 28],
+            noise_end: vec![1, 2],
+            q_max: vec![8, 12],
+            steps: vec![120, 200],
+            delay: vec![DelayKind::DualBram],
+            j_scale: 8,
+        }
+    }
+
+    /// Number of distinct configurations in the space.
+    pub fn cardinality(&self) -> usize {
+        self.replicas.len()
+            * self.i0.len()
+            * self.noise_start.len()
+            * self.noise_end.len()
+            * self.q_max.len()
+            * self.steps.len()
+            * self.delay.len()
+    }
+
+    fn pick<'a, T>(rng: &mut Xorshift64Star, xs: &'a [T]) -> &'a T {
+        &xs[rng.next_below(xs.len())]
+    }
+
+    /// Draw one candidate (without an id — [`Self::sample_n`] assigns
+    /// ids in draw order).
+    fn draw(&self, rng: &mut Xorshift64Star) -> Candidate {
+        let steps = *Self::pick(rng, &self.steps);
+        Candidate {
+            id: 0,
+            params: SsqaParams {
+                replicas: *Self::pick(rng, &self.replicas),
+                i0: *Self::pick(rng, &self.i0),
+                alpha: 1,
+                noise: NoiseSchedule::Linear {
+                    start: *Self::pick(rng, &self.noise_start),
+                    end: *Self::pick(rng, &self.noise_end),
+                },
+                q: QSchedule::linear(0, *Self::pick(rng, &self.q_max), steps),
+                j_scale: self.j_scale,
+            },
+            steps,
+            delay: *Self::pick(rng, &self.delay),
+        }
+    }
+
+    /// Sample `n` **distinct** candidates deterministically from
+    /// `tuner_seed`. Duplicate draws are rejected and redrawn; if the
+    /// space is smaller than `n` the pool is capped at the cardinality
+    /// (rejection terminates after a bounded number of attempts per
+    /// slot, so a degenerate one-point space cannot loop forever).
+    pub fn sample_n(&self, n: usize, tuner_seed: u64) -> Vec<Candidate> {
+        let mut rng = Xorshift64Star::new(tuner_seed ^ 0x7E57_5EED);
+        let want = n.min(self.cardinality());
+        let mut out: Vec<Candidate> = Vec::with_capacity(want);
+        let mut attempts = 0usize;
+        let max_attempts = 64 * n.max(1);
+        while out.len() < want && attempts < max_attempts {
+            attempts += 1;
+            let mut c = self.draw(&mut rng);
+            if out.iter().any(|o| o.params == c.params && o.steps == c.steps && o.delay == c.delay)
+            {
+                continue;
+            }
+            c.id = out.len();
+            out.push(c);
+        }
+        out
+    }
+}

@@ -1,0 +1,249 @@
+use super::*;
+use crate::annealer::{NoiseSchedule, SsqaEngine, SsqaParams, StepObserver};
+use crate::coordinator::BackendKind;
+use crate::graph::torus_2d;
+use crate::problems::maxcut;
+
+fn tiny_graph() -> crate::graph::Graph {
+    torus_2d(4, 8, true, 0xC0)
+}
+
+fn tiny_cfg() -> TunerConfig {
+    let mut cfg = TunerConfig::quick(11);
+    // shrink further: in-module tests run in debug builds
+    cfg.space.steps = vec![60, 90];
+    cfg.race = RaceConfig {
+        candidates: 4,
+        seeds_rung0: 2,
+        monitor: MonitorConfig { stride: 8, patience: 3, min_steps: 24, tol: 0 },
+        ..RaceConfig::default()
+    };
+    cfg.portfolio.seeds = 2;
+    cfg
+}
+
+#[test]
+fn space_sampling_is_deterministic_and_in_bounds() {
+    let space = ParamSpace::gset_default();
+    let a = space.sample_n(8, 42);
+    let b = space.sample_n(8, 42);
+    assert_eq!(a, b, "same tuner seed must sample the same pool");
+    let c = space.sample_n(8, 43);
+    assert_ne!(a, c, "different tuner seeds should explore differently");
+    assert_eq!(a.len(), 8);
+    for (i, cand) in a.iter().enumerate() {
+        assert_eq!(cand.id, i, "ids follow draw order");
+        assert!(space.replicas.contains(&cand.params.replicas));
+        assert!(space.i0.contains(&cand.params.i0));
+        assert!(space.steps.contains(&cand.steps));
+        let NoiseSchedule::Linear { start, end } = cand.params.noise else {
+            panic!("sampled schedules are linear");
+        };
+        assert!(space.noise_start.contains(&start) && space.noise_end.contains(&end));
+        assert!(space.q_max.contains(&cand.params.q.q_max));
+        assert_eq!(cand.params.j_scale, space.j_scale);
+    }
+    // distinctness
+    for i in 0..a.len() {
+        for j in (i + 1)..a.len() {
+            assert!(
+                !(a[i].params == a[j].params && a[i].steps == a[j].steps),
+                "candidates {i} and {j} are duplicates"
+            );
+        }
+    }
+}
+
+#[test]
+fn space_sampling_caps_at_cardinality() {
+    let space = ParamSpace {
+        replicas: vec![4],
+        i0: vec![24],
+        noise_start: vec![24],
+        noise_end: vec![2],
+        q_max: vec![8, 12],
+        steps: vec![50],
+        delay: vec![crate::hw::DelayKind::DualBram],
+        j_scale: 8,
+    };
+    assert_eq!(space.cardinality(), 2);
+    let pool = space.sample_n(16, 1);
+    assert_eq!(pool.len(), 2, "pool cannot exceed the space's cardinality");
+}
+
+#[test]
+fn monitor_stops_on_plateau_and_respects_min_steps() {
+    let g = tiny_graph();
+    let model = maxcut::ising_from_graph(&g, 8);
+    let steps = 400;
+    let params = SsqaParams { replicas: 4, ..SsqaParams::gset_default(steps) };
+    let eng = SsqaEngine::new(params, steps);
+    let mcfg = MonitorConfig { stride: 8, patience: 3, min_steps: 32, tol: 0 };
+    let mut mon = ConvergenceMonitor::new(mcfg, &model);
+    let (_, res) = eng.run_observed(&model, steps, 5, &mut mon);
+    assert!(res.steps >= mcfg.min_steps, "must not stop before min_steps");
+    assert_eq!(res.steps % mcfg.stride, 0, "stops only on observation strides");
+    if mon.stopped_early() {
+        assert!(res.steps < steps);
+        assert!(!mon.trace().is_empty());
+    } else {
+        assert_eq!(res.steps, steps);
+    }
+    // the energy trace is observed on the stride
+    for (i, &(t, _)) in mon.trace().iter().enumerate() {
+        assert_eq!(t + 1, (i + 1) * mcfg.stride);
+    }
+}
+
+#[test]
+fn monitor_never_stop_config_runs_full_budget() {
+    let g = tiny_graph();
+    let model = maxcut::ising_from_graph(&g, 8);
+    let steps = 120;
+    let params = SsqaParams { replicas: 3, ..SsqaParams::gset_default(steps) };
+    let eng = SsqaEngine::new(params, steps);
+    let mut mon = ConvergenceMonitor::new(MonitorConfig::never_stop(), &model);
+    let (_, res) = eng.run_observed(&model, steps, 9, &mut mon);
+    assert_eq!(res.steps, steps);
+    assert!(!mon.stopped_early());
+    // and the observed run is bit-identical to the unobserved one
+    let (_, plain) = eng.run(&model, steps, 9);
+    assert_eq!(res.replica_energies, plain.replica_energies);
+    assert_eq!(res.best_sigma, plain.best_sigma);
+}
+
+#[test]
+fn observed_early_stop_matches_prefix_run() {
+    // stopping at step s must equal running s steps outright (the
+    // schedule-prefix semantic)
+    struct StopAt(usize);
+    impl StepObserver for StopAt {
+        fn observe(&mut self, t: usize, _: &crate::annealer::SsqaState) -> bool {
+            t + 1 == self.0
+        }
+    }
+    let g = tiny_graph();
+    let model = maxcut::ising_from_graph(&g, 8);
+    let steps = 100;
+    let params = SsqaParams { replicas: 4, ..SsqaParams::gset_default(steps) };
+    let eng = SsqaEngine::new(params, steps);
+    let (_, stopped) = eng.run_observed(&model, steps, 3, &mut StopAt(40));
+    assert_eq!(stopped.steps, 40);
+    // the prefix reference: same engine (same schedule horizon), fewer steps
+    let (_, prefix) = eng.run(&model, 40, 3);
+    assert_eq!(stopped.replica_energies, prefix.replica_energies);
+    assert_eq!(stopped.best_sigma, prefix.best_sigma);
+}
+
+#[test]
+fn race_is_deterministic_and_prunes_to_one() {
+    let g = tiny_graph();
+    let cfg = tiny_cfg();
+    let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+    let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
+    let a = race(&g, &model, cands.clone(), &cfg.race, &InlineEval);
+    let b = race(&g, &model, cands, &cfg.race, &InlineEval);
+    assert_eq!(a.winner, b.winner);
+    assert_eq!(a.trace, b.trace);
+    assert_eq!(a.total_spin_updates, b.total_spin_updates);
+    // 4 → 2 → 1: two rungs, 4 + 2 rows
+    assert_eq!(a.trace.len(), 6);
+    assert_eq!(a.trace.iter().filter(|r| r.rung == 0).count(), 4);
+    assert_eq!(a.trace.iter().filter(|r| r.rung == 1).count(), 2);
+    // exactly one rung-1 survivor, and it is the winner
+    let finalists: Vec<_> = a.trace.iter().filter(|r| r.rung == 1 && r.survived).collect();
+    assert_eq!(finalists.len(), 1);
+    assert_eq!(finalists[0].cand, a.winner);
+    // the race must undercut the brute-force sweep (the acceptance
+    // criterion's "fewer total spin-updates than an untuned full-budget
+    // sweep") — guaranteed even without early stopping, since the
+    // alive set shrinks every rung
+    assert!(a.no_earlystop_updates < a.full_budget_updates);
+    assert!(a.total_spin_updates <= a.no_earlystop_updates);
+    assert!(a.total_spin_updates < a.full_budget_updates);
+    // within a rung, survivors rank strictly ahead of the pruned
+    for rung in 0..2 {
+        let rows: Vec<_> = a.trace.iter().filter(|r| r.rung == rung).collect();
+        let worst_kept = rows
+            .iter()
+            .filter(|r| r.survived)
+            .map(|r| r.score.mean_energy)
+            .fold(f64::MIN, f64::max);
+        for r in rows.iter().filter(|r| !r.survived) {
+            assert!(
+                r.score.mean_energy >= worst_kept,
+                "pruned candidate outranked a survivor on rung {rung}"
+            );
+        }
+    }
+}
+
+#[test]
+fn race_seed_budget_doubles_per_rung() {
+    let g = tiny_graph();
+    let cfg = tiny_cfg();
+    let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+    let cands = cfg.space.sample_n(4, cfg.tuner_seed);
+    let out = race(&g, &model, cands, &cfg.race, &InlineEval);
+    for row in &out.trace {
+        assert_eq!(row.seeds, cfg.race.seeds_rung0 * cfg.race.eta.pow(row.rung as u32));
+        assert_eq!(row.score.runs, row.seeds);
+    }
+}
+
+#[test]
+fn portfolio_budget_matches_and_hw_is_bit_exact_with_ssqa() {
+    let g = tiny_graph();
+    let cfg = tiny_cfg();
+    let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+    let winner = cfg.space.sample_n(1, 3).remove(0);
+    let report = run_portfolio(&g, &model, &winner, &cfg.portfolio);
+    assert_eq!(report.entries.len(), 4);
+    assert!(report.winner < report.entries.len());
+    let by_backend = |b: BackendKind| {
+        report
+            .entries
+            .iter()
+            .find(|e| e.backend == b)
+            .unwrap_or_else(|| panic!("missing {b:?} entry"))
+    };
+    let ssqa = by_backend(BackendKind::Software);
+    let hw = by_backend(BackendKind::HwSim(winner.delay));
+    let ssa = by_backend(BackendKind::SoftwareSsa);
+    let sa = by_backend(BackendKind::SoftwareSa);
+    // full budget, no early stop: equal spin-update currency
+    let per_run = winner.full_budget_updates(model.n());
+    assert_eq!(ssqa.spin_updates, per_run * cfg.portfolio.seeds as u64);
+    assert_eq!(ssa.spin_updates, per_run * cfg.portfolio.seeds as u64);
+    assert_eq!(sa.spin_updates, per_run * cfg.portfolio.seeds as u64);
+    // hw model runs the same first seed bit-exactly
+    assert_eq!(hw.runs, cfg.portfolio.hw_seeds);
+    assert_eq!(
+        hw.best_energy, hw.mean_energy as i64,
+        "single-seed hw entry aggregates trivially"
+    );
+    // the hw deployment estimate is populated and positive
+    let fpga = hw.fpga.expect("hw entry carries the deployment estimate");
+    assert!(fpga.latency_s > 0.0 && fpga.power_w > 0.0 && fpga.energy_j > 0.0);
+    assert_eq!(ssqa.fpga, hw.fpga, "same configuration, same estimate");
+    assert!(ssa.fpga.is_none() && sa.fpga.is_none());
+    // winner is the (first) lowest mean energy
+    for e in &report.entries {
+        assert!(report.winner_entry().mean_energy <= e.mean_energy);
+    }
+}
+
+#[test]
+fn tune_end_to_end_renders_report() {
+    let g = tiny_graph();
+    let cfg = tiny_cfg();
+    let report = tune(&g, &cfg);
+    let text = report.render();
+    assert!(text.contains("racing table"), "{text}");
+    assert!(text.contains("engine portfolio"), "{text}");
+    assert!(text.contains("winner:"), "{text}");
+    assert!(text.contains("kept") && text.contains("cut"), "{text}");
+    // deterministic end-to-end
+    let again = tune(&g, &cfg);
+    assert_eq!(report, again);
+}

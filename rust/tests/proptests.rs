@@ -9,6 +9,7 @@ use ssqa::graph::{parse_gset, random_graph, write_gset, CsrMatrix, Graph};
 use ssqa::hw::{cycles_per_step, DelayKind, HwConfig, HwEngine};
 use ssqa::problems::{maxcut, qubo::Qubo};
 use ssqa::rng::Xorshift64Star;
+use ssqa::tuner::{race, InlineEval, MonitorConfig, ParamSpace, RaceConfig, TunerConfig};
 
 const CASES: u64 = 25;
 
@@ -137,6 +138,65 @@ fn prop_saturation_invariant() {
             "case {case}: Is escaped [−I0, I0 − α]"
         );
         assert!(st.sigma.iter().all(|&s| s == 1 || s == -1), "case {case}");
+    }
+}
+
+/// Property: the tuner is bit-reproducible — the same tuner seed on the
+/// same instance yields the identical winning configuration and the
+/// identical racing trace (scores, spin-update accounting, verdicts),
+/// regardless of how the evaluations were scheduled across threads.
+#[test]
+fn prop_tuner_deterministic() {
+    for case in 0..6u64 {
+        let mut rng = Xorshift64Star::new(0xA000 + case);
+        let g = arb_graph(&mut rng);
+        let tuner_seed = rng.next_u64();
+        let mut cfg = TunerConfig::quick(tuner_seed);
+        cfg.space = ParamSpace {
+            steps: vec![40, 60],
+            replicas: vec![2 + rng.next_below(3), 5 + rng.next_below(3)],
+            ..ParamSpace::quick()
+        };
+        cfg.race = RaceConfig {
+            candidates: 4,
+            seeds_rung0: 2,
+            monitor: MonitorConfig { stride: 8, patience: 2, min_steps: 16, tol: 0 },
+            ..RaceConfig::default()
+        };
+        let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+        let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
+        let a = race(&g, &model, cands.clone(), &cfg.race, &InlineEval);
+        let b = race(&g, &model, cands, &cfg.race, &InlineEval);
+        assert_eq!(a.winner, b.winner, "case {case}: winner must be reproducible");
+        assert_eq!(a.trace, b.trace, "case {case}: racing trace must be reproducible");
+        assert_eq!(a.total_spin_updates, b.total_spin_updates, "case {case}");
+        assert!(
+            a.total_spin_updates < a.full_budget_updates,
+            "case {case}: racing must undercut the untuned full-budget sweep"
+        );
+    }
+}
+
+/// Property: `export-gset` → parse → solve round-trips — the parsed
+/// graph solves bit-identically to the original on every engine input
+/// (same model, same trajectories, same cuts).
+#[test]
+fn prop_gset_roundtrip_solves_identically() {
+    for case in 0..8u64 {
+        let mut rng = Xorshift64Star::new(0xB000 + case);
+        let g = arb_graph(&mut rng);
+        let text = write_gset(&g);
+        let g2 = parse_gset(&text).expect("roundtrip parse");
+        let steps = 20 + rng.next_below(20);
+        let p = arb_params(&mut rng, steps);
+        let seed = rng.next_u64() as u32;
+        let m1 = maxcut::ising_from_graph(&g, p.j_scale);
+        let m2 = maxcut::ising_from_graph(&g2, p.j_scale);
+        let (_, r1) = SsqaEngine::new(p, steps).run(&m1, steps, seed);
+        let (_, r2) = SsqaEngine::new(p, steps).run(&m2, steps, seed);
+        assert_eq!(r1.replica_energies, r2.replica_energies, "case {case}");
+        assert_eq!(r1.best_sigma, r2.best_sigma, "case {case}");
+        assert_eq!(r1.cut(&g), r2.cut(&g2), "case {case}");
     }
 }
 
