@@ -38,13 +38,13 @@ fn main() {
     let pool = WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
     for spec in GraphSpec::all() {
         for r in 0..runs {
-            pool.submit(Job::new(0, JobSpec::Named(spec), steps, 1 + r as u32 * 7919));
+            pool.submit(Job::new(0, JobSpec::named(spec), steps, 1 + r as u32 * 7919));
         }
     }
     let outcomes = pool.drain();
     for spec in GraphSpec::all() {
         let cuts: Vec<i64> =
-            outcomes.iter().filter(|o| o.label == spec.name()).map(|o| o.cut).collect();
+            outcomes.iter().filter(|o| o.label == spec.name()).map(|o| o.best_objective).collect();
         let best = cuts.iter().max().unwrap();
         let mean = cuts.iter().sum::<i64>() as f64 / cuts.len() as f64;
         println!("  {}: best cut {} mean {:.1}", spec.name(), best, mean);
@@ -65,7 +65,7 @@ fn main() {
     let lat = hw.latency_seconds();
     println!(
         "  bit-identical to software ✓ — cut {}, {} cycles, {:.2} ms @166 MHz, {:.3} W → {:.3} mJ",
-        hw_res.cut(&g11),
+        maxcut::cut_value(&g11, &hw_res.best_sigma),
         hw.stats().cycles,
         lat * 1e3,
         u.power_w,
@@ -90,7 +90,7 @@ fn main() {
                 pj.last_step_times.iter().sum::<std::time::Duration>() / 100u32;
             println!(
                 "  64×8 artifact bit-identical to software ✓ — cut {}, mean step {:?}",
-                pj_res.cut(&ga),
+                maxcut::cut_value(&ga, &pj_res.best_sigma),
                 mean_step
             );
             // the paper-sized artifact on G11
@@ -101,7 +101,7 @@ fn main() {
                 "  800×20 artifact: {} steps in {:?} (cut {})",
                 steps.min(50),
                 t0.elapsed(),
-                res800.cut(&g11)
+                maxcut::cut_value(&g11, &res800.best_sigma)
             );
         }
     }

@@ -32,7 +32,10 @@ fn main() {
 
     assert_eq!(sw_res.best_sigma, dual_res.best_sigma, "sw vs dual-BRAM diverged");
     assert_eq!(sw_res.best_sigma, shift_res.best_sigma, "sw vs shift-reg diverged");
-    println!("all three backends agree: cut = {}\n", sw_res.cut(&g));
+    println!(
+        "all three backends agree: cut = {}\n",
+        maxcut::cut_value(&g, &sw_res.best_sigma)
+    );
 
     let rm = ResourceModel::default();
     println!(

@@ -1,0 +1,42 @@
+//! The unified `Problem` API: one typed solve surface for every
+//! workload — MAX-CUT, QUBO, TSP, coloring, graph isomorphism and
+//! number partitioning all flow through the same
+//! encode → anneal → decode pipeline (paper §5.2: "update only the
+//! BRAM initialization files").
+//!
+//! ```bash
+//! cargo run --release --example problems_api
+//! ```
+
+use ssqa::api::{build_problem, SolveRequest};
+use ssqa::coordinator::{Router, RoutingPolicy, WorkerPool};
+use std::collections::BTreeMap;
+
+fn main() -> ssqa::Result<()> {
+    // one pool serves every problem kind — the coordinator carries
+    // problems as Arc<dyn Problem>
+    let pool =
+        WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
+
+    // the same kind + key=value grammar the CLI and line protocol use
+    let specs: [(&str, &[(&str, &str)]); 6] = [
+        ("maxcut", &[("graph", "G11")]),
+        ("qubo", &[("n", "24"), ("pseed", "3")]),
+        ("partition", &[("n", "18"), ("maxv", "9")]),
+        ("tsp", &[("cities", "5")]),
+        ("coloring", &[("nodes", "12"), ("colors", "3")]),
+        ("graphiso", &[("nodes", "6")]),
+    ];
+
+    for (kind, keys) in specs {
+        let mut f: BTreeMap<String, String> =
+            keys.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let problem = build_problem(kind, &mut f)?;
+        let steps = if kind == "maxcut" { 500 } else { 600 };
+        let report = SolveRequest::new(problem).steps(steps).runs(8).run_on(&pool)?;
+        println!("{}", report.render());
+    }
+
+    println!("{}", pool.metrics.render());
+    Ok(())
+}

@@ -34,7 +34,7 @@ fn main() {
         "SSQA (R = {}, {} steps): cut = {}, best replica energy = {}",
         params.replicas,
         steps,
-        result.cut(&graph),
+        maxcut::cut_value(&graph, &result.best_sigma),
         result.best_energy
     );
     println!("software wall time on this host: {wall:?}");

@@ -9,6 +9,7 @@
 //! ```
 
 use ssqa::graph::GraphSpec;
+use ssqa::problems::MaxCut;
 use ssqa::tuner::{tune, TunerConfig};
 
 fn main() {
@@ -36,7 +37,7 @@ fn main() {
         cfg.race.candidates,
     );
 
-    let report = tune(&g, &cfg);
+    let report = tune(&MaxCut::named(spec), &cfg);
     println!("{}", report.render());
 
     let winner = report.winner();

@@ -1,0 +1,90 @@
+//! Unified-API facade overhead: the generic `SolveRequest` path
+//! (Problem trait + coordinator batch fan-out + domain-objective
+//! accounting) vs the old direct MAX-CUT path (hand-built model +
+//! `multi_run_batched`) on a G-set-sized instance. Both fan the same
+//! seeds across the same worker count, so the measured gap is the
+//! facade itself. Appends to `BENCH_api.json` at the repository root
+//! (same shape as `BENCH_hotpath.json`) so successive PRs leave a perf
+//! trajectory.
+
+use ssqa::annealer::{multi_run_batched, SsqaParams};
+use ssqa::api::SolveRequest;
+use ssqa::config::{bench, BenchArgs};
+use ssqa::coordinator::{Router, RoutingPolicy, WorkerPool};
+use ssqa::graph::GraphSpec;
+use ssqa::problems::{maxcut, MaxCut};
+use std::sync::Arc;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    if !args.matches("api/facade") {
+        return;
+    }
+    let steps = if args.quick { 60 } else { 200 };
+    let runs = if args.quick { 4 } else { 8 };
+    let g = GraphSpec::G11.build();
+    let params = SsqaParams::gset_default(steps);
+    let problem = Arc::new(MaxCut::named(GraphSpec::G11));
+    let pool =
+        WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
+
+    // the pre-redesign path: model by hand, batched multi-run harness
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+    let direct = bench(&format!("api/facade direct G11 {steps}st ×{runs}"), 3, || {
+        let stats = multi_run_batched(&g, &model, params, steps, runs, 1);
+        assert!(stats.best_cut > 0);
+    });
+
+    // the unified surface: same params, same seed derivation, same
+    // worker fan-out — plus typed decode and feasibility accounting
+    let generic = bench(&format!("api/facade SolveRequest G11 {steps}st ×{runs}"), 3, || {
+        let report = SolveRequest::new(problem.clone())
+            .params(params)
+            .steps(steps)
+            .seed(1)
+            .runs(runs)
+            .run_on(&pool)
+            .expect("solve succeeds");
+        assert!(report.best_objective > 0);
+    });
+
+    let overhead = generic.min.as_secs_f64() / direct.min.as_secs_f64() - 1.0;
+    println!(
+        "  → generic SolveRequest path {:+.2}% vs direct MAX-CUT path (min-over-min)",
+        100.0 * overhead
+    );
+
+    // append to the perf trajectory at the repo root
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let record = format!(
+        "{{\"unix_time\": {stamp}, \"bench\": \"api/facade\", \"graph\": \"G11\", \
+         \"steps\": {steps}, \"runs\": {runs}, \"direct_s\": {:.6}, \"generic_s\": {:.6}, \
+         \"overhead_fraction\": {:.4}}}",
+        direct.min.as_secs_f64(),
+        generic.min.as_secs_f64(),
+        overhead,
+    );
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_api.json");
+    let mut records: Vec<String> = std::fs::read_to_string(json_path)
+        .ok()
+        .and_then(|s| {
+            // stored as a JSON array of flat records, one per line
+            let body = s.trim().strip_prefix('[')?.strip_suffix(']')?.trim().to_string();
+            Some(
+                body.lines()
+                    .map(|l| l.trim().trim_end_matches(',').to_string())
+                    .filter(|l| !l.is_empty() && !l.starts_with("//"))
+                    .collect(),
+            )
+        })
+        .unwrap_or_default();
+    records.push(record);
+    let out = format!("[\n  {}\n]\n", records.join(",\n  "));
+    match std::fs::write(json_path, out) {
+        Ok(()) => println!("  → recorded in BENCH_api.json"),
+        Err(e) => println!("  → could not write BENCH_api.json: {e}"),
+    }
+}

@@ -7,7 +7,7 @@
 use ssqa::annealer::SsqaParams;
 use ssqa::config::{bench, BenchArgs};
 use ssqa::graph::GraphSpec;
-use ssqa::problems::maxcut;
+use ssqa::problems::{maxcut, MaxCut};
 use ssqa::tuner::{race, tune, InlineEval, MonitorConfig, RaceConfig, TunerConfig};
 
 fn main() {
@@ -25,6 +25,7 @@ fn main() {
         ..RaceConfig::default()
     };
     cfg.portfolio.seeds = 2;
+    let problem = MaxCut::new(g.clone(), cfg.space.j_scale);
     let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
 
     if args.matches("tuner/race") {
@@ -32,7 +33,7 @@ fn main() {
         // race's *full* budget (every candidate, final seed count, no
         // early stop) — what an untuned grid evaluation would run
         let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
-        let probe = race(&g, &model, cands.clone(), &cfg.race, &InlineEval);
+        let probe = race(&problem, &model, cands.clone(), &cfg.race, &InlineEval);
         // seed-evidence the race accumulated on its winner (the
         // RaceOutcome::full_budget_updates comparator)
         let rungs = probe.trace.iter().map(|r| r.rung).max().unwrap_or(0) + 1;
@@ -47,7 +48,7 @@ fn main() {
             }
         });
         let raced = bench(&format!("tuner/race halving G11 ×{}", cands.len()), 3, || {
-            let _ = race(&g, &model, cands.clone(), &cfg.race, &InlineEval);
+            let _ = race(&problem, &model, cands.clone(), &cfg.race, &InlineEval);
         });
         let speedup = fixed.min.as_secs_f64() / raced.min.as_secs_f64();
         println!(
@@ -121,7 +122,7 @@ fn main() {
 
     if args.matches("tuner/end-to-end") {
         let s = bench("tuner/end-to-end quick G11", 3, || {
-            let _ = tune(&g, &cfg);
+            let _ = tune(&problem, &cfg);
         });
         println!("  → full tune (race + portfolio) in {:?}", s.min);
     }

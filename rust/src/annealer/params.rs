@@ -81,8 +81,12 @@ pub struct SsqaParams {
     pub noise: NoiseSchedule,
     /// Replica-coupling schedule `Q(t)`.
     pub q: QSchedule,
-    /// Coupling scale applied to graph weights when building the Ising
-    /// model (4-bit hardware range).
+    /// Coupling scale used by callers that build their own Ising model
+    /// from a graph (`maxcut::ising_from_graph`, the calibrate sweep,
+    /// the tuner's `ParamSpace`) — 4-bit hardware range. §API note: the
+    /// coordinator does **not** read this field; since the unified API
+    /// the model always comes from `Problem::to_ising()`, which owns
+    /// its encoding scale (e.g. `MaxCut::GSET_J_SCALE`).
     pub j_scale: i32,
 }
 

@@ -52,14 +52,15 @@ pub struct RunResult {
     pub steps: usize,
 }
 
-impl RunResult {
-    /// Cut value of the best configuration w.r.t. the original graph.
-    pub fn cut(&self, graph: &Graph) -> i64 {
-        maxcut::cut_value(graph, &self.best_sigma)
-    }
-}
-
 /// Aggregate over independent runs (one paper data point).
+///
+/// §API note: `RunResult` deliberately has **no** cut accessor — a cut
+/// is only meaningful for models that came from the MAX-CUT encoding,
+/// and computing one against an arbitrary graph silently produced a
+/// wrong number for every other workload. Domain objectives live behind
+/// [`crate::api::Problem::decode`] /
+/// [`crate::api::Problem::objective_from_energy`]; the MAX-CUT-specific
+/// harnesses below take the graph explicitly.
 #[derive(Debug, Clone)]
 pub struct AggregateStats {
     pub runs: usize,
@@ -123,7 +124,7 @@ where
     let cuts: Vec<(i64, i64)> = par_map(&run_ids, |&r| {
         let mut eng = make_annealer();
         let res = eng.anneal(model, steps, run_seed(seed0, r));
-        (res.cut(graph), res.best_energy)
+        (maxcut::cut_value(graph, &res.best_sigma), res.best_energy)
     });
     aggregate(cuts)
 }
@@ -149,7 +150,7 @@ pub fn multi_run_batched(
         let eng = SsqaEngine::new(params, steps);
         eng.run_batch(model, steps, chunk)
             .into_iter()
-            .map(|res| (res.cut(graph), res.best_energy))
+            .map(|res| (maxcut::cut_value(graph, &res.best_sigma), res.best_energy))
             .collect()
     });
     aggregate(per_chunk.into_iter().flatten().collect())

@@ -69,7 +69,7 @@ fn ssqa_improves_over_random_start() {
     let (g, m) = small_model();
     let eng = SsqaEngine::new(SsqaParams::gset_default(300), 300);
     let (_, res) = eng.run(&m, 300, 5);
-    let cut = res.cut(&g);
+    let cut = maxcut::cut_value(&g, &res.best_sigma);
     // random cut ≈ half the positive weight; annealed must beat it solidly
     let w_pos: i64 = g.edges().iter().filter(|e| e.2 > 0).map(|e| e.2 as i64).sum();
     assert!(
@@ -92,7 +92,7 @@ fn ssqa_finds_optimum_on_tiny_graph() {
         200,
     );
     let best = (0..5)
-        .map(|s| eng.run(&m, 200, s).1.cut(&g))
+        .map(|s| maxcut::cut_value(&g, &eng.run(&m, 200, s).1.best_sigma))
         .max()
         .unwrap();
     assert_eq!(best, 8);
@@ -124,8 +124,12 @@ fn ssqa_replica_coupling_matters() {
         },
         steps,
     );
-    let mc: i64 = (0..8).map(|s| coupled.run(&m, steps, s).1.cut(&g)).sum();
-    let mu: i64 = (0..8).map(|s| uncoupled.run(&m, steps, s).1.cut(&g)).sum();
+    let mc: i64 = (0..8)
+        .map(|s| maxcut::cut_value(&g, &coupled.run(&m, steps, s).1.best_sigma))
+        .sum();
+    let mu: i64 = (0..8)
+        .map(|s| maxcut::cut_value(&g, &uncoupled.run(&m, steps, s).1.best_sigma))
+        .sum();
     assert!(mc + 8 >= mu, "coupling catastrophically hurt: {mc} vs {mu}");
 }
 
@@ -135,7 +139,7 @@ fn ssa_runs_and_improves() {
     let mut eng = SsaEngine::new(SsaParams::gset_default(), 2000);
     let res = eng.anneal(&m, 2000, 11);
     let w_pos: i64 = g.edges().iter().filter(|e| e.2 > 0).map(|e| e.2 as i64).sum();
-    assert!(res.cut(&g) > w_pos / 2);
+    assert!(maxcut::cut_value(&g, &res.best_sigma) > w_pos / 2);
     assert!(res.best_sigma.iter().all(|&s| s == 1 || s == -1));
 }
 
@@ -156,7 +160,7 @@ fn sa_finds_optimum_on_tiny_graph() {
     let m = maxcut::ising_from_graph(&g, 8);
     let mut eng = SaEngine::gset_default();
     let res = eng.anneal(&m, 500, 1);
-    assert_eq!(res.cut(&g), 6);
+    assert_eq!(maxcut::cut_value(&g, &res.best_sigma), 6);
 }
 
 #[test]

@@ -1,0 +1,40 @@
+//! The crate's unified solve surface (DESIGN.md §6).
+//!
+//! The paper's §5.2 point is that one p-bit datapath solves *any*
+//! QUBO-formulated problem by re-initializing the weight BRAM. This
+//! module is that claim as an API: a typed [`Problem`] trait
+//! (encode → anneal → decode, implemented by all six workloads in
+//! [`crate::problems`]), a [`SolveRequest`] builder carrying execution
+//! policy, and a [`SolveReport`] answering in domain units — best
+//! objective, decoded [`Solution`], feasibility accounting, per-replica
+//! Ising energies, spin-update cost and the modeled FPGA deployment
+//! cost.
+//!
+//! Every entry point routes through here: `ssqa solve --problem <kind>`,
+//! the line protocol's `solve problem=<kind> …` verb, the coordinator's
+//! `Arc<dyn Problem>` job specs, and the tuner (which races candidates
+//! on the problem's **domain objective**, not raw Ising energy).
+//!
+//! ```no_run
+//! use ssqa::api::SolveRequest;
+//! use ssqa::problems::{TspInstance, TspProblem};
+//! use std::sync::Arc;
+//!
+//! # fn main() -> ssqa::Result<()> {
+//! let tsp = TspProblem::new(TspInstance::random(6, 7), 0 /* auto penalty */);
+//! let report = SolveRequest::new(Arc::new(tsp)).steps(800).runs(8).solve()?;
+//! println!("{}", report.render());
+//! # Ok(())
+//! # }
+//! ```
+
+mod problem;
+mod request;
+pub mod spec;
+
+pub use problem::{Problem, ProblemKind, Sense, Solution};
+pub use request::{SolveReport, SolveRequest, TunePolicy};
+pub use spec::build_problem;
+
+#[cfg(test)]
+mod tests;

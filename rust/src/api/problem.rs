@@ -1,0 +1,251 @@
+//! The [`Problem`] trait and its typed solution vocabulary.
+//!
+//! § Contract (asserted by `api::tests` and `tests/proptests.rs`): for
+//! every implementation and every configuration `σ ∈ {−1,+1}ⁿ`,
+//!
+//! 1. `decode(σ)` returns a typed [`Solution`]; it is
+//!    [`Solution::Infeasible`] iff σ violates the encoding's
+//!    penalty-enforced constraints (always feasible for MAX-CUT, raw
+//!    QUBO and number partitioning — every spin pattern is a valid
+//!    answer there).
+//! 2. For feasible decodes, `decode(σ).objective()` equals
+//!    `objective_from_energy(model.energy(σ))` where `model` is the
+//!    `to_ising()` encoding — the domain objective and the Ising energy
+//!    are two views of one number.
+//! 3. `objective_from_energy` is monotone in the energy with the
+//!    orientation given by [`Problem::sense`]: the minimum-energy
+//!    configuration is the best-objective configuration. This is what
+//!    lets the annealer, the tuner and the coordinator rank runs in
+//!    domain units without re-decoding every configuration.
+
+use crate::graph::IsingModel;
+
+/// Workload families the unified solve surface knows about (the
+/// `--problem` CLI flag and the `problem=` protocol key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// MAX-CUT — the paper's §4 benchmark workload.
+    MaxCut,
+    /// Raw QUBO minimization (paper §5.2 pathway).
+    Qubo,
+    /// Traveling salesman via the Lucas §7 one-hot QUBO.
+    Tsp,
+    /// Graph k-coloring via the Lucas §6.1 QUBO (paper §6 future work).
+    Coloring,
+    /// Graph isomorphism via the §5.2 mapping QUBO.
+    GraphIso,
+    /// Number partitioning (direct Ising form, Lucas §2.1).
+    Partition,
+}
+
+impl ProblemKind {
+    /// Every kind, in CLI/help order.
+    pub const ALL: [ProblemKind; 6] = [
+        ProblemKind::MaxCut,
+        ProblemKind::Qubo,
+        ProblemKind::Tsp,
+        ProblemKind::Coloring,
+        ProblemKind::GraphIso,
+        ProblemKind::Partition,
+    ];
+
+    /// Canonical token (CLI flag value / protocol key value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProblemKind::MaxCut => "maxcut",
+            ProblemKind::Qubo => "qubo",
+            ProblemKind::Tsp => "tsp",
+            ProblemKind::Coloring => "coloring",
+            ProblemKind::GraphIso => "graphiso",
+            ProblemKind::Partition => "partition",
+        }
+    }
+
+    /// Parse a CLI/protocol token (canonical names plus common aliases).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "maxcut" | "max-cut" => ProblemKind::MaxCut,
+            "qubo" => ProblemKind::Qubo,
+            "tsp" => ProblemKind::Tsp,
+            "coloring" | "color" => ProblemKind::Coloring,
+            "graphiso" | "graph-iso" | "gi" => ProblemKind::GraphIso,
+            "partition" | "numpart" => ProblemKind::Partition,
+            _ => return None,
+        })
+    }
+
+    /// Optimization direction of the kind's domain objective.
+    pub fn sense(&self) -> Sense {
+        match self {
+            ProblemKind::MaxCut => Sense::Maximize,
+            _ => Sense::Minimize,
+        }
+    }
+
+    /// What the domain objective counts, for report rendering.
+    pub fn objective_name(&self) -> &'static str {
+        match self {
+            ProblemKind::MaxCut => "cut",
+            ProblemKind::Qubo => "value",
+            ProblemKind::Tsp => "tour-length",
+            ProblemKind::Coloring => "conflicts",
+            ProblemKind::GraphIso => "mismatches",
+            ProblemKind::Partition => "imbalance",
+        }
+    }
+}
+
+/// Whether lower or higher domain objectives are better.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Minimize,
+    Maximize,
+}
+
+impl Sense {
+    /// Orient an objective so **lower keys always rank better** —
+    /// the single comparison convention used by the tuner's racing and
+    /// the coordinator's best-of-batch selection.
+    #[inline]
+    pub fn key(&self, objective: i64) -> i64 {
+        match self {
+            Sense::Minimize => objective,
+            Sense::Maximize => -objective,
+        }
+    }
+
+    /// [`Self::key`] for mean (f64) objectives.
+    #[inline]
+    pub fn key_f(&self, objective: f64) -> f64 {
+        match self {
+            Sense::Minimize => objective,
+            Sense::Maximize => -objective,
+        }
+    }
+
+    /// True iff `a` is strictly better than `b` under this sense.
+    #[inline]
+    pub fn better(&self, a: i64, b: i64) -> bool {
+        self.key(a) < self.key(b)
+    }
+}
+
+/// A decoded, domain-typed solution — what [`Problem::decode`] turns a
+/// spin configuration into.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Solution {
+    /// MAX-CUT bipartition (node → ±1 side) and its cut weight.
+    MaxCut { partition: Vec<i32>, cut: i64 },
+    /// Raw QUBO assignment and its objective value.
+    Qubo { x: Vec<u8>, value: i64 },
+    /// Number-partitioning split (±1 side per number) and |Σ₊ − Σ₋|.
+    Partition { sides: Vec<i32>, imbalance: i64 },
+    /// Feasible TSP tour (city visited at each position) and its length.
+    Tour { order: Vec<usize>, length: i64 },
+    /// One color per vertex and the count of conflicting edges.
+    Coloring { colors: Vec<usize>, conflicts: usize },
+    /// Bijective vertex mapping and its adjacency-mismatch count
+    /// (0 ⇔ a true isomorphism).
+    Mapping { map: Vec<usize>, mismatches: usize },
+    /// The assignment violated the encoding's penalty-enforced
+    /// constraints (a non-one-hot TSP/coloring row, a non-bijective GI
+    /// mapping): no domain solution exists. The raw 0/1 assignment is
+    /// kept for diagnostics.
+    Infeasible { x: Vec<u8> },
+}
+
+impl Solution {
+    /// Whether a domain solution was recovered.
+    pub fn feasible(&self) -> bool {
+        !matches!(self, Solution::Infeasible { .. })
+    }
+
+    /// Domain objective of the decoded solution; `None` when infeasible.
+    pub fn objective(&self) -> Option<i64> {
+        Some(match self {
+            Solution::MaxCut { cut, .. } => *cut,
+            Solution::Qubo { value, .. } => *value,
+            Solution::Partition { imbalance, .. } => *imbalance,
+            Solution::Tour { length, .. } => *length,
+            Solution::Coloring { conflicts, .. } => *conflicts as i64,
+            Solution::Mapping { mismatches, .. } => *mismatches as i64,
+            Solution::Infeasible { .. } => return None,
+        })
+    }
+
+    /// One-line human description for CLI reports.
+    pub fn describe(&self) -> String {
+        match self {
+            Solution::MaxCut { partition, cut } => {
+                let pos = partition.iter().filter(|&&s| s > 0).count();
+                format!("cut {cut} ({pos}/{} nodes on the + side)", partition.len())
+            }
+            Solution::Qubo { x, value } => {
+                let ones = x.iter().filter(|&&b| b == 1).count();
+                format!("value {value} ({ones}/{} variables set)", x.len())
+            }
+            Solution::Partition { sides, imbalance } => {
+                let pos = sides.iter().filter(|&&s| s > 0).count();
+                format!("imbalance {imbalance} ({pos}/{} numbers on the + side)", sides.len())
+            }
+            Solution::Tour { order, length } => format!("tour {order:?} length {length}"),
+            Solution::Coloring { colors, conflicts } => {
+                format!("{conflicts} conflicting edges over {} vertices", colors.len())
+            }
+            Solution::Mapping { map, mismatches } => {
+                if *mismatches == 0 {
+                    format!("isomorphism {map:?}")
+                } else {
+                    format!("{mismatches} adjacency mismatches")
+                }
+            }
+            Solution::Infeasible { x } => {
+                format!("infeasible assignment ({} variables)", x.len())
+            }
+        }
+    }
+}
+
+/// One typed solve surface for every workload: encode to an
+/// [`IsingModel`], anneal on any backend, decode back to the domain.
+///
+/// Implemented by all six workloads in [`crate::problems`]; the
+/// coordinator carries problems as `Arc<dyn Problem>` so one pool can
+/// interleave MAX-CUT, TSP and QUBO jobs. See the module docs for the
+/// decode/objective/energy contract.
+pub trait Problem: Send + Sync + std::fmt::Debug {
+    /// Workload family tag.
+    fn kind(&self) -> ProblemKind;
+
+    /// Human label for reports and metrics (e.g. `G11`, `tsp-n6`).
+    fn label(&self) -> String {
+        format!("{}-n{}", self.kind().name(), self.num_vars())
+    }
+
+    /// Number of Ising spins the encoding uses.
+    fn num_vars(&self) -> usize;
+
+    /// Build the Ising model whose ground state encodes the optimum —
+    /// the paper's "update only the BRAM initialization files" step.
+    fn to_ising(&self) -> IsingModel;
+
+    /// Decode a ±1 configuration into a typed domain solution.
+    fn decode(&self, sigma: &[i32]) -> Solution;
+
+    /// Domain objective recovered from a raw Ising energy. Exact for
+    /// every σ on MAX-CUT / QUBO / partition; for the penalty-encoded
+    /// kinds it is the *penalized* objective, equal to the true domain
+    /// objective iff the configuration is feasible.
+    fn objective_from_energy(&self, energy: i64) -> i64;
+
+    /// Cheap feasibility probe (no allocation for the always-feasible
+    /// kinds). Must agree with `decode(sigma).feasible()`.
+    fn feasible(&self, sigma: &[i32]) -> bool {
+        self.decode(sigma).feasible()
+    }
+
+    /// Optimization direction of the domain objective.
+    fn sense(&self) -> Sense {
+        self.kind().sense()
+    }
+}

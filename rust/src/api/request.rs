@@ -1,0 +1,371 @@
+//! [`SolveRequest`] / [`SolveReport`] — the request/response pair of the
+//! unified solve surface (DESIGN.md §6.2).
+//!
+//! A request carries a problem plus execution policy (parameters or
+//! auto-derivation, backend override, seed batch width, optional
+//! auto-tuning and convergence early stopping); running it routes
+//! through the coordinator — the model is built **once**, `Arc`-shared,
+//! and the seeds fan out across the worker pool — and the report comes
+//! back in domain units: best objective, typed decoded solution,
+//! feasibility accounting, per-replica energies, spin-update cost and
+//! the modeled FPGA deployment cost from [`crate::energy`].
+
+use super::problem::{Problem, ProblemKind, Solution};
+use crate::annealer::{NoiseSchedule, QSchedule, SsqaParams};
+use crate::coordinator::{
+    BackendKind, BatchJob, JobSpec, Router, RoutingPolicy, TuneJob, WorkerPool,
+};
+use crate::energy;
+use crate::graph::IsingModel;
+use crate::hw::DelayKind;
+use crate::resources::ResourceModel;
+use crate::tuner::{Candidate, FpgaEstimate, MonitorConfig, TunerConfig};
+use crate::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A solve request: one problem, any backend, any batch width.
+///
+/// Built with the fluent setters and executed with [`Self::solve`] (a
+/// private pool) or [`Self::run_on`] (a caller-owned pool — the server
+/// path). The MAX-CUT path through this surface is bit-identical to
+/// driving [`crate::annealer::SsqaEngine`] directly with the same
+/// parameters and seeds (asserted in `tests/proptests.rs`).
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    pub problem: Arc<dyn Problem>,
+    /// Annealing steps per run (ignored when auto-tuning wins a budget).
+    pub steps: usize,
+    /// Base seed; run `r` of the batch uses `run_seed(seed, r)`.
+    pub seed: u32,
+    /// Independent seeds to anneal (fanned across the pool's workers).
+    pub runs: usize,
+    /// Explicit engine parameters; `None` derives problem-aware
+    /// defaults ([`Self::derive_params`]).
+    pub params: Option<SsqaParams>,
+    /// Replica-count override applied after parameter derivation.
+    pub replicas: Option<usize>,
+    /// Backend override; `None` lets the pool's router decide.
+    pub backend: Option<BackendKind>,
+    /// Auto-tune policy: race candidates on the problem's domain
+    /// objective first and solve with the winner.
+    pub tune: Option<TunePolicy>,
+    /// Convergence-aware early stopping for the solve runs (software
+    /// SSQA backend only; other backends run their full budget).
+    pub early_stop: Option<MonitorConfig>,
+}
+
+impl SolveRequest {
+    pub fn new(problem: Arc<dyn Problem>) -> Self {
+        Self {
+            problem,
+            steps: 500,
+            seed: 1,
+            runs: 1,
+            params: None,
+            replicas: None,
+            backend: None,
+            tune: None,
+            early_stop: None,
+        }
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn runs(mut self, runs: usize) -> Self {
+        self.runs = runs;
+        self
+    }
+
+    pub fn params(mut self, params: SsqaParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.replicas = Some(replicas);
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Race a problem-aware default candidate pool (seeded by
+    /// `tuner_seed`) on the problem's domain objective and solve with
+    /// the winner — MAX-CUT races the calibrated G-set space, other
+    /// kinds a space scaled to the encoding's field range
+    /// (`TunerConfig::for_problem`).
+    pub fn auto_tune(mut self, tuner_seed: u64) -> Self {
+        self.tune = Some(TunePolicy::Auto { tuner_seed });
+        self
+    }
+
+    /// Race an explicit tuner configuration (the caller owns the
+    /// candidate space).
+    pub fn tune_config(mut self, cfg: TunerConfig) -> Self {
+        self.tune = Some(TunePolicy::Config(cfg));
+        self
+    }
+
+    pub fn early_stop(mut self, cfg: MonitorConfig) -> Self {
+        self.early_stop = Some(cfg);
+        self
+    }
+
+    /// Problem-aware default parameters. MAX-CUT gets the paper's
+    /// calibrated G-set configuration; the penalty/QUBO encodings need a
+    /// wider dynamic range, so `I0` scales with the largest per-spin
+    /// field magnitude (the former `experiments::applications` rule,
+    /// promoted to the API so every entry point derives identically).
+    pub fn derive_params(problem: &dyn Problem, model: &IsingModel, steps: usize) -> SsqaParams {
+        if problem.kind() == ProblemKind::MaxCut {
+            return SsqaParams::gset_default(steps);
+        }
+        let i0 = (model.max_abs_field() / 4).clamp(16, 4096) as i32;
+        SsqaParams {
+            replicas: 16,
+            i0,
+            alpha: 1,
+            noise: NoiseSchedule::Linear { start: i0 / 2, end: 1 },
+            q: QSchedule::linear(0, i0 / 2, steps),
+            j_scale: 1,
+        }
+    }
+
+    /// Execute on a private software pool.
+    pub fn solve(&self) -> Result<SolveReport> {
+        let pool =
+            WorkerPool::new(crate::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
+        self.run_on(&pool)
+    }
+
+    /// Execute on a caller-owned pool (the CLI and server path — their
+    /// metrics registries then account the runs). Like every
+    /// submit→drain caller, this assumes the pool is not processing
+    /// unrelated work concurrently.
+    pub fn run_on(&self, pool: &WorkerPool) -> Result<SolveReport> {
+        anyhow::ensure!(self.runs >= 1, "runs must be at least 1");
+        let t0 = std::time::Instant::now();
+        let spec = JobSpec::new(Arc::clone(&self.problem));
+        let model = spec.model(); // built once; every clone below shares it
+        let mut steps = self.steps;
+        let mut params = self
+            .params
+            .unwrap_or_else(|| Self::derive_params(self.problem.as_ref(), &model, steps));
+        let mut tuned = None;
+        let tune_cfg = match &self.tune {
+            None => None,
+            Some(TunePolicy::Config(cfg)) => Some(cfg.clone()),
+            Some(TunePolicy::Auto { tuner_seed }) => {
+                Some(TunerConfig::for_problem(self.problem.kind(), &model, *tuner_seed))
+            }
+        };
+        if let Some(cfg) = tune_cfg {
+            let report = pool.run_tune(&TuneJob { spec: spec.clone(), config: cfg });
+            let winner = report.race.winner.clone();
+            params = winner.params;
+            steps = winner.steps;
+            tuned = Some(winner);
+        }
+        if let Some(r) = self.replicas {
+            params.replicas = r;
+        }
+
+        let mut batch = BatchJob::from_seed_range(spec, steps, self.seed, self.runs);
+        batch.params = params;
+        batch.backend = self.backend;
+        batch.early_stop = self.early_stop;
+        pool.submit_batch(batch);
+        let mut outcomes = pool.drain();
+        // drain yields worker-completion order; chunk ids are assigned
+        // in submission order, so sorting restores determinism when
+        // several chunks tie on energy/objective
+        outcomes.sort_by_key(|o| o.id);
+        if let Some(err) = outcomes.iter().find_map(|o| o.error.as_deref()) {
+            anyhow::bail!("backend failed: {err}");
+        }
+        let first = outcomes.first().expect("runs >= 1 submits at least one chunk");
+        let sense = self.problem.sense();
+
+        // global best-energy outcome anchors energies and the fallback
+        // (infeasible) solution; the best feasible decode across chunks
+        // anchors the reported domain solution
+        let best_o = outcomes
+            .iter()
+            .min_by_key(|o| o.best_energy)
+            .expect("at least one outcome");
+        let best_feasible = outcomes
+            .iter()
+            .filter_map(|o| o.best_feasible.as_ref())
+            .min_by_key(|(obj, _)| sense.key(*obj));
+        let (feasible, best_objective, solution) = match best_feasible {
+            Some((obj, sigma)) => (true, *obj, self.problem.decode(sigma)),
+            None => (false, best_o.best_objective, self.problem.decode(&best_o.best_sigma)),
+        };
+
+        let total_runs: usize = outcomes.iter().map(|o| o.runs).sum();
+        let mean_objective = outcomes
+            .iter()
+            .map(|o| o.mean_objective * o.runs as f64)
+            .sum::<f64>()
+            / total_runs.max(1) as f64;
+
+        // modeled deployment cost on the paper's dual-BRAM machine
+        let clock_hz = 166e6;
+        let latency_s = energy::fpga_latency_s(&model, steps, DelayKind::DualBram, 1, clock_hz);
+        let power_w = ResourceModel::default()
+            .estimate(model.n(), params.replicas, DelayKind::DualBram, 1, clock_hz)
+            .power_w;
+        let fpga = FpgaEstimate {
+            latency_s,
+            power_w,
+            energy_j: energy::energy_j(power_w, latency_s),
+        };
+
+        Ok(SolveReport {
+            kind: self.problem.kind(),
+            label: self.problem.label(),
+            id: first.id,
+            backend: first.backend,
+            best_objective,
+            feasible,
+            solution,
+            best_energy: best_o.best_energy,
+            replica_energies: best_o.replica_energies.clone(),
+            runs: total_runs,
+            feasible_runs: outcomes.iter().map(|o| o.feasible_runs).sum(),
+            mean_objective,
+            steps,
+            params,
+            spin_updates: outcomes.iter().map(|o| o.spin_updates).sum(),
+            early_stops: outcomes.iter().map(|o| o.early_stops).sum(),
+            wall: t0.elapsed(),
+            fpga,
+            modeled_energy_j: outcomes
+                .iter()
+                .filter_map(|o| o.modeled_energy_j)
+                .reduce(|a, b| a + b),
+            tuned,
+        })
+    }
+}
+
+/// How a [`SolveRequest`] picks its tuner configuration.
+#[derive(Debug, Clone)]
+pub enum TunePolicy {
+    /// Problem-aware default space ([`TunerConfig::for_problem`]).
+    Auto { tuner_seed: u64 },
+    /// Caller-supplied configuration, used verbatim.
+    Config(TunerConfig),
+}
+
+/// What a solve produced, in domain units.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    pub kind: ProblemKind,
+    pub label: String,
+    /// First coordinator outcome id (protocol continuity).
+    pub id: u64,
+    pub backend: BackendKind,
+    /// Best domain objective found. When no run decoded feasible this
+    /// is the *penalized* objective of the lowest-energy configuration.
+    pub best_objective: i64,
+    /// Whether `solution` is a feasible domain solution.
+    pub feasible: bool,
+    /// The decoded, typed solution (best feasible across runs, or the
+    /// lowest-energy infeasible assignment).
+    pub solution: Solution,
+    /// Lowest Ising energy over all runs.
+    pub best_energy: i64,
+    /// Final per-replica energies of the lowest-energy run.
+    pub replica_energies: Vec<i64>,
+    /// Seeds annealed.
+    pub runs: usize,
+    /// Seeds whose best configuration decoded feasible.
+    pub feasible_runs: usize,
+    /// Mean (penalized) objective over all seeds.
+    pub mean_objective: f64,
+    /// Steps per run actually budgeted (the tuned budget when
+    /// auto-tuning ran).
+    pub steps: usize,
+    /// Engine parameters the solve ran with.
+    pub params: SsqaParams,
+    /// Spin updates executed across all runs (early stops included).
+    pub spin_updates: u64,
+    /// Runs stopped early by the convergence monitor.
+    pub early_stops: usize,
+    /// End-to-end wall time of the request.
+    pub wall: Duration,
+    /// Modeled cost of one run on the paper's dual-BRAM FPGA at
+    /// 166 MHz ([`crate::energy`] + [`crate::resources`]).
+    pub fpga: FpgaEstimate,
+    /// Cycle-accurate modeled FPGA energy summed over the runs —
+    /// reported by the hw-sim backends only (their cycle count ×
+    /// modeled power), `None` elsewhere.
+    pub modeled_energy_j: Option<f64>,
+    /// Winning configuration when auto-tuning ran.
+    pub tuned: Option<Candidate>,
+}
+
+impl SolveReport {
+    /// Render the CLI/server-facing report.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ =
+            writeln!(out, "{} ({}) backend={}", self.label, self.kind.name(), self.backend.name());
+        let _ = writeln!(
+            out,
+            "{} {} ({})",
+            self.kind.objective_name(),
+            self.best_objective,
+            if self.feasible {
+                format!("feasible, {}/{} runs feasible", self.feasible_runs, self.runs)
+            } else {
+                "INFEASIBLE best decode — penalized objective".to_string()
+            },
+        );
+        let _ = writeln!(out, "solution: {}", self.solution.describe());
+        let _ = writeln!(
+            out,
+            "energy {} over {} runs (mean {} {:.1}), {} spin-updates, {} early stops, wall {:?}",
+            self.best_energy,
+            self.runs,
+            self.kind.objective_name(),
+            self.mean_objective,
+            self.spin_updates,
+            self.early_stops,
+            self.wall,
+        );
+        let _ = writeln!(
+            out,
+            "modeled dual-BRAM FPGA: {:.3} ms, {:.3} W, {:.4} mJ per {}-step anneal",
+            self.fpga.latency_s * 1e3,
+            self.fpga.power_w,
+            self.fpga.energy_j * 1e3,
+            self.steps,
+        );
+        if let Some(e) = self.modeled_energy_j {
+            let _ = writeln!(
+                out,
+                "hw-sim cycle-accurate energy: {:.4} mJ over {} runs",
+                e * 1e3,
+                self.runs
+            );
+        }
+        if let Some(w) = &self.tuned {
+            let _ = writeln!(out, "tuned configuration: {}", w.describe());
+        }
+        out
+    }
+}

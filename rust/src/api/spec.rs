@@ -1,0 +1,171 @@
+//! Problem construction from key/value maps — the single instance-spec
+//! grammar shared by the CLI (`ssqa solve --problem tsp --cities 6`) and
+//! the line protocol (`solve problem=tsp cities=6`).
+//!
+//! Grammar (DESIGN.md §6.3; defaults in brackets):
+//!
+//! ```text
+//! maxcut    graph=G11 | nodes=N [800] gseed=S      — named Table-2 instance,
+//!                                                    or generated torus/random
+//! qubo      n=N [32] pseed=S                       — random integer QUBO
+//! tsp       cities=N [6] pseed=S penalty=A [auto]  — random Euclidean TSP
+//! coloring  nodes=N [16] colors=K [3] edges=M [2N] pseed=S
+//!           penalty=A [12] conflict=B [6]
+//! graphiso  nodes=N [8] edges=M [3N/2] pseed=S penalty=A [2N]
+//! partition n=N [20] maxv=V [9] pseed=S
+//! ```
+//!
+//! Every builder **consumes** its keys from the map; callers consume
+//! their own generic keys (steps, seed, …) first and finish with
+//! [`ensure_consumed`], so an unrecognized key is reported by name
+//! instead of being silently ignored.
+
+use super::problem::{Problem, ProblemKind};
+use crate::graph::{random_graph, torus_2d, GraphSpec};
+use crate::problems::{
+    ColoringInstance, ColoringProblem, GiInstance, GiProblem, MaxCut, PartitionInstance, Qubo,
+    QuboProblem, TspInstance, TspProblem,
+};
+use crate::Result;
+use anyhow::{anyhow, bail, ensure};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Seed shared by the CLI's and the protocol's generated MAX-CUT
+/// instances (kept from the pre-API `tune --nodes` path so generated
+/// instances are unchanged across the redesign).
+pub const DEFAULT_GRAPH_SEED: u64 = 0x70E_5EED;
+
+/// Remove and parse `key`, falling back to `default`. Parse failures
+/// name the offending key and value.
+pub fn take<T: std::str::FromStr>(
+    f: &mut BTreeMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match f.remove(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| anyhow!("{key}={v:?}: {e}")),
+    }
+}
+
+/// Remove and parse an optional `key`.
+pub fn take_opt<T: std::str::FromStr>(
+    f: &mut BTreeMap<String, String>,
+    key: &str,
+) -> Result<Option<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    match f.remove(key) {
+        None => Ok(None),
+        Some(v) => v.parse().map(Some).map_err(|e| anyhow!("{key}={v:?}: {e}")),
+    }
+}
+
+/// Error out (naming every leftover key) unless the map is empty.
+pub fn ensure_consumed(f: &BTreeMap<String, String>, context: &str) -> Result<()> {
+    if !f.is_empty() {
+        let keys = f.keys().map(String::as_str).collect::<Vec<_>>().join(", ");
+        bail!("unknown key(s) {keys} for {context} (see DESIGN.md §6.3 / `ssqa help`)");
+    }
+    Ok(())
+}
+
+/// Remove the `problem=` key (defaulting to `maxcut`) and build the
+/// instance from the remaining kind keys — the shared preamble of the
+/// CLI's and the protocol's `solve`/`tune` handlers.
+pub fn take_problem(f: &mut BTreeMap<String, String>) -> Result<Arc<dyn Problem>> {
+    let kind = f.remove("problem").unwrap_or_else(|| ProblemKind::MaxCut.name().to_string());
+    build_problem(&kind, f)
+}
+
+/// Build a [`Problem`] from its kind token and spec keys (consumed from
+/// `f`). Deterministic: the same keys always build the same instance.
+pub fn build_problem(kind: &str, f: &mut BTreeMap<String, String>) -> Result<Arc<dyn Problem>> {
+    let kind = ProblemKind::parse(kind).ok_or_else(|| {
+        let known: Vec<&str> = ProblemKind::ALL.iter().map(|k| k.name()).collect();
+        anyhow!("unknown problem {kind:?} (known: {})", known.join(", "))
+    })?;
+    Ok(match kind {
+        ProblemKind::MaxCut => {
+            if let Some(name) = f.remove("graph") {
+                let spec = GraphSpec::by_name(&name)
+                    .ok_or_else(|| anyhow!("graph={name:?}: unknown graph (use G11..G15)"))?;
+                Arc::new(MaxCut::named(spec))
+            } else if f.contains_key("nodes") {
+                // generated instance of the requested size: the
+                // G11-class torus when the node count tiles 40 columns,
+                // a ±1 random graph of matching density otherwise
+                let nodes: usize = take(f, "nodes", 800)?;
+                ensure!(nodes >= 8, "nodes={nodes}: must be at least 8");
+                let gseed: u64 = take(f, "gseed", DEFAULT_GRAPH_SEED)?;
+                let g = if nodes % 40 == 0 {
+                    torus_2d(nodes / 40, 40, true, gseed)
+                } else {
+                    random_graph(nodes, 2 * nodes, &[-1, 1], gseed)
+                };
+                Arc::new(MaxCut::new(g, MaxCut::GSET_J_SCALE))
+            } else {
+                // the paper's default benchmark instance
+                Arc::new(MaxCut::named(GraphSpec::G11))
+            }
+        }
+        ProblemKind::Qubo => {
+            let n: usize = take(f, "n", 32)?;
+            ensure!((2..=4096).contains(&n), "n={n}: must be in 2..=4096");
+            let pseed: u64 = take(f, "pseed", 1)?;
+            Arc::new(QuboProblem::new(Qubo::random(n, pseed), format!("qubo-n{n}")))
+        }
+        ProblemKind::Tsp => {
+            let cities: usize = take(f, "cities", 6)?;
+            ensure!((3..=32).contains(&cities), "cities={cities}: must be in 3..=32 (n² spins)");
+            let pseed: u64 = take(f, "pseed", 0x7359)?;
+            let penalty: i32 = take(f, "penalty", 0)?; // 0 → auto
+            Arc::new(TspProblem::new(TspInstance::random(cities, pseed), penalty))
+        }
+        ProblemKind::Coloring => {
+            let nodes: usize = take(f, "nodes", 16)?;
+            ensure!((2..=512).contains(&nodes), "nodes={nodes}: must be in 2..=512");
+            let colors: usize = take(f, "colors", 3)?;
+            ensure!((2..=16).contains(&colors), "colors={colors}: must be in 2..=16");
+            let max_edges = nodes * (nodes - 1) / 2;
+            let edges: usize = take(f, "edges", (2 * nodes).min(max_edges))?;
+            ensure!(edges <= max_edges, "edges={edges}: at most {max_edges} for {nodes} nodes");
+            let pseed: u64 = take(f, "pseed", 0xC01)?;
+            let penalty: i32 = take(f, "penalty", 12)?;
+            let conflict: i32 = take(f, "conflict", 6)?;
+            ensure!(penalty > 0 && conflict > 0, "penalty/conflict must be positive");
+            let g = random_graph(nodes, edges, &[1], pseed);
+            Arc::new(ColoringProblem::new(ColoringInstance::new(g, colors), penalty, conflict))
+        }
+        ProblemKind::GraphIso => {
+            let nodes: usize = take(f, "nodes", 8)?;
+            ensure!((2..=45).contains(&nodes), "nodes={nodes}: must be in 2..=45 (n² spins)");
+            let max_edges = nodes * (nodes - 1) / 2;
+            let edges: usize = take(f, "edges", (nodes * 3 / 2).min(max_edges))?;
+            ensure!(edges <= max_edges, "edges={edges}: at most {max_edges} for {nodes} nodes");
+            let pseed: u64 = take(f, "pseed", 0x61)?;
+            let penalty: i32 = take(f, "penalty", 2 * nodes as i32)?;
+            ensure!(penalty > 0, "penalty must be positive");
+            let g1 = random_graph(nodes, edges, &[1], pseed);
+            // a guaranteed-isomorphic pair (success-probability studies)
+            let (inst, _) = GiInstance::permuted(g1, pseed ^ 0x99);
+            Arc::new(GiProblem::new(inst, penalty))
+        }
+        ProblemKind::Partition => {
+            let n: usize = take(f, "n", 20)?;
+            ensure!((2..=4096).contains(&n), "n={n}: must be in 2..=4096");
+            // couplings are −2·n_i·n_k and a spin's field accumulates n
+            // of them in i32 (the engine's Eq. 6a adder): 255² keeps
+            // even a 4096-number instance inside the i32 range
+            let maxv: i32 = take(f, "maxv", 9)?;
+            ensure!((1..=255).contains(&maxv), "maxv={maxv}: must be in 1..=255");
+            let pseed: u64 = take(f, "pseed", 42)?;
+            Arc::new(PartitionInstance::random(n, maxv, pseed))
+        }
+    })
+}

@@ -1,0 +1,248 @@
+use super::problem::{Problem, ProblemKind, Sense};
+use super::request::SolveRequest;
+use super::spec::{build_problem, ensure_consumed};
+use super::Solution;
+use crate::graph::{random_graph, Graph};
+use crate::problems::{
+    maxcut, ColoringInstance, ColoringProblem, GiInstance, GiProblem, MaxCut, PartitionInstance,
+    Qubo, QuboProblem, TspInstance, TspProblem,
+};
+use std::collections::BTreeMap;
+
+fn sigma_of_x(x: &[u8]) -> Vec<i32> {
+    x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect()
+}
+
+/// The trait contract, kind by kind: a feasible decode's objective is
+/// exactly the energy-mapped objective.
+fn assert_contract(problem: &dyn Problem, sigma: &[i32]) {
+    let model = problem.to_ising();
+    assert_eq!(model.n(), problem.num_vars(), "{}", problem.label());
+    let sol = problem.decode(sigma);
+    assert!(sol.feasible(), "{}: crafted σ must decode feasible", problem.label());
+    assert!(problem.feasible(sigma), "{}: probe must agree with decode", problem.label());
+    assert_eq!(
+        sol.objective(),
+        Some(problem.objective_from_energy(model.energy(sigma))),
+        "{}: objective must equal the energy mapping",
+        problem.label()
+    );
+}
+
+#[test]
+fn kind_tokens_roundtrip_and_orient() {
+    for kind in ProblemKind::ALL {
+        assert_eq!(ProblemKind::parse(kind.name()), Some(kind), "{}", kind.name());
+    }
+    assert_eq!(ProblemKind::parse("gi"), Some(ProblemKind::GraphIso));
+    assert_eq!(ProblemKind::parse("nope"), None);
+    assert_eq!(ProblemKind::MaxCut.sense(), Sense::Maximize);
+    assert_eq!(ProblemKind::Tsp.sense(), Sense::Minimize);
+    // lower keys always rank better
+    assert!(Sense::Maximize.key(10) < Sense::Maximize.key(5));
+    assert!(Sense::Minimize.key(5) < Sense::Minimize.key(10));
+    assert!(Sense::Maximize.better(10, 5) && Sense::Minimize.better(5, 10));
+    assert!(Sense::Maximize.key_f(3.0) < Sense::Maximize.key_f(2.0));
+}
+
+#[test]
+fn maxcut_contract_and_label() {
+    let g = random_graph(10, 20, &[-1, 1], 3);
+    let p = MaxCut::new(g.clone(), 8);
+    assert_eq!(Problem::label(&p), format!("inline-n{}", g.num_nodes()));
+    let sigma: Vec<i32> = (0..10).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+    assert_contract(&p, &sigma);
+    let Solution::MaxCut { cut, .. } = p.decode(&sigma) else { panic!("wrong variant") };
+    assert_eq!(cut, maxcut::cut_value(&g, &sigma));
+}
+
+#[test]
+fn qubo_contract() {
+    let q = Qubo::random(12, 7);
+    let p = QuboProblem::new(q, "qubo-test");
+    let sigma = sigma_of_x(&[1, 0, 1, 1, 0, 0, 1, 0, 1, 1, 0, 1]);
+    assert_contract(&p, &sigma);
+}
+
+#[test]
+fn partition_contract() {
+    let p = PartitionInstance::new(vec![3, 1, 4, 1, 5, 9, 2, 6]);
+    let sigma = vec![1, -1, 1, -1, 1, -1, 1, -1];
+    assert_contract(&p, &sigma);
+    let Solution::Partition { imbalance, .. } = p.decode(&sigma) else { panic!() };
+    assert_eq!(imbalance, p.imbalance(&sigma));
+}
+
+#[test]
+fn tsp_contract_and_infeasibility() {
+    let p = TspProblem::new(TspInstance::random(4, 9), 0);
+    assert!(p.penalty() >= 4 * p.instance().max_dist(), "auto penalty dominates");
+    // feasible: the tour 2→0→3→1
+    let tour = [2usize, 0, 3, 1];
+    let mut x = vec![0u8; 16];
+    for (pos, &city) in tour.iter().enumerate() {
+        x[city * 4 + pos] = 1;
+    }
+    let sigma = sigma_of_x(&x);
+    assert_contract(&p, &sigma);
+    let Solution::Tour { length, order } = p.decode(&sigma) else { panic!("wrong variant") };
+    assert_eq!(order, tour.to_vec());
+    assert_eq!(length, p.instance().tour_length(&tour));
+    // infeasible: all spins down → no city anywhere
+    let empty = vec![-1i32; 16];
+    let sol = p.decode(&empty);
+    assert!(!sol.feasible() && !p.feasible(&empty));
+    assert_eq!(sol.objective(), None);
+    // the penalized objective of an infeasible assignment is worse than
+    // any feasible tour (penalty dominance)
+    let model = p.to_ising();
+    assert!(
+        p.objective_from_energy(model.energy(&empty)) > length,
+        "penalty must dominate tour lengths"
+    );
+}
+
+#[test]
+fn coloring_contract_and_infeasibility() {
+    let g = Graph::new(4, vec![(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 0, 1)]);
+    let p = ColoringProblem::new(ColoringInstance::new(g, 2), 10, 4);
+    // proper 2-coloring of the 4-cycle
+    let mut x = vec![0u8; 8];
+    for (v, &c) in [0usize, 1, 0, 1].iter().enumerate() {
+        x[v * 2 + c] = 1;
+    }
+    let sigma = sigma_of_x(&x);
+    assert_contract(&p, &sigma);
+    let Solution::Coloring { conflicts, .. } = p.decode(&sigma) else { panic!() };
+    assert_eq!(conflicts, 0);
+    // improper but feasible (one-hot) coloring: conflicts recovered too
+    let mut x2 = vec![0u8; 8];
+    for (v, &c) in [0usize, 0, 0, 1].iter().enumerate() {
+        x2[v * 2 + c] = 1;
+    }
+    assert_contract(&p, &sigma_of_x(&x2));
+    // infeasible: vertex 0 carries both colors
+    let mut bad = x.clone();
+    bad[1] = 1;
+    let sigma_bad = sigma_of_x(&bad);
+    assert!(!p.decode(&sigma_bad).feasible() && !p.feasible(&sigma_bad));
+}
+
+#[test]
+fn graphiso_contract_mismatches_and_infeasibility() {
+    let g = random_graph(5, 7, &[1], 11);
+    let (inst, perm) = GiInstance::permuted(g, 5);
+    assert!(inst.is_isomorphism(&perm));
+    assert_eq!(inst.mismatches(&perm), 0, "true isomorphism has zero mismatches");
+    let p = GiProblem::new(inst, 10);
+    let n = 5;
+    let mut x = vec![0u8; n * n];
+    for (u, &v) in perm.iter().enumerate() {
+        x[u * n + v] = 1;
+    }
+    let sigma = sigma_of_x(&x);
+    assert_contract(&p, &sigma);
+    let Solution::Mapping { mismatches, map } = p.decode(&sigma) else { panic!() };
+    assert_eq!(mismatches, 0);
+    assert_eq!(map, perm);
+    // a non-identity bijection generally mismatches, but stays feasible
+    let rotated: Vec<usize> = (0..n).map(|u| perm[(u + 1) % n]).collect();
+    let mut xr = vec![0u8; n * n];
+    for (u, &v) in rotated.iter().enumerate() {
+        xr[u * n + v] = 1;
+    }
+    assert_contract(&p, &sigma_of_x(&xr));
+    // infeasible: two vertices map to the same target
+    let mut bad = x.clone();
+    for v in 0..n {
+        bad[n + v] = 0;
+    }
+    bad[n + perm[0]] = 1; // vertex 1 now collides with vertex 0
+    let sigma_bad = sigma_of_x(&bad);
+    assert!(!p.decode(&sigma_bad).feasible() && !p.feasible(&sigma_bad));
+}
+
+#[test]
+fn build_problem_covers_every_kind_and_names_unknown_keys() {
+    for (kind, keys, expect) in [
+        ("maxcut", vec![("graph", "G12")], ProblemKind::MaxCut),
+        ("maxcut", vec![("nodes", "80")], ProblemKind::MaxCut),
+        ("maxcut", vec![], ProblemKind::MaxCut), // defaults to G11
+        ("qubo", vec![("n", "6")], ProblemKind::Qubo),
+        ("tsp", vec![("cities", "4")], ProblemKind::Tsp),
+        ("coloring", vec![("nodes", "6"), ("colors", "3")], ProblemKind::Coloring),
+        ("graphiso", vec![("nodes", "4")], ProblemKind::GraphIso),
+        ("partition", vec![("n", "8")], ProblemKind::Partition),
+    ] {
+        let mut f: BTreeMap<String, String> =
+            keys.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let p = build_problem(kind, &mut f).unwrap();
+        assert_eq!(p.kind(), expect, "{kind}");
+        assert!(f.is_empty(), "{kind}: all keys consumed");
+        assert!(p.num_vars() >= 2);
+    }
+    // the bare default is the paper's G11 benchmark
+    let p = build_problem("maxcut", &mut BTreeMap::new()).unwrap();
+    assert_eq!(Problem::label(p.as_ref()), "G11");
+    // deterministic: same keys, same instance
+    let mk = || {
+        let mut f: BTreeMap<String, String> =
+            [("cities".to_string(), "4".to_string())].into_iter().collect();
+        build_problem("tsp", &mut f).unwrap()
+    };
+    assert_eq!(mk().to_ising().j_dense(), mk().to_ising().j_dense());
+    // unknown kind lists the known kinds
+    let err = build_problem("knapsack", &mut BTreeMap::new()).unwrap_err().to_string();
+    assert!(err.contains("knapsack") && err.contains("maxcut"), "{err}");
+    // leftover keys are named by ensure_consumed
+    let mut f: BTreeMap<String, String> =
+        [("bogus".to_string(), "1".to_string())].into_iter().collect();
+    let err = ensure_consumed(&f, "solve").unwrap_err().to_string();
+    assert!(err.contains("bogus") && err.contains("solve"), "{err}");
+    // bad values name the key
+    f.clear();
+    f.insert("cities".to_string(), "many".to_string());
+    let err = build_problem("tsp", &mut f).unwrap_err().to_string();
+    assert!(err.contains("cities") && err.contains("many"), "{err}");
+}
+
+#[test]
+fn derive_params_is_problem_aware() {
+    use crate::annealer::SsqaParams;
+    let mc = MaxCut::named(crate::graph::GraphSpec::G11);
+    let m = mc.to_ising();
+    assert_eq!(
+        SolveRequest::derive_params(&mc, &m, 500),
+        SsqaParams::gset_default(500),
+        "MAX-CUT keeps the paper's calibrated configuration"
+    );
+    let p = TspProblem::new(TspInstance::random(4, 9), 0);
+    let m = p.to_ising();
+    let d = SolveRequest::derive_params(&p, &m, 400);
+    assert!(d.i0 >= 16, "penalty encodings scale I0 with the field range");
+    assert_eq!(d.j_scale, 1);
+}
+
+#[test]
+fn solve_request_end_to_end_on_always_feasible_kinds() {
+    use std::sync::Arc;
+    // qubo: a tiny random instance, several seeds
+    let p = Arc::new(QuboProblem::new(Qubo::random(10, 3), "qubo-n10"));
+    let report = SolveRequest::new(p.clone()).steps(60).runs(3).solve().unwrap();
+    assert!(report.feasible);
+    assert_eq!(report.feasible_runs, 3);
+    assert_eq!(report.best_objective, p.objective_from_energy(report.best_energy));
+    let Solution::Qubo { value, .. } = report.solution else { panic!("wrong variant") };
+    assert_eq!(value, report.best_objective);
+    assert!(report.fpga.latency_s > 0.0 && report.fpga.energy_j > 0.0);
+    assert!(report.spin_updates > 0);
+    let text = report.render();
+    assert!(text.contains("qubo-n10") && text.contains("value"), "{text}");
+
+    // partition through the same surface
+    let p = Arc::new(PartitionInstance::random(10, 9, 5));
+    let report = SolveRequest::new(p).steps(60).runs(2).solve().unwrap();
+    assert!(report.feasible);
+    let Solution::Partition { imbalance, .. } = report.solution else { panic!() };
+    assert_eq!(imbalance, report.best_objective);
+}

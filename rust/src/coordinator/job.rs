@@ -1,32 +1,69 @@
 //! Job descriptions and outcomes.
+//!
+//! Since the unified-API redesign every job carries an
+//! `Arc<dyn Problem>` instead of a bare MAX-CUT graph: the coordinator
+//! is problem-generic, execution reports **domain objectives** (cut /
+//! tour length / imbalance / …) recovered from the Ising energy, and
+//! penalty-encoded workloads get per-seed feasibility accounting.
 
-use crate::annealer::{run_seed, SsqaParams};
+use crate::annealer::{run_seed, RunResult, SsqaParams};
+use crate::api::{Problem, ProblemKind};
 use crate::graph::{Graph, GraphSpec, IsingModel};
-use crate::problems::maxcut;
-use std::sync::Arc;
+use crate::problems::maxcut::MaxCut;
+use crate::tuner::{ConvergenceMonitor, MonitorConfig};
+use std::sync::{Arc, OnceLock};
 
-/// What to solve: a named benchmark instance or an inline graph.
+/// What to solve: any [`Problem`] behind an `Arc`, plus a lazily built,
+/// `Arc`-shared Ising model.
+///
+/// The model is built at most once per spec lineage: [`Self::model`]
+/// populates the cache, and clones made afterwards share the same
+/// `Arc<IsingModel>` (the pool's batch fan-out and the tuner rely on
+/// this — one O(n²) encode per batch, not per chunk).
 #[derive(Debug, Clone)]
-pub enum JobSpec {
-    /// A Table-2 benchmark instance.
-    Named(GraphSpec),
-    /// An explicit graph (e.g. parsed from a G-set upload).
-    Inline(Graph),
+pub struct JobSpec {
+    problem: Arc<dyn Problem>,
+    model: OnceLock<Arc<IsingModel>>,
 }
 
 impl JobSpec {
-    pub fn graph(&self) -> Graph {
-        match self {
-            JobSpec::Named(spec) => spec.build(),
-            JobSpec::Inline(g) => g.clone(),
-        }
+    /// Wrap any problem.
+    pub fn new(problem: Arc<dyn Problem>) -> Self {
+        Self { problem, model: OnceLock::new() }
+    }
+
+    /// A Table-2 MAX-CUT benchmark instance (label `G11`…`G15`).
+    pub fn named(spec: GraphSpec) -> Self {
+        Self::new(Arc::new(MaxCut::named(spec)))
+    }
+
+    /// An explicit MAX-CUT graph (e.g. parsed from a G-set upload),
+    /// labeled `inline-n<N>`, at the calibrated G-set coupling scale.
+    pub fn inline_graph(g: Graph) -> Self {
+        Self::new(Arc::new(MaxCut::new(g, MaxCut::GSET_J_SCALE)))
+    }
+
+    pub fn problem(&self) -> &Arc<dyn Problem> {
+        &self.problem
+    }
+
+    pub fn kind(&self) -> ProblemKind {
+        self.problem.kind()
     }
 
     pub fn label(&self) -> String {
-        match self {
-            JobSpec::Named(spec) => spec.name().to_string(),
-            JobSpec::Inline(g) => format!("inline-n{}", g.num_nodes()),
-        }
+        self.problem.label()
+    }
+
+    /// Number of Ising spins (cheap — no model build).
+    pub fn num_vars(&self) -> usize {
+        self.problem.num_vars()
+    }
+
+    /// The encoded Ising model, built on first use and shared by every
+    /// later clone of this spec.
+    pub fn model(&self) -> Arc<IsingModel> {
+        self.model.get_or_init(|| Arc::new(self.problem.to_ising())).clone()
     }
 }
 
@@ -40,20 +77,21 @@ pub struct Job {
     pub seed: u32,
     /// Backend override; `None` lets the router decide.
     pub backend: Option<super::BackendKind>,
+    /// Convergence-aware early stopping (software SSQA backend only).
+    pub early_stop: Option<MonitorConfig>,
 }
 
 impl Job {
     pub fn new(id: u64, spec: JobSpec, steps: usize, seed: u32) -> Self {
         let params = SsqaParams::gset_default(steps);
-        Self { id, spec, params, steps, seed, backend: None }
+        Self { id, spec, params, steps, seed, backend: None, early_stop: None }
     }
 }
 
 /// A multi-seed job: one problem, many independent seeds. The pool
-/// builds the graph and [`IsingModel`] **once**, shares them across its
-/// workers via `Arc` (instead of the per-[`Job`] rebuild/clone), and
-/// fans the seeds out as [`BatchChunk`]s so a wide batch saturates every
-/// worker thread.
+/// builds the [`IsingModel`] **once**, shares it across its workers via
+/// `Arc` (instead of a per-[`Job`] rebuild), and fans the seeds out as
+/// [`BatchChunk`]s so a wide batch saturates every worker thread.
 #[derive(Debug, Clone)]
 pub struct BatchJob {
     pub spec: JobSpec,
@@ -62,6 +100,8 @@ pub struct BatchJob {
     pub seeds: Vec<u32>,
     /// Backend override; `None` lets the router decide.
     pub backend: Option<super::BackendKind>,
+    /// Convergence-aware early stopping (software SSQA backend only).
+    pub early_stop: Option<MonitorConfig>,
 }
 
 impl BatchJob {
@@ -69,7 +109,7 @@ impl BatchJob {
     /// assigns one fresh id per chunk and returns them.
     pub fn new(spec: JobSpec, steps: usize, seeds: Vec<u32>) -> Self {
         let params = SsqaParams::gset_default(steps);
-        Self { spec, params, steps, seeds, backend: None }
+        Self { spec, params, steps, seeds, backend: None, early_stop: None }
     }
 
     /// Batch over the standard sweep seeds (`run_seed(seed0, 0..runs)`,
@@ -81,15 +121,18 @@ impl BatchJob {
 }
 
 /// One worker's share of a [`BatchJob`]: a contiguous seed slice plus
-/// the `Arc`-shared problem. Built by `WorkerPool::submit_batch`.
+/// the `Arc`-shared problem and model. Built by
+/// `WorkerPool::submit_batch`.
 #[derive(Debug, Clone)]
 pub(crate) struct BatchChunk {
     pub id: u64,
     pub label: String,
+    pub kind: ProblemKind,
     pub params: SsqaParams,
     pub steps: usize,
     pub seeds: Vec<u32>,
-    pub graph: Arc<Graph>,
+    pub early_stop: Option<MonitorConfig>,
+    pub problem: Arc<dyn Problem>,
     pub model: Arc<IsingModel>,
 }
 
@@ -103,9 +146,10 @@ pub(crate) enum WorkItem {
 
 /// An auto-tuning job: race candidate configurations for one problem
 /// and report the winning (config, engine) pair. Like [`BatchJob`], the
-/// pool builds the graph and [`IsingModel`] once and `Arc`-shares them;
-/// each rung's candidate evaluations then fan out across the workers as
-/// [`TuneEvalChunk`]s.
+/// pool builds the [`IsingModel`] once and `Arc`-shares it; each rung's
+/// candidate evaluations then fan out across the workers as
+/// [`TuneEvalChunk`]s. Candidates are ranked on the problem's **domain
+/// objective** (oriented by its [`crate::api::Sense`]).
 #[derive(Debug, Clone)]
 pub struct TuneJob {
     pub spec: JobSpec,
@@ -113,56 +157,79 @@ pub struct TuneJob {
 }
 
 impl TuneJob {
+    /// Problem-aware default configuration: MAX-CUT keeps the G-set
+    /// space, other kinds get a field-scaled space
+    /// (`TunerConfig::for_problem`; the model this builds is cached in
+    /// the spec and reused by the run).
     pub fn new(spec: JobSpec, tuner_seed: u64) -> Self {
-        Self { spec, config: crate::tuner::TunerConfig::gset_default(tuner_seed) }
+        let config = if spec.kind() == ProblemKind::MaxCut {
+            crate::tuner::TunerConfig::gset_default(tuner_seed)
+        } else {
+            crate::tuner::TunerConfig::for_problem(spec.kind(), &spec.model(), tuner_seed)
+        };
+        Self { spec, config }
     }
 }
 
 /// One worker's tuner evaluation: a racing candidate, the rung's seed
-/// slice and the `Arc`-shared problem (the same sharing scheme as
+/// slice and the `Arc`-shared problem/model (the same sharing scheme as
 /// [`BatchChunk`]). Built by `WorkerPool::run_tune`, executed by
 /// [`execute_tune_eval`].
 #[derive(Debug, Clone)]
 pub(crate) struct TuneEvalChunk {
     pub id: u64,
     pub label: String,
+    pub kind: ProblemKind,
     pub cand: crate::tuner::Candidate,
     pub seeds: Vec<u32>,
-    pub monitor: crate::tuner::MonitorConfig,
-    pub graph: Arc<Graph>,
+    pub monitor: MonitorConfig,
+    pub problem: Arc<dyn Problem>,
     pub model: Arc<IsingModel>,
 }
 
-/// Result of an executed job or batch chunk.
+/// Result of an executed job or batch chunk, in domain units.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
     pub id: u64,
     pub label: String,
+    pub kind: ProblemKind,
     pub backend: super::BackendKind,
-    /// Best cut over the outcome's seeds.
-    pub cut: i64,
+    /// Best domain objective over the outcome's seeds — recovered from
+    /// the lowest Ising energy via
+    /// [`crate::api::Problem::objective_from_energy`] (the penalized
+    /// objective when that configuration decodes infeasible).
+    pub best_objective: i64,
     /// Lowest Ising energy over the outcome's seeds.
     pub best_energy: i64,
+    /// Configuration achieving `best_energy`.
+    pub best_sigma: Vec<i32>,
+    /// Final per-replica energies of the lowest-energy seed.
+    pub replica_energies: Vec<i64>,
+    /// Best *feasible* decode over the seeds — `(objective, σ)`,
+    /// oriented by the problem's sense. `None` when every seed decoded
+    /// infeasible (penalty-encoded workloads only).
+    pub best_feasible: Option<(i64, Vec<i32>)>,
     /// Seeds this outcome covers (1 for a single [`Job`]).
     pub runs: usize,
-    /// Mean cut over the covered seeds (== `cut` when `runs == 1`).
-    pub mean_cut: f64,
-    /// Mean best energy over the covered seeds (== `best_energy` when
-    /// `runs == 1`) — the tuner's ranking key.
+    /// Seeds whose best configuration decoded feasible.
+    pub feasible_runs: usize,
+    /// Mean (penalized) objective over the covered seeds.
+    pub mean_objective: f64,
+    /// Mean best energy over the covered seeds — the cross-problem
+    /// comparable aggregate.
     pub mean_energy: f64,
     /// Spin updates executed across the covered seeds (early-stopped
-    /// tuner evaluations report the *actual* count, not the budget).
+    /// runs report the *actual* count, not the budget).
     pub spin_updates: u64,
-    /// Runs stopped before their step budget by convergence monitoring
-    /// (only tuner evaluations monitor; 0 for plain jobs/batches).
+    /// Runs stopped before their step budget by convergence monitoring.
     pub early_stops: usize,
     pub wall: std::time::Duration,
     /// Modeled FPGA energy for hw-sim jobs (J), summed over seeds.
     pub modeled_energy_j: Option<f64>,
-    /// Why execution failed, if it did (cut/energy fields are zeroed).
-    /// Workers must always deliver an outcome — a missing backend (e.g.
-    /// PJRT without artifacts or the `pjrt` feature) reports here
-    /// instead of panicking the worker and hanging `drain`.
+    /// Why execution failed, if it did (objective/energy fields are
+    /// zeroed). Workers must always deliver an outcome — a missing
+    /// backend (e.g. PJRT without artifacts or the `pjrt` feature)
+    /// reports here instead of panicking the worker and hanging `drain`.
     pub error: Option<String>,
 }
 
@@ -171,6 +238,7 @@ impl JobOutcome {
     pub(crate) fn failed(
         id: u64,
         label: String,
+        kind: ProblemKind,
         backend: super::BackendKind,
         runs: usize,
         wall: std::time::Duration,
@@ -179,11 +247,16 @@ impl JobOutcome {
         Self {
             id,
             label,
+            kind,
             backend,
-            cut: 0,
+            best_objective: 0,
             best_energy: 0,
+            best_sigma: Vec::new(),
+            replica_energies: Vec::new(),
+            best_feasible: None,
             runs,
-            mean_cut: 0.0,
+            feasible_runs: 0,
+            mean_objective: 0.0,
             mean_energy: 0.0,
             spin_updates: 0,
             early_stops: 0,
@@ -246,12 +319,7 @@ impl BackendInstance {
     }
 
     /// Run one seed, returning (result, modeled energy).
-    fn run(
-        &mut self,
-        model: &IsingModel,
-        steps: usize,
-        seed: u32,
-    ) -> (crate::annealer::RunResult, Option<f64>) {
+    fn run(&mut self, model: &IsingModel, steps: usize, seed: u32) -> (RunResult, Option<f64>) {
         use crate::annealer::Annealer;
         match self {
             Self::Software(eng) => (eng.anneal(model, steps, seed), None),
@@ -267,99 +335,129 @@ impl BackendInstance {
     }
 }
 
-/// Execute a job on a concrete backend (used by the pool workers).
+/// Execute a job on a concrete backend (used by the pool workers): a
+/// single-seed chunk through the shared [`execute_chunk`] path, so
+/// single jobs and batches report identically.
 pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
-    let graph = job.spec.graph();
-    let model = maxcut::ising_from_graph(&graph, job.params.j_scale);
-    let t0 = std::time::Instant::now();
-    let mut instance = match BackendInstance::build(backend, job.params, model.n(), job.steps) {
-        Ok(b) => b,
-        Err(e) => {
-            return JobOutcome::failed(
-                job.id,
-                job.spec.label(),
-                backend,
-                1,
-                t0.elapsed(),
-                e.to_string(),
-            )
-        }
-    };
-    let (res, modeled_energy_j) = instance.run(&model, job.steps, job.seed);
-    let cut = res.cut(&graph);
-    JobOutcome {
+    let chunk = BatchChunk {
         id: job.id,
         label: job.spec.label(),
-        backend,
-        cut,
-        best_energy: res.best_energy,
-        runs: 1,
-        mean_cut: cut as f64,
-        mean_energy: res.best_energy as f64,
-        spin_updates: updates_per_run(backend, model.n(), job.params.replicas, res.steps),
-        early_stops: 0,
-        wall: t0.elapsed(),
-        modeled_energy_j,
-        error: None,
-    }
+        kind: job.spec.kind(),
+        params: job.params,
+        steps: job.steps,
+        seeds: vec![job.seed],
+        early_stop: job.early_stop,
+        problem: Arc::clone(job.spec.problem()),
+        model: job.spec.model(),
+    };
+    execute_chunk(&chunk, backend)
 }
 
 /// Execute one batch chunk: every seed against the shared model, one
 /// outcome aggregating the chunk. The software SSQA backend drives the
-/// whole chunk through `SsqaEngine::run_batch` (shared scratch/state);
-/// the other backends build their engine **once** per chunk (one PJRT
-/// artifact load, one hw resource estimate) and loop seeds against the
-/// `Arc`-shared model.
+/// whole chunk through `SsqaEngine::run_batch` (shared scratch/state,
+/// optionally convergence-monitored); the other backends build their
+/// engine **once** per chunk (one PJRT artifact load, one hw resource
+/// estimate) and loop seeds against the `Arc`-shared model.
+///
+/// §Perf: the per-seed domain accounting costs one O(1)
+/// `objective_from_energy` plus one [`crate::api::Problem::feasible`]
+/// probe (O(1) for the always-feasible kinds) — the generic facade adds
+/// no per-seed model traversal over the old MAX-CUT-only path
+/// (`benches/api.rs` holds the line).
 pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> JobOutcome {
     let t0 = std::time::Instant::now();
-    let mut cuts: Vec<i64> = Vec::with_capacity(chunk.seeds.len());
-    let mut energies: Vec<i64> = Vec::with_capacity(chunk.seeds.len());
+    let problem = chunk.problem.as_ref();
+    let sense = problem.sense();
+    let n = chunk.model.n();
     let mut modeled_energy_j: Option<f64> = None;
-    match BackendInstance::build(backend, chunk.params, chunk.model.n(), chunk.steps) {
+    let build = BackendInstance::build(backend, chunk.params, n, chunk.steps);
+    let results: Vec<RunResult> = match build {
         Err(e) => {
             return JobOutcome::failed(
                 chunk.id,
                 chunk.label.clone(),
+                chunk.kind,
                 backend,
                 chunk.seeds.len(),
                 t0.elapsed(),
                 e.to_string(),
             )
         }
-        Ok(BackendInstance::Software(eng)) => {
-            for res in eng.run_batch(&chunk.model, chunk.steps, &chunk.seeds) {
-                cuts.push(res.cut(&chunk.graph));
-                energies.push(res.best_energy);
+        Ok(BackendInstance::Software(eng)) => match chunk.early_stop {
+            Some(cfg) => {
+                let mut mon = ConvergenceMonitor::new(cfg, &chunk.model);
+                eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut mon)
             }
-        }
-        Ok(mut instance) => {
-            for &seed in &chunk.seeds {
+            None => eng.run_batch(&chunk.model, chunk.steps, &chunk.seeds),
+        },
+        Ok(mut instance) => chunk
+            .seeds
+            .iter()
+            .map(|&seed| {
                 let (res, energy) = instance.run(&chunk.model, chunk.steps, seed);
-                cuts.push(res.cut(&chunk.graph));
-                energies.push(res.best_energy);
                 if let Some(e) = energy {
                     *modeled_energy_j.get_or_insert(0.0) += e;
                 }
+                res
+            })
+            .collect(),
+    };
+
+    let runs = results.len();
+    let mut best_energy = i64::MAX;
+    let mut best_idx = 0usize;
+    let mut best_feas: Option<(i64, usize)> = None;
+    let mut feasible_runs = 0usize;
+    let mut sum_objective = 0.0f64;
+    let mut sum_energy = 0.0f64;
+    let mut spin_updates = 0u64;
+    let mut early_stops = 0usize;
+    for (idx, res) in results.iter().enumerate() {
+        spin_updates += updates_per_run(backend, n, chunk.params.replicas, res.steps);
+        early_stops += (res.steps < chunk.steps) as usize;
+        if res.best_energy < best_energy {
+            best_energy = res.best_energy;
+            best_idx = idx;
+        }
+        let objective = problem.objective_from_energy(res.best_energy);
+        sum_objective += objective as f64;
+        sum_energy += res.best_energy as f64;
+        if problem.feasible(&res.best_sigma) {
+            feasible_runs += 1;
+            if best_feas.is_none_or(|(b, _)| sense.key(objective) < sense.key(b)) {
+                best_feas = Some((objective, idx));
             }
         }
     }
-    let runs = cuts.len();
-    let cut = cuts.iter().copied().max().unwrap_or(0);
-    let mean_cut = cuts.iter().sum::<i64>() as f64 / runs.max(1) as f64;
-    let best_energy = energies.iter().copied().min().unwrap_or(0);
-    let mean_energy = energies.iter().sum::<i64>() as f64 / runs.max(1) as f64;
+    if runs == 0 {
+        // an empty chunk is never submitted, but keep the outcome total
+        return JobOutcome::failed(
+            chunk.id,
+            chunk.label.clone(),
+            chunk.kind,
+            backend,
+            0,
+            t0.elapsed(),
+            "empty seed set".to_string(),
+        );
+    }
     JobOutcome {
         id: chunk.id,
         label: chunk.label.clone(),
+        kind: chunk.kind,
         backend,
-        cut,
+        best_objective: problem.objective_from_energy(best_energy),
         best_energy,
+        best_sigma: results[best_idx].best_sigma.clone(),
+        replica_energies: results[best_idx].replica_energies.clone(),
+        best_feasible: best_feas.map(|(obj, idx)| (obj, results[idx].best_sigma.clone())),
         runs,
-        mean_cut,
-        mean_energy,
-        spin_updates: updates_per_run(backend, chunk.model.n(), chunk.params.replicas, chunk.steps)
-            * runs as u64,
-        early_stops: 0,
+        feasible_runs,
+        mean_objective: sum_objective / runs as f64,
+        mean_energy: sum_energy / runs as f64,
+        spin_updates,
+        early_stops,
         wall: t0.elapsed(),
         modeled_energy_j,
         error: None,
@@ -368,12 +466,13 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
 
 /// Execute one tuner candidate evaluation (used by the pool workers):
 /// the shared [`crate::tuner::evaluate_candidate`] against the
-/// `Arc`-shared model, repackaged as a [`JobOutcome`] so it flows over
-/// the ordinary result channel and into the metrics registry.
+/// `Arc`-shared problem and model, repackaged as a [`JobOutcome`] so it
+/// flows over the ordinary result channel and into the metrics registry
+/// (including the infeasible-decode counts).
 pub(crate) fn execute_tune_eval(chunk: &TuneEvalChunk, backend: super::BackendKind) -> JobOutcome {
     let t0 = std::time::Instant::now();
     let score = crate::tuner::evaluate_candidate(
-        &chunk.graph,
+        chunk.problem.as_ref(),
         &chunk.model,
         &chunk.cand,
         &chunk.seeds,
@@ -382,11 +481,16 @@ pub(crate) fn execute_tune_eval(chunk: &TuneEvalChunk, backend: super::BackendKi
     JobOutcome {
         id: chunk.id,
         label: chunk.label.clone(),
+        kind: chunk.kind,
         backend,
-        cut: score.best_cut,
+        best_objective: score.best_objective,
         best_energy: score.best_energy,
+        best_sigma: Vec::new(),
+        replica_energies: Vec::new(),
+        best_feasible: None,
         runs: score.runs,
-        mean_cut: score.mean_cut,
+        feasible_runs: score.feasible_runs,
+        mean_objective: score.mean_objective,
         mean_energy: score.mean_energy,
         spin_updates: score.spin_updates,
         early_stops: score.early_stops,

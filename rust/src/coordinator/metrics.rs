@@ -13,14 +13,18 @@ pub struct BackendMetrics {
     /// Seeds covered by successful outcomes (a batch chunk counts its
     /// whole seed slice).
     pub runs: u64,
-    /// Failed outcomes (excluded from wall/cut/energy aggregates).
+    /// Failed outcomes (excluded from wall/objective/energy aggregates).
     pub errors: u64,
+    /// Runs whose best configuration decoded **infeasible** (penalty-
+    /// encoded problems only — always 0 for MAX-CUT/QUBO/partition).
+    pub infeasible: u64,
     pub total_wall: Duration,
     pub min_wall: Option<Duration>,
     pub max_wall: Option<Duration>,
-    /// Sum of per-run cuts (a chunk contributes `mean_cut · runs`, not
-    /// its best cut), so `total_cut / runs` is the true per-run mean.
-    pub total_cut: f64,
+    /// Sum of per-run domain objectives (a chunk contributes
+    /// `mean_objective · runs`, not its best), so
+    /// `total_objective / runs` is the true per-run mean.
+    pub total_objective: f64,
     pub total_modeled_energy_j: f64,
     /// Spin updates executed by successful outcomes (the tuner's
     /// budget currency; early-stopped runs count what they ran).
@@ -35,10 +39,11 @@ impl BackendMetrics {
             return;
         }
         self.runs += o.runs as u64;
+        self.infeasible += (o.runs - o.feasible_runs) as u64;
         self.total_wall += o.wall;
         self.min_wall = Some(self.min_wall.map_or(o.wall, |m| m.min(o.wall)));
         self.max_wall = Some(self.max_wall.map_or(o.wall, |m| m.max(o.wall)));
-        self.total_cut += o.mean_cut * o.runs as f64;
+        self.total_objective += o.mean_objective * o.runs as f64;
         self.total_modeled_energy_j += o.modeled_energy_j.unwrap_or(0.0);
         self.total_spin_updates += o.spin_updates;
     }
@@ -100,19 +105,20 @@ impl Metrics {
     pub fn render(&self) -> String {
         let snap = self.snapshot();
         let mut out = String::from(
-            "backend        jobs   runs   errs   mean-wall      min          max          mean-cut   energy(J)   spin-upd\n",
+            "backend        jobs   runs   errs   infeas mean-wall      min          max          mean-obj   energy(J)   spin-upd\n",
         );
         for (name, m) in snap {
             out.push_str(&format!(
-                "{:<14} {:<6} {:<6} {:<6} {:<12.3?} {:<12.3?} {:<12.3?} {:<10.1} {:<11.3e} {}\n",
+                "{:<14} {:<6} {:<6} {:<6} {:<6} {:<12.3?} {:<12.3?} {:<12.3?} {:<10.1} {:<11.3e} {}\n",
                 name,
                 m.jobs,
                 m.runs,
                 m.errors,
+                m.infeasible,
                 m.mean_wall(),
                 m.min_wall.unwrap_or_default(),
                 m.max_wall.unwrap_or_default(),
-                m.total_cut / m.runs.max(1) as f64,
+                m.total_objective / m.runs.max(1) as f64,
                 m.total_modeled_energy_j,
                 m.total_spin_updates,
             ));

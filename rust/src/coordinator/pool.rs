@@ -9,7 +9,7 @@
 
 use super::job::{BatchChunk, TuneEvalChunk, WorkItem};
 use super::{job, lock_clean, BackendKind, BatchJob, Job, JobOutcome, Metrics, Router, TuneJob};
-use crate::problems::maxcut;
+use crate::api::Problem;
 use crate::tuner;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -111,28 +111,32 @@ impl WorkerPool {
         id
     }
 
-    /// Queue a multi-seed batch: the graph and Ising model are built
-    /// once here, shared via `Arc`, and the seeds are split into one
-    /// contiguous chunk per worker thread. Returns the chunk outcome
-    /// ids (each [`JobOutcome`] aggregates its chunk's seeds).
+    /// Queue a multi-seed batch: the Ising model is built once here
+    /// (via the spec's shared cache), `Arc`-shared, and the seeds are
+    /// split into one contiguous chunk per worker thread. Returns the
+    /// chunk outcome ids (each [`JobOutcome`] aggregates its chunk's
+    /// seeds).
     pub fn submit_batch(&self, batch: BatchJob) -> Vec<u64> {
         if batch.seeds.is_empty() {
             return Vec::new();
         }
-        let graph = Arc::new(batch.spec.graph());
-        let model = Arc::new(maxcut::ising_from_graph(&graph, batch.params.j_scale));
-        let backend = self.router.route_batch(&batch, graph.num_nodes());
+        let problem = Arc::clone(batch.spec.problem());
+        let model = batch.spec.model();
+        let backend = self.router.route_batch(&batch, model.n());
         let label = batch.spec.label();
+        let kind = batch.spec.kind();
         let mut ids = Vec::new();
         for seeds in crate::config::chunk_per_worker(&batch.seeds, self.workers()) {
             let id = self.fresh_id();
             let chunk = BatchChunk {
                 id,
                 label: label.clone(),
+                kind,
                 params: batch.params,
                 steps: batch.steps,
                 seeds: seeds.to_vec(),
-                graph: Arc::clone(&graph),
+                early_stop: batch.early_stop,
+                problem: Arc::clone(&problem),
                 model: Arc::clone(&model),
             };
             self.dispatch(id, WorkItem::Chunk(chunk), backend);
@@ -141,12 +145,12 @@ impl WorkerPool {
         ids
     }
 
-    /// Run a [`TuneJob`] to completion: the graph and Ising model are
-    /// built **once** and `Arc`-shared; each racing rung then fans its
+    /// Run a [`TuneJob`] to completion: the Ising model is built
+    /// **once** and `Arc`-shared; each racing rung then fans its
     /// candidate evaluations across the workers (one [`TuneEvalChunk`]
     /// per candidate) and drains before pruning — the same fan-out
     /// shape as [`Self::submit_batch`], driven by the tuner's rung
-    /// loop.
+    /// loop. Candidates race on the problem's domain objective.
     ///
     /// The result is bit-identical to `tuner::tune` with the same
     /// config (asserted in `coordinator::tests`): evaluations are
@@ -154,15 +158,15 @@ impl WorkerPool {
     /// candidate order. Like every submit→drain caller, this assumes
     /// the pool is not processing unrelated work concurrently.
     pub fn run_tune(&self, job: &TuneJob) -> tuner::TuneReport {
-        let graph = Arc::new(job.spec.graph());
-        let model = Arc::new(maxcut::ising_from_graph(&graph, job.config.space.j_scale));
+        let problem = Arc::clone(job.spec.problem());
+        let model = job.spec.model();
         let eval = PoolEval {
             pool: self,
-            graph: Arc::clone(&graph),
+            problem: Arc::clone(&problem),
             model: Arc::clone(&model),
             label: job.spec.label(),
         };
-        tuner::tune_shared(&graph, &model, &job.config, &eval)
+        tuner::tune_shared(problem.as_ref(), &model, &job.config, &eval)
     }
 
     /// Collect outcomes until no submitted work remains outstanding
@@ -203,7 +207,7 @@ impl Drop for WorkerPool {
 /// Tuner evaluation backend that fans candidates across the pool.
 struct PoolEval<'p> {
     pool: &'p WorkerPool,
-    graph: Arc<crate::graph::Graph>,
+    problem: Arc<dyn Problem>,
     model: Arc<crate::graph::IsingModel>,
     label: String,
 }
@@ -221,10 +225,11 @@ impl tuner::EvalBackend for PoolEval<'_> {
             let chunk = TuneEvalChunk {
                 id,
                 label: format!("{}#c{}", self.label, cand.id),
+                kind: self.problem.kind(),
                 cand: cand.clone(),
                 seeds: ctx.seeds.to_vec(),
                 monitor: ctx.monitor,
-                graph: Arc::clone(&self.graph),
+                problem: Arc::clone(&self.problem),
                 model: Arc::clone(&self.model),
             };
             self.pool.dispatch(id, WorkItem::TuneEval(chunk), backend);
@@ -238,11 +243,12 @@ impl tuner::EvalBackend for PoolEval<'_> {
             scores[idx] = Some(tuner::EvalScore {
                 mean_energy: o.mean_energy,
                 best_energy: o.best_energy,
-                mean_cut: o.mean_cut,
-                best_cut: o.cut,
+                mean_objective: o.mean_objective,
+                best_objective: o.best_objective,
                 spin_updates: o.spin_updates,
                 early_stops: o.early_stops,
                 runs: o.runs,
+                feasible_runs: o.feasible_runs,
             });
         }
         scores

@@ -66,18 +66,19 @@ impl Router {
         Self { policy }
     }
 
-    /// Pick a backend for a job (explicit override wins).
+    /// Pick a backend for a job (explicit override wins). Routing reads
+    /// the problem's spin count — cheap, no model build.
     pub fn route(&self, job: &super::Job) -> BackendKind {
         if let Some(b) = job.backend {
             return b;
         }
-        self.route_shape(job.spec.graph().num_nodes(), job.params.replicas)
+        self.route_shape(job.spec.num_vars(), job.params.replicas)
     }
 
     /// Pick a backend for a batch. Same policy as [`Self::route`]; the
-    /// caller passes the node count of the already-built shared graph so
-    /// routing does not rebuild it. A PJRT-routed batch amortizes one
-    /// artifact load over every seed in a chunk.
+    /// caller passes the spin count of the already-built shared model so
+    /// routing agrees with what will execute. A PJRT-routed batch
+    /// amortizes one artifact load over every seed in a chunk.
     pub fn route_batch(&self, batch: &super::BatchJob, n: usize) -> BackendKind {
         if let Some(b) = batch.backend {
             return b;

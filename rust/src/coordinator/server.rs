@@ -1,42 +1,58 @@
 //! Line-protocol server: the embedded-deployment face of the
 //! coordinator (`ssqa serve --port 7090`).
 //!
-//! Protocol — authoritative reference, mirrored in DESIGN.md §5.6 (one
+//! Protocol — authoritative reference, mirrored in DESIGN.md §6.3 (one
 //! request per line, one response per line):
 //!
 //! ```text
-//! solve graph=G11 steps=500 seed=1 [backend=sw|ssa|sa|hw|pjrt] [replicas=20] [runs=100]
-//! tune  graph=G11 [tuner_seed=7] [candidates=8] [seeds=3] [quick=1]
+//! solve [problem=maxcut] <instance keys> [steps=500] [seed=1]
+//!       [backend=sw|ssa|sa|hw|pjrt] [replicas=R] [runs=N] [early_stop=1]
+//! tune  [problem=maxcut] <instance keys> [tuner_seed=7] [candidates=8]
+//!       [seeds=3] [quick=1]
 //! metrics
 //! ping
 //! quit
 //! ```
 //!
-//! Responses: `ok id=<id> graph=<label> backend=<name> cut=<cut>
-//! energy=<H> wall_us=<t> [runs=<n> mean_cut=<c>]` or `err <message>`.
-//! `runs > 1` submits a [`BatchJob`]: the model is built once and the
-//! seeds fan out across the pool's workers (`seed`, `seed+7919`, …).
-//! `tune` runs a [`TuneJob`] (model built once, candidate evaluations
-//! fanned across the pool per racing rung) and responds `ok tuner
-//! graph=<label> engine=<name> config="<winner>" mean_cut=<c>
-//! spin_updates=<u> saved_pct=<p>`.
+//! `problem=` selects any of the six workload kinds; the instance keys
+//! per kind (`graph=G11`, `cities=6`, `colors=3`, …) are the shared
+//! grammar of [`crate::api::spec`] — identical to the CLI flags.
+//! Unknown keys are rejected **by name**; the unknown-verb error lists
+//! the supported verbs.
+//!
+//! Responses: `ok id=<id> problem=<kind> graph=<label> backend=<name>
+//! objective=<o> energy=<H> feasible=<f>/<n> wall_us=<t>
+//! [runs=<n> mean_objective=<c>]` or `err <message>`. `runs > 1`
+//! fans the seeds out across the pool's workers (`seed`, `seed+7919`,
+//! …). `tune` races candidates on the problem's domain objective and
+//! responds `ok tuner problem=<kind> graph=<label> engine=<name>
+//! config="<winner>" mean_objective=<c> spin_updates=<u>
+//! saved_pct=<p>`.
 
-use super::{BackendKind, BatchJob, Job, JobSpec, Router, RoutingPolicy, TuneJob, WorkerPool};
-use crate::graph::GraphSpec;
+use super::{BackendKind, JobSpec, Router, RoutingPolicy, TuneJob, WorkerPool};
+use crate::api::spec::{ensure_consumed, take, take_opt, take_problem};
+use crate::api::SolveRequest;
 use crate::Result;
 use anyhow::anyhow;
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 
-fn parse_graph(v: &str) -> Result<GraphSpec> {
-    Ok(match v {
-        "G11" => GraphSpec::G11,
-        "G12" => GraphSpec::G12,
-        "G13" => GraphSpec::G13,
-        "G14" => GraphSpec::G14,
-        "G15" => GraphSpec::G15,
-        _ => return Err(anyhow!("unknown graph {v:?}")),
-    })
+const VERBS: &str = "solve, tune, metrics, ping, quit";
+
+/// Collect `key=value` tokens into a map; malformed or repeated tokens
+/// are errors naming the offending token.
+fn kv_map<'a>(parts: impl Iterator<Item = &'a str>) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for tok in parts {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| anyhow!("malformed token {tok:?} (expected key=value)"))?;
+        if map.insert(k.to_string(), v.to_string()).is_some() {
+            return Err(anyhow!("key {k:?} given more than once"));
+        }
+    }
+    Ok(map)
 }
 
 /// Parse and execute one request line against a pool.
@@ -47,28 +63,19 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
         "ping" => Ok("pong".to_string()),
         "metrics" => Ok(pool.metrics.render().replace('\n', ";")),
         "tune" => {
-            let mut graph = None;
-            let mut tuner_seed = 7u64;
-            let mut candidates = None;
-            let mut seeds = None;
-            let mut quick = false;
-            for tok in parts {
-                let (k, v) = tok
-                    .split_once('=')
-                    .ok_or_else(|| anyhow!("malformed token {tok:?}"))?;
-                match k {
-                    "graph" => graph = Some(parse_graph(v)?),
-                    "tuner_seed" => tuner_seed = v.parse()?,
-                    "candidates" => candidates = Some(v.parse()?),
-                    "seeds" => seeds = Some(v.parse()?),
-                    "quick" => quick = v != "0",
-                    _ => return Err(anyhow!("unknown key {k:?}")),
-                }
-            }
-            let spec = JobSpec::Named(graph.ok_or_else(|| anyhow!("graph= required"))?);
-            let mut job = TuneJob::new(spec, tuner_seed);
-            if quick {
-                job.config = crate::tuner::TunerConfig::quick(tuner_seed);
+            let mut f = kv_map(parts)?;
+            let tuner_seed: u64 = take(&mut f, "tuner_seed", 7)?;
+            let candidates: Option<usize> = take_opt(&mut f, "candidates")?;
+            let seeds: Option<usize> = take_opt(&mut f, "seeds")?;
+            let quick: u32 = take(&mut f, "quick", 0)?;
+            let problem = take_problem(&mut f)?;
+            ensure_consumed(&f, "tune")?;
+
+            let mut job = TuneJob::new(JobSpec::new(problem), tuner_seed);
+            if quick != 0 {
+                // shrink in place: replacing the config outright would
+                // discard the problem-aware space scaling
+                job.config.shrink_quick();
             }
             if let Some(c) = candidates {
                 // a race needs ≥ 2 candidates to prune (0 would panic
@@ -88,88 +95,64 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
             let report = pool.run_tune(&job);
             let w = report.portfolio.winner_entry();
             Ok(format!(
-                "ok tuner graph={} engine={} config=\"{}\" mean_cut={:.1} spin_updates={} saved_pct={:.1}",
+                "ok tuner problem={} graph={} engine={} config=\"{}\" mean_objective={:.1} spin_updates={} saved_pct={:.1}",
+                job.spec.kind().name(),
                 job.spec.label(),
                 w.backend.name(),
                 report.winner().describe(),
-                w.mean_cut,
+                w.mean_objective,
                 report.race.total_spin_updates,
                 100.0 * report.race.saved_fraction(),
             ))
         }
         "solve" => {
-            let mut graph = None;
-            let mut steps = 500usize;
-            let mut seed = 1u32;
-            let mut backend = None;
-            let mut replicas = None;
-            let mut runs = 1usize;
-            for tok in parts {
-                let (k, v) = tok
-                    .split_once('=')
-                    .ok_or_else(|| anyhow!("malformed token {tok:?}"))?;
-                match k {
-                    "graph" => graph = Some(parse_graph(v)?),
-                    "steps" => steps = v.parse()?,
-                    "seed" => seed = v.parse()?,
-                    "replicas" => replicas = Some(v.parse()?),
-                    "runs" => runs = v.parse()?,
-                    "backend" => {
-                        backend = Some(
-                            BackendKind::parse(v).ok_or_else(|| anyhow!("unknown backend {v:?}"))?,
-                        )
-                    }
-                    _ => return Err(anyhow!("unknown key {k:?}")),
-                }
+            let mut f = kv_map(parts)?;
+            let steps: usize = take(&mut f, "steps", 500)?;
+            let seed: u32 = take(&mut f, "seed", 1)?;
+            let runs: usize = take(&mut f, "runs", 1)?;
+            if !(1..=4096).contains(&runs) {
+                return Err(anyhow!("runs= must be in 1..=4096, got {runs}"));
             }
-            let spec = JobSpec::Named(graph.ok_or_else(|| anyhow!("graph= required"))?);
+            let replicas: Option<usize> = take_opt(&mut f, "replicas")?;
+            let backend = match f.remove("backend") {
+                None => None,
+                Some(v) => Some(
+                    BackendKind::parse(&v).ok_or_else(|| anyhow!("unknown backend {v:?}"))?,
+                ),
+            };
+            let early_stop: u32 = take(&mut f, "early_stop", 0)?;
+            let problem = take_problem(&mut f)?;
+            ensure_consumed(&f, "solve")?;
+
+            let mut req = SolveRequest::new(problem).steps(steps).seed(seed).runs(runs);
+            req.backend = backend;
+            req.replicas = replicas;
+            if early_stop != 0 {
+                req = req.early_stop(crate::tuner::MonitorConfig::default());
+            }
+            let report = req.run_on(pool)?;
+            let mut resp = format!(
+                "ok id={} problem={} graph={} backend={} objective={} energy={} feasible={}/{} wall_us={}",
+                report.id,
+                report.kind.name(),
+                report.label,
+                report.backend.name(),
+                report.best_objective,
+                report.best_energy,
+                report.feasible_runs,
+                report.runs,
+                report.wall.as_micros(),
+            );
             if runs > 1 {
-                let mut batch = BatchJob::from_seed_range(spec, steps, seed, runs);
-                batch.backend = backend;
-                if let Some(r) = replicas {
-                    batch.params.replicas = r;
-                }
-                pool.submit_batch(batch);
-                let outcomes = pool.drain();
-                if let Some(failed) = outcomes.iter().find_map(|o| o.error.as_deref()) {
-                    return Err(anyhow!("backend failed: {failed}"));
-                }
-                let first = outcomes.first().ok_or_else(|| anyhow!("no outcome"))?;
-                let total_runs: usize = outcomes.iter().map(|o| o.runs).sum();
-                let cut = outcomes.iter().map(|o| o.cut).max().unwrap_or(0);
-                let energy = outcomes.iter().map(|o| o.best_energy).min().unwrap_or(0);
-                let wall_us: u128 = outcomes.iter().map(|o| o.wall.as_micros()).max().unwrap_or(0);
-                let mean_cut = outcomes.iter().map(|o| o.mean_cut * o.runs as f64).sum::<f64>()
-                    / total_runs.max(1) as f64;
-                return Ok(format!(
-                    "ok id={} graph={} backend={} cut={cut} energy={energy} wall_us={wall_us} runs={total_runs} mean_cut={mean_cut:.1}",
-                    first.id,
-                    first.label,
-                    first.backend.name(),
+                resp.push_str(&format!(
+                    " runs={} mean_objective={:.1}",
+                    report.runs, report.mean_objective
                 ));
             }
-            let mut job = Job::new(0, spec, steps, seed);
-            job.backend = backend;
-            if let Some(r) = replicas {
-                job.params.replicas = r;
-            }
-            pool.submit(job);
-            let outcome = pool.drain().pop().expect("one outcome");
-            if let Some(failed) = outcome.error {
-                return Err(anyhow!("backend failed: {failed}"));
-            }
-            Ok(format!(
-                "ok id={} graph={} backend={} cut={} energy={} wall_us={}",
-                outcome.id,
-                outcome.label,
-                outcome.backend.name(),
-                outcome.cut,
-                outcome.best_energy,
-                outcome.wall.as_micros()
-            ))
+            Ok(resp)
         }
         "" => Err(anyhow!("empty request")),
-        other => Err(anyhow!("unknown verb {other:?}")),
+        other => Err(anyhow!("unknown verb {other:?} (supported: {VERBS})")),
     }
 }
 

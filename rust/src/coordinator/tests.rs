@@ -1,10 +1,11 @@
 use super::*;
+use crate::api::ProblemKind;
 use crate::graph::{torus_2d, GraphSpec};
 use crate::hw::DelayKind;
 
 fn tiny_job(id: u64, steps: usize) -> Job {
     let g = torus_2d(4, 6, true, 5);
-    let mut job = Job::new(id, JobSpec::Inline(g), steps, 3);
+    let mut job = Job::new(id, JobSpec::inline_graph(g), steps, 3);
     job.params.replicas = 4;
     job
 }
@@ -30,7 +31,9 @@ fn sa_backend_executes_jobs() {
     job.backend = Some(BackendKind::SoftwareSa);
     let o = job::execute(&job, BackendKind::SoftwareSa);
     assert!(o.error.is_none());
-    assert!(o.cut > 0);
+    assert!(o.best_objective > 0);
+    assert_eq!(o.kind, ProblemKind::MaxCut);
+    assert_eq!(o.feasible_runs, 1, "every MAX-CUT decode is feasible");
     // single-network budget accounting: n updates per sweep
     assert_eq!(o.spin_updates, (24 * 60) as u64);
 }
@@ -47,7 +50,7 @@ fn router_respects_override_and_policy() {
     let mut small = tiny_job(2, 10);
     small.params.replicas = 8;
     assert_eq!(r.route(&small), BackendKind::Pjrt);
-    let big = Job::new(3, JobSpec::Named(GraphSpec::G11), 10, 1);
+    let big = Job::new(3, JobSpec::named(GraphSpec::G11), 10, 1);
     assert_eq!(r.route(&big), BackendKind::Software);
 }
 
@@ -56,8 +59,9 @@ fn execute_software_and_hw_agree() {
     let job = tiny_job(7, 40);
     let sw = job::execute(&job, BackendKind::Software);
     let hw = job::execute(&job, BackendKind::HwSim(DelayKind::DualBram));
-    assert_eq!(sw.cut, hw.cut, "bit-exact backends must agree");
+    assert_eq!(sw.best_objective, hw.best_objective, "bit-exact backends must agree");
     assert_eq!(sw.best_energy, hw.best_energy);
+    assert_eq!(sw.best_sigma, hw.best_sigma);
     assert!(hw.modeled_energy_j.unwrap() > 0.0);
     assert!(sw.modeled_energy_j.is_none());
 }
@@ -123,14 +127,14 @@ fn submit_batch_fans_out_and_matches_single_jobs() {
     let pool = WorkerPool::new(3, Router::new(RoutingPolicy::AllSoftware));
     let g = torus_2d(4, 6, true, 5);
     let seeds: Vec<u32> = (0..7u32).map(|i| 3 + i * 13).collect();
-    let mut batch = BatchJob::new(JobSpec::Inline(g), 30, seeds.clone());
+    let mut batch = BatchJob::new(JobSpec::inline_graph(g), 30, seeds.clone());
     batch.params.replicas = 4;
     let ids = pool.submit_batch(batch);
     assert_eq!(ids.len(), 3, "one chunk per worker");
     let outcomes = pool.drain();
     assert_eq!(outcomes.len(), 3);
     assert_eq!(outcomes.iter().map(|o| o.runs).sum::<usize>(), seeds.len());
-    let batch_best = outcomes.iter().map(|o| o.cut).max().unwrap();
+    let batch_best = outcomes.iter().map(|o| o.best_objective).max().unwrap();
     let batch_min_energy = outcomes.iter().map(|o| o.best_energy).min().unwrap();
     // bit-identical to the same seeds as individual jobs
     let mut single_cuts = Vec::new();
@@ -139,7 +143,7 @@ fn submit_batch_fans_out_and_matches_single_jobs() {
         let mut j = tiny_job(1, 30);
         j.seed = s;
         let o = job::execute(&j, BackendKind::Software);
-        single_cuts.push(o.cut);
+        single_cuts.push(o.best_objective);
         single_energy = single_energy.min(o.best_energy);
     }
     assert_eq!(batch_best, single_cuts.iter().copied().max().unwrap());
@@ -152,7 +156,7 @@ fn submit_batch_fans_out_and_matches_single_jobs() {
 #[test]
 fn submit_batch_empty_is_noop() {
     let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
-    let empty = BatchJob::new(JobSpec::Named(GraphSpec::G11), 5, vec![]);
+    let empty = BatchJob::new(JobSpec::named(GraphSpec::G11), 5, vec![]);
     assert!(pool.submit_batch(empty).is_empty());
     assert!(pool.drain().is_empty());
     pool.shutdown();
@@ -161,7 +165,7 @@ fn submit_batch_empty_is_noop() {
 #[test]
 fn route_batch_honors_override_and_policy() {
     let g = torus_2d(4, 6, true, 5);
-    let mut batch = BatchJob::new(JobSpec::Inline(g), 10, vec![1, 2, 3]);
+    let mut batch = BatchJob::new(JobSpec::inline_graph(g), 10, vec![1, 2, 3]);
     batch.params.replicas = 4;
     let r = Router::new(RoutingPolicy::PreferPjrt { max_n: 64, max_r: 8 });
     assert_eq!(r.route_batch(&batch, 24), BackendKind::Pjrt);
@@ -174,7 +178,7 @@ fn route_batch_honors_override_and_policy() {
 fn execute_batch_on_hw_backend_accumulates_energy() {
     let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
     let g = torus_2d(4, 6, true, 5);
-    let mut batch = BatchJob::new(JobSpec::Inline(g), 15, vec![1, 2, 3, 4]);
+    let mut batch = BatchJob::new(JobSpec::inline_graph(g), 15, vec![1, 2, 3, 4]);
     batch.params.replicas = 4;
     batch.backend = Some(BackendKind::HwSim(DelayKind::DualBram));
     pool.submit_batch(batch);
@@ -193,13 +197,56 @@ fn handle_request_protocol() {
     assert_eq!(handle_request(&pool, "ping").unwrap(), "pong");
     let resp = handle_request(&pool, "solve graph=G11 steps=5 seed=1 replicas=4").unwrap();
     assert!(resp.starts_with("ok id="), "{resp}");
-    assert!(resp.contains("graph=G11"));
-    assert!(resp.contains("backend=sw-ssqa"));
-    assert!(handle_request(&pool, "solve steps=5").is_err()); // graph missing
+    assert!(resp.contains("problem=maxcut"), "{resp}");
+    assert!(resp.contains("graph=G11"), "{resp}");
+    assert!(resp.contains("backend=sw-ssqa"), "{resp}");
+    assert!(resp.contains("feasible=1/1"), "{resp}");
     assert!(handle_request(&pool, "solve graph=G99").is_err());
-    assert!(handle_request(&pool, "bogus").is_err());
     let metrics = handle_request(&pool, "metrics").unwrap();
     assert!(metrics.contains("sw-ssqa"));
+}
+
+#[test]
+fn handle_request_errors_name_the_offender() {
+    let pool = WorkerPool::new(1, Router::new(RoutingPolicy::AllSoftware));
+    // unknown verb lists the supported verbs
+    let err = handle_request(&pool, "bogus").unwrap_err().to_string();
+    assert!(err.contains("bogus") && err.contains("solve, tune, metrics, ping, quit"), "{err}");
+    // unknown keys are named
+    let err = handle_request(&pool, "solve graph=G11 stepz=5").unwrap_err().to_string();
+    assert!(err.contains("stepz"), "{err}");
+    let err = handle_request(&pool, "tune graph=G11 bogus_key=1").unwrap_err().to_string();
+    assert!(err.contains("bogus_key"), "{err}");
+    // parse failures name the key and value
+    let err = handle_request(&pool, "solve graph=G11 steps=abc").unwrap_err().to_string();
+    assert!(err.contains("steps") && err.contains("abc"), "{err}");
+    // malformed and repeated tokens are named
+    let err = handle_request(&pool, "solve graph").unwrap_err().to_string();
+    assert!(err.contains("graph") && err.contains("key=value"), "{err}");
+    let err = handle_request(&pool, "solve seed=1 seed=2").unwrap_err().to_string();
+    assert!(err.contains("more than once"), "{err}");
+    // unknown problem kinds list the known ones
+    let err = handle_request(&pool, "solve problem=knapsack").unwrap_err().to_string();
+    assert!(err.contains("knapsack") && err.contains("partition"), "{err}");
+}
+
+#[test]
+fn handle_request_solves_every_problem_kind() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    for (req, kind) in [
+        ("solve problem=maxcut graph=G11 steps=5 replicas=4", "maxcut"),
+        ("solve problem=qubo n=10 steps=40 runs=2", "qubo"),
+        ("solve problem=partition n=10 steps=40 runs=2", "partition"),
+        ("solve problem=tsp cities=3 steps=60 runs=4", "tsp"),
+        ("solve problem=coloring nodes=6 colors=3 steps=60 runs=2", "coloring"),
+        ("solve problem=graphiso nodes=4 steps=60 runs=4", "graphiso"),
+    ] {
+        let resp = handle_request(&pool, req).unwrap();
+        assert!(resp.starts_with("ok id="), "{req} → {resp}");
+        assert!(resp.contains(&format!("problem={kind}")), "{req} → {resp}");
+        assert!(resp.contains("objective="), "{req} → {resp}");
+        assert!(resp.contains("feasible="), "{req} → {resp}");
+    }
 }
 
 #[test]
@@ -236,7 +283,7 @@ fn handle_request_batch_runs() {
         handle_request(&pool, "solve graph=G11 steps=5 seed=1 replicas=4 runs=6").unwrap();
     assert!(resp.starts_with("ok id="), "{resp}");
     assert!(resp.contains("runs=6"), "{resp}");
-    assert!(resp.contains("mean_cut="), "{resp}");
+    assert!(resp.contains("mean_objective="), "{resp}");
     assert!(resp.contains("backend=sw-ssqa"), "{resp}");
 }
 
@@ -274,7 +321,7 @@ fn outcome_spin_update_accounting() {
 
 fn tiny_tune_job() -> TuneJob {
     let g = torus_2d(4, 8, true, 0xC0);
-    let mut job = TuneJob::new(JobSpec::Inline(g), 11);
+    let mut job = TuneJob::new(JobSpec::inline_graph(g), 11);
     job.config = crate::tuner::TunerConfig::quick(11);
     job.config.space.steps = vec![60, 90];
     job.config.race.candidates = 4;
@@ -290,8 +337,7 @@ fn run_tune_matches_inline_tuner_bit_for_bit() {
     // the pool fans candidate evaluations across workers; the report
     // must be identical to the single-threaded inline tuner
     let job = tiny_tune_job();
-    let graph = job.spec.graph();
-    let inline_report = crate::tuner::tune(&graph, &job.config);
+    let inline_report = crate::tuner::tune(job.spec.problem().as_ref(), &job.config);
     let pool = WorkerPool::new(3, Router::new(RoutingPolicy::AllSoftware));
     let pool_report = pool.run_tune(&job);
     assert_eq!(inline_report.race.winner, pool_report.race.winner);
@@ -310,11 +356,11 @@ fn handle_request_tune_verb() {
     let resp =
         handle_request(&pool, "tune graph=G11 tuner_seed=3 quick=1 candidates=4 seeds=2")
             .unwrap();
-    assert!(resp.starts_with("ok tuner graph=G11"), "{resp}");
+    assert!(resp.starts_with("ok tuner problem=maxcut graph=G11"), "{resp}");
     assert!(resp.contains("engine="), "{resp}");
     assert!(resp.contains("config=\"R="), "{resp}");
+    assert!(resp.contains("mean_objective="), "{resp}");
     assert!(resp.contains("saved_pct="), "{resp}");
-    assert!(handle_request(&pool, "tune").is_err()); // graph missing
     assert!(handle_request(&pool, "tune graph=G11 bogus=1").is_err());
     // degenerate race sizes must come back as `err`, not a panic or a
     // never-evaluated "winner"
@@ -355,4 +401,57 @@ fn serve_over_tcp_end_to_end() {
     reader.read_line(&mut line).unwrap();
     assert!(line.starts_with("ok id="), "{line}");
     w.write_all(b"quit\n").unwrap();
+}
+
+#[test]
+fn metrics_count_infeasible_decodes() {
+    let m = Metrics::new();
+    let o = JobOutcome {
+        id: 1,
+        label: "tsp-n4".into(),
+        kind: ProblemKind::Tsp,
+        backend: BackendKind::Software,
+        best_objective: 99,
+        best_energy: -5,
+        best_sigma: vec![1; 16],
+        replica_energies: vec![-5],
+        best_feasible: None,
+        runs: 4,
+        feasible_runs: 1,
+        mean_objective: 120.0,
+        mean_energy: -3.5,
+        spin_updates: 100,
+        early_stops: 0,
+        wall: std::time::Duration::from_millis(1),
+        modeled_energy_j: None,
+        error: None,
+    };
+    m.record(BackendKind::Software, &o);
+    let snap = m.snapshot();
+    let bm = snap.get("sw-ssqa").unwrap();
+    assert_eq!(bm.infeasible, 3, "runs − feasible_runs infeasible decodes");
+    assert_eq!(bm.runs, 4);
+    assert!(m.render().contains("infeas"), "{}", m.render());
+}
+
+#[test]
+fn execute_generic_problem_reports_feasibility() {
+    // a partition problem through the generic coordinator path: every
+    // decode is feasible and the objective is the exact |imbalance|
+    use crate::api::Problem as _;
+    use crate::problems::PartitionInstance;
+    use std::sync::Arc;
+    let inst = PartitionInstance::random(10, 9, 3);
+    let spec = JobSpec::new(Arc::new(inst.clone()));
+    let mut job = Job::new(0, spec, 60, 7);
+    job.params.replicas = 4;
+    let o = job::execute(&job, BackendKind::Software);
+    assert!(o.error.is_none(), "{:?}", o.error);
+    assert_eq!(o.kind, ProblemKind::Partition);
+    assert_eq!(o.feasible_runs, 1);
+    assert_eq!(o.best_objective, inst.objective_from_energy(o.best_energy));
+    assert_eq!(o.best_objective, inst.imbalance(&o.best_sigma));
+    let (obj, ref sigma) = *o.best_feasible.as_ref().unwrap();
+    assert_eq!(obj, o.best_objective);
+    assert_eq!(sigma, &o.best_sigma);
 }

@@ -185,7 +185,7 @@ pub fn delay_ablation(ctx: &ExpContext) -> Result<String> {
         "Identical trajectories (cut {}), identical {} cycles; activity: dual-BRAM made \
          {} BRAM delay reads while the shift-register chain performed {} register shifts — \
          the fan-out mechanism behind Fig. 10's LUT/FF/power divergence.",
-        rd.cut(&g),
+        maxcut::cut_value(&g, &rd.best_sigma),
         dual.stats().cycles,
         dual.stats().sigma_delay.bram_reads,
         shift.stats().sigma_delay.register_shifts,

@@ -1,54 +1,19 @@
 //! §5.2 application case studies: graph isomorphism and TSP through the
 //! QUBO pathway ("updating only the BRAM initialization files"), plus
-//! the §6 future-work graph-coloring extension.
+//! the §6 future-work graph-coloring extension — all driven through the
+//! unified [`crate::api::SolveRequest`] surface, exactly like the CLI
+//! and the line protocol.
 
 use super::ExpContext;
-use crate::annealer::{Annealer, NoiseSchedule, QSchedule, SsqaEngine, SsqaParams};
+use crate::api::{Solution, SolveRequest};
+use crate::coordinator::{Router, RoutingPolicy, WorkerPool};
 use crate::graph::random_graph;
 use crate::problems::{
-    coloring::ColoringInstance,
-    graph_iso::GiInstance,
-    qubo::{sigma_to_x, Qubo},
-    tsp::TspInstance,
+    ColoringInstance, ColoringProblem, GiInstance, GiProblem, TspInstance, TspProblem,
 };
 use crate::Result;
 use std::fmt::Write as _;
-
-/// QUBO-tuned SSQA parameters (penalty terms need a wider dynamic range
-/// than ±1 MAX-CUT weights, so I0 scales with the max |field|).
-fn qubo_params(q: &Qubo, steps: usize, replicas: usize) -> SsqaParams {
-    let (model, _) = q.to_ising();
-    let max_field: i64 = (0..model.n())
-        .map(|i| {
-            let (_, vals) = model.j_sparse().row(i);
-            model.h[i].unsigned_abs() as i64
-                + vals.iter().map(|v| v.unsigned_abs() as i64).sum::<i64>()
-        })
-        .max()
-        .unwrap_or(1);
-    let i0 = (max_field / 4).clamp(16, 4096) as i32;
-    SsqaParams {
-        replicas,
-        i0,
-        alpha: 1,
-        noise: NoiseSchedule::Linear { start: i0 / 2, end: 1 },
-        q: QSchedule::linear(0, i0 / 2, steps),
-        j_scale: 1,
-    }
-}
-
-/// Solve a QUBO with SSQA over several seeds; returns the best (value,
-/// assignment).
-pub fn solve_qubo(q: &Qubo, steps: usize, replicas: usize, seeds: &[u32]) -> (i64, Vec<u8>) {
-    let (model, map) = q.to_ising();
-    let params = qubo_params(q, steps, replicas);
-    let results = crate::config::par_map(seeds, |&seed| {
-        let mut eng = SsqaEngine::new(params, steps);
-        let res = eng.anneal(&model, steps, seed);
-        (map.energy_to_value(res.best_energy), sigma_to_x(&res.best_sigma))
-    });
-    results.into_iter().min_by_key(|r| r.0).expect("at least one seed")
-}
+use std::sync::Arc;
 
 /// §5.2 — GI and TSP case studies.
 pub fn gi_tsp(ctx: &ExpContext) -> Result<String> {
@@ -57,25 +22,30 @@ pub fn gi_tsp(ctx: &ExpContext) -> Result<String> {
     let mut md = String::from("## §5.2 — QUBO applications (GI, TSP)\n\n");
 
     // --- graph isomorphism: success probability over trials ------------
+    let pool =
+        WorkerPool::new(crate::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
     let n_gi = if ctx.quick { 6 } else { 8 };
     let g1 = random_graph(n_gi, n_gi * 3 / 2, &[1], 0x61);
     let (inst, _) = GiInstance::permuted(g1, 0x99);
-    let q = inst.to_qubo(8);
+    let problem: Arc<GiProblem> = Arc::new(GiProblem::new(inst, 8));
+    let gi_vars = problem.instance().num_vars();
     let mut successes = 0;
-    for trial in 0..trials {
-        let seeds: Vec<u32> = (0..4).map(|s| ctx.seed + trial * 31 + s).collect();
-        let (_, x) = solve_qubo(&q, steps, 16, &seeds);
-        if let Some(map) = inst.decode(&x) {
-            if inst.is_isomorphism(&map) {
-                successes += 1;
-            }
+    for trial in 0..trials as u32 {
+        let report = SolveRequest::new(problem.clone())
+            .steps(steps)
+            .seed(ctx.seed + trial * 31)
+            .runs(4)
+            .replicas(16)
+            .run_on(&pool)?;
+        if matches!(report.solution, Solution::Mapping { mismatches: 0, .. }) {
+            successes += 1;
         }
     }
     let _ = writeln!(
         md,
-        "Graph isomorphism (n = {n_gi}, {} QUBO vars): {} / {} trials found a true isomorphism \
-         ({} steps, R = 16). Ref. [17] reports 51% success at N = 2,025 with R = 25.\n",
-        inst.num_vars(),
+        "Graph isomorphism (n = {n_gi}, {gi_vars} QUBO vars): {} / {} trials found a true \
+         isomorphism ({} steps, R = 16). Ref. [17] reports 51% success at N = 2,025 with \
+         R = 25.\n",
         successes,
         trials,
         steps,
@@ -84,34 +54,43 @@ pub fn gi_tsp(ctx: &ExpContext) -> Result<String> {
     // --- TSP: tour quality vs greedy baseline ---------------------------
     let n_tsp = if ctx.quick { 5 } else { 6 };
     let tsp = TspInstance::random(n_tsp, 0x7359);
-    let penalty = 60 * n_tsp as i32; // A > max_w · n
-    let qt = tsp.to_qubo(penalty);
-    let seeds: Vec<u32> = (0..trials as u32 * 4).map(|s| ctx.seed + 7 * s).collect();
-    let (_, x) = solve_qubo(&qt, steps * 2, 16, &seeds);
     let greedy = tsp.tour_length(&tsp.greedy_tour());
-    match tsp.decode(&x) {
-        Some(tour) => {
-            let len = tsp.tour_length(&tour);
+    let penalty = 60 * n_tsp as i32; // A > max_w · n
+    let tsp_problem = Arc::new(TspProblem::new(tsp, penalty));
+    let report = SolveRequest::new(tsp_problem.clone())
+        .steps(steps * 2)
+        .seed(ctx.seed)
+        .runs(trials * 4)
+        .replicas(16)
+        .run_on(&pool)?;
+    let tsp_len = match &report.solution {
+        Solution::Tour { length, .. } => {
             let _ = writeln!(
                 md,
-                "TSP (n = {n_tsp}, {} QUBO vars): valid tour of length {len} (greedy nearest-neighbour: {greedy}).",
-                tsp.num_vars(),
+                "TSP (n = {n_tsp}, {} QUBO vars): valid tour of length {length} in {}/{} runs \
+                 (greedy nearest-neighbour: {greedy}).",
+                tsp_problem.instance().num_vars(),
+                report.feasible_runs,
+                report.runs,
             );
+            *length
         }
-        None => {
+        _ => {
             let _ = writeln!(
                 md,
-                "TSP (n = {n_tsp}): best assignment violated one-hot constraints this run \
-                 (greedy baseline: {greedy}) — penalty/schedule tuning documented in EXPERIMENTS.md.",
+                "TSP (n = {n_tsp}): every run violated the one-hot constraints \
+                 (greedy baseline: {greedy}) — penalty/schedule tuning documented in \
+                 EXPERIMENTS.md.",
             );
+            -1
         }
-    }
+    };
     ctx.write_csv(
         "gi_tsp.csv",
         "experiment,n,vars,result",
         &[
-            format!("gi,{n_gi},{},{}/{}", inst.num_vars(), successes, trials),
-            format!("tsp,{n_tsp},{},{}", tsp.num_vars(), tsp.decode(&x).map(|t| tsp.tour_length(&t)).unwrap_or(-1)),
+            format!("gi,{n_gi},{gi_vars},{successes}/{trials}"),
+            format!("tsp,{n_tsp},{},{tsp_len}", tsp_problem.instance().num_vars()),
         ],
     )?;
     Ok(md)
@@ -124,28 +103,30 @@ pub fn coloring_demo(ctx: &ExpContext) -> Result<String> {
     let n = if ctx.quick { 8 } else { 16 };
     let g = random_graph(n, n * 2, &[1], 0xC01);
     let inst = ColoringInstance::new(g, 3);
-    let q = inst.to_qubo(12, 6);
-    let seeds: Vec<u32> = (0..12).map(|s| ctx.seed + 13 * s).collect();
-    let (_, x) = solve_qubo(&q, steps, 16, &seeds);
+    let edges = inst.graph.num_edges();
+    let problem = Arc::new(ColoringProblem::new(inst, 12, 6));
+    let report = SolveRequest::new(problem)
+        .steps(steps)
+        .seed(ctx.seed)
+        .runs(12)
+        .replicas(16)
+        .solve()?;
     let mut md = String::from("## §6 extension — graph coloring QUBO\n\n");
-    match inst.decode(&x) {
-        Some(colors) => {
-            let conflicts = inst.conflicts(&colors);
+    match &report.solution {
+        Solution::Coloring { conflicts, .. } => {
             let _ = writeln!(
                 md,
-                "k = 3 coloring of a {n}-node / {}-edge graph: {} conflicting edges \
-                 ({} steps, R = 16).",
-                inst.graph.num_edges(),
-                conflicts,
-                steps
+                "k = 3 coloring of a {n}-node / {edges}-edge graph: {conflicts} conflicting \
+                 edges ({} steps, R = 16, {}/{} feasible runs).",
+                steps, report.feasible_runs, report.runs,
             );
             ctx.write_csv(
                 "coloring.csv",
                 "n,edges,colors,conflicts",
-                &[format!("{n},{},3,{conflicts}", inst.graph.num_edges())],
+                &[format!("{n},{edges},3,{conflicts}")],
             )?;
         }
-        None => {
+        _ => {
             let _ = writeln!(md, "one-hot constraints violated this run (documented).");
             ctx.write_csv("coloring.csv", "n,edges,colors,conflicts", &[format!("{n},,3,-1")])?;
         }

@@ -6,6 +6,7 @@
 
 use super::ExpContext;
 use crate::graph::GraphSpec;
+use crate::problems::MaxCut;
 use crate::tuner::{tune, TunerConfig};
 use crate::Result;
 use std::fmt::Write as _;
@@ -15,12 +16,12 @@ use std::fmt::Write as _;
 pub fn tuner_study(ctx: &ExpContext) -> Result<String> {
     let mut md = String::from(
         "## Tuner — adaptive configuration racing\n\n\
-         | graph | winner config | engine | mean cut | spin-updates | untuned budget | saved | early stops |\n\
+         | graph | winner config | engine | mean objective | spin-updates | untuned budget | saved | early stops |\n\
          |---|---|---|---|---|---|---|---|\n",
     );
     let mut rows = Vec::new();
     for spec in [GraphSpec::G11, GraphSpec::G14] {
-        let g = spec.build();
+        let problem = MaxCut::named(spec);
         let mut cfg = if ctx.quick {
             TunerConfig::quick(ctx.seed as u64)
         } else {
@@ -30,7 +31,7 @@ pub fn tuner_study(ctx: &ExpContext) -> Result<String> {
             cfg.race.candidates = 4;
             cfg.race.seeds_rung0 = 2;
         }
-        let report = tune(&g, &cfg);
+        let report = tune(&problem, &cfg);
         let w = report.portfolio.winner_entry();
         let early: usize = report.race.trace.iter().map(|r| r.score.early_stops).sum();
         let _ = writeln!(
@@ -39,7 +40,7 @@ pub fn tuner_study(ctx: &ExpContext) -> Result<String> {
             spec.name(),
             report.winner().describe(),
             w.backend.name(),
-            w.mean_cut,
+            w.mean_objective,
             report.race.total_spin_updates,
             report.race.full_budget_updates,
             100.0 * report.race.saved_fraction(),
@@ -50,7 +51,7 @@ pub fn tuner_study(ctx: &ExpContext) -> Result<String> {
             spec.name(),
             report.winner().describe().replace(' ', ";"),
             w.backend.name(),
-            w.mean_cut,
+            w.mean_objective,
             report.race.total_spin_updates,
             report.race.full_budget_updates,
             report.race.saved_fraction(),
@@ -59,7 +60,7 @@ pub fn tuner_study(ctx: &ExpContext) -> Result<String> {
     }
     ctx.write_csv(
         "tuner.csv",
-        "graph,winner,engine,mean_cut,spin_updates,full_budget_updates,saved_fraction,early_stops",
+        "graph,winner,engine,mean_objective,spin_updates,full_budget_updates,saved_fraction,early_stops",
         &rows,
     )?;
     md.push_str(

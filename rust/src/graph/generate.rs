@@ -30,6 +30,11 @@ impl GraphSpec {
         [Self::G11, Self::G12, Self::G13, Self::G14, Self::G15]
     }
 
+    /// Look a benchmark instance up by name (case-insensitive).
+    pub fn by_name(name: &str) -> Option<GraphSpec> {
+        Self::all().into_iter().find(|s| s.name().eq_ignore_ascii_case(name))
+    }
+
     /// Instance name as used in tables/figures.
     pub fn name(&self) -> &'static str {
         match self {

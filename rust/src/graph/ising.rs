@@ -148,6 +148,21 @@ impl IsingModel {
         (0..self.n).map(|i| self.j_sparse.row(i).0.len()).max().unwrap_or(0)
     }
 
+    /// Largest per-spin field magnitude `|h_i| + Σ_j |J_ij|` — the
+    /// dynamic range a spin's Eq. (6a) adder must cover, used to size
+    /// the saturation threshold `I0` for arbitrary encodings (penalty
+    /// QUBOs need far more range than ±1 MAX-CUT weights).
+    pub fn max_abs_field(&self) -> i64 {
+        (0..self.n)
+            .map(|i| {
+                let (_, vals) = self.j_sparse.row(i);
+                self.h[i].unsigned_abs() as i64
+                    + vals.iter().map(|v| v.unsigned_abs() as i64).sum::<i64>()
+            })
+            .max()
+            .unwrap_or(1)
+    }
+
     /// Ising energy `H(σ)` of a ±1 configuration (Eq. 2).
     pub fn energy(&self, sigma: &[i32]) -> i64 {
         assert_eq!(sigma.len(), self.n);

@@ -7,6 +7,9 @@
 //! The crate is organized as the Layer-3 coordinator of a three-layer
 //! Rust + JAX + Pallas stack:
 //!
+//! * [`api`] — the unified solve surface: the [`api::Problem`] trait,
+//!   [`api::SolveRequest`]/[`api::SolveReport`] and the shared
+//!   CLI/protocol instance-spec grammar.
 //! * [`rng`] — bit-exact xorshift PRNGs shared with the Pallas kernel.
 //! * [`graph`] — Ising model substrate, G-set parser, instance generators.
 //! * [`problems`] — MAX-CUT / QUBO / TSP / graph-isomorphism / coloring
@@ -27,6 +30,7 @@
 //! * [`experiments`] — one entry point per paper table/figure.
 
 pub mod annealer;
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod dynamics;

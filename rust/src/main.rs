@@ -11,8 +11,11 @@
 //! Run `ssqa help` for flags. (Hand-rolled parsing: the offline vendor
 //! set has no clap.)
 
-use ssqa::annealer::SsqaParams;
-use ssqa::coordinator::{handle_request, BackendKind, Router, RoutingPolicy, WorkerPool};
+use ssqa::api::spec::{ensure_consumed, take, take_opt, take_problem};
+use ssqa::api::SolveRequest;
+use ssqa::coordinator::{
+    handle_request, BackendKind, JobSpec, Router, RoutingPolicy, TuneJob, WorkerPool,
+};
 use ssqa::experiments::{self, ExpContext};
 use ssqa::graph::{write_gset, GraphSpec};
 use ssqa::hw::DelayKind;
@@ -80,10 +83,7 @@ where
 }
 
 fn graph_spec(name: &str) -> Result<GraphSpec> {
-    GraphSpec::all()
-        .into_iter()
-        .find(|s| s.name().eq_ignore_ascii_case(name))
-        .ok_or_else(|| anyhow::anyhow!("unknown graph {name:?} (use G11..G15)"))
+    GraphSpec::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown graph {name:?} (use G11..G15)"))
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -92,8 +92,8 @@ fn run(args: &[String]) -> Result<()> {
         return Ok(());
     };
     match cmd.as_str() {
-        "solve" => cmd_solve(&flags(&args[1..])?),
-        "tune" => cmd_tune(&flags(&args[1..])?),
+        "solve" => cmd_solve(flags(&args[1..])?),
+        "tune" => cmd_tune(flags(&args[1..])?),
         "calibrate" => cmd_calibrate(&flags(&args[1..])?),
         "experiment" => cmd_experiment(&flags(&args[1..])?),
         "resources" => cmd_resources(&flags(&args[1..])?),
@@ -112,10 +112,20 @@ fn print_help() {
         "ssqa — p-bit SSQA fully-connected annealer (dual-BRAM architecture reproduction)\n\n\
          USAGE: ssqa <command> [--flags]\n\n\
          COMMANDS\n\
-         \x20 solve       --graph G11 [--steps 500] [--seed 1] [--replicas 20]\n\
-         \x20             [--backend sw|ssa|sa|hw|hw-shift-reg|pjrt] [--runs 1]\n\
-         \x20 tune        --problem maxcut --nodes 800 | --graph G11 [--tuner-seed 7]\n\
-         \x20             [--candidates 8] [--seeds 3] [--workers N] [--quick]\n\
+         \x20 solve       [--problem maxcut|qubo|tsp|coloring|graphiso|partition]\n\
+         \x20             instance keys per kind (DESIGN.md \u{a7}6.3):\n\
+         \x20               maxcut:    --graph G11 | --nodes 800 [--gseed S]\n\
+         \x20               qubo:      --n 32 [--pseed S]\n\
+         \x20               tsp:       --cities 6 [--pseed S] [--penalty auto]\n\
+         \x20               coloring:  --nodes 16 --colors 3 [--edges M] [--pseed S]\n\
+         \x20               graphiso:  --nodes 8 [--edges M] [--pseed S]\n\
+         \x20               partition: --n 20 [--maxv 9] [--pseed S]\n\
+         \x20             [--steps 500] [--seed 1] [--runs 1] [--replicas R]\n\
+         \x20             [--backend sw|ssa|sa|hw|hw-shift-reg|pjrt]\n\
+         \x20             [--tune [--tuner-seed 7]] [--early-stop]\n\
+         \x20 tune        [--problem <kind>] <instance keys as for solve>\n\
+         \x20             [--tuner-seed 7] [--candidates 8] [--seeds 3]\n\
+         \x20             [--workers N] [--quick]\n\
          \x20 experiment  --id table2|fig8|fig9|fig10|table3|table4|fig11|table5|table6|fig12|adp|gi|coloring|ablation|tuner|all\n\
          \x20             [--runs 100] [--steps 500] [--quick] [--out results]\n\
          \x20 resources   [--n 800] [--replicas 20] [--delay dual|shift] [--p 1] [--clock-mhz 166]\n\
@@ -125,109 +135,80 @@ fn print_help() {
     );
 }
 
-fn cmd_solve(f: &BTreeMap<String, String>) -> Result<()> {
-    let graph = graph_spec(f.get("graph").map(String::as_str).unwrap_or("G11"))?;
-    let steps: usize = get(f, "steps", 500)?;
-    let seed: u32 = get(f, "seed", 1)?;
-    let replicas: usize = get(f, "replicas", 20)?;
-    let runs: usize = get(f, "runs", 1)?;
-    let backend = BackendKind::parse(f.get("backend").map(String::as_str).unwrap_or("sw"))
-        .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
+fn cmd_solve(mut f: BTreeMap<String, String>) -> Result<()> {
+    let steps: usize = take(&mut f, "steps", 500)?;
+    let seed: u32 = take(&mut f, "seed", 1)?;
+    let runs: usize = take(&mut f, "runs", 1)?;
+    anyhow::ensure!(runs >= 1, "--runs must be at least 1");
+    let replicas: Option<usize> = take_opt(&mut f, "replicas")?;
+    let backend = match f.remove("backend") {
+        None => None,
+        Some(v) => {
+            Some(BackendKind::parse(&v).ok_or_else(|| anyhow::anyhow!("unknown backend {v:?}"))?)
+        }
+    };
+    let tune = f.remove("tune").is_some();
+    // only meaningful with --tune: leaving it in the map otherwise lets
+    // ensure_consumed reject the misplaced flag by name
+    let tuner_seed: u64 = if tune { take(&mut f, "tuner-seed", 7)? } else { 7 };
+    let early_stop = f.remove("early-stop").is_some();
+    let problem = take_problem(&mut f)?;
+    ensure_consumed(&f, "solve")?;
+
+    let mut req = SolveRequest::new(problem).steps(steps).seed(seed).runs(runs);
+    req.backend = backend;
+    req.replicas = replicas;
+    if tune {
+        req = req.auto_tune(tuner_seed);
+    }
+    if early_stop {
+        req = req.early_stop(ssqa::tuner::MonitorConfig::default());
+    }
 
     let pool =
         WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
-    if runs > 1 {
-        // one BatchJob: the model is built once and the seeds fan out
-        // across the pool's workers as Arc-sharing chunks
-        let mut batch = ssqa::coordinator::BatchJob::from_seed_range(
-            ssqa::coordinator::JobSpec::Named(graph),
-            steps,
-            seed,
-            runs,
-        );
-        batch.params = SsqaParams { replicas, ..SsqaParams::gset_default(steps) };
-        batch.backend = Some(backend);
-        pool.submit_batch(batch);
-    } else if runs == 1 {
-        let mut job =
-            ssqa::coordinator::Job::new(0, ssqa::coordinator::JobSpec::Named(graph), steps, seed);
-        job.params = SsqaParams { replicas, ..SsqaParams::gset_default(steps) };
-        job.backend = Some(backend);
-        pool.submit(job);
-    } // runs == 0: nothing to submit
-    let mut outcomes = pool.drain();
-    outcomes.sort_by_key(|o| o.id);
-    for o in &outcomes {
-        if let Some(err) = &o.error {
-            println!("{} backend={} FAILED: {err}", o.label, o.backend.name());
-            continue;
-        }
-        println!(
-            "{} backend={} cut={} mean_cut={:.1} runs={} energy={} wall={:?}{}",
-            o.label,
-            o.backend.name(),
-            o.cut,
-            o.mean_cut,
-            o.runs,
-            o.best_energy,
-            o.wall,
-            o.modeled_energy_j
-                .map(|e| format!(" fpga-energy={:.4}mJ", e * 1e3))
-                .unwrap_or_default()
-        );
-    }
+    let report = req.run_on(&pool)?;
+    print!("{}", report.render());
     println!("\n{}", pool.metrics.render());
     Ok(())
 }
 
-/// Auto-tune an instance: sample a candidate pool, race it to one
-/// surviving configuration (successive halving + convergence-aware
-/// early stopping), then race the SA/SSA/SSQA/hw engines on the
-/// winner's budget. Runs through the coordinator so candidate
-/// evaluations fan out across the worker pool; deterministic under a
-/// fixed `--tuner-seed`.
-fn cmd_tune(f: &BTreeMap<String, String>) -> Result<()> {
-    let tuner_seed: u64 = get(f, "tuner-seed", 7)?;
-    let problem = f.get("problem").map(String::as_str).unwrap_or("maxcut");
-    if problem != "maxcut" {
-        anyhow::bail!("unknown problem {problem:?} (the tuner currently races MAX-CUT)");
-    }
-    let spec = if let Some(name) = f.get("graph") {
-        ssqa::coordinator::JobSpec::Named(graph_spec(name)?)
-    } else {
-        // generated instance of the requested size: the G11-class torus
-        // when the node count tiles 40 columns, a ±1 random graph of
-        // matching density otherwise — deterministic either way
-        let nodes: usize = get(f, "nodes", 800)?;
-        anyhow::ensure!(nodes >= 8, "--nodes must be at least 8");
-        let g = if nodes % 40 == 0 {
-            ssqa::graph::torus_2d(nodes / 40, 40, true, 0x70E_5EED)
-        } else {
-            ssqa::graph::random_graph(nodes, 2 * nodes, &[-1, 1], 0x70E_5EED)
-        };
-        ssqa::coordinator::JobSpec::Inline(g)
-    };
+/// Auto-tune a problem: sample a candidate pool, race it to one
+/// surviving configuration on the problem's **domain objective**
+/// (successive halving + convergence-aware early stopping), then race
+/// the SA/SSA/SSQA/hw engines on the winner's budget. Runs through the
+/// coordinator so candidate evaluations fan out across the worker pool;
+/// deterministic under a fixed `--tuner-seed`. Works for every
+/// `--problem` kind the solve surface knows.
+fn cmd_tune(mut f: BTreeMap<String, String>) -> Result<()> {
+    let tuner_seed: u64 = take(&mut f, "tuner-seed", 7)?;
+    let quick = f.remove("quick").is_some();
+    let candidates: Option<usize> = take_opt(&mut f, "candidates")?;
+    let seeds: Option<usize> = take_opt(&mut f, "seeds")?;
+    let workers: usize = take(&mut f, "workers", ssqa::config::num_threads())?;
+    let problem = take_problem(&mut f)?;
+    ensure_consumed(&f, "tune")?;
 
-    let mut job = ssqa::coordinator::TuneJob::new(spec, tuner_seed);
-    if f.get("quick").is_some() {
-        job.config = ssqa::tuner::TunerConfig::quick(tuner_seed);
+    let mut job = TuneJob::new(JobSpec::new(problem), tuner_seed);
+    if quick {
+        // shrink in place: a wholesale TunerConfig::quick would discard
+        // the problem-aware space scaling
+        job.config.shrink_quick();
     }
-    if let Some(c) = f.get("candidates") {
-        let c: usize = c.parse().map_err(|e| anyhow::anyhow!("--candidates: {e}"))?;
+    if let Some(c) = candidates {
         anyhow::ensure!(c >= 2, "--candidates must be at least 2 (a race has to prune)");
         job.config.race.candidates = c;
     }
-    if let Some(s) = f.get("seeds") {
-        let s: usize = s.parse().map_err(|e| anyhow::anyhow!("--seeds: {e}"))?;
+    if let Some(s) = seeds {
         anyhow::ensure!(s >= 1, "--seeds must be at least 1");
         job.config.race.seeds_rung0 = s;
     }
-    let workers: usize = get(f, "workers", ssqa::config::num_threads())?;
 
     let pool = WorkerPool::new(workers, Router::new(RoutingPolicy::AllSoftware));
     println!(
-        "tuning {} (tuner seed {tuner_seed}, {} candidates × {} rung-0 seeds, {} workers)\n",
+        "tuning {} ({}, tuner seed {tuner_seed}, {} candidates \u{d7} {} rung-0 seeds, {} workers)\n",
         job.spec.label(),
+        job.spec.kind().name(),
         job.config.race.candidates,
         job.config.race.seeds_rung0,
         pool.workers(),
@@ -242,7 +223,9 @@ fn cmd_tune(f: &BTreeMap<String, String>) -> Result<()> {
 /// (I0, noise_start, noise_end, q_max) on one instance and prints mean
 /// cuts, plus an SA/SSA reference and the best cut found anywhere.
 fn cmd_calibrate(f: &BTreeMap<String, String>) -> Result<()> {
-    use ssqa::annealer::{multi_run, multi_run_batched, NoiseSchedule, QSchedule, SaEngine};
+    use ssqa::annealer::{
+        multi_run, multi_run_batched, NoiseSchedule, QSchedule, SaEngine, SsqaParams,
+    };
     let graph = graph_spec(f.get("graph").map(String::as_str).unwrap_or("G11"))?;
     let steps: usize = get(f, "steps", 500)?;
     let runs: usize = get(f, "runs", 20)?;

@@ -5,8 +5,9 @@
 //! `v·k + c`. One-hot per vertex plus a conflict term per edge/color.
 //! Zero QUBO value (after the one-hot offset) ⇔ proper k-coloring.
 
-use super::qubo::Qubo;
-use crate::graph::Graph;
+use super::qubo::{sigma_to_x, Qubo, QuboIsingMap};
+use crate::api::{Problem, ProblemKind, Solution};
+use crate::graph::{Graph, IsingModel};
 
 /// A k-coloring instance over a graph.
 #[derive(Debug, Clone)]
@@ -74,5 +75,67 @@ impl ColoringInstance {
             .iter()
             .filter(|&&(u, v, _)| colors[u as usize] == colors[v as usize])
             .count()
+    }
+}
+
+/// Graph coloring as a [`Problem`]: the instance plus its one-hot
+/// penalty `A` and conflict weight `B`.
+#[derive(Debug, Clone)]
+pub struct ColoringProblem {
+    inst: ColoringInstance,
+    penalty: i32,
+    conflict: i32,
+    qubo: Qubo,
+    map: QuboIsingMap,
+}
+
+impl ColoringProblem {
+    pub fn new(inst: ColoringInstance, penalty: i32, conflict: i32) -> Self {
+        assert!(penalty > 0 && conflict > 0, "penalty weights must be positive");
+        let qubo = inst.to_qubo(penalty, conflict);
+        let map = qubo.ising_map();
+        Self { inst, penalty, conflict, qubo, map }
+    }
+
+    pub fn instance(&self) -> &ColoringInstance {
+        &self.inst
+    }
+}
+
+impl Problem for ColoringProblem {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::Coloring
+    }
+
+    fn label(&self) -> String {
+        format!("coloring-n{}k{}", self.inst.graph.num_nodes(), self.inst.colors)
+    }
+
+    fn num_vars(&self) -> usize {
+        self.inst.num_vars()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        self.qubo.to_ising().0
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        let x = sigma_to_x(sigma);
+        match self.inst.decode(&x) {
+            Some(colors) => {
+                Solution::Coloring { conflicts: self.inst.conflicts(&colors), colors }
+            }
+            None => Solution::Infeasible { x },
+        }
+    }
+
+    /// For a one-hot assignment the QUBO value is
+    /// `−A·|V| + B·conflicts`, so the conflict count is recovered
+    /// exactly (B divides); for infeasible assignments this is the
+    /// penalized objective in conflict units (floor division).
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        let v = self.inst.graph.num_nodes() as i64;
+        (self.map.energy_to_value(energy) + self.penalty as i64 * v)
+            .div_euclid(self.conflict as i64)
     }
 }

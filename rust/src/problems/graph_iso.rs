@@ -6,8 +6,9 @@
 //! mismatch term scores mappings that break adjacency. Zero QUBO value ⇔
 //! isomorphism found.
 
-use super::qubo::Qubo;
-use crate::graph::Graph;
+use super::qubo::{sigma_to_x, Qubo, QuboIsingMap};
+use crate::api::{Problem, ProblemKind, Solution};
+use crate::graph::{Graph, IsingModel};
 
 /// A GI instance: two graphs of equal order.
 #[derive(Debug, Clone)]
@@ -46,6 +47,19 @@ impl GiInstance {
         self.g1.num_nodes()
     }
 
+    /// Dense boolean adjacency matrix of `g` (n×n, row-major) — the one
+    /// representation `to_qubo`, [`Self::mismatches`] and
+    /// [`Self::is_isomorphism`] all score against.
+    fn adjacency(&self, g: &Graph) -> Vec<bool> {
+        let n = self.n();
+        let mut a = vec![false; n * n];
+        for &(i, j, _) in g.edges() {
+            a[i as usize * n + j as usize] = true;
+            a[j as usize * n + i as usize] = true;
+        }
+        a
+    }
+
     /// Number of QUBO variables (n² mapping grid).
     pub fn num_vars(&self) -> usize {
         self.n() * self.n()
@@ -77,16 +91,8 @@ impl GiInstance {
         }
         // Mismatch: edge (u1,u2) ∈ G1 mapped to non-edge (v1,v2) of G2,
         // and vice versa.
-        let adj = |g: &Graph| {
-            let mut a = vec![false; n * n];
-            for &(i, j, _) in g.edges() {
-                a[i as usize * n + j as usize] = true;
-                a[j as usize * n + i as usize] = true;
-            }
-            a
-        };
-        let a1 = adj(&self.g1);
-        let a2 = adj(&self.g2);
+        let a1 = self.adjacency(&self.g1);
+        let a2 = self.adjacency(&self.g2);
         for u1 in 0..n {
             for u2 in 0..n {
                 if u1 == u2 {
@@ -135,14 +141,29 @@ impl GiInstance {
         Some(map)
     }
 
+    /// Unordered vertex pairs whose adjacency disagrees under `map`:
+    /// `#{u1 < u2 : adj₁(u1,u2) ≠ adj₂(map(u1),map(u2))}` — exactly the
+    /// mismatch sum the QUBO charges a bijection, so 0 ⇔ isomorphism.
+    pub fn mismatches(&self, map: &[usize]) -> usize {
+        let n = self.n();
+        assert_eq!(map.len(), n);
+        let a1 = self.adjacency(&self.g1);
+        let a2 = self.adjacency(&self.g2);
+        let mut m = 0;
+        for u1 in 0..n {
+            for u2 in (u1 + 1)..n {
+                if a1[u1 * n + u2] != a2[map[u1] * n + map[u2]] {
+                    m += 1;
+                }
+            }
+        }
+        m
+    }
+
     /// Check whether a mapping is a true isomorphism.
     pub fn is_isomorphism(&self, map: &[usize]) -> bool {
         let n = self.n();
-        let mut a2 = vec![false; n * n];
-        for &(i, j, _) in self.g2.edges() {
-            a2[i as usize * n + j as usize] = true;
-            a2[j as usize * n + i as usize] = true;
-        }
+        let a2 = self.adjacency(&self.g2);
         let m1 = self.g1.num_edges();
         let m2 = self.g2.num_edges();
         if m1 != m2 {
@@ -152,5 +173,61 @@ impl GiInstance {
             .edges()
             .iter()
             .all(|&(i, j, _)| a2[map[i as usize] * n + map[j as usize]])
+    }
+}
+
+/// Graph isomorphism as a [`Problem`]: the instance plus its bijection
+/// penalty weight (the adjacency-mismatch terms have unit weight).
+#[derive(Debug, Clone)]
+pub struct GiProblem {
+    inst: GiInstance,
+    penalty: i32,
+    qubo: Qubo,
+    map: QuboIsingMap,
+}
+
+impl GiProblem {
+    pub fn new(inst: GiInstance, penalty: i32) -> Self {
+        assert!(penalty > 0, "penalty must be positive");
+        let qubo = inst.to_qubo(penalty);
+        let map = qubo.ising_map();
+        Self { inst, penalty, qubo, map }
+    }
+
+    pub fn instance(&self) -> &GiInstance {
+        &self.inst
+    }
+}
+
+impl Problem for GiProblem {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::GraphIso
+    }
+
+    fn label(&self) -> String {
+        format!("graphiso-n{}", self.inst.n())
+    }
+
+    fn num_vars(&self) -> usize {
+        self.inst.num_vars()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        self.qubo.to_ising().0
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        let x = sigma_to_x(sigma);
+        match self.inst.decode(&x) {
+            Some(map) => Solution::Mapping { mismatches: self.inst.mismatches(&map), map },
+            None => Solution::Infeasible { x },
+        }
+    }
+
+    /// For a bijection the QUBO value is `mismatches − 2·A·n` (the 2n
+    /// satisfied one-hot constraints each contribute their dropped
+    /// constant `−A`); 0 recovered mismatches ⇔ a true isomorphism.
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        self.map.energy_to_value(energy) + 2 * self.penalty as i64 * self.inst.n() as i64
     }
 }

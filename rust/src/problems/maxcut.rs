@@ -5,7 +5,9 @@
 //! an antiferromagnetic coupling pushes the endpoints of a positive edge
 //! to opposite partitions.
 
-use crate::graph::{Graph, IsingModel};
+use crate::api::{Problem, ProblemKind, Solution};
+use crate::graph::{Graph, GraphSpec, IsingModel};
+use crate::problems::qubo::Qubo;
 
 /// Build the Ising model whose ground state is the maximum cut.
 ///
@@ -39,6 +41,97 @@ pub fn cut_value(g: &Graph, sigma: &[i32]) -> i64 {
 pub fn cut_from_energy(g: &Graph, energy_scaled: i64, scale: i32) -> i64 {
     let w_total: i64 = g.edges().iter().map(|&(_, _, w)| w as i64).sum();
     (w_total - energy_scaled / scale as i64) / 2
+}
+
+/// MAX-CUT as a minimization QUBO: `x_i ⊕ x_j = x_i + x_j − 2·x_i x_j`,
+/// so `−cut(x) = Σ_{(i,j)∈E} w_ij·(2·x_i x_j − x_i − x_j)` — the fifth
+/// QUBO-derived encoder, letting MAX-CUT flow through the same
+/// [`Qubo`] pathway as the §5.2 applications. `value(x) == −cut`.
+pub fn qubo_from_graph(g: &Graph) -> Qubo {
+    let mut q = Qubo::new(g.num_nodes());
+    for &(i, j, w) in g.edges() {
+        q.add_linear(i as usize, -w);
+        q.add_linear(j as usize, -w);
+        q.add_quadratic(i as usize, j as usize, 2 * w);
+    }
+    q
+}
+
+/// MAX-CUT as a [`Problem`]: a graph plus the fixed-point coupling
+/// scale its Ising encoding uses.
+#[derive(Debug, Clone)]
+pub struct MaxCut {
+    graph: Graph,
+    /// Report label (`G11` for named benchmark instances,
+    /// `inline-n<N>` otherwise — the coordinator's historical labels).
+    label: String,
+    j_scale: i32,
+    /// Σ w over all edges, cached so `objective_from_energy` is O(1)
+    /// (it runs once per annealing seed on the coordinator's hot path).
+    w_total: i64,
+}
+
+impl MaxCut {
+    /// The calibrated G-set coupling scale (`SsqaParams::gset_default`).
+    pub const GSET_J_SCALE: i32 = 8;
+
+    /// Wrap an inline graph.
+    pub fn new(graph: Graph, j_scale: i32) -> Self {
+        assert!(j_scale > 0, "j_scale must be positive");
+        let label = format!("inline-n{}", graph.num_nodes());
+        Self::labeled(graph, label, j_scale)
+    }
+
+    /// Wrap a named Table-2 benchmark instance.
+    pub fn named(spec: GraphSpec) -> Self {
+        Self::labeled(spec.build(), spec.name().to_string(), Self::GSET_J_SCALE)
+    }
+
+    /// Wrap with an explicit report label.
+    pub fn labeled(graph: Graph, label: String, j_scale: i32) -> Self {
+        let w_total = graph.edges().iter().map(|&(_, _, w)| w as i64).sum();
+        Self { graph, label, j_scale, w_total }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn j_scale(&self) -> i32 {
+        self.j_scale
+    }
+}
+
+impl Problem for MaxCut {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::MaxCut
+    }
+
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        ising_from_graph(&self.graph, self.j_scale)
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        Solution::MaxCut { cut: cut_value(&self.graph, sigma), partition: sigma.to_vec() }
+    }
+
+    /// `cut = (W − H/scale) / 2` with the cached `W` (see
+    /// [`cut_from_energy`]).
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        (self.w_total - energy / self.j_scale as i64) / 2
+    }
+
+    fn feasible(&self, _sigma: &[i32]) -> bool {
+        true // every bipartition is a valid cut
+    }
 }
 
 /// Exhaustive optimum for tiny instances (test oracle only, O(2^n)).

@@ -5,6 +5,12 @@
 //! (Lucas [18]) by re-initializing the weight BRAM — we mirror that with
 //! [`qubo::Qubo`] plus TSP / graph-isomorphism / graph-coloring builders
 //! (coloring is the paper's §6 future-work item).
+//!
+//! Every workload also implements the [`crate::api::Problem`] trait —
+//! the crate's single typed solve surface (encode → anneal → decode):
+//! [`MaxCut`], [`QuboProblem`], [`TspProblem`], [`ColoringProblem`],
+//! [`GiProblem`] and [`PartitionInstance`] all flow through
+//! `api::SolveRequest`, the coordinator and the tuner unchanged.
 
 pub mod coloring;
 pub mod graph_iso;
@@ -12,6 +18,13 @@ pub mod maxcut;
 pub mod partition;
 pub mod qubo;
 pub mod tsp;
+
+pub use coloring::{ColoringInstance, ColoringProblem};
+pub use graph_iso::{GiInstance, GiProblem};
+pub use maxcut::MaxCut;
+pub use partition::PartitionInstance;
+pub use qubo::{Qubo, QuboProblem};
+pub use tsp::{TspInstance, TspProblem};
 
 #[cfg(test)]
 mod tests;

@@ -4,6 +4,7 @@
 //! σ_i)²` expands to `J_ij = −2 n_i n_j` (Eq. 2 sign convention),
 //! ground-state energy `−Σ n_i²` iff a perfect partition exists.
 
+use crate::api::{Problem, ProblemKind, Solution};
 use crate::graph::IsingModel;
 
 /// A partitioning instance.
@@ -57,6 +58,11 @@ impl PartitionInstance {
         ((energy + sq) as f64).sqrt().round() as i64
     }
 
+    /// Number of spins (one per number).
+    pub fn num_vars(&self) -> usize {
+        self.numbers.len()
+    }
+
     /// Exhaustive optimum for tiny instances (test oracle).
     pub fn brute_force(&self) -> i64 {
         let n = self.numbers.len();
@@ -69,6 +75,40 @@ impl PartitionInstance {
             best = best.min(self.imbalance(&sigma));
         }
         best
+    }
+}
+
+/// Number partitioning implements [`Problem`] directly — the direct
+/// Ising form carries no penalty weights, so the instance is the
+/// problem.
+impl Problem for PartitionInstance {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::Partition
+    }
+
+    fn label(&self) -> String {
+        format!("partition-n{}", self.numbers.len())
+    }
+
+    fn num_vars(&self) -> usize {
+        self.numbers.len()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        // the inherent method (same name, same encoding)
+        PartitionInstance::to_ising(self)
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        Solution::Partition { imbalance: self.imbalance(sigma), sides: sigma.to_vec() }
+    }
+
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        self.imbalance_from_energy(energy)
+    }
+
+    fn feasible(&self, _sigma: &[i32]) -> bool {
+        true // every split is a valid partition
     }
 }
 

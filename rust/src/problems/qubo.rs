@@ -3,6 +3,7 @@
 //! formulation can be executed by updating only the BRAM initialization
 //! files" pathway of paper §5.2.
 
+use crate::api::{Problem, ProblemKind, Solution};
 use crate::graph::IsingModel;
 
 /// `minimize Σ_i lin_i x_i + Σ_{i<j} Q_ij x_i x_j`, `x ∈ {0,1}ⁿ`.
@@ -36,6 +37,39 @@ impl Qubo {
         assert_ne!(i, j, "use add_linear for diagonal terms (x_i² = x_i)");
         self.quad[i * self.n + j] += c;
         self.quad[j * self.n + i] += c;
+    }
+
+    /// Deterministic random QUBO: linear and pair coefficients drawn
+    /// uniformly from [−8, 8] (pairs present with probability ½) — the
+    /// generated-instance family behind `--problem qubo`.
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut rng = crate::rng::Xorshift64Star::new(seed ^ 0x9B0_5EED);
+        let mut q = Self::new(n);
+        for i in 0..n {
+            q.add_linear(i, rng.next_below(17) as i32 - 8);
+            for j in (i + 1)..n {
+                if rng.next_f64() < 0.5 {
+                    let c = rng.next_below(17) as i32 - 8;
+                    if c != 0 {
+                        q.add_quadratic(i, j, c);
+                    }
+                }
+            }
+        }
+        q
+    }
+
+    /// The energy↔value back-conversion map without building the model
+    /// (the constant `C` of [`Self::to_ising`]'s expansion).
+    pub fn ising_map(&self) -> QuboIsingMap {
+        let mut c: i64 = 0;
+        for i in 0..self.n {
+            c += 2 * self.lin[i] as i64;
+            for j in (i + 1)..self.n {
+                c += self.quad[i * self.n + j] as i64;
+            }
+        }
+        QuboIsingMap { c }
     }
 
     /// Objective value of a 0/1 assignment.
@@ -111,4 +145,55 @@ impl QuboIsingMap {
 /// Decode σ ∈ {−1,+1} to x ∈ {0,1}.
 pub fn sigma_to_x(sigma: &[i32]) -> Vec<u8> {
     sigma.iter().map(|&s| if s > 0 { 1 } else { 0 }).collect()
+}
+
+/// A raw QUBO as a [`Problem`]: every assignment is feasible and the
+/// domain objective is the QUBO value itself.
+#[derive(Debug, Clone)]
+pub struct QuboProblem {
+    qubo: Qubo,
+    label: String,
+    map: QuboIsingMap,
+}
+
+impl QuboProblem {
+    pub fn new(qubo: Qubo, label: impl Into<String>) -> Self {
+        let map = qubo.ising_map();
+        Self { qubo, label: label.into(), map }
+    }
+
+    pub fn qubo(&self) -> &Qubo {
+        &self.qubo
+    }
+}
+
+impl Problem for QuboProblem {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::Qubo
+    }
+
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.qubo.n()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        self.qubo.to_ising().0
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        let x = sigma_to_x(sigma);
+        Solution::Qubo { value: self.qubo.value(&x), x }
+    }
+
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        self.map.energy_to_value(energy)
+    }
+
+    fn feasible(&self, _sigma: &[i32]) -> bool {
+        true // unconstrained by definition
+    }
 }

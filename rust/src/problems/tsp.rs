@@ -5,7 +5,9 @@
 //! one-hot row/column constraints. `A > max_w · n` guarantees feasible
 //! assignments dominate.
 
-use super::qubo::Qubo;
+use super::qubo::{sigma_to_x, Qubo, QuboIsingMap};
+use crate::api::{Problem, ProblemKind, Solution};
+use crate::graph::IsingModel;
 
 /// Symmetric integer distance matrix.
 #[derive(Debug, Clone)]
@@ -129,6 +131,11 @@ impl TspInstance {
         Some(tour)
     }
 
+    /// Largest pairwise distance (sizes the one-hot penalty `A`).
+    pub fn max_dist(&self) -> i32 {
+        self.dist.iter().copied().max().unwrap_or(0)
+    }
+
     /// Greedy nearest-neighbour tour — classical baseline for quality
     /// comparisons in the examples.
     pub fn greedy_tour(&self) -> Vec<usize> {
@@ -146,5 +153,74 @@ impl TspInstance {
             tour.push(next);
         }
         tour
+    }
+}
+
+/// TSP as a [`Problem`]: the instance plus its one-hot penalty weight,
+/// with the QUBO and its energy map built once at construction.
+#[derive(Debug, Clone)]
+pub struct TspProblem {
+    inst: TspInstance,
+    penalty: i32,
+    qubo: Qubo,
+    map: QuboIsingMap,
+}
+
+impl TspProblem {
+    /// Build with an explicit penalty; `penalty <= 0` picks the safe
+    /// default [`Self::auto_penalty`] (`A > max_w · n` — feasible
+    /// assignments dominate, see [`TspInstance::to_qubo`]).
+    pub fn new(inst: TspInstance, penalty: i32) -> Self {
+        let penalty = if penalty > 0 { penalty } else { Self::auto_penalty(&inst) };
+        let qubo = inst.to_qubo(penalty);
+        let map = qubo.ising_map();
+        Self { inst, penalty, qubo, map }
+    }
+
+    /// The dominant-penalty default: `max_dist · n + 1`.
+    pub fn auto_penalty(inst: &TspInstance) -> i32 {
+        inst.max_dist() * inst.n() as i32 + 1
+    }
+
+    pub fn instance(&self) -> &TspInstance {
+        &self.inst
+    }
+
+    pub fn penalty(&self) -> i32 {
+        self.penalty
+    }
+}
+
+impl Problem for TspProblem {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::Tsp
+    }
+
+    fn label(&self) -> String {
+        format!("tsp-n{}", self.inst.n())
+    }
+
+    fn num_vars(&self) -> usize {
+        self.inst.num_vars()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        self.qubo.to_ising().0
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        let x = sigma_to_x(sigma);
+        match self.inst.decode(&x) {
+            Some(order) => Solution::Tour { length: self.inst.tour_length(&order), order },
+            None => Solution::Infeasible { x },
+        }
+    }
+
+    /// For a feasible tour the QUBO value is `length − 2·A·n` (each of
+    /// the 2n satisfied one-hot constraints contributes its dropped
+    /// constant `−A`), so the tour length is recovered exactly; for
+    /// infeasible assignments this is the penalized objective.
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        self.map.energy_to_value(energy) + 2 * self.penalty as i64 * self.inst.n() as i64
     }
 }

@@ -35,8 +35,8 @@ pub use race::{
 };
 pub use space::{Candidate, ParamSpace};
 
-use crate::graph::{Graph, IsingModel};
-use crate::problems::maxcut;
+use crate::api::Problem;
+use crate::graph::IsingModel;
 use std::fmt::Write as _;
 
 /// Full tuner configuration.
@@ -60,6 +60,23 @@ impl TunerConfig {
         }
     }
 
+    /// Problem-aware defaults: the calibrated G-set space for MAX-CUT,
+    /// a field-scaled space (bracketing `i0 ≈ max_field/4`) for the
+    /// penalty/QUBO encodings — racing a MAX-CUT-scaled space on a
+    /// penalty QUBO saturates every candidate uniformly and crowns a
+    /// meaningless winner.
+    pub fn for_problem(
+        kind: crate::api::ProblemKind,
+        model: &crate::graph::IsingModel,
+        tuner_seed: u64,
+    ) -> Self {
+        if kind == crate::api::ProblemKind::MaxCut {
+            return Self::gset_default(tuner_seed);
+        }
+        let i0 = (model.max_abs_field() / 4).clamp(16, 4096) as i32;
+        Self { space: ParamSpace::field_scaled(i0), ..Self::gset_default(tuner_seed) }
+    }
+
     /// Shrunken configuration for smoke tests and `--quick` runs.
     pub fn quick(tuner_seed: u64) -> Self {
         Self {
@@ -68,6 +85,17 @@ impl TunerConfig {
             portfolio: PortfolioConfig { seeds: 2, ..PortfolioConfig::default() },
             tuner_seed,
         }
+    }
+
+    /// Shrink an existing configuration to smoke-test size **without**
+    /// discarding its parameter-space scaling (the `--quick`/`quick=1`
+    /// path: replacing a field-scaled space with [`Self::quick`]'s
+    /// MAX-CUT-scaled one would mis-tune penalty encodings).
+    pub fn shrink_quick(&mut self) {
+        self.race = RaceConfig::quick();
+        self.portfolio.seeds = 2;
+        self.space.steps = vec![120, 200];
+        self.space.replicas = vec![4, 8];
     }
 }
 
@@ -89,7 +117,7 @@ impl TuneReport {
     pub fn render(&self) -> String {
         let mut out = String::from(
             "== racing table ==\n\
-             rung cand  config                                   seeds  mean-E     best-E   mean-cut  spin-upd  early  fate\n",
+             rung cand  config                                   seeds  mean-E     best-E   mean-obj  spin-upd  early  fate\n",
         );
         for row in &self.race.trace {
             let _ = writeln!(
@@ -101,7 +129,7 @@ impl TuneReport {
                 row.seeds,
                 row.score.mean_energy,
                 row.score.best_energy,
-                row.score.mean_cut,
+                row.score.mean_objective,
                 row.score.spin_updates,
                 row.score.early_stops,
                 if row.survived { "kept" } else { "cut" },
@@ -118,7 +146,7 @@ impl TuneReport {
 
         out.push_str(
             "\n== engine portfolio ==\n\
-             backend         steps  runs   mean-E     best-E   mean-cut   best  spin-upd     fpga-lat    fpga-E\n",
+             backend         steps  runs   mean-E     best-E   mean-obj   best  spin-upd     fpga-lat    fpga-E\n",
         );
         for e in &self.portfolio.entries {
             let (lat, enj) = e
@@ -135,8 +163,8 @@ impl TuneReport {
                 e.runs,
                 e.mean_energy,
                 e.best_energy,
-                e.mean_cut,
-                e.best_cut,
+                e.mean_objective,
+                e.best_objective,
                 e.spin_updates,
                 lat,
                 enj,
@@ -145,36 +173,42 @@ impl TuneReport {
         let w = self.portfolio.winner_entry();
         let _ = writeln!(
             out,
-            "\nwinner: {} with {} (mean cut {:.1}, mean energy {:.1})",
+            "\nwinner: {} with {} (mean objective {:.1}, mean energy {:.1})",
             w.backend.name(),
             self.race.winner.describe(),
-            w.mean_cut,
+            w.mean_objective,
             w.mean_energy,
         );
         out
     }
 }
 
-/// Tune against a prebuilt (graph, model) pair through any evaluation
+/// Tune against a prebuilt (problem, model) pair through any evaluation
 /// backend — the coordinator path passes its `Arc`-shared model and a
-/// pool-fanning backend here.
+/// pool-fanning backend here. Candidates race on the problem's domain
+/// objective (oriented by its sense), so the tuner works for every
+/// workload the unified API serves — including penalty-encoded ones.
+///
+/// `model` must be the problem's own encoding (`problem.to_ising()`):
+/// the racing scores map energies back through the problem's exact
+/// energy↔objective relation.
 pub fn tune_shared<E: EvalBackend>(
-    graph: &Graph,
+    problem: &dyn Problem,
     model: &IsingModel,
     cfg: &TunerConfig,
     eval: &E,
 ) -> TuneReport {
     let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
-    let race = race::race(graph, model, cands, &cfg.race, eval);
-    let portfolio = portfolio::run_portfolio(graph, model, &race.winner, &cfg.portfolio);
+    let race = race::race(problem, model, cands, &cfg.race, eval);
+    let portfolio = portfolio::run_portfolio(problem, model, &race.winner, &cfg.portfolio);
     TuneReport { race, portfolio }
 }
 
-/// Tune an instance end-to-end inline: build the model once, race with
+/// Tune a problem end-to-end inline: build the model once, race with
 /// the scoped-thread evaluation backend, then run the portfolio.
-pub fn tune(graph: &Graph, cfg: &TunerConfig) -> TuneReport {
-    let model = maxcut::ising_from_graph(graph, cfg.space.j_scale);
-    tune_shared(graph, &model, cfg, &InlineEval)
+pub fn tune(problem: &dyn Problem, cfg: &TunerConfig) -> TuneReport {
+    let model = problem.to_ising();
+    tune_shared(problem, &model, cfg, &InlineEval)
 }
 
 #[cfg(test)]

@@ -16,11 +16,11 @@ use super::space::Candidate;
 use crate::annealer::{
     run_seed, Annealer, RunResult, SaEngine, SsaEngine, SsaParams, SsqaEngine,
 };
+use crate::api::Problem;
 use crate::coordinator::BackendKind;
 use crate::energy::{energy_j, fpga_latency_s};
-use crate::graph::{Graph, IsingModel};
+use crate::graph::IsingModel;
 use crate::hw::{DelayKind, HwConfig, HwEngine};
-use crate::problems::maxcut;
 use crate::resources::ResourceModel;
 
 /// Portfolio knobs.
@@ -61,8 +61,11 @@ pub struct PortfolioEntry {
     pub runs: usize,
     pub mean_energy: f64,
     pub best_energy: i64,
-    pub mean_cut: f64,
-    pub best_cut: i64,
+    /// Mean domain objective over the entry's runs (penalized for
+    /// infeasible decodes).
+    pub mean_objective: f64,
+    /// Best domain objective (== the objective of the lowest energy).
+    pub best_objective: i64,
     /// Spin updates executed across the entry's runs.
     pub spin_updates: u64,
     /// Modeled FPGA deployment cost (replica engines only — the
@@ -71,7 +74,14 @@ pub struct PortfolioEntry {
     pub fpga: Option<FpgaEstimate>,
 }
 
-/// The portfolio verdict.
+/// The portfolio verdict. Winner selection uses mean best energy — the
+/// cross-engine comparable integer aggregate (one shared model, no f64
+/// re-mapping). Per-run the energy↔objective map is sense-monotone, so
+/// this agrees with a mean-objective ranking wherever the map is
+/// linear (MAX-CUT, QUBO, TSP, GI); for the nonlinear maps (partition,
+/// coloring) the mean aggregates can order differently — the racing
+/// rungs, not the portfolio, are where domain-objective ranking is the
+/// contract.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PortfolioReport {
     /// One entry per engine, in racing order
@@ -90,7 +100,7 @@ impl PortfolioReport {
 
 fn entry_from_results(
     backend: BackendKind,
-    graph: &Graph,
+    problem: &dyn Problem,
     steps: usize,
     updates_per_run: u64,
     results: &[RunResult],
@@ -98,15 +108,12 @@ fn entry_from_results(
 ) -> PortfolioEntry {
     let runs = results.len();
     let mut sum_energy = 0i64;
-    let mut sum_cut = 0i64;
+    let mut sum_objective = 0i64;
     let mut best_energy = i64::MAX;
-    let mut best_cut = i64::MIN;
     for res in results {
         sum_energy += res.best_energy;
         best_energy = best_energy.min(res.best_energy);
-        let cut = maxcut::cut_value(graph, &res.best_sigma);
-        sum_cut += cut;
-        best_cut = best_cut.max(cut);
+        sum_objective += problem.objective_from_energy(res.best_energy);
     }
     PortfolioEntry {
         backend,
@@ -114,8 +121,8 @@ fn entry_from_results(
         runs,
         mean_energy: if runs == 0 { 0.0 } else { sum_energy as f64 / runs as f64 },
         best_energy: if runs == 0 { 0 } else { best_energy },
-        mean_cut: if runs == 0 { 0.0 } else { sum_cut as f64 / runs as f64 },
-        best_cut: if runs == 0 { 0 } else { best_cut },
+        mean_objective: if runs == 0 { 0.0 } else { sum_objective as f64 / runs as f64 },
+        best_objective: if runs == 0 { 0 } else { problem.objective_from_energy(best_energy) },
         spin_updates: updates_per_run * runs as u64,
         fpga,
     }
@@ -141,7 +148,7 @@ pub fn fpga_estimate(
 /// *algorithm* wins at a fixed budget, and full-budget runs keep the
 /// software SSQA entry and the hardware model bit-comparable.
 pub fn run_portfolio(
-    graph: &Graph,
+    problem: &dyn Problem,
     model: &IsingModel,
     winner: &Candidate,
     cfg: &PortfolioConfig,
@@ -162,7 +169,7 @@ pub fn run_portfolio(
     let ssqa_results = eng.run_batch(model, winner.steps, &seeds);
     entries.push(entry_from_results(
         BackendKind::Software,
-        graph,
+        problem,
         winner.steps,
         ssqa_updates,
         &ssqa_results,
@@ -184,7 +191,7 @@ pub fn run_portfolio(
         .collect();
     entries.push(entry_from_results(
         BackendKind::HwSim(winner.delay),
-        graph,
+        problem,
         winner.steps,
         ssqa_updates,
         &hw_results,
@@ -197,7 +204,7 @@ pub fn run_portfolio(
     });
     entries.push(entry_from_results(
         BackendKind::SoftwareSsa,
-        graph,
+        problem,
         sweep_steps,
         (n * sweep_steps) as u64,
         &ssa_results,
@@ -210,7 +217,7 @@ pub fn run_portfolio(
     });
     entries.push(entry_from_results(
         BackendKind::SoftwareSa,
-        graph,
+        problem,
         sweep_steps,
         (n * sweep_steps) as u64,
         &sa_results,

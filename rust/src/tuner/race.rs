@@ -4,10 +4,15 @@
 //! Each rung evaluates every surviving candidate on a shared batched
 //! seed set (through `SsqaEngine::run_batch_observed`, with the
 //! convergence monitor stopping plateaued runs early), ranks them by
-//! mean best-replica energy, prunes the bottom half and doubles the
-//! seed budget for the survivors. Everything is deterministic given the
-//! tuner seed: sampling, seed derivation (`annealer::run_seed`),
-//! ranking tie-breaks and the recorded trace.
+//! the problem's mean **domain objective** (oriented by its
+//! [`crate::api::Sense`] — cuts maximize, tour lengths minimize),
+//! prunes the bottom half and doubles the seed budget for the
+//! survivors. Racing in domain units rather than raw Ising energy is
+//! what makes penalty-encoded problems tunable: candidates remain
+//! comparable even when penalty weights shift the energy scale.
+//! Everything is deterministic given the tuner seed: sampling, seed
+//! derivation (`annealer::run_seed`), ranking tie-breaks and the
+//! recorded trace.
 //!
 //! Evaluation is abstracted behind [`EvalBackend`] so the same racing
 //! loop runs inline (scoped-thread [`par_map`] over candidates) or
@@ -16,9 +21,9 @@
 use super::converge::{ConvergenceMonitor, MonitorConfig};
 use super::space::Candidate;
 use crate::annealer::{run_seed, SsqaEngine};
+use crate::api::Problem;
 use crate::config::par_map;
-use crate::graph::{Graph, IsingModel};
-use crate::problems::maxcut;
+use crate::graph::IsingModel;
 
 /// Racing knobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,16 +65,18 @@ impl RaceConfig {
 /// Aggregate score of one candidate on one rung's seed set.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EvalScore {
-    /// Mean best-replica energy over the seeds (the ranking key —
-    /// energy generalizes beyond MAX-CUT, and for MAX-CUT it orders
-    /// identically to mean cut).
+    /// Mean best-replica energy over the seeds (cross-problem
+    /// comparable diagnostic; the ranking key is `mean_objective`).
     pub mean_energy: f64,
     /// Lowest energy over the seeds.
     pub best_energy: i64,
-    /// Mean cut over the seeds (reporting only).
-    pub mean_cut: f64,
-    /// Best cut over the seeds.
-    pub best_cut: i64,
+    /// Mean domain objective over the seeds — the ranking key, oriented
+    /// by the problem's sense. For penalty-encoded problems this is the
+    /// penalized objective, so infeasible-prone candidates rank last.
+    pub mean_objective: f64,
+    /// Best domain objective over the seeds (== the objective of the
+    /// lowest energy — the mapping is sense-monotone).
+    pub best_objective: i64,
     /// Spin updates actually executed (`Σ_runs n·R·steps_run` — early
     /// stops make this less than the full budget).
     pub spin_updates: u64,
@@ -77,6 +84,8 @@ pub struct EvalScore {
     pub early_stops: usize,
     /// Seeds evaluated.
     pub runs: usize,
+    /// Seeds whose best configuration decoded feasible.
+    pub feasible_runs: usize,
 }
 
 /// One row of the racing trace: candidate × rung × score × verdict.
@@ -123,7 +132,7 @@ impl RaceOutcome {
 
 /// Shared inputs of one rung's evaluations.
 pub struct EvalContext<'a> {
-    pub graph: &'a Graph,
+    pub problem: &'a dyn Problem,
     pub model: &'a IsingModel,
     /// The rung's seed list (shared by every candidate).
     pub seeds: &'a [u32],
@@ -139,9 +148,12 @@ pub trait EvalBackend {
 }
 
 /// Evaluate one candidate on a seed set: one engine, one batched state,
-/// one convergence monitor across all the seeds.
+/// one convergence monitor across all the seeds. Objectives are
+/// recovered from the per-seed best energies through the problem's
+/// exact energy map; feasibility uses the cheap
+/// [`Problem::feasible`] probe.
 pub fn evaluate_candidate(
-    graph: &Graph,
+    problem: &dyn Problem,
     model: &IsingModel,
     cand: &Candidate,
     seeds: &[u32],
@@ -154,30 +166,30 @@ pub fn evaluate_candidate(
     let mut score = EvalScore {
         mean_energy: 0.0,
         best_energy: i64::MAX,
-        mean_cut: 0.0,
-        best_cut: i64::MIN,
+        mean_objective: 0.0,
+        best_objective: 0,
         spin_updates: 0,
         early_stops: 0,
         runs: 0,
+        feasible_runs: 0,
     };
     let mut sum_energy = 0i64;
-    let mut sum_cut = 0i64;
+    let mut sum_objective = 0i64;
     for res in eng.run_batch_observed(model, cand.steps, seeds, &mut mon) {
         sum_energy += res.best_energy;
         score.best_energy = score.best_energy.min(res.best_energy);
-        let cut = maxcut::cut_value(graph, &res.best_sigma);
-        sum_cut += cut;
-        score.best_cut = score.best_cut.max(cut);
+        sum_objective += problem.objective_from_energy(res.best_energy);
+        score.feasible_runs += problem.feasible(&res.best_sigma) as usize;
         score.spin_updates += (n * r * res.steps) as u64;
         score.early_stops += (res.steps < cand.steps) as usize;
         score.runs += 1;
     }
     if score.runs > 0 {
         score.mean_energy = sum_energy as f64 / score.runs as f64;
-        score.mean_cut = sum_cut as f64 / score.runs as f64;
+        score.mean_objective = sum_objective as f64 / score.runs as f64;
+        score.best_objective = problem.objective_from_energy(score.best_energy);
     } else {
         score.best_energy = 0;
-        score.best_cut = 0;
     }
     score
 }
@@ -190,7 +202,7 @@ pub struct InlineEval;
 
 impl EvalBackend for InlineEval {
     fn evaluate(&self, ctx: &EvalContext<'_>, cands: &[Candidate]) -> Vec<EvalScore> {
-        par_map(cands, |c| evaluate_candidate(ctx.graph, ctx.model, c, ctx.seeds, ctx.monitor))
+        par_map(cands, |c| evaluate_candidate(ctx.problem, ctx.model, c, ctx.seeds, ctx.monitor))
     }
 }
 
@@ -206,13 +218,14 @@ fn rung_seeds(seed0: u32, rung: usize, count: usize) -> Vec<u32> {
 /// (use [`super::ParamSpace::sample_n`]); the pool is halved every rung
 /// until one candidate survives.
 pub fn race<E: EvalBackend>(
-    graph: &Graph,
+    problem: &dyn Problem,
     model: &IsingModel,
     cands: Vec<Candidate>,
     cfg: &RaceConfig,
     eval: &E,
 ) -> RaceOutcome {
     assert!(!cands.is_empty(), "race needs at least one candidate");
+    let sense = problem.sense();
     assert!(cfg.eta >= 2, "eta must be at least 2");
     assert!(cfg.seeds_rung0 >= 1, "each rung needs at least one evaluation seed");
     let n = model.n();
@@ -247,17 +260,18 @@ pub fn race<E: EvalBackend>(
     let mut rung = 0usize;
     while alive.len() > 1 {
         let seeds = rung_seeds(cfg.seed0, rung, seeds_per);
-        let ctx = EvalContext { graph, model, seeds: &seeds, monitor: cfg.monitor };
+        let ctx = EvalContext { problem, model, seeds: &seeds, monitor: cfg.monitor };
         let scores = eval.evaluate(&ctx, &alive);
         debug_assert_eq!(scores.len(), alive.len(), "backend dropped an evaluation");
 
-        // rank: lower mean energy wins; ties resolve on the cheaper
+        // rank: the sense-oriented mean domain objective wins (lower
+        // tour length, higher cut); ties resolve on the cheaper
         // evaluation, then on candidate id — fully deterministic
         let mut order: Vec<usize> = (0..alive.len()).collect();
         order.sort_by(|&a, &b| {
-            scores[a]
-                .mean_energy
-                .total_cmp(&scores[b].mean_energy)
+            sense
+                .key_f(scores[a].mean_objective)
+                .total_cmp(&sense.key_f(scores[b].mean_objective))
                 .then(scores[a].spin_updates.cmp(&scores[b].spin_updates))
                 .then(alive[a].id.cmp(&alive[b].id))
         });

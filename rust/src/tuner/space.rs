@@ -86,6 +86,26 @@ impl ParamSpace {
         }
     }
 
+    /// Space centered on a field-derived `I0` operating point — the
+    /// penalty/QUBO analogue of [`Self::gset_default`]: where the G-set
+    /// space brackets the paper's calibrated I0 = 24, this brackets the
+    /// `i0 ≈ max_field/4` rule the API's parameter derivation uses, so
+    /// racing explores around a sane operating point instead of the
+    /// MAX-CUT scale (which saturates penalty encodings uniformly).
+    pub fn field_scaled(i0: i32) -> Self {
+        let i0 = i0.max(16);
+        Self {
+            replicas: vec![8, 12, 16, 24],
+            i0: vec![(i0 / 2).max(8), (i0 * 3 / 4).max(12), i0, i0.saturating_mul(3) / 2],
+            noise_start: vec![(i0 / 4).max(4), (i0 / 2).max(8), (i0 * 3 / 4).max(12)],
+            noise_end: vec![0, 1, 2, 4],
+            q_max: vec![(i0 / 4).max(4), (i0 / 2).max(8), i0],
+            steps: vec![300, 500, 800],
+            delay: vec![DelayKind::DualBram],
+            j_scale: 1,
+        }
+    }
+
     /// Shrunken space for smoke tests and `--quick` experiments.
     pub fn quick() -> Self {
         Self {

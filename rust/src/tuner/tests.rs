@@ -1,11 +1,16 @@
 use super::*;
 use crate::annealer::{NoiseSchedule, SsqaEngine, SsqaParams, StepObserver};
+use crate::api::Problem as _;
 use crate::coordinator::BackendKind;
 use crate::graph::torus_2d;
-use crate::problems::maxcut;
+use crate::problems::{maxcut, MaxCut};
 
 fn tiny_graph() -> crate::graph::Graph {
     torus_2d(4, 8, true, 0xC0)
+}
+
+fn tiny_problem() -> MaxCut {
+    MaxCut::new(tiny_graph(), 8)
 }
 
 fn tiny_cfg() -> TunerConfig {
@@ -137,12 +142,12 @@ fn observed_early_stop_matches_prefix_run() {
 
 #[test]
 fn race_is_deterministic_and_prunes_to_one() {
-    let g = tiny_graph();
+    let p = tiny_problem();
     let cfg = tiny_cfg();
-    let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+    let model = p.to_ising();
     let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
-    let a = race(&g, &model, cands.clone(), &cfg.race, &InlineEval);
-    let b = race(&g, &model, cands, &cfg.race, &InlineEval);
+    let a = race(&p, &model, cands.clone(), &cfg.race, &InlineEval);
+    let b = race(&p, &model, cands, &cfg.race, &InlineEval);
     assert_eq!(a.winner, b.winner);
     assert_eq!(a.trace, b.trace);
     assert_eq!(a.total_spin_updates, b.total_spin_updates);
@@ -161,17 +166,19 @@ fn race_is_deterministic_and_prunes_to_one() {
     assert!(a.no_earlystop_updates < a.full_budget_updates);
     assert!(a.total_spin_updates <= a.no_earlystop_updates);
     assert!(a.total_spin_updates < a.full_budget_updates);
-    // within a rung, survivors rank strictly ahead of the pruned
+    // within a rung, survivors rank ahead of the pruned on the
+    // sense-oriented domain objective (for MAX-CUT: higher mean cut)
+    let sense = p.sense();
     for rung in 0..2 {
         let rows: Vec<_> = a.trace.iter().filter(|r| r.rung == rung).collect();
         let worst_kept = rows
             .iter()
             .filter(|r| r.survived)
-            .map(|r| r.score.mean_energy)
+            .map(|r| sense.key_f(r.score.mean_objective))
             .fold(f64::MIN, f64::max);
         for r in rows.iter().filter(|r| !r.survived) {
             assert!(
-                r.score.mean_energy >= worst_kept,
+                sense.key_f(r.score.mean_objective) >= worst_kept,
                 "pruned candidate outranked a survivor on rung {rung}"
             );
         }
@@ -180,11 +187,11 @@ fn race_is_deterministic_and_prunes_to_one() {
 
 #[test]
 fn race_seed_budget_doubles_per_rung() {
-    let g = tiny_graph();
+    let p = tiny_problem();
     let cfg = tiny_cfg();
-    let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+    let model = p.to_ising();
     let cands = cfg.space.sample_n(4, cfg.tuner_seed);
-    let out = race(&g, &model, cands, &cfg.race, &InlineEval);
+    let out = race(&p, &model, cands, &cfg.race, &InlineEval);
     for row in &out.trace {
         assert_eq!(row.seeds, cfg.race.seeds_rung0 * cfg.race.eta.pow(row.rung as u32));
         assert_eq!(row.score.runs, row.seeds);
@@ -193,11 +200,11 @@ fn race_seed_budget_doubles_per_rung() {
 
 #[test]
 fn portfolio_budget_matches_and_hw_is_bit_exact_with_ssqa() {
-    let g = tiny_graph();
+    let p = tiny_problem();
     let cfg = tiny_cfg();
-    let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+    let model = p.to_ising();
     let winner = cfg.space.sample_n(1, 3).remove(0);
-    let report = run_portfolio(&g, &model, &winner, &cfg.portfolio);
+    let report = run_portfolio(&p, &model, &winner, &cfg.portfolio);
     assert_eq!(report.entries.len(), 4);
     assert!(report.winner < report.entries.len());
     let by_backend = |b: BackendKind| {
@@ -235,15 +242,44 @@ fn portfolio_budget_matches_and_hw_is_bit_exact_with_ssqa() {
 
 #[test]
 fn tune_end_to_end_renders_report() {
-    let g = tiny_graph();
+    let p = tiny_problem();
     let cfg = tiny_cfg();
-    let report = tune(&g, &cfg);
+    let report = tune(&p, &cfg);
     let text = report.render();
     assert!(text.contains("racing table"), "{text}");
     assert!(text.contains("engine portfolio"), "{text}");
     assert!(text.contains("winner:"), "{text}");
     assert!(text.contains("kept") && text.contains("cut"), "{text}");
     // deterministic end-to-end
-    let again = tune(&g, &cfg);
+    let again = tune(&p, &cfg);
     assert_eq!(report, again);
+}
+
+#[test]
+fn race_ranks_on_domain_objective_for_maxcut() {
+    // for MAX-CUT, objective racing (maximize mean cut) must crown the
+    // same winner as the energy relation predicts: the winner's mean
+    // objective is the best oriented score of its final rung
+    let p = tiny_problem();
+    let cfg = tiny_cfg();
+    let model = p.to_ising();
+    let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
+    let out = race(&p, &model, cands, &cfg.race, &InlineEval);
+    let last_rung = out.trace.iter().map(|r| r.rung).max().unwrap();
+    let rows: Vec<_> = out.trace.iter().filter(|r| r.rung == last_rung).collect();
+    let winner_row = rows.iter().find(|r| r.survived).expect("one survivor");
+    assert_eq!(winner_row.cand, out.winner);
+    for r in &rows {
+        assert!(
+            winner_row.score.mean_objective >= r.score.mean_objective,
+            "winner must have the best (highest) mean cut on the final rung"
+        );
+        // per-seed objectives come from the exact energy relation, and
+        // every MAX-CUT decode is feasible
+        assert_eq!(r.score.feasible_runs, r.score.runs);
+        assert_eq!(
+            r.score.best_objective,
+            p.objective_from_energy(r.score.best_energy),
+        );
+    }
 }

@@ -1,0 +1,173 @@
+//! Unified-API acceptance tests: all six problem kinds solvable
+//! end-to-end through [`SolveRequest`], with the decoded solution
+//! feasible and its domain objective matching the reported Ising
+//! energy mapping (the §5.2 "one datapath, any QUBO" claim as a test).
+
+use ssqa::api::{Problem, ProblemKind, Solution, SolveRequest};
+use ssqa::coordinator::{Router, RoutingPolicy, WorkerPool};
+use ssqa::graph::{torus_2d, Graph};
+use ssqa::problems::{
+    maxcut, ColoringInstance, ColoringProblem, GiInstance, GiProblem, MaxCut, PartitionInstance,
+    Qubo, QuboProblem, TspInstance, TspProblem,
+};
+use std::sync::Arc;
+
+fn pool() -> WorkerPool {
+    WorkerPool::new(4, Router::new(RoutingPolicy::AllSoftware))
+}
+
+/// Shared invariants of every report.
+fn check_report(report: &ssqa::api::SolveReport, kind: ProblemKind) {
+    assert_eq!(report.kind, kind);
+    assert!(report.runs > 0 && report.spin_updates > 0);
+    assert!(report.feasible_runs <= report.runs);
+    assert!(report.fpga.latency_s > 0.0 && report.fpga.power_w > 0.0);
+    assert_eq!(report.feasible, report.solution.feasible());
+    if report.feasible {
+        assert_eq!(report.solution.objective(), Some(report.best_objective));
+    }
+    assert!(!report.render().is_empty());
+}
+
+#[test]
+fn maxcut_end_to_end() {
+    let p = Arc::new(MaxCut::new(torus_2d(4, 6, true, 5), 8));
+    let report =
+        SolveRequest::new(p.clone()).steps(80).seed(3).runs(4).run_on(&pool()).unwrap();
+    check_report(&report, ProblemKind::MaxCut);
+    assert!(report.feasible, "every MAX-CUT decode is feasible");
+    assert_eq!(report.feasible_runs, 4);
+    let Solution::MaxCut { cut, ref partition } = report.solution else { panic!() };
+    assert!(cut > 0);
+    assert_eq!(cut, p.objective_from_energy(report.best_energy), "energy mapping is exact");
+    // the partition re-scores to the reported cut
+    assert_eq!(cut, maxcut::cut_value(p.graph(), partition));
+}
+
+#[test]
+fn qubo_end_to_end() {
+    let q = Qubo::random(14, 11);
+    let p = Arc::new(QuboProblem::new(q, "qubo-n14"));
+    let report = SolveRequest::new(p.clone()).steps(120).runs(4).run_on(&pool()).unwrap();
+    check_report(&report, ProblemKind::Qubo);
+    assert!(report.feasible);
+    let Solution::Qubo { ref x, value } = report.solution else { panic!() };
+    assert_eq!(value, p.qubo().value(x), "decoded assignment re-scores");
+    assert_eq!(value, p.objective_from_energy(report.best_energy));
+}
+
+#[test]
+fn partition_end_to_end() {
+    let inst = PartitionInstance::random(12, 9, 42);
+    let optimum = inst.brute_force();
+    let p = Arc::new(inst.clone());
+    let report = SolveRequest::new(p).steps(200).runs(6).run_on(&pool()).unwrap();
+    check_report(&report, ProblemKind::Partition);
+    assert!(report.feasible);
+    let Solution::Partition { imbalance, ref sides } = report.solution else { panic!() };
+    assert_eq!(imbalance, inst.imbalance(sides), "sides re-score to the imbalance");
+    assert_eq!(imbalance, inst.objective_from_energy(report.best_energy));
+    assert!(imbalance >= optimum, "cannot beat the brute-force optimum");
+}
+
+#[test]
+fn tsp_end_to_end_decodes_a_feasible_tour() {
+    // 3 cities → 9 spins: with the dominant auto-penalty and a wide
+    // seed batch the annealer reliably lands in a one-hot basin
+    let p = Arc::new(TspProblem::new(TspInstance::random(3, 5), 0));
+    let report = SolveRequest::new(p.clone()).steps(400).runs(16).run_on(&pool()).unwrap();
+    check_report(&report, ProblemKind::Tsp);
+    assert!(report.feasible, "expected a feasible tour ({}/16 runs)", report.feasible_runs);
+    let Solution::Tour { ref order, length } = report.solution else { panic!() };
+    assert_eq!(length, p.instance().tour_length(order), "tour re-scores");
+    // the energy mapping law, verified through a re-encoded σ
+    let n = 3;
+    let mut x = vec![0u8; n * n];
+    for (pos, &city) in order.iter().enumerate() {
+        x[city * n + pos] = 1;
+    }
+    let sigma: Vec<i32> = x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+    let model = p.to_ising();
+    assert_eq!(length, p.objective_from_energy(model.energy(&sigma)));
+}
+
+#[test]
+fn coloring_end_to_end_decodes_a_proper_coloring() {
+    // a 2-colorable 4-cycle with k = 2: the ground state is conflict-free
+    let g = Graph::new(4, vec![(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 0, 1)]);
+    let p = Arc::new(ColoringProblem::new(ColoringInstance::new(g, 2), 10, 4));
+    let report = SolveRequest::new(p.clone()).steps(300).runs(12).run_on(&pool()).unwrap();
+    check_report(&report, ProblemKind::Coloring);
+    assert!(report.feasible, "expected a one-hot coloring ({}/12 runs)", report.feasible_runs);
+    let Solution::Coloring { ref colors, conflicts } = report.solution else { panic!() };
+    assert_eq!(conflicts, p.instance().conflicts(colors), "coloring re-scores");
+    let mut x = vec![0u8; 8];
+    for (v, &c) in colors.iter().enumerate() {
+        x[v * 2 + c] = 1;
+    }
+    let sigma: Vec<i32> = x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+    let model = p.to_ising();
+    assert_eq!(conflicts as i64, p.objective_from_energy(model.energy(&sigma)));
+}
+
+#[test]
+fn graphiso_end_to_end_decodes_a_bijection() {
+    let g = Graph::new(4, vec![(0, 1, 1), (1, 2, 1), (2, 3, 1)]); // a path
+    let (inst, _) = GiInstance::permuted(g, 17);
+    let p = Arc::new(GiProblem::new(inst, 8));
+    let report = SolveRequest::new(p.clone()).steps(400).runs(16).run_on(&pool()).unwrap();
+    check_report(&report, ProblemKind::GraphIso);
+    assert!(report.feasible, "expected a bijection ({}/16 runs)", report.feasible_runs);
+    let Solution::Mapping { ref map, mismatches } = report.solution else { panic!() };
+    assert_eq!(mismatches, p.instance().mismatches(map), "mapping re-scores");
+    if mismatches == 0 {
+        assert!(p.instance().is_isomorphism(map), "0 mismatches ⇔ isomorphism");
+    }
+    let n = 4;
+    let mut x = vec![0u8; n * n];
+    for (u, &v) in map.iter().enumerate() {
+        x[u * n + v] = 1;
+    }
+    let sigma: Vec<i32> = x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+    let model = p.to_ising();
+    assert_eq!(mismatches as i64, p.objective_from_energy(model.energy(&sigma)));
+}
+
+#[test]
+fn auto_tune_runs_through_the_generic_surface() {
+    // a quick tuner config on a tiny MAX-CUT instance: the request
+    // races candidates on the domain objective, then solves with the
+    // winner's configuration and budget
+    let p = Arc::new(MaxCut::new(torus_2d(4, 8, true, 0xC0), 8));
+    let mut cfg = ssqa::tuner::TunerConfig::quick(11);
+    cfg.space.steps = vec![60, 90];
+    cfg.race.candidates = 4;
+    cfg.race.seeds_rung0 = 2;
+    cfg.portfolio.seeds = 2;
+    let report = SolveRequest::new(p)
+        .tune_config(cfg)
+        .seed(5)
+        .runs(3)
+        .run_on(&pool())
+        .unwrap();
+    check_report(&report, ProblemKind::MaxCut);
+    let winner = report.tuned.as_ref().expect("auto-tune reports the winning candidate");
+    assert_eq!(report.steps, winner.steps, "the solve ran on the tuned budget");
+    assert_eq!(report.params, winner.params);
+}
+
+#[test]
+fn early_stop_reduces_spin_updates() {
+    let p = Arc::new(MaxCut::new(torus_2d(4, 8, true, 0xC0), 8));
+    let full = SolveRequest::new(p.clone()).steps(400).runs(4).run_on(&pool()).unwrap();
+    let monitored = SolveRequest::new(p)
+        .steps(400)
+        .runs(4)
+        .early_stop(ssqa::tuner::MonitorConfig { stride: 8, patience: 3, min_steps: 32, tol: 0 })
+        .run_on(&pool())
+        .unwrap();
+    assert!(monitored.spin_updates <= full.spin_updates);
+    if monitored.early_stops > 0 {
+        assert!(monitored.spin_updates < full.spin_updates);
+    }
+}

@@ -4,12 +4,14 @@
 //! Each property runs over a seeded family of random cases; failures
 //! print the offending seed for reproduction.
 
-use ssqa::annealer::{Annealer, NoiseSchedule, QSchedule, SsqaEngine, SsqaParams};
+use ssqa::annealer::{run_seed, Annealer, NoiseSchedule, QSchedule, SsqaEngine, SsqaParams};
+use ssqa::api::{Problem, Solution, SolveRequest};
 use ssqa::graph::{parse_gset, random_graph, write_gset, CsrMatrix, Graph};
 use ssqa::hw::{cycles_per_step, DelayKind, HwConfig, HwEngine};
-use ssqa::problems::{maxcut, qubo::Qubo};
+use ssqa::problems::{maxcut, qubo::Qubo, ColoringInstance, GiInstance, MaxCut, TspInstance};
 use ssqa::rng::Xorshift64Star;
 use ssqa::tuner::{race, InlineEval, MonitorConfig, ParamSpace, RaceConfig, TunerConfig};
+use std::sync::Arc;
 
 const CASES: u64 = 25;
 
@@ -164,9 +166,10 @@ fn prop_tuner_deterministic() {
             ..RaceConfig::default()
         };
         let model = maxcut::ising_from_graph(&g, cfg.space.j_scale);
+        let problem = MaxCut::new(g.clone(), cfg.space.j_scale);
         let cands = cfg.space.sample_n(cfg.race.candidates, cfg.tuner_seed);
-        let a = race(&g, &model, cands.clone(), &cfg.race, &InlineEval);
-        let b = race(&g, &model, cands, &cfg.race, &InlineEval);
+        let a = race(&problem, &model, cands.clone(), &cfg.race, &InlineEval);
+        let b = race(&problem, &model, cands, &cfg.race, &InlineEval);
         assert_eq!(a.winner, b.winner, "case {case}: winner must be reproducible");
         assert_eq!(a.trace, b.trace, "case {case}: racing trace must be reproducible");
         assert_eq!(a.total_spin_updates, b.total_spin_updates, "case {case}");
@@ -196,7 +199,11 @@ fn prop_gset_roundtrip_solves_identically() {
         let (_, r2) = SsqaEngine::new(p, steps).run(&m2, steps, seed);
         assert_eq!(r1.replica_energies, r2.replica_energies, "case {case}");
         assert_eq!(r1.best_sigma, r2.best_sigma, "case {case}");
-        assert_eq!(r1.cut(&g), r2.cut(&g2), "case {case}");
+        assert_eq!(
+            maxcut::cut_value(&g, &r1.best_sigma),
+            maxcut::cut_value(&g2, &r2.best_sigma),
+            "case {case}"
+        );
     }
 }
 
@@ -302,5 +309,162 @@ fn prop_run_results_are_consistent() {
             res.replica_energies.iter().all(|&e| e >= res.best_energy),
             "case {case}: best not minimal"
         );
+    }
+}
+
+/// Property (unified-API acceptance): the five QUBO-derived encoders —
+/// random QUBO, MAX-CUT-as-QUBO, TSP, coloring and graph isomorphism —
+/// map Ising energies back to QUBO objective values **exactly**, for
+/// random assignments: `value(x) == energy_to_value(H(σ(x)))`.
+#[test]
+fn prop_five_encoders_energy_value_roundtrip() {
+    for case in 0..10u64 {
+        let mut rng = Xorshift64Star::new(0xC000 + case);
+        let g = random_graph(5 + rng.next_below(4), 8 + rng.next_below(6), &[1], rng.next_u64());
+        let tsp = TspInstance::random(3 + rng.next_below(3), rng.next_u64());
+        let coloring = ColoringInstance::new(
+            random_graph(4 + rng.next_below(4), 6 + rng.next_below(5), &[1], rng.next_u64()),
+            2 + rng.next_below(3),
+        );
+        let (gi, _) = GiInstance::permuted(
+            random_graph(3 + rng.next_below(3), 3 + rng.next_below(3), &[1], rng.next_u64()),
+            rng.next_u64(),
+        );
+        let a = 5 + rng.next_below(10) as i32;
+        let b = 1 + rng.next_below(6) as i32;
+        let qubos: Vec<(&str, Qubo)> = vec![
+            ("random", Qubo::random(3 + rng.next_below(8), rng.next_u64())),
+            ("maxcut", maxcut::qubo_from_graph(&g)),
+            ("tsp", tsp.to_qubo(40 + rng.next_below(200) as i32)),
+            ("coloring", coloring.to_qubo(a, b)),
+            ("gi", gi.to_qubo(3 + rng.next_below(10) as i32)),
+        ];
+        for (name, q) in qubos {
+            let (model, map) = q.to_ising();
+            let standalone = q.ising_map();
+            for _ in 0..12 {
+                let x: Vec<u8> = (0..q.n()).map(|_| rng.next_below(2) as u8).collect();
+                let sigma: Vec<i32> = x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+                let h = model.energy(&sigma);
+                assert_eq!(map.energy_to_value(h), q.value(&x), "case {case} encoder {name}");
+                // the model-free map agrees with the one to_ising built
+                assert_eq!(standalone.energy_to_value(h), q.value(&x), "case {case} {name}");
+            }
+        }
+    }
+}
+
+/// Property: `Tsp::decode` / `Coloring::decode` return `Some` **only**
+/// for feasible assignments — a decoded tour/coloring is exactly the
+/// one-hot encoding of the returned object; corrupted assignments
+/// decode to `None`.
+#[test]
+fn prop_tsp_coloring_decode_only_feasible() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0xD000 + case);
+
+        // TSP: a valid permutation encoding round-trips; corruptions die
+        let n = 3 + rng.next_below(5);
+        let tsp = TspInstance::random(n, rng.next_u64());
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.next_below(i + 1);
+            perm.swap(i, j);
+        }
+        let mut x = vec![0u8; n * n];
+        for (p, &v) in perm.iter().enumerate() {
+            x[v * n + p] = 1;
+        }
+        assert_eq!(tsp.decode(&x), Some(perm.clone()), "case {case}: valid tour decodes");
+        let mut extra = x.clone();
+        let mut slot = rng.next_below(n * n);
+        while extra[slot] == 1 {
+            slot = rng.next_below(n * n);
+        }
+        extra[slot] = 1; // a duplicate in some row/column
+        assert_eq!(tsp.decode(&extra), None, "case {case}: duplicate must not decode");
+        let mut missing = x.clone();
+        missing[perm[0] * n] = 0; // position 0 now has no city
+        assert_eq!(tsp.decode(&missing), None, "case {case}: hole must not decode");
+        // arbitrary assignments: Some(t) implies x is exactly t's one-hot
+        for _ in 0..10 {
+            let xr: Vec<u8> = (0..n * n).map(|_| (rng.next_f64() < 0.3) as u8).collect();
+            if let Some(tour) = tsp.decode(&xr) {
+                let mut expect = vec![0u8; n * n];
+                for (p, &v) in tour.iter().enumerate() {
+                    expect[v * n + p] = 1;
+                }
+                assert_eq!(xr, expect, "case {case}: Some(t) must be exactly one-hot");
+            }
+        }
+
+        // coloring: same law with the v×k one-hot grid
+        let k = 2 + rng.next_below(3);
+        let nodes = 3 + rng.next_below(5);
+        let inst = ColoringInstance::new(
+            random_graph(nodes, nodes + rng.next_below(nodes), &[1], rng.next_u64()),
+            k,
+        );
+        for _ in 0..10 {
+            let xr: Vec<u8> = (0..nodes * k).map(|_| (rng.next_f64() < 0.4) as u8).collect();
+            if let Some(colors) = inst.decode(&xr) {
+                let mut expect = vec![0u8; nodes * k];
+                for (v, &c) in colors.iter().enumerate() {
+                    expect[v * k + c] = 1;
+                }
+                assert_eq!(xr, expect, "case {case}: Some(colors) must be exactly one-hot");
+            }
+        }
+    }
+}
+
+/// Property (unified-API acceptance): the MAX-CUT path through the new
+/// `SolveRequest` surface reproduces the pre-redesign direct-engine
+/// results **seed-for-seed** — same model, same seed derivation, same
+/// best energy and cut.
+#[test]
+fn prop_api_maxcut_bit_exact_with_direct_path() {
+    for case in 0..6u64 {
+        let mut rng = Xorshift64Star::new(0xE000 + case);
+        let g = arb_graph(&mut rng);
+        let steps = 10 + rng.next_below(25);
+        let p = arb_params(&mut rng, steps);
+        let seed0 = rng.next_u64() as u32;
+        let runs = 1 + rng.next_below(3);
+
+        // the pre-redesign path: build the model by hand, drive the
+        // engine per seed, aggregate cuts/energies
+        let model = maxcut::ising_from_graph(&g, p.j_scale);
+        let eng = SsqaEngine::new(p, steps);
+        let mut best_cut = i64::MIN;
+        let mut best_energy = i64::MAX;
+        for r in 0..runs as u32 {
+            let (_, res) = eng.run(&model, steps, run_seed(seed0, r));
+            best_cut = best_cut.max(maxcut::cut_value(&g, &res.best_sigma));
+            best_energy = best_energy.min(res.best_energy);
+        }
+
+        // the unified-API path
+        let problem = MaxCut::new(g.clone(), p.j_scale);
+        let report = SolveRequest::new(Arc::new(problem))
+            .params(p)
+            .steps(steps)
+            .seed(seed0)
+            .runs(runs)
+            .solve()
+            .expect("solve succeeds");
+        assert_eq!(report.best_energy, best_energy, "case {case}: energies must match");
+        assert_eq!(report.best_objective, best_cut, "case {case}: cuts must match");
+        assert!(report.feasible, "case {case}: MAX-CUT is always feasible");
+        assert_eq!(report.runs, runs, "case {case}");
+        assert_eq!(report.feasible_runs, runs, "case {case}");
+        let Solution::MaxCut { cut, ref partition } = report.solution else {
+            panic!("case {case}: MAX-CUT must decode to a cut");
+        };
+        assert_eq!(cut, best_cut, "case {case}: decoded solution carries the best cut");
+        assert_eq!(cut, maxcut::cut_value(&g, partition), "case {case}: partition re-scores");
+        // the report's energy↔objective relation is the exact one
+        let p2 = MaxCut::new(g.clone(), p.j_scale);
+        assert_eq!(p2.objective_from_energy(report.best_energy), report.best_objective);
     }
 }
