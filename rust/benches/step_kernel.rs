@@ -1,0 +1,110 @@
+//! Step-kernel comparison bench (ISSUE 4 acceptance): the scalar
+//! reference vs the lane-vectorized kernel vs the threaded kernel on a
+//! grid of problem shapes, including the paper's MAX-CUT operating
+//! point N=800, R=20. All three paths are bit-identical (asserted per
+//! shape on a short run before timing) — this bench measures the
+//! wall-clock spread only.
+//!
+//! Appends one record per shape to `BENCH_step_kernel.json` at the
+//! repository root (same trajectory format as `BENCH_hotpath.json`).
+
+use ssqa::annealer::{SsqaEngine, SsqaParams};
+use ssqa::config::{bench, num_threads, updates_per_sec, BenchArgs};
+use ssqa::dynamics::StepKernel;
+use ssqa::graph::random_graph;
+use ssqa::problems::maxcut;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let steps = if args.quick { 10 } else { 40 };
+    let threads = num_threads();
+    let mut records: Vec<String> = Vec::new();
+
+    for &n in &[100usize, 800, 2000] {
+        for &r in &[4usize, 20, 64] {
+            let name = format!("step_kernel/n{n}r{r}");
+            if !args.matches(&name) {
+                continue;
+            }
+            // G-set-class density (G14: ~11.7 avg degree at 800 nodes)
+            let g = random_graph(n, 6 * n, &[-1, 1], 0x5EED ^ ((n as u64) << 8) ^ (r as u64));
+            let params = SsqaParams { replicas: r, ..SsqaParams::gset_default(steps) };
+            let model = maxcut::ising_from_graph(&g, params.j_scale);
+
+            // bit-exactness preflight on a short run — a bench that
+            // measured a diverging kernel would be meaningless
+            let check = 5;
+            let (s0, _) = SsqaEngine::new(params, check)
+                .with_kernel(StepKernel::Scalar)
+                .run(&model, check, 7);
+            for kernel in [StepKernel::Lanes { threads: 1 }, StepKernel::Lanes { threads }] {
+                let eng = SsqaEngine::new(params, check).with_kernel(kernel);
+                let (s1, _) = eng.run(&model, check, 7);
+                assert_eq!(s0.sigma, s1.sigma, "{name}: {} diverged from scalar", kernel.name());
+                assert_eq!(s0.is, s1.is, "{name}: {} Is diverged", kernel.name());
+            }
+
+            let time_kernel = |kernel: StepKernel| {
+                bench(&format!("{name} {} {steps}st", kernel.name()), 3, || {
+                    let eng = SsqaEngine::new(params, steps).with_kernel(kernel);
+                    let _ = eng.run(&model, steps, 1);
+                })
+                .min
+            };
+            let scalar = time_kernel(StepKernel::Scalar);
+            let lanes = time_kernel(StepKernel::Lanes { threads: 1 });
+            let threaded = time_kernel(StepKernel::Lanes { threads });
+            let lanes_speedup = scalar.as_secs_f64() / lanes.as_secs_f64();
+            let threaded_speedup = scalar.as_secs_f64() / threaded.as_secs_f64();
+            println!(
+                "  → lanes {:.2}×, threaded({threads}) {:.2}× vs scalar; threaded {:.2} M spin-updates/s",
+                lanes_speedup,
+                threaded_speedup,
+                updates_per_sec(n, r, steps, threaded) / 1e6
+            );
+
+            let stamp = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            records.push(format!(
+                "{{\"unix_time\": {stamp}, \"bench\": \"step_kernel\", \"n\": {n}, \"replicas\": {r}, \
+                 \"edges\": {}, \"steps\": {steps}, \"threads\": {threads}, \
+                 \"scalar_s\": {:.6}, \"lanes_s\": {:.6}, \"threaded_s\": {:.6}, \
+                 \"lanes_speedup\": {:.4}, \"threaded_speedup\": {:.4}, \
+                 \"threaded_mups\": {:.2}}}",
+                g.num_edges(),
+                scalar.as_secs_f64(),
+                lanes.as_secs_f64(),
+                threaded.as_secs_f64(),
+                lanes_speedup,
+                threaded_speedup,
+                updates_per_sec(n, r, steps, threaded) / 1e6,
+            ));
+        }
+    }
+
+    if records.is_empty() {
+        return;
+    }
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_step_kernel.json");
+    let mut all: Vec<String> = std::fs::read_to_string(json_path)
+        .ok()
+        .and_then(|s| {
+            let body = s.trim().strip_prefix('[')?.strip_suffix(']')?.trim().to_string();
+            Some(
+                body.lines()
+                    .map(|l| l.trim().trim_end_matches(',').to_string())
+                    .filter(|l| !l.is_empty() && !l.starts_with("//"))
+                    .collect(),
+            )
+        })
+        .unwrap_or_default();
+    all.extend(records);
+    let out = format!("[\n  {}\n]\n", all.join(",\n  "));
+    // fail loudly: CI uploads this file as the acceptance artifact, and a
+    // swallowed write error would silently ship the stale schema seed
+    std::fs::write(json_path, out)
+        .unwrap_or_else(|e| panic!("could not write BENCH_step_kernel.json: {e}"));
+    println!("  → recorded in BENCH_step_kernel.json");
+}

@@ -4,7 +4,7 @@
 //! control (the tuner's convergence-based early stopping).
 
 use super::{Annealer, SsqaEngine, SsqaParams, SsqaState};
-use crate::config::{chunk_per_worker, num_threads, par_map};
+use crate::config::{chunk_per_worker, num_threads, par_map, plan_run_threads};
 use crate::graph::{Graph, IsingModel};
 use crate::problems::maxcut;
 
@@ -146,8 +146,12 @@ pub fn multi_run_batched(
 ) -> AggregateStats {
     let seeds: Vec<u32> = (0..runs as u32).map(|r| run_seed(seed0, r)).collect();
     let chunks: Vec<&[u32]> = chunk_per_worker(&seeds, num_threads()).collect();
+    // nested-parallelism policy: seeds fan out across the pool first;
+    // per-run kernel threads only use workers the fan-out left idle
+    // (DESIGN.md §7 — results are bit-identical either way)
+    let run_threads = plan_run_threads(num_threads(), chunks.len(), model.n() * params.replicas);
     let per_chunk: Vec<Vec<(i64, i64)>> = par_map(&chunks, |chunk| {
-        let eng = SsqaEngine::new(params, steps);
+        let eng = SsqaEngine::new(params, steps).with_threads(run_threads);
         eng.run_batch(model, steps, chunk)
             .into_iter()
             .map(|res| (maxcut::cut_value(graph, &res.best_sigma), res.best_energy))

@@ -8,7 +8,7 @@
 //! datapath.
 
 use super::{params::SsaParams, runner::RunResult, Annealer};
-use crate::dynamics::{self, CellUpdate};
+use crate::dynamics::{self, CellUpdate, KernelScratch, StepJob, StepKernel};
 use crate::graph::IsingModel;
 use crate::rng::RngMatrix;
 
@@ -38,11 +38,24 @@ pub struct SsaEngine {
     /// Track the best configuration seen over the whole run — SSA's long
     /// schedules wander, and the hardware baseline reports best-seen.
     pub track_best: bool,
+    /// Step implementation (DESIGN.md §7). SSA is the R = 1 degenerate
+    /// case of the step-parallel kernel: one lane per row, rows blocked
+    /// across threads, `q_t = 0`. Bit-identical to [`Self::step_into`]
+    /// for any thread count.
+    pub kernel: StepKernel,
 }
 
 impl SsaEngine {
     pub fn new(params: SsaParams, total_steps: usize) -> Self {
-        Self { params, total_steps, track_best: true }
+        Self { params, total_steps, track_best: true, kernel: StepKernel::default() }
+    }
+
+    /// Run with the row-blocked kernel on `threads` scoped workers
+    /// (clamped to `[1, MAX_KERNEL_THREADS]`).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        let threads = threads.clamp(1, dynamics::MAX_KERNEL_THREADS);
+        self.kernel = StepKernel::Lanes { threads };
+        self
     }
 
     /// One synchronous update step (§Perf: writes into the reusable
@@ -75,6 +88,33 @@ impl SsaEngine {
         let mut next = Vec::with_capacity(model.n());
         self.step_into(model, st, noise_t, &mut next);
     }
+
+    /// One synchronous update step through the step-parallel kernel
+    /// (R = 1 lanes, `q_t = 0` so the coupling term vanishes exactly as
+    /// in [`Self::step_into`]). `next` is the reusable output buffer,
+    /// `scratch` the per-worker kernel rows.
+    pub fn step_kerneled(
+        &self,
+        model: &IsingModel,
+        st: &mut SsaState,
+        noise_t: i32,
+        next: &mut Vec<i32>,
+        scratch: &mut KernelScratch,
+        threads: usize,
+    ) {
+        let n = model.n();
+        next.resize(n, 0);
+        let job = StepJob {
+            model,
+            cell: CellUpdate::new(self.params.i0, self.params.alpha),
+            replicas: 1,
+            q_t: 0,
+            noise_t,
+        };
+        dynamics::step_parallel(&job, &st.sigma, next, &mut st.is, &mut st.rng, scratch, threads);
+        std::mem::swap(&mut st.sigma, next);
+        st.t += 1;
+    }
 }
 
 impl Annealer for SsaEngine {
@@ -88,9 +128,15 @@ impl Annealer for SsaEngine {
         // stride once past the noisy early phase
         let check_stride = (steps / 2000).max(1);
         let mut scratch = Vec::with_capacity(n);
+        let mut ks = KernelScratch::new(self.kernel.threads(), 1);
         for t in 0..steps {
             let noise_t = self.params.noise.at(t, horizon);
-            self.step_into(model, &mut st, noise_t, &mut scratch);
+            match self.kernel {
+                StepKernel::Scalar => self.step_into(model, &mut st, noise_t, &mut scratch),
+                StepKernel::Lanes { threads } => {
+                    self.step_kerneled(model, &mut st, noise_t, &mut scratch, &mut ks, threads)
+                }
+            }
             if self.track_best && (t % check_stride == 0 || t + 1 == steps) {
                 let e = model.energy(&st.sigma);
                 if e < best_energy {

@@ -13,7 +13,7 @@
 //! schedules.
 
 use super::{params::SsqaParams, runner::RunResult, runner::StepObserver, Annealer};
-use crate::dynamics::{self, CellUpdate, StepScratch};
+use crate::dynamics::{self, CellUpdate, KernelScratch, StepJob, StepKernel, StepScratch};
 use crate::graph::IsingModel;
 use crate::rng::RngMatrix;
 
@@ -65,11 +65,32 @@ pub struct SsqaEngine {
     /// Noise-decay horizon: schedules are normalized to
     /// `total_steps.max(steps_run)` (see [`Self::schedule_horizon`]).
     pub total_steps: usize,
+    /// Which Eq. (6) step implementation `run`/`run_batch` drive
+    /// (DESIGN.md §7). Every kernel is bit-identical; the default is the
+    /// lane-vectorized single-threaded kernel, and the coordinator's
+    /// nested-parallelism policy raises the thread count when the pool
+    /// has spare workers.
+    pub kernel: StepKernel,
 }
 
 impl SsqaEngine {
     pub fn new(params: SsqaParams, total_steps: usize) -> Self {
-        Self { params, total_steps }
+        Self { params, total_steps, kernel: StepKernel::default() }
+    }
+
+    /// Run with the lane-vectorized kernel on `threads` scoped worker
+    /// threads (clamped to `[1, MAX_KERNEL_THREADS]`; results are
+    /// bit-identical for any value).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        let threads = threads.clamp(1, dynamics::MAX_KERNEL_THREADS);
+        self.kernel = StepKernel::Lanes { threads };
+        self
+    }
+
+    /// Run with an explicit kernel selection.
+    pub fn with_kernel(mut self, kernel: StepKernel) -> Self {
+        self.kernel = kernel;
+        self
     }
 
     /// The horizon the noise schedule decays over when running `steps`
@@ -144,6 +165,40 @@ impl SsqaEngine {
         st.t += 1;
     }
 
+    /// Advance one step through the engine's selected [`StepKernel`]:
+    /// the scalar reference ([`Self::step`]) or the lane-vectorized /
+    /// threaded [`dynamics::step_parallel`]. Bit-identical either way
+    /// (the §7 determinism contract, proven in
+    /// `tests/step_kernel_diff.rs`); zero heap allocations once
+    /// `scratch` is warm.
+    pub fn step_kerneled(
+        &self,
+        model: &IsingModel,
+        st: &mut SsqaState,
+        scratch: &mut KernelScratch,
+        q_t: i32,
+        noise_t: i32,
+    ) {
+        let r = self.params.replicas;
+        scratch.ensure(self.kernel.threads(), r);
+        match self.kernel {
+            StepKernel::Scalar => self.step(model, st, scratch.serial(), q_t, noise_t),
+            StepKernel::Lanes { threads } => {
+                let job = StepJob {
+                    model,
+                    cell: CellUpdate::new(self.params.i0, self.params.alpha),
+                    replicas: r,
+                    q_t,
+                    noise_t,
+                };
+                let SsqaState { sigma, sigma_prev, is, rng, t } = st;
+                dynamics::step_parallel(&job, sigma, sigma_prev, is, rng, scratch, threads);
+                std::mem::swap(sigma, sigma_prev);
+                *t += 1;
+            }
+        }
+    }
+
     /// Run the full schedule and return per-replica final energies.
     pub fn run(&self, model: &IsingModel, steps: usize, seed: u32) -> (SsqaState, RunResult) {
         self.run_observed(model, steps, seed, &mut ())
@@ -162,7 +217,7 @@ impl SsqaEngine {
         observer: &mut O,
     ) -> (SsqaState, RunResult) {
         let mut st = SsqaState::init(model.n(), self.params.replicas, seed);
-        let mut scratch = StepScratch::new(self.params.replicas);
+        let mut scratch = KernelScratch::new(self.kernel.threads(), self.params.replicas);
         observer.begin_run(seed);
         let executed = self.drive_observed(model, &mut st, &mut scratch, steps, observer);
         let result = Self::harvest(model, &st, executed);
@@ -192,7 +247,7 @@ impl SsqaEngine {
     ) -> Vec<RunResult> {
         let Some(&first) = seeds.first() else { return Vec::new() };
         let mut st = SsqaState::init(model.n(), self.params.replicas, first);
-        let mut scratch = StepScratch::new(self.params.replicas);
+        let mut scratch = KernelScratch::new(self.kernel.threads(), self.params.replicas);
         let mut out = Vec::with_capacity(seeds.len());
         for (idx, &seed) in seeds.iter().enumerate() {
             if idx > 0 {
@@ -215,7 +270,7 @@ impl SsqaEngine {
         &self,
         model: &IsingModel,
         st: &mut SsqaState,
-        scratch: &mut StepScratch,
+        scratch: &mut KernelScratch,
         steps: usize,
         observer: &mut O,
     ) -> usize {
@@ -223,7 +278,7 @@ impl SsqaEngine {
         for t in 0..steps {
             let q_t = self.params.q.at(t);
             let noise_t = self.params.noise.at(t, horizon);
-            self.step(model, st, scratch, q_t, noise_t);
+            self.step_kerneled(model, st, scratch, q_t, noise_t);
             if observer.observe(t, st) {
                 return t + 1;
             }

@@ -266,6 +266,23 @@ fn multi_run_batched_matches_unbatched() {
 }
 
 #[test]
+fn zero_replicas_is_a_degenerate_noop_not_a_panic() {
+    // protocol/CLI reject replicas=0, but a library caller can still
+    // build one; both kernels must degrade like the scalar empty loops
+    let (_, m) = small_model();
+    let p = SsqaParams { replicas: 0, ..SsqaParams::gset_default(5) };
+    for eng in [
+        SsqaEngine::new(p, 5).with_kernel(crate::dynamics::StepKernel::Scalar),
+        SsqaEngine::new(p, 5),
+        SsqaEngine::new(p, 5).with_threads(4),
+    ] {
+        let (st, res) = eng.run(&m, 5, 1);
+        assert!(st.sigma.is_empty());
+        assert!(res.replica_energies.is_empty());
+    }
+}
+
+#[test]
 fn engines_report_names() {
     assert_eq!(SsqaEngine::new(SsqaParams::gset_default(1), 1).name(), "ssqa-sw");
     assert_eq!(SsaEngine::new(SsaParams::gset_default(), 1).name(), "ssa-sw");

@@ -47,6 +47,11 @@ pub struct SolveRequest {
     pub replicas: Option<usize>,
     /// Backend override; `None` lets the pool's router decide.
     pub backend: Option<BackendKind>,
+    /// Per-run step-kernel threads (software backends; CLI `--threads`,
+    /// protocol `par=`). `None` lets the router's nested-parallelism
+    /// policy decide from N×R and the seed fan-out. Thread count never
+    /// changes results — the kernel is bit-identical for any value.
+    pub threads: Option<usize>,
     /// Auto-tune policy: race candidates on the problem's domain
     /// objective first and solve with the winner.
     pub tune: Option<TunePolicy>,
@@ -65,6 +70,7 @@ impl SolveRequest {
             params: None,
             replicas: None,
             backend: None,
+            threads: None,
             tune: None,
             early_stop: None,
         }
@@ -97,6 +103,13 @@ impl SolveRequest {
 
     pub fn backend(mut self, backend: BackendKind) -> Self {
         self.backend = Some(backend);
+        self
+    }
+
+    /// Pin the per-run step-kernel thread count (clamped to
+    /// `[1, MAX_KERNEL_THREADS]`, like the engines themselves).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.clamp(1, crate::dynamics::MAX_KERNEL_THREADS));
         self
     }
 
@@ -185,6 +198,7 @@ impl SolveRequest {
         batch.params = params;
         batch.backend = self.backend;
         batch.early_stop = self.early_stop;
+        batch.threads = self.threads;
         pool.submit_batch(batch);
         let mut outcomes = pool.drain();
         // drain yields worker-completion order; chunk ids are assigned

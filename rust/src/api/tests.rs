@@ -246,3 +246,29 @@ fn solve_request_end_to_end_on_always_feasible_kinds() {
     let Solution::Partition { imbalance, .. } = report.solution else { panic!() };
     assert_eq!(imbalance, report.best_objective);
 }
+
+#[test]
+fn solve_request_threads_never_changes_results() {
+    use std::sync::Arc;
+    // the --threads / par= surface: any pinned thread count (and the
+    // router default) produces bit-identical reports
+    let g = random_graph(18, 40, &[-1, 1], 9);
+    let p = Arc::new(MaxCut::new(g, 8));
+    let base = SolveRequest::new(p.clone()).steps(40).seed(5).runs(3).solve().unwrap();
+    for threads in [1usize, 2, 5] {
+        let r = SolveRequest::new(p.clone())
+            .steps(40)
+            .seed(5)
+            .runs(3)
+            .threads(threads)
+            .solve()
+            .unwrap();
+        assert_eq!(r.best_energy, base.best_energy, "threads={threads}");
+        assert_eq!(r.best_objective, base.best_objective, "threads={threads}");
+        assert_eq!(r.replica_energies, base.replica_energies, "threads={threads}");
+        assert_eq!(r.mean_objective, base.mean_objective, "threads={threads}");
+    }
+    // builder clamps zero to one
+    let zero = SolveRequest::new(p).threads(0);
+    assert_eq!(zero.threads, Some(1));
+}

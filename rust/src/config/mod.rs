@@ -12,7 +12,9 @@ mod par;
 
 pub use bench::{bench, updates_per_sec, BenchArgs, BenchStats};
 pub use kv::{parse_kv, KvConfig};
-pub use par::{chunk_per_worker, num_threads, par_map};
+pub use par::{
+    chunk_per_worker, num_threads, par_map, plan_run_threads, threads_from_env, CELLS_PER_THREAD,
+};
 
 #[cfg(test)]
 mod tests;

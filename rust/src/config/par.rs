@@ -2,9 +2,49 @@
 //! set). Work is chunked over `num_threads()` workers; order of results
 //! matches input order.
 
-/// Number of worker threads (available parallelism, capped at 16).
+/// Number of worker threads: the `SSQA_THREADS` environment variable
+/// when set to a positive integer (clamped to 1..=64 — CI pins
+/// `SSQA_THREADS=1` for its deterministic single-thread leg), otherwise
+/// available parallelism capped at 16. Unparsable values fall back to
+/// the detected default.
 pub fn num_threads() -> usize {
+    if let Some(n) = threads_from_env(std::env::var("SSQA_THREADS").ok().as_deref()) {
+        return n;
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Parse an `SSQA_THREADS` value: positive integers clamp to 1..=64,
+/// anything else (unset, garbage, zero) defers to the detected default.
+/// Pure — unit-testable without mutating process environment (a
+/// getenv/setenv race in a threaded test runner is UB on glibc).
+pub fn threads_from_env(value: Option<&str>) -> Option<usize> {
+    value.and_then(|v| v.trim().parse::<usize>().ok()).filter(|&n| n >= 1).map(|n| n.min(64))
+}
+
+/// Minimum N×R cells a run must have per *additional* kernel thread
+/// before per-run threading pays for the per-step fork/join of the
+/// scoped pool (measured in `benches/step_kernel.rs`; below this the
+/// lane-vectorized single-thread kernel wins).
+pub const CELLS_PER_THREAD: usize = 2048;
+
+/// Nested-parallelism policy (DESIGN.md §7): how many threads **one
+/// run's** step kernel may use when `concurrent` runs execute at once on
+/// a pool of `pool_workers` threads.
+///
+/// Two guarantees, for any inputs (including `concurrent > pool_workers`
+/// and zero-size problems):
+///
+/// * never oversubscribes: `concurrent × result ≤
+///   pool_workers.max(concurrent)` — when the seed fan-out already fills
+///   the pool, every run stays single-threaded;
+/// * never splits tiny runs: the result is capped at
+///   `cells / CELLS_PER_THREAD`, so a small N×R runs the
+///   single-threaded lane kernel even on an idle pool.
+pub fn plan_run_threads(pool_workers: usize, concurrent: usize, cells: usize) -> usize {
+    let spare = (pool_workers / concurrent.max(1)).max(1);
+    let by_size = (cells / CELLS_PER_THREAD).max(1);
+    spare.min(by_size).min(16)
 }
 
 /// Split `items` into one contiguous chunk per worker (at most

@@ -61,6 +61,74 @@ fn chunk_per_worker_covers_all_items_in_order() {
 }
 
 #[test]
+fn chunk_per_worker_edge_cases_cannot_drop_items() {
+    // workers > items: one chunk per item, nothing dropped
+    let items: Vec<u32> = (0..3).collect();
+    let chunks: Vec<&[u32]> = chunk_per_worker(&items, 50).collect();
+    assert_eq!(chunks.len(), 3);
+    assert_eq!(chunks.concat(), items);
+    // zero items, any workers: no chunks (and no panic)
+    let empty: Vec<u32> = vec![];
+    assert_eq!(chunk_per_worker(&empty, 0).count(), 0);
+    assert_eq!(chunk_per_worker(&empty, 7).count(), 0);
+    // one worker: a single chunk carrying everything
+    let items: Vec<u32> = (0..9).collect();
+    let chunks: Vec<&[u32]> = chunk_per_worker(&items, 1).collect();
+    assert_eq!(chunks.len(), 1);
+    assert_eq!(chunks[0], &items[..]);
+}
+
+#[test]
+fn plan_run_threads_never_oversubscribes_or_panics() {
+    let big = 100 * CELLS_PER_THREAD;
+    // spare workers go to the run, capped by problem size
+    assert_eq!(plan_run_threads(8, 1, big), 8);
+    assert_eq!(plan_run_threads(8, 2, big), 4);
+    assert_eq!(plan_run_threads(8, 3, big), 2);
+    // fan-out already fills (or overfills) the pool: stay serial
+    assert_eq!(plan_run_threads(8, 8, big), 1);
+    assert_eq!(plan_run_threads(8, 100, big), 1);
+    assert_eq!(plan_run_threads(4, 9, big), 1);
+    // small problems stay serial even on an idle pool
+    assert_eq!(plan_run_threads(16, 1, CELLS_PER_THREAD - 1), 1);
+    assert_eq!(plan_run_threads(16, 1, 2 * CELLS_PER_THREAD), 2);
+    // degenerate inputs: no division by zero, result always ≥ 1
+    assert_eq!(plan_run_threads(0, 0, 0), 1);
+    assert_eq!(plan_run_threads(0, 5, big), 1);
+    // hard cap at 16 threads per run
+    assert_eq!(plan_run_threads(1000, 1, usize::MAX / 2), 16);
+    // the no-oversubscription invariant over a grid
+    for workers in [1usize, 2, 3, 4, 8, 16] {
+        for concurrent in [1usize, 2, 3, 5, 8, 32] {
+            let t = plan_run_threads(workers, concurrent, big);
+            assert!(t >= 1);
+            assert!(
+                concurrent * t <= workers.max(concurrent),
+                "workers={workers} concurrent={concurrent} → t={t} oversubscribes"
+            );
+        }
+    }
+}
+
+#[test]
+fn num_threads_env_pin_parsing() {
+    // the pure parser is tested directly — set_var in a threaded test
+    // runner would race concurrent getenv callers (UB on glibc)
+    assert_eq!(threads_from_env(Some("1")), Some(1));
+    assert_eq!(threads_from_env(Some("3")), Some(3));
+    assert_eq!(threads_from_env(Some(" 8 ")), Some(8), "whitespace tolerated");
+    // clamped to the 64-thread cap
+    assert_eq!(threads_from_env(Some("9999")), Some(64));
+    // unset, zero and garbage all defer to the detected default
+    assert_eq!(threads_from_env(None), None);
+    assert_eq!(threads_from_env(Some("0")), None);
+    assert_eq!(threads_from_env(Some("zero")), None);
+    assert_eq!(threads_from_env(Some("")), None);
+    // and the detected default is always at least one worker
+    assert!(num_threads() >= 1);
+}
+
+#[test]
 fn par_map_is_actually_parallel_safe() {
     // hammer with tiny tasks to stress the index claiming
     let items: Vec<u64> = (0..10_000).collect();

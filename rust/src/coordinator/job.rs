@@ -79,12 +79,16 @@ pub struct Job {
     pub backend: Option<super::BackendKind>,
     /// Convergence-aware early stopping (software SSQA backend only).
     pub early_stop: Option<MonitorConfig>,
+    /// Step-kernel threads for this run (software backends). `None`
+    /// lets the pool apply the router's nested-parallelism policy at
+    /// submission; results are bit-identical for any value.
+    pub threads: Option<usize>,
 }
 
 impl Job {
     pub fn new(id: u64, spec: JobSpec, steps: usize, seed: u32) -> Self {
         let params = SsqaParams::gset_default(steps);
-        Self { id, spec, params, steps, seed, backend: None, early_stop: None }
+        Self { id, spec, params, steps, seed, backend: None, early_stop: None, threads: None }
     }
 }
 
@@ -102,6 +106,11 @@ pub struct BatchJob {
     pub backend: Option<super::BackendKind>,
     /// Convergence-aware early stopping (software SSQA backend only).
     pub early_stop: Option<MonitorConfig>,
+    /// Per-run step-kernel threads (software backends). `None` lets the
+    /// pool apply the router's nested-parallelism policy: the seed
+    /// fan-out claims workers first, and each run threads over whatever
+    /// the fan-out left idle — `solve runs=N` never oversubscribes.
+    pub threads: Option<usize>,
 }
 
 impl BatchJob {
@@ -109,7 +118,7 @@ impl BatchJob {
     /// assigns one fresh id per chunk and returns them.
     pub fn new(spec: JobSpec, steps: usize, seeds: Vec<u32>) -> Self {
         let params = SsqaParams::gset_default(steps);
-        Self { spec, params, steps, seeds, backend: None, early_stop: None }
+        Self { spec, params, steps, seeds, backend: None, early_stop: None, threads: None }
     }
 
     /// Batch over the standard sweep seeds (`run_seed(seed0, 0..runs)`,
@@ -132,6 +141,9 @@ pub(crate) struct BatchChunk {
     pub steps: usize,
     pub seeds: Vec<u32>,
     pub early_stop: Option<MonitorConfig>,
+    /// Step-kernel threads each of this chunk's runs may use (resolved
+    /// by the pool's nested-parallelism policy at submission).
+    pub run_threads: usize,
     pub problem: Arc<dyn Problem>,
     pub model: Arc<IsingModel>,
 }
@@ -294,14 +306,18 @@ impl BackendInstance {
         params: SsqaParams,
         n: usize,
         steps: usize,
+        run_threads: usize,
     ) -> crate::Result<Self> {
         use crate::annealer::{SaEngine, SsaEngine, SsaParams, SsqaEngine};
         use crate::hw::{HwConfig, HwEngine};
 
         Ok(match backend {
-            super::BackendKind::Software => Self::Software(SsqaEngine::new(params, steps)),
+            super::BackendKind::Software => {
+                Self::Software(SsqaEngine::new(params, steps).with_threads(run_threads))
+            }
             super::BackendKind::SoftwareSsa => {
-                Self::Ssa(SsaEngine::new(SsaParams::gset_default(), steps))
+                let eng = SsaEngine::new(SsaParams::gset_default(), steps);
+                Self::Ssa(eng.with_threads(run_threads))
             }
             super::BackendKind::SoftwareSa => Self::Sa(SaEngine::gset_default()),
             super::BackendKind::HwSim(delay) => {
@@ -347,6 +363,7 @@ pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
         steps: job.steps,
         seeds: vec![job.seed],
         early_stop: job.early_stop,
+        run_threads: job.threads.unwrap_or(1).max(1),
         problem: Arc::clone(job.spec.problem()),
         model: job.spec.model(),
     };
@@ -371,7 +388,7 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
     let sense = problem.sense();
     let n = chunk.model.n();
     let mut modeled_energy_j: Option<f64> = None;
-    let build = BackendInstance::build(backend, chunk.params, n, chunk.steps);
+    let build = BackendInstance::build(backend, chunk.params, n, chunk.steps, chunk.run_threads);
     let results: Vec<RunResult> = match build {
         Err(e) => {
             return JobOutcome::failed(

@@ -101,11 +101,24 @@ impl WorkerPool {
 
     /// Queue a job; returns its id. Explicit (nonzero) ids must be
     /// unique among in-flight work — `0` auto-assigns a fresh one.
+    ///
+    /// A job without an explicit `threads` gets the router's
+    /// nested-parallelism plan here, counting the work already in
+    /// flight as concurrent runs (thread count never changes results).
     pub fn submit(&self, mut job: Job) -> u64 {
         if job.id == 0 {
             job.id = self.fresh_id();
         }
         let backend = self.router.route(&job);
+        if job.threads.is_none() {
+            let concurrent = lock_clean(&self.pending).len() + 1;
+            job.threads = Some(self.router.plan_run_threads(
+                self.workers(),
+                concurrent,
+                job.spec.num_vars(),
+                job.params.replicas,
+            ));
+        }
         let id = job.id;
         self.dispatch(id, WorkItem::Single(job), backend);
         id
@@ -125,8 +138,22 @@ impl WorkerPool {
         let backend = self.router.route_batch(&batch, model.n());
         let label = batch.spec.label();
         let kind = batch.spec.kind();
+        let chunks: Vec<&[u32]> =
+            crate::config::chunk_per_worker(&batch.seeds, self.workers()).collect();
+        // nested-parallelism policy: the chunk fan-out (plus whatever is
+        // already in flight) claims workers first; each run threads its
+        // step kernel over the remainder only
+        let run_threads = batch.threads.map(|t| t.max(1)).unwrap_or_else(|| {
+            let concurrent = lock_clean(&self.pending).len() + chunks.len();
+            self.router.plan_run_threads(
+                self.workers(),
+                concurrent,
+                model.n(),
+                batch.params.replicas,
+            )
+        });
         let mut ids = Vec::new();
-        for seeds in crate::config::chunk_per_worker(&batch.seeds, self.workers()) {
+        for seeds in chunks {
             let id = self.fresh_id();
             let chunk = BatchChunk {
                 id,
@@ -136,6 +163,7 @@ impl WorkerPool {
                 steps: batch.steps,
                 seeds: seeds.to_vec(),
                 early_stop: batch.early_stop,
+                run_threads,
                 problem: Arc::clone(&problem),
                 model: Arc::clone(&model),
             };

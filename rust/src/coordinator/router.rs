@@ -94,6 +94,23 @@ impl Router {
         BackendKind::Software
     }
 
+    /// Nested-parallelism policy (DESIGN.md §7): per-run step-kernel
+    /// threads for a run of `n × replicas` cells when `concurrent` runs
+    /// share a pool of `pool_workers` workers. Per-seed fan-out claims
+    /// workers first; per-run threading only uses what it left idle, so
+    /// `solve runs=N` never oversubscribes. Thread count never changes
+    /// results (the kernel's determinism contract) — this is purely a
+    /// wall-clock decision.
+    pub fn plan_run_threads(
+        &self,
+        pool_workers: usize,
+        concurrent: usize,
+        n: usize,
+        replicas: usize,
+    ) -> usize {
+        crate::config::plan_run_threads(pool_workers, concurrent, n * replicas)
+    }
+
     /// Policy decision for a problem shape (n spins, r replicas).
     fn route_shape(&self, n: usize, replicas: usize) -> BackendKind {
         match self.policy {

@@ -7,6 +7,9 @@
 //! ```text
 //! solve [problem=maxcut] <instance keys> [steps=500] [seed=1]
 //!       [backend=sw|ssa|sa|hw|pjrt] [replicas=R] [runs=N] [early_stop=1]
+//!       [par=T]                      — per-run step-kernel threads
+//!                                      (default: router policy; results
+//!                                      are identical for any T)
 //! tune  [problem=maxcut] <instance keys> [tuner_seed=7] [candidates=8]
 //!       [seeds=3] [quick=1]
 //! metrics
@@ -114,6 +117,17 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
                 return Err(anyhow!("runs= must be in 1..=4096, got {runs}"));
             }
             let replicas: Option<usize> = take_opt(&mut f, "replicas")?;
+            if let Some(r) = replicas {
+                if !(1..=4096).contains(&r) {
+                    return Err(anyhow!("replicas= must be in 1..=4096, got {r}"));
+                }
+            }
+            let par: Option<usize> = take_opt(&mut f, "par")?;
+            if let Some(t) = par {
+                if !(1..=64).contains(&t) {
+                    return Err(anyhow!("par= must be in 1..=64, got {t}"));
+                }
+            }
             let backend = match f.remove("backend") {
                 None => None,
                 Some(v) => Some(
@@ -127,6 +141,7 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
             let mut req = SolveRequest::new(problem).steps(steps).seed(seed).runs(runs);
             req.backend = backend;
             req.replicas = replicas;
+            req.threads = par;
             if early_stop != 0 {
                 req = req.early_stop(crate::tuner::MonitorConfig::default());
             }

@@ -319,6 +319,71 @@ fn outcome_spin_update_accounting() {
     pool.shutdown();
 }
 
+#[test]
+fn batch_threads_override_is_bit_exact_with_policy_default() {
+    // the nested-parallelism policy is a wall-clock decision only:
+    // pinned thread counts and the router default must produce
+    // identical outcomes seed-for-seed
+    let g = torus_2d(4, 6, true, 5);
+    let seeds: Vec<u32> = (0..5u32).map(|i| 11 + i * 7).collect();
+    let run = |threads: Option<usize>| {
+        let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+        let mut batch = BatchJob::new(JobSpec::inline_graph(g.clone()), 25, seeds.clone());
+        batch.params.replicas = 4;
+        batch.threads = threads;
+        pool.submit_batch(batch);
+        let mut o = pool.drain();
+        o.sort_by_key(|o| o.id);
+        o
+    };
+    let a = run(None);
+    let b = run(Some(3));
+    let c = run(Some(1));
+    assert_eq!(a.len(), b.len());
+    for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+        assert_eq!(x.best_energy, y.best_energy);
+        assert_eq!(x.best_sigma, y.best_sigma);
+        assert_eq!(x.replica_energies, y.replica_energies);
+        assert_eq!(x.best_energy, z.best_energy);
+        assert_eq!(x.best_sigma, z.best_sigma);
+    }
+}
+
+#[test]
+fn router_plan_run_threads_policy() {
+    let r = Router::new(RoutingPolicy::AllSoftware);
+    // paper operating point on an idle 8-worker pool: threads allowed
+    assert!(r.plan_run_threads(8, 1, 800, 20) > 1);
+    // a wide seed fan-out claims the pool: runs stay single-threaded
+    assert_eq!(r.plan_run_threads(8, 8, 800, 20), 1);
+    assert_eq!(r.plan_run_threads(8, 100, 800, 20), 1);
+    // tiny problems stay single-threaded even on an idle pool
+    assert_eq!(r.plan_run_threads(8, 1, 24, 4), 1);
+}
+
+#[test]
+fn protocol_par_key_is_validated_and_bit_exact() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    let base = handle_request(&pool, "solve graph=G11 steps=5 seed=1 replicas=4").unwrap();
+    let par2 = handle_request(&pool, "solve graph=G11 steps=5 seed=1 replicas=4 par=2").unwrap();
+    // identical energies/objectives regardless of par= (strip wall/id)
+    let field = |resp: &str, key: &str| {
+        resp.split_whitespace()
+            .find_map(|t| t.strip_prefix(key).map(str::to_string))
+            .unwrap_or_else(|| panic!("{key} missing in {resp}"))
+    };
+    assert_eq!(field(&base, "objective="), field(&par2, "objective="));
+    assert_eq!(field(&base, "energy="), field(&par2, "energy="));
+    let err = handle_request(&pool, "solve graph=G11 par=0").unwrap_err().to_string();
+    assert!(err.contains("par="), "{err}");
+    let err = handle_request(&pool, "solve graph=G11 par=65").unwrap_err().to_string();
+    assert!(err.contains("par="), "{err}");
+    // replicas=0 must be rejected at the protocol edge, not reach the
+    // kernel as a degenerate shape
+    let err = handle_request(&pool, "solve graph=G11 replicas=0").unwrap_err().to_string();
+    assert!(err.contains("replicas="), "{err}");
+}
+
 fn tiny_tune_job() -> TuneJob {
     let g = torus_2d(4, 8, true, 0xC0);
     let mut job = TuneJob::new(JobSpec::inline_graph(g), 11);

@@ -1,0 +1,273 @@
+//! The step-parallel Eq. (6) kernel (DESIGN.md §7).
+//!
+//! Within one annealing step every cell update reads only *delayed*
+//! state — σ(t) from the inactive bank and σ(t−1) from the two-step
+//! delay line — so all N×R cells of a step are data-independent (this is
+//! exactly why the hardware can run R replica gates in lock-step). The
+//! kernel exploits that in software:
+//!
+//! * **Lane axis**: the replica axis is the innermost, contiguous axis
+//!   of the row-major `[spin][replica]` layout. Every per-row loop below
+//!   is written over fixed-width [`LANES`]-wide `i32` chunks so stable
+//!   Rust reliably autovectorizes it; the remainder lanes run scalar.
+//! * **Thread axis**: spin rows are split into one contiguous block per
+//!   worker and executed on a scoped `std::thread` pool. Each worker
+//!   owns a disjoint row block of σ(t−1)/`Is`/RNG state and its own
+//!   scratch rows, so the partition needs no locks and no merge step —
+//!   results land in place.
+//!
+//! **Determinism contract**: every cell's arithmetic chain (field
+//! accumulation in CSR column order, one RNG advance, Eq. 6a–c through
+//! the shared [`CellUpdate`]) is identical to the scalar reference path
+//! cell-for-cell, and no reduction ever crosses cells. The kernel is
+//! therefore bit-identical to [`crate::annealer::SsqaEngine::step`] for
+//! **any** thread count — proven by `tests/step_kernel_diff.rs` and the
+//! committed step-trace fixture.
+
+use super::scratch::StepScratch;
+use super::CellUpdate;
+use crate::graph::IsingModel;
+use crate::rng::{draw_slice_pm1, RngMatrix};
+
+/// Fixed vector width of the replica lanes (i32 elements). 8×i32 fills
+/// a 256-bit register; narrower targets simply unroll.
+pub const LANES: usize = 8;
+
+/// Hard cap on kernel threads per run — beyond this the per-step
+/// fork/join swamps any speedup, and an unchecked library caller must
+/// not be able to spawn thousands of scoped threads per step.
+pub const MAX_KERNEL_THREADS: usize = 64;
+
+/// Which implementation of the Eq. (6) step an engine drives.
+///
+/// Every variant is bit-identical to every other (the determinism
+/// contract above); they differ only in wall-clock cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKernel {
+    /// The scalar cell-at-a-time reference (the seed implementation).
+    /// Kept as the differential-testing baseline.
+    Scalar,
+    /// Lane-vectorized replica axis, spin rows blocked across `threads`
+    /// scoped workers. `threads: 1` vectorizes on the calling thread
+    /// without spawning.
+    Lanes {
+        /// Worker threads for the row blocks (clamped to ≥ 1 and to N).
+        threads: usize,
+    },
+}
+
+impl Default for StepKernel {
+    /// Lane-vectorized, single-threaded: strictly faster than the
+    /// scalar path and safe at any nesting depth.
+    fn default() -> Self {
+        StepKernel::Lanes { threads: 1 }
+    }
+}
+
+impl StepKernel {
+    /// Threads the kernel will occupy (1 for the scalar path), clamped
+    /// to `[1, MAX_KERNEL_THREADS]`.
+    pub fn threads(&self) -> usize {
+        match self {
+            StepKernel::Scalar => 1,
+            StepKernel::Lanes { threads } => (*threads).clamp(1, MAX_KERNEL_THREADS),
+        }
+    }
+
+    /// Display tag for benches and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKernel::Scalar => "scalar",
+            StepKernel::Lanes { threads: 1 } => "lanes",
+            StepKernel::Lanes { .. } => "lanes+threads",
+        }
+    }
+}
+
+/// Per-worker scratch rows for the step-parallel kernel: one
+/// [`StepScratch`] per thread (the serial paths use slot 0). Hoisted out
+/// of the step loop like `StepScratch` itself — `ensure` is a no-op once
+/// sized, so the hot loop stays allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct KernelScratch {
+    workers: Vec<StepScratch>,
+}
+
+impl KernelScratch {
+    /// Scratch for `threads` workers of `replicas` lanes each.
+    pub fn new(threads: usize, replicas: usize) -> Self {
+        Self {
+            workers: (0..threads.max(1)).map(|_| StepScratch::new(replicas)).collect(),
+        }
+    }
+
+    /// Resize (once, amortized) to at least `threads` workers of
+    /// `replicas` lanes; no-op when already sized.
+    pub fn ensure(&mut self, threads: usize, replicas: usize) {
+        let t = threads.max(1);
+        if self.workers.len() < t {
+            self.workers.resize_with(t, StepScratch::default);
+        }
+        for w in &mut self.workers[..t] {
+            w.ensure(replicas);
+        }
+    }
+
+    /// The calling thread's scratch (slot 0) — the serial paths' view.
+    /// Call [`Self::ensure`] first.
+    pub fn serial(&mut self) -> &mut StepScratch {
+        &mut self.workers[0]
+    }
+}
+
+/// The per-step inputs shared by every row of one kernel invocation.
+#[derive(Clone, Copy)]
+pub struct StepJob<'a> {
+    /// Problem couplings/biases (CSR rows drive the field accumulation).
+    pub model: &'a IsingModel,
+    /// The Eq. (6b/c) cell arithmetic.
+    pub cell: CellUpdate,
+    /// Replica lanes per spin row (R; 1 for single-network SSA).
+    pub replicas: usize,
+    /// Q(t) — replica-coupling magnitude for this step (0 for SSA).
+    pub q_t: i32,
+    /// Noise magnitude n_rnd(t) for this step.
+    pub noise_t: i32,
+}
+
+/// One full Eq. (6) step over all N×R cells.
+///
+/// `sigma` is σ(t) (read-only — the inactive BRAM bank); `sigma_prev`
+/// holds σ(t−1) on entry and σ(t+1) on exit (the caller swaps buffers,
+/// exactly like the scalar path); `is`/`rng` are the accumulators and
+/// per-cell streams, advanced in place. All four are row-major
+/// `[spin][replica]`.
+///
+/// `threads` is clamped to `[1, N]`; the row partition is
+/// `ceil(N / threads)` contiguous rows per worker, and because no cell
+/// reads another cell's in-step output, the result is bit-identical for
+/// every thread count.
+pub fn step_parallel(
+    job: &StepJob<'_>,
+    sigma: &[i32],
+    sigma_prev: &mut [i32],
+    is: &mut [i32],
+    rng: &mut RngMatrix,
+    scratch: &mut KernelScratch,
+    threads: usize,
+) {
+    let n = job.model.n();
+    let r = job.replicas;
+    debug_assert_eq!(sigma.len(), n * r, "sigma shape");
+    debug_assert_eq!(sigma_prev.len(), n * r, "sigma_prev shape");
+    debug_assert_eq!(is.len(), n * r, "is shape");
+    let states = rng.states_mut();
+    debug_assert_eq!(states.len(), n * r, "rng shape");
+    if n == 0 || r == 0 {
+        // degenerate shapes (e.g. an unvalidated replicas=0 request)
+        // are a no-op, exactly like the scalar reference's empty loops
+        return;
+    }
+    let t = threads.clamp(1, n).min(MAX_KERNEL_THREADS);
+    scratch.ensure(t, r);
+    if t <= 1 {
+        step_rows(job, 0, sigma, sigma_prev, is, states, scratch.serial());
+        return;
+    }
+    let rows_per = n.div_ceil(t);
+    let chunk = rows_per * r;
+    std::thread::scope(|scope| {
+        let blocks = sigma_prev
+            .chunks_mut(chunk)
+            .zip(is.chunks_mut(chunk))
+            .zip(states.chunks_mut(chunk))
+            .zip(scratch.workers.iter_mut())
+            .enumerate();
+        for (idx, (((prev_b, is_b), rng_b), sc)) in blocks {
+            let job = *job;
+            scope.spawn(move || {
+                step_rows(&job, idx * rows_per, sigma, prev_b, is_b, rng_b, sc);
+            });
+        }
+    });
+}
+
+/// Update one contiguous block of spin rows starting at global row
+/// `base_row`. `sigma` is the whole σ(t) plane; the `*_b` slices are
+/// this block's rows only.
+fn step_rows(
+    job: &StepJob<'_>,
+    base_row: usize,
+    sigma: &[i32],
+    prev_b: &mut [i32],
+    is_b: &mut [i32],
+    rng_b: &mut [u32],
+    scratch: &mut StepScratch,
+) {
+    let r = job.replicas;
+    let rows = prev_b.len() / r;
+    let StepScratch { acc, prev_row, noise_row } = scratch;
+    let acc = &mut acc[..r];
+    let coupled = &mut prev_row[..r];
+    let noise = &mut noise_row[..r];
+    for li in 0..rows {
+        let i = base_row + li;
+        let row = li * r;
+        // Eq. (6a) field: Σ_j J_ij σ_j,k(t) + h_i, all lanes at once,
+        // CSR column order (identical order to the scalar reference)
+        acc.fill(job.model.h[i]);
+        let (cols, vals) = job.model.j_sparse().row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            let base = *c as usize * r;
+            axpy_lanes(acc, *v, &sigma[base..base + r]);
+        }
+        let out = &mut prev_b[row..row + r];
+        // latch the rotated coupling row σ_{i,(k+1) mod R}(t−1) before
+        // the in-place overwrite (the READ_FIRST collision of the
+        // dual-BRAM write bank)
+        rotate_left1(coupled, out);
+        // one RNG advance per cell, this row's streams only
+        draw_slice_pm1(&mut rng_b[row..row + r], noise);
+        // Eq. (6a–c) across the lanes, through the one shared CellUpdate
+        let is_row = &mut is_b[row..row + r];
+        let lanes = acc.iter().zip(noise.iter()).zip(coupled.iter());
+        for (((&field, &rnd), &up), (is_cell, o)) in
+            lanes.zip(is_row.iter_mut().zip(out.iter_mut()))
+        {
+            let inp = CellUpdate::input(field, job.noise_t, rnd, job.q_t, up);
+            *o = job.cell.apply(is_cell, inp);
+        }
+    }
+}
+
+/// `acc[k] += w · src[k]` over fixed-width lanes (the MAC of the R
+/// replica gates). Chunked so stable rustc emits vector FMAs; remainder
+/// lanes run scalar with the identical per-element arithmetic.
+#[inline]
+fn axpy_lanes(acc: &mut [i32], w: i32, src: &[i32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let mut a_it = acc.chunks_exact_mut(LANES);
+    let mut s_it = src.chunks_exact(LANES);
+    for (a, s) in (&mut a_it).zip(&mut s_it) {
+        // fixed-size view: the compiler sees LANES-wide arrays and emits
+        // one vector multiply-add per chunk
+        let a: &mut [i32; LANES] = a.try_into().expect("chunk width");
+        let s: &[i32; LANES] = s.try_into().expect("chunk width");
+        for (x, y) in a.iter_mut().zip(s.iter()) {
+            *x += w * *y;
+        }
+    }
+    for (a, s) in a_it.into_remainder().iter_mut().zip(s_it.remainder()) {
+        *a += w * *s;
+    }
+}
+
+/// `dst[k] = src[(k + 1) mod R]` — the replica-coupling ring read,
+/// materialized once per row so the lane loop stays branch-free.
+#[inline]
+fn rotate_left1(dst: &mut [i32], src: &[i32]) {
+    let r = src.len();
+    debug_assert_eq!(dst.len(), r);
+    dst[..r - 1].copy_from_slice(&src[1..]);
+    dst[r - 1] = src[0];
+}

@@ -21,9 +21,16 @@
 //! [`StepScratch`] carries the per-row working buffers (accumulator,
 //! delayed-σ latch, noise draws) so hot loops run allocation-free, and
 //! [`init_sigma`]/[`harvest`] are the shared run-boundary conventions.
+//!
+//! [`step_parallel`] (the [`kernel`] module) is the step-parallel form
+//! of the same datapath: replica lanes vectorized, spin rows blocked
+//! across scoped threads, bit-identical to the scalar reference for any
+//! thread count (DESIGN.md §7).
 
+pub mod kernel;
 mod scratch;
 
+pub use kernel::{step_parallel, KernelScratch, StepJob, StepKernel, LANES, MAX_KERNEL_THREADS};
 pub use scratch::StepScratch;
 
 use crate::graph::IsingModel;

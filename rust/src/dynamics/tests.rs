@@ -101,3 +101,79 @@ fn scratch_resizes_once_and_reports_capacity() {
     s.ensure(9);
     assert_eq!((s.acc.len(), s.prev_row.len(), s.noise_row.len()), (9, 9, 9));
 }
+
+#[test]
+fn step_kernel_selection_surface() {
+    assert_eq!(StepKernel::default(), StepKernel::Lanes { threads: 1 });
+    assert_eq!(StepKernel::Scalar.threads(), 1);
+    assert_eq!(StepKernel::Lanes { threads: 0 }.threads(), 1, "clamped to ≥ 1");
+    assert_eq!(StepKernel::Lanes { threads: 5 }.threads(), 5);
+    assert_eq!(
+        StepKernel::Lanes { threads: 10_000 }.threads(),
+        MAX_KERNEL_THREADS,
+        "capped — a library caller must not spawn thousands of scoped threads per step"
+    );
+    assert_eq!(StepKernel::Scalar.name(), "scalar");
+    assert_eq!(StepKernel::Lanes { threads: 1 }.name(), "lanes");
+    assert_eq!(StepKernel::Lanes { threads: 4 }.name(), "lanes+threads");
+}
+
+#[test]
+fn kernel_scratch_sizes_per_worker() {
+    let mut s = KernelScratch::new(3, 4);
+    s.ensure(3, 4); // no-op
+    assert_eq!(s.serial().replicas(), 4);
+    // growing either axis reallocates once, lazily
+    s.ensure(5, 6);
+    assert_eq!(s.serial().replicas(), 6);
+    // degenerate: zero threads still yields a usable serial slot
+    let mut z = KernelScratch::new(0, 2);
+    z.ensure(0, 2);
+    assert_eq!(z.serial().replicas(), 2);
+}
+
+/// Direct kernel invocation vs the scalar Eq. (6) arithmetic on one
+/// step, threads exceeding N included (the in-module smoke version of
+/// `tests/step_kernel_diff.rs`).
+#[test]
+fn step_parallel_single_step_matches_scalar_cells() {
+    use crate::rng::RngMatrix;
+    let g = random_graph(9, 16, &[-2, -1, 1, 2], 11);
+    let model = maxcut::ising_from_graph(&g, 4);
+    let (n, r) = (9usize, 3usize);
+    let cell = CellUpdate::new(20, 1);
+    let (q_t, noise_t) = (5, 7);
+
+    // scalar reference: the exact per-cell chain
+    let rng0 = RngMatrix::seeded(77, n, r);
+    let mut ref_rng = rng0.clone();
+    let sigma = init_sigma(&rng0);
+    let mut ref_prev = sigma.clone();
+    let mut ref_is = vec![0i32; n * r];
+    for i in 0..n {
+        let mut prev_row = [0i32; 3];
+        prev_row.copy_from_slice(&ref_prev[i * r..i * r + r]);
+        for k in 0..r {
+            let (cols, vals) = model.j_sparse().row(i);
+            let mut field = model.h[i];
+            for (c, v) in cols.iter().zip(vals) {
+                field += *v * sigma[*c as usize * r + k];
+            }
+            let rnd = ref_rng.draw_pm1(i, k);
+            let inp = CellUpdate::input(field, noise_t, rnd, q_t, prev_row[(k + 1) % r]);
+            ref_prev[i * r + k] = cell.apply(&mut ref_is[i * r + k], inp);
+        }
+    }
+
+    for threads in [1usize, 2, 4, 100] {
+        let mut rng = rng0.clone();
+        let mut prev = sigma.clone();
+        let mut is = vec![0i32; n * r];
+        let mut scratch = KernelScratch::new(threads, r);
+        let job = StepJob { model: &model, cell, replicas: r, q_t, noise_t };
+        step_parallel(&job, &sigma, &mut prev, &mut is, &mut rng, &mut scratch, threads);
+        assert_eq!(prev, ref_prev, "threads={threads}: σ(t+1)");
+        assert_eq!(is, ref_is, "threads={threads}: Is");
+        assert_eq!(rng.states(), ref_rng.states(), "threads={threads}: rng");
+    }
+}

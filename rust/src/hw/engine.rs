@@ -137,6 +137,16 @@ impl HwEngine {
         while !sched.done() {
             let q_t = sched.q_now();
             let noise_t = sched.noise_now();
+            // the scheduler must feed exactly the software engines'
+            // schedule sequence — the cross-layer bit-exactness contract
+            // starts here (see hw::tests::scheduler_feeds_engine_schedules)
+            debug_assert_eq!(q_t, params.q.at(sched.t), "scheduler Q(t) diverged at t={}", sched.t);
+            debug_assert_eq!(
+                noise_t,
+                params.noise.at(sched.t, steps),
+                "scheduler noise(t) diverged at t={}",
+                sched.t
+            );
             for i in 0..n {
                 // ---- interaction scan ----------------------------------
                 // sparse skip (§4.4): only incident weights are visited —

@@ -188,6 +188,27 @@ mod rng_block {
 }
 
 #[test]
+fn scheduler_feeds_engine_schedules() {
+    // the tentpole assertion: the hw scheduler's (Q, noise) sequence is
+    // exactly the sequence the software engines evaluate — same
+    // integer arithmetic, same horizon semantics — for every step of a
+    // run (the in-loop debug_asserts in HwEngine::run enforce this on
+    // every debug execution; this test pins it in release too)
+    let steps = 37;
+    let p = params(steps);
+    let sw = SsqaEngine::new(p, steps);
+    let horizon = sw.schedule_horizon(steps);
+    let mut sched = Scheduler::new(p.q, p.noise, steps);
+    for t in 0..steps {
+        assert!(!sched.done());
+        assert_eq!(sched.q_now(), p.q.at(t), "Q(t) at t={t}");
+        assert_eq!(sched.noise_now(), p.noise.at(t, horizon), "noise(t) at t={t}");
+        sched.step_boundary();
+    }
+    assert!(sched.done());
+}
+
+#[test]
 fn cycles_formula_matches_paper_g11_case() {
     // G11 class: k = 4 → 800 × 5 cycles per step (§4.4)
     let g = torus_2d(20, 40, true, 1);

@@ -121,6 +121,7 @@ fn print_help() {
          \x20               graphiso:  --nodes 8 [--edges M] [--pseed S]\n\
          \x20               partition: --n 20 [--maxv 9] [--pseed S]\n\
          \x20             [--steps 500] [--seed 1] [--runs 1] [--replicas R]\n\
+         \x20             [--threads T]  (per-run step-kernel threads; default: auto)\n\
          \x20             [--backend sw|ssa|sa|hw|hw-shift-reg|pjrt]\n\
          \x20             [--tune [--tuner-seed 7]] [--early-stop]\n\
          \x20 tune        [--problem <kind>] <instance keys as for solve>\n\
@@ -141,6 +142,13 @@ fn cmd_solve(mut f: BTreeMap<String, String>) -> Result<()> {
     let runs: usize = take(&mut f, "runs", 1)?;
     anyhow::ensure!(runs >= 1, "--runs must be at least 1");
     let replicas: Option<usize> = take_opt(&mut f, "replicas")?;
+    if let Some(r) = replicas {
+        anyhow::ensure!((1..=4096).contains(&r), "--replicas must be in 1..=4096, got {r}");
+    }
+    let threads: Option<usize> = take_opt(&mut f, "threads")?;
+    if let Some(t) = threads {
+        anyhow::ensure!((1..=64).contains(&t), "--threads must be in 1..=64, got {t}");
+    }
     let backend = match f.remove("backend") {
         None => None,
         Some(v) => {
@@ -158,6 +166,7 @@ fn cmd_solve(mut f: BTreeMap<String, String>) -> Result<()> {
     let mut req = SolveRequest::new(problem).steps(steps).seed(seed).runs(runs);
     req.backend = backend;
     req.replicas = replicas;
+    req.threads = threads;
     if tune {
         req = req.auto_tune(tuner_seed);
     }

@@ -11,7 +11,7 @@
 
 mod xorshift;
 
-pub use xorshift::{splitmix32, RngMatrix, Xorshift32, Xorshift64Star};
+pub use xorshift::{draw_slice_pm1, splitmix32, RngMatrix, Xorshift32, Xorshift64Star};
 
 #[cfg(test)]
 mod tests;

@@ -90,6 +90,29 @@ fn rng_matrix_cells_are_independent_streams() {
 }
 
 #[test]
+fn draw_slice_is_the_same_stream_as_cellwise_draws() {
+    // the kernel's disjoint-block form, the row form and the per-cell
+    // form all advance the identical streams
+    let mut a = RngMatrix::seeded(31, 6, 5);
+    let mut b = RngMatrix::seeded(31, 6, 5);
+    let mut c = RngMatrix::seeded(31, 6, 5);
+    for step in 0..4 {
+        let mut via_row = vec![0i32; 5];
+        let mut via_slice = vec![0i32; 6 * 5];
+        draw_slice_pm1(c.states_mut(), &mut via_slice);
+        for i in 0..6 {
+            a.draw_row_pm1(i, &mut via_row);
+            for k in 0..5 {
+                assert_eq!(via_row[k], b.draw_pm1(i, k), "step {step} cell ({i},{k})");
+                assert_eq!(via_row[k], via_slice[i * 5 + k], "step {step} cell ({i},{k})");
+            }
+        }
+        assert_eq!(a.states(), b.states(), "step {step}");
+        assert_eq!(a.states(), c.states(), "step {step}");
+    }
+}
+
+#[test]
 fn rng_matrix_snapshot_roundtrip() {
     let mut m = RngMatrix::seeded(99, 5, 4);
     for i in 0..5 {

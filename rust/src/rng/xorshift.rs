@@ -135,17 +135,10 @@ impl RngMatrix {
     /// Advance cell (i, k) one step and return its ±1 draw.
     #[inline(always)]
     pub fn draw_pm1(&mut self, i: usize, k: usize) -> i32 {
-        let s = &mut self.states[i * self.r + k];
-        let mut x = *s;
-        x ^= x << 13;
-        x ^= x >> 17;
-        x ^= x << 5;
-        *s = x;
-        if x >> 31 == 1 {
-            -1
-        } else {
-            1
-        }
+        let idx = i * self.r + k;
+        let mut out = [0i32; 1];
+        draw_slice_pm1(&mut self.states[idx..idx + 1], &mut out);
+        out[0]
     }
 
     /// Advance every cell of spin-row `i` once, writing the ±1 draws
@@ -153,21 +146,20 @@ impl RngMatrix {
     /// — identical stream values, used by the engine hot loop.
     #[inline]
     pub fn draw_row_pm1(&mut self, i: usize, out: &mut [i32]) {
-        let row = &mut self.states[i * self.r..(i + 1) * self.r];
-        debug_assert_eq!(out.len(), row.len());
-        for (s, o) in row.iter_mut().zip(out.iter_mut()) {
-            let mut x = *s;
-            x ^= x << 13;
-            x ^= x >> 17;
-            x ^= x << 5;
-            *s = x;
-            *o = 1 - 2 * (x >> 31) as i32;
-        }
+        draw_slice_pm1(&mut self.states[i * self.r..(i + 1) * self.r], out);
     }
 
     /// Raw state of cell (i, k).
     pub fn state(&self, i: usize, k: usize) -> u32 {
         self.states[i * self.r + k]
+    }
+
+    /// Mutable flat state view (row-major `[spin][replica]`) — the
+    /// step-parallel kernel splits this into disjoint contiguous row
+    /// blocks, one per worker thread, so every cell stream is still
+    /// advanced exactly once per step by exactly one thread.
+    pub fn states_mut(&mut self) -> &mut [u32] {
+        &mut self.states
     }
 
     /// Flat state snapshot (row-major [spin][replica]) — used to hand the
@@ -181,5 +173,23 @@ impl RngMatrix {
     pub fn from_states(n: usize, r: usize, states: Vec<u32>) -> Self {
         assert_eq!(states.len(), n * r, "state snapshot has wrong length");
         Self { n, r, states }
+    }
+}
+
+/// Advance every stream in `states` one xorshift32 step, writing the ±1
+/// draws (MSB convention) into `out`. This is the **one** stream-advance
+/// implementation behind [`RngMatrix::draw_pm1`],
+/// [`RngMatrix::draw_row_pm1`] and the step-parallel kernel's disjoint
+/// row-block split — every caller produces bit-identical streams.
+#[inline]
+pub fn draw_slice_pm1(states: &mut [u32], out: &mut [i32]) {
+    debug_assert_eq!(states.len(), out.len());
+    for (s, o) in states.iter_mut().zip(out.iter_mut()) {
+        let mut x = *s;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        *s = x;
+        *o = 1 - 2 * (x >> 31) as i32;
     }
 }

@@ -1,0 +1,264 @@
+//! Differential bit-exactness harness for the step-parallel kernel
+//! (ISSUE 4): the lane-vectorized / threaded kernel must be
+//! bit-identical to the scalar `CellUpdate` reference path for every
+//! thread count, replica count (including non-powers-of-two and R = 1),
+//! problem size (including non-powers-of-two and N = 1), both
+//! `DelayKind`s of the hardware model, and mid-run `StepObserver` early
+//! stops — identical `sigma`, `sigma_prev`, `Is`, RNG state and
+//! executed-step counts, not merely identical energies.
+//!
+//! Hand-rolled property style (seeded case families, like
+//! `tests/proptests.rs`); failures name the case seed, thread count and
+//! first diverging coordinate.
+
+use ssqa::annealer::{
+    Annealer, NoiseSchedule, QSchedule, SsaEngine, SsaParams, SsaState, SsqaEngine, SsqaParams,
+    SsqaState, StepObserver,
+};
+use ssqa::dynamics::{KernelScratch, StepKernel};
+use ssqa::graph::random_graph;
+use ssqa::hw::{DelayKind, HwConfig, HwEngine};
+use ssqa::problems::maxcut;
+use ssqa::rng::Xorshift64Star;
+
+/// Thread counts the contract is proven for (1 = vectorized-only, plus
+/// counts that divide N unevenly and exceed small N entirely).
+const THREADS: [usize; 4] = [1, 2, 3, 8];
+
+/// Replica counts: R = 1 (SSA degenerate), primes and non-powers-of-two
+/// off the `(k + 1) mod R` fast path, plus the paper's R = 20.
+const REPLICAS: [usize; 8] = [1, 2, 3, 4, 5, 7, 8, 20];
+
+const CASES: u64 = 12;
+
+fn arb_params(rng: &mut Xorshift64Star, steps: usize) -> SsqaParams {
+    SsqaParams {
+        replicas: REPLICAS[rng.next_below(REPLICAS.len())],
+        i0: 8 + rng.next_below(56) as i32,
+        alpha: rng.next_below(2) as i32,
+        noise: NoiseSchedule::Linear {
+            start: 4 + rng.next_below(28) as i32,
+            end: rng.next_below(4) as i32,
+        },
+        q: QSchedule::linear(0, 4 + rng.next_below(28) as i32, steps),
+        j_scale: 1 + rng.next_below(8) as i32,
+    }
+}
+
+/// Assert two engine states are identical cell-for-cell, naming the
+/// first diverging (spin, replica) coordinate.
+fn assert_states_eq(a: &SsqaState, b: &SsqaState, r: usize, ctx: &str) {
+    assert_eq!(a.t, b.t, "{ctx}: step counters diverged");
+    for (name, va, vb) in [
+        ("sigma", &a.sigma, &b.sigma),
+        ("sigma_prev", &a.sigma_prev, &b.sigma_prev),
+        ("is", &a.is, &b.is),
+    ] {
+        for (cell, (x, y)) in va.iter().zip(vb.iter()).enumerate() {
+            assert_eq!(
+                x,
+                y,
+                "{ctx}: {name} diverged at spin {} replica {}",
+                cell / r,
+                cell % r
+            );
+        }
+        assert_eq!(va.len(), vb.len(), "{ctx}: {name} length");
+    }
+    for (cell, (x, y)) in a.rng.states().iter().zip(b.rng.states().iter()).enumerate() {
+        assert_eq!(
+            x,
+            y,
+            "{ctx}: rng stream diverged at spin {} replica {}",
+            cell / r,
+            cell % r
+        );
+    }
+}
+
+/// The tentpole property: for arbitrary problems, parameters and seeds,
+/// the kernel's full final state equals the scalar reference's for every
+/// tested thread count.
+#[test]
+fn prop_kernel_bit_exact_vs_scalar() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x11_0000 + case);
+        // sizes off the power-of-two path, down to a single spin
+        let n = 1 + rng.next_below(33);
+        let max_m = n * (n.max(2) - 1) / 2;
+        let m = rng.next_below(max_m.min(3 * n) + 1).min(max_m);
+        let g = random_graph(n, m, &[-2, -1, 1, 2], rng.next_u64() | 1);
+        let steps = 3 + rng.next_below(25);
+        let p = arb_params(&mut rng, steps);
+        let model = maxcut::ising_from_graph(&g, p.j_scale);
+        let seed = rng.next_u64() as u32;
+
+        let scalar = SsqaEngine::new(p, steps).with_kernel(StepKernel::Scalar);
+        let (ref_state, ref_res) = scalar.run(&model, steps, seed);
+        for threads in THREADS {
+            let eng = SsqaEngine::new(p, steps).with_kernel(StepKernel::Lanes { threads });
+            let (st, res) = eng.run(&model, steps, seed);
+            let ctx = format!("case {case} N={n} R={} threads={threads}", p.replicas);
+            assert_states_eq(&ref_state, &st, p.replicas, &ctx);
+            assert_eq!(ref_res.replica_energies, res.replica_energies, "{ctx}");
+            assert_eq!(ref_res.best_sigma, res.best_sigma, "{ctx}");
+            assert_eq!(ref_res.best_energy, res.best_energy, "{ctx}");
+            assert_eq!(ref_res.steps, res.steps, "{ctx}");
+        }
+    }
+}
+
+/// Early-stopping observer used mid-run: stop after `self.0` steps.
+struct StopAt(usize);
+
+impl StepObserver for StopAt {
+    fn observe(&mut self, t: usize, _state: &SsqaState) -> bool {
+        t + 1 >= self.0
+    }
+}
+
+/// Mid-run early stops through `run_observed` leave identical states and
+/// identical executed-step counts for every kernel — the observer sees
+/// the same trajectory regardless of threading.
+#[test]
+fn prop_kernel_bit_exact_with_observer_early_stop() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x22_0000 + case);
+        let n = 2 + rng.next_below(20);
+        let g = random_graph(n, 1 + rng.next_below(2 * n), &[-1, 1], rng.next_u64() | 1);
+        let steps = 8 + rng.next_below(20);
+        let stop_at = 1 + rng.next_below(steps - 1);
+        let p = arb_params(&mut rng, steps);
+        let model = maxcut::ising_from_graph(&g, p.j_scale);
+        let seed = rng.next_u64() as u32;
+
+        let scalar = SsqaEngine::new(p, steps).with_kernel(StepKernel::Scalar);
+        let (ref_state, ref_res) = scalar.run_observed(&model, steps, seed, &mut StopAt(stop_at));
+        assert_eq!(ref_res.steps, stop_at, "case {case}: observer contract");
+        for threads in THREADS {
+            let eng = SsqaEngine::new(p, steps).with_kernel(StepKernel::Lanes { threads });
+            let (st, res) = eng.run_observed(&model, steps, seed, &mut StopAt(stop_at));
+            let ctx = format!("case {case} stop_at={stop_at} threads={threads}");
+            assert_eq!(res.steps, stop_at, "{ctx}: executed-step count");
+            assert_states_eq(&ref_state, &st, p.replicas, &ctx);
+            assert_eq!(ref_res.replica_energies, res.replica_energies, "{ctx}");
+        }
+    }
+}
+
+/// Batched multi-seed execution through the kernel: every seed's
+/// trajectory matches the scalar batch seed-for-seed, including per-seed
+/// early stops.
+#[test]
+fn prop_kernel_run_batch_bit_exact() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x33_0000 + case);
+        let n = 3 + rng.next_below(24);
+        let g = random_graph(n, 1 + rng.next_below(2 * n), &[-2, 1, 2], rng.next_u64() | 1);
+        let steps = 6 + rng.next_below(16);
+        let stop_at = 2 + rng.next_below(steps - 2);
+        let p = arb_params(&mut rng, steps);
+        let model = maxcut::ising_from_graph(&g, p.j_scale);
+        let seeds: Vec<u32> = (0..2 + rng.next_below(4)).map(|_| rng.next_u64() as u32).collect();
+
+        let scalar = SsqaEngine::new(p, steps).with_kernel(StepKernel::Scalar);
+        let ref_full = scalar.run_batch(&model, steps, &seeds);
+        let ref_stopped =
+            scalar.run_batch_observed(&model, steps, &seeds, &mut StopAt(stop_at));
+        for threads in THREADS {
+            let eng = SsqaEngine::new(p, steps).with_kernel(StepKernel::Lanes { threads });
+            let full = eng.run_batch(&model, steps, &seeds);
+            let stopped = eng.run_batch_observed(&model, steps, &seeds, &mut StopAt(stop_at));
+            for (i, (a, b)) in ref_full.iter().zip(&full).enumerate() {
+                let ctx = format!("case {case} threads={threads} seed#{i}");
+                assert_eq!(a.replica_energies, b.replica_energies, "{ctx}");
+                assert_eq!(a.best_sigma, b.best_sigma, "{ctx}");
+            }
+            for (i, (a, b)) in ref_stopped.iter().zip(&stopped).enumerate() {
+                let ctx = format!("case {case} threads={threads} stopped seed#{i}");
+                assert_eq!(a.steps, stop_at, "{ctx}: per-seed stop");
+                assert_eq!(b.steps, stop_at, "{ctx}: per-seed stop");
+                assert_eq!(a.replica_energies, b.replica_energies, "{ctx}");
+                assert_eq!(a.best_sigma, b.best_sigma, "{ctx}");
+            }
+        }
+    }
+}
+
+/// The threaded kernel stays bit-identical to the cycle-accurate
+/// hardware model for **both** delay architectures — the kernel slots
+/// into the existing cross-layer contract, it doesn't fork it.
+#[test]
+fn prop_kernel_matches_hw_both_delay_kinds() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x44_0000 + case);
+        let n = 4 + rng.next_below(20);
+        let g = random_graph(n, 1 + rng.next_below(3 * n), &[-2, -1, 1, 2], rng.next_u64() | 1);
+        let steps = 4 + rng.next_below(14);
+        let p = arb_params(&mut rng, steps);
+        let model = maxcut::ising_from_graph(&g, p.j_scale);
+        let seed = rng.next_u64() as u32;
+        for threads in THREADS {
+            let eng = SsqaEngine::new(p, steps).with_kernel(StepKernel::Lanes { threads });
+            let (_, sw) = eng.run(&model, steps, seed);
+            for delay in [DelayKind::DualBram, DelayKind::ShiftReg] {
+                let mut hw = HwEngine::new(HwConfig { delay, ..HwConfig::default() }, p);
+                let hwr = hw.run(&model, steps, seed);
+                let ctx = format!("case {case} threads={threads} {delay:?} R={}", p.replicas);
+                assert_eq!(sw.replica_energies, hwr.replica_energies, "{ctx}");
+                assert_eq!(sw.best_sigma, hwr.best_sigma, "{ctx}");
+                assert_eq!(sw.best_energy, hwr.best_energy, "{ctx}");
+            }
+        }
+    }
+}
+
+/// SSA (the R = 1 degenerate case): the kernel path matches the scalar
+/// `step_into` reference step-for-step — spins, accumulators and RNG
+/// streams — and the full `anneal` results agree for every thread count.
+#[test]
+fn prop_ssa_kernel_bit_exact() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x55_0000 + case);
+        let n = 1 + rng.next_below(30);
+        let max_m = n * (n.max(2) - 1) / 2;
+        let m = rng.next_below(max_m.min(3 * n) + 1).min(max_m);
+        let g = random_graph(n, m, &[-1, 1], rng.next_u64() | 1);
+        let model = maxcut::ising_from_graph(&g, 8);
+        let steps = 5 + rng.next_below(40);
+        let seed = rng.next_u64() as u32;
+        let params = SsaParams::gset_default();
+
+        // step-level: drive both paths side by side
+        for threads in THREADS {
+            let eng = SsaEngine::new(params, steps);
+            let mut a = SsaState::init(n, seed);
+            let mut b = SsaState::init(n, seed);
+            let mut next_a = Vec::with_capacity(n);
+            let mut next_b = Vec::with_capacity(n);
+            let mut kscratch = KernelScratch::new(threads, 1);
+            for t in 0..steps {
+                let noise_t = params.noise.at(t, steps);
+                eng.step_into(&model, &mut a, noise_t, &mut next_a);
+                eng.step_kerneled(&model, &mut b, noise_t, &mut next_b, &mut kscratch, threads);
+                let ctx = format!("case {case} threads={threads} step {t}");
+                assert_eq!(a.sigma, b.sigma, "{ctx}: sigma");
+                assert_eq!(a.is, b.is, "{ctx}: is");
+                assert_eq!(a.rng.states(), b.rng.states(), "{ctx}: rng");
+            }
+        }
+
+        // run-level: the Annealer surface agrees too (track_best path)
+        let mut scalar = SsaEngine::new(params, steps);
+        scalar.kernel = StepKernel::Scalar;
+        let ref_res = scalar.anneal(&model, steps, seed);
+        for threads in THREADS {
+            let mut eng = SsaEngine::new(params, steps).with_threads(threads);
+            let res = eng.anneal(&model, steps, seed);
+            let ctx = format!("case {case} threads={threads}");
+            assert_eq!(ref_res.best_energy, res.best_energy, "{ctx}");
+            assert_eq!(ref_res.best_sigma, res.best_sigma, "{ctx}");
+            assert_eq!(ref_res.replica_energies, res.replica_energies, "{ctx}");
+        }
+    }
+}
