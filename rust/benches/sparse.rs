@@ -1,0 +1,149 @@
+//! Sparse-path bench (ISSUE 6 acceptance): the threaded lane kernel vs
+//! the flip-frontier delta kernel across a density sweep — random
+//! 3-regular, ~1%-dense random, and complete graphs — at N ∈ {800, 10k,
+//! 50k}. Both kernels are bit-identical (asserted per shape on a short
+//! run before timing); this bench measures wall-clock and peak RSS.
+//!
+//! Shapes whose nnz exceeds the mode's cap are skipped **loudly** (a
+//! silently-missing row would read as "covered"): the complete graph
+//! only fits at N=800, and the 1% shape at N=50k only in full mode. The
+//! `--quick` cap still admits the 50k 3-regular flagship, which is the
+//! instance class the sparse-first storage exists for.
+//!
+//! Appends one record per shape to `BENCH_sparse.json` at the repository
+//! root (same trajectory format as the other BENCH_*.json files).
+
+use ssqa::annealer::{SsqaEngine, SsqaParams};
+use ssqa::config::{bench, num_threads, updates_per_sec, BenchArgs};
+use ssqa::dynamics::StepKernel;
+use ssqa::graph::{complete_graph, random_graph, random_regular, Graph};
+use ssqa::problems::maxcut;
+
+/// Process peak resident set (VmHWM) in KiB. Monotone over the process
+/// lifetime, so per-shape readings record the high-water mark *so far* —
+/// shapes run smallest-first so the biggest shape owns the final figure.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn build(topology: &str, n: usize, seed: u64) -> Graph {
+    match topology {
+        "3reg" => random_regular(n, 3, &[-1, 1], seed),
+        "1pct" => random_graph(n, (n * n / 200).max(n), &[-1, 1], seed),
+        "dense" => complete_graph(n, &[-1, 1], seed),
+        other => unreachable!("unknown topology {other}"),
+    }
+}
+
+/// Edge count of a shape without building it (for the cap check).
+fn edge_count(topology: &str, n: usize) -> usize {
+    match topology {
+        "3reg" => n * 3 / 2,
+        "1pct" => (n * n / 200).max(n),
+        _ => n * (n - 1) / 2,
+    }
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let steps = if args.quick { 5 } else { 20 };
+    let replicas = 8usize;
+    // nnz cap (nnz = 2×edges): quick keeps CI under a minute yet still
+    // covers 50k 3-regular (300k nnz); full admits the 25M-nnz 1% shape
+    // at 50k but never a >N=800 complete graph (100M+ nnz, ~1 GB CSR).
+    let nnz_cap: usize = if args.quick { 1_500_000 } else { 30_000_000 };
+    let threads = num_threads();
+    let mut records: Vec<String> = Vec::new();
+
+    for &n in &[800usize, 10_000, 50_000] {
+        for topology in ["3reg", "1pct", "dense"] {
+            let name = format!("sparse/{topology}/n{n}");
+            if !args.matches(&name) {
+                continue;
+            }
+            let nnz = edge_count(topology, n) * 2;
+            if nnz > nnz_cap {
+                println!("  skip {name}: nnz {nnz} exceeds cap {nnz_cap}");
+                continue;
+            }
+            let g = build(topology, n, 0x5EED ^ ((n as u64) << 8));
+            let params = SsqaParams { replicas, ..SsqaParams::gset_default(steps) };
+            let model = maxcut::ising_from_graph(&g, params.j_scale);
+
+            // bit-exactness preflight — a bench over a diverging kernel
+            // would be meaningless
+            let check = 3;
+            let (s0, _) = SsqaEngine::new(params, check)
+                .with_kernel(StepKernel::Lanes { threads })
+                .run(&model, check, 7);
+            let (s1, _) = SsqaEngine::new(params, check)
+                .with_kernel(StepKernel::Delta)
+                .run(&model, check, 7);
+            assert_eq!(s0.sigma, s1.sigma, "{name}: delta diverged from lanes");
+            assert_eq!(s0.is, s1.is, "{name}: delta Is diverged from lanes");
+
+            let time_kernel = |kernel: StepKernel| {
+                bench(&format!("{name} {} {steps}st", kernel.name()), 2, || {
+                    let eng = SsqaEngine::new(params, steps).with_kernel(kernel);
+                    let _ = eng.run(&model, steps, 1);
+                })
+                .min
+            };
+            let lanes = time_kernel(StepKernel::Lanes { threads });
+            let delta = time_kernel(StepKernel::Delta);
+            let delta_speedup = lanes.as_secs_f64() / delta.as_secs_f64();
+            let rss_mb = peak_rss_kb().map(|kb| kb as f64 / 1024.0).unwrap_or(-1.0);
+            println!(
+                "  → delta {:.2}× vs lanes({threads}); delta {:.2} M spin-updates/s; peak RSS {:.0} MB",
+                delta_speedup,
+                updates_per_sec(n, replicas, steps, delta) / 1e6,
+                rss_mb
+            );
+
+            let stamp = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            records.push(format!(
+                "{{\"unix_time\": {stamp}, \"bench\": \"sparse\", \"n\": {n}, \
+                 \"topology\": \"{topology}\", \"edges\": {}, \"nnz\": {}, \
+                 \"replicas\": {replicas}, \"steps\": {steps}, \"threads\": {threads}, \
+                 \"lanes_s\": {:.6}, \"delta_s\": {:.6}, \"delta_speedup\": {:.4}, \
+                 \"delta_mups\": {:.2}, \"peak_rss_mb\": {:.1}}}",
+                g.num_edges(),
+                model.j_sparse().nnz(),
+                lanes.as_secs_f64(),
+                delta.as_secs_f64(),
+                delta_speedup,
+                updates_per_sec(n, replicas, steps, delta) / 1e6,
+                rss_mb,
+            ));
+        }
+    }
+
+    if records.is_empty() {
+        return;
+    }
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sparse.json");
+    let mut all: Vec<String> = std::fs::read_to_string(json_path)
+        .ok()
+        .and_then(|s| {
+            let body = s.trim().strip_prefix('[')?.strip_suffix(']')?.trim().to_string();
+            Some(
+                body.lines()
+                    .map(|l| l.trim().trim_end_matches(',').to_string())
+                    .filter(|l| !l.is_empty() && !l.starts_with("//"))
+                    .collect(),
+            )
+        })
+        .unwrap_or_default();
+    all.extend(records);
+    let out = format!("[\n  {}\n]\n", all.join(",\n  "));
+    // fail loudly: CI uploads this file as the acceptance artifact, and a
+    // swallowed write error would silently ship nothing
+    std::fs::write(json_path, out)
+        .unwrap_or_else(|e| panic!("could not write BENCH_sparse.json: {e}"));
+    println!("  → recorded in BENCH_sparse.json");
+}

@@ -115,6 +115,32 @@ impl SsaEngine {
         std::mem::swap(&mut st.sigma, next);
         st.t += 1;
     }
+
+    /// One synchronous update step through the flip-frontier delta
+    /// kernel (the R = 1 degenerate case of [`dynamics::step_delta`];
+    /// `q_t = 0` so the stale coupling latch is multiplied away exactly
+    /// as in [`Self::step_kerneled`]). Bit-identical to the other paths.
+    pub fn step_delta(
+        &self,
+        model: &IsingModel,
+        st: &mut SsaState,
+        noise_t: i32,
+        next: &mut Vec<i32>,
+        scratch: &mut KernelScratch,
+    ) {
+        let n = model.n();
+        next.resize(n, 0);
+        let job = StepJob {
+            model,
+            cell: CellUpdate::new(self.params.i0, self.params.alpha),
+            replicas: 1,
+            q_t: 0,
+            noise_t,
+        };
+        dynamics::step_delta(&job, st.t, &st.sigma, next, &mut st.is, &mut st.rng, scratch);
+        std::mem::swap(&mut st.sigma, next);
+        st.t += 1;
+    }
 }
 
 impl Annealer for SsaEngine {
@@ -135,6 +161,9 @@ impl Annealer for SsaEngine {
                 StepKernel::Scalar => self.step_into(model, &mut st, noise_t, &mut scratch),
                 StepKernel::Lanes { threads } => {
                     self.step_kerneled(model, &mut st, noise_t, &mut scratch, &mut ks, threads)
+                }
+                StepKernel::Delta => {
+                    self.step_delta(model, &mut st, noise_t, &mut scratch, &mut ks)
                 }
             }
             if self.track_best && (t % check_stride == 0 || t + 1 == steps) {

@@ -196,6 +196,19 @@ impl SsqaEngine {
                 std::mem::swap(sigma, sigma_prev);
                 *t += 1;
             }
+            StepKernel::Delta => {
+                let job = StepJob {
+                    model,
+                    cell: CellUpdate::new(self.params.i0, self.params.alpha),
+                    replicas: r,
+                    q_t,
+                    noise_t,
+                };
+                let SsqaState { sigma, sigma_prev, is, rng, t } = st;
+                dynamics::step_delta(&job, *t, sigma, sigma_prev, is, rng, scratch);
+                std::mem::swap(sigma, sigma_prev);
+                *t += 1;
+            }
         }
     }
 

@@ -15,6 +15,7 @@ use crate::annealer::{NoiseSchedule, QSchedule, SsqaParams};
 use crate::coordinator::{
     BackendKind, BatchJob, JobSpec, Router, RoutingPolicy, TuneJob, WorkerPool,
 };
+use crate::dynamics::KernelChoice;
 use crate::energy;
 use crate::graph::IsingModel;
 use crate::hw::DelayKind;
@@ -52,6 +53,12 @@ pub struct SolveRequest {
     /// policy decide from N×R and the seed fan-out. Thread count never
     /// changes results — the kernel is bit-identical for any value.
     pub threads: Option<usize>,
+    /// Step-kernel selection for software backends (CLI `--kernel`,
+    /// protocol `kernel=`). `None` means [`KernelChoice::Auto`]: the
+    /// density heuristic picks the flip-frontier delta kernel for large
+    /// sparse models and threaded lanes otherwise. Every choice is
+    /// bit-identical — this only moves wall-clock.
+    pub kernel: Option<KernelChoice>,
     /// Auto-tune policy: race candidates on the problem's domain
     /// objective first and solve with the winner.
     pub tune: Option<TunePolicy>,
@@ -71,6 +78,7 @@ impl SolveRequest {
             replicas: None,
             backend: None,
             threads: None,
+            kernel: None,
             tune: None,
             early_stop: None,
         }
@@ -110,6 +118,13 @@ impl SolveRequest {
     /// `[1, MAX_KERNEL_THREADS]`, like the engines themselves).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = Some(threads.clamp(1, crate::dynamics::MAX_KERNEL_THREADS));
+        self
+    }
+
+    /// Pin the step-kernel implementation (bit-identical across all
+    /// choices; `Auto` is the default density heuristic).
+    pub fn kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = Some(kernel);
         self
     }
 
@@ -199,6 +214,7 @@ impl SolveRequest {
         batch.backend = self.backend;
         batch.early_stop = self.early_stop;
         batch.threads = self.threads;
+        batch.kernel = self.kernel;
         pool.submit_batch(batch);
         let mut outcomes = pool.drain();
         // drain yields worker-completion order; chunk ids are assigned

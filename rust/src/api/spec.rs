@@ -6,7 +6,9 @@
 //!
 //! ```text
 //! maxcut    graph=G11 | nodes=N [800] gseed=S      — named Table-2 instance,
-//!                                                    or generated torus/random
+//!           topology=torus|random|regular|powerlaw    or generated instance
+//!           degree=K [3]                              (degree: regular k /
+//!                                                      powerlaw edges-per-node)
 //! qubo      n=N [32] pseed=S                       — random integer QUBO
 //! tsp       cities=N [6] pseed=S penalty=A [auto]  — random Euclidean TSP
 //! coloring  nodes=N [16] colors=K [3] edges=M [2N] pseed=S
@@ -21,7 +23,7 @@
 //! instead of being silently ignored.
 
 use super::problem::{Problem, ProblemKind};
-use crate::graph::{random_graph, torus_2d, GraphSpec};
+use crate::graph::{power_law, random_graph, random_regular, torus_2d, GraphSpec};
 use crate::problems::{
     ColoringInstance, ColoringProblem, GiInstance, GiProblem, MaxCut, PartitionInstance, Qubo,
     QuboProblem, TspInstance, TspProblem,
@@ -97,16 +99,49 @@ pub fn build_problem(kind: &str, f: &mut BTreeMap<String, String>) -> Result<Arc
                     .ok_or_else(|| anyhow!("graph={name:?}: unknown graph (use G11..G15)"))?;
                 Arc::new(MaxCut::named(spec))
             } else if f.contains_key("nodes") {
-                // generated instance of the requested size: the
-                // G11-class torus when the node count tiles 40 columns,
-                // a ±1 random graph of matching density otherwise
+                // generated instance of the requested size. Default
+                // topology: the G11-class torus when the node count
+                // tiles 40 columns, a ±1 random graph of matching
+                // density otherwise. Explicit `topology=` selects the
+                // sparse-first generators (regular / powerlaw) used by
+                // the 100k-spin scaling paths.
                 let nodes: usize = take(f, "nodes", 800)?;
                 ensure!(nodes >= 8, "nodes={nodes}: must be at least 8");
                 let gseed: u64 = take(f, "gseed", DEFAULT_GRAPH_SEED)?;
-                let g = if nodes % 40 == 0 {
-                    torus_2d(nodes / 40, 40, true, gseed)
-                } else {
-                    random_graph(nodes, 2 * nodes, &[-1, 1], gseed)
+                let topology = f.remove("topology");
+                let g = match topology.as_deref() {
+                    None => {
+                        ensure!(!f.contains_key("degree"), "degree= requires an explicit topology=");
+                        if nodes % 40 == 0 {
+                            torus_2d(nodes / 40, 40, true, gseed)
+                        } else {
+                            random_graph(nodes, 2 * nodes, &[-1, 1], gseed)
+                        }
+                    }
+                    Some("torus") => {
+                        ensure!(!f.contains_key("degree"), "degree= is fixed at 4 for a torus");
+                        ensure!(nodes % 40 == 0, "topology=torus needs nodes divisible by 40");
+                        torus_2d(nodes / 40, 40, true, gseed)
+                    }
+                    Some("random") => {
+                        let degree: usize = take(f, "degree", 4)?;
+                        ensure!((1..nodes).contains(&degree), "degree={degree}: must be in 1..{nodes}");
+                        random_graph(nodes, nodes * degree / 2, &[-1, 1], gseed)
+                    }
+                    Some("regular") => {
+                        let degree: usize = take(f, "degree", 3)?;
+                        ensure!((1..nodes).contains(&degree), "degree={degree}: must be in 1..{nodes}");
+                        ensure!(nodes * degree % 2 == 0, "nodes*degree must be even for a regular graph");
+                        random_regular(nodes, degree, &[-1, 1], gseed)
+                    }
+                    Some("powerlaw") => {
+                        let degree: usize = take(f, "degree", 3)?;
+                        ensure!((1..nodes).contains(&degree), "degree={degree}: must be in 1..{nodes}");
+                        power_law(nodes, degree, &[-1, 1], gseed)
+                    }
+                    Some(other) => bail!(
+                        "topology={other:?}: unknown (use torus|random|regular|powerlaw)"
+                    ),
                 };
                 Arc::new(MaxCut::new(g, MaxCut::GSET_J_SCALE))
             } else {

@@ -184,13 +184,36 @@ fn build_problem_covers_every_kind_and_names_unknown_keys() {
     // the bare default is the paper's G11 benchmark
     let p = build_problem("maxcut", &mut BTreeMap::new()).unwrap();
     assert_eq!(Problem::label(p.as_ref()), "G11");
+    // generated topologies: regular / powerlaw reach the sparse-first
+    // generators through the same grammar
+    let mk_map = |pairs: &[(&str, &str)]| -> BTreeMap<String, String> {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    };
+    let mut f = mk_map(&[("nodes", "100"), ("topology", "regular"), ("degree", "3")]);
+    let p = build_problem("maxcut", &mut f).unwrap();
+    assert!(f.is_empty(), "topology keys consumed");
+    assert_eq!(p.num_vars(), 100);
+    let mut f = mk_map(&[("nodes", "100"), ("topology", "powerlaw")]);
+    assert_eq!(build_problem("maxcut", &mut f).unwrap().num_vars(), 100);
+    let mut f = mk_map(&[("nodes", "80"), ("topology", "torus")]);
+    assert_eq!(build_problem("maxcut", &mut f).unwrap().num_vars(), 80);
+    // errors name the offending key/value
+    let mut f = mk_map(&[("nodes", "100"), ("topology", "hypercube")]);
+    let err = build_problem("maxcut", &mut f).unwrap_err().to_string();
+    assert!(err.contains("hypercube"), "{err}");
+    let mut f = mk_map(&[("nodes", "100"), ("degree", "3")]);
+    let err = build_problem("maxcut", &mut f).unwrap_err().to_string();
+    assert!(err.contains("topology"), "{err}");
+    let mut f = mk_map(&[("nodes", "99"), ("topology", "regular"), ("degree", "3")]);
+    let err = build_problem("maxcut", &mut f).unwrap_err().to_string();
+    assert!(err.contains("even"), "{err}");
     // deterministic: same keys, same instance
     let mk = || {
         let mut f: BTreeMap<String, String> =
             [("cities".to_string(), "4".to_string())].into_iter().collect();
         build_problem("tsp", &mut f).unwrap()
     };
-    assert_eq!(mk().to_ising().j_dense(), mk().to_ising().j_dense());
+    assert_eq!(&mk().to_ising().dense()[..], &mk().to_ising().dense()[..]);
     // unknown kind lists the known kinds
     let err = build_problem("knapsack", &mut BTreeMap::new()).unwrap_err().to_string();
     assert!(err.contains("knapsack") && err.contains("maxcut"), "{err}");
@@ -271,4 +294,31 @@ fn solve_request_threads_never_changes_results() {
     // builder clamps zero to one
     let zero = SolveRequest::new(p).threads(0);
     assert_eq!(zero.threads, Some(1));
+}
+
+#[test]
+fn solve_request_kernel_never_changes_results() {
+    use crate::dynamics::KernelChoice;
+    use std::sync::Arc;
+    // the --kernel / kernel= surface: every kernel family (and the Auto
+    // default) produces bit-identical reports — only wall-clock moves
+    let g = random_graph(18, 40, &[-1, 1], 9);
+    let p = Arc::new(MaxCut::new(g, 8));
+    let base = SolveRequest::new(p.clone()).steps(40).seed(5).runs(3).solve().unwrap();
+    for kernel in
+        [KernelChoice::Auto, KernelChoice::Scalar, KernelChoice::Lanes, KernelChoice::Delta]
+    {
+        let r = SolveRequest::new(p.clone())
+            .steps(40)
+            .seed(5)
+            .runs(3)
+            .kernel(kernel)
+            .solve()
+            .unwrap();
+        let name = kernel.name();
+        assert_eq!(r.best_energy, base.best_energy, "kernel={name}");
+        assert_eq!(r.best_objective, base.best_objective, "kernel={name}");
+        assert_eq!(r.replica_energies, base.replica_energies, "kernel={name}");
+        assert_eq!(r.mean_objective, base.mean_objective, "kernel={name}");
+    }
 }

@@ -8,6 +8,7 @@
 
 use crate::annealer::{run_seed, RunResult, SsqaParams};
 use crate::api::{Problem, ProblemKind};
+use crate::dynamics::KernelChoice;
 use crate::graph::{Graph, GraphSpec, IsingModel};
 use crate::problems::maxcut::MaxCut;
 use crate::tuner::{ConvergenceMonitor, MonitorConfig};
@@ -83,12 +84,26 @@ pub struct Job {
     /// lets the pool apply the router's nested-parallelism policy at
     /// submission; results are bit-identical for any value.
     pub threads: Option<usize>,
+    /// Step-kernel family for this run (software backends). `None`
+    /// means [`KernelChoice::Auto`] — pick per model shape; results are
+    /// bit-identical for any choice.
+    pub kernel: Option<KernelChoice>,
 }
 
 impl Job {
     pub fn new(id: u64, spec: JobSpec, steps: usize, seed: u32) -> Self {
         let params = SsqaParams::gset_default(steps);
-        Self { id, spec, params, steps, seed, backend: None, early_stop: None, threads: None }
+        Self {
+            id,
+            spec,
+            params,
+            steps,
+            seed,
+            backend: None,
+            early_stop: None,
+            threads: None,
+            kernel: None,
+        }
     }
 }
 
@@ -111,6 +126,9 @@ pub struct BatchJob {
     /// fan-out claims workers first, and each run threads over whatever
     /// the fan-out left idle — `solve runs=N` never oversubscribes.
     pub threads: Option<usize>,
+    /// Step-kernel family for the batch's runs (software backends).
+    /// `None` means [`KernelChoice::Auto`].
+    pub kernel: Option<KernelChoice>,
 }
 
 impl BatchJob {
@@ -118,7 +136,16 @@ impl BatchJob {
     /// assigns one fresh id per chunk and returns them.
     pub fn new(spec: JobSpec, steps: usize, seeds: Vec<u32>) -> Self {
         let params = SsqaParams::gset_default(steps);
-        Self { spec, params, steps, seeds, backend: None, early_stop: None, threads: None }
+        Self {
+            spec,
+            params,
+            steps,
+            seeds,
+            backend: None,
+            early_stop: None,
+            threads: None,
+            kernel: None,
+        }
     }
 
     /// Batch over the standard sweep seeds (`run_seed(seed0, 0..runs)`,
@@ -144,6 +171,9 @@ pub(crate) struct BatchChunk {
     /// Step-kernel threads each of this chunk's runs may use (resolved
     /// by the pool's nested-parallelism policy at submission).
     pub run_threads: usize,
+    /// Step-kernel family for this chunk's runs (resolved against the
+    /// model shape when the backend engine is built).
+    pub kernel: KernelChoice,
     pub problem: Arc<dyn Problem>,
     pub model: Arc<IsingModel>,
 }
@@ -304,20 +334,24 @@ impl BackendInstance {
     fn build(
         backend: super::BackendKind,
         params: SsqaParams,
-        n: usize,
+        model: &IsingModel,
         steps: usize,
         run_threads: usize,
+        kernel: KernelChoice,
     ) -> crate::Result<Self> {
         use crate::annealer::{SaEngine, SsaEngine, SsaParams, SsqaEngine};
         use crate::hw::{HwConfig, HwEngine};
 
+        let n = model.n();
         Ok(match backend {
             super::BackendKind::Software => {
-                Self::Software(SsqaEngine::new(params, steps).with_threads(run_threads))
+                let step_kernel = kernel.resolve(model, run_threads);
+                Self::Software(SsqaEngine::new(params, steps).with_kernel(step_kernel))
             }
             super::BackendKind::SoftwareSsa => {
-                let eng = SsaEngine::new(SsaParams::gset_default(), steps);
-                Self::Ssa(eng.with_threads(run_threads))
+                let mut eng = SsaEngine::new(SsaParams::gset_default(), steps);
+                eng.kernel = kernel.resolve(model, run_threads);
+                Self::Ssa(eng)
             }
             super::BackendKind::SoftwareSa => Self::Sa(SaEngine::gset_default()),
             super::BackendKind::HwSim(delay) => {
@@ -364,6 +398,7 @@ pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
         seeds: vec![job.seed],
         early_stop: job.early_stop,
         run_threads: job.threads.unwrap_or(1).max(1),
+        kernel: job.kernel.unwrap_or_default(),
         problem: Arc::clone(job.spec.problem()),
         model: job.spec.model(),
     };
@@ -388,7 +423,14 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
     let sense = problem.sense();
     let n = chunk.model.n();
     let mut modeled_energy_j: Option<f64> = None;
-    let build = BackendInstance::build(backend, chunk.params, n, chunk.steps, chunk.run_threads);
+    let build = BackendInstance::build(
+        backend,
+        chunk.params,
+        &chunk.model,
+        chunk.steps,
+        chunk.run_threads,
+        chunk.kernel,
+    );
     let results: Vec<RunResult> = match build {
         Err(e) => {
             return JobOutcome::failed(

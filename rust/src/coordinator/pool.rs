@@ -164,6 +164,7 @@ impl WorkerPool {
                 seeds: seeds.to_vec(),
                 early_stop: batch.early_stop,
                 run_threads,
+                kernel: batch.kernel.unwrap_or_default(),
                 problem: Arc::clone(&problem),
                 model: Arc::clone(&model),
             };

@@ -10,6 +10,9 @@
 //!       [par=T]                      — per-run step-kernel threads
 //!                                      (default: router policy; results
 //!                                      are identical for any T)
+//!       [kernel=auto|scalar|lanes|delta] — step-kernel family (default
+//!                                      auto: the density heuristic;
+//!                                      every choice is bit-identical)
 //! tune  [problem=maxcut] <instance keys> [tuner_seed=7] [candidates=8]
 //!       [seeds=3] [quick=1]
 //! metrics
@@ -134,6 +137,12 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
                     BackendKind::parse(&v).ok_or_else(|| anyhow!("unknown backend {v:?}"))?,
                 ),
             };
+            let kernel = match f.remove("kernel") {
+                None => None,
+                Some(v) => Some(crate::dynamics::KernelChoice::parse(&v).ok_or_else(|| {
+                    anyhow!("unknown kernel {v:?} (use auto|scalar|lanes|delta)")
+                })?),
+            };
             let early_stop: u32 = take(&mut f, "early_stop", 0)?;
             let problem = take_problem(&mut f)?;
             ensure_consumed(&f, "solve")?;
@@ -142,6 +151,7 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
             req.backend = backend;
             req.replicas = replicas;
             req.threads = par;
+            req.kernel = kernel;
             if early_stop != 0 {
                 req = req.early_stop(crate::tuner::MonitorConfig::default());
             }

@@ -54,6 +54,14 @@ pub enum StepKernel {
         /// Worker threads for the row blocks (clamped to ≥ 1 and to N).
         threads: usize,
     },
+    /// Flip-frontier delta-field kernel ([`step_delta`]): the Eq. (6a)
+    /// accumulator `h_i + Σ_j J_ij σ_j,k(t)` is maintained incrementally
+    /// across steps — after each step only the spins adjacent to the
+    /// replicas' flips receive `±2·J_ij` corrections, dropping the
+    /// per-step field cost from O(nnz·R) to O(flips·deg·R). Integer
+    /// addition is order-independent, so this is bit-identical to a full
+    /// rebuild (DESIGN.md §8). Single-threaded.
+    Delta,
 }
 
 impl Default for StepKernel {
@@ -69,7 +77,7 @@ impl StepKernel {
     /// to `[1, MAX_KERNEL_THREADS]`.
     pub fn threads(&self) -> usize {
         match self {
-            StepKernel::Scalar => 1,
+            StepKernel::Scalar | StepKernel::Delta => 1,
             StepKernel::Lanes { threads } => (*threads).clamp(1, MAX_KERNEL_THREADS),
         }
     }
@@ -80,17 +88,104 @@ impl StepKernel {
             StepKernel::Scalar => "scalar",
             StepKernel::Lanes { threads: 1 } => "lanes",
             StepKernel::Lanes { .. } => "lanes+threads",
+            StepKernel::Delta => "delta",
         }
     }
 }
 
+/// User-facing kernel selection (CLI `--kernel`, protocol `kernel=`,
+/// [`crate::api::SolveRequest`]): either a concrete [`StepKernel`]
+/// family or `Auto`, which lets the engine pick per model shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Pick per model: [`StepKernel::Delta`] for large sparse instances
+    /// (n ≥ 2048 and density below 1/16), the lane-vectorized threaded
+    /// kernel otherwise. Every choice is bit-identical — Auto never
+    /// changes results, only wall-clock.
+    #[default]
+    Auto,
+    /// The scalar reference path.
+    Scalar,
+    /// Lane-vectorized rows on the run's allotted threads.
+    Lanes,
+    /// The flip-frontier delta-field kernel.
+    Delta,
+}
+
+impl KernelChoice {
+    /// Parse a CLI/protocol token (case-insensitive).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(Self::Auto),
+            "scalar" => Some(Self::Scalar),
+            "lanes" => Some(Self::Lanes),
+            "delta" => Some(Self::Delta),
+            _ => None,
+        }
+    }
+
+    /// The token [`Self::parse`] accepts for this choice.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Scalar => "scalar",
+            Self::Lanes => "lanes",
+            Self::Delta => "delta",
+        }
+    }
+
+    /// Resolve to a concrete [`StepKernel`] for `model`, with `threads`
+    /// workers available to the lane kernel.
+    ///
+    /// The `Auto` heuristic: the delta kernel wins where the coupling
+    /// matrix is large and sparse — the O(nnz·R) rebuild it avoids
+    /// dominates there, and the low-temperature flip frontier is narrow.
+    /// Below n = 2048 the full rebuild is cheap enough that the threaded
+    /// lane kernel (which Delta, being sequential, gives up) is the
+    /// safer default; at or above 1/16 density the correction traffic
+    /// approaches the rebuild cost.
+    pub fn resolve(self, model: &IsingModel, threads: usize) -> StepKernel {
+        match self {
+            Self::Auto => {
+                let n = model.n() as u64;
+                let nnz = model.j_sparse().nnz() as u64;
+                if n >= 2048 && nnz * 16 < n * n {
+                    StepKernel::Delta
+                } else {
+                    StepKernel::Lanes { threads: threads.max(1) }
+                }
+            }
+            Self::Scalar => StepKernel::Scalar,
+            Self::Lanes => StepKernel::Lanes { threads: threads.max(1) },
+            Self::Delta => StepKernel::Delta,
+        }
+    }
+}
+
+/// Cross-step state of the delta-field kernel: the maintained Eq. (6a)
+/// accumulator plane and the step index it is valid for. Lives in
+/// [`KernelScratch`] so the engines' existing scratch plumbing carries
+/// it; a fresh or re-shaped scratch simply rebuilds on first use.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaState {
+    /// `h_i + Σ_j J_ij σ_j,k(t)` for the plane tagged by `valid_for`,
+    /// row-major `[spin][replica]`.
+    fields: Vec<i32>,
+    /// The step `t` whose σ(t) plane `fields` was computed against;
+    /// `None` forces a full rebuild (fresh scratch, reseeded state, or
+    /// a flip burst that made corrections costlier than rebuilding).
+    valid_for: Option<usize>,
+}
+
 /// Per-worker scratch rows for the step-parallel kernel: one
-/// [`StepScratch`] per thread (the serial paths use slot 0). Hoisted out
-/// of the step loop like `StepScratch` itself — `ensure` is a no-op once
-/// sized, so the hot loop stays allocation-free.
+/// [`StepScratch`] per thread (the serial paths use slot 0), plus the
+/// delta kernel's maintained field plane. Hoisted out of the step loop
+/// like `StepScratch` itself — `ensure` is a no-op once sized, so the
+/// hot loop stays allocation-free.
 #[derive(Debug, Clone, Default)]
 pub struct KernelScratch {
     workers: Vec<StepScratch>,
+    delta: DeltaState,
 }
 
 impl KernelScratch {
@@ -98,6 +193,7 @@ impl KernelScratch {
     pub fn new(threads: usize, replicas: usize) -> Self {
         Self {
             workers: (0..threads.max(1)).map(|_| StepScratch::new(replicas)).collect(),
+            delta: DeltaState::default(),
         }
     }
 
@@ -270,4 +366,134 @@ fn rotate_left1(dst: &mut [i32], src: &[i32]) {
     debug_assert_eq!(dst.len(), r);
     dst[..r - 1].copy_from_slice(&src[1..]);
     dst[r - 1] = src[0];
+}
+
+/// One full Eq. (6) step through the flip-frontier delta-field kernel
+/// ([`StepKernel::Delta`]).
+///
+/// Same calling convention as [`step_parallel`] plus the state's step
+/// index `t`: `sigma` is σ(t) (read-only), `sigma_prev` holds σ(t−1) on
+/// entry and σ(t+1) on exit, and the caller swaps buffers afterwards.
+///
+/// Instead of rebuilding the field `h_i + Σ_j J_ij σ_j,k(t)` from
+/// scratch every step, the kernel keeps the whole N×R field plane in
+/// `scratch` and, after producing σ(t+1), corrects it by `±2·J_ij` for
+/// every coupling incident to a flipped cell — O(flips·deg·R) instead
+/// of O(nnz·R), which collapses late-anneal cost when the flip frontier
+/// narrows at low temperature.
+///
+/// **Exactness**: i32 addition is associative and commutative in the
+/// value domain reached here (every intermediate is bounded by the same
+/// `|h_i| + Σ_j |J_ij|` envelope as the rebuild's partial sums, so no
+/// path overflows that the rebuild wouldn't), hence the maintained
+/// field is equal — not approximately, bit-for-bit — to the freshly
+/// accumulated one, and each cell then runs the identical chain (one
+/// RNG advance, [`CellUpdate::input`]/[`CellUpdate::apply`]) as the
+/// scalar and lane kernels. Proven in `tests/step_kernel_diff.rs`.
+///
+/// When the flip volume of a step makes the correction pass costlier
+/// than a rebuild (early anneal, high noise), the plane is invalidated
+/// instead and the next step rebuilds — a wall-clock policy with no
+/// effect on results.
+pub fn step_delta(
+    job: &StepJob<'_>,
+    t: usize,
+    sigma: &[i32],
+    sigma_prev: &mut [i32],
+    is: &mut [i32],
+    rng: &mut RngMatrix,
+    scratch: &mut KernelScratch,
+) {
+    let n = job.model.n();
+    let r = job.replicas;
+    debug_assert_eq!(sigma.len(), n * r, "sigma shape");
+    debug_assert_eq!(sigma_prev.len(), n * r, "sigma_prev shape");
+    debug_assert_eq!(is.len(), n * r, "is shape");
+    let states = rng.states_mut();
+    debug_assert_eq!(states.len(), n * r, "rng shape");
+    if n == 0 || r == 0 {
+        return;
+    }
+    scratch.ensure(1, r);
+    let KernelScratch { workers, delta } = scratch;
+    let StepScratch { prev_row, noise_row, .. } = &mut workers[0];
+    let coupled = &mut prev_row[..r];
+    let noise = &mut noise_row[..r];
+
+    // (re)build the field plane from σ(t) unless it was maintained
+    // across the previous step for exactly this t and shape
+    if delta.valid_for != Some(t) || delta.fields.len() != n * r {
+        delta.fields.clear();
+        delta.fields.resize(n * r, 0);
+        for i in 0..n {
+            let row = i * r;
+            let f = &mut delta.fields[row..row + r];
+            f.fill(job.model.h[i]);
+            let (cols, vals) = job.model.j_sparse().row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                let base = *c as usize * r;
+                axpy_lanes(f, *v, &sigma[base..base + r]);
+            }
+        }
+    }
+
+    // pass 1 — cell updates, the field plane standing in for the lane
+    // kernel's per-row accumulator (same value, same per-cell chain)
+    for i in 0..n {
+        let row = i * r;
+        let fields_row = &delta.fields[row..row + r];
+        let out = &mut sigma_prev[row..row + r];
+        rotate_left1(coupled, out);
+        draw_slice_pm1(&mut states[row..row + r], noise);
+        let is_row = &mut is[row..row + r];
+        let lanes = fields_row.iter().zip(noise.iter()).zip(coupled.iter());
+        for (((&field, &rnd), &up), (is_cell, o)) in
+            lanes.zip(is_row.iter_mut().zip(out.iter_mut()))
+        {
+            let inp = CellUpdate::input(field, job.noise_t, rnd, job.q_t, up);
+            *o = job.cell.apply(is_cell, inp);
+        }
+    }
+
+    // pass 2 — flip-frontier corrections: σ(t+1) now sits in sigma_prev,
+    // σ(t) is intact in sigma; first price the frontier, then either
+    // correct the plane toward σ(t+1) or invalidate if a rebuild next
+    // step is cheaper (scatter corrections cost roughly twice the
+    // vectorized rebuild MAC per touched coupling)
+    let nnz = job.model.j_sparse().nnz();
+    let mut work: usize = 0;
+    for j in 0..n {
+        let row = j * r;
+        let deg = job.model.j_sparse().row(j).0.len();
+        if deg == 0 {
+            continue;
+        }
+        let mut flips = 0usize;
+        for k in 0..r {
+            flips += (sigma_prev[row + k] != sigma[row + k]) as usize;
+        }
+        work += deg * flips;
+    }
+    if work * 2 >= nnz * r {
+        delta.valid_for = None;
+        return;
+    }
+    for j in 0..n {
+        let row = j * r;
+        let (cols, vals) = job.model.j_sparse().row(j);
+        if cols.is_empty() {
+            continue;
+        }
+        for k in 0..r {
+            let new = sigma_prev[row + k];
+            if new != sigma[row + k] {
+                // σ flipped, so σ_new − σ_old = 2·σ_new
+                let dv = 2 * new;
+                for (c, v) in cols.iter().zip(vals) {
+                    delta.fields[*c as usize * r + k] += *v * dv;
+                }
+            }
+        }
+    }
+    delta.valid_for = Some(t + 1);
 }

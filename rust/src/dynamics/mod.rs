@@ -30,7 +30,10 @@
 pub mod kernel;
 mod scratch;
 
-pub use kernel::{step_parallel, KernelScratch, StepJob, StepKernel, LANES, MAX_KERNEL_THREADS};
+pub use kernel::{
+    step_delta, step_parallel, KernelChoice, KernelScratch, StepJob, StepKernel, LANES,
+    MAX_KERNEL_THREADS,
+};
 pub use scratch::StepScratch;
 
 use crate::graph::IsingModel;

@@ -116,6 +116,89 @@ fn step_kernel_selection_surface() {
     assert_eq!(StepKernel::Scalar.name(), "scalar");
     assert_eq!(StepKernel::Lanes { threads: 1 }.name(), "lanes");
     assert_eq!(StepKernel::Lanes { threads: 4 }.name(), "lanes+threads");
+    assert_eq!(StepKernel::Delta.threads(), 1, "delta is single-worker");
+    assert_eq!(StepKernel::Delta.name(), "delta");
+}
+
+#[test]
+fn kernel_choice_parse_and_resolve() {
+    assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+    assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+    assert_eq!(KernelChoice::parse("scalar"), Some(KernelChoice::Scalar));
+    assert_eq!(KernelChoice::parse("lanes"), Some(KernelChoice::Lanes));
+    assert_eq!(KernelChoice::parse("delta"), Some(KernelChoice::Delta));
+    assert_eq!(KernelChoice::parse("DELTA"), Some(KernelChoice::Delta), "case-insensitive");
+    assert_eq!(KernelChoice::parse("simd"), None);
+    for c in [KernelChoice::Auto, KernelChoice::Scalar, KernelChoice::Lanes, KernelChoice::Delta] {
+        assert_eq!(KernelChoice::parse(c.name()), Some(c), "name/parse roundtrip");
+    }
+
+    // explicit choices resolve verbatim regardless of the model
+    let small = maxcut::ising_from_graph(&random_graph(16, 24, &[-1, 1], 5), 1);
+    assert_eq!(KernelChoice::Scalar.resolve(&small, 4), StepKernel::Scalar);
+    assert_eq!(KernelChoice::Lanes.resolve(&small, 4), StepKernel::Lanes { threads: 4 });
+    assert_eq!(KernelChoice::Delta.resolve(&small, 4), StepKernel::Delta);
+    // auto on a small model: threaded lanes (below the n-floor)
+    assert_eq!(KernelChoice::Auto.resolve(&small, 3), StepKernel::Lanes { threads: 3 });
+    // auto on a large sparse model: the delta kernel
+    let big = maxcut::ising_from_graph(&random_graph(4096, 3 * 4096, &[-1, 1], 5), 1);
+    assert_eq!(KernelChoice::Auto.resolve(&big, 3), StepKernel::Delta);
+}
+
+/// The delta kernel matches the scalar Eq. (6) arithmetic step-for-step
+/// across a multi-step run, including steps where no spin flips and
+/// steps where the flip-work heuristic invalidates the cached fields.
+#[test]
+fn step_delta_multi_step_matches_scalar_cells() {
+    use crate::rng::RngMatrix;
+    let g = random_graph(11, 20, &[-2, -1, 1, 2], 13);
+    let model = maxcut::ising_from_graph(&g, 4);
+    let (n, r) = (11usize, 3usize);
+    let cell = CellUpdate::new(20, 1);
+    let (q_t, noise_t) = (5, 7);
+
+    let rng0 = RngMatrix::seeded(99, n, r);
+    let sigma0 = init_sigma(&rng0);
+
+    // scalar reference advanced over several steps
+    let mut ref_rng = rng0.clone();
+    let mut ref_sigma = sigma0.clone();
+    let mut ref_prev = sigma0.clone();
+    let mut ref_is = vec![0i32; n * r];
+
+    // delta path over the same trajectory
+    let mut d_rng = rng0.clone();
+    let mut d_sigma = sigma0.clone();
+    let mut d_prev = sigma0.clone();
+    let mut d_is = vec![0i32; n * r];
+    let mut d_scratch = KernelScratch::new(1, r);
+
+    for t in 0..12 {
+        // scalar step (same chain as step_parallel_single_step test)
+        for i in 0..n {
+            let mut prev_row = [0i32; 3];
+            prev_row.copy_from_slice(&ref_prev[i * r..i * r + r]);
+            for k in 0..r {
+                let (cols, vals) = model.j_sparse().row(i);
+                let mut field = model.h[i];
+                for (c, v) in cols.iter().zip(vals) {
+                    field += *v * ref_sigma[*c as usize * r + k];
+                }
+                let rnd = ref_rng.draw_pm1(i, k);
+                let inp = CellUpdate::input(field, noise_t, rnd, q_t, prev_row[(k + 1) % r]);
+                ref_prev[i * r + k] = cell.apply(&mut ref_is[i * r + k], inp);
+            }
+        }
+        std::mem::swap(&mut ref_sigma, &mut ref_prev);
+
+        let job = StepJob { model: &model, cell, replicas: r, q_t, noise_t };
+        step_delta(&job, t, &d_sigma, &mut d_prev, &mut d_is, &mut d_rng, &mut d_scratch);
+        std::mem::swap(&mut d_sigma, &mut d_prev);
+
+        assert_eq!(d_sigma, ref_sigma, "step {t}: σ(t+1)");
+        assert_eq!(d_is, ref_is, "step {t}: Is");
+        assert_eq!(d_rng.states(), ref_rng.states(), "step {t}: rng");
+    }
 }
 
 #[test]

@@ -86,14 +86,15 @@ pub fn quantization(ctx: &ExpContext) -> Result<String> {
         let qmax = (1i32 << (bits - 1)) - 1;
         let scale = (8 / qmax).max(1);
         let qg = {
-            // rebuild a graph from the quantized couplings
+            // rebuild a graph from the quantized couplings (upper
+            // triangle of the CSR — the model is sparse-only now)
             let n = g.num_nodes();
             let mut edges = Vec::new();
             for i in 0..n {
-                for j in (i + 1)..n {
-                    let w = qrep.model.j_dense()[i * n + j];
-                    if w != 0 {
-                        edges.push((i as u32, j as u32, w));
+                let (cols, vals) = qrep.model.j_sparse().row(i);
+                for (c, v) in cols.iter().zip(vals) {
+                    if (*c as usize) > i {
+                        edges.push((i as u32, *c, *v));
                     }
                 }
             }

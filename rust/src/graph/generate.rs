@@ -159,6 +159,86 @@ pub fn random_graph(n: usize, m: usize, weights: &[i32], seed: u64) -> Graph {
     Graph::new(n, edges)
 }
 
+/// Random `k`-regular graph on `n` nodes (configuration/pairing model)
+/// with weights drawn uniformly from `weights`.
+///
+/// `n·k` must be even. Each node contributes `k` stubs; the stub list is
+/// Fisher–Yates-shuffled and paired off. A pairing that produces a
+/// self-loop or duplicate edge is rejected wholesale and re-shuffled
+/// (deterministically, from the same RNG stream), which keeps the
+/// construction simple and exact; for the sparse regimes we target
+/// (k ≪ n) rejection is rare, but a retry cap turns pathological inputs
+/// (e.g. k = n − 1) into a loud panic instead of a hang.
+pub fn random_regular(n: usize, k: usize, weights: &[i32], seed: u64) -> Graph {
+    assert!(k < n, "degree {k} must be below node count {n}");
+    assert!(n * k % 2 == 0, "n*k must be even for a k-regular graph");
+    let mut rng = Xorshift64Star::new(seed);
+    let mut stubs: Vec<u32> = (0..n).flat_map(|i| std::iter::repeat(i as u32).take(k)).collect();
+    'attempt: for _ in 0..200 {
+        // Fisher–Yates shuffle of the stub list
+        for i in (1..stubs.len()).rev() {
+            let j = rng.next_below(i + 1);
+            stubs.swap(i, j);
+        }
+        let mut present = std::collections::HashSet::with_capacity(n * k);
+        let mut edges = Vec::with_capacity(n * k / 2);
+        for pair in stubs.chunks_exact(2) {
+            let (a, b) = (pair[0].min(pair[1]), pair[0].max(pair[1]));
+            if a == b || !present.insert((a, b)) {
+                continue 'attempt;
+            }
+            let w = weights[rng.next_below(weights.len())];
+            edges.push((a, b, w));
+        }
+        return Graph::new(n, edges);
+    }
+    panic!("random_regular({n}, {k}) failed to find a simple pairing in 200 attempts");
+}
+
+/// Power-law (scale-free) graph via preferential attachment: each new
+/// node attaches `m_per_node` edges to existing nodes with probability
+/// proportional to current degree. Weights drawn uniformly from
+/// `weights`. Produces a heavy-tailed degree distribution — the
+/// stress-case topology for degree-sensitive kernels.
+pub fn power_law(n: usize, m_per_node: usize, weights: &[i32], seed: u64) -> Graph {
+    assert!(m_per_node >= 1, "m_per_node must be at least 1");
+    assert!(n > m_per_node, "need more nodes than edges per node");
+    let mut rng = Xorshift64Star::new(seed);
+    // seed clique of m_per_node + 1 nodes keeps early attachment well-defined
+    let core = m_per_node + 1;
+    let mut edges: Vec<(u32, u32, i32)> = Vec::with_capacity(n * m_per_node);
+    // endpoint multiset: each entry is one degree unit, so sampling it
+    // uniformly IS preferential attachment
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * m_per_node);
+    for i in 0..core {
+        for j in (i + 1)..core {
+            let w = weights[rng.next_below(weights.len())];
+            edges.push((i as u32, j as u32, w));
+            endpoints.push(i as u32);
+            endpoints.push(j as u32);
+        }
+    }
+    for v in core..n {
+        // order-preserving dedup: HashSet iteration order is per-instance
+        // nondeterministic and would leak into weight draws and the
+        // endpoint multiset; m is small, so a linear scan is fine
+        let mut targets: Vec<u32> = Vec::with_capacity(m_per_node);
+        while targets.len() < m_per_node {
+            let t = endpoints[rng.next_below(endpoints.len())];
+            if !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            let w = weights[rng.next_below(weights.len())];
+            edges.push((t.min(v as u32), t.max(v as u32), w));
+            endpoints.push(t);
+            endpoints.push(v as u32);
+        }
+    }
+    Graph::new(n, edges)
+}
+
 /// Fully-connected graph (the connectivity class the paper's architecture
 /// targets: up to N−1 connections per spin, Table 6).
 pub fn complete_graph(n: usize, weights: &[i32], seed: u64) -> Graph {

@@ -1,13 +1,18 @@
 //! Ising model `H(σ) = −Σ h_i σ_i − Σ_{i<j} J_ij σ_i σ_j` (Eq. 2) with
-//! both dense and CSR coupling storage.
+//! CSR coupling storage as the canonical representation.
 //!
-//! The dense form feeds the matvec-style software engine and mirrors the
-//! weight-matrix BRAM of the hardware (stored as N² words, Fig. 10c);
-//! the CSR form feeds the sparse-skipping scheduler (paper §4.4: the
+//! The CSR form feeds the sparse-skipping scheduler (paper §4.4: the
 //! scheduler bypasses zero-weight placeholders, giving `N·(k+1)` cycles
-//! per step for degree-k graphs).
+//! per step for degree-k graphs) and every software kernel. The dense
+//! N² form mirrors the weight-matrix BRAM of the hardware (stored as N²
+//! words, Fig. 10c) and is materialized **on demand** via
+//! [`IsingModel::dense`] only for the consumers that genuinely need it
+//! (BRAM images, the RLE compressor, PJRT artifact upload) — a 50k-node
+//! sparse instance never allocates the 10 GB dense array. See
+//! [`JStorage`] / DESIGN.md §8.
 
 use super::Graph;
+use std::borrow::Cow;
 
 /// Compressed sparse row matrix over i32 weights (symmetric couplings,
 /// both triangles stored for row-major streaming).
@@ -21,40 +26,44 @@ pub struct CsrMatrix {
 
 impl CsrMatrix {
     /// Build the symmetric CSR from an edge list.
+    ///
+    /// This is the single place coupling lists are canonicalized:
+    /// duplicate `(i, j)` entries are **merged by summing** their
+    /// weights (entries whose merged weight is zero are dropped),
+    /// self-loops and out-of-range endpoints panic. Columns within each
+    /// row come out sorted, so iteration order — and therefore the
+    /// bit-exact field accumulation order of every kernel — is
+    /// deterministic.
     pub fn from_edges(n: usize, edges: &[(u32, u32, i32)]) -> Self {
-        let mut deg = vec![0u32; n];
-        for &(i, j, _) in edges {
-            deg[i as usize] += 1;
-            deg[j as usize] += 1;
-        }
-        let mut row_ptr = vec![0u32; n + 1];
-        for i in 0..n {
-            row_ptr[i + 1] = row_ptr[i] + deg[i];
-        }
-        let nnz = row_ptr[n] as usize;
-        let mut col_idx = vec![0u32; nnz];
-        let mut values = vec![0i32; nnz];
-        let mut cursor = row_ptr[..n].to_vec();
+        let mut trip: Vec<(u32, u32, i32)> = Vec::with_capacity(edges.len() * 2);
         for &(i, j, w) in edges {
-            let ci = cursor[i as usize] as usize;
-            col_idx[ci] = j;
-            values[ci] = w;
-            cursor[i as usize] += 1;
-            let cj = cursor[j as usize] as usize;
-            col_idx[cj] = i;
-            values[cj] = w;
-            cursor[j as usize] += 1;
+            assert!((i as usize) < n && (j as usize) < n, "edge ({i},{j}) out of range");
+            assert_ne!(i, j, "self-loop at node {i}");
+            trip.push((i, j, w));
+            trip.push((j, i, w));
         }
-        // sort columns within each row for deterministic iteration
-        for i in 0..n {
-            let (s, e) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
-            let mut pairs: Vec<(u32, i32)> =
-                col_idx[s..e].iter().copied().zip(values[s..e].iter().copied()).collect();
-            pairs.sort_unstable_by_key(|p| p.0);
-            for (off, (c, v)) in pairs.into_iter().enumerate() {
-                col_idx[s + off] = c;
-                values[s + off] = v;
+        trip.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut merged: Vec<(u32, u32, i32)> = Vec::with_capacity(trip.len());
+        for (i, j, w) in trip {
+            match merged.last_mut() {
+                Some(last) if last.0 == i && last.1 == j => last.2 += w,
+                _ => merged.push((i, j, w)),
             }
+        }
+        merged.retain(|&(_, _, w)| w != 0);
+
+        let mut row_ptr = vec![0u32; n + 1];
+        for &(i, _, _) in &merged {
+            row_ptr[i as usize + 1] += 1;
+        }
+        for i in 0..n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = Vec::with_capacity(merged.len());
+        let mut values = Vec::with_capacity(merged.len());
+        for (_, j, w) in merged {
+            col_idx.push(j);
+            values.push(w);
         }
         Self { n, row_ptr, col_idx, values }
     }
@@ -76,15 +85,29 @@ impl CsrMatrix {
     }
 }
 
+/// How an [`IsingModel`] stores its couplings.
+///
+/// `Dense` keeps the N² row-major array alongside the CSR (models built
+/// via [`IsingModel::from_dense`], e.g. replayed BRAM images);
+/// `SparseOnly` holds the CSR alone — O(nnz) memory, and
+/// [`IsingModel::dense`] builds the N² layout as a temporary only when
+/// a hardware-image consumer asks for it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JStorage {
+    Dense,
+    SparseOnly,
+}
+
 /// The Ising problem instance every backend consumes.
 #[derive(Debug, Clone)]
 pub struct IsingModel {
     n: usize,
     /// Bias vector `h` (4-bit range in hardware).
     pub h: Vec<i32>,
-    /// Dense symmetric couplings, row-major N×N, zero diagonal.
-    j_dense: Vec<i32>,
-    /// Sparse couplings for the skipping scheduler.
+    /// Dense symmetric couplings, row-major N×N, zero diagonal — only
+    /// retained for models constructed from an explicit dense array.
+    j_dense: Option<Vec<i32>>,
+    /// Canonical coupling storage for kernels and energy.
     j_sparse: CsrMatrix,
 }
 
@@ -92,20 +115,25 @@ impl IsingModel {
     /// Build from a graph with all-zero biases (MAX-CUT mapping uses
     /// `J_ij = −w_ij`, see `problems::maxcut`). `scale` multiplies every
     /// coupling (the annealer works in integer fixed-point; Table 6's
-    /// 4-bit J supports |scaled| ≤ 7).
+    /// 4-bit J supports |scaled| ≤ 7). Storage is [`JStorage::SparseOnly`].
     pub fn from_graph(g: &Graph, scale: i32) -> Self {
         let n = g.num_nodes();
-        let mut j_dense = vec![0i32; n * n];
         let scaled: Vec<(u32, u32, i32)> =
             g.edges().iter().map(|&(i, j, w)| (i, j, w * scale)).collect();
-        for &(i, j, w) in &scaled {
-            j_dense[i as usize * n + j as usize] = w;
-            j_dense[j as usize * n + i as usize] = w;
-        }
-        Self { n, h: vec![0; n], j_dense, j_sparse: CsrMatrix::from_edges(n, &scaled) }
+        Self::from_edges(n, vec![0; n], &scaled)
     }
 
-    /// Build from explicit dense parts (QUBO conversions use this).
+    /// Build from biases plus an undirected edge list — the sparse-first
+    /// constructor every problem encoder uses. Duplicate edges merge by
+    /// summing; self-loops panic (see [`CsrMatrix::from_edges`]).
+    /// Storage is [`JStorage::SparseOnly`]: memory is O(n + nnz).
+    pub fn from_edges(n: usize, h: Vec<i32>, edges: &[(u32, u32, i32)]) -> Self {
+        assert_eq!(h.len(), n);
+        Self { n, h, j_dense: None, j_sparse: CsrMatrix::from_edges(n, edges) }
+    }
+
+    /// Build from explicit dense parts (BRAM image replay, fixture
+    /// loads). The dense array is retained ([`JStorage::Dense`]).
     pub fn from_dense(n: usize, h: Vec<i32>, j_dense: Vec<i32>) -> Self {
         assert_eq!(h.len(), n);
         assert_eq!(j_dense.len(), n * n);
@@ -120,22 +148,41 @@ impl IsingModel {
             }
         }
         let j_sparse = CsrMatrix::from_edges(n, &edges);
-        Self { n, h, j_dense, j_sparse }
+        Self { n, h, j_dense: Some(j_dense), j_sparse }
     }
 
     pub fn n(&self) -> usize {
         self.n
     }
 
-    /// Dense row i of J.
-    #[inline(always)]
-    pub fn j_row(&self, i: usize) -> &[i32] {
-        &self.j_dense[i * self.n..(i + 1) * self.n]
+    /// Which coupling storage mode this model carries.
+    pub fn storage(&self) -> JStorage {
+        if self.j_dense.is_some() {
+            JStorage::Dense
+        } else {
+            JStorage::SparseOnly
+        }
     }
 
-    /// Full dense J (row-major) — streamed into the PJRT artifact.
-    pub fn j_dense(&self) -> &[i32] {
-        &self.j_dense
+    /// Full dense J (row-major N²). Borrows the stored array for
+    /// [`JStorage::Dense`] models; for [`JStorage::SparseOnly`] it
+    /// scatters the CSR into a freshly allocated N² temporary — callers
+    /// (BRAM image, RLE compressor, PJRT upload) must accept that cost
+    /// knowingly. Kernels and energy never call this.
+    pub fn dense(&self) -> Cow<'_, [i32]> {
+        match &self.j_dense {
+            Some(d) => Cow::Borrowed(d.as_slice()),
+            None => {
+                let mut d = vec![0i32; self.n * self.n];
+                for i in 0..self.n {
+                    let (cols, vals) = self.j_sparse.row(i);
+                    for (c, v) in cols.iter().zip(vals) {
+                        d[i * self.n + *c as usize] = *v;
+                    }
+                }
+                Cow::Owned(d)
+            }
+        }
     }
 
     /// Sparse couplings.

@@ -14,9 +14,11 @@ mod ising;
 mod quantize;
 
 pub use chimera::{chimera, k_n_embedding_qubits};
-pub use generate::{complete_graph, planar_like, random_graph, torus_2d, GraphSpec};
+pub use generate::{
+    complete_graph, planar_like, power_law, random_graph, random_regular, torus_2d, GraphSpec,
+};
 pub use gset::{parse_gset, write_gset};
-pub use ising::{CsrMatrix, IsingModel};
+pub use ising::{CsrMatrix, IsingModel, JStorage};
 pub use quantize::{quantize, sparsify, QuantizeReport};
 
 

@@ -33,7 +33,7 @@ pub fn quantize(g: &Graph, bits: u32) -> QuantizeReport {
     let wmax = g.edges().iter().map(|e| e.2.abs()).max().unwrap_or(1) as f64;
     let scale = wmax / qmax as f64;
     let n = g.num_nodes();
-    let mut j = vec![0i32; n * n];
+    let mut edges = Vec::with_capacity(g.num_edges());
     let mut max_err: f64 = 0.0;
     for &(a, b, w) in g.edges() {
         let q = (w as f64 / scale).round().clamp(-(qmax as f64), qmax as f64) as i32;
@@ -41,13 +41,14 @@ pub fn quantize(g: &Graph, bits: u32) -> QuantizeReport {
         max_err = max_err.max(err);
         // MAX-CUT mapping sign convention is applied by the caller; here
         // we quantize the raw couplings
-        j[a as usize * n + b as usize] = q;
-        j[b as usize * n + a as usize] = q;
+        if q != 0 {
+            edges.push((a, b, q));
+        }
     }
     QuantizeReport {
         scale,
         max_rel_error: max_err,
-        model: IsingModel::from_dense(n, vec![0; n], j),
+        model: IsingModel::from_edges(n, vec![0; n], &edges),
     }
 }
 
@@ -82,7 +83,7 @@ mod tests {
         // 4-bit: worst-case rounding error ≤ scale/2 / wmax = 1/(2·7)
         assert!(rep.max_rel_error <= 0.5 / 7.0 + 1e-9, "err {}", rep.max_rel_error);
         // codes stay in [−7, 7]
-        assert!(rep.model.j_dense().iter().all(|&v| (-7..=7).contains(&v)));
+        assert!(rep.model.dense().iter().all(|&v| (-7..=7).contains(&v)));
     }
 
     #[test]

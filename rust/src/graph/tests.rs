@@ -67,6 +67,48 @@ fn random_graph_exact_edge_count() {
 }
 
 #[test]
+fn random_regular_is_exactly_regular() {
+    for (n, k, seed) in [(10, 3, 1u64), (101, 4, 2), (64, 7, 3), (40, 3, 99)] {
+        let g = random_regular(n, k, &[-1, 1], seed);
+        assert_eq!(g.num_nodes(), n, "n={n} k={k}");
+        assert_eq!(g.num_edges(), n * k / 2, "n={n} k={k}");
+        assert!(g.degrees().iter().all(|&d| d == k), "n={n} k={k}: not {k}-regular");
+        assert!(g.weights_within(-1, 1));
+    }
+    // deterministic per seed
+    let a = random_regular(30, 3, &[1], 7);
+    let b = random_regular(30, 3, &[1], 7);
+    assert_eq!(a.edges(), b.edges());
+}
+
+#[test]
+#[should_panic(expected = "must be even")]
+fn random_regular_rejects_odd_stub_count() {
+    random_regular(5, 3, &[1], 1);
+}
+
+#[test]
+fn power_law_shape_and_determinism() {
+    let g = power_law(300, 3, &[-1, 1], 11);
+    assert_eq!(g.num_nodes(), 300);
+    // seed clique (4 choose 2 = 6 edges) + 3 per subsequent node
+    assert_eq!(g.num_edges(), 6 + (300 - 4) * 3);
+    assert!(g.weights_within(-1, 1));
+    let degs = g.degrees();
+    assert!(degs.iter().all(|&d| d >= 3), "every node attaches at least m edges");
+    // preferential attachment concentrates degree: the max hub degree
+    // must clearly exceed the mean (heavy tail)
+    let mean = g.mean_degree();
+    assert!(
+        g.max_degree() as f64 > 3.0 * mean,
+        "no hub: max degree {} vs mean {mean:.1}",
+        g.max_degree()
+    );
+    let b = power_law(300, 3, &[-1, 1], 11);
+    assert_eq!(g.edges(), b.edges());
+}
+
+#[test]
 fn complete_graph_has_all_pairs() {
     let g = complete_graph(10, &[1], 0);
     assert_eq!(g.num_edges(), 45);
@@ -127,15 +169,68 @@ fn csr_is_symmetric_and_sorted() {
 fn ising_dense_sparse_agree() {
     let g = random_graph(40, 150, &[-1, 1], 11);
     let m = IsingModel::from_graph(&g, 1);
+    let dense = m.dense();
     for i in 0..40 {
-        let dense = m.j_row(i);
         let (cols, vals) = m.j_sparse().row(i);
         let mut from_sparse = vec![0i32; 40];
         for (c, v) in cols.iter().zip(vals) {
             from_sparse[*c as usize] = *v;
         }
-        assert_eq!(dense, &from_sparse[..], "row {i}");
+        assert_eq!(&dense[i * 40..(i + 1) * 40], &from_sparse[..], "row {i}");
     }
+}
+
+#[test]
+fn ising_duplicate_edges_merge_by_sum() {
+    // the historical divergence: duplicates were last-write-wins in the
+    // dense array but double-stored (and summed by the kernel) in the
+    // CSR — from_edges now merges by summing in one place, so the CSR,
+    // the on-demand dense image, and energy() all agree
+    let edges = [(0u32, 1u32, 3i32), (1, 0, 2), (0, 1, -1), (1, 2, 5)];
+    let m = IsingModel::from_edges(3, vec![0; 3], &edges);
+    let (cols, vals) = m.j_sparse().row(0);
+    assert_eq!(cols, &[1]);
+    assert_eq!(vals, &[4]); // 3 + 2 − 1
+    let d = m.dense();
+    assert_eq!(d[1], 4);
+    assert_eq!(d[3], 4);
+    assert_eq!(d[5], 5);
+    // energy through the merged weight: H(σ) = −Σ J σσ
+    assert_eq!(m.energy(&[1, 1, 1]), -9);
+    assert_eq!(m.energy(&[1, -1, 1]), 4 - 5);
+    // a dense model built from the merged image is indistinguishable
+    let md = IsingModel::from_dense(3, vec![0; 3], d.into_owned());
+    assert_eq!(m.energy(&[1, -1, -1]), md.energy(&[1, -1, -1]));
+}
+
+#[test]
+fn ising_duplicates_cancelling_to_zero_are_dropped() {
+    let m = IsingModel::from_edges(2, vec![0; 2], &[(0, 1, 4), (0, 1, -4)]);
+    assert_eq!(m.j_sparse().nnz(), 0);
+    assert_eq!(m.max_degree(), 0);
+}
+
+#[test]
+#[should_panic(expected = "self-loop")]
+fn ising_from_edges_rejects_self_loops() {
+    IsingModel::from_edges(3, vec![0; 3], &[(1, 1, 2)]);
+}
+
+#[test]
+#[should_panic(expected = "out of range")]
+fn ising_from_edges_rejects_out_of_range() {
+    IsingModel::from_edges(3, vec![0; 3], &[(0, 3, 2)]);
+}
+
+#[test]
+fn storage_modes() {
+    let g = random_graph(10, 20, &[-1, 1], 23);
+    let sparse = IsingModel::from_graph(&g, 1);
+    assert_eq!(sparse.storage(), JStorage::SparseOnly);
+    let dense = IsingModel::from_dense(10, sparse.h.clone(), sparse.dense().into_owned());
+    assert_eq!(dense.storage(), JStorage::Dense);
+    // both modes produce the identical dense image
+    assert_eq!(&sparse.dense()[..], &dense.dense()[..]);
 }
 
 #[test]
@@ -155,7 +250,7 @@ fn ising_energy_matches_bruteforce() {
 fn ising_scaling_applies_to_couplings() {
     let g = Graph::new(2, vec![(0, 1, 1)]);
     let m = IsingModel::from_graph(&g, 8);
-    assert_eq!(m.j_row(0)[1], 8);
+    assert_eq!(m.j_sparse().row(0), (&[1u32][..], &[8i32][..]));
     assert_eq!(m.energy(&[1, 1]), -8);
     assert_eq!(m.energy(&[1, -1]), 8);
 }
@@ -164,7 +259,7 @@ fn ising_scaling_applies_to_couplings() {
 fn ising_from_dense_roundtrip() {
     let g = random_graph(12, 30, &[-1, 1], 17);
     let m = IsingModel::from_graph(&g, 2);
-    let m2 = IsingModel::from_dense(12, m.h.clone(), m.j_dense().to_vec());
+    let m2 = IsingModel::from_dense(12, m.h.clone(), m.dense().into_owned());
     let sigma: Vec<i32> = (0..12).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
     assert_eq!(m.energy(&sigma), m2.energy(&sigma));
     assert_eq!(m.max_degree(), m2.max_degree());

@@ -86,7 +86,7 @@ impl BramInit {
     /// Serialize a model into `.coe` init files.
     pub fn from_model(model: &IsingModel, j_bits: u32) -> Result<Self> {
         let j_words: Result<Vec<u32>> =
-            model.j_dense().iter().map(|&v| to_twos(v, j_bits)).collect();
+            model.dense().iter().map(|&v| to_twos(v, j_bits)).collect();
         let h_words: Result<Vec<u32>> = model.h.iter().map(|&v| to_twos(v, j_bits)).collect();
         Ok(Self {
             j_bits,
@@ -138,7 +138,7 @@ mod tests {
         let init = BramInit::from_model(&m, 4).unwrap();
         assert!(init.j_coe.starts_with("memory_initialization_radix=16;"));
         let m2 = init.to_model(12).unwrap();
-        assert_eq!(m.j_dense(), m2.j_dense());
+        assert_eq!(&m.dense()[..], &m2.dense()[..]);
         assert_eq!(m.h, m2.h);
     }
 
@@ -148,7 +148,7 @@ mod tests {
         let m = maxcut::ising_from_graph(&g, 8); // J = −8 < 4-bit min? −8 fits; +8 doesn't
         // scale 8 on −1 weights gives +8 which overflows 4-bit [−8, 7]
         let res = BramInit::from_model(&m, 4);
-        let has_plus8 = m.j_dense().iter().any(|&v| v == 8);
+        let has_plus8 = m.dense().iter().any(|&v| v == 8);
         assert_eq!(res.is_err(), has_plus8);
     }
 

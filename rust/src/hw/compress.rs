@@ -156,7 +156,7 @@ impl CompressionReport {
         let n = model.n() as u64;
         Ok(Self {
             dense_bits: n * n * j_bits as u64,
-            rle_bits: rle_encode(model.j_dense())?.len() as u64 * 8,
+            rle_bits: rle_encode(&model.dense())?.len() as u64 * 8,
             delta_bits: delta_encode(model)?.len() as u64 * 8,
         })
     }
@@ -191,9 +191,9 @@ mod tests {
         for (n, m) in [(10, 10), (20, 40), (30, 200)] {
             let g = random_graph(n, m, &[-3, -1, 1, 3], n as u64);
             let model = maxcut::ising_from_graph(&g, 2);
-            let enc = rle_encode(model.j_dense()).unwrap();
+            let enc = rle_encode(&model.dense()).unwrap();
             let dec = rle_decode(&enc, n * n).unwrap();
-            assert_eq!(model.j_dense(), &dec[..]);
+            assert_eq!(&model.dense()[..], &dec[..]);
         }
     }
 
@@ -210,7 +210,7 @@ mod tests {
         let model = maxcut::ising_from_graph(&g, 4);
         let enc = delta_encode(&model).unwrap();
         let dec = delta_decode(&enc, model.n()).unwrap();
-        assert_eq!(model.j_dense(), &dec[..]);
+        assert_eq!(&model.dense()[..], &dec[..]);
     }
 
     #[test]
@@ -219,7 +219,7 @@ mod tests {
         let model = maxcut::ising_from_graph(&g, 4);
         let enc = delta_encode(&model).unwrap();
         assert!(delta_decode(&enc[..enc.len() - 1], model.n()).is_err());
-        let renc = rle_encode(model.j_dense()).unwrap();
+        let renc = rle_encode(&model.dense()).unwrap();
         assert!(rle_decode(&renc[..renc.len() - 1], 256).is_err());
     }
 

@@ -103,7 +103,7 @@ impl HwEngine {
         // --- memories ---------------------------------------------------
         // Weight BRAM: dense N×N words (the paper stores the full matrix
         // and skips placeholders by address generation).
-        let mut j_bram = Bram::from_words(model.j_dense().to_vec());
+        let mut j_bram = Bram::from_words(model.dense().into_owned());
         let mut h_bram = Bram::from_words(model.h.clone());
         // σ delay line + Is banks per replica. Initial spins come from
         // the shared cross-layer convention; the row-major layout is

@@ -122,6 +122,7 @@ fn print_help() {
          \x20               partition: --n 20 [--maxv 9] [--pseed S]\n\
          \x20             [--steps 500] [--seed 1] [--runs 1] [--replicas R]\n\
          \x20             [--threads T]  (per-run step-kernel threads; default: auto)\n\
+         \x20             [--kernel auto|scalar|lanes|delta]  (bit-identical; auto = density heuristic)\n\
          \x20             [--backend sw|ssa|sa|hw|hw-shift-reg|pjrt]\n\
          \x20             [--tune [--tuner-seed 7]] [--early-stop]\n\
          \x20 tune        [--problem <kind>] <instance keys as for solve>\n\
@@ -149,6 +150,12 @@ fn cmd_solve(mut f: BTreeMap<String, String>) -> Result<()> {
     if let Some(t) = threads {
         anyhow::ensure!((1..=64).contains(&t), "--threads must be in 1..=64, got {t}");
     }
+    let kernel = match f.remove("kernel") {
+        None => None,
+        Some(v) => Some(ssqa::dynamics::KernelChoice::parse(&v).ok_or_else(|| {
+            anyhow::anyhow!("unknown kernel {v:?} (use auto|scalar|lanes|delta)")
+        })?),
+    };
     let backend = match f.remove("backend") {
         None => None,
         Some(v) => {
@@ -167,6 +174,7 @@ fn cmd_solve(mut f: BTreeMap<String, String>) -> Result<()> {
     req.backend = backend;
     req.replicas = replicas;
     req.threads = threads;
+    req.kernel = kernel;
     if tune {
         req = req.auto_tune(tuner_seed);
     }

@@ -13,15 +13,13 @@ use crate::problems::qubo::Qubo;
 ///
 /// `scale` multiplies couplings into the annealer's integer fixed-point
 /// range (the hardware's 4-bit J supports |J·scale| ≤ 7, Table 6).
+/// Storage is sparse-only (O(edges), not O(n²)), so G-set-shaped 50k+
+/// node instances encode within commodity RAM.
 pub fn ising_from_graph(g: &Graph, scale: i32) -> IsingModel {
     let n = g.num_nodes();
-    let mut j = vec![0i32; n * n];
-    for &(a, b, w) in g.edges() {
-        let (a, b) = (a as usize, b as usize);
-        j[a * n + b] = -w * scale;
-        j[b * n + a] = -w * scale;
-    }
-    IsingModel::from_dense(n, vec![0; n], j)
+    let edges: Vec<(u32, u32, i32)> =
+        g.edges().iter().map(|&(a, b, w)| (a, b, -w * scale)).collect();
+    IsingModel::from_edges(n, vec![0; n], &edges)
 }
 
 /// Cut value of a ±1 configuration.

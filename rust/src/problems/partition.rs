@@ -30,15 +30,13 @@ impl PartitionInstance {
     /// is dropped by the model; see [`Self::imbalance`]).
     pub fn to_ising(&self) -> IsingModel {
         let n = self.numbers.len();
-        let mut j = vec![0i32; n * n];
+        let mut edges = Vec::with_capacity(n * (n - 1) / 2);
         for i in 0..n {
             for k in (i + 1)..n {
-                let v = -2 * self.numbers[i] * self.numbers[k];
-                j[i * n + k] = v;
-                j[k * n + i] = v;
+                edges.push((i as u32, k as u32, -2 * self.numbers[i] * self.numbers[k]));
             }
         }
-        IsingModel::from_dense(n, vec![0; n], j)
+        IsingModel::from_edges(n, vec![0; n], &edges)
     }
 
     /// |Σ_{+} − Σ_{−}| for an assignment.

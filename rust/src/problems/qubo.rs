@@ -5,22 +5,27 @@
 
 use crate::api::{Problem, ProblemKind, Solution};
 use crate::graph::IsingModel;
+use std::collections::BTreeMap;
 
 /// `minimize Σ_i lin_i x_i + Σ_{i<j} Q_ij x_i x_j`, `x ∈ {0,1}ⁿ`.
 ///
 /// Coefficients are symmetrized on ingestion: `add_quadratic(i, j, c)`
-/// makes the full pair coefficient `Q_ij = c` (cumulative).
+/// makes the full pair coefficient `Q_ij = c` (cumulative). Pair terms
+/// are held in a sorted map keyed `(min(i,j), max(i,j))` — O(terms)
+/// memory rather than a dense n² table, so penalty encodings of
+/// 50k-variable sparse problems fit in RAM, and iteration order is
+/// deterministic for the bit-exactness contract.
 #[derive(Debug, Clone)]
 pub struct Qubo {
     n: usize,
-    quad: Vec<i32>, // symmetric, quad[i][j] == Q_ij == quad[j][i]
+    quad: BTreeMap<(u32, u32), i32>, // key (i, j) with i < j; value Q_ij
     lin: Vec<i32>,
 }
 
 impl Qubo {
     /// Create an empty n-variable QUBO.
     pub fn new(n: usize) -> Self {
-        Self { n, quad: vec![0; n * n], lin: vec![0; n] }
+        Self { n, quad: BTreeMap::new(), lin: vec![0; n] }
     }
 
     pub fn n(&self) -> usize {
@@ -35,8 +40,8 @@ impl Qubo {
     /// Add `c · x_i x_j`, i ≠ j.
     pub fn add_quadratic(&mut self, i: usize, j: usize, c: i32) {
         assert_ne!(i, j, "use add_linear for diagonal terms (x_i² = x_i)");
-        self.quad[i * self.n + j] += c;
-        self.quad[j * self.n + i] += c;
+        let key = (i.min(j) as u32, i.max(j) as u32);
+        *self.quad.entry(key).or_insert(0) += c;
     }
 
     /// Deterministic random QUBO: linear and pair coefficients drawn
@@ -65,26 +70,25 @@ impl Qubo {
         let mut c: i64 = 0;
         for i in 0..self.n {
             c += 2 * self.lin[i] as i64;
-            for j in (i + 1)..self.n {
-                c += self.quad[i * self.n + j] as i64;
-            }
+        }
+        for &q in self.quad.values() {
+            c += q as i64;
         }
         QuboIsingMap { c }
     }
 
-    /// Objective value of a 0/1 assignment.
+    /// Objective value of a 0/1 assignment — O(n + terms).
     pub fn value(&self, x: &[u8]) -> i64 {
         assert_eq!(x.len(), self.n);
         let mut v: i64 = 0;
         for i in 0..self.n {
-            if x[i] == 0 {
-                continue;
+            if x[i] == 1 {
+                v += self.lin[i] as i64;
             }
-            v += self.lin[i] as i64;
-            for j in (i + 1)..self.n {
-                if x[j] == 1 {
-                    v += self.quad[i * self.n + j] as i64;
-                }
+        }
+        for (&(i, j), &q) in &self.quad {
+            if x[i as usize] == 1 && x[j as usize] == 1 {
+                v += q as i64;
             }
         }
         v
@@ -104,26 +108,24 @@ impl Qubo {
     /// returned [`QuboIsingMap`] performs the back-conversion.
     pub fn to_ising(&self) -> (IsingModel, QuboIsingMap) {
         let n = self.n;
-        let mut h = vec![0i32; n];
-        let mut j_dense = vec![0i32; n * n];
+        let mut a = vec![0i64; n]; // a_i = 2·lin_i + Σ_{j≠i} Q_ij
         let mut c: i64 = 0;
         for i in 0..n {
             c += 2 * self.lin[i] as i64;
-            let mut a: i64 = 2 * self.lin[i] as i64;
-            for j in 0..n {
-                if j != i {
-                    a += self.quad[i * self.n + j] as i64;
-                }
-                if j > i {
-                    let q = self.quad[i * self.n + j];
-                    c += q as i64;
-                    j_dense[i * n + j] = -q;
-                    j_dense[j * n + i] = -q;
-                }
-            }
-            h[i] = i32::try_from(-a).expect("h overflow");
+            a[i] = 2 * self.lin[i] as i64;
         }
-        (IsingModel::from_dense(n, h, j_dense), QuboIsingMap { c })
+        let mut edges = Vec::with_capacity(self.quad.len());
+        for (&(i, j), &q) in &self.quad {
+            c += q as i64;
+            a[i as usize] += q as i64;
+            a[j as usize] += q as i64;
+            if q != 0 {
+                edges.push((i, j, -q));
+            }
+        }
+        let h: Vec<i32> =
+            a.into_iter().map(|ai| i32::try_from(-ai).expect("h overflow")).collect();
+        (IsingModel::from_edges(n, h, &edges), QuboIsingMap { c })
     }
 }
 

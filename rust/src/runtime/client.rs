@@ -155,10 +155,16 @@ impl PjrtAnnealer {
             "model n={} exceeds artifact n={n}",
             model.n()
         );
-        // zero-pad the problem into the artifact's shape
+        // zero-pad the problem into the artifact's shape, scattering the
+        // CSR directly so sparse-only models never build an N²-of-model
+        // dense intermediate (the artifact buffer itself is still dense
+        // — the PJRT step consumes a full matrix)
         let mut j = vec![0i32; n * n];
         for i in 0..model.n() {
-            j[i * n..i * n + model.n()].copy_from_slice(model.j_row(i));
+            let (cols, vals) = model.j_sparse().row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                j[i * n + *c as usize] = *v;
+            }
         }
         let mut h = vec![0i32; n];
         h[..model.n()].copy_from_slice(&model.h);

@@ -219,24 +219,87 @@ fn prop_gset_roundtrip() {
     }
 }
 
-/// Property: CSR row iteration reproduces the dense row exactly.
+/// Property: CSR row iteration reproduces the dense image exactly.
 #[test]
 fn prop_csr_matches_dense() {
     for case in 0..CASES {
         let mut rng = Xorshift64Star::new(0x5000 + case);
         let g = arb_graph(&mut rng);
+        let n = g.num_nodes();
         let m = maxcut::ising_from_graph(&g, 2);
+        let image = m.dense();
         let csr = CsrMatrix::from_edges(
-            g.num_nodes(),
+            n,
             &g.edges().iter().map(|&(a, b, w)| (a, b, -w * 2)).collect::<Vec<_>>(),
         );
-        for i in 0..g.num_nodes() {
+        for i in 0..n {
             let (cols, vals) = csr.row(i);
-            let mut dense = vec![0i32; g.num_nodes()];
+            let mut dense = vec![0i32; n];
             for (c, v) in cols.iter().zip(vals) {
                 dense[*c as usize] = *v;
             }
-            assert_eq!(m.j_row(i), &dense[..], "case {case} row {i}");
+            assert_eq!(&image[i * n..(i + 1) * n], &dense[..], "case {case} row {i}");
+        }
+    }
+}
+
+/// Property (ISSUE 6 satellite): duplicate-heavy edge lists build the
+/// **same model** through the sparse path (`IsingModel::from_edges`,
+/// merge-by-sum in one place) as through a hand-merged dense matrix
+/// (`IsingModel::from_dense`) — same dense image, same energies, and
+/// bit-identical SSQA step traces on both the lanes and the
+/// flip-frontier delta kernels.
+#[test]
+fn prop_duplicate_edges_dense_sparse_agree() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0xF000 + case);
+        let n = 4 + rng.next_below(20);
+        // duplicate-heavy triplets: repeated pairs, both orientations,
+        // signed weights that may cancel to zero
+        let m_raw = 2 * n + rng.next_below(4 * n);
+        let mut edges = Vec::with_capacity(m_raw);
+        for _ in 0..m_raw {
+            let i = rng.next_below(n);
+            let mut j = rng.next_below(n);
+            while j == i {
+                j = rng.next_below(n);
+            }
+            let w = rng.next_below(9) as i32 - 4;
+            edges.push((i as u32, j as u32, w));
+        }
+        let h: Vec<i32> = (0..n).map(|_| rng.next_below(9) as i32 - 4).collect();
+
+        // hand-merge the duplicates into a symmetric dense matrix
+        let mut dense = vec![0i32; n * n];
+        for &(i, j, w) in &edges {
+            dense[i as usize * n + j as usize] += w;
+            dense[j as usize * n + i as usize] += w;
+        }
+        let sparse = ssqa::graph::IsingModel::from_edges(n, h.clone(), &edges);
+        let from_dense = ssqa::graph::IsingModel::from_dense(n, h, dense.clone());
+        assert_eq!(&sparse.dense()[..], &dense[..], "case {case}: dense images");
+
+        let steps = 4 + rng.next_below(10);
+        let p = arb_params(&mut rng, steps);
+        let seed = rng.next_u64() as u32;
+        for _ in 0..8 {
+            let sigma: Vec<i32> =
+                (0..n).map(|_| if rng.next_f64() < 0.5 { -1 } else { 1 }).collect();
+            assert_eq!(sparse.energy(&sigma), from_dense.energy(&sigma), "case {case}");
+        }
+        for kernel in [
+            ssqa::dynamics::StepKernel::Scalar,
+            ssqa::dynamics::StepKernel::Lanes { threads: 2 },
+            ssqa::dynamics::StepKernel::Delta,
+        ] {
+            let eng = SsqaEngine::new(p, steps).with_kernel(kernel);
+            let (sa, ra) = eng.run(&sparse, steps, seed);
+            let (sb, rb) = eng.run(&from_dense, steps, seed);
+            let ctx = format!("case {case} kernel {}", kernel.name());
+            assert_eq!(sa.sigma, sb.sigma, "{ctx}: sigma trace");
+            assert_eq!(sa.is, sb.is, "{ctx}: accumulators");
+            assert_eq!(ra.replica_energies, rb.replica_energies, "{ctx}");
+            assert_eq!(ra.best_sigma, rb.best_sigma, "{ctx}");
         }
     }
 }

@@ -1,6 +1,7 @@
 //! Differential bit-exactness harness for the step-parallel kernel
-//! (ISSUE 4): the lane-vectorized / threaded kernel must be
-//! bit-identical to the scalar `CellUpdate` reference path for every
+//! (ISSUE 4) and the flip-frontier delta kernel (ISSUE 6): every
+//! non-scalar kernel must be bit-identical to the scalar `CellUpdate`
+//! reference path for every
 //! thread count, replica count (including non-powers-of-two and R = 1),
 //! problem size (including non-powers-of-two and N = 1), both
 //! `DelayKind`s of the hardware model, and mid-run `StepObserver` early
@@ -24,6 +25,13 @@ use ssqa::rng::Xorshift64Star;
 /// Thread counts the contract is proven for (1 = vectorized-only, plus
 /// counts that divide N unevenly and exceed small N entirely).
 const THREADS: [usize; 4] = [1, 2, 3, 8];
+
+/// Every non-scalar kernel variant under test: the lane-vectorized
+/// kernel at each thread count, plus the flip-frontier delta kernel
+/// (ISSUE 6) — all bound to the identical bit-exactness contract.
+fn variant_kernels() -> impl Iterator<Item = StepKernel> {
+    THREADS.iter().map(|&threads| StepKernel::Lanes { threads }).chain([StepKernel::Delta])
+}
 
 /// Replica counts: R = 1 (SSA degenerate), primes and non-powers-of-two
 /// off the `(k + 1) mod R` fast path, plus the paper's R = 20.
@@ -95,10 +103,10 @@ fn prop_kernel_bit_exact_vs_scalar() {
 
         let scalar = SsqaEngine::new(p, steps).with_kernel(StepKernel::Scalar);
         let (ref_state, ref_res) = scalar.run(&model, steps, seed);
-        for threads in THREADS {
-            let eng = SsqaEngine::new(p, steps).with_kernel(StepKernel::Lanes { threads });
+        for kernel in variant_kernels() {
+            let eng = SsqaEngine::new(p, steps).with_kernel(kernel);
             let (st, res) = eng.run(&model, steps, seed);
-            let ctx = format!("case {case} N={n} R={} threads={threads}", p.replicas);
+            let ctx = format!("case {case} N={n} R={} kernel={}", p.replicas, kernel.name());
             assert_states_eq(&ref_state, &st, p.replicas, &ctx);
             assert_eq!(ref_res.replica_energies, res.replica_energies, "{ctx}");
             assert_eq!(ref_res.best_sigma, res.best_sigma, "{ctx}");
@@ -135,10 +143,10 @@ fn prop_kernel_bit_exact_with_observer_early_stop() {
         let scalar = SsqaEngine::new(p, steps).with_kernel(StepKernel::Scalar);
         let (ref_state, ref_res) = scalar.run_observed(&model, steps, seed, &mut StopAt(stop_at));
         assert_eq!(ref_res.steps, stop_at, "case {case}: observer contract");
-        for threads in THREADS {
-            let eng = SsqaEngine::new(p, steps).with_kernel(StepKernel::Lanes { threads });
+        for kernel in variant_kernels() {
+            let eng = SsqaEngine::new(p, steps).with_kernel(kernel);
             let (st, res) = eng.run_observed(&model, steps, seed, &mut StopAt(stop_at));
-            let ctx = format!("case {case} stop_at={stop_at} threads={threads}");
+            let ctx = format!("case {case} stop_at={stop_at} kernel={}", kernel.name());
             assert_eq!(res.steps, stop_at, "{ctx}: executed-step count");
             assert_states_eq(&ref_state, &st, p.replicas, &ctx);
             assert_eq!(ref_res.replica_energies, res.replica_energies, "{ctx}");
@@ -165,17 +173,17 @@ fn prop_kernel_run_batch_bit_exact() {
         let ref_full = scalar.run_batch(&model, steps, &seeds);
         let ref_stopped =
             scalar.run_batch_observed(&model, steps, &seeds, &mut StopAt(stop_at));
-        for threads in THREADS {
-            let eng = SsqaEngine::new(p, steps).with_kernel(StepKernel::Lanes { threads });
+        for kernel in variant_kernels() {
+            let eng = SsqaEngine::new(p, steps).with_kernel(kernel);
             let full = eng.run_batch(&model, steps, &seeds);
             let stopped = eng.run_batch_observed(&model, steps, &seeds, &mut StopAt(stop_at));
             for (i, (a, b)) in ref_full.iter().zip(&full).enumerate() {
-                let ctx = format!("case {case} threads={threads} seed#{i}");
+                let ctx = format!("case {case} kernel={} seed#{i}", kernel.name());
                 assert_eq!(a.replica_energies, b.replica_energies, "{ctx}");
                 assert_eq!(a.best_sigma, b.best_sigma, "{ctx}");
             }
             for (i, (a, b)) in ref_stopped.iter().zip(&stopped).enumerate() {
-                let ctx = format!("case {case} threads={threads} stopped seed#{i}");
+                let ctx = format!("case {case} kernel={} stopped seed#{i}", kernel.name());
                 assert_eq!(a.steps, stop_at, "{ctx}: per-seed stop");
                 assert_eq!(b.steps, stop_at, "{ctx}: per-seed stop");
                 assert_eq!(a.replica_energies, b.replica_energies, "{ctx}");
@@ -198,13 +206,14 @@ fn prop_kernel_matches_hw_both_delay_kinds() {
         let p = arb_params(&mut rng, steps);
         let model = maxcut::ising_from_graph(&g, p.j_scale);
         let seed = rng.next_u64() as u32;
-        for threads in THREADS {
-            let eng = SsqaEngine::new(p, steps).with_kernel(StepKernel::Lanes { threads });
+        for kernel in variant_kernels() {
+            let eng = SsqaEngine::new(p, steps).with_kernel(kernel);
             let (_, sw) = eng.run(&model, steps, seed);
             for delay in [DelayKind::DualBram, DelayKind::ShiftReg] {
                 let mut hw = HwEngine::new(HwConfig { delay, ..HwConfig::default() }, p);
                 let hwr = hw.run(&model, steps, seed);
-                let ctx = format!("case {case} threads={threads} {delay:?} R={}", p.replicas);
+                let ctx =
+                    format!("case {case} kernel={} {delay:?} R={}", kernel.name(), p.replicas);
                 assert_eq!(sw.replica_energies, hwr.replica_energies, "{ctx}");
                 assert_eq!(sw.best_sigma, hwr.best_sigma, "{ctx}");
                 assert_eq!(sw.best_energy, hwr.best_energy, "{ctx}");
@@ -229,22 +238,30 @@ fn prop_ssa_kernel_bit_exact() {
         let seed = rng.next_u64() as u32;
         let params = SsaParams::gset_default();
 
-        // step-level: drive both paths side by side
+        // step-level: drive the scalar reference, the kernel path and
+        // the flip-frontier delta path side by side
         for threads in THREADS {
             let eng = SsaEngine::new(params, steps);
             let mut a = SsaState::init(n, seed);
             let mut b = SsaState::init(n, seed);
+            let mut c = SsaState::init(n, seed);
             let mut next_a = Vec::with_capacity(n);
             let mut next_b = Vec::with_capacity(n);
+            let mut next_c = Vec::with_capacity(n);
             let mut kscratch = KernelScratch::new(threads, 1);
+            let mut dscratch = KernelScratch::new(1, 1);
             for t in 0..steps {
                 let noise_t = params.noise.at(t, steps);
                 eng.step_into(&model, &mut a, noise_t, &mut next_a);
                 eng.step_kerneled(&model, &mut b, noise_t, &mut next_b, &mut kscratch, threads);
+                eng.step_delta(&model, &mut c, noise_t, &mut next_c, &mut dscratch);
                 let ctx = format!("case {case} threads={threads} step {t}");
                 assert_eq!(a.sigma, b.sigma, "{ctx}: sigma");
                 assert_eq!(a.is, b.is, "{ctx}: is");
                 assert_eq!(a.rng.states(), b.rng.states(), "{ctx}: rng");
+                assert_eq!(a.sigma, c.sigma, "{ctx}: delta sigma");
+                assert_eq!(a.is, c.is, "{ctx}: delta is");
+                assert_eq!(a.rng.states(), c.rng.states(), "{ctx}: delta rng");
             }
         }
 
@@ -252,10 +269,11 @@ fn prop_ssa_kernel_bit_exact() {
         let mut scalar = SsaEngine::new(params, steps);
         scalar.kernel = StepKernel::Scalar;
         let ref_res = scalar.anneal(&model, steps, seed);
-        for threads in THREADS {
-            let mut eng = SsaEngine::new(params, steps).with_threads(threads);
+        for kernel in variant_kernels() {
+            let mut eng = SsaEngine::new(params, steps);
+            eng.kernel = kernel;
             let res = eng.anneal(&model, steps, seed);
-            let ctx = format!("case {case} threads={threads}");
+            let ctx = format!("case {case} kernel={}", kernel.name());
             assert_eq!(ref_res.best_energy, res.best_energy, "{ctx}");
             assert_eq!(ref_res.best_sigma, res.best_sigma, "{ctx}");
             assert_eq!(ref_res.replica_energies, res.replica_energies, "{ctx}");
