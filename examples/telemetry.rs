@@ -1,0 +1,90 @@
+//! Telemetry walkthrough: trace an 800-node MAX-CUT anneal, plot the
+//! convergence trajectory from the recorded samples, and print the
+//! per-stage timing table plus the Prometheus exposition the server's
+//! `metrics` verb would serve.
+//!
+//! ```bash
+//! cargo run --release --example telemetry
+//! ```
+//!
+//! Writes `telemetry_trace.jsonl` (the versioned JSONL artifact —
+//! `ssqa solve --trace out.jsonl` produces the same file).
+
+use ssqa::api::SolveRequest;
+use ssqa::coordinator::{Router, RoutingPolicy, WorkerPool};
+use ssqa::graph::GraphSpec;
+use ssqa::problems::MaxCut;
+use ssqa::telemetry::TraceConfig;
+use std::sync::Arc;
+
+fn main() {
+    let steps = 500;
+    let spec = GraphSpec::G14;
+    let g = spec.build();
+    println!(
+        "instance: {} — {} nodes, {} edges ({})\n",
+        spec.name(),
+        g.num_nodes(),
+        g.num_edges(),
+        spec.structure()
+    );
+
+    let pool =
+        WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
+    let problem = Arc::new(MaxCut::named(spec));
+    let report = SolveRequest::new(problem)
+        .steps(steps)
+        .seed(7)
+        .runs(2)
+        .trace(TraceConfig::with_stride(10))
+        .run_on(&pool)
+        .expect("solve");
+    print!("{}", report.render());
+
+    let trace = report.trace.as_ref().expect("trace requested");
+    std::fs::write("telemetry_trace.jsonl", trace.to_jsonl()).expect("write trace");
+    let samples: usize = trace.runs.iter().map(|r| r.samples.len()).sum();
+    println!(
+        "\ntrace: {} runs, {samples} samples, solve_id {} → telemetry_trace.jsonl",
+        trace.runs.len(),
+        trace.solve_id
+    );
+
+    // ASCII convergence plot of the first run: best replica energy and
+    // replica agreement over the anneal, straight from the samples
+    let run = &trace.runs[0];
+    let (lo, hi) = run
+        .samples
+        .iter()
+        .fold((i64::MAX, i64::MIN), |(lo, hi), s| (lo.min(s.best_energy), hi.max(s.best_energy)));
+    let span = (hi - lo).max(1) as f64;
+    const WIDTH: usize = 56;
+    println!("\nconvergence of seed {} (best replica energy, ▒ = agreement):", run.seed);
+    println!("  energy {hi} … {lo}");
+    for s in &run.samples {
+        let bar = ((hi - s.best_energy) as f64 / span * WIDTH as f64).round() as usize;
+        let agree = (s.agreement * WIDTH as f64).round() as usize;
+        let mut row: Vec<char> = vec![' '; WIDTH + 1];
+        for c in row.iter_mut().take(agree) {
+            *c = '\u{2592}';
+        }
+        row[bar.min(WIDTH)] = '\u{2588}';
+        println!(
+            "  t={:>4} {:>8} |{}| flip {:>5.1}% q={:<3} nz={}",
+            s.step,
+            s.best_energy,
+            row.into_iter().collect::<String>(),
+            100.0 * s.flip_rate,
+            s.q_t,
+            s.noise_t,
+        );
+    }
+
+    println!("\nper-stage timings:\n{}", pool.metrics.timings.render());
+    println!("prometheus exposition (the server's `metrics` verb):");
+    for line in pool.metrics.render_prometheus().lines().take(12) {
+        println!("  {line}");
+    }
+    println!("  …");
+    pool.shutdown();
+}

@@ -1,0 +1,127 @@
+//! Telemetry overhead benchmark (DESIGN.md §9): the observer hook must
+//! be free when off and cheap when tracing.
+//!
+//! Three measured paths on the paper's 800-node benchmark scale:
+//!
+//! * `telemetry/off`      — plain `run_batch` (no observer anywhere)
+//! * `telemetry/noop`     — `run_batch_observed` with the `()` observer
+//! * `telemetry/trace64`  — a live [`TraceRecorder`] at stride 64
+//!
+//! Budgets (asserted as a loud warning, recorded in
+//! `BENCH_telemetry.json`): the no-op path within **2%** of off, the
+//! stride-64 trace within **10%**. Every path is also checked
+//! bit-identical — an observer that perturbed results would make the
+//! timing comparison meaningless.
+
+use ssqa::annealer::{SsqaEngine, SsqaParams};
+use ssqa::config::{bench, updates_per_sec, BenchArgs};
+use ssqa::graph::GraphSpec;
+use ssqa::problems::maxcut;
+use ssqa::telemetry::{SolveId, TraceConfig, TraceRecorder};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let steps = if args.quick { 20 } else { 100 };
+    let g = GraphSpec::G14.build();
+    let params = SsqaParams::gset_default(steps);
+    let model = maxcut::ising_from_graph(&g, params.j_scale);
+    let (n, r) = (g.num_nodes(), params.replicas);
+    let seeds: Vec<u32> = if args.quick { (1..=2).collect() } else { (1..=4).collect() };
+
+    if !args.matches("telemetry/overhead") {
+        return;
+    }
+
+    // bit-identity first: the timing comparison below is only
+    // meaningful if all three paths do the same annealing work
+    let eng = SsqaEngine::new(params, steps);
+    let baseline = eng.run_batch(&model, steps, &seeds);
+    assert_eq!(
+        baseline,
+        eng.run_batch_observed(&model, steps, &seeds, &mut ()),
+        "() observer must be bit-identical"
+    );
+    {
+        let mut rec = TraceRecorder::new(TraceConfig::with_stride(64), &model);
+        assert_eq!(
+            baseline,
+            eng.run_batch_observed(&model, steps, &seeds, &mut rec),
+            "TraceRecorder must be bit-identical"
+        );
+    }
+
+    let iters = if args.quick { 3 } else { 5 };
+    let off = bench(&format!("telemetry/off G14 {steps}st ×{}", seeds.len()), iters, || {
+        let eng = SsqaEngine::new(params, steps);
+        let _ = eng.run_batch(&model, steps, &seeds);
+    });
+    let noop = bench(&format!("telemetry/noop G14 {steps}st ×{}", seeds.len()), iters, || {
+        let eng = SsqaEngine::new(params, steps);
+        let _ = eng.run_batch_observed(&model, steps, &seeds, &mut ());
+    });
+    let traced = bench(
+        &format!("telemetry/trace64 G14 {steps}st ×{}", seeds.len()),
+        iters,
+        || {
+            let eng = SsqaEngine::new(params, steps);
+            let mut rec = TraceRecorder::new(TraceConfig::with_stride(64), &model);
+            let _ = eng.run_batch_observed(&model, steps, &seeds, &mut rec);
+            let _ = rec.finish(SolveId::NONE, "maxcut", "G14", params.replicas);
+        },
+    );
+
+    let noop_pct = 100.0 * (noop.min.as_secs_f64() / off.min.as_secs_f64() - 1.0);
+    let trace_pct = 100.0 * (traced.min.as_secs_f64() / off.min.as_secs_f64() - 1.0);
+    println!(
+        "  → off {:.2} M upd/s | noop {:+.2}% | trace64 {:+.2}%",
+        updates_per_sec(n, r, steps * seeds.len(), off.min) / 1e6,
+        noop_pct,
+        trace_pct,
+    );
+    // budget check: loud, not fatal — single-shot minima on a shared CI
+    // host jitter a few percent, and a failed build would hide the data
+    if noop_pct > 2.0 {
+        println!("  → WARNING: no-op observer overhead {noop_pct:.2}% exceeds the 2% budget");
+    }
+    if trace_pct > 10.0 {
+        println!("  → WARNING: stride-64 trace overhead {trace_pct:.2}% exceeds the 10% budget");
+    }
+
+    // append to the perf trajectory at the repo root
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let record = format!(
+        "{{\"unix_time\": {stamp}, \"bench\": \"telemetry/overhead\", \"graph\": \"G14\", \
+         \"n\": {n}, \"replicas\": {r}, \"steps\": {steps}, \"seeds\": {}, \
+         \"off_s\": {:.6}, \"noop_s\": {:.6}, \"trace64_s\": {:.6}, \
+         \"noop_overhead_pct\": {:.3}, \"trace64_overhead_pct\": {:.3}}}",
+        seeds.len(),
+        off.min.as_secs_f64(),
+        noop.min.as_secs_f64(),
+        traced.min.as_secs_f64(),
+        noop_pct,
+        trace_pct,
+    );
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_telemetry.json");
+    let mut records: Vec<String> = std::fs::read_to_string(json_path)
+        .ok()
+        .and_then(|s| {
+            // stored as a JSON array of flat records, one per line
+            let body = s.trim().strip_prefix('[')?.strip_suffix(']')?.trim().to_string();
+            Some(
+                body.lines()
+                    .map(|l| l.trim().trim_end_matches(',').to_string())
+                    .filter(|l| !l.is_empty() && !l.starts_with("//"))
+                    .collect(),
+            )
+        })
+        .unwrap_or_default();
+    records.push(record);
+    let out = format!("[\n  {}\n]\n", records.join(",\n  "));
+    match std::fs::write(json_path, out) {
+        Ok(()) => println!("  → recorded in BENCH_telemetry.json"),
+        Err(e) => println!("  → could not write BENCH_telemetry.json: {e}"),
+    }
+}

@@ -5,8 +5,25 @@
 
 use super::{Annealer, SsqaEngine, SsqaParams, SsqaState};
 use crate::config::{chunk_per_worker, num_threads, par_map, plan_run_threads};
+use crate::dynamics::DeltaStepStats;
 use crate::graph::{Graph, IsingModel};
 use crate::problems::maxcut;
+
+/// Per-step metadata the engine already has in hand when it consults an
+/// observer: the schedule point it just applied and — when the
+/// flip-frontier delta kernel ran the step — that kernel's decision
+/// stats. Passed by reference through [`StepObserver::observe_meta`] so
+/// observers that only need σ/energy (the default `observe` path) pay
+/// nothing for it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepMeta {
+    /// Replica-coupling magnitude Q(t) applied in this step.
+    pub q_t: i32,
+    /// Noise magnitude n_rnd(t) applied in this step.
+    pub noise_t: i32,
+    /// Delta-kernel frontier/rebuild stats (`None` for other kernels).
+    pub delta: Option<DeltaStepStats>,
+}
 
 /// Per-step observation hook for engines that support trajectory
 /// inspection and early stopping ([`SsqaEngine::run_observed`] /
@@ -27,6 +44,16 @@ pub trait StepObserver {
     /// Return `true` to stop the run early; the engine harvests the
     /// state as-is and reports the number of steps actually executed.
     fn observe(&mut self, t: usize, state: &SsqaState) -> bool;
+
+    /// [`Self::observe`] plus the step's [`StepMeta`]. Engines call
+    /// **this** entry point; the default discards the metadata and
+    /// delegates, so plain observers (the convergence monitor, `()`)
+    /// need not change. Telemetry observers override it to capture the
+    /// schedule point and kernel decisions.
+    fn observe_meta(&mut self, t: usize, state: &SsqaState, meta: &StepMeta) -> bool {
+        let _ = meta;
+        self.observe(t, state)
+    }
 }
 
 /// The no-op observer: watches nothing, never stops. `drive`-ing with
@@ -39,7 +66,7 @@ impl StepObserver for () {
 }
 
 /// Result of a single annealing run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RunResult {
     /// Lowest Ising energy found (best replica / best-seen).
     pub best_energy: i64,

@@ -12,7 +12,7 @@
 //! engine owns only the traversal order, the double-buffering and the
 //! schedules.
 
-use super::{params::SsqaParams, runner::RunResult, runner::StepObserver, Annealer};
+use super::{params::SsqaParams, runner::RunResult, runner::StepMeta, runner::StepObserver, Annealer};
 use crate::dynamics::{self, CellUpdate, KernelScratch, StepJob, StepKernel, StepScratch};
 use crate::graph::IsingModel;
 use crate::rng::RngMatrix;
@@ -292,7 +292,15 @@ impl SsqaEngine {
             let q_t = self.params.q.at(t);
             let noise_t = self.params.noise.at(t, horizon);
             self.step_kerneled(model, st, scratch, q_t, noise_t);
-            if observer.observe(t, st) {
+            // assemble the step's metadata for meta-aware observers; the
+            // default observe_meta discards it, so with `&mut ()` this
+            // whole block folds away and the loop is the unobserved one
+            let delta = match self.kernel {
+                StepKernel::Delta => scratch.delta_stats(),
+                _ => None,
+            };
+            let meta = StepMeta { q_t, noise_t, delta };
+            if observer.observe_meta(t, st, &meta) {
                 return t + 1;
             }
         }

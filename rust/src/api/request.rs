@@ -20,6 +20,7 @@ use crate::energy;
 use crate::graph::IsingModel;
 use crate::hw::DelayKind;
 use crate::resources::ResourceModel;
+use crate::telemetry::{RunTrace, SolveId, SpanTimer, TraceConfig};
 use crate::tuner::{Candidate, FpgaEstimate, MonitorConfig, TunerConfig};
 use crate::Result;
 use std::sync::Arc;
@@ -65,6 +66,15 @@ pub struct SolveRequest {
     /// Convergence-aware early stopping for the solve runs (software
     /// SSQA backend only; other backends run their full budget).
     pub early_stop: Option<MonitorConfig>,
+    /// Record a per-step run trace (CLI `--trace`, protocol `trace=`;
+    /// software SSQA backend only — other backends ignore it, like
+    /// `early_stop`). The recorded artifact comes back in
+    /// [`SolveReport::trace`].
+    pub trace: Option<TraceConfig>,
+    /// Correlation id for this solve; `None` mints a fresh one at
+    /// execution. The id appears in the report, every job outcome, the
+    /// protocol reply and the trace artifact header.
+    pub solve_id: Option<SolveId>,
 }
 
 impl SolveRequest {
@@ -81,6 +91,8 @@ impl SolveRequest {
             kernel: None,
             tune: None,
             early_stop: None,
+            trace: None,
+            solve_id: None,
         }
     }
 
@@ -150,6 +162,18 @@ impl SolveRequest {
         self
     }
 
+    /// Record a per-step run trace with the given sampling config.
+    pub fn trace(mut self, cfg: TraceConfig) -> Self {
+        self.trace = Some(cfg);
+        self
+    }
+
+    /// Pin the correlation id (defaults to a fresh [`SolveId`]).
+    pub fn solve_id(mut self, id: SolveId) -> Self {
+        self.solve_id = Some(id);
+        self
+    }
+
     /// Problem-aware default parameters. MAX-CUT gets the paper's
     /// calibrated G-set configuration; the penalty/QUBO encodings need a
     /// wider dynamic range, so `I0` scales with the largest per-spin
@@ -184,8 +208,11 @@ impl SolveRequest {
     pub fn run_on(&self, pool: &WorkerPool) -> Result<SolveReport> {
         anyhow::ensure!(self.runs >= 1, "runs must be at least 1");
         let t0 = std::time::Instant::now();
+        let solve_id = self.solve_id.unwrap_or_else(SolveId::fresh);
         let spec = JobSpec::new(Arc::clone(&self.problem));
+        let encode = SpanTimer::start();
         let model = spec.model(); // built once; every clone below shares it
+        pool.metrics.timings.record_ns("solve.encode", encode.elapsed_ns());
         let mut steps = self.steps;
         let mut params = self
             .params
@@ -199,7 +226,7 @@ impl SolveRequest {
             }
         };
         if let Some(cfg) = tune_cfg {
-            let report = pool.run_tune(&TuneJob { spec: spec.clone(), config: cfg });
+            let report = pool.run_tune(&TuneJob { spec: spec.clone(), config: cfg, solve_id });
             let winner = report.race.winner.clone();
             params = winner.params;
             steps = winner.steps;
@@ -215,6 +242,8 @@ impl SolveRequest {
         batch.early_stop = self.early_stop;
         batch.threads = self.threads;
         batch.kernel = self.kernel;
+        batch.solve_id = solve_id;
+        batch.trace = self.trace;
         pool.submit_batch(batch);
         let mut outcomes = pool.drain();
         // drain yields worker-completion order; chunk ids are assigned
@@ -223,6 +252,18 @@ impl SolveRequest {
         outcomes.sort_by_key(|o| o.id);
         if let Some(err) = outcomes.iter().find_map(|o| o.error.as_deref()) {
             anyhow::bail!("backend failed: {err}");
+        }
+        // reassemble the per-chunk traces in chunk-id (= seed) order —
+        // outcomes are already sorted, so the merged run list matches an
+        // unchunked recording of the same seed sweep
+        let mut trace: Option<RunTrace> = None;
+        for o in &mut outcomes {
+            if let Some(t) = o.trace.take() {
+                match &mut trace {
+                    None => trace = Some(t),
+                    Some(acc) => acc.merge(t),
+                }
+            }
         }
         let first = outcomes.first().expect("runs >= 1 submits at least one chunk");
         let sense = self.problem.sense();
@@ -262,10 +303,11 @@ impl SolveRequest {
             energy_j: energy::energy_j(power_w, latency_s),
         };
 
-        Ok(SolveReport {
+        let report = SolveReport {
             kind: self.problem.kind(),
             label: self.problem.label(),
             id: first.id,
+            solve_id,
             backend: first.backend,
             best_objective,
             feasible,
@@ -286,7 +328,13 @@ impl SolveRequest {
                 .filter_map(|o| o.modeled_energy_j)
                 .reduce(|a, b| a + b),
             tuned,
-        })
+            trace,
+        };
+        pool.metrics.timings.record_ns(
+            "solve.total",
+            t0.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+        );
+        Ok(report)
     }
 }
 
@@ -306,6 +354,10 @@ pub struct SolveReport {
     pub label: String,
     /// First coordinator outcome id (protocol continuity).
     pub id: u64,
+    /// Correlation id of this solve — the same id appears in every
+    /// chunk outcome, the protocol reply, the server log line and the
+    /// trace artifact header.
+    pub solve_id: SolveId,
     pub backend: BackendKind,
     /// Best domain objective found. When no run decoded feasible this
     /// is the *penalized* objective of the lowest-energy configuration.
@@ -345,6 +397,9 @@ pub struct SolveReport {
     pub modeled_energy_j: Option<f64>,
     /// Winning configuration when auto-tuning ran.
     pub tuned: Option<Candidate>,
+    /// The recorded run trace, when the request asked for one and the
+    /// backend supports tracing (software SSQA only).
+    pub trace: Option<RunTrace>,
 }
 
 impl SolveReport {
@@ -352,8 +407,14 @@ impl SolveReport {
     pub fn render(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
-        let _ =
-            writeln!(out, "{} ({}) backend={}", self.label, self.kind.name(), self.backend.name());
+        let _ = writeln!(
+            out,
+            "{} ({}) backend={} solve_id={}",
+            self.label,
+            self.kind.name(),
+            self.backend.name(),
+            self.solve_id,
+        );
         let _ = writeln!(
             out,
             "{} {} ({})",

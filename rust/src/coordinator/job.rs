@@ -11,6 +11,7 @@ use crate::api::{Problem, ProblemKind};
 use crate::dynamics::KernelChoice;
 use crate::graph::{Graph, GraphSpec, IsingModel};
 use crate::problems::maxcut::MaxCut;
+use crate::telemetry::{RunTrace, SolveId, SpanTimer, StageTimes, Tee, TraceConfig, TraceRecorder};
 use crate::tuner::{ConvergenceMonitor, MonitorConfig};
 use std::sync::{Arc, OnceLock};
 
@@ -88,6 +89,12 @@ pub struct Job {
     /// means [`KernelChoice::Auto`] — pick per model shape; results are
     /// bit-identical for any choice.
     pub kernel: Option<KernelChoice>,
+    /// Correlation id of the solve this job belongs to
+    /// ([`SolveId::NONE`] for directly constructed jobs).
+    pub solve_id: SolveId,
+    /// Record a per-step run trace while annealing (software SSQA
+    /// backend only; other backends ignore it, like `early_stop`).
+    pub trace: Option<TraceConfig>,
 }
 
 impl Job {
@@ -103,6 +110,8 @@ impl Job {
             early_stop: None,
             threads: None,
             kernel: None,
+            solve_id: SolveId::NONE,
+            trace: None,
         }
     }
 }
@@ -129,6 +138,12 @@ pub struct BatchJob {
     /// Step-kernel family for the batch's runs (software backends).
     /// `None` means [`KernelChoice::Auto`].
     pub kernel: Option<KernelChoice>,
+    /// Correlation id of the solve this batch belongs to
+    /// ([`SolveId::NONE`] for directly constructed batches).
+    pub solve_id: SolveId,
+    /// Record a per-step run trace while annealing (software SSQA
+    /// backend only; other backends ignore it, like `early_stop`).
+    pub trace: Option<TraceConfig>,
 }
 
 impl BatchJob {
@@ -145,6 +160,8 @@ impl BatchJob {
             early_stop: None,
             threads: None,
             kernel: None,
+            solve_id: SolveId::NONE,
+            trace: None,
         }
     }
 
@@ -174,6 +191,10 @@ pub(crate) struct BatchChunk {
     /// Step-kernel family for this chunk's runs (resolved against the
     /// model shape when the backend engine is built).
     pub kernel: KernelChoice,
+    /// Correlation id of the solve this chunk belongs to.
+    pub solve_id: SolveId,
+    /// Run-trace recording for this chunk's seeds (software SSQA only).
+    pub trace: Option<TraceConfig>,
     pub problem: Arc<dyn Problem>,
     pub model: Arc<IsingModel>,
 }
@@ -196,6 +217,9 @@ pub(crate) enum WorkItem {
 pub struct TuneJob {
     pub spec: JobSpec,
     pub config: crate::tuner::TunerConfig,
+    /// Correlation id shared by every candidate evaluation of this tune
+    /// run ([`SolveId::NONE`] until a caller assigns one).
+    pub solve_id: SolveId,
 }
 
 impl TuneJob {
@@ -209,7 +233,7 @@ impl TuneJob {
         } else {
             crate::tuner::TunerConfig::for_problem(spec.kind(), &spec.model(), tuner_seed)
         };
-        Self { spec, config }
+        Self { spec, config, solve_id: SolveId::NONE }
     }
 }
 
@@ -225,6 +249,8 @@ pub(crate) struct TuneEvalChunk {
     pub cand: crate::tuner::Candidate,
     pub seeds: Vec<u32>,
     pub monitor: MonitorConfig,
+    /// Correlation id of the tune run this evaluation belongs to.
+    pub solve_id: SolveId,
     pub problem: Arc<dyn Problem>,
     pub model: Arc<IsingModel>,
 }
@@ -273,12 +299,24 @@ pub struct JobOutcome {
     /// backend (e.g. PJRT without artifacts or the `pjrt` feature)
     /// reports here instead of panicking the worker and hanging `drain`.
     pub error: Option<String>,
+    /// Correlation id of the solve this outcome belongs to
+    /// ([`SolveId::NONE`] when none was assigned).
+    pub solve_id: SolveId,
+    /// Worker-local stage durations (`chunk.build`/`chunk.anneal`/
+    /// `chunk.decode`/`tune.eval`) — absorbed into the coordinator's
+    /// [`crate::telemetry::Timings`] registry when the outcome is
+    /// recorded.
+    pub stages: StageTimes,
+    /// The recorded run trace, when the chunk requested one and the
+    /// backend supports it (software SSQA only).
+    pub trace: Option<RunTrace>,
 }
 
 impl JobOutcome {
     /// An outcome reporting a failed execution.
     pub(crate) fn failed(
         id: u64,
+        solve_id: SolveId,
         label: String,
         kind: ProblemKind,
         backend: super::BackendKind,
@@ -305,6 +343,9 @@ impl JobOutcome {
             wall,
             modeled_energy_j: None,
             error: Some(error),
+            solve_id,
+            stages: StageTimes::new(),
+            trace: None,
         }
     }
 }
@@ -399,6 +440,8 @@ pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
         early_stop: job.early_stop,
         run_threads: job.threads.unwrap_or(1).max(1),
         kernel: job.kernel.unwrap_or_default(),
+        solve_id: job.solve_id,
+        trace: job.trace,
         problem: Arc::clone(job.spec.problem()),
         model: job.spec.model(),
     };
@@ -423,6 +466,8 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
     let sense = problem.sense();
     let n = chunk.model.n();
     let mut modeled_energy_j: Option<f64> = None;
+    let mut stages = StageTimes::new();
+    let build_span = SpanTimer::start();
     let build = BackendInstance::build(
         backend,
         chunk.params,
@@ -431,10 +476,16 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
         chunk.run_threads,
         chunk.kernel,
     );
+    stages.record_ns("chunk.build", build_span.elapsed_ns());
+    // the recorder outlives the anneal match so the trace can be
+    // harvested after the engine returns
+    let mut trace: Option<RunTrace> = None;
+    let anneal_span = SpanTimer::start();
     let results: Vec<RunResult> = match build {
         Err(e) => {
             return JobOutcome::failed(
                 chunk.id,
+                chunk.solve_id,
                 chunk.label.clone(),
                 chunk.kind,
                 backend,
@@ -443,13 +494,44 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
                 e.to_string(),
             )
         }
-        Ok(BackendInstance::Software(eng)) => match chunk.early_stop {
-            Some(cfg) => {
-                let mut mon = ConvergenceMonitor::new(cfg, &chunk.model);
-                eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut mon)
-            }
-            None => eng.run_batch(&chunk.model, chunk.steps, &chunk.seeds),
-        },
+        Ok(BackendInstance::Software(eng)) => {
+            // run tracing rides the same observer hook as convergence
+            // monitoring; when both are on, Tee runs them in lock-step
+            let res = match (chunk.early_stop, chunk.trace) {
+                (Some(cfg), Some(tc)) => {
+                    let mon = ConvergenceMonitor::new(cfg, &chunk.model);
+                    let rec = TraceRecorder::new(tc, &chunk.model);
+                    let mut tee = Tee(mon, rec);
+                    let res =
+                        eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut tee);
+                    trace = Some(tee.1.finish(
+                        chunk.solve_id,
+                        chunk.kind.name(),
+                        &chunk.label,
+                        chunk.params.replicas,
+                    ));
+                    res
+                }
+                (Some(cfg), None) => {
+                    let mut mon = ConvergenceMonitor::new(cfg, &chunk.model);
+                    eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut mon)
+                }
+                (None, Some(tc)) => {
+                    let mut rec = TraceRecorder::new(tc, &chunk.model);
+                    let res =
+                        eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut rec);
+                    trace = Some(rec.finish(
+                        chunk.solve_id,
+                        chunk.kind.name(),
+                        &chunk.label,
+                        chunk.params.replicas,
+                    ));
+                    res
+                }
+                (None, None) => eng.run_batch(&chunk.model, chunk.steps, &chunk.seeds),
+            };
+            res
+        }
         Ok(mut instance) => chunk
             .seeds
             .iter()
@@ -462,7 +544,9 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
             })
             .collect(),
     };
+    stages.record_ns("chunk.anneal", anneal_span.elapsed_ns());
 
+    let decode_span = SpanTimer::start();
     let runs = results.len();
     let mut best_energy = i64::MAX;
     let mut best_idx = 0usize;
@@ -493,6 +577,7 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
         // an empty chunk is never submitted, but keep the outcome total
         return JobOutcome::failed(
             chunk.id,
+            chunk.solve_id,
             chunk.label.clone(),
             chunk.kind,
             backend,
@@ -501,6 +586,7 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
             "empty seed set".to_string(),
         );
     }
+    stages.record_ns("chunk.decode", decode_span.elapsed_ns());
     JobOutcome {
         id: chunk.id,
         label: chunk.label.clone(),
@@ -520,6 +606,9 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
         wall: t0.elapsed(),
         modeled_energy_j,
         error: None,
+        solve_id: chunk.solve_id,
+        stages,
+        trace,
     }
 }
 
@@ -530,13 +619,16 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
 /// (including the infeasible-decode counts).
 pub(crate) fn execute_tune_eval(chunk: &TuneEvalChunk, backend: super::BackendKind) -> JobOutcome {
     let t0 = std::time::Instant::now();
-    let score = crate::tuner::evaluate_candidate(
-        chunk.problem.as_ref(),
-        &chunk.model,
-        &chunk.cand,
-        &chunk.seeds,
-        chunk.monitor,
-    );
+    let mut stages = StageTimes::new();
+    let score = stages.time("tune.eval", || {
+        crate::tuner::evaluate_candidate(
+            chunk.problem.as_ref(),
+            &chunk.model,
+            &chunk.cand,
+            &chunk.seeds,
+            chunk.monitor,
+        )
+    });
     JobOutcome {
         id: chunk.id,
         label: chunk.label.clone(),
@@ -556,5 +648,8 @@ pub(crate) fn execute_tune_eval(chunk: &TuneEvalChunk, backend: super::BackendKi
         wall: t0.elapsed(),
         modeled_energy_j: None,
         error: None,
+        solve_id: chunk.solve_id,
+        stages,
+        trace: None,
     }
 }

@@ -1,9 +1,12 @@
-//! Latency/throughput/energy metrics per backend.
+//! Latency/throughput/energy metrics per backend, per-stage latency
+//! histograms and Prometheus-style exposition (DESIGN.md §9.3).
 
 use super::{BackendKind, JobOutcome};
+use crate::telemetry::expose::{write_histogram, write_sample, write_type};
+use crate::telemetry::Timings;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Aggregated statistics for one backend.
 #[derive(Debug, Clone, Default)]
@@ -67,9 +70,34 @@ impl BackendMetrics {
 /// poison-tolerant [`super::lock_clean`] — recording must keep working
 /// after a panic rather than cascading `PoisonError` unwinds through
 /// the coordinator (asserted in `coordinator::tests`).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<BTreeMap<&'static str, BackendMetrics>>,
+    /// Runs that decoded infeasible, labeled `(backend, problem kind)` —
+    /// the per-backend `infeasible` total loses *which* workload failed;
+    /// this keeps it.
+    infeasible_kinds: Mutex<BTreeMap<(&'static str, &'static str), u64>>,
+    /// The most recent failed outcome's message (with its solve id), for
+    /// the `health` verb.
+    last_error: Mutex<Option<String>>,
+    /// Registry creation time — the `health` verb's uptime origin.
+    started: Instant,
+    /// Per-stage latency histograms, fed by the worker-local
+    /// [`crate::telemetry::StageTimes`] each outcome carries plus the
+    /// coordinator's own spans (`solve.*`, `tune.rung`, `serve.request`).
+    pub timings: Timings,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            inner: Mutex::default(),
+            infeasible_kinds: Mutex::default(),
+            last_error: Mutex::default(),
+            started: Instant::now(),
+            timings: Timings::new(),
+        }
+    }
 }
 
 impl Metrics {
@@ -78,12 +106,39 @@ impl Metrics {
     }
 
     pub fn record(&self, backend: BackendKind, outcome: &JobOutcome) {
-        let mut map = super::lock_clean(&self.inner);
-        map.entry(backend.name()).or_default().record(outcome);
+        {
+            let mut map = super::lock_clean(&self.inner);
+            map.entry(backend.name()).or_default().record(outcome);
+        }
+        if outcome.error.is_none() && outcome.runs > outcome.feasible_runs {
+            let mut kinds = super::lock_clean(&self.infeasible_kinds);
+            *kinds.entry((backend.name(), outcome.kind.name())).or_default() +=
+                (outcome.runs - outcome.feasible_runs) as u64;
+        }
+        if let Some(err) = &outcome.error {
+            *super::lock_clean(&self.last_error) =
+                Some(format!("[{}] {}: {}", outcome.solve_id, outcome.label, err));
+        }
+        self.timings.absorb(&outcome.stages);
     }
 
     pub fn snapshot(&self) -> BTreeMap<&'static str, BackendMetrics> {
         super::lock_clean(&self.inner).clone()
+    }
+
+    /// Infeasible-run counts labeled `(backend, problem kind)`.
+    pub fn infeasible_by_kind(&self) -> BTreeMap<(&'static str, &'static str), u64> {
+        super::lock_clean(&self.infeasible_kinds).clone()
+    }
+
+    /// The most recent failure message, if any outcome has failed.
+    pub fn last_error(&self) -> Option<String> {
+        super::lock_clean(&self.last_error).clone()
+    }
+
+    /// Time since this registry (the pool) came up.
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
     }
 
     /// Poison the inner mutex (panic while holding it) — test hook for
@@ -122,6 +177,65 @@ impl Metrics {
                 m.total_modeled_energy_j,
                 m.total_spin_updates,
             ));
+        }
+        out
+    }
+
+    /// Render the registry in the Prometheus text exposition format
+    /// (DESIGN.md §9.3): per-backend counters, per-(backend, kind)
+    /// infeasible counts and per-stage latency histograms in seconds.
+    pub fn render_prometheus(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        write_type(&mut out, "ssqa_jobs_total", "counter");
+        for (name, m) in &snap {
+            write_sample(&mut out, "ssqa_jobs_total", &[("backend", name)], m.jobs);
+        }
+        write_type(&mut out, "ssqa_runs_total", "counter");
+        for (name, m) in &snap {
+            write_sample(&mut out, "ssqa_runs_total", &[("backend", name)], m.runs);
+        }
+        write_type(&mut out, "ssqa_errors_total", "counter");
+        for (name, m) in &snap {
+            write_sample(&mut out, "ssqa_errors_total", &[("backend", name)], m.errors);
+        }
+        write_type(&mut out, "ssqa_spin_updates_total", "counter");
+        for (name, m) in &snap {
+            write_sample(
+                &mut out,
+                "ssqa_spin_updates_total",
+                &[("backend", name)],
+                m.total_spin_updates,
+            );
+        }
+        write_type(&mut out, "ssqa_modeled_energy_joules_total", "counter");
+        for (name, m) in &snap {
+            write_sample(
+                &mut out,
+                "ssqa_modeled_energy_joules_total",
+                &[("backend", name)],
+                format!("{:.6e}", m.total_modeled_energy_j),
+            );
+        }
+        write_type(&mut out, "ssqa_infeasible_total", "counter");
+        for ((backend, kind), count) in self.infeasible_by_kind() {
+            write_sample(
+                &mut out,
+                "ssqa_infeasible_total",
+                &[("backend", backend), ("kind", kind)],
+                count,
+            );
+        }
+        write_type(&mut out, "ssqa_uptime_seconds", "gauge");
+        write_sample(
+            &mut out,
+            "ssqa_uptime_seconds",
+            &[],
+            format!("{:.3}", self.uptime().as_secs_f64()),
+        );
+        write_type(&mut out, "ssqa_stage_duration_seconds", "histogram");
+        for (stage, hist) in self.timings.snapshot() {
+            write_histogram(&mut out, "ssqa_stage_duration_seconds", &[("stage", stage)], &hist);
         }
         out
     }

@@ -79,6 +79,18 @@ impl WorkerPool {
         self.handles.len()
     }
 
+    /// Ids submitted but not yet drained — the `health` verb's queue
+    /// depth (work queued or executing right now).
+    pub fn queue_depth(&self) -> usize {
+        lock_clean(&self.pending).len()
+    }
+
+    /// Worker threads still running (a worker that panicked mid-job has
+    /// finished its thread; the pool keeps serving on the rest).
+    pub fn alive_workers(&self) -> usize {
+        self.handles.iter().filter(|h| !h.is_finished()).count()
+    }
+
     fn fresh_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
@@ -165,6 +177,8 @@ impl WorkerPool {
                 early_stop: batch.early_stop,
                 run_threads,
                 kernel: batch.kernel.unwrap_or_default(),
+                solve_id: batch.solve_id,
+                trace: batch.trace,
                 problem: Arc::clone(&problem),
                 model: Arc::clone(&model),
             };
@@ -194,6 +208,7 @@ impl WorkerPool {
             problem: Arc::clone(&problem),
             model: Arc::clone(&model),
             label: job.spec.label(),
+            solve_id: job.solve_id,
         };
         tuner::tune_shared(problem.as_ref(), &model, &job.config, &eval)
     }
@@ -239,6 +254,7 @@ struct PoolEval<'p> {
     problem: Arc<dyn Problem>,
     model: Arc<crate::graph::IsingModel>,
     label: String,
+    solve_id: crate::telemetry::SolveId,
 }
 
 impl tuner::EvalBackend for PoolEval<'_> {
@@ -247,6 +263,9 @@ impl tuner::EvalBackend for PoolEval<'_> {
         ctx: &tuner::EvalContext<'_>,
         cands: &[tuner::Candidate],
     ) -> Vec<tuner::EvalScore> {
+        // one rung = one dispatch-and-drain round of candidate
+        // evaluations; span closes when the rung barrier releases
+        let _rung = self.pool.metrics.timings.span("tune.rung");
         let backend = self.pool.router.route_tune_eval();
         let mut id_to_idx = HashMap::with_capacity(cands.len());
         for (idx, cand) in cands.iter().enumerate() {
@@ -258,6 +277,7 @@ impl tuner::EvalBackend for PoolEval<'_> {
                 cand: cand.clone(),
                 seeds: ctx.seeds.to_vec(),
                 monitor: ctx.monitor,
+                solve_id: self.solve_id,
                 problem: Arc::clone(&self.problem),
                 model: Arc::clone(&self.model),
             };

@@ -2,7 +2,9 @@
 //! coordinator (`ssqa serve --port 7090`).
 //!
 //! Protocol — authoritative reference, mirrored in DESIGN.md §6.3 (one
-//! request per line, one response per line):
+//! request per line; responses are one line, or a **framed multi-line
+//! reply** whose first line ends in `lines=K` followed by exactly K
+//! body lines — see below):
 //!
 //! ```text
 //! solve [problem=maxcut] <instance keys> [steps=500] [seed=1]
@@ -13,9 +15,19 @@
 //!       [kernel=auto|scalar|lanes|delta] — step-kernel family (default
 //!                                      auto: the density heuristic;
 //!                                      every choice is bit-identical)
+//!       [trace=S]                    — record a stride-S run trace
+//!                                      (software SSQA only); the reply
+//!                                      is framed, body = trace JSONL
+//!       [span=1]                     — append the per-stage timing
+//!                                      table to the framed reply body
 //! tune  [problem=maxcut] <instance keys> [tuner_seed=7] [candidates=8]
 //!       [seeds=3] [quick=1]
-//! metrics
+//! metrics [format=prom|table]        — framed reply; body is Prometheus
+//!                                      text exposition (default) or the
+//!                                      human table
+//! health                             — single line: uptime, worker
+//!                                      liveness, queue depth, job/error
+//!                                      totals, last error
 //! ping
 //! quit
 //! ```
@@ -26,13 +38,20 @@
 //! Unknown keys are rejected **by name**; the unknown-verb error lists
 //! the supported verbs.
 //!
-//! Responses: `ok id=<id> problem=<kind> graph=<label> backend=<name>
-//! objective=<o> energy=<H> feasible=<f>/<n> wall_us=<t>
-//! [runs=<n> mean_objective=<c>]` or `err <message>`. `runs > 1`
-//! fans the seeds out across the pool's workers (`seed`, `seed+7919`,
-//! …). `tune` races candidates on the problem's domain objective and
-//! responds `ok tuner problem=<kind> graph=<label> engine=<name>
-//! config="<winner>" mean_objective=<c> spin_updates=<u>
+//! **Framing**: any reply carrying a multi-line payload starts with a
+//! normal `ok …` status line whose **last** token is `lines=K`; the
+//! next K lines are the payload, verbatim (they may contain `;`, `=`,
+//! anything but newlines). Replies without `lines=` are single-line.
+//! This replaces the old `\n`→`;` flattening, which corrupted payload
+//! values containing `;`.
+//!
+//! Responses: `ok id=<id> solve_id=<s…> problem=<kind> graph=<label>
+//! backend=<name> objective=<o> energy=<H> feasible=<f>/<n> wall_us=<t>
+//! [runs=<n> mean_objective=<c>] [lines=K]` or `err <message>`.
+//! `runs > 1` fans the seeds out across the pool's workers (`seed`,
+//! `seed+7919`, …). `tune` races candidates on the problem's domain
+//! objective and responds `ok tuner problem=<kind> graph=<label>
+//! engine=<name> config="<winner>" mean_objective=<c> spin_updates=<u>
 //! saved_pct=<p>`.
 
 use super::{BackendKind, JobSpec, Router, RoutingPolicy, TuneJob, WorkerPool};
@@ -44,7 +63,22 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 
-const VERBS: &str = "solve, tune, metrics, ping, quit";
+const VERBS: &str = "solve, tune, metrics, health, ping, quit";
+
+/// Frame a multi-line payload: append `lines=K` to the status line,
+/// then the K payload lines verbatim. A client reads the status line,
+/// parses its trailing `lines=K`, then reads exactly K more lines —
+/// payload bytes are never rewritten (the old `\n`→`;` flattening
+/// corrupted any value containing `;`).
+fn frame(head: &str, body: &str) -> String {
+    let lines: Vec<&str> = body.lines().collect();
+    let mut out = format!("{head} lines={}", lines.len());
+    for l in lines {
+        out.push('\n');
+        out.push_str(l);
+    }
+    out
+}
 
 /// Collect `key=value` tokens into a map; malformed or repeated tokens
 /// are errors naming the offending token.
@@ -67,7 +101,37 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
     let verb = parts.next().unwrap_or("");
     match verb {
         "ping" => Ok("pong".to_string()),
-        "metrics" => Ok(pool.metrics.render().replace('\n', ";")),
+        "metrics" => {
+            let mut f = kv_map(parts)?;
+            let format: String = take(&mut f, "format", "prom".to_string())?;
+            ensure_consumed(&f, "metrics")?;
+            let body = match format.as_str() {
+                "prom" => pool.metrics.render_prometheus(),
+                "table" => pool.metrics.render(),
+                other => return Err(anyhow!("unknown format {other:?} (use prom|table)")),
+            };
+            Ok(frame("ok metrics", &body))
+        }
+        "health" => {
+            let snap = pool.metrics.snapshot();
+            let jobs: u64 = snap.values().map(|m| m.jobs).sum();
+            let errors: u64 = snap.values().map(|m| m.errors).sum();
+            let last = pool
+                .metrics
+                .last_error()
+                .map(|e| e.replace(['\n', '"'], " "))
+                .unwrap_or_default();
+            Ok(format!(
+                "ok health uptime_s={:.3} workers={} alive={} queue_depth={} jobs={} errors={} last_error=\"{}\"",
+                pool.metrics.uptime().as_secs_f64(),
+                pool.workers(),
+                pool.alive_workers(),
+                pool.queue_depth(),
+                jobs,
+                errors,
+                last,
+            ))
+        }
         "tune" => {
             let mut f = kv_map(parts)?;
             let tuner_seed: u64 = take(&mut f, "tuner_seed", 7)?;
@@ -144,6 +208,11 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
                 })?),
             };
             let early_stop: u32 = take(&mut f, "early_stop", 0)?;
+            // trace=S records a stride-S run trace (the framed reply
+            // body carries the JSONL artifact); span=1 appends the
+            // per-stage timing table to the body
+            let trace_stride: usize = take(&mut f, "trace", 0)?;
+            let span: u32 = take(&mut f, "span", 0)?;
             let problem = take_problem(&mut f)?;
             ensure_consumed(&f, "solve")?;
 
@@ -155,10 +224,14 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
             if early_stop != 0 {
                 req = req.early_stop(crate::tuner::MonitorConfig::default());
             }
+            if trace_stride != 0 {
+                req = req.trace(crate::telemetry::TraceConfig::with_stride(trace_stride));
+            }
             let report = req.run_on(pool)?;
             let mut resp = format!(
-                "ok id={} problem={} graph={} backend={} objective={} energy={} feasible={}/{} wall_us={}",
+                "ok id={} solve_id={} problem={} graph={} backend={} objective={} energy={} feasible={}/{} wall_us={}",
                 report.id,
+                report.solve_id,
                 report.kind.name(),
                 report.label,
                 report.backend.name(),
@@ -174,7 +247,18 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
                     report.runs, report.mean_objective
                 ));
             }
-            Ok(resp)
+            let mut body = String::new();
+            if let Some(trace) = &report.trace {
+                body.push_str(&trace.to_jsonl());
+            }
+            if span != 0 {
+                body.push_str(&pool.metrics.timings.render());
+            }
+            if body.is_empty() {
+                Ok(resp)
+            } else {
+                Ok(frame(&resp, &body))
+            }
         }
         "" => Err(anyhow!("empty request")),
         other => Err(anyhow!("unknown verb {other:?} (supported: {VERBS})")),
@@ -197,10 +281,25 @@ pub fn serve(addr: &str, workers: usize) -> Result<()> {
             if line.trim() == "quit" {
                 break;
             }
+            let span = pool.metrics.timings.span("serve.request");
             let resp = match handle_request(&pool, line.trim()) {
                 Ok(r) => r,
                 Err(e) => format!("err {e}"),
             };
+            let wall = span.stop();
+            // one log line per request, keyed by the solve id when the
+            // reply carries one
+            let verb = line.trim().split_whitespace().next().unwrap_or("");
+            let head = resp.lines().next().unwrap_or("");
+            let sid = head
+                .split_whitespace()
+                .find(|t| t.starts_with("solve_id="))
+                .unwrap_or("solve_id=-");
+            eprintln!(
+                "ssqa: verb={verb} {sid} status={} wall_us={}",
+                head.split_whitespace().next().unwrap_or("-"),
+                wall.as_micros(),
+            );
             writer.write_all(resp.as_bytes())?;
             writer.write_all(b"\n")?;
         }

@@ -2,6 +2,7 @@ use super::*;
 use crate::api::ProblemKind;
 use crate::graph::{torus_2d, GraphSpec};
 use crate::hw::DelayKind;
+use crate::telemetry::{SolveId, StageTimes};
 
 fn tiny_job(id: u64, steps: usize) -> Job {
     let g = torus_2d(4, 6, true, 5);
@@ -211,7 +212,10 @@ fn handle_request_errors_name_the_offender() {
     let pool = WorkerPool::new(1, Router::new(RoutingPolicy::AllSoftware));
     // unknown verb lists the supported verbs
     let err = handle_request(&pool, "bogus").unwrap_err().to_string();
-    assert!(err.contains("bogus") && err.contains("solve, tune, metrics, ping, quit"), "{err}");
+    assert!(
+        err.contains("bogus") && err.contains("solve, tune, metrics, health, ping, quit"),
+        "{err}"
+    );
     // unknown keys are named
     let err = handle_request(&pool, "solve graph=G11 stepz=5").unwrap_err().to_string();
     assert!(err.contains("stepz"), "{err}");
@@ -490,6 +494,9 @@ fn metrics_count_infeasible_decodes() {
         wall: std::time::Duration::from_millis(1),
         modeled_energy_j: None,
         error: None,
+        solve_id: SolveId::NONE,
+        stages: StageTimes::new(),
+        trace: None,
     };
     m.record(BackendKind::Software, &o);
     let snap = m.snapshot();
@@ -497,6 +504,146 @@ fn metrics_count_infeasible_decodes() {
     assert_eq!(bm.infeasible, 3, "runs − feasible_runs infeasible decodes");
     assert_eq!(bm.runs, 4);
     assert!(m.render().contains("infeas"), "{}", m.render());
+    // the per-kind labels keep *which* workload decoded infeasible; a
+    // second kind on the same backend must not collapse into one bucket
+    let mut o2 = o.clone();
+    o2.kind = ProblemKind::Coloring;
+    o2.runs = 3;
+    o2.feasible_runs = 2;
+    m.record(BackendKind::Software, &o2);
+    let kinds = m.infeasible_by_kind();
+    assert_eq!(kinds.get(&("sw-ssqa", "tsp")), Some(&3));
+    assert_eq!(kinds.get(&("sw-ssqa", "coloring")), Some(&1));
+    // fully-feasible and failed outcomes contribute no kind entry
+    let mut ok = o.clone();
+    ok.kind = ProblemKind::MaxCut;
+    ok.feasible_runs = ok.runs;
+    m.record(BackendKind::Software, &ok);
+    let mut failed = o.clone();
+    failed.kind = ProblemKind::Qubo;
+    failed.error = Some("boom".into());
+    m.record(BackendKind::Software, &failed);
+    let kinds = m.infeasible_by_kind();
+    assert_eq!(kinds.len(), 2, "{kinds:?}");
+    // the failure surfaced as last_error, tagged with its solve id
+    assert!(m.last_error().unwrap().contains("boom"));
+    // and the exposition carries the labeled series
+    let prom = m.render_prometheus();
+    assert!(
+        prom.contains("ssqa_infeasible_total{backend=\"sw-ssqa\",kind=\"tsp\"} 3"),
+        "{prom}"
+    );
+}
+
+/// Split a framed reply into (status line, body lines), asserting the
+/// `lines=K` frame contract: the status line's **last** token is
+/// `lines=K` and exactly K body lines follow.
+fn unframe(resp: &str) -> (String, Vec<String>) {
+    let mut lines = resp.lines();
+    let head = lines.next().expect("status line").to_string();
+    let last = head.split_whitespace().last().unwrap_or("");
+    let k: usize = last
+        .strip_prefix("lines=")
+        .unwrap_or_else(|| panic!("last token must be lines=K: {head}"))
+        .parse()
+        .unwrap();
+    let body: Vec<String> = lines.map(str::to_string).collect();
+    assert_eq!(body.len(), k, "frame promised {k} body lines: {resp}");
+    (head, body)
+}
+
+#[test]
+fn metrics_verb_reply_is_framed_and_preserves_payload_bytes() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    handle_request(&pool, "solve graph=G11 steps=5 seed=1 replicas=4").unwrap();
+    // default format is the Prometheus exposition
+    let resp = handle_request(&pool, "metrics").unwrap();
+    let (head, body) = unframe(&resp);
+    assert!(head.starts_with("ok metrics"), "{head}");
+    assert!(body.iter().any(|l| l.starts_with("# TYPE ssqa_jobs_total counter")), "{resp}");
+    assert!(body.iter().any(|l| l.contains("ssqa_jobs_total{backend=\"sw-ssqa\"}")), "{resp}");
+    assert!(
+        body.iter().any(|l| l.starts_with("ssqa_uptime_seconds")),
+        "{resp}"
+    );
+    // stage histograms from the executed solve are present and framed
+    assert!(
+        body.iter().any(|l| l.contains("ssqa_stage_duration_seconds_bucket")
+            && l.contains("stage=\"chunk.anneal\"")),
+        "{resp}"
+    );
+    // the old `\n`→`;` flattening must be gone: no body line carries a
+    // flattened remnant, and multi-line payloads arrive verbatim
+    assert!(!head.contains(';'), "{head}");
+    // the table format is framed the same way
+    let resp = handle_request(&pool, "metrics format=table").unwrap();
+    let (head, body) = unframe(&resp);
+    assert!(head.starts_with("ok metrics"), "{head}");
+    assert!(body[0].starts_with("backend"), "{resp}");
+    assert!(body.iter().any(|l| l.starts_with("sw-ssqa")), "{resp}");
+    assert!(handle_request(&pool, "metrics format=xml").is_err());
+    assert!(handle_request(&pool, "metrics bogus=1").is_err());
+    pool.shutdown();
+}
+
+#[test]
+fn health_verb_reports_liveness() {
+    let pool = WorkerPool::new(3, Router::new(RoutingPolicy::AllSoftware));
+    handle_request(&pool, "solve graph=G11 steps=5 seed=1 replicas=4").unwrap();
+    let resp = handle_request(&pool, "health").unwrap();
+    assert!(resp.starts_with("ok health uptime_s="), "{resp}");
+    assert!(resp.contains("workers=3"), "{resp}");
+    assert!(resp.contains("alive=3"), "{resp}");
+    assert!(resp.contains("queue_depth=0"), "{resp}");
+    assert!(resp.contains("jobs="), "{resp}");
+    assert!(resp.contains("errors=0"), "{resp}");
+    assert!(resp.contains("last_error=\"\""), "{resp}");
+    assert!(handle_request(&pool, "health bogus=1").is_err());
+    // a failed outcome surfaces in the health line
+    let mut job = tiny_job(0, 5);
+    job.backend = Some(BackendKind::Pjrt);
+    pool.submit(job);
+    pool.drain();
+    let resp = handle_request(&pool, "health").unwrap();
+    assert!(resp.contains("errors=1"), "{resp}");
+    assert!(!resp.contains("last_error=\"\""), "{resp}");
+    pool.shutdown();
+}
+
+#[test]
+fn solve_trace_key_returns_framed_jsonl() {
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+    let resp = handle_request(
+        &pool,
+        "solve graph=G11 steps=40 seed=1 replicas=4 trace=8 span=1",
+    )
+    .unwrap();
+    let (head, body) = unframe(&resp);
+    assert!(head.contains("solve_id=s"), "{head}");
+    assert!(head.contains("objective="), "{head}");
+    // body = trace JSONL (header + run + samples), then the timing table
+    assert!(body[0].starts_with("{\"rec\":\"header\",\"v\":1"), "{resp}");
+    assert!(body.iter().any(|l| l.starts_with("{\"rec\":\"run\"")), "{resp}");
+    let samples = body.iter().filter(|l| l.starts_with("{\"rec\":\"sample\"")).count();
+    assert_eq!(samples, 5, "steps 0,8,16,24,32 at stride 8: {resp}");
+    assert!(body.iter().any(|l| l.contains("chunk.anneal")), "span=1 appends timings: {resp}");
+    // trace replies carry the same solve_id as the status line
+    let sid = head
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("solve_id="))
+        .unwrap();
+    assert!(body[0].contains(&format!("\"solve_id\":\"{sid}\"")), "{resp}");
+    // tracing must not perturb the anneal: the untraced solve agrees
+    let plain = handle_request(&pool, "solve graph=G11 steps=40 seed=1 replicas=4").unwrap();
+    let field = |resp: &str, key: &str| {
+        resp.split_whitespace()
+            .find_map(|t| t.strip_prefix(key).map(str::to_string))
+            .unwrap_or_else(|| panic!("{key} missing in {resp}"))
+    };
+    assert_eq!(field(&head, "objective="), field(&plain, "objective="));
+    assert_eq!(field(&head, "energy="), field(&plain, "energy="));
+    assert!(handle_request(&pool, "solve graph=G11 trace=abc").is_err());
+    pool.shutdown();
 }
 
 #[test]

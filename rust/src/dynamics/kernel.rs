@@ -162,6 +162,28 @@ impl KernelChoice {
     }
 }
 
+/// What the delta kernel decided during one step — the observability
+/// counterpart of the §8 rebuild-vs-correct policy. Recorded by
+/// [`step_delta`] and surfaced to observers through
+/// [`crate::annealer::StepMeta`] (and from there into run traces), so a
+/// trace shows *why* late-anneal steps get cheap: the frontier narrows
+/// and rebuilds stop.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaStepStats {
+    /// The step index these stats describe.
+    pub step: usize,
+    /// Whether the field plane was rebuilt from scratch this step
+    /// (fresh scratch, reseeded state, or a prior invalidation).
+    pub rebuilt: bool,
+    /// Cells (spin × replica) that flipped this step — the frontier.
+    pub flipped_cells: u64,
+    /// Priced correction cost `Σ_rows deg · flips` of the frontier.
+    pub frontier_work: u64,
+    /// Whether the flip burst made corrections costlier than a rebuild,
+    /// so the plane was invalidated instead of corrected.
+    pub invalidated: bool,
+}
+
 /// Cross-step state of the delta-field kernel: the maintained Eq. (6a)
 /// accumulator plane and the step index it is valid for. Lives in
 /// [`KernelScratch`] so the engines' existing scratch plumbing carries
@@ -175,6 +197,9 @@ pub struct DeltaState {
     /// `None` forces a full rebuild (fresh scratch, reseeded state, or
     /// a flip burst that made corrections costlier than rebuilding).
     valid_for: Option<usize>,
+    /// The most recent step's decision stats (telemetry only — never
+    /// read by the kernel itself).
+    last: Option<DeltaStepStats>,
 }
 
 /// Per-worker scratch rows for the step-parallel kernel: one
@@ -213,6 +238,12 @@ impl KernelScratch {
     /// Call [`Self::ensure`] first.
     pub fn serial(&mut self) -> &mut StepScratch {
         &mut self.workers[0]
+    }
+
+    /// The delta kernel's decision stats for the most recent
+    /// [`step_delta`] call through this scratch (`None` until it runs).
+    pub fn delta_stats(&self) -> Option<DeltaStepStats> {
+        self.delta.last
     }
 }
 
@@ -422,7 +453,8 @@ pub fn step_delta(
 
     // (re)build the field plane from σ(t) unless it was maintained
     // across the previous step for exactly this t and shape
-    if delta.valid_for != Some(t) || delta.fields.len() != n * r {
+    let rebuilt = delta.valid_for != Some(t) || delta.fields.len() != n * r;
+    if rebuilt {
         delta.fields.clear();
         delta.fields.resize(n * r, 0);
         for i in 0..n {
@@ -462,20 +494,26 @@ pub fn step_delta(
     // vectorized rebuild MAC per touched coupling)
     let nnz = job.model.j_sparse().nnz();
     let mut work: usize = 0;
+    let mut flipped: u64 = 0;
     for j in 0..n {
         let row = j * r;
         let deg = job.model.j_sparse().row(j).0.len();
-        if deg == 0 {
-            continue;
-        }
         let mut flips = 0usize;
         for k in 0..r {
             flips += (sigma_prev[row + k] != sigma[row + k]) as usize;
         }
+        flipped += flips as u64;
         work += deg * flips;
     }
     if work * 2 >= nnz * r {
         delta.valid_for = None;
+        delta.last = Some(DeltaStepStats {
+            step: t,
+            rebuilt,
+            flipped_cells: flipped,
+            frontier_work: work as u64,
+            invalidated: true,
+        });
         return;
     }
     for j in 0..n {
@@ -496,4 +534,11 @@ pub fn step_delta(
         }
     }
     delta.valid_for = Some(t + 1);
+    delta.last = Some(DeltaStepStats {
+        step: t,
+        rebuilt,
+        flipped_cells: flipped,
+        frontier_work: work as u64,
+        invalidated: false,
+    });
 }

@@ -31,8 +31,8 @@ pub mod kernel;
 mod scratch;
 
 pub use kernel::{
-    step_delta, step_parallel, KernelChoice, KernelScratch, StepJob, StepKernel, LANES,
-    MAX_KERNEL_THREADS,
+    step_delta, step_parallel, DeltaStepStats, KernelChoice, KernelScratch, StepJob, StepKernel,
+    LANES, MAX_KERNEL_THREADS,
 };
 pub use scratch::StepScratch;
 

@@ -25,6 +25,8 @@
 //!   Table 6, Figs. 11–12).
 //! * [`runtime`] — PJRT client loading the AOT-compiled JAX/Pallas step.
 //! * [`coordinator`] — job queue, worker pool, backend router, metrics.
+//! * [`telemetry`] — run tracing, timing spans and metrics exposition:
+//!   correlation ids, JSONL run-trace artifacts, latency histograms.
 //! * [`tuner`] — adaptive auto-tuning: parameter racing, convergence
 //!   early stopping, engine portfolio selection.
 //! * [`experiments`] — one entry point per paper table/figure.
@@ -42,6 +44,7 @@ pub mod problems;
 pub mod resources;
 pub mod rng;
 pub mod runtime;
+pub mod telemetry;
 pub mod tuner;
 
 /// Crate-wide result alias.

@@ -125,6 +125,8 @@ fn print_help() {
          \x20             [--kernel auto|scalar|lanes|delta]  (bit-identical; auto = density heuristic)\n\
          \x20             [--backend sw|ssa|sa|hw|hw-shift-reg|pjrt]\n\
          \x20             [--tune [--tuner-seed 7]] [--early-stop]\n\
+         \x20             [--trace out.jsonl [--trace-stride 16]]  (run-trace JSONL artifact)\n\
+         \x20             [--timings]  (per-stage latency table: encode/anneal/decode)\n\
          \x20 tune        [--problem <kind>] <instance keys as for solve>\n\
          \x20             [--tuner-seed 7] [--candidates 8] [--seeds 3]\n\
          \x20             [--workers N] [--quick]\n\
@@ -167,6 +169,13 @@ fn cmd_solve(mut f: BTreeMap<String, String>) -> Result<()> {
     // ensure_consumed reject the misplaced flag by name
     let tuner_seed: u64 = if tune { take(&mut f, "tuner-seed", 7)? } else { 7 };
     let early_stop = f.remove("early-stop").is_some();
+    // --trace PATH writes the run-trace JSONL artifact; --trace-stride
+    // tightens/loosens sampling (only meaningful with --trace)
+    let trace_path: Option<String> = take_opt(&mut f, "trace")?;
+    let trace_stride: usize =
+        if trace_path.is_some() { take(&mut f, "trace-stride", 16)? } else { 16 };
+    anyhow::ensure!(trace_stride >= 1, "--trace-stride must be at least 1");
+    let timings = f.remove("timings").is_some();
     let problem = take_problem(&mut f)?;
     ensure_consumed(&f, "solve")?;
 
@@ -181,11 +190,31 @@ fn cmd_solve(mut f: BTreeMap<String, String>) -> Result<()> {
     if early_stop {
         req = req.early_stop(ssqa::tuner::MonitorConfig::default());
     }
+    if trace_path.is_some() {
+        req = req.trace(ssqa::telemetry::TraceConfig::with_stride(trace_stride));
+    }
 
     let pool =
         WorkerPool::new(ssqa::config::num_threads(), Router::new(RoutingPolicy::AllSoftware));
     let report = req.run_on(&pool)?;
     print!("{}", report.render());
+    if let Some(path) = trace_path {
+        match &report.trace {
+            Some(trace) => {
+                std::fs::write(&path, trace.to_jsonl())?;
+                let samples: usize = trace.runs.iter().map(|r| r.samples.len()).sum();
+                eprintln!(
+                    "(trace written to {path}: {} runs, {samples} samples, stride {trace_stride})",
+                    trace.runs.len(),
+                );
+            }
+            // e.g. a --backend that doesn't support the observer hook
+            None => eprintln!("(no trace recorded — backend {} does not trace)", report.backend.name()),
+        }
+    }
+    if timings {
+        println!("\n{}", pool.metrics.timings.render());
+    }
     println!("\n{}", pool.metrics.render());
     Ok(())
 }

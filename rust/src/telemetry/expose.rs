@@ -1,0 +1,75 @@
+//! Prometheus-style text exposition (DESIGN.md §9.3).
+//!
+//! Writers for the two shapes the coordinator exports: labeled counters
+//! and labeled log-bucketed histograms. The output follows the
+//! Prometheus text format conventions (`# TYPE` headers, cumulative
+//! `_bucket{le=…}` series ending in `+Inf`, `_sum`/`_count`), close
+//! enough for any Prometheus-compatible scraper while staying
+//! dependency-free. Durations are exported in **seconds** (the
+//! Prometheus base unit); the in-memory histograms bucket nanoseconds,
+//! so `le` bounds are exact powers of two scaled by 1e-9.
+
+use super::span::LatencyHistogram;
+use std::fmt::Write as _;
+
+/// Escape a label value per the exposition format (backslash, quote,
+/// newline).
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a `{k="v",…}` label set ( empty string for no labels).
+pub fn label_set(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Append one `# TYPE` header (once per metric family — callers emit it
+/// before the family's first sample).
+pub fn write_type(out: &mut String, name: &str, kind: &str) {
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Append one counter/gauge sample line.
+pub fn write_sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: impl std::fmt::Display) {
+    let _ = writeln!(out, "{name}{} {value}", label_set(labels));
+}
+
+/// Append a full histogram family member: cumulative buckets (in
+/// seconds), the `+Inf` bucket, `_sum` and `_count`.
+pub fn write_histogram(
+    out: &mut String,
+    name: &str,
+    labels: &[(&str, &str)],
+    hist: &LatencyHistogram,
+) {
+    for (upper_ns, cum) in hist.cumulative_buckets() {
+        let mut l: Vec<(&str, &str)> = labels.to_vec();
+        let le = format!("{:.9}", upper_ns as f64 / 1e9);
+        l.push(("le", &le));
+        let _ = writeln!(out, "{name}_bucket{} {cum}", label_set(&l));
+    }
+    let mut l: Vec<(&str, &str)> = labels.to_vec();
+    l.push(("le", "+Inf"));
+    let _ = writeln!(out, "{name}_bucket{} {}", label_set(&l), hist.count());
+    let _ = writeln!(
+        out,
+        "{name}_sum{} {:.9}",
+        label_set(labels),
+        hist.sum_ns() as f64 / 1e9
+    );
+    let _ = writeln!(out, "{name}_count{} {}", label_set(labels), hist.count());
+}

@@ -1,0 +1,144 @@
+//! Telemetry: run tracing, timing spans and metrics exposition
+//! (DESIGN.md §9).
+//!
+//! Three layers of instrumentation, all dependency-free:
+//!
+//! * **Run tracing** ([`trace`]) — [`TraceRecorder`] samples per-step
+//!   annealing telemetry (energies, flip rate, replica agreement, the
+//!   schedule point, delta-kernel decisions) at a stride with bounded
+//!   memory, packaged as a versioned JSONL [`RunTrace`] artifact.
+//! * **Timing spans** ([`span`]) — [`SpanTimer`]/[`StageTimes`] collect
+//!   monotonic stage durations worker-locally; the coordinator's
+//!   [`Timings`] registry aggregates them into log-bucketed, mergeable
+//!   [`LatencyHistogram`]s.
+//! * **Exposition** ([`expose`]) — Prometheus-style text rendering of
+//!   counters and histograms, used by the line protocol's `metrics`
+//!   verb and the `health` report.
+//!
+//! Everything correlates on a [`SolveId`]: the id a
+//! [`crate::api::SolveRequest`] is assigned appears in its
+//! [`crate::api::SolveReport`], every coordinator `JobOutcome`, the
+//! protocol's `solve_id=` reply key, the trace artifact header and the
+//! server's log lines.
+//!
+//! §Zero-cost-when-off contract: the observer hooks this module plugs
+//! into ([`crate::annealer::StepObserver`]) default to the `()` no-op,
+//! which inlines to `false` and keeps the Eq. (6) hot loop free of
+//! telemetry work; the differential tests in `tests/telemetry.rs` prove
+//! the observed-with-`()` path is bit-identical to the unobserved one,
+//! and `benches/telemetry.rs` holds the overhead budget (<2% off,
+//! <10% tracing at stride 64).
+
+pub mod expose;
+pub mod span;
+pub mod trace;
+
+pub use span::{fmt_ns, LatencyHistogram, SpanGuard, SpanTimer, StageTimes, Timings};
+pub use trace::{RunTrace, RunTraceRun, TraceConfig, TraceRecorder, TraceSample, TRACE_VERSION};
+
+use crate::annealer::{SsqaState, StepMeta, StepObserver};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Correlation id of one solve: a process-unique 64-bit token minted by
+/// [`SolveId::fresh`], rendered as `s<16 hex digits>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SolveId(pub u64);
+
+impl SolveId {
+    /// The null id (`s0000000000000000`) — outcomes produced outside a
+    /// traced solve (direct `execute` calls, legacy tests) carry it.
+    pub const NONE: SolveId = SolveId(0);
+
+    /// Mint a fresh id: a per-process monotone counter mixed with a
+    /// process salt (start time ⊕ pid) through splitmix64, so ids are
+    /// unique within a process and collide across processes only with
+    /// birthday probability.
+    pub fn fresh() -> Self {
+        static COUNTER: AtomicU64 = AtomicU64::new(1);
+        static SALT: OnceLock<u64> = OnceLock::new();
+        let salt = *SALT.get_or_init(|| {
+            let t = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0);
+            splitmix64(t ^ ((std::process::id() as u64) << 32))
+        });
+        let c = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let id = splitmix64(salt.wrapping_add(c));
+        // the null id is reserved for "no solve context"
+        Self(if id == 0 { 1 } else { id })
+    }
+
+    /// Parse the `s<16 hex>` rendering back (protocol clients echo ids).
+    pub fn parse(s: &str) -> Option<Self> {
+        let hex = s.strip_prefix('s')?;
+        if hex.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(hex, 16).ok().map(Self)
+    }
+}
+
+impl fmt::Display for SolveId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "s{:016x}", self.0)
+    }
+}
+
+/// splitmix64 — the statelessly-seedable mixer (public-domain constant
+/// set), used only for id minting, never for annealing randomness.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Run two observers in lock-step: both see every step (no
+/// short-circuit), and the run stops early if **either** requests it.
+/// Used to attach a [`TraceRecorder`] alongside the tuner's
+/// convergence monitor without changing either.
+pub struct Tee<A, B>(pub A, pub B);
+
+impl<A: StepObserver, B: StepObserver> StepObserver for Tee<A, B> {
+    fn begin_run(&mut self, seed: u32) {
+        self.0.begin_run(seed);
+        self.1.begin_run(seed);
+    }
+
+    fn observe(&mut self, t: usize, state: &SsqaState) -> bool {
+        let a = self.0.observe(t, state);
+        let b = self.1.observe(t, state);
+        a | b
+    }
+
+    fn observe_meta(&mut self, t: usize, state: &SsqaState, meta: &StepMeta) -> bool {
+        let a = self.0.observe_meta(t, state, meta);
+        let b = self.1.observe_meta(t, state, meta);
+        a | b
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control bytes) —
+/// labels and error strings are plain ASCII in practice, but the
+/// artifact must stay parseable whatever ends up in them.
+pub fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,309 @@
+//! Timing spans and log-bucketed latency histograms (DESIGN.md §9.2).
+//!
+//! The span API is deliberately tiny and dependency-free: a
+//! [`SpanTimer`] is a monotonic start point, a [`StageTimes`] is a
+//! worker-local list of `(stage, ns)` samples filled while a job
+//! executes (no locks in the hot path — the samples travel back to the
+//! coordinator inside the `JobOutcome`), and a [`Timings`] registry
+//! aggregates samples into one [`LatencyHistogram`] per stage name.
+//!
+//! Stage names follow the `area.stage` convention (§9.2): `solve.encode`,
+//! `solve.total`, `chunk.build`, `chunk.anneal`, `chunk.decode`,
+//! `tune.rung`, `tune.eval`, `serve.request`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Number of log₂ buckets. Bucket `b` covers `[2^b, 2^{b+1})` ns, so 40
+/// buckets span 1 ns … ~18 min — more than any stage this crate times.
+pub const HIST_BUCKETS: usize = 40;
+
+/// A log₂-bucketed latency histogram.
+///
+/// §Mergeability: two histograms merge by element-wise addition of the
+/// bucket counts (plus min/max/sum/count folds), which is associative
+/// and commutative — aggregates over workers, chunks or servers are
+/// order-independent (asserted in `tests/telemetry.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The bucket index a duration of `ns` lands in: `floor(log2(ns))`,
+    /// clamped into the table (0 ns shares bucket 0 with 1 ns).
+    #[inline]
+    pub fn bucket_index(ns: u64) -> usize {
+        (63 - ns.max(1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Exclusive upper bound of bucket `i` in nanoseconds (`2^{i+1}`).
+    #[inline]
+    pub fn bucket_upper_ns(i: usize) -> u64 {
+        1u64 << (i + 1)
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.buckets[Self::bucket_index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Fold `other` into `self` (element-wise bucket addition).
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    pub fn min_ns(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.min_ns)
+    }
+
+    pub fn max_ns(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.max_ns)
+    }
+
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_ns / self.count
+        }
+    }
+
+    /// Approximate quantile (`q` in `[0, 1]`) from the bucket counts:
+    /// the upper bound of the bucket holding the `⌈q·count⌉`-th sample.
+    /// Resolution is one octave — enough for the `p50`/`p99` columns of
+    /// a timing table, not for sub-bucket precision.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper_ns(i).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// `(upper_bound_ns, cumulative_count)` rows up to the last
+    /// populated bucket — the Prometheus `le` series (the `+Inf` row is
+    /// the caller's `count()`).
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let last = match self.buckets.iter().rposition(|&c| c > 0) {
+            Some(i) => i,
+            None => return Vec::new(),
+        };
+        let mut out = Vec::with_capacity(last + 1);
+        let mut cum = 0u64;
+        for i in 0..=last {
+            cum += self.buckets[i];
+            out.push((Self::bucket_upper_ns(i), cum));
+        }
+        out
+    }
+}
+
+/// A monotonic span start point. `elapsed` never goes backwards
+/// (std `Instant` is monotonic by contract).
+#[derive(Debug, Clone, Copy)]
+pub struct SpanTimer(Instant);
+
+impl SpanTimer {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.0.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+}
+
+/// Worker-local `(stage, ns)` samples collected while a job executes.
+///
+/// §Perf: this is a plain `Vec` push — no locking, no map lookup — so
+/// instrumenting a worker stage costs two `Instant::now` calls and one
+/// push. The coordinator folds the samples into its [`Timings`]
+/// registry when the outcome is recorded ([`Timings::absorb`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StageTimes {
+    entries: Vec<(&'static str, u64)>,
+}
+
+impl StageTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, stage: &'static str, d: Duration) {
+        self.record_ns(stage, d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&mut self, stage: &'static str, ns: u64) {
+        self.entries.push((stage, ns));
+    }
+
+    /// Time `f` under `stage`.
+    pub fn time<R>(&mut self, stage: &'static str, f: impl FnOnce() -> R) -> R {
+        let t = SpanTimer::start();
+        let r = f();
+        self.record_ns(stage, t.elapsed_ns());
+        r
+    }
+
+    pub fn entries(&self) -> &[(&'static str, u64)] {
+        &self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Thread-safe per-stage histogram registry (lives next to the
+/// counters in [`crate::coordinator::Metrics`]).
+#[derive(Debug, Default)]
+pub struct Timings {
+    inner: Mutex<BTreeMap<&'static str, LatencyHistogram>>,
+}
+
+impl Timings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ns(&self, stage: &'static str, ns: u64) {
+        crate::coordinator::lock_clean(&self.inner)
+            .entry(stage)
+            .or_default()
+            .record_ns(ns);
+    }
+
+    /// Fold a worker's [`StageTimes`] in (one lock for the whole list).
+    pub fn absorb(&self, stages: &StageTimes) {
+        if stages.is_empty() {
+            return;
+        }
+        let mut map = crate::coordinator::lock_clean(&self.inner);
+        for &(stage, ns) in stages.entries() {
+            map.entry(stage).or_default().record_ns(ns);
+        }
+    }
+
+    /// Open a span that records into `stage` when dropped.
+    pub fn span(&self, stage: &'static str) -> SpanGuard<'_> {
+        SpanGuard { timings: self, stage: Some(stage), timer: SpanTimer::start() }
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<&'static str, LatencyHistogram> {
+        crate::coordinator::lock_clean(&self.inner).clone()
+    }
+
+    /// Human-readable per-stage table (the CLI `--timings` report).
+    pub fn render(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::from(
+            "stage                 count    mean         p50          p99          max\n",
+        );
+        for (stage, h) in snap {
+            out.push_str(&format!(
+                "{:<21} {:<8} {:<12} {:<12} {:<12} {}\n",
+                stage,
+                h.count(),
+                fmt_ns(h.mean_ns()),
+                fmt_ns(h.quantile_ns(0.5)),
+                fmt_ns(h.quantile_ns(0.99)),
+                fmt_ns(h.max_ns().unwrap_or(0)),
+            ));
+        }
+        out
+    }
+}
+
+/// RAII span: records the elapsed time into its stage on drop.
+/// [`Self::stop`] records early and disarms the drop.
+pub struct SpanGuard<'t> {
+    timings: &'t Timings,
+    stage: Option<&'static str>,
+    timer: SpanTimer,
+}
+
+impl SpanGuard<'_> {
+    /// Record now and return the elapsed time.
+    pub fn stop(mut self) -> Duration {
+        let d = self.timer.elapsed();
+        if let Some(stage) = self.stage.take() {
+            self.timings.record_ns(stage, d.as_nanos().min(u64::MAX as u128) as u64);
+        }
+        d
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(stage) = self.stage.take() {
+            self.timings.record_ns(stage, self.timer.elapsed_ns());
+        }
+    }
+}
+
+/// Render a nanosecond figure with a human unit (`1.234ms`).
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}

@@ -1,0 +1,191 @@
+use super::expose::{label_set, write_histogram};
+use super::span::{LatencyHistogram, StageTimes, Timings, HIST_BUCKETS};
+use super::trace::{TraceConfig, TraceRecorder};
+use super::{escape_json, SolveId, Tee};
+use crate::annealer::{SsqaState, StepMeta, StepObserver};
+use crate::graph::IsingModel;
+
+#[test]
+fn solve_id_fresh_is_unique_and_roundtrips() {
+    let a = SolveId::fresh();
+    let b = SolveId::fresh();
+    assert_ne!(a, b, "consecutive ids must differ");
+    assert_ne!(a, SolveId::NONE);
+    let s = a.to_string();
+    assert!(s.starts_with('s') && s.len() == 17, "{s}");
+    assert_eq!(SolveId::parse(&s), Some(a));
+    assert_eq!(SolveId::parse("nope"), None);
+    assert_eq!(SolveId::parse("s123"), None, "short hex rejected");
+    assert_eq!(SolveId::NONE.to_string(), "s0000000000000000");
+}
+
+#[test]
+fn histogram_buckets_and_stats() {
+    let mut h = LatencyHistogram::new();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.min_ns(), None);
+    assert_eq!(h.quantile_ns(0.5), 0);
+    for ns in [1u64, 2, 3, 1000, 1_000_000, 1_000_000_000] {
+        h.record_ns(ns);
+    }
+    assert_eq!(h.count(), 6);
+    assert_eq!(h.min_ns(), Some(1));
+    assert_eq!(h.max_ns(), Some(1_000_000_000));
+    assert_eq!(h.sum_ns(), 1_002_001_006);
+    // bucket math: 1 → bucket 0, 2..3 → bucket 1, overflow clamps
+    assert_eq!(LatencyHistogram::bucket_index(0), 0);
+    assert_eq!(LatencyHistogram::bucket_index(1), 0);
+    assert_eq!(LatencyHistogram::bucket_index(2), 1);
+    assert_eq!(LatencyHistogram::bucket_index(3), 1);
+    assert_eq!(LatencyHistogram::bucket_index(4), 2);
+    assert_eq!(LatencyHistogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    // quantiles are octave-resolution upper bounds, never above max
+    assert!(h.quantile_ns(0.0) >= 1);
+    assert!(h.quantile_ns(1.0) <= 1_000_000_000);
+    let med = h.quantile_ns(0.5);
+    assert!(med >= 3 && med <= 1024, "median upper bound, got {med}");
+}
+
+#[test]
+fn histogram_merge_matches_bulk_record() {
+    let mut all = LatencyHistogram::new();
+    let mut a = LatencyHistogram::new();
+    let mut b = LatencyHistogram::new();
+    for (i, ns) in [5u64, 80, 900, 70_000, 2_000_000, 123, 456, 789].iter().enumerate() {
+        all.record_ns(*ns);
+        if i % 2 == 0 {
+            a.record_ns(*ns);
+        } else {
+            b.record_ns(*ns);
+        }
+    }
+    let mut merged = a.clone();
+    merged.merge(&b);
+    assert_eq!(merged, all, "merge must equal recording everything into one histogram");
+}
+
+#[test]
+fn timings_absorbs_stage_times_and_renders() {
+    let t = Timings::new();
+    let mut st = StageTimes::new();
+    st.record_ns("chunk.anneal", 1_500_000);
+    st.record_ns("chunk.decode", 2_000);
+    st.record_ns("chunk.anneal", 2_500_000);
+    t.absorb(&st);
+    t.record_ns("solve.encode", 10_000);
+    let snap = t.snapshot();
+    assert_eq!(snap.len(), 3);
+    assert_eq!(snap["chunk.anneal"].count(), 2);
+    assert_eq!(snap["chunk.decode"].count(), 1);
+    let table = t.render();
+    assert!(table.contains("chunk.anneal"), "{table}");
+    assert!(table.contains("solve.encode"), "{table}");
+    // span guard records on drop
+    {
+        let _g = t.span("serve.request");
+    }
+    assert_eq!(t.snapshot()["serve.request"].count(), 1);
+}
+
+#[test]
+fn prometheus_histogram_series_is_cumulative_and_ends_in_inf() {
+    let mut h = LatencyHistogram::new();
+    h.record_ns(3); // bucket 1 (le 4e-9)
+    h.record_ns(100); // bucket 6 (le 128e-9)
+    h.record_ns(100);
+    let mut out = String::new();
+    write_histogram(&mut out, "x_seconds", &[("stage", "t")], &h);
+    let lines: Vec<&str> = out.lines().collect();
+    assert!(lines.iter().any(|l| l.contains("le=\"+Inf\"") && l.ends_with(" 3")), "{out}");
+    assert!(out.contains("x_seconds_count{stage=\"t\"} 3"), "{out}");
+    // cumulative: every bucket count ≤ the +Inf count and non-decreasing
+    let mut prev = 0u64;
+    for l in &lines {
+        if let Some(rest) = l.strip_prefix("x_seconds_bucket") {
+            let v: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-decreasing cumulative series: {out}");
+            prev = v;
+        }
+    }
+    assert_eq!(label_set(&[]), "");
+    assert_eq!(label_set(&[("a", "b\"c")]), "{a=\"b\\\"c\"}");
+}
+
+#[test]
+fn escape_json_handles_specials() {
+    assert_eq!(escape_json("plain"), "plain");
+    assert_eq!(escape_json("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    assert_eq!(escape_json("\u{1}"), "\\u0001");
+}
+
+fn tiny_model(n: usize) -> IsingModel {
+    // ring couplings J_{i,i+1} = 1
+    let edges: Vec<(u32, u32, i32)> =
+        (0..n as u32).map(|i| (i, (i + 1) % n as u32, 1)).collect();
+    IsingModel::from_edges(n, vec![0; n], &edges)
+}
+
+#[test]
+fn recorder_samples_on_stride_and_downsamples_boundedly() {
+    let model = tiny_model(8);
+    let cfg = TraceConfig { stride: 1, max_samples: 8 };
+    let mut rec = TraceRecorder::new(cfg, &model);
+    let st = SsqaState::init(8, 2, 7);
+    rec.begin_run(7);
+    for t in 0..100 {
+        let stop = rec.observe_meta(t, &st, &StepMeta::default());
+        assert!(!stop, "the recorder never stops a run");
+    }
+    let run = &rec.runs()[0];
+    assert!(run.samples.len() <= cfg.max_samples, "bounded: {}", run.samples.len());
+    assert!(run.stride > 1, "stride must have doubled at least once");
+    for w in run.samples.windows(2) {
+        assert!(w[0].step < w[1].step, "monotone step indices");
+    }
+    for s in &run.samples {
+        assert_eq!(s.step % run.stride, 0, "every survivor aligned to the final stride");
+    }
+}
+
+#[test]
+fn recorder_batch_runs_are_separate() {
+    let model = tiny_model(6);
+    let mut rec = TraceRecorder::new(TraceConfig { stride: 2, max_samples: 16 }, &model);
+    let st = SsqaState::init(6, 2, 1);
+    for seed in [1u32, 2, 3] {
+        rec.begin_run(seed);
+        for t in 0..10 {
+            rec.observe_meta(t, &st, &StepMeta::default());
+        }
+    }
+    assert_eq!(rec.runs().len(), 3);
+    assert_eq!(rec.runs()[2].seed, 3);
+    // stride 2 over t ∈ 0..10 samples t = 0, 2, 4, 6, 8
+    assert_eq!(rec.runs()[0].samples.len(), 5);
+    let trace = rec.finish(SolveId::fresh(), "maxcut", "ring-6", 2);
+    let jsonl = trace.to_jsonl();
+    assert_eq!(jsonl.lines().count(), 1 + 3 + 15, "header + runs + samples");
+    for line in jsonl.lines() {
+        assert!(line.starts_with('{') && line.ends_with('}'), "JSONL shape: {line}");
+    }
+    assert!(jsonl.contains("\"rec\":\"header\""), "{jsonl}");
+    assert!(jsonl.contains(&format!("\"v\":{}", super::TRACE_VERSION)));
+}
+
+#[test]
+fn tee_runs_both_and_ors_stop() {
+    struct StopAt(usize, usize); // (stop_t, observed_count)
+    impl StepObserver for StopAt {
+        fn observe(&mut self, t: usize, _state: &SsqaState) -> bool {
+            self.1 += 1;
+            t >= self.0
+        }
+    }
+    let st = SsqaState::init(4, 2, 1);
+    let mut tee = Tee(StopAt(2, 0), StopAt(100, 0));
+    assert!(!tee.observe(0, &st));
+    assert!(!tee.observe(1, &st));
+    assert!(tee.observe(2, &st), "stops when either side stops");
+    assert_eq!(tee.0 .1, 3);
+    assert_eq!(tee.1 .1, 3, "no short-circuit: both sides see every step");
+}

@@ -1,0 +1,317 @@
+//! Run tracing: per-step annealing telemetry with bounded memory
+//! (DESIGN.md §9.1).
+//!
+//! [`TraceRecorder`] is a [`StepObserver`] that samples the annealing
+//! trajectory on a stride: best/mean replica energy, flip count and
+//! rate, replica agreement, the `(q_t, noise_t)` schedule point, and —
+//! when the flip-frontier delta kernel is running — its frontier-size /
+//! rebuild decisions. One recorder serves a whole batched seed set
+//! (`begin_run` opens a new per-seed trace at every seed boundary), and
+//! memory stays bounded by **stride-doubling downsampling**: when a
+//! run's retained samples hit [`TraceConfig::max_samples`], every other
+//! sample is dropped and the effective stride doubles, so an
+//! arbitrarily long run keeps at most `max_samples` evenly strided
+//! points (invariants proven in `tests/telemetry.rs`).
+//!
+//! The recorded [`RunTrace`] serializes as a **versioned JSON-lines
+//! artifact** ([`TRACE_VERSION`], [`RunTrace::write_jsonl`]): one
+//! header object, one object per run, one object per sample — no
+//! external serialization dependency.
+//!
+//! §Perf: `observe_meta` is allocation-free once warm — the replica
+//! column scratch and each run's sample vector are preallocated
+//! (`Vec::with_capacity(max_samples + 1)`), off-stride steps cost one
+//! branch, and the recorder never requests an early stop.
+
+use super::{escape_json, SolveId};
+use crate::annealer::{SsqaState, StepMeta, StepObserver};
+use crate::dynamics::DeltaStepStats;
+use crate::graph::IsingModel;
+use std::io::{self, Write};
+
+/// Version tag of the run-trace JSONL schema. Bump when a field changes
+/// meaning; readers must check it (DESIGN.md §9.1).
+pub const TRACE_VERSION: u32 = 1;
+
+/// Sampling knobs for a [`TraceRecorder`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Sample every `stride` steps (step indices `t` with
+    /// `t % stride == 0`). Each observation costs `O(R·(N + nnz))` for
+    /// the energy readout, so the stride amortizes it below the cost of
+    /// the steps in between.
+    pub stride: usize,
+    /// Retained-sample cap per run. Hitting it halves the retained set
+    /// and doubles the effective stride (never below 2 samples).
+    pub max_samples: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { stride: 16, max_samples: 512 }
+    }
+}
+
+impl TraceConfig {
+    /// A stride-`s` config with the default memory bound.
+    pub fn with_stride(stride: usize) -> Self {
+        Self { stride: stride.max(1), ..Self::default() }
+    }
+}
+
+/// One sampled point of an annealing trajectory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSample {
+    /// 0-based step index the sample was taken after.
+    pub step: usize,
+    /// Lowest replica energy at this step.
+    pub best_energy: i64,
+    /// Mean replica energy at this step.
+    pub mean_energy: f64,
+    /// Cells (spin × replica) that flipped in this step.
+    pub flips: u64,
+    /// `flips / (N·R)`.
+    pub flip_rate: f64,
+    /// Fraction of spins whose R replicas all agree — the paper's
+    /// convergence signal (replicas collapse onto one configuration).
+    pub agreement: f64,
+    /// Replica-coupling magnitude Q(t) of this step.
+    pub q_t: i32,
+    /// Noise magnitude n_rnd(t) of this step.
+    pub noise_t: i32,
+    /// Delta-kernel decision stats, when that kernel ran this step.
+    pub delta: Option<DeltaStepStats>,
+}
+
+/// The sampled trajectory of one seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunTraceRun {
+    pub seed: u32,
+    /// Effective stride after downsampling (`cfg.stride · 2^k`).
+    pub stride: usize,
+    pub samples: Vec<TraceSample>,
+}
+
+/// A complete, serializable run-trace artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunTrace {
+    /// Schema version ([`TRACE_VERSION`]).
+    pub version: u32,
+    /// Correlation id — the same id appears in the `SolveReport`,
+    /// protocol replies and server log lines.
+    pub solve_id: SolveId,
+    /// Problem kind token (`maxcut`, `tsp`, …).
+    pub kind: String,
+    /// Instance label (`G14`, `tsp-n6`, …).
+    pub label: String,
+    /// Spins.
+    pub n: usize,
+    /// Replicas per run.
+    pub replicas: usize,
+    /// Configured (initial) sampling stride.
+    pub stride: usize,
+    /// Per-seed traces, in execution order.
+    pub runs: Vec<RunTraceRun>,
+}
+
+impl RunTrace {
+    /// Append `other`'s runs (chunk merging — the coordinator fans one
+    /// solve across workers and reassembles the trace in chunk-id
+    /// order).
+    pub fn merge(&mut self, other: RunTrace) {
+        self.runs.extend(other.runs);
+    }
+
+    /// Serialize as JSON lines: one header object, then one object per
+    /// run, then one object per sample (`"rec"` discriminates).
+    pub fn write_jsonl<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        writeln!(
+            w,
+            "{{\"rec\":\"header\",\"v\":{},\"solve_id\":\"{}\",\"problem\":\"{}\",\"label\":\"{}\",\"n\":{},\"replicas\":{},\"stride\":{},\"runs\":{}}}",
+            self.version,
+            self.solve_id,
+            escape_json(&self.kind),
+            escape_json(&self.label),
+            self.n,
+            self.replicas,
+            self.stride,
+            self.runs.len(),
+        )?;
+        for (idx, run) in self.runs.iter().enumerate() {
+            writeln!(
+                w,
+                "{{\"rec\":\"run\",\"run\":{},\"seed\":{},\"stride\":{},\"samples\":{}}}",
+                idx,
+                run.seed,
+                run.stride,
+                run.samples.len(),
+            )?;
+            for s in &run.samples {
+                write!(
+                    w,
+                    "{{\"rec\":\"sample\",\"run\":{},\"step\":{},\"best_e\":{},\"mean_e\":{:.3},\"flips\":{},\"flip_rate\":{:.6},\"agree\":{:.6},\"q\":{},\"noise\":{}",
+                    idx,
+                    s.step,
+                    s.best_energy,
+                    s.mean_energy,
+                    s.flips,
+                    s.flip_rate,
+                    s.agreement,
+                    s.q_t,
+                    s.noise_t,
+                )?;
+                if let Some(d) = &s.delta {
+                    write!(
+                        w,
+                        ",\"frontier_cells\":{},\"frontier_work\":{},\"rebuilt\":{},\"invalidated\":{}",
+                        d.flipped_cells, d.frontier_work, d.rebuilt, d.invalidated,
+                    )?;
+                }
+                writeln!(w, "}}")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Self::write_jsonl`] into a `String`.
+    pub fn to_jsonl(&self) -> String {
+        let mut buf = Vec::new();
+        self.write_jsonl(&mut buf).expect("in-memory write");
+        String::from_utf8(buf).expect("JSONL is UTF-8")
+    }
+}
+
+/// The sampling [`StepObserver`]. Plug into
+/// [`crate::annealer::SsqaEngine::run_observed`] /
+/// `run_batch_observed` (alone, or tee'd with the convergence monitor
+/// via [`super::Tee`]); call [`Self::finish`] afterwards to take the
+/// [`RunTrace`].
+pub struct TraceRecorder<'m> {
+    cfg: TraceConfig,
+    model: &'m IsingModel,
+    /// Replica-column scratch for the energy readout (preallocated).
+    col: Vec<i32>,
+    /// Effective stride of the current run (doubles on downsampling).
+    eff_stride: usize,
+    runs: Vec<RunTraceRun>,
+}
+
+impl<'m> TraceRecorder<'m> {
+    pub fn new(cfg: TraceConfig, model: &'m IsingModel) -> Self {
+        assert!(cfg.stride > 0, "trace stride must be positive");
+        assert!(cfg.max_samples >= 2, "max_samples must be at least 2");
+        Self {
+            cfg,
+            model,
+            col: vec![0; model.n()],
+            eff_stride: cfg.stride.max(1),
+            runs: Vec::new(),
+        }
+    }
+
+    /// Runs recorded so far.
+    pub fn runs(&self) -> &[RunTraceRun] {
+        &self.runs
+    }
+
+    /// Package the recorded runs as a [`RunTrace`] artifact.
+    pub fn finish(self, solve_id: SolveId, kind: &str, label: &str, replicas: usize) -> RunTrace {
+        RunTrace {
+            version: TRACE_VERSION,
+            solve_id,
+            kind: kind.to_string(),
+            label: label.to_string(),
+            n: self.model.n(),
+            replicas,
+            stride: self.cfg.stride,
+            runs: self.runs,
+        }
+    }
+
+    /// Best and mean replica energy of `state` (one `O(R·(N + nnz))`
+    /// readout, shared with the sample's other statistics).
+    fn energies(&mut self, st: &SsqaState) -> (i64, f64) {
+        let r = st.rng.replicas();
+        let n = self.model.n();
+        debug_assert_eq!(st.sigma.len(), n * r);
+        let mut best = i64::MAX;
+        let mut sum = 0.0f64;
+        for k in 0..r {
+            for (i, slot) in self.col.iter_mut().enumerate() {
+                *slot = st.sigma[i * r + k];
+            }
+            let e = self.model.energy(&self.col);
+            best = best.min(e);
+            sum += e as f64;
+        }
+        (best, sum / r.max(1) as f64)
+    }
+
+    /// Drop every other retained sample and double the stride — the
+    /// memory bound. Keeps even indices, so every survivor's step is a
+    /// multiple of the doubled stride (samples land on
+    /// `step % eff_stride == 0` and the doubling preserves that).
+    fn downsample(samples: &mut Vec<TraceSample>, eff_stride: &mut usize) {
+        let mut keep = 0;
+        for i in (0..samples.len()).step_by(2) {
+            samples[keep] = samples[i];
+            keep += 1;
+        }
+        samples.truncate(keep);
+        *eff_stride *= 2;
+    }
+}
+
+impl StepObserver for TraceRecorder<'_> {
+    fn begin_run(&mut self, seed: u32) {
+        self.eff_stride = self.cfg.stride.max(1);
+        self.runs.push(RunTraceRun {
+            seed,
+            stride: self.eff_stride,
+            samples: Vec::with_capacity(self.cfg.max_samples + 1),
+        });
+    }
+
+    fn observe(&mut self, t: usize, state: &SsqaState) -> bool {
+        self.observe_meta(t, state, &StepMeta::default())
+    }
+
+    fn observe_meta(&mut self, t: usize, state: &SsqaState, meta: &StepMeta) -> bool {
+        if t % self.eff_stride != 0 {
+            return false;
+        }
+        let (best_energy, mean_energy) = self.energies(state);
+        let n = self.model.n();
+        let r = state.rng.replicas();
+        // after a step the buffers hold σ(t+1) in `sigma` and σ(t) in
+        // `sigma_prev` — their disagreement is exactly this step's flips
+        let mut flips = 0u64;
+        for (a, b) in state.sigma.iter().zip(state.sigma_prev.iter()) {
+            flips += (a != b) as u64;
+        }
+        let mut agree = 0usize;
+        for i in 0..n {
+            let row = &state.sigma[i * r..(i + 1) * r];
+            agree += row.iter().all(|&s| s == row[0]) as usize;
+        }
+        let cells = (n * r).max(1) as f64;
+        let sample = TraceSample {
+            step: t,
+            best_energy,
+            mean_energy,
+            flips,
+            flip_rate: flips as f64 / cells,
+            agreement: agree as f64 / n.max(1) as f64,
+            q_t: meta.q_t,
+            noise_t: meta.noise_t,
+            delta: meta.delta,
+        };
+        let run = self.runs.last_mut().expect("begin_run opens a run before any observe");
+        run.samples.push(sample);
+        if run.samples.len() > self.cfg.max_samples {
+            Self::downsample(&mut run.samples, &mut self.eff_stride);
+        }
+        run.stride = self.eff_stride;
+        false
+    }
+}

@@ -1,0 +1,367 @@
+//! Telemetry acceptance tests (DESIGN.md §9).
+//!
+//! Three contracts:
+//!
+//! * **Zero perturbation** — attaching the `()` no-op observer or a
+//!   [`TraceRecorder`] never changes annealing results (differential
+//!   bit-identity against the unobserved path, per kernel).
+//! * **Golden replay** — a stride-1 trace of the committed step-trace
+//!   fixture reproduces the independently generated per-step energies,
+//!   flip counts and schedule points exactly.
+//! * **Bounded memory** — randomized stride/cap/length sweeps hold the
+//!   stride-doubling downsampling invariants, and the span histograms
+//!   merge associatively (the property the coordinator's aggregation
+//!   relies on).
+
+use ssqa::annealer::{NoiseSchedule, QSchedule, SsqaEngine, SsqaParams};
+use ssqa::api::SolveRequest;
+use ssqa::config::parse_kv;
+use ssqa::coordinator::{Router, RoutingPolicy, WorkerPool};
+use ssqa::dynamics::StepKernel;
+use ssqa::graph::{torus_2d, IsingModel};
+use ssqa::problems::MaxCut;
+use ssqa::telemetry::{
+    LatencyHistogram, SolveId, TraceConfig, TraceRecorder, TRACE_VERSION,
+};
+use std::path::Path;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------- fixture
+
+struct Fixture {
+    n: usize,
+    r: usize,
+    steps: usize,
+    seed: u32,
+    params: SsqaParams,
+    q_schedule: Vec<i32>,
+    noise_schedule: Vec<i32>,
+    model: IsingModel,
+    init_sigma: Vec<i32>,
+    /// σ after each step, N×R row-major (spin-major, replica-minor).
+    sigmas: Vec<Vec<i32>>,
+}
+
+fn ints(text: &str) -> Vec<i32> {
+    text.split_whitespace().map(|t| t.parse().expect("integer list")).collect()
+}
+
+fn load() -> Fixture {
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/step_trace_n16_r4.kv");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()));
+    let kv = parse_kv(&text).expect("fixture parses");
+    let get = |k: &str| kv.get(k).unwrap_or_else(|| panic!("fixture key {k} missing"));
+    let n: usize = get("n").parse().unwrap();
+    let r: usize = get("r").parse().unwrap();
+    let steps: usize = get("steps").parse().unwrap();
+    let params = SsqaParams {
+        replicas: r,
+        i0: get("i0").parse().unwrap(),
+        alpha: get("alpha").parse().unwrap(),
+        noise: NoiseSchedule::Linear {
+            start: get("noise_start").parse().unwrap(),
+            end: get("noise_end").parse().unwrap(),
+        },
+        q: QSchedule {
+            q_min: get("q_min").parse().unwrap(),
+            q_max: get("q_max").parse().unwrap(),
+            beta: get("beta").parse().unwrap(),
+            tau: get("tau").parse().unwrap(),
+        },
+        j_scale: 1,
+    };
+    Fixture {
+        n,
+        r,
+        steps,
+        seed: get("seed").parse().unwrap(),
+        params,
+        q_schedule: ints(get("q_schedule")),
+        noise_schedule: ints(get("noise_schedule")),
+        model: IsingModel::from_dense(n, ints(get("h")), ints(get("j"))),
+        init_sigma: ints(get("init_sigma")),
+        sigmas: (0..steps).map(|t| ints(get(&format!("step{t}_sigma")))).collect(),
+    }
+}
+
+/// Best and mean replica energy of an N×R plane, computed column-wise
+/// exactly like the recorder's readout — but through the independent
+/// fixture data, not the live state.
+fn plane_energies(model: &IsingModel, sigma: &[i32], r: usize) -> (i64, f64) {
+    let n = model.n();
+    let mut best = i64::MAX;
+    let mut sum = 0.0f64;
+    for k in 0..r {
+        let col: Vec<i32> = (0..n).map(|i| sigma[i * r + k]).collect();
+        let e = model.energy(&col);
+        best = best.min(e);
+        sum += e as f64;
+    }
+    (best, sum / r as f64)
+}
+
+// ---------------------------------------------------------- golden replay
+
+/// A stride-1 recording of the fixture run reproduces the independent
+/// Python reference's per-step energies, flip counts, agreement and
+/// schedule points — the trace artifact is locked to the same golden
+/// data as the kernels themselves.
+#[test]
+fn trace_recorder_replays_golden_fixture() {
+    let fx = load();
+    let eng = SsqaEngine::new(fx.params, fx.steps).with_kernel(StepKernel::Scalar);
+    let mut rec = TraceRecorder::new(
+        TraceConfig { stride: 1, max_samples: 512 },
+        &fx.model,
+    );
+    eng.run_observed(&fx.model, fx.steps, fx.seed, &mut rec);
+    let trace = rec.finish(SolveId::NONE, "maxcut", "fixture-n16", fx.r);
+    assert_eq!(trace.version, TRACE_VERSION);
+    assert_eq!(trace.runs.len(), 1);
+    let run = &trace.runs[0];
+    assert_eq!(run.seed, fx.seed);
+    assert_eq!(run.samples.len(), fx.steps, "stride 1 samples every step");
+    for (t, s) in run.samples.iter().enumerate() {
+        assert_eq!(s.step, t);
+        let (best, mean) = plane_energies(&fx.model, &fx.sigmas[t], fx.r);
+        assert_eq!(s.best_energy, best, "best energy at step {t}");
+        assert!((s.mean_energy - mean).abs() < 1e-9, "mean energy at step {t}");
+        // flips: disagreement between σ(t) and σ(t−1) (σ(−1) = init)
+        let prev: &[i32] = if t == 0 { &fx.init_sigma } else { &fx.sigmas[t - 1] };
+        let flips =
+            fx.sigmas[t].iter().zip(prev).filter(|(a, b)| a != b).count() as u64;
+        assert_eq!(s.flips, flips, "flip count at step {t}");
+        let cells = (fx.n * fx.r) as f64;
+        assert!((s.flip_rate - flips as f64 / cells).abs() < 1e-12);
+        // agreement: spins whose 4 replicas all match
+        let agree = (0..fx.n)
+            .filter(|&i| {
+                let row = &fx.sigmas[t][i * fx.r..(i + 1) * fx.r];
+                row.iter().all(|&v| v == row[0])
+            })
+            .count();
+        assert!((s.agreement - agree as f64 / fx.n as f64).abs() < 1e-12);
+        // the schedule point rides along exactly
+        assert_eq!(s.q_t, fx.q_schedule[t], "Q(t) at step {t}");
+        assert_eq!(s.noise_t, fx.noise_schedule[t], "noise(t) at step {t}");
+        assert!(s.delta.is_none(), "scalar kernel records no delta stats");
+    }
+}
+
+/// Under the delta kernel the same fixture replay carries per-step
+/// frontier statistics, and the recorded flip counts agree with the
+/// kernel's own frontier accounting.
+#[test]
+fn trace_records_delta_kernel_frontier_stats() {
+    let fx = load();
+    let eng = SsqaEngine::new(fx.params, fx.steps).with_kernel(StepKernel::Delta);
+    let mut rec = TraceRecorder::new(
+        TraceConfig { stride: 1, max_samples: 512 },
+        &fx.model,
+    );
+    eng.run_observed(&fx.model, fx.steps, fx.seed, &mut rec);
+    let trace = rec.finish(SolveId::NONE, "maxcut", "fixture-n16", fx.r);
+    let run = &trace.runs[0];
+    assert_eq!(run.samples.len(), fx.steps);
+    for (t, s) in run.samples.iter().enumerate() {
+        let d = s.delta.unwrap_or_else(|| panic!("delta stats missing at step {t}"));
+        assert_eq!(d.step, t);
+        assert!(!d.invalidated, "in-schedule-order stepping never invalidates");
+        // step 0 always rebuilds (no valid accumulator yet)
+        assert_eq!(d.rebuilt, t == 0, "rebuild decision at step {t}");
+        assert_eq!(d.flipped_cells, s.flips, "kernel frontier = observed σ flips at {t}");
+    }
+}
+
+// ------------------------------------------------------- zero perturbation
+
+/// Attaching the `()` no-op observer or a live [`TraceRecorder`] is
+/// bit-identical to the unobserved batch path, for both kernel families.
+#[test]
+fn observers_never_perturb_results() {
+    let g = torus_2d(5, 8, true, 0x7E1E);
+    let model = ssqa::problems::maxcut::ising_from_graph(&g, 8);
+    let params = SsqaParams::gset_default(120);
+    let seeds: Vec<u32> = (0..4u32).map(|i| 100 + i * 31).collect();
+    for kernel in [StepKernel::Scalar, StepKernel::Delta] {
+        let eng = SsqaEngine::new(params, 120).with_kernel(kernel);
+        let plain = eng.run_batch(&model, 120, &seeds);
+        let mut noop = ();
+        let observed = eng.run_batch_observed(&model, 120, &seeds, &mut noop);
+        assert_eq!(plain, observed, "() observer must be invisible ({kernel:?})");
+        let mut rec = TraceRecorder::new(TraceConfig::with_stride(8), &model);
+        let traced = eng.run_batch_observed(&model, 120, &seeds, &mut rec);
+        assert_eq!(plain, traced, "TraceRecorder must be read-only ({kernel:?})");
+        let trace = rec.finish(SolveId::NONE, "maxcut", "torus", params.replicas);
+        assert_eq!(trace.runs.len(), seeds.len());
+        for (run, &seed) in trace.runs.iter().zip(&seeds) {
+            assert_eq!(run.seed, seed);
+            assert_eq!(run.samples.len(), 15, "120 steps / stride 8");
+        }
+    }
+}
+
+// ------------------------------------------------- downsampling invariants
+
+/// 64-bit LCG for the randomized sweeps (no external proptest
+/// dependency; printing the failing case keeps shrinking unnecessary).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+/// Randomized sweep of (stride, max_samples, steps): the retained
+/// sample set always stays within the cap, strictly ordered, aligned to
+/// the (power-of-two-scaled) effective stride, and anchored at step 0.
+#[test]
+fn downsampling_invariants_hold_for_random_configs() {
+    let g = torus_2d(3, 4, true, 9);
+    let model = ssqa::problems::maxcut::ising_from_graph(&g, 8);
+    let params = SsqaParams { replicas: 2, ..SsqaParams::gset_default(64) };
+    let mut rng = Lcg(0xDECAF);
+    for case in 0..40 {
+        let stride = rng.range(1, 7) as usize;
+        let max_samples = rng.range(2, 24) as usize;
+        let steps = rng.range(1, 500) as usize;
+        let cfg = TraceConfig { stride, max_samples };
+        let ctx = format!("case {case}: stride={stride} cap={max_samples} steps={steps}");
+        let eng = SsqaEngine::new(params, steps);
+        let mut rec = TraceRecorder::new(cfg, &model);
+        eng.run_observed(&model, steps, 1 + case as u32, &mut rec);
+        let trace = rec.finish(SolveId::NONE, "maxcut", "tiny", 2);
+        let run = &trace.runs[0];
+        // bounded memory
+        assert!(run.samples.len() <= max_samples, "{ctx}: {} retained", run.samples.len());
+        assert!(!run.samples.is_empty(), "{ctx}: step 0 is always sampled");
+        assert_eq!(run.samples[0].step, 0, "{ctx}: downsampling keeps the anchor");
+        // the effective stride is the configured one scaled by 2^k
+        let factor = run.stride / stride;
+        assert_eq!(run.stride % stride, 0, "{ctx}: stride {}", run.stride);
+        assert!(factor.is_power_of_two(), "{ctx}: factor {factor}");
+        // retained steps are strictly increasing and stride-aligned
+        for w in run.samples.windows(2) {
+            assert!(w[0].step < w[1].step, "{ctx}: ordering");
+        }
+        for s in &run.samples {
+            assert_eq!(s.step % run.stride, 0, "{ctx}: step {} off-stride", s.step);
+        }
+        // the retained set is exactly the stride-aligned prefix grid:
+        // consecutive samples are one effective stride apart
+        for w in run.samples.windows(2) {
+            assert_eq!(w[1].step - w[0].step, run.stride, "{ctx}: gap");
+        }
+    }
+}
+
+// -------------------------------------------------------- histogram merge
+
+#[test]
+fn histogram_merge_is_associative_and_matches_bulk() {
+    let mut rng = Lcg(42);
+    let groups: Vec<Vec<u64>> = (0..3)
+        .map(|_| (0..50).map(|_| rng.range(1, 1 << 30)).collect())
+        .collect();
+    let hist_of = |xs: &[u64]| {
+        let mut h = LatencyHistogram::new();
+        for &x in xs {
+            h.record_ns(x);
+        }
+        h
+    };
+    let [a, b, c] = [hist_of(&groups[0]), hist_of(&groups[1]), hist_of(&groups[2])];
+    // (a ⊕ b) ⊕ c
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    // a ⊕ (b ⊕ c)
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a.clone();
+    right.merge(&bc);
+    assert_eq!(left, right, "merge must be associative");
+    // and both equal one bulk recording of the concatenation
+    let all: Vec<u64> = groups.concat();
+    assert_eq!(left, hist_of(&all), "merge must equal bulk recording");
+    // commutativity rides along: c ⊕ (b ⊕ a)
+    let mut ba = b.clone();
+    ba.merge(&a);
+    let mut rev = c.clone();
+    rev.merge(&ba);
+    assert_eq!(rev, left, "merge must be commutative");
+}
+
+// ------------------------------------------------------------- end-to-end
+
+/// `SolveRequest` with tracing on: the report carries a merged,
+/// versioned trace whose runs cover every seed, the JSONL artifact is
+/// line-parseable, and the solve_id correlates report ↔ artifact.
+#[test]
+fn solve_request_trace_end_to_end() {
+    let p = Arc::new(MaxCut::new(torus_2d(4, 8, true, 0xC0), 8));
+    let pool = WorkerPool::new(3, Router::new(RoutingPolicy::AllSoftware));
+    let report = SolveRequest::new(p)
+        .steps(60)
+        .seed(3)
+        .runs(5)
+        .replicas(4)
+        .trace(TraceConfig::with_stride(10))
+        .run_on(&pool)
+        .unwrap();
+    assert_ne!(report.solve_id, SolveId::NONE);
+    let trace = report.trace.as_ref().expect("trace requested");
+    assert_eq!(trace.version, TRACE_VERSION);
+    assert_eq!(trace.solve_id, report.solve_id);
+    assert_eq!(trace.runs.len(), 5, "one trace run per seed");
+    for run in &trace.runs {
+        assert_eq!(run.samples.len(), 6, "steps 0,10,..,50");
+        // energies improve over the anneal far more often than not; at
+        // minimum the trace must show the trajectory reaching the
+        // reported best energy's neighborhood by its final sample
+        assert!(run.samples.last().unwrap().best_energy <= run.samples[0].best_energy);
+    }
+    // the JSONL artifact: 1 header + 5 run records + 30 samples, every
+    // line brace-delimited with the discriminator first
+    let jsonl = trace.to_jsonl();
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), 1 + 5 + 30, "{jsonl}");
+    assert!(lines[0].starts_with("{\"rec\":\"header\",\"v\":1,\"solve_id\":\""), "{}", lines[0]);
+    assert!(lines[0].contains(&format!("\"solve_id\":\"{}\"", report.solve_id)));
+    for l in &lines {
+        assert!(l.starts_with('{') && l.ends_with('}'), "not a JSON object line: {l}");
+        assert!(l.contains("\"rec\":\""), "missing discriminator: {l}");
+    }
+    // per-stage histograms were fed by the same solve
+    let timings = pool.metrics.timings.snapshot();
+    for stage in ["solve.encode", "solve.total", "chunk.build", "chunk.anneal", "chunk.decode"] {
+        assert!(
+            timings.get(stage).is_some_and(|h| h.count() > 0),
+            "stage {stage} missing from {:?}",
+            timings.keys().collect::<Vec<_>>()
+        );
+    }
+    // identical request without tracing: bit-identical results (the
+    // recorder is read-only end-to-end, not just at the engine layer)
+    let p2 = Arc::new(MaxCut::new(torus_2d(4, 8, true, 0xC0), 8));
+    let plain = SolveRequest::new(p2)
+        .steps(60)
+        .seed(3)
+        .runs(5)
+        .replicas(4)
+        .run_on(&pool)
+        .unwrap();
+    assert_eq!(plain.best_objective, report.best_objective);
+    assert_eq!(plain.best_energy, report.best_energy);
+    assert_eq!(plain.solution, report.solution);
+    assert!(plain.trace.is_none(), "no trace unless requested");
+    pool.shutdown();
+}
