@@ -1,0 +1,141 @@
+//! Serving-layer benchmarks (DESIGN.md §10): request throughput
+//! through the multiplexed event loop over real sockets, and the
+//! result-cache replay speedup on a repeated identical solve. Appends
+//! to `BENCH_serve.json` at the repository root (same shape as the
+//! other `BENCH_*.json` trajectories).
+
+use ssqa::config::{bench, BenchArgs};
+use ssqa::serve::{ServeConfig, Server};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn roundtrip(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, line: &str) -> String {
+    writer.write_all(line.as_bytes()).expect("send");
+    writer.write_all(b"\n").expect("send");
+    let mut head = String::new();
+    reader.read_line(&mut head).expect("reply");
+    let frames = head
+        .trim_end()
+        .rsplit(' ')
+        .next()
+        .and_then(|t| t.strip_prefix("lines="))
+        .and_then(|k| k.parse::<usize>().ok())
+        .unwrap_or(0);
+    let mut sink = String::new();
+    for _ in 0..frames {
+        sink.clear();
+        reader.read_line(&mut sink).expect("frame line");
+    }
+    head.trim_end().to_string()
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    if !args.matches("serve/loop") {
+        return;
+    }
+    let steps = if args.quick { 20 } else { 60 };
+    let clients = if args.quick { 4 } else { 8 };
+    let rounds = if args.quick { 8 } else { 25 };
+
+    let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let (handle, join) = Server::bind("127.0.0.1:0", cfg).expect("bind").spawn();
+    let addr = handle.addr();
+    let connect = || {
+        let s = TcpStream::connect(addr).expect("connect");
+        (BufReader::new(s.try_clone().expect("clone")), s)
+    };
+
+    // 1. ping round-trip floor: protocol + event-loop overhead with no
+    // compute behind it
+    let (mut r, mut w) = connect();
+    let ping = bench("serve/loop ping round-trip ×1000", 3, || {
+        for _ in 0..1000 {
+            assert_eq!(roundtrip(&mut r, &mut w, "ping"), "pong");
+        }
+    });
+
+    // 2. concurrent sync solves: N clients × M small solves, distinct
+    // seeds (never cached) — the fair-scheduling + lane path
+    let solve_load = bench(
+        &format!("serve/loop {clients} clients × {rounds} solves {steps}st"),
+        3,
+        || {
+            let mut threads = Vec::new();
+            for c in 0..clients {
+                threads.push(std::thread::spawn(move || {
+                    let s = TcpStream::connect(addr).expect("connect");
+                    let mut reader = BufReader::new(s.try_clone().expect("clone"));
+                    let mut writer = s;
+                    for i in 0..rounds {
+                        // seed varies per call: every solve computes
+                        let req = format!(
+                            "solve graph=G11 steps={steps} replicas=4 seed={}",
+                            1 + c * 1000 + i
+                        );
+                        let rep = roundtrip(&mut reader, &mut writer, &req);
+                        assert!(rep.starts_with("ok id="), "{rep}");
+                    }
+                }));
+            }
+            for t in threads {
+                t.join().expect("bench client");
+            }
+        },
+    );
+
+    // 3. cache replay: one miss primes it, then every round trip is a
+    // verbatim replay — measures the full hit path (socket + lookup)
+    let (mut r, mut w) = connect();
+    let prime = roundtrip(&mut r, &mut w, "solve graph=G11 steps=200 replicas=8 seed=7");
+    assert!(prime.starts_with("ok id="), "{prime}");
+    let cached = bench("serve/loop cached solve replay ×100", 3, || {
+        for _ in 0..100 {
+            let rep = roundtrip(&mut r, &mut w, "solve graph=G11 steps=200 replicas=8 seed=7");
+            assert_eq!(rep, prime, "cache must replay verbatim");
+        }
+    });
+
+    handle.stop();
+    join.join().expect("server thread").expect("clean exit");
+
+    let total_solves = (clients * rounds) as f64;
+    println!(
+        "  → {:.0} solves/s under concurrent load; cached replay {:.1} µs/req vs ping floor {:.1} µs/req",
+        total_solves / solve_load.min.as_secs_f64(),
+        cached.min.as_secs_f64() * 1e6 / 100.0,
+        ping.min.as_secs_f64() * 1e6 / 1000.0,
+    );
+
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let record = format!(
+        "{{\"unix_time\": {stamp}, \"bench\": \"serve/loop\", \"clients\": {clients}, \
+         \"rounds\": {rounds}, \"steps\": {steps}, \"ping_us\": {:.2}, \
+         \"solves_per_s\": {:.1}, \"cached_replay_us\": {:.2}}}",
+        ping.min.as_secs_f64() * 1e6 / 1000.0,
+        total_solves / solve_load.min.as_secs_f64(),
+        cached.min.as_secs_f64() * 1e6 / 100.0,
+    );
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    let mut records: Vec<String> = std::fs::read_to_string(json_path)
+        .ok()
+        .and_then(|s| {
+            let body = s.trim().strip_prefix('[')?.strip_suffix(']')?.trim().to_string();
+            Some(
+                body.lines()
+                    .map(|l| l.trim().trim_end_matches(',').to_string())
+                    .filter(|l| !l.is_empty() && !l.starts_with("//"))
+                    .collect(),
+            )
+        })
+        .unwrap_or_default();
+    records.push(record);
+    let out = format!("[\n  {}\n]\n", records.join(",\n  "));
+    match std::fs::write(json_path, out) {
+        Ok(()) => println!("  → recorded in BENCH_serve.json"),
+        Err(e) => println!("  → could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -65,6 +65,56 @@ impl StepObserver for () {
     }
 }
 
+/// `Option<O>`: observe when present, no-op when `None`. Lets callers
+/// compose a fixed [`crate::telemetry::Tee`] chain of *optional*
+/// observers (monitor / trace recorder / run control) instead of
+/// matching every on/off combination — a `None` arm inlines to the
+/// same `false` as `()`.
+impl<O: StepObserver> StepObserver for Option<O> {
+    #[inline]
+    fn begin_run(&mut self, seed: u32) {
+        if let Some(o) = self {
+            o.begin_run(seed);
+        }
+    }
+
+    #[inline]
+    fn observe(&mut self, t: usize, state: &SsqaState) -> bool {
+        match self {
+            Some(o) => o.observe(t, state),
+            None => false,
+        }
+    }
+
+    #[inline]
+    fn observe_meta(&mut self, t: usize, state: &SsqaState, meta: &StepMeta) -> bool {
+        match self {
+            Some(o) => o.observe_meta(t, state, meta),
+            None => false,
+        }
+    }
+}
+
+/// Mutable references observe through to the referent, so an observer
+/// can be borrowed into a `Tee` and still be consumed afterwards (e.g.
+/// harvesting a recorder's trace once the run returns).
+impl<O: StepObserver + ?Sized> StepObserver for &mut O {
+    #[inline]
+    fn begin_run(&mut self, seed: u32) {
+        (**self).begin_run(seed);
+    }
+
+    #[inline]
+    fn observe(&mut self, t: usize, state: &SsqaState) -> bool {
+        (**self).observe(t, state)
+    }
+
+    #[inline]
+    fn observe_meta(&mut self, t: usize, state: &SsqaState, meta: &StepMeta) -> bool {
+        (**self).observe_meta(t, state, meta)
+    }
+}
+
 /// Result of a single annealing run.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RunResult {

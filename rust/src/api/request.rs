@@ -20,7 +20,7 @@ use crate::energy;
 use crate::graph::IsingModel;
 use crate::hw::DelayKind;
 use crate::resources::ResourceModel;
-use crate::telemetry::{RunTrace, SolveId, SpanTimer, TraceConfig};
+use crate::telemetry::{RunControl, RunTrace, SolveId, SpanTimer, TraceConfig};
 use crate::tuner::{Candidate, FpgaEstimate, MonitorConfig, TunerConfig};
 use crate::Result;
 use std::sync::Arc;
@@ -75,6 +75,11 @@ pub struct SolveRequest {
     /// execution. The id appears in the report, every job outcome, the
     /// protocol reply and the trace artifact header.
     pub solve_id: Option<SolveId>,
+    /// Serving-layer control handle: cooperative cancellation plus
+    /// optional live progress streaming (software SSQA checks the
+    /// cancel flag every step; other backends at seed boundaries). A
+    /// cancelled solve still reports a valid partial result.
+    pub control: Option<RunControl>,
 }
 
 impl SolveRequest {
@@ -93,6 +98,7 @@ impl SolveRequest {
             early_stop: None,
             trace: None,
             solve_id: None,
+            control: None,
         }
     }
 
@@ -174,6 +180,12 @@ impl SolveRequest {
         self
     }
 
+    /// Attach a serving-layer control handle (cancellation + progress).
+    pub fn control(mut self, control: RunControl) -> Self {
+        self.control = Some(control);
+        self
+    }
+
     /// Problem-aware default parameters. MAX-CUT gets the paper's
     /// calibrated G-set configuration; the penalty/QUBO encodings need a
     /// wider dynamic range, so `I0` scales with the largest per-spin
@@ -244,6 +256,7 @@ impl SolveRequest {
         batch.kernel = self.kernel;
         batch.solve_id = solve_id;
         batch.trace = self.trace;
+        batch.control = self.control.clone();
         pool.submit_batch(batch);
         let mut outcomes = pool.drain();
         // drain yields worker-completion order; chunk ids are assigned

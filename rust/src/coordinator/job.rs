@@ -11,7 +11,9 @@ use crate::api::{Problem, ProblemKind};
 use crate::dynamics::KernelChoice;
 use crate::graph::{Graph, GraphSpec, IsingModel};
 use crate::problems::maxcut::MaxCut;
-use crate::telemetry::{RunTrace, SolveId, SpanTimer, StageTimes, Tee, TraceConfig, TraceRecorder};
+use crate::telemetry::{
+    RunControl, RunTrace, SolveId, SpanTimer, StageTimes, Tee, TraceConfig, TraceRecorder,
+};
 use crate::tuner::{ConvergenceMonitor, MonitorConfig};
 use std::sync::{Arc, OnceLock};
 
@@ -95,6 +97,11 @@ pub struct Job {
     /// Record a per-step run trace while annealing (software SSQA
     /// backend only; other backends ignore it, like `early_stop`).
     pub trace: Option<TraceConfig>,
+    /// Serving-layer control handle: cooperative cancellation (all
+    /// backends — the software engines stop mid-run, the seed-looping
+    /// backends stop at the next seed boundary) and live progress
+    /// streaming (software SSQA only, like `trace`).
+    pub control: Option<RunControl>,
 }
 
 impl Job {
@@ -112,6 +119,7 @@ impl Job {
             kernel: None,
             solve_id: SolveId::NONE,
             trace: None,
+            control: None,
         }
     }
 }
@@ -144,6 +152,10 @@ pub struct BatchJob {
     /// Record a per-step run trace while annealing (software SSQA
     /// backend only; other backends ignore it, like `early_stop`).
     pub trace: Option<TraceConfig>,
+    /// Serving-layer control handle (cancellation + progress); one
+    /// handle is shared by every chunk of the batch, so a single cancel
+    /// stops the whole fan-out.
+    pub control: Option<RunControl>,
 }
 
 impl BatchJob {
@@ -162,6 +174,7 @@ impl BatchJob {
             kernel: None,
             solve_id: SolveId::NONE,
             trace: None,
+            control: None,
         }
     }
 
@@ -195,6 +208,8 @@ pub(crate) struct BatchChunk {
     pub solve_id: SolveId,
     /// Run-trace recording for this chunk's seeds (software SSQA only).
     pub trace: Option<TraceConfig>,
+    /// Serving-layer cancellation/progress handle (shared batch-wide).
+    pub control: Option<RunControl>,
     pub problem: Arc<dyn Problem>,
     pub model: Arc<IsingModel>,
 }
@@ -442,6 +457,7 @@ pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
         kernel: job.kernel.unwrap_or_default(),
         solve_id: job.solve_id,
         trace: job.trace,
+        control: job.control.clone(),
         problem: Arc::clone(job.spec.problem()),
         model: job.spec.model(),
     };
@@ -495,54 +511,44 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
             )
         }
         Ok(BackendInstance::Software(eng)) => {
-            // run tracing rides the same observer hook as convergence
-            // monitoring; when both are on, Tee runs them in lock-step
-            let res = match (chunk.early_stop, chunk.trace) {
-                (Some(cfg), Some(tc)) => {
-                    let mon = ConvergenceMonitor::new(cfg, &chunk.model);
-                    let rec = TraceRecorder::new(tc, &chunk.model);
-                    let mut tee = Tee(mon, rec);
-                    let res =
-                        eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut tee);
-                    trace = Some(tee.1.finish(
-                        chunk.solve_id,
-                        chunk.kind.name(),
-                        &chunk.label,
-                        chunk.params.replicas,
-                    ));
-                    res
-                }
-                (Some(cfg), None) => {
-                    let mut mon = ConvergenceMonitor::new(cfg, &chunk.model);
-                    eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut mon)
-                }
-                (None, Some(tc)) => {
-                    let mut rec = TraceRecorder::new(tc, &chunk.model);
-                    let res =
-                        eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut rec);
-                    trace = Some(rec.finish(
-                        chunk.solve_id,
-                        chunk.kind.name(),
-                        &chunk.label,
-                        chunk.params.replicas,
-                    ));
-                    res
-                }
-                (None, None) => eng.run_batch(&chunk.model, chunk.steps, &chunk.seeds),
-            };
-            res
+            // run tracing, convergence monitoring and serve-layer
+            // control all ride the same observer hook; the optional
+            // observers compose through one fixed Tee chain (a None arm
+            // observes as `()`), and the fully-unobserved batch keeps
+            // the plain `run_batch` fast path
+            let observed =
+                chunk.early_stop.is_some() || chunk.trace.is_some() || chunk.control.is_some();
+            if !observed {
+                eng.run_batch(&chunk.model, chunk.steps, &chunk.seeds)
+            } else {
+                let mut mon = chunk.early_stop.map(|cfg| ConvergenceMonitor::new(cfg, &chunk.model));
+                let mut rec = chunk.trace.map(|tc| TraceRecorder::new(tc, &chunk.model));
+                let mut ctl = chunk.control.as_ref().map(|c| c.observer(&chunk.model));
+                let mut tee = Tee(&mut mon, Tee(&mut rec, &mut ctl));
+                let res =
+                    eng.run_batch_observed(&chunk.model, chunk.steps, &chunk.seeds, &mut tee);
+                trace = rec.map(|r| {
+                    r.finish(chunk.solve_id, chunk.kind.name(), &chunk.label, chunk.params.replicas)
+                });
+                res
+            }
         }
-        Ok(mut instance) => chunk
-            .seeds
-            .iter()
-            .map(|&seed| {
+        Ok(mut instance) => {
+            // the seed-looping backends have no in-run observer hook;
+            // cancellation lands at the next seed boundary instead
+            let mut out = Vec::with_capacity(chunk.seeds.len());
+            for &seed in &chunk.seeds {
+                if chunk.control.as_ref().is_some_and(|c| c.cancelled()) {
+                    break;
+                }
                 let (res, energy) = instance.run(&chunk.model, chunk.steps, seed);
                 if let Some(e) = energy {
                     *modeled_energy_j.get_or_insert(0.0) += e;
                 }
-                res
-            })
-            .collect(),
+                out.push(res);
+            }
+            out
+        }
     };
     stages.record_ns("chunk.anneal", anneal_span.elapsed_ns());
 

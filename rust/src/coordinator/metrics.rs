@@ -5,8 +5,65 @@ use super::{BackendKind, JobOutcome};
 use crate::telemetry::expose::{write_histogram, write_sample, write_type};
 use crate::telemetry::Timings;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Serving-layer counters and gauges (DESIGN.md §10.5): result-cache
+/// effectiveness, admission-control rejections, cancellations and the
+/// live queue/session gauges. All lock-free atomics — the event loop
+/// bumps them on its hot path.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Solves answered verbatim from the result cache.
+    pub cache_hits: AtomicU64,
+    /// Cacheable solves that had to compute (and then populated the
+    /// cache). Hit rate = hits / (hits + misses).
+    pub cache_misses: AtomicU64,
+    /// Requests refused with `err=busy` because the admission queue was
+    /// full.
+    pub rejected_busy: AtomicU64,
+    /// Connections refused because the session table was full.
+    pub rejected_sessions: AtomicU64,
+    /// Jobs cancelled (queued or in flight) via the `cancel` verb or a
+    /// vanished session.
+    pub cancelled: AtomicU64,
+    /// Request lines dropped for exceeding the line cap
+    /// (`err=line_too_long`).
+    pub lines_too_long: AtomicU64,
+    /// Progress events dropped because a subscriber's write buffer was
+    /// at its soft cap (slow-consumer shedding).
+    pub events_dropped: AtomicU64,
+    /// Jobs admitted and not yet finished (queued + running).
+    pub queue_depth: AtomicI64,
+    /// Client sessions currently connected.
+    pub sessions: AtomicI64,
+}
+
+impl ServeCounters {
+    /// Cache hit rate over everything cacheable seen so far
+    /// (`0.0` before any cacheable solve).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let h = self.cache_hits.load(Ordering::Relaxed);
+        let m = self.cache_misses.load(Ordering::Relaxed);
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Current queue depth, clamped at zero (gauge decrements can race
+    /// transiently).
+    pub fn depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    /// Currently connected sessions, clamped at zero.
+    pub fn session_count(&self) -> u64 {
+        self.sessions.load(Ordering::Relaxed).max(0) as u64
+    }
+}
 
 /// Aggregated statistics for one backend.
 #[derive(Debug, Clone, Default)]
@@ -86,6 +143,9 @@ pub struct Metrics {
     /// [`crate::telemetry::StageTimes`] each outcome carries plus the
     /// coordinator's own spans (`solve.*`, `tune.rung`, `serve.request`).
     pub timings: Timings,
+    /// Serving-layer counters (cache, admission, cancellation, gauges);
+    /// zero and inert when the registry backs a plain CLI pool.
+    pub serve: ServeCounters,
 }
 
 impl Default for Metrics {
@@ -96,6 +156,7 @@ impl Default for Metrics {
             last_error: Mutex::default(),
             started: Instant::now(),
             timings: Timings::new(),
+            serve: ServeCounters::default(),
         }
     }
 }
@@ -226,6 +287,59 @@ impl Metrics {
                 count,
             );
         }
+        let s = &self.serve;
+        write_type(&mut out, "ssqa_serve_cache_hits_total", "counter");
+        write_sample(
+            &mut out,
+            "ssqa_serve_cache_hits_total",
+            &[],
+            s.cache_hits.load(Ordering::Relaxed),
+        );
+        write_type(&mut out, "ssqa_serve_cache_misses_total", "counter");
+        write_sample(
+            &mut out,
+            "ssqa_serve_cache_misses_total",
+            &[],
+            s.cache_misses.load(Ordering::Relaxed),
+        );
+        write_type(&mut out, "ssqa_serve_rejected_total", "counter");
+        write_sample(
+            &mut out,
+            "ssqa_serve_rejected_total",
+            &[("reason", "busy")],
+            s.rejected_busy.load(Ordering::Relaxed),
+        );
+        write_sample(
+            &mut out,
+            "ssqa_serve_rejected_total",
+            &[("reason", "sessions")],
+            s.rejected_sessions.load(Ordering::Relaxed),
+        );
+        write_type(&mut out, "ssqa_serve_cancelled_total", "counter");
+        write_sample(
+            &mut out,
+            "ssqa_serve_cancelled_total",
+            &[],
+            s.cancelled.load(Ordering::Relaxed),
+        );
+        write_type(&mut out, "ssqa_serve_lines_too_long_total", "counter");
+        write_sample(
+            &mut out,
+            "ssqa_serve_lines_too_long_total",
+            &[],
+            s.lines_too_long.load(Ordering::Relaxed),
+        );
+        write_type(&mut out, "ssqa_serve_events_dropped_total", "counter");
+        write_sample(
+            &mut out,
+            "ssqa_serve_events_dropped_total",
+            &[],
+            s.events_dropped.load(Ordering::Relaxed),
+        );
+        write_type(&mut out, "ssqa_serve_queue_depth", "gauge");
+        write_sample(&mut out, "ssqa_serve_queue_depth", &[], s.depth());
+        write_type(&mut out, "ssqa_serve_sessions", "gauge");
+        write_sample(&mut out, "ssqa_serve_sessions", &[], s.session_count());
         write_type(&mut out, "ssqa_uptime_seconds", "gauge");
         write_sample(
             &mut out,

@@ -12,7 +12,7 @@ mod job;
 mod metrics;
 mod pool;
 mod router;
-mod server;
+pub(crate) mod server;
 
 pub use job::{BatchJob, Job, JobOutcome, JobSpec, TuneJob};
 pub use metrics::{BackendMetrics, Metrics};

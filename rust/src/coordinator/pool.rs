@@ -34,12 +34,18 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn a pool with `workers` threads.
+    /// Spawn a pool with `workers` threads and a fresh metrics registry.
     pub fn new(workers: usize, router: Router) -> Self {
+        Self::with_metrics(workers, router, Arc::new(Metrics::new()))
+    }
+
+    /// Spawn a pool that records into a caller-supplied registry — the
+    /// serve layer runs one single-worker pool per executor lane and
+    /// points them all at one shared [`Metrics`].
+    pub fn with_metrics(workers: usize, router: Router, metrics: Arc<Metrics>) -> Self {
         let (tx, rx) = mpsc::channel::<(WorkItem, BackendKind)>();
         let rx = Arc::new(Mutex::new(rx));
         let (tx_out, rx_out) = mpsc::channel::<JobOutcome>();
-        let metrics = Arc::new(Metrics::new());
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers.max(1) {
             let rx = Arc::clone(&rx);
@@ -179,6 +185,7 @@ impl WorkerPool {
                 kernel: batch.kernel.unwrap_or_default(),
                 solve_id: batch.solve_id,
                 trace: batch.trace,
+                control: batch.control.clone(),
                 problem: Arc::clone(&problem),
                 model: Arc::clone(&model),
             };

@@ -55,6 +55,28 @@ pub enum RoutingPolicy {
     PreferHwSim,
 }
 
+impl RoutingPolicy {
+    /// Canonical token (CLI `--policy`, cache-key derivation).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::AllSoftware => "software",
+            RoutingPolicy::PreferPjrt { .. } => "prefer-pjrt",
+            RoutingPolicy::PreferHwSim => "prefer-hw",
+        }
+    }
+
+    /// Parse a CLI token. `prefer-pjrt` uses the artifact fit bounds the
+    /// PJRT backend ships with.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "software" | "sw" | "all-software" => RoutingPolicy::AllSoftware,
+            "prefer-pjrt" | "pjrt" => RoutingPolicy::PreferPjrt { max_n: 2048, max_r: 64 },
+            "prefer-hw" | "hw" => RoutingPolicy::PreferHwSim,
+            _ => return None,
+        })
+    }
+}
+
 /// The router.
 #[derive(Debug, Clone, Copy)]
 pub struct Router {

@@ -1,5 +1,14 @@
-//! Line-protocol server: the embedded-deployment face of the
-//! coordinator (`ssqa serve --port 7090`).
+//! Line protocol: parsing, validation and reply rendering for the
+//! coordinator's network face (`ssqa serve`).
+//!
+//! Since the multiplexed serving layer landed, the event loop itself
+//! lives in [`crate::serve`] — this module owns the protocol *grammar*:
+//! `parse_solve`/`parse_tune` validate requests and `solve_reply`/
+//! `tune_reply` render them, shared by [`handle_request`] (the direct,
+//! in-process entry point used by tests and embedding) and the serve
+//! loop, so both paths accept and answer identically. The serve layer
+//! adds the async verbs `submit`/`poll`/`cancel`/`subscribe` on top
+//! (documented in [`crate::serve`] and DESIGN.md §6.3/§10).
 //!
 //! Protocol — authoritative reference, mirrored in DESIGN.md §6.3 (one
 //! request per line; responses are one line, or a **framed multi-line
@@ -54,14 +63,13 @@
 //! engine=<name> config="<winner>" mean_objective=<c> spin_updates=<u>
 //! saved_pct=<p>`.
 
-use super::{BackendKind, JobSpec, Router, RoutingPolicy, TuneJob, WorkerPool};
+use super::{BackendKind, JobSpec, TuneJob, WorkerPool};
 use crate::api::spec::{ensure_consumed, take, take_opt, take_problem};
-use crate::api::SolveRequest;
+use crate::api::{SolveReport, SolveRequest};
+use crate::tuner::TuneReport;
 use crate::Result;
 use anyhow::anyhow;
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpListener;
 
 const VERBS: &str = "solve, tune, metrics, health, ping, quit";
 
@@ -70,7 +78,7 @@ const VERBS: &str = "solve, tune, metrics, health, ping, quit";
 /// parses its trailing `lines=K`, then reads exactly K more lines —
 /// payload bytes are never rewritten (the old `\n`→`;` flattening
 /// corrupted any value containing `;`).
-fn frame(head: &str, body: &str) -> String {
+pub(crate) fn frame(head: &str, body: &str) -> String {
     let lines: Vec<&str> = body.lines().collect();
     let mut out = format!("{head} lines={}", lines.len());
     for l in lines {
@@ -82,7 +90,7 @@ fn frame(head: &str, body: &str) -> String {
 
 /// Collect `key=value` tokens into a map; malformed or repeated tokens
 /// are errors naming the offending token.
-fn kv_map<'a>(parts: impl Iterator<Item = &'a str>) -> Result<BTreeMap<String, String>> {
+pub(crate) fn kv_map<'a>(parts: impl Iterator<Item = &'a str>) -> Result<BTreeMap<String, String>> {
     let mut map = BTreeMap::new();
     for tok in parts {
         let (k, v) = tok
@@ -93,6 +101,158 @@ fn kv_map<'a>(parts: impl Iterator<Item = &'a str>) -> Result<BTreeMap<String, S
         }
     }
     Ok(map)
+}
+
+/// A fully parsed `solve`/`submit` request: the [`SolveRequest`] to run
+/// plus the reply-shaping flags that aren't part of the request proper.
+/// Shared by the legacy per-connection handler and the multiplexed
+/// serve layer, so both paths validate and execute identically.
+#[derive(Debug, Clone)]
+pub(crate) struct ParsedSolve {
+    pub req: SolveRequest,
+    /// `span=1`: append the per-stage timing table to the reply body.
+    pub span: bool,
+    /// Requested batch width (shapes the `runs=`/`mean_objective=`
+    /// reply suffix).
+    pub runs: usize,
+}
+
+/// Parse the key set of a `solve`/`submit` request (everything after
+/// the verb, already split into a kv map).
+pub(crate) fn parse_solve(mut f: BTreeMap<String, String>) -> Result<ParsedSolve> {
+    let steps: usize = take(&mut f, "steps", 500)?;
+    let seed: u32 = take(&mut f, "seed", 1)?;
+    let runs: usize = take(&mut f, "runs", 1)?;
+    if !(1..=4096).contains(&runs) {
+        return Err(anyhow!("runs= must be in 1..=4096, got {runs}"));
+    }
+    let replicas: Option<usize> = take_opt(&mut f, "replicas")?;
+    if let Some(r) = replicas {
+        if !(1..=4096).contains(&r) {
+            return Err(anyhow!("replicas= must be in 1..=4096, got {r}"));
+        }
+    }
+    let par: Option<usize> = take_opt(&mut f, "par")?;
+    if let Some(t) = par {
+        if !(1..=64).contains(&t) {
+            return Err(anyhow!("par= must be in 1..=64, got {t}"));
+        }
+    }
+    let backend = match f.remove("backend") {
+        None => None,
+        Some(v) => {
+            Some(BackendKind::parse(&v).ok_or_else(|| anyhow!("unknown backend {v:?}"))?)
+        }
+    };
+    let kernel = match f.remove("kernel") {
+        None => None,
+        Some(v) => Some(
+            crate::dynamics::KernelChoice::parse(&v)
+                .ok_or_else(|| anyhow!("unknown kernel {v:?} (use auto|scalar|lanes|delta)"))?,
+        ),
+    };
+    let early_stop: u32 = take(&mut f, "early_stop", 0)?;
+    // trace=S records a stride-S run trace (the framed reply body
+    // carries the JSONL artifact); span=1 appends the per-stage timing
+    // table to the body
+    let trace_stride: usize = take(&mut f, "trace", 0)?;
+    let span: u32 = take(&mut f, "span", 0)?;
+    let problem = take_problem(&mut f)?;
+    ensure_consumed(&f, "solve")?;
+
+    let mut req = SolveRequest::new(problem).steps(steps).seed(seed).runs(runs);
+    req.backend = backend;
+    req.replicas = replicas;
+    req.threads = par;
+    req.kernel = kernel;
+    if early_stop != 0 {
+        req = req.early_stop(crate::tuner::MonitorConfig::default());
+    }
+    if trace_stride != 0 {
+        req = req.trace(crate::telemetry::TraceConfig::with_stride(trace_stride));
+    }
+    Ok(ParsedSolve { req, span: span != 0, runs })
+}
+
+/// Render a solve reply: the `ok id=…` status line plus, when the
+/// request asked for a trace or the timing table, the framed body.
+pub(crate) fn solve_reply(report: &SolveReport, runs: usize, span_table: Option<&str>) -> String {
+    let mut resp = format!(
+        "ok id={} solve_id={} problem={} graph={} backend={} objective={} energy={} feasible={}/{} wall_us={}",
+        report.id,
+        report.solve_id,
+        report.kind.name(),
+        report.label,
+        report.backend.name(),
+        report.best_objective,
+        report.best_energy,
+        report.feasible_runs,
+        report.runs,
+        report.wall.as_micros(),
+    );
+    if runs > 1 {
+        resp.push_str(&format!(" runs={} mean_objective={:.1}", report.runs, report.mean_objective));
+    }
+    let mut body = String::new();
+    if let Some(trace) = &report.trace {
+        body.push_str(&trace.to_jsonl());
+    }
+    if let Some(table) = span_table {
+        body.push_str(table);
+    }
+    if body.is_empty() {
+        resp
+    } else {
+        frame(&resp, &body)
+    }
+}
+
+/// Parse the key set of a `tune` request into a ready-to-run job.
+pub(crate) fn parse_tune(mut f: BTreeMap<String, String>) -> Result<TuneJob> {
+    let tuner_seed: u64 = take(&mut f, "tuner_seed", 7)?;
+    let candidates: Option<usize> = take_opt(&mut f, "candidates")?;
+    let seeds: Option<usize> = take_opt(&mut f, "seeds")?;
+    let quick: u32 = take(&mut f, "quick", 0)?;
+    let problem = take_problem(&mut f)?;
+    ensure_consumed(&f, "tune")?;
+
+    let mut job = TuneJob::new(JobSpec::new(problem), tuner_seed);
+    if quick != 0 {
+        // shrink in place: replacing the config outright would discard
+        // the problem-aware space scaling
+        job.config.shrink_quick();
+    }
+    if let Some(c) = candidates {
+        // a race needs ≥ 2 candidates to prune (0 would panic the race,
+        // 1 would crown an unevaluated winner); cap the pool so a
+        // client can't request an unbounded sweep
+        if !(2..=64).contains(&c) {
+            return Err(anyhow!("candidates= must be in 2..=64, got {c}"));
+        }
+        job.config.race.candidates = c;
+    }
+    if let Some(s) = seeds {
+        if !(1..=64).contains(&s) {
+            return Err(anyhow!("seeds= must be in 1..=64, got {s}"));
+        }
+        job.config.race.seeds_rung0 = s;
+    }
+    Ok(job)
+}
+
+/// Render a tune reply line.
+pub(crate) fn tune_reply(job: &TuneJob, report: &TuneReport) -> String {
+    let w = report.portfolio.winner_entry();
+    format!(
+        "ok tuner problem={} graph={} engine={} config=\"{}\" mean_objective={:.1} spin_updates={} saved_pct={:.1}",
+        job.spec.kind().name(),
+        job.spec.label(),
+        w.backend.name(),
+        report.winner().describe(),
+        w.mean_objective,
+        report.race.total_spin_updates,
+        100.0 * report.race.saved_fraction(),
+    )
 }
 
 /// Parse and execute one request line against a pool.
@@ -133,176 +293,27 @@ pub fn handle_request(pool: &WorkerPool, line: &str) -> Result<String> {
             ))
         }
         "tune" => {
-            let mut f = kv_map(parts)?;
-            let tuner_seed: u64 = take(&mut f, "tuner_seed", 7)?;
-            let candidates: Option<usize> = take_opt(&mut f, "candidates")?;
-            let seeds: Option<usize> = take_opt(&mut f, "seeds")?;
-            let quick: u32 = take(&mut f, "quick", 0)?;
-            let problem = take_problem(&mut f)?;
-            ensure_consumed(&f, "tune")?;
-
-            let mut job = TuneJob::new(JobSpec::new(problem), tuner_seed);
-            if quick != 0 {
-                // shrink in place: replacing the config outright would
-                // discard the problem-aware space scaling
-                job.config.shrink_quick();
-            }
-            if let Some(c) = candidates {
-                // a race needs ≥ 2 candidates to prune (0 would panic
-                // the race, 1 would crown an unevaluated winner); cap
-                // the pool so a client can't request an unbounded sweep
-                if !(2..=64).contains(&c) {
-                    return Err(anyhow!("candidates= must be in 2..=64, got {c}"));
-                }
-                job.config.race.candidates = c;
-            }
-            if let Some(s) = seeds {
-                if !(1..=64).contains(&s) {
-                    return Err(anyhow!("seeds= must be in 1..=64, got {s}"));
-                }
-                job.config.race.seeds_rung0 = s;
-            }
+            let job = parse_tune(kv_map(parts)?)?;
             let report = pool.run_tune(&job);
-            let w = report.portfolio.winner_entry();
-            Ok(format!(
-                "ok tuner problem={} graph={} engine={} config=\"{}\" mean_objective={:.1} spin_updates={} saved_pct={:.1}",
-                job.spec.kind().name(),
-                job.spec.label(),
-                w.backend.name(),
-                report.winner().describe(),
-                w.mean_objective,
-                report.race.total_spin_updates,
-                100.0 * report.race.saved_fraction(),
-            ))
+            Ok(tune_reply(&job, &report))
         }
         "solve" => {
-            let mut f = kv_map(parts)?;
-            let steps: usize = take(&mut f, "steps", 500)?;
-            let seed: u32 = take(&mut f, "seed", 1)?;
-            let runs: usize = take(&mut f, "runs", 1)?;
-            if !(1..=4096).contains(&runs) {
-                return Err(anyhow!("runs= must be in 1..=4096, got {runs}"));
-            }
-            let replicas: Option<usize> = take_opt(&mut f, "replicas")?;
-            if let Some(r) = replicas {
-                if !(1..=4096).contains(&r) {
-                    return Err(anyhow!("replicas= must be in 1..=4096, got {r}"));
-                }
-            }
-            let par: Option<usize> = take_opt(&mut f, "par")?;
-            if let Some(t) = par {
-                if !(1..=64).contains(&t) {
-                    return Err(anyhow!("par= must be in 1..=64, got {t}"));
-                }
-            }
-            let backend = match f.remove("backend") {
-                None => None,
-                Some(v) => Some(
-                    BackendKind::parse(&v).ok_or_else(|| anyhow!("unknown backend {v:?}"))?,
-                ),
-            };
-            let kernel = match f.remove("kernel") {
-                None => None,
-                Some(v) => Some(crate::dynamics::KernelChoice::parse(&v).ok_or_else(|| {
-                    anyhow!("unknown kernel {v:?} (use auto|scalar|lanes|delta)")
-                })?),
-            };
-            let early_stop: u32 = take(&mut f, "early_stop", 0)?;
-            // trace=S records a stride-S run trace (the framed reply
-            // body carries the JSONL artifact); span=1 appends the
-            // per-stage timing table to the body
-            let trace_stride: usize = take(&mut f, "trace", 0)?;
-            let span: u32 = take(&mut f, "span", 0)?;
-            let problem = take_problem(&mut f)?;
-            ensure_consumed(&f, "solve")?;
-
-            let mut req = SolveRequest::new(problem).steps(steps).seed(seed).runs(runs);
-            req.backend = backend;
-            req.replicas = replicas;
-            req.threads = par;
-            req.kernel = kernel;
-            if early_stop != 0 {
-                req = req.early_stop(crate::tuner::MonitorConfig::default());
-            }
-            if trace_stride != 0 {
-                req = req.trace(crate::telemetry::TraceConfig::with_stride(trace_stride));
-            }
-            let report = req.run_on(pool)?;
-            let mut resp = format!(
-                "ok id={} solve_id={} problem={} graph={} backend={} objective={} energy={} feasible={}/{} wall_us={}",
-                report.id,
-                report.solve_id,
-                report.kind.name(),
-                report.label,
-                report.backend.name(),
-                report.best_objective,
-                report.best_energy,
-                report.feasible_runs,
-                report.runs,
-                report.wall.as_micros(),
-            );
-            if runs > 1 {
-                resp.push_str(&format!(
-                    " runs={} mean_objective={:.1}",
-                    report.runs, report.mean_objective
-                ));
-            }
-            let mut body = String::new();
-            if let Some(trace) = &report.trace {
-                body.push_str(&trace.to_jsonl());
-            }
-            if span != 0 {
-                body.push_str(&pool.metrics.timings.render());
-            }
-            if body.is_empty() {
-                Ok(resp)
-            } else {
-                Ok(frame(&resp, &body))
-            }
+            let parsed = parse_solve(kv_map(parts)?)?;
+            let report = parsed.req.run_on(pool)?;
+            let table = parsed.span.then(|| pool.metrics.timings.render());
+            Ok(solve_reply(&report, parsed.runs, table.as_deref()))
         }
         "" => Err(anyhow!("empty request")),
         other => Err(anyhow!("unknown verb {other:?} (supported: {VERBS})")),
     }
 }
 
-/// Serve forever on `addr` (e.g. `127.0.0.1:7090`). One session at a
-/// time per connection; `quit` closes the session. Returns only on
-/// listener failure.
+/// Serve forever on `addr` (e.g. `127.0.0.1:7090`) with the default
+/// multiplexed-server configuration ([`crate::serve`]): a poll-driven
+/// event loop handling many concurrent sessions, a bounded fair
+/// admission queue, the result cache and the async job verbs. Returns
+/// only on listener failure.
 pub fn serve(addr: &str, workers: usize) -> Result<()> {
-    let pool = WorkerPool::new(workers, Router::new(RoutingPolicy::AllSoftware));
-    let listener = TcpListener::bind(addr)?;
-    eprintln!("ssqa coordinator listening on {addr}");
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let mut writer = stream.try_clone()?;
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = line?;
-            if line.trim() == "quit" {
-                break;
-            }
-            let span = pool.metrics.timings.span("serve.request");
-            let resp = match handle_request(&pool, line.trim()) {
-                Ok(r) => r,
-                Err(e) => format!("err {e}"),
-            };
-            let wall = span.stop();
-            // one log line per request, keyed by the solve id when the
-            // reply carries one
-            let verb = line.trim().split_whitespace().next().unwrap_or("");
-            let head = resp.lines().next().unwrap_or("");
-            let sid = head
-                .split_whitespace()
-                .find(|t| t.starts_with("solve_id="))
-                .unwrap_or("solve_id=-");
-            eprintln!(
-                "ssqa: verb={verb} {sid} status={} wall_us={}",
-                head.split_whitespace().next().unwrap_or("-"),
-                wall.as_micros(),
-            );
-            writer.write_all(resp.as_bytes())?;
-            writer.write_all(b"\n")?;
-        }
-    }
-    Ok(())
+    let cfg = crate::serve::ServeConfig { workers, ..crate::serve::ServeConfig::default() };
+    crate::serve::Server::bind(addr, cfg)?.run()
 }

@@ -25,6 +25,8 @@
 //!   Table 6, Figs. 11–12).
 //! * [`runtime`] — PJRT client loading the AOT-compiled JAX/Pallas step.
 //! * [`coordinator`] — job queue, worker pool, backend router, metrics.
+//! * [`serve`] — multiplexed serving layer: nonblocking event loop,
+//!   bounded admission + fair scheduling, result cache, async job verbs.
 //! * [`telemetry`] — run tracing, timing spans and metrics exposition:
 //!   correlation ids, JSONL run-trace artifacts, latency histograms.
 //! * [`tuner`] — adaptive auto-tuning: parameter racing, convergence
@@ -44,6 +46,7 @@ pub mod problems;
 pub mod resources;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod telemetry;
 pub mod tuner;
 

@@ -134,7 +134,9 @@ fn print_help() {
          \x20             [--runs 100] [--steps 500] [--quick] [--out results]\n\
          \x20 resources   [--n 800] [--replicas 20] [--delay dual|shift] [--p 1] [--clock-mhz 166]\n\
          \x20 calibrate   --graph G11 [--runs 20] [--steps 500] [--replicas 20] [--jscale 8]\n\
-         \x20 serve       [--addr 127.0.0.1:7090] [--workers 4]\n\
+         \x20 serve       [--addr 127.0.0.1:7090] [--workers 4] [--max-sessions 128]\n\
+         \x20             [--queue-depth 256] [--cache-entries 128] [--sub-stride 64]\n\
+         \x20             [--policy software|prefer-pjrt|prefer-hw]\n\
          \x20 export-gset --graph G11 --out g11.gset"
     );
 }
@@ -381,12 +383,25 @@ fn cmd_resources(f: &BTreeMap<String, String>) -> Result<()> {
 
 fn cmd_serve(f: &BTreeMap<String, String>) -> Result<()> {
     let addr = f.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7090".into());
-    let workers: usize = get(f, "workers", ssqa::config::num_threads())?;
+    let mut cfg = ssqa::serve::ServeConfig::default();
+    cfg.workers = get(f, "workers", cfg.workers)?;
+    cfg.max_sessions = get(f, "max-sessions", cfg.max_sessions)?;
+    cfg.queue_depth = get(f, "queue-depth", cfg.queue_depth)?;
+    cfg.cache_entries = get(f, "cache-entries", cfg.cache_entries)?;
+    cfg.sub_stride = get(f, "sub-stride", cfg.sub_stride)?;
+    if let Some(p) = f.get("policy") {
+        cfg.policy = RoutingPolicy::parse(p).ok_or_else(|| {
+            anyhow::anyhow!("unknown --policy {p:?} (use software|prefer-pjrt|prefer-hw)")
+        })?;
+    }
+    if cfg.max_sessions == 0 || cfg.queue_depth == 0 {
+        anyhow::bail!("--max-sessions and --queue-depth must be >= 1");
+    }
     // smoke the request path before binding
     let pool = WorkerPool::new(1, Router::new(RoutingPolicy::AllSoftware));
     let _ = handle_request(&pool, "ping")?;
     drop(pool);
-    ssqa::coordinator::serve(&addr, workers)
+    ssqa::serve::Server::bind(&addr, cfg)?.run()
 }
 
 #[cfg(test)]

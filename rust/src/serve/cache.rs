@@ -1,0 +1,213 @@
+//! Result cache: canonical instance fingerprinting + LRU storage
+//! (DESIGN.md §10.3).
+//!
+//! A repeated identical solve must come back **bit-identical** with
+//! zero spin updates recomputed, so the cache stores the complete
+//! rendered reply string and returns it verbatim — wall-clock, outcome
+//! id and solve id included, exactly as first computed.
+//!
+//! §Key derivation: the fingerprint covers everything that can change
+//! the reply — the encoded Ising model's full CSR image (`n`, row
+//! topology, coupling values) and field vector, the problem kind and
+//! label, steps/seed/runs, the replica override, the early-stop flag,
+//! and the backend that will execute (the explicit override, or the
+//! routing policy when routing decides). It deliberately **excludes**
+//! the step-kernel choice and thread counts: those are bit-identical
+//! by the kernel determinism contract, so `kernel=delta par=8` and
+//! `kernel=scalar` share a cache line. Requests carrying a trace or
+//! span ask for per-execution telemetry and bypass the cache, as do
+//! explicit-parameter or tuned requests (the protocol can express
+//! neither today — defense in depth).
+
+use crate::api::SolveRequest;
+use crate::coordinator::RoutingPolicy;
+use crate::graph::IsingModel;
+use crate::telemetry::splitmix64;
+use std::collections::HashMap;
+
+/// 128-bit fingerprint: two independently chained splitmix64 lanes.
+/// One lane's 64 bits would already make accidental collisions
+/// birthday-improbable; the second lane (different init, input tweak)
+/// guards against the structured, low-entropy inputs CSR images are.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct Fingerprint(u64, u64);
+
+struct Mixer {
+    a: u64,
+    b: u64,
+}
+
+impl Mixer {
+    fn new() -> Self {
+        // distinct arbitrary inits so the lanes decorrelate immediately
+        Self { a: 0x53_53_51_41, b: 0x63_61_63_68_65 }
+    }
+
+    fn word(&mut self, w: u64) {
+        self.a = splitmix64(self.a ^ w);
+        self.b = splitmix64(self.b.wrapping_add(w.rotate_left(17)));
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        // length prefix keeps ("ab","c") distinct from ("a","bc")
+        self.word(bytes.len() as u64);
+        for chunk in bytes.chunks(8) {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            self.word(u64::from_le_bytes(w));
+        }
+    }
+
+    fn finish(self) -> Fingerprint {
+        Fingerprint(splitmix64(self.a), splitmix64(self.b))
+    }
+}
+
+/// Whether a request is cacheable at all (see module docs).
+pub(crate) fn cacheable(req: &SolveRequest, span: bool) -> bool {
+    req.trace.is_none() && !span && req.params.is_none() && req.tune.is_none()
+}
+
+/// Fingerprint a cacheable solve against its built model.
+pub(crate) fn solve_fingerprint(
+    req: &SolveRequest,
+    model: &IsingModel,
+    policy: RoutingPolicy,
+) -> Fingerprint {
+    let mut mx = Mixer::new();
+    mx.bytes(req.problem.kind().name().as_bytes());
+    mx.bytes(req.problem.label().as_bytes());
+    // the canonical instance image: field vector + CSR row topology and
+    // coupling values (CsrMatrix::from_edges canonicalizes ordering, so
+    // equal instances hash equal however they were specified)
+    mx.word(model.n() as u64);
+    for &h in &model.h {
+        mx.word(h as u64);
+    }
+    let j = model.j_sparse();
+    mx.word(j.nnz() as u64);
+    for i in 0..model.n() {
+        let (cols, vals) = j.row(i);
+        mx.word(cols.len() as u64);
+        for (&c, &v) in cols.iter().zip(vals) {
+            mx.word((c as u64) << 32 | (v as u32 as u64));
+        }
+    }
+    // execution policy that shapes the reply
+    mx.word(req.steps as u64);
+    mx.word(req.seed as u64);
+    mx.word(req.runs as u64);
+    mx.word(req.replicas.map(|r| r as u64 + 1).unwrap_or(0));
+    mx.word(req.early_stop.is_some() as u64);
+    match req.backend {
+        Some(b) => mx.bytes(b.name().as_bytes()),
+        None => mx.bytes(policy.name().as_bytes()),
+    }
+    mx.finish()
+}
+
+struct CacheEntry {
+    reply: String,
+    last_used: u64,
+}
+
+/// Bounded LRU map from fingerprint to verbatim reply. Recency is a
+/// monotone tick; eviction scans for the stale minimum — O(capacity),
+/// which at the supported cache sizes (≤ a few thousand entries) is
+/// noise next to the solve the miss is about to run.
+pub(crate) struct ResultCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<Fingerprint, CacheEntry>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ResultCache {
+    pub fn new(cap: usize) -> Self {
+        Self { cap, tick: 0, map: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Capacity 0 disables caching entirely.
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Look up a fingerprint, bumping its recency on a hit.
+    pub fn get(&mut self, key: Fingerprint) -> Option<String> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits += 1;
+                Some(e.reply.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a computed reply, evicting the least-recently-used entry
+    /// when at capacity.
+    pub fn insert(&mut self, key: Fingerprint, reply: String) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k)
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, CacheEntry { reply, last_used: self.tick });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(n: u64) -> Fingerprint {
+        Fingerprint(n, n.wrapping_mul(3))
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = ResultCache::new(2);
+        c.insert(fp(1), "one".into());
+        c.insert(fp(2), "two".into());
+        assert_eq!(c.get(fp(1)).as_deref(), Some("one")); // bump 1
+        c.insert(fp(3), "three".into()); // evicts 2
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(fp(2)), None);
+        assert_eq!(c.get(fp(1)).as_deref(), Some("one"));
+        assert_eq!(c.get(fp(3)).as_deref(), Some("three"));
+    }
+
+    #[test]
+    fn hit_miss_counters_track_lookups() {
+        let mut c = ResultCache::new(4);
+        assert_eq!(c.get(fp(9)), None);
+        c.insert(fp(9), "r".into());
+        assert!(c.get(fp(9)).is_some());
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn zero_capacity_disables_storage() {
+        let mut c = ResultCache::new(0);
+        c.insert(fp(1), "one".into());
+        assert!(!c.enabled());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.get(fp(1)), None);
+    }
+}

@@ -1,0 +1,156 @@
+//! Executor lanes: the compute side of the serve loop
+//! (DESIGN.md §10.2).
+//!
+//! Each lane is a thread owning a **single-worker** [`WorkerPool`];
+//! all lanes share one [`Metrics`] registry and the result cache. One
+//! lane runs one job at a time, so the pool's submit→drain contract
+//! holds per lane while independent clients' jobs run concurrently
+//! across lanes — throughput-oriented parallelism (many small solves)
+//! rather than the CLI's latency-oriented single-solve fan-out.
+//!
+//! The cache is consulted *here*, not in the event loop: fingerprinting
+//! requires the encoded Ising model, and building it on the loop thread
+//! would stall every session behind one large instance.
+
+use super::cache::{cacheable, solve_fingerprint, ResultCache};
+use crate::coordinator::server::{solve_reply, tune_reply, ParsedSolve};
+use crate::coordinator::{lock_clean, Metrics, Router, RoutingPolicy, TuneJob, WorkerPool};
+use crate::telemetry::{ProgressEvent, RunControl};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+
+use super::poll::WakeHandle;
+
+/// A dispatched job's payload.
+pub(crate) enum ExecWork {
+    Solve {
+        parsed: ParsedSolve,
+        /// Shared with the scheduler's job entry: `cancel` flips it,
+        /// the in-run observer sees it.
+        control: RunControl,
+    },
+    Tune(TuneJob),
+}
+
+/// Lane → loop completion message.
+pub(crate) enum LoopMsg {
+    Done { job: u64, reply: String },
+    Progress(ProgressEvent),
+}
+
+pub(crate) struct ExecPool {
+    tx: Option<mpsc::Sender<(u64, ExecWork)>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ExecPool {
+    pub fn new(
+        lanes: usize,
+        policy: RoutingPolicy,
+        metrics: Arc<Metrics>,
+        cache: Arc<Mutex<ResultCache>>,
+        done: mpsc::Sender<LoopMsg>,
+        wake: WakeHandle,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<(u64, ExecWork)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for _ in 0..lanes.max(1) {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let cache = Arc::clone(&cache);
+            let done = done.clone();
+            let wake = wake.clone();
+            handles.push(std::thread::spawn(move || {
+                let make_pool =
+                    || WorkerPool::with_metrics(1, Router::new(policy), Arc::clone(&metrics));
+                let mut pool = make_pool();
+                loop {
+                    let msg = lock_clean(&rx).recv();
+                    let Ok((job, work)) = msg else { break };
+                    // a panicking backend killed the lane's worker last
+                    // round — rebuild so one poisoned job can't wedge
+                    // the lane forever
+                    if pool.alive_workers() == 0 {
+                        pool = make_pool();
+                    }
+                    let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_one(&pool, &metrics, &cache, policy, work)
+                    }))
+                    .unwrap_or_else(|_| "err internal execution panic".to_string());
+                    if done.send(LoopMsg::Done { job, reply }).is_err() {
+                        break;
+                    }
+                    wake.wake();
+                }
+            }));
+        }
+        Self { tx: Some(tx), handles }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn send(&self, job: u64, work: ExecWork) {
+        let _ = self.tx.as_ref().expect("exec pool running").send((job, work));
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute one job to its complete reply string (`ok …` / `err …`).
+fn run_one(
+    pool: &WorkerPool,
+    metrics: &Metrics,
+    cache: &Mutex<ResultCache>,
+    policy: RoutingPolicy,
+    work: ExecWork,
+) -> String {
+    match work {
+        ExecWork::Tune(tune) => {
+            let report = pool.run_tune(&tune);
+            tune_reply(&tune, &report)
+        }
+        ExecWork::Solve { mut parsed, control } => {
+            // cache first: a hit answers verbatim with zero spin
+            // updates recomputed (model build is the only work done)
+            let key = if cacheable(&parsed.req, parsed.span) && lock_clean(cache).enabled() {
+                let model = parsed.req.problem.to_ising();
+                Some(solve_fingerprint(&parsed.req, &model, policy))
+            } else {
+                None
+            };
+            if let Some(k) = key {
+                if let Some(reply) = lock_clean(cache).get(k) {
+                    metrics.serve.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    return reply;
+                }
+                metrics.serve.cache_misses.fetch_add(1, Ordering::Relaxed);
+            }
+            parsed.req.control = Some(control.clone());
+            let reply = match parsed.req.run_on(pool) {
+                Ok(report) => {
+                    let table = parsed.span.then(|| metrics.timings.render());
+                    solve_reply(&report, parsed.runs, table.as_deref())
+                }
+                Err(e) => format!("err {e}"),
+            };
+            // a cancelled run is a valid *partial* result — never cache
+            // it as the instance's answer
+            if let Some(k) = key {
+                if reply.starts_with("ok") && !control.cancelled() {
+                    lock_clean(cache).insert(k, reply.clone());
+                }
+            }
+            reply
+        }
+    }
+}

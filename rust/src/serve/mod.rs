@@ -1,0 +1,570 @@
+//! Multiplexed serving layer (DESIGN.md §10): the production face of
+//! the coordinator, replacing the one-connection-at-a-time accept loop.
+//!
+//! Architecture — five cooperating pieces, all dependency-free:
+//!
+//! * **Event loop** (this module) — one thread, nonblocking sockets,
+//!   readiness via [`poll`] (`poll(2)` on unix, a sleep fallback
+//!   elsewhere). Handles every session's I/O, request parsing and reply
+//!   routing; never executes a solve.
+//! * **Sessions** ([`session`]) — bounded read/write buffers, a hard
+//!   request-line cap (`err line_too_long`), hard/soft write caps that
+//!   disconnect slow reply consumers but merely shed progress events.
+//! * **Scheduler** ([`sched`]) — bounded admission queue (`err busy`
+//!   backpressure) + per-session round-robin dispatch + the job table
+//!   driving the async verbs.
+//! * **Executor lanes** ([`exec`]) — `workers` threads, each owning a
+//!   single-worker [`WorkerPool`]; all share one [`Metrics`] registry.
+//! * **Result cache** ([`cache`]) — canonical-instance-fingerprint →
+//!   verbatim-reply LRU; a repeat solve answers bit-identically with
+//!   zero spin updates recomputed.
+//!
+//! Protocol additions over the sync verbs (see `coordinator::server`
+//! for the shared grammar; DESIGN.md §6.3 for the full reference):
+//!
+//! ```text
+//! submit <solve keys…>      — async solve; replies `ok submitted job=J`
+//! poll job=J                — `ok job=J state=queued|running|cancelled`
+//!                             or `ok job=J state=done lines=K` + the
+//!                             job's verbatim reply as the framed body
+//! cancel job=J              — `ok job=J cancel=dequeued|signalled|late`
+//! subscribe job=J           — `ok job=J subscribed state=…`, then async
+//!                             `event job=J seed=… step=… best_e=… mean_e=…`
+//!                             lines and a final `event job=J done=1`
+//! ```
+//!
+//! Sync `solve`/`tune` still behave exactly as before from a client's
+//! view — one request line, one (possibly framed) reply — but they run
+//! through the same queue: the session is marked blocked, the loop
+//! keeps serving everyone else, and the reply is routed when the lane
+//! finishes. Strict per-session request→reply ordering is preserved by
+//! not processing a blocked session's further input.
+
+mod cache;
+mod exec;
+mod poll;
+mod sched;
+mod session;
+
+pub use session::MAX_LINE;
+
+use crate::api::spec::{ensure_consumed, take, take_opt};
+use crate::coordinator::server::{frame, kv_map, parse_solve, parse_tune};
+use crate::coordinator::{Metrics, RoutingPolicy};
+use crate::telemetry::{ProgressEvent, ProgressSink, RunControl};
+use crate::Result;
+use anyhow::anyhow;
+use cache::ResultCache;
+use exec::{ExecPool, ExecWork, LoopMsg};
+use poll::{raw_fd, Waker};
+use sched::{CancelOutcome, JobState, Scheduler};
+use session::{InLine, Session};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+const SERVE_VERBS: &str =
+    "solve, tune, submit, poll, cancel, subscribe, metrics, health, ping, quit";
+
+/// Poll timeout when nothing is pending — the waker interrupts it for
+/// completions and progress, so this only bounds shutdown latency.
+const TICK: Duration = Duration::from_millis(250);
+
+/// Serving-layer knobs (`ssqa serve --max-sessions --queue-depth
+/// --cache-entries --policy`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Executor lanes (concurrent jobs in flight).
+    pub workers: usize,
+    /// Concurrent client sessions; further connects get `err busy` and
+    /// are dropped.
+    pub max_sessions: usize,
+    /// Bound on *queued* (admitted, not yet running) jobs across all
+    /// sessions; over-admission is refused with `err busy`.
+    pub queue_depth: usize,
+    /// Result-cache capacity in entries; 0 disables caching.
+    pub cache_entries: usize,
+    /// Routing policy for jobs without an explicit backend.
+    pub policy: RoutingPolicy,
+    /// Progress-event sampling stride for `subscribe` (steps between
+    /// events).
+    pub sub_stride: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: crate::config::num_threads(),
+            max_sessions: 128,
+            queue_depth: 256,
+            cache_entries: 128,
+            policy: RoutingPolicy::AllSoftware,
+            sub_stride: 64,
+        }
+    }
+}
+
+/// Control handle for a running server (tests, embedding): the resolved
+/// address plus a stop switch that interrupts the event loop.
+#[derive(Clone)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    wake: poll::WakeHandle,
+}
+
+impl ServerHandle {
+    /// The resolved listening address (`--addr 127.0.0.1:0` binds an
+    /// ephemeral port; this is the one the kernel picked).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the event loop to exit; it finishes the current tick, joins
+    /// the executor lanes and returns from [`Server::run`].
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.wake.wake();
+    }
+}
+
+/// A bound, not-yet-running server.
+pub struct Server {
+    listener: TcpListener,
+    local: SocketAddr,
+    cfg: ServeConfig,
+    stop: Arc<AtomicBool>,
+    waker: Waker,
+    metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port).
+    pub fn bind(addr: &str, cfg: ServeConfig) -> Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        Ok(Self {
+            listener,
+            local,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+            waker: Waker::new()?,
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            addr: self.local,
+            stop: Arc::clone(&self.stop),
+            wake: self.waker.handle(),
+        }
+    }
+
+    /// Run on a background thread (tests, embedding).
+    pub fn spawn(self) -> (ServerHandle, std::thread::JoinHandle<Result<()>>) {
+        let handle = self.handle();
+        (handle, std::thread::spawn(move || self.run()))
+    }
+
+    /// Run the event loop until [`ServerHandle::stop`] or a listener
+    /// failure.
+    pub fn run(self) -> Result<()> {
+        let Server { listener, local, cfg, stop, mut waker, metrics } = self;
+        // the resolved address, parsed by the soak harness and scripted
+        // clients — keep the prefix stable
+        eprintln!("ssqa coordinator listening on {local}");
+        let cache = Arc::new(Mutex::new(ResultCache::new(cfg.cache_entries)));
+        let (loop_tx, loop_rx) = mpsc::channel::<LoopMsg>();
+        let (prog_tx, prog_rx) = mpsc::channel::<ProgressEvent>();
+        {
+            // progress forwarder: blocking-recv on the observers'
+            // channel, nudging the poll loop per event — observers stay
+            // ignorant of the loop's wake mechanics
+            let loop_tx = loop_tx.clone();
+            let wake = waker.handle();
+            std::thread::spawn(move || {
+                for ev in prog_rx.iter() {
+                    if loop_tx.send(LoopMsg::Progress(ev)).is_err() {
+                        break;
+                    }
+                    wake.wake();
+                }
+            });
+        }
+        let exec = ExecPool::new(
+            cfg.workers,
+            cfg.policy,
+            Arc::clone(&metrics),
+            Arc::clone(&cache),
+            loop_tx.clone(),
+            waker.handle(),
+        );
+        let mut sched = Scheduler::new(cfg.queue_depth, Arc::clone(&metrics));
+        let mut sessions: HashMap<u64, Session> = HashMap::new();
+        let mut next_session: u64 = 1;
+
+        while !stop.load(Ordering::Relaxed) {
+            // 1. readiness: listener + waker + every live session
+            let order: Vec<u64> = sessions.keys().copied().collect();
+            let mut fds = Vec::with_capacity(2 + order.len());
+            fds.push((raw_fd(&listener), true, false));
+            fds.push((raw_fd(&waker.rx), true, false));
+            for id in &order {
+                let s = &sessions[id];
+                fds.push((raw_fd(&s.stream), s.wants_read(), s.wants_write()));
+            }
+            let ready = poll::wait(&fds, TICK)?;
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            waker.drain();
+
+            // 2. accept new sessions (up to the cap)
+            if ready[0].readable {
+                accept_ready(&listener, &cfg, &metrics, &mut sessions, &mut next_session);
+            }
+
+            // 3. pull input off ready sessions
+            for (i, id) in order.iter().enumerate() {
+                if let Some(s) = sessions.get_mut(id) {
+                    if ready[2 + i].readable && s.wants_read() {
+                        s.fill();
+                    }
+                }
+            }
+
+            // 4. route completions and progress events — before line
+            // processing, so a session a reply just unblocked gets its
+            // pipelined follow-up requests handled this very tick
+            while let Ok(msg) = loop_rx.try_recv() {
+                match msg {
+                    LoopMsg::Done { job, reply } => {
+                        let Some((sid, sync, subscribers, reply)) = sched.complete(job, reply)
+                        else {
+                            continue;
+                        };
+                        let status = reply.split_whitespace().next().unwrap_or("-").to_string();
+                        eprintln!("ssqa: job={job} session={sid} status={status}");
+                        if sync {
+                            if let Some(s) = sessions.get_mut(&sid) {
+                                if s.blocked_on == Some(job) {
+                                    s.blocked_on = None;
+                                    s.queue_reply(&reply);
+                                }
+                            }
+                        }
+                        for sub in subscribers {
+                            if let Some(s) = sessions.get_mut(&sub) {
+                                // completion events ride the reply path
+                                // (hard cap): a subscriber must never
+                                // miss the end of its stream
+                                s.queue_reply(&format!("event job={job} done=1"));
+                            }
+                        }
+                    }
+                    LoopMsg::Progress(ev) => {
+                        let subs = sched.subscribers(ev.job).to_vec();
+                        if subs.is_empty() {
+                            continue;
+                        }
+                        let line = format!(
+                            "event job={} seed={} step={} best_e={} mean_e={:.3}",
+                            ev.job, ev.seed, ev.step, ev.best_energy, ev.mean_energy
+                        );
+                        for sub in subs {
+                            if let Some(s) = sessions.get_mut(&sub) {
+                                if !s.queue_event(&line) {
+                                    metrics
+                                        .serve
+                                        .events_dropped
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            // 5. process buffered request lines (stops at a sync verb:
+            // the session blocks until its reply routes back)
+            for id in &order {
+                let Some(s) = sessions.get_mut(id) else { continue };
+                while s.blocked_on.is_none() && !s.closing && !s.dead {
+                    let Some(item) = s.pending.pop_front() else { break };
+                    match item {
+                        InLine::TooLong => {
+                            metrics.serve.lines_too_long.fetch_add(1, Ordering::Relaxed);
+                            s.queue_reply(&format!(
+                                "err line_too_long max_bytes={} (request line discarded)",
+                                MAX_LINE
+                            ));
+                        }
+                        InLine::Line(line) => {
+                            handle_line(&line, s, &mut sched, &metrics, &cfg, &prog_tx, &exec);
+                        }
+                    }
+                }
+            }
+
+            // 6. feed idle lanes, fairly
+            while sched.running() < exec.lanes() {
+                match sched.next_ready() {
+                    Some((id, work)) => exec.send(id, work),
+                    None => break,
+                }
+            }
+
+            // 7. push replies out; reap finished/broken sessions
+            for id in sessions.keys().copied().collect::<Vec<_>>() {
+                let s = sessions.get_mut(&id).expect("key just listed");
+                if s.wants_write() || s.closing {
+                    s.flush();
+                }
+                if s.dead {
+                    sessions.remove(&id);
+                    sched.drop_session(id);
+                    eprintln!("ssqa: session={id} closed");
+                }
+            }
+            metrics.serve.sessions.store(sessions.len() as i64, Ordering::Relaxed);
+        }
+        // lanes join on drop; in-flight jobs finish, their completions
+        // are simply never routed
+        drop(exec);
+        Ok(())
+    }
+}
+
+fn accept_ready(
+    listener: &TcpListener,
+    cfg: &ServeConfig,
+    metrics: &Metrics,
+    sessions: &mut HashMap<u64, Session>,
+    next_session: &mut u64,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if sessions.len() >= cfg.max_sessions {
+                    metrics.serve.rejected_sessions.fetch_add(1, Ordering::Relaxed);
+                    // best-effort goodbye; a full socket buffer just
+                    // means the client learns from the close instead
+                    use std::io::Write;
+                    let _ = stream.set_nonblocking(true);
+                    let _ = (&stream)
+                        .write_all(format!("err busy sessions={}\n", cfg.max_sessions).as_bytes());
+                    continue;
+                }
+                let id = *next_session;
+                *next_session += 1;
+                if let Ok(s) = Session::new(id, stream) {
+                    sessions.insert(id, s);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    metrics.serve.sessions.store(sessions.len() as i64, Ordering::Relaxed);
+}
+
+/// Parse and act on one request line. Sync verbs leave the session
+/// blocked; everything else queues its reply immediately.
+fn handle_line(
+    line: &str,
+    session: &mut Session,
+    sched: &mut Scheduler,
+    metrics: &Arc<Metrics>,
+    cfg: &ServeConfig,
+    prog_tx: &mpsc::Sender<ProgressEvent>,
+    exec: &ExecPool,
+) {
+    let mut parts = line.split_whitespace();
+    let verb = parts.next().unwrap_or("");
+    match verb {
+        "quit" => session.closing = true,
+        "ping" => {
+            session.queue_reply("pong");
+        }
+        "metrics" => {
+            let reply = (|| -> Result<String> {
+                let mut f = kv_map(parts)?;
+                let format: String = take(&mut f, "format", "prom".to_string())?;
+                ensure_consumed(&f, "metrics")?;
+                let body = match format.as_str() {
+                    "prom" => metrics.render_prometheus(),
+                    "table" => metrics.render(),
+                    other => return Err(anyhow!("unknown format {other:?} (use prom|table)")),
+                };
+                Ok(frame("ok metrics", &body))
+            })();
+            queue_result(session, reply);
+        }
+        "health" => {
+            let snap = metrics.snapshot();
+            let jobs: u64 = snap.values().map(|m| m.jobs).sum();
+            let errors: u64 = snap.values().map(|m| m.errors).sum();
+            let last = metrics
+                .last_error()
+                .map(|e| e.replace(['\n', '"'], " "))
+                .unwrap_or_default();
+            let sv = &metrics.serve;
+            session.queue_reply(&format!(
+                "ok health uptime_s={:.3} workers={} sessions={} queue_depth={} running={} cache_hits={} cache_misses={} cache_hit_rate={:.3} jobs={} errors={} cancelled={} rejected={} last_error=\"{}\"",
+                metrics.uptime().as_secs_f64(),
+                exec.lanes(),
+                sv.session_count(),
+                sched.depth(),
+                sched.running(),
+                sv.cache_hits.load(Ordering::Relaxed),
+                sv.cache_misses.load(Ordering::Relaxed),
+                sv.cache_hit_rate(),
+                jobs,
+                errors,
+                sv.cancelled.load(Ordering::Relaxed),
+                sv.rejected_busy.load(Ordering::Relaxed)
+                    + sv.rejected_sessions.load(Ordering::Relaxed),
+                last,
+            ));
+        }
+        "solve" | "submit" => {
+            let sync = verb == "solve";
+            match kv_map(parts).and_then(parse_solve) {
+                Err(e) => {
+                    session.queue_reply(&format!("err {e}"));
+                }
+                Ok(parsed) => {
+                    let id = sched.reserve_id();
+                    let control = if sync {
+                        // cancellable only through session teardown —
+                        // the session itself is blocked on the reply
+                        RunControl::new()
+                    } else {
+                        RunControl::with_sink(ProgressSink::new(
+                            id,
+                            cfg.sub_stride,
+                            prog_tx.clone(),
+                        ))
+                    };
+                    let work = ExecWork::Solve { parsed, control: control.clone() };
+                    if sched.admit(id, session.id, sync, work, Some(control)) {
+                        if sync {
+                            session.blocked_on = Some(id);
+                        } else {
+                            session.queue_reply(&format!("ok submitted job={id}"));
+                        }
+                    } else {
+                        session
+                            .queue_reply(&format!("err busy queue_depth={}", cfg.queue_depth));
+                    }
+                }
+            }
+        }
+        "tune" => match kv_map(parts).and_then(parse_tune) {
+            Err(e) => {
+                session.queue_reply(&format!("err {e}"));
+            }
+            Ok(job) => {
+                let id = sched.reserve_id();
+                if sched.admit(id, session.id, true, ExecWork::Tune(job), None) {
+                    session.blocked_on = Some(id);
+                } else {
+                    session.queue_reply(&format!("err busy queue_depth={}", cfg.queue_depth));
+                }
+            }
+        },
+        "poll" => match job_arg(parts, "poll") {
+            Err(e) => {
+                session.queue_reply(&format!("err {e}"));
+            }
+            Ok(job) => {
+                let reply = match sched.poll(session.id, job) {
+                    None => format!("err unknown job {job}"),
+                    Some(JobState::Queued) => format!("ok job={job} state=queued"),
+                    Some(JobState::Running) => format!("ok job={job} state=running"),
+                    Some(JobState::Cancelled) => format!("ok job={job} state=cancelled"),
+                    Some(JobState::Done(reply)) => {
+                        frame(&format!("ok job={job} state=done"), reply)
+                    }
+                };
+                session.queue_reply(&reply);
+            }
+        },
+        "cancel" => match job_arg(parts, "cancel") {
+            Err(e) => {
+                session.queue_reply(&format!("err {e}"));
+            }
+            Ok(job) => {
+                let reply = match sched.cancel(session.id, job) {
+                    CancelOutcome::Dequeued => format!("ok job={job} cancel=dequeued"),
+                    CancelOutcome::Signalled => format!("ok job={job} cancel=signalled"),
+                    CancelOutcome::Late => format!("ok job={job} cancel=late"),
+                    CancelOutcome::NotCancellable => {
+                        format!("err job {job} is not cancellable")
+                    }
+                    CancelOutcome::Unknown => format!("err unknown job {job}"),
+                };
+                session.queue_reply(&reply);
+            }
+        },
+        "subscribe" => match job_arg(parts, "subscribe") {
+            Err(e) => {
+                session.queue_reply(&format!("err {e}"));
+            }
+            Ok(job) => {
+                let (reply, done) = match sched.subscribe(session.id, job) {
+                    None => (format!("err unknown job {job}"), false),
+                    Some(JobState::Queued) => {
+                        (format!("ok job={job} subscribed state=queued"), false)
+                    }
+                    Some(JobState::Running) => {
+                        (format!("ok job={job} subscribed state=running"), false)
+                    }
+                    Some(JobState::Cancelled) => {
+                        (format!("ok job={job} subscribed state=cancelled"), false)
+                    }
+                    Some(JobState::Done(_)) => {
+                        (format!("ok job={job} subscribed state=done"), true)
+                    }
+                };
+                session.queue_reply(&reply);
+                if done {
+                    // the stream's terminator, so a late subscriber's
+                    // read loop still ends
+                    session.queue_reply(&format!("event job={job} done=1"));
+                }
+            }
+        },
+        "" => {
+            session.queue_reply("err empty request");
+        }
+        other => {
+            session.queue_reply(&format!(
+                "err unknown verb {other:?} (supported: {SERVE_VERBS})"
+            ));
+        }
+    }
+}
+
+fn job_arg<'a>(parts: impl Iterator<Item = &'a str>, verb: &str) -> Result<u64> {
+    let mut f = kv_map(parts)?;
+    let job: Option<u64> = take_opt(&mut f, "job")?;
+    ensure_consumed(&f, verb)?;
+    job.ok_or_else(|| anyhow!("{verb} requires job=<id>"))
+}
+
+fn queue_result(session: &mut Session, reply: Result<String>) {
+    match reply {
+        Ok(r) => session.queue_reply(&r),
+        Err(e) => session.queue_reply(&format!("err {e}")),
+    };
+}

@@ -1,0 +1,173 @@
+//! Readiness multiplexing for the serve event loop (DESIGN.md §10.2).
+//!
+//! Dependency-free `poll(2)` via a direct `extern "C"` declaration —
+//! std already links the platform C library, so no crate is needed. On
+//! non-unix targets the same API degrades to a short-sleep fallback
+//! that reports everything ready; the loop's I/O is nonblocking either
+//! way, so correctness is identical and only idle CPU differs.
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Readiness of one registered source.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct Ready {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+#[cfg(unix)]
+pub(crate) use unix_impl::{raw_fd, wait, Fd};
+
+#[cfg(not(unix))]
+pub(crate) use fallback_impl::{raw_fd, wait, Fd};
+
+#[cfg(unix)]
+mod unix_impl {
+    use super::Ready;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+    use std::time::Duration;
+
+    pub(crate) type Fd = std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+
+    #[cfg(target_os = "linux")]
+    type NfdsT = std::ffi::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = std::ffi::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: std::ffi::c_int) -> std::ffi::c_int;
+    }
+
+    pub(crate) fn raw_fd<T: AsRawFd>(t: &T) -> Fd {
+        t.as_raw_fd()
+    }
+
+    /// Block until a source is ready or `timeout` elapses. `sources` is
+    /// `(fd, want_read, want_write)` — a session blocked on a sync
+    /// reply drops read interest so buffered client input cannot spin
+    /// the loop. EINTR reports nothing ready (the loop re-iterates).
+    pub(crate) fn wait(
+        sources: &[(Fd, bool, bool)],
+        timeout: Duration,
+    ) -> io::Result<Vec<Ready>> {
+        let mut fds: Vec<PollFd> = sources
+            .iter()
+            .map(|&(fd, r, w)| {
+                let mut events = 0i16;
+                if r {
+                    events |= POLLIN;
+                }
+                if w {
+                    events |= POLLOUT;
+                }
+                PollFd { fd, events, revents: 0 }
+            })
+            .collect();
+        let ms = timeout.as_millis().min(i32::MAX as u128) as std::ffi::c_int;
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+        if rc < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(vec![Ready::default(); sources.len()]);
+            }
+            return Err(err);
+        }
+        // error/hangup surface as readable: the next nonblocking read
+        // returns 0 or an error and the session is reaped
+        Ok(fds
+            .iter()
+            .map(|p| Ready {
+                readable: p.revents & (POLLIN | POLLERR | POLLHUP) != 0,
+                writable: p.revents & (POLLOUT | POLLERR | POLLHUP) != 0,
+            })
+            .collect())
+    }
+}
+
+#[cfg(not(unix))]
+mod fallback_impl {
+    use super::Ready;
+    use std::io;
+    use std::time::Duration;
+
+    pub(crate) type Fd = ();
+
+    pub(crate) fn raw_fd<T>(_t: &T) -> Fd {}
+
+    /// No readiness facility: nap briefly, then claim everything ready —
+    /// the loop's nonblocking reads/writes turn false positives into
+    /// `WouldBlock` no-ops.
+    pub(crate) fn wait(
+        sources: &[(Fd, bool, bool)],
+        timeout: Duration,
+    ) -> io::Result<Vec<Ready>> {
+        std::thread::sleep(timeout.min(Duration::from_millis(10)));
+        Ok(vec![Ready { readable: true, writable: true }; sources.len()])
+    }
+}
+
+/// Wakes the event loop from other threads: a connected localhost
+/// socket pair used as a self-pipe. [`WakeHandle::wake`] writes one
+/// byte to the notify end; the loop polls the receive end and drains
+/// it. The notify end is nonblocking, so a full socket buffer (loop
+/// already has wake-ups pending) makes `wake` a cheap no-op instead of
+/// a stall.
+pub(crate) struct Waker {
+    /// Loop-side end: registered for read, drained each iteration.
+    pub rx: TcpStream,
+    handle: WakeHandle,
+}
+
+/// The cloneable notify side of a [`Waker`].
+#[derive(Clone)]
+pub(crate) struct WakeHandle(std::sync::Arc<TcpStream>);
+
+impl WakeHandle {
+    pub fn wake(&self) {
+        use std::io::Write;
+        // failure means the buffer already holds a pending wake-up (or
+        // the loop is gone) — both are fine to ignore
+        let _ = (&*self.0).write(&[1u8]);
+    }
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Self> {
+        // a loopback socket pair works on every platform std supports,
+        // unlike pipe(2)/eventfd(2)
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let tx = TcpStream::connect(listener.local_addr()?)?;
+        let (rx, _) = listener.accept()?;
+        rx.set_nonblocking(true)?;
+        tx.set_nonblocking(true)?;
+        tx.set_nodelay(true)?;
+        Ok(Self { rx, handle: WakeHandle(std::sync::Arc::new(tx)) })
+    }
+
+    pub fn handle(&self) -> WakeHandle {
+        self.handle.clone()
+    }
+
+    /// Swallow all pending wake-up bytes.
+    pub fn drain(&mut self) {
+        use std::io::Read;
+        let mut buf = [0u8; 256];
+        while matches!(self.rx.read(&mut buf), Ok(n) if n > 0) {}
+    }
+}

@@ -1,0 +1,317 @@
+//! Admission control, fair scheduling and the job table
+//! (DESIGN.md §10.2–§10.4).
+//!
+//! Every `solve`/`tune`/`submit` becomes a job: admitted into a
+//! **bounded** queue (over-admission is refused loudly with `err busy`
+//! — backpressure, not buffering), then dispatched to executor lanes in
+//! **per-session round-robin** order: the scheduler rotates over
+//! sessions with queued work and takes one job per visit, so a client
+//! that enqueues fifty solves cannot starve one that enqueues one.
+//!
+//! State is owned single-threaded by the event loop; executors interact
+//! only through the completion channel and each job's [`RunControl`].
+
+use crate::coordinator::Metrics;
+use crate::telemetry::RunControl;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::exec::ExecWork;
+
+/// Retain at most this many finished async jobs for `poll` — older
+/// replies are evicted oldest-first (the table must not grow without
+/// bound under a client that never polls).
+const DONE_RETENTION: usize = 256;
+
+/// Lifecycle of one admitted job.
+#[derive(Debug)]
+pub(crate) enum JobState {
+    /// Admitted, not yet dispatched to a lane.
+    Queued,
+    /// Executing on a lane.
+    Running,
+    /// Finished; the complete reply is stored verbatim.
+    Done(String),
+    /// Cancelled while still queued (never ran).
+    Cancelled,
+}
+
+pub(crate) struct JobEntry {
+    pub session: u64,
+    /// A sync verb (`solve`/`tune`): the session is blocked on this
+    /// reply, which is routed directly instead of stored for `poll`.
+    pub sync: bool,
+    pub state: JobState,
+    /// Cancellation/progress handle (solve jobs only).
+    pub control: Option<RunControl>,
+    /// Sessions streaming this job's progress events.
+    pub subscribers: Vec<u64>,
+    /// Payload, held until dispatch.
+    work: Option<ExecWork>,
+    /// Admission time — closes the `serve.request` span at completion.
+    pub admitted: Instant,
+}
+
+/// What `cancel` did.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum CancelOutcome {
+    /// Removed from the queue before it ever ran.
+    Dequeued,
+    /// Running: the cancel flag is set; the job will finish early with
+    /// a partial result.
+    Signalled,
+    /// Already finished — nothing to do.
+    Late,
+    /// Running but has no control handle (tune jobs).
+    NotCancellable,
+    /// No such job owned by this session.
+    Unknown,
+}
+
+pub(crate) struct Scheduler {
+    queue_cap: usize,
+    jobs: HashMap<u64, JobEntry>,
+    /// Admitted-not-dispatched job ids, per session.
+    per_session: HashMap<u64, VecDeque<u64>>,
+    /// Round-robin rotation over sessions with queued work.
+    rr: VecDeque<u64>,
+    queued: usize,
+    running: usize,
+    /// Finished async jobs, oldest first (retention eviction order).
+    done_order: VecDeque<u64>,
+    next_job: u64,
+    metrics: Arc<Metrics>,
+}
+
+impl Scheduler {
+    pub fn new(queue_cap: usize, metrics: Arc<Metrics>) -> Self {
+        Self {
+            queue_cap: queue_cap.max(1),
+            jobs: HashMap::new(),
+            per_session: HashMap::new(),
+            rr: VecDeque::new(),
+            queued: 0,
+            running: 0,
+            done_order: VecDeque::new(),
+            next_job: 1,
+            metrics,
+        }
+    }
+
+    fn publish_depth(&self) {
+        self.metrics
+            .serve
+            .queue_depth
+            .store((self.queued + self.running) as i64, Ordering::Relaxed);
+    }
+
+    /// Jobs admitted and not yet finished.
+    pub fn depth(&self) -> usize {
+        self.queued + self.running
+    }
+
+    pub fn running(&self) -> usize {
+        self.running
+    }
+
+    /// Mint the next job id. Minted before [`Self::admit`] so the
+    /// caller can bake the id into the job's progress sink.
+    pub fn reserve_id(&mut self) -> u64 {
+        let id = self.next_job;
+        self.next_job += 1;
+        id
+    }
+
+    /// Admit a job under a reserved id, or refuse (`false`) when the
+    /// queue is full — the caller replies `err busy`. Running jobs
+    /// don't count against the cap; it bounds *waiting* work, which is
+    /// what backpressure is about.
+    pub fn admit(
+        &mut self,
+        id: u64,
+        session: u64,
+        sync: bool,
+        work: ExecWork,
+        control: Option<RunControl>,
+    ) -> bool {
+        if self.queued >= self.queue_cap {
+            self.metrics.serve.rejected_busy.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        self.jobs.insert(
+            id,
+            JobEntry {
+                session,
+                sync,
+                state: JobState::Queued,
+                control,
+                subscribers: Vec::new(),
+                work: Some(work),
+                admitted: Instant::now(),
+            },
+        );
+        let q = self.per_session.entry(session).or_default();
+        if q.is_empty() {
+            self.rr.push_back(session);
+        }
+        q.push_back(id);
+        self.queued += 1;
+        self.publish_depth();
+        true
+    }
+
+    /// Take the next job to dispatch, in per-session round-robin order.
+    pub fn next_ready(&mut self) -> Option<(u64, ExecWork)> {
+        while let Some(session) = self.rr.pop_front() {
+            let Some(q) = self.per_session.get_mut(&session) else { continue };
+            let Some(id) = q.pop_front() else { continue };
+            if q.is_empty() {
+                self.per_session.remove(&session);
+            } else {
+                // one job per visit: the session rejoins at the back
+                self.rr.push_back(session);
+            }
+            let entry = self.jobs.get_mut(&id).expect("queued job is in the table");
+            entry.state = JobState::Running;
+            let work = entry.work.take().expect("queued job still holds its work");
+            self.queued -= 1;
+            self.running += 1;
+            self.publish_depth();
+            return Some((id, work));
+        }
+        None
+    }
+
+    /// Record a completion. Returns the entry's routing info; sync
+    /// entries are removed from the table (their reply goes straight to
+    /// the blocked session), async ones are retained for `poll`.
+    pub fn complete(&mut self, id: u64, reply: String) -> Option<(u64, bool, Vec<u64>, String)> {
+        let (session, sync, subscribers, admitted) = {
+            let entry = self.jobs.get_mut(&id)?;
+            let info = (entry.session, entry.sync, std::mem::take(&mut entry.subscribers), entry.admitted);
+            if !entry.sync {
+                entry.state = JobState::Done(reply.clone());
+            }
+            info
+        };
+        if sync {
+            self.jobs.remove(&id);
+        } else {
+            self.done_order.push_back(id);
+            while self.done_order.len() > DONE_RETENTION {
+                if let Some(old) = self.done_order.pop_front() {
+                    self.jobs.remove(&old);
+                }
+            }
+        }
+        self.running = self.running.saturating_sub(1);
+        self.publish_depth();
+        self.metrics.timings.record_ns(
+            "serve.request",
+            admitted.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+        );
+        Some((session, sync, subscribers, reply))
+    }
+
+    /// Current state of a session's job, for `poll`.
+    pub fn poll(&self, session: u64, id: u64) -> Option<&JobState> {
+        let entry = self.jobs.get(&id)?;
+        if entry.session != session {
+            return None;
+        }
+        Some(&entry.state)
+    }
+
+    /// Cancel a session's job.
+    pub fn cancel(&mut self, session: u64, id: u64) -> CancelOutcome {
+        let Some(entry) = self.jobs.get_mut(&id) else { return CancelOutcome::Unknown };
+        if entry.session != session {
+            return CancelOutcome::Unknown;
+        }
+        match entry.state {
+            JobState::Queued => {
+                entry.state = JobState::Cancelled;
+                entry.work = None;
+                if let Some(q) = self.per_session.get_mut(&session) {
+                    q.retain(|&j| j != id);
+                    if q.is_empty() {
+                        self.per_session.remove(&session);
+                        self.rr.retain(|&s| s != session);
+                    }
+                }
+                self.queued -= 1;
+                // retain for poll like a finished job
+                self.done_order.push_back(id);
+                self.publish_depth();
+                self.metrics.serve.cancelled.fetch_add(1, Ordering::Relaxed);
+                CancelOutcome::Dequeued
+            }
+            JobState::Running => match &entry.control {
+                Some(c) => {
+                    c.cancel();
+                    self.metrics.serve.cancelled.fetch_add(1, Ordering::Relaxed);
+                    CancelOutcome::Signalled
+                }
+                None => CancelOutcome::NotCancellable,
+            },
+            JobState::Done(_) | JobState::Cancelled => CancelOutcome::Late,
+        }
+    }
+
+    /// Subscribe a session to a job's progress events. Returns the
+    /// current state (`None`: unknown job).
+    pub fn subscribe(&mut self, session: u64, id: u64) -> Option<&JobState> {
+        let entry = self.jobs.get_mut(&id)?;
+        if entry.session != session {
+            return None;
+        }
+        if matches!(entry.state, JobState::Queued | JobState::Running)
+            && !entry.subscribers.contains(&session)
+        {
+            entry.subscribers.push(session);
+        }
+        Some(&entry.state)
+    }
+
+    /// Subscribers of a running job (progress-event fan-out).
+    pub fn subscribers(&self, id: u64) -> &[u64] {
+        self.jobs.get(&id).map(|e| e.subscribers.as_slice()).unwrap_or(&[])
+    }
+
+    /// A session vanished: dequeue its queued jobs, signal its running
+    /// ones, forget its subscriptions. Cancelled-because-gone jobs are
+    /// dropped from the table outright (nobody can poll them again).
+    pub fn drop_session(&mut self, session: u64) {
+        if let Some(q) = self.per_session.remove(&session) {
+            for id in q {
+                self.jobs.remove(&id);
+                self.queued -= 1;
+                self.metrics.serve.cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.rr.retain(|&s| s != session);
+        let mut drop_ids = Vec::new();
+        for (&id, entry) in &mut self.jobs {
+            entry.subscribers.retain(|&s| s != session);
+            if entry.session == session {
+                match &entry.state {
+                    JobState::Running => {
+                        if let Some(c) = &entry.control {
+                            c.cancel();
+                            self.metrics.serve.cancelled.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // keep the entry: the completion message still
+                        // needs to account the lane
+                    }
+                    _ => drop_ids.push(id),
+                }
+            }
+        }
+        for id in drop_ids {
+            self.jobs.remove(&id);
+        }
+        self.publish_depth();
+    }
+}

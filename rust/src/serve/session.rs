@@ -1,0 +1,197 @@
+//! One client session: nonblocking socket, bounded read/write buffers,
+//! request-line extraction with a hard line cap (DESIGN.md §10.2).
+//!
+//! §Bounded memory: a session can never hold more than
+//! `MAX_LINE` unparsed request bytes + `MAX_PENDING_LINES` extracted
+//! lines (each ≤ `MAX_LINE`) + `WBUF_HARD` unsent reply bytes. An
+//! over-long request line is answered with a loud `err line_too_long`
+//! and the rest of the line is discarded; a consumer whose reply
+//! backlog exceeds the hard cap is disconnected; progress events (the
+//! only unbounded reply source) are shed beyond the soft cap instead.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// Hard cap on one request line (bytes, newline excluded). The longest
+/// legitimate request is a `solve` with every key present — well under
+/// 1 KiB — so 8 KiB leaves room for future keys while bounding what a
+/// hostile client can make the server buffer.
+pub const MAX_LINE: usize = 8 * 1024;
+
+/// Stop pulling bytes off the socket once this many extracted lines
+/// await processing — TCP backpressure holds the rest client-side.
+pub(crate) const MAX_PENDING_LINES: usize = 64;
+
+/// Disconnect a session whose unsent replies exceed this (a consumer
+/// that stopped reading while requesting framed payloads).
+pub(crate) const WBUF_HARD: usize = 256 * 1024;
+
+/// Shed progress events (never replies) once the write buffer holds
+/// this much — a slow subscriber loses samples, not its session.
+pub(crate) const WBUF_EVENT_SOFT: usize = 64 * 1024;
+
+/// One extracted input: a complete request line, or the marker that a
+/// line blew the cap (the line itself is discarded).
+#[derive(Debug)]
+pub(crate) enum InLine {
+    Line(String),
+    TooLong,
+}
+
+pub(crate) struct Session {
+    pub id: u64,
+    pub stream: TcpStream,
+    /// Unparsed bytes (no newline seen yet); ≤ `MAX_LINE` + one read.
+    rbuf: Vec<u8>,
+    /// Mid-discard of an over-long line (drop bytes until newline).
+    discarding: bool,
+    /// Extracted lines awaiting processing.
+    pub pending: VecDeque<InLine>,
+    /// Unsent reply bytes.
+    wbuf: Vec<u8>,
+    /// Sync job whose reply this session is blocked on — no further
+    /// pending lines are processed (and no new bytes are read) until
+    /// the reply is routed, preserving the protocol's strict
+    /// request→reply ordering.
+    pub blocked_on: Option<u64>,
+    /// `quit` received: flush the write buffer, then close.
+    pub closing: bool,
+    /// Socket closed or errored; reap at end of tick.
+    pub dead: bool,
+}
+
+impl Session {
+    pub fn new(id: u64, stream: TcpStream) -> io::Result<Self> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true).ok();
+        Ok(Self {
+            id,
+            stream,
+            rbuf: Vec::new(),
+            discarding: false,
+            pending: VecDeque::new(),
+            wbuf: Vec::new(),
+            blocked_on: None,
+            closing: false,
+            dead: false,
+        })
+    }
+
+    /// Whether the loop should poll this session for input this tick.
+    pub fn wants_read(&self) -> bool {
+        !self.dead
+            && !self.closing
+            && self.blocked_on.is_none()
+            && self.pending.len() < MAX_PENDING_LINES
+    }
+
+    /// Whether unsent reply bytes are waiting on the socket.
+    pub fn wants_write(&self) -> bool {
+        !self.dead && !self.wbuf.is_empty()
+    }
+
+    /// Pull available bytes off the socket and extract complete lines
+    /// into `pending`. Stops at `WouldBlock`, the pending cap, or EOF
+    /// (which marks the session dead once its backlog is processed).
+    pub fn fill(&mut self) {
+        let mut chunk = [0u8; 4096];
+        while self.pending.len() < MAX_PENDING_LINES {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.absorb(&chunk[..n]);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn absorb(&mut self, bytes: &[u8]) {
+        self.rbuf.extend_from_slice(bytes);
+        loop {
+            match self.rbuf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    let rest = self.rbuf.split_off(pos + 1);
+                    let mut line = std::mem::replace(&mut self.rbuf, rest);
+                    line.truncate(pos); // drop the newline
+                    if self.discarding {
+                        // tail of an over-long line — the TooLong marker
+                        // was already emitted when the cap tripped
+                        self.discarding = false;
+                        continue;
+                    }
+                    let text = String::from_utf8_lossy(&line);
+                    self.pending.push_back(InLine::Line(text.trim().to_string()));
+                }
+                None => {
+                    if self.rbuf.len() > MAX_LINE {
+                        self.rbuf.clear();
+                        if !self.discarding {
+                            self.discarding = true;
+                            self.pending.push_back(InLine::TooLong);
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Queue a reply line (or framed multi-line reply). Returns `false`
+    /// — and marks the session dead — when the hard cap is blown.
+    pub fn queue_reply(&mut self, reply: &str) -> bool {
+        if self.wbuf.len() + reply.len() + 1 > WBUF_HARD {
+            self.dead = true;
+            return false;
+        }
+        self.wbuf.extend_from_slice(reply.as_bytes());
+        self.wbuf.push(b'\n');
+        true
+    }
+
+    /// Queue an async `event …` line, shedding it (return `false`) when
+    /// the soft cap is reached.
+    pub fn queue_event(&mut self, line: &str) -> bool {
+        if self.wbuf.len() + line.len() + 1 > WBUF_EVENT_SOFT {
+            return false;
+        }
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+        true
+    }
+
+    /// Push buffered reply bytes until the socket would block.
+    pub fn flush(&mut self) {
+        let mut written = 0;
+        while written < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[written..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if written > 0 {
+            self.wbuf.drain(..written);
+        }
+        if self.closing && self.wbuf.is_empty() {
+            self.dead = true;
+        }
+    }
+}

@@ -14,6 +14,10 @@
 //! * **Exposition** ([`expose`]) — Prometheus-style text rendering of
 //!   counters and histograms, used by the line protocol's `metrics`
 //!   verb and the `health` report.
+//! * **Job control** ([`progress`]) — [`RunControl`] rides the same
+//!   observer seam to give the serving layer cooperative cancellation
+//!   (one atomic flag, checked every step) and live
+//!   [`ProgressEvent`] streaming for the protocol's `subscribe` verb.
 //!
 //! Everything correlates on a [`SolveId`]: the id a
 //! [`crate::api::SolveRequest`] is assigned appears in its
@@ -30,9 +34,11 @@
 //! <10% tracing at stride 64).
 
 pub mod expose;
+pub mod progress;
 pub mod span;
 pub mod trace;
 
+pub use progress::{ControlObserver, ProgressEvent, ProgressSink, RunControl};
 pub use span::{fmt_ns, LatencyHistogram, SpanGuard, SpanTimer, StageTimes, Timings};
 pub use trace::{RunTrace, RunTraceRun, TraceConfig, TraceRecorder, TraceSample, TRACE_VERSION};
 
@@ -88,8 +94,9 @@ impl fmt::Display for SolveId {
 }
 
 /// splitmix64 — the statelessly-seedable mixer (public-domain constant
-/// set), used only for id minting, never for annealing randomness.
-fn splitmix64(mut z: u64) -> u64 {
+/// set), used for id minting and the serve layer's cache fingerprints,
+/// never for annealing randomness.
+pub(crate) fn splitmix64(mut z: u64) -> u64 {
     z = z.wrapping_add(0x9E3779B97F4A7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);

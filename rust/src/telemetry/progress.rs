@@ -1,0 +1,143 @@
+//! Job control: cooperative cancellation and live progress streaming
+//! (DESIGN.md §10.4).
+//!
+//! [`RunControl`] is the handle the serving layer attaches to a job: a
+//! shared cancel flag plus an optional [`ProgressSink`]. Inside the
+//! worker it becomes a [`ControlObserver`] riding the same
+//! [`StepObserver`] seam as the convergence monitor and the
+//! [`super::TraceRecorder`] (composed via [`super::Tee`]):
+//!
+//! * **Cancellation** — the flag is checked after *every* step (one
+//!   relaxed atomic load, no energy readout), so a cancel lands within
+//!   one step of the request: the engine harvests the state as-is and
+//!   the job completes with a valid partial result, exactly like a
+//!   convergence early stop.
+//! * **Progress** — every `stride` steps the observer takes the same
+//!   `O(R·(N + nnz))` best/mean replica-energy readout as the trace
+//!   recorder and pushes a [`ProgressEvent`] into the sink's channel.
+//!   Sends never block and a dropped receiver is ignored — a dead
+//!   subscriber must not stall the anneal.
+
+use super::trace::replica_energy_stats;
+use crate::annealer::{SsqaState, StepObserver};
+use crate::graph::IsingModel;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// One live progress observation of a running job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProgressEvent {
+    /// Serving-layer job id the event belongs to.
+    pub job: u64,
+    /// Seed of the run currently annealing.
+    pub seed: u32,
+    /// 0-based step index the observation was taken after.
+    pub step: usize,
+    /// Lowest replica energy at this step.
+    pub best_energy: i64,
+    /// Mean replica energy at this step.
+    pub mean_energy: f64,
+}
+
+/// Where progress events go: an unbounded channel tagged with the job
+/// id and the sampling stride. Cloned into every chunk of the job.
+#[derive(Debug, Clone)]
+pub struct ProgressSink {
+    /// Serving-layer job id stamped on every event.
+    pub job: u64,
+    /// Emit an event every `stride` steps (the energy readout is
+    /// `O(R·(N + nnz))`, so the stride amortizes it like a trace
+    /// stride).
+    pub stride: usize,
+    tx: mpsc::Sender<ProgressEvent>,
+}
+
+impl ProgressSink {
+    pub fn new(job: u64, stride: usize, tx: mpsc::Sender<ProgressEvent>) -> Self {
+        Self { job, stride: stride.max(1), tx }
+    }
+}
+
+/// Control handle attached to a job by the serving layer: a shared
+/// cancel flag plus an optional progress sink. Cheap to clone (two
+/// `Arc`-class clones); one handle serves every chunk of a fanned-out
+/// job, so a single `cancel()` stops all of them.
+#[derive(Debug, Clone, Default)]
+pub struct RunControl {
+    cancel: Arc<AtomicBool>,
+    sink: Option<ProgressSink>,
+}
+
+impl RunControl {
+    /// A cancellable control with no progress stream.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cancellable control that also streams progress into `sink`.
+    pub fn with_sink(sink: ProgressSink) -> Self {
+        Self { cancel: Arc::new(AtomicBool::new(false)), sink: Some(sink) }
+    }
+
+    /// Request cancellation: every observer built from this control
+    /// stops its run at the next step boundary.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Build the per-chunk [`StepObserver`] (preallocates the replica
+    /// column scratch once per chunk).
+    pub fn observer<'m>(&self, model: &'m IsingModel) -> ControlObserver<'m> {
+        ControlObserver {
+            cancel: Arc::clone(&self.cancel),
+            sink: self.sink.clone(),
+            model,
+            col: vec![0; model.n()],
+            seed: 0,
+        }
+    }
+}
+
+/// The [`StepObserver`] a [`RunControl`] plants inside the engine loop.
+pub struct ControlObserver<'m> {
+    cancel: Arc<AtomicBool>,
+    sink: Option<ProgressSink>,
+    model: &'m IsingModel,
+    col: Vec<i32>,
+    seed: u32,
+}
+
+impl StepObserver for ControlObserver<'_> {
+    fn begin_run(&mut self, seed: u32) {
+        self.seed = seed;
+    }
+
+    fn observe(&mut self, t: usize, state: &SsqaState) -> bool {
+        // cancel first: a cancelled job must stop without paying for an
+        // energy readout, and subsequent seeds of the batch stop after
+        // their first step
+        if self.cancel.load(Ordering::Relaxed) {
+            return true;
+        }
+        if let Some(sink) = &self.sink {
+            if t % sink.stride == 0 {
+                let (best_energy, mean_energy) =
+                    replica_energy_stats(self.model, state, &mut self.col);
+                // a gone receiver is a gone subscriber, not an error
+                let _ = sink.tx.send(ProgressEvent {
+                    job: sink.job,
+                    seed: self.seed,
+                    step: t,
+                    best_energy,
+                    mean_energy,
+                });
+            }
+        }
+        false
+    }
+}

@@ -33,6 +33,32 @@ use std::io::{self, Write};
 /// meaning; readers must check it (DESIGN.md §9.1).
 pub const TRACE_VERSION: u32 = 1;
 
+/// Best and mean replica energy of `st`: one `O(R·(N + nnz))` readout
+/// through the caller's preallocated replica-column scratch (`col`,
+/// length N). Shared by the [`TraceRecorder`] and the serve layer's
+/// progress observer so both sample identically.
+pub(crate) fn replica_energy_stats(
+    model: &IsingModel,
+    st: &SsqaState,
+    col: &mut [i32],
+) -> (i64, f64) {
+    let r = st.rng.replicas();
+    let n = model.n();
+    debug_assert_eq!(st.sigma.len(), n * r);
+    debug_assert_eq!(col.len(), n);
+    let mut best = i64::MAX;
+    let mut sum = 0.0f64;
+    for k in 0..r {
+        for (i, slot) in col.iter_mut().enumerate() {
+            *slot = st.sigma[i * r + k];
+        }
+        let e = model.energy(col);
+        best = best.min(e);
+        sum += e as f64;
+    }
+    (best, sum / r.max(1) as f64)
+}
+
 /// Sampling knobs for a [`TraceRecorder`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TraceConfig {
@@ -231,20 +257,7 @@ impl<'m> TraceRecorder<'m> {
     /// Best and mean replica energy of `state` (one `O(R·(N + nnz))`
     /// readout, shared with the sample's other statistics).
     fn energies(&mut self, st: &SsqaState) -> (i64, f64) {
-        let r = st.rng.replicas();
-        let n = self.model.n();
-        debug_assert_eq!(st.sigma.len(), n * r);
-        let mut best = i64::MAX;
-        let mut sum = 0.0f64;
-        for k in 0..r {
-            for (i, slot) in self.col.iter_mut().enumerate() {
-                *slot = st.sigma[i * r + k];
-            }
-            let e = self.model.energy(&self.col);
-            best = best.min(e);
-            sum += e as f64;
-        }
-        (best, sum / r.max(1) as f64)
+        replica_energy_stats(self.model, st, &mut self.col)
     }
 
     /// Drop every other retained sample and double the stride — the
