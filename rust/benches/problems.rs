@@ -1,0 +1,109 @@
+//! Problem-encoder benchmarks (DESIGN.md §11): multiplier-circuit
+//! compilation and clause→QUBO penalty expansion through `to_ising()`,
+//! the clamped factor-35 solve, and the warm-start resume advantage.
+//! Appends to `BENCH_problems.json` at the repository root (same shape
+//! as the other `BENCH_*.json` trajectories).
+
+use ssqa::api::SolveRequest;
+use ssqa::config::{bench, BenchArgs};
+use ssqa::coordinator::{Router, RoutingPolicy, WorkerPool};
+use ssqa::problems::{FactorProblem, MaxSatProblem};
+use std::hint::black_box;
+use std::sync::Arc;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    if !args.matches("problems") {
+        return;
+    }
+    let pool = WorkerPool::new(2, Router::new(RoutingPolicy::AllSoftware));
+
+    // 1. encoder throughput: gate-penalty compilation (factor) and the
+    // Rosenberg-chain clause expansion (maxsat), both lowered to Ising
+    let (ftarget, mvars, mclauses) = if args.quick {
+        (3127u64, 60, 240)
+    } else {
+        (1_048_573u64, 150, 600)
+    };
+    let enc_f = bench(&format!("problems factor-{ftarget} encode+lower"), 5, || {
+        let p = FactorProblem::new(ftarget);
+        black_box(p.to_ising());
+    });
+    let enc_m = bench(&format!("problems maxsat v{mvars}c{mclauses} encode+lower"), 5, || {
+        let p = MaxSatProblem::random(mvars, mclauses, 11);
+        black_box(p.to_ising());
+    });
+
+    // 2. the clamped factor-35 solve — pinned spins ride every kernel's
+    // skip-with-draw path, so this times the §11.1 clamp plumbing under
+    // a realistic mixed free/pinned population
+    let steps = if args.quick { 1000 } else { 4000 };
+    let factor = Arc::new(FactorProblem::new(35));
+    let solve_f = bench(&format!("problems factor-35 solve {steps}st ×2"), 3, || {
+        let report = SolveRequest::new(factor.clone())
+            .steps(steps)
+            .seed(3)
+            .runs(2)
+            .run_on(&pool)
+            .expect("factor solve");
+        black_box(report.best_energy);
+    });
+
+    // 3. warm resume vs cold solve on one maxsat instance: the resumed
+    // schedule runs a quarter of the budget from the prior best σ
+    let problem = Arc::new(MaxSatProblem::random(40, 160, 5));
+    let cold_req = SolveRequest::new(problem.clone()).steps(steps).seed(9).runs(2);
+    let prior = cold_req.run_on(&pool).expect("cold maxsat solve");
+    let cold = bench(&format!("problems maxsat cold solve {steps}st ×2"), 3, || {
+        black_box(cold_req.run_on(&pool).expect("cold maxsat solve").best_energy);
+    });
+    let warm_req =
+        SolveRequest::new(problem).steps(steps / 4).seed(10).runs(2).init_from(&prior);
+    let warm = bench(&format!("problems maxsat warm resume {}st ×2", steps / 4), 3, || {
+        black_box(warm_req.run_on(&pool).expect("warm maxsat solve").best_energy);
+    });
+
+    println!(
+        "  → encode {:.2} ms (factor) / {:.2} ms (maxsat); factor-35 solve {:.1} ms; warm resume {:.1} ms vs cold {:.1} ms",
+        enc_f.min.as_secs_f64() * 1e3,
+        enc_m.min.as_secs_f64() * 1e3,
+        solve_f.min.as_secs_f64() * 1e3,
+        warm.min.as_secs_f64() * 1e3,
+        cold.min.as_secs_f64() * 1e3,
+    );
+
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let record = format!(
+        "{{\"unix_time\": {stamp}, \"bench\": \"problems\", \"factor_target\": {ftarget}, \
+         \"maxsat_vars\": {mvars}, \"maxsat_clauses\": {mclauses}, \"steps\": {steps}, \
+         \"factor_encode_ms\": {:.3}, \"maxsat_encode_ms\": {:.3}, \
+         \"factor35_solve_ms\": {:.3}, \"warm_resume_ms\": {:.3}, \"cold_solve_ms\": {:.3}}}",
+        enc_f.min.as_secs_f64() * 1e3,
+        enc_m.min.as_secs_f64() * 1e3,
+        solve_f.min.as_secs_f64() * 1e3,
+        warm.min.as_secs_f64() * 1e3,
+        cold.min.as_secs_f64() * 1e3,
+    );
+    let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_problems.json");
+    let mut records: Vec<String> = std::fs::read_to_string(json_path)
+        .ok()
+        .and_then(|s| {
+            let body = s.trim().strip_prefix('[')?.strip_suffix(']')?.trim().to_string();
+            Some(
+                body.lines()
+                    .map(|l| l.trim().trim_end_matches(',').to_string())
+                    .filter(|l| !l.is_empty() && !l.starts_with("//"))
+                    .collect(),
+            )
+        })
+        .unwrap_or_default();
+    records.push(record);
+    let out = format!("[\n  {}\n]\n", records.join(",\n  "));
+    match std::fs::write(json_path, out) {
+        Ok(()) => println!("  → recorded in BENCH_problems.json"),
+        Err(e) => println!("  → could not write BENCH_problems.json: {e}"),
+    }
+}

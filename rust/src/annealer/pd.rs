@@ -98,6 +98,7 @@ impl Annealer for PdSsqaEngine {
         let n = model.n();
         let r = self.inner.params.replicas;
         let mut st = SsqaState::init(n, r, seed);
+        self.inner.prime_state(model, &mut st);
         let mut scratch = StepScratch::new(r);
         let mut lottery = Xorshift64Star::new(self.mask_seed ^ (seed as u64) << 16);
         for t in 0..steps {

@@ -45,6 +45,9 @@ impl Annealer for SaEngine {
         let mut rng = Xorshift64Star::new(seed as u64 | 1 << 32);
         let mut sigma: Vec<i32> =
             (0..n).map(|_| if rng.next_f64() < 0.5 { -1 } else { 1 }).collect();
+        if let Some(clamp) = model.clamp() {
+            clamp.apply(&mut sigma, 1);
+        }
         let mut energy = model.energy(&sigma);
         let mut best_energy = energy;
         let mut best_sigma = sigma.clone();
@@ -53,6 +56,13 @@ impl Annealer for SaEngine {
         for _ in 0..steps {
             for _ in 0..n {
                 let i = rng.next_below(n);
+                // pinned spins never flip (SA has no cross-kernel RNG
+                // contract, so the proposal is simply skipped)
+                if let Some(clamp) = model.clamp() {
+                    if !clamp.is_free(i) {
+                        continue;
+                    }
+                }
                 let d = Self::delta(model, &sigma, i);
                 if d <= 0 || rng.next_f64() < (-(d as f64) / temp).exp() {
                     sigma[i] = -sigma[i];

@@ -69,8 +69,18 @@ impl SsaEngine {
     ) {
         let n = model.n();
         let cell = CellUpdate::new(self.params.i0, self.params.alpha);
+        let pins = model.clamp_pins();
         next.clear();
         for i in 0..n {
+            // clamped spin: skip the update, advance the RNG cell once
+            // (the shared skip-with-draw contract, DESIGN.md §11)
+            if let Some(p) = pins {
+                if p[i] != 0 {
+                    let _ = st.rng.draw_pm1(i, 0);
+                    next.push(p[i] as i32);
+                    continue;
+                }
+            }
             let (cols, vals) = model.j_sparse().row(i);
             let mut field = model.h[i];
             for (c, v) in cols.iter().zip(vals) {
@@ -148,6 +158,7 @@ impl Annealer for SsaEngine {
         let horizon = self.total_steps.max(steps);
         let n = model.n();
         let mut st = SsaState::init(n, seed);
+        dynamics::prime_sigma(model, None, &mut st.sigma, 1);
         let mut best_energy = model.energy(&st.sigma);
         let mut best_sigma = st.sigma.clone();
         // checking energy every step is O(N·k); amortize by checking on a

@@ -16,6 +16,7 @@ use super::{params::SsqaParams, runner::RunResult, runner::StepMeta, runner::Ste
 use crate::dynamics::{self, CellUpdate, KernelScratch, StepJob, StepKernel, StepScratch};
 use crate::graph::IsingModel;
 use crate::rng::RngMatrix;
+use std::sync::Arc;
 
 /// Full engine state, exposed for snapshotting and cross-layer tests.
 #[derive(Debug, Clone)]
@@ -71,11 +72,34 @@ pub struct SsqaEngine {
     /// nested-parallelism policy raises the thread count when the pool
     /// has spare workers.
     pub kernel: StepKernel,
+    /// Warm-start configuration (length-N ±1): broadcast across the
+    /// replica axis at init/reinit before the model's clamp pins are
+    /// applied (DESIGN.md §11). `None` = the seeded RNG-MSB init.
+    pub init_sigma: Option<Arc<Vec<i32>>>,
+    /// Schedule offset for warm starts: step `t` of the run evaluates
+    /// the Q/noise schedules at `t + offset`, so a re-solve *resumes*
+    /// the annealing schedule instead of replaying the noisy prefix
+    /// over its warm configuration. 0 = cold semantics, unchanged.
+    pub schedule_offset: usize,
 }
 
 impl SsqaEngine {
     pub fn new(params: SsqaParams, total_steps: usize) -> Self {
-        Self { params, total_steps, kernel: StepKernel::default() }
+        Self {
+            params,
+            total_steps,
+            kernel: StepKernel::default(),
+            init_sigma: None,
+            schedule_offset: 0,
+        }
+    }
+
+    /// Warm-start from a prior best configuration, resuming the
+    /// schedule at `offset` (typically the prior run's step count).
+    pub fn with_warm_start(mut self, init: Arc<Vec<i32>>, offset: usize) -> Self {
+        self.init_sigma = Some(init);
+        self.schedule_offset = offset;
+        self
     }
 
     /// Run with the lane-vectorized kernel on `threads` scoped worker
@@ -128,9 +152,21 @@ impl SsqaEngine {
         debug_assert_eq!(st.sigma.len(), n * r);
         scratch.ensure(r);
         let cell = CellUpdate::new(self.params.i0, self.params.alpha);
+        let pins = model.clamp_pins();
         let StepScratch { acc, prev_row, noise_row } = scratch;
 
         for i in 0..n {
+            // clamped row (DESIGN.md §11): skip the stochastic update but
+            // advance the row's RNG cells exactly once — the same
+            // skip-with-draw contract as every kernel path
+            if let Some(p) = pins {
+                if p[i] != 0 {
+                    st.rng.draw_row_pm1(i, noise_row);
+                    let row = i * r;
+                    st.sigma_prev[row..row + r].fill(p[i] as i32);
+                    continue;
+                }
+            }
             // Sparse accumulation of Σ_j J_ij σ_j,k(t) for all replicas at
             // once (replica-parallel, like the R hardware spin gates).
             let (cols, vals) = model.j_sparse().row(i);
@@ -230,6 +266,7 @@ impl SsqaEngine {
         observer: &mut O,
     ) -> (SsqaState, RunResult) {
         let mut st = SsqaState::init(model.n(), self.params.replicas, seed);
+        self.prime_state(model, &mut st);
         let mut scratch = KernelScratch::new(self.kernel.threads(), self.params.replicas);
         observer.begin_run(seed);
         let executed = self.drive_observed(model, &mut st, &mut scratch, steps, observer);
@@ -260,11 +297,13 @@ impl SsqaEngine {
     ) -> Vec<RunResult> {
         let Some(&first) = seeds.first() else { return Vec::new() };
         let mut st = SsqaState::init(model.n(), self.params.replicas, first);
+        self.prime_state(model, &mut st);
         let mut scratch = KernelScratch::new(self.kernel.threads(), self.params.replicas);
         let mut out = Vec::with_capacity(seeds.len());
         for (idx, &seed) in seeds.iter().enumerate() {
             if idx > 0 {
                 st.reinit(seed);
+                self.prime_state(model, &mut st);
             }
             observer.begin_run(seed);
             let executed = self.drive_observed(model, &mut st, &mut scratch, steps, observer);
@@ -287,10 +326,13 @@ impl SsqaEngine {
         steps: usize,
         observer: &mut O,
     ) -> usize {
-        let horizon = self.schedule_horizon(steps);
+        // warm starts resume the schedule at `schedule_offset` (0 for
+        // cold runs), so the horizon must cover the resumed indices
+        let horizon = self.schedule_horizon(steps + self.schedule_offset);
         for t in 0..steps {
-            let q_t = self.params.q.at(t);
-            let noise_t = self.params.noise.at(t, horizon);
+            let ti = t + self.schedule_offset;
+            let q_t = self.params.q.at(ti);
+            let noise_t = self.params.noise.at(ti, horizon);
             self.step_kerneled(model, st, scratch, q_t, noise_t);
             // assemble the step's metadata for meta-aware observers; the
             // default observe_meta discards it, so with `&mut ()` this
@@ -305,6 +347,22 @@ impl SsqaEngine {
             }
         }
         steps
+    }
+
+    /// Apply the shared init overrides to a freshly initialized /
+    /// reinitialized state: the engine's warm-start σ (if any), then the
+    /// model's clamp pins — on **both** σ generations
+    /// ([`dynamics::prime_sigma`]). Callers driving raw
+    /// [`SsqaState::init`] states themselves (differential tests, the
+    /// partial-deactivation decorator) must call this before stepping a
+    /// clamped model.
+    pub fn prime_state(&self, model: &IsingModel, st: &mut SsqaState) {
+        let warm = self.init_sigma.as_deref().map(Vec::as_slice);
+        if warm.is_none() && model.clamp().is_none() {
+            return;
+        }
+        dynamics::prime_sigma(model, warm, &mut st.sigma, self.params.replicas);
+        dynamics::prime_sigma(model, warm, &mut st.sigma_prev, self.params.replicas);
     }
 
     /// Pick the best replica of a final state (paper §4.2) — the shared

@@ -3,7 +3,7 @@
 //! The paper's §5.2 point is that one p-bit datapath solves *any*
 //! QUBO-formulated problem by re-initializing the weight BRAM. This
 //! module is that claim as an API: a typed [`Problem`] trait
-//! (encode → anneal → decode, implemented by all six workloads in
+//! (encode → anneal → decode, implemented by all eight workloads in
 //! [`crate::problems`]), a [`SolveRequest`] builder carrying execution
 //! policy, and a [`SolveReport`] answering in domain units — best
 //! objective, decoded [`Solution`], feasibility accounting, per-replica
@@ -32,7 +32,7 @@ mod problem;
 mod request;
 pub mod spec;
 
-pub use problem::{Problem, ProblemKind, Sense, Solution};
+pub use problem::{PatchedProblem, Problem, ProblemKind, Sense, Solution};
 pub use request::{SolveReport, SolveRequest, TunePolicy};
 pub use spec::build_problem;
 

@@ -19,6 +19,7 @@
 //!    domain units without re-decoding every configuration.
 
 use crate::graph::IsingModel;
+use std::sync::Arc;
 
 /// Workload families the unified solve surface knows about (the
 /// `--problem` CLI flag and the `problem=` protocol key).
@@ -36,17 +37,24 @@ pub enum ProblemKind {
     GraphIso,
     /// Number partitioning (direct Ising form, Lucas §2.1).
     Partition,
+    /// Prime factorization via an inverse multiplier Hamiltonian with
+    /// clamped product bits (DESIGN.md §11).
+    Factor,
+    /// Weighted MAX-SAT via the clause→QUBO penalty encoding.
+    MaxSat,
 }
 
 impl ProblemKind {
     /// Every kind, in CLI/help order.
-    pub const ALL: [ProblemKind; 6] = [
+    pub const ALL: [ProblemKind; 8] = [
         ProblemKind::MaxCut,
         ProblemKind::Qubo,
         ProblemKind::Tsp,
         ProblemKind::Coloring,
         ProblemKind::GraphIso,
         ProblemKind::Partition,
+        ProblemKind::Factor,
+        ProblemKind::MaxSat,
     ];
 
     /// Canonical token (CLI flag value / protocol key value).
@@ -58,6 +66,8 @@ impl ProblemKind {
             ProblemKind::Coloring => "coloring",
             ProblemKind::GraphIso => "graphiso",
             ProblemKind::Partition => "partition",
+            ProblemKind::Factor => "factor",
+            ProblemKind::MaxSat => "maxsat",
         }
     }
 
@@ -70,6 +80,8 @@ impl ProblemKind {
             "coloring" | "color" => ProblemKind::Coloring,
             "graphiso" | "graph-iso" | "gi" => ProblemKind::GraphIso,
             "partition" | "numpart" => ProblemKind::Partition,
+            "factor" | "factorization" => ProblemKind::Factor,
+            "maxsat" | "max-sat" | "wcnf" => ProblemKind::MaxSat,
             _ => return None,
         })
     }
@@ -77,7 +89,7 @@ impl ProblemKind {
     /// Optimization direction of the kind's domain objective.
     pub fn sense(&self) -> Sense {
         match self {
-            ProblemKind::MaxCut => Sense::Maximize,
+            ProblemKind::MaxCut | ProblemKind::MaxSat => Sense::Maximize,
             _ => Sense::Minimize,
         }
     }
@@ -91,6 +103,8 @@ impl ProblemKind {
             ProblemKind::Coloring => "conflicts",
             ProblemKind::GraphIso => "mismatches",
             ProblemKind::Partition => "imbalance",
+            ProblemKind::Factor => "violations",
+            ProblemKind::MaxSat => "sat-weight",
         }
     }
 }
@@ -147,6 +161,12 @@ pub enum Solution {
     /// Bijective vertex mapping and its adjacency-mismatch count
     /// (0 ⇔ a true isomorphism).
     Mapping { map: Vec<usize>, mismatches: usize },
+    /// A recovered factorization `a × b = n` (only emitted when every
+    /// gate of the multiplier Hamiltonian is consistent, so the
+    /// objective — gate violations — is 0 by construction).
+    Factorization { a: u64, b: u64, n: u64 },
+    /// A MAX-SAT assignment with its satisfied clause weight.
+    MaxSat { assignment: Vec<u8>, satisfied_weight: i64, total_weight: i64 },
     /// The assignment violated the encoding's penalty-enforced
     /// constraints (a non-one-hot TSP/coloring row, a non-bijective GI
     /// mapping): no domain solution exists. The raw 0/1 assignment is
@@ -169,6 +189,8 @@ impl Solution {
             Solution::Tour { length, .. } => *length,
             Solution::Coloring { conflicts, .. } => *conflicts as i64,
             Solution::Mapping { mismatches, .. } => *mismatches as i64,
+            Solution::Factorization { .. } => 0,
+            Solution::MaxSat { satisfied_weight, .. } => *satisfied_weight,
             Solution::Infeasible { .. } => return None,
         })
     }
@@ -199,6 +221,14 @@ impl Solution {
                     format!("{mismatches} adjacency mismatches")
                 }
             }
+            Solution::Factorization { a, b, n } => format!("{n} = {a} × {b}"),
+            Solution::MaxSat { satisfied_weight, total_weight, assignment } => {
+                let ones = assignment.iter().filter(|&&b| b == 1).count();
+                format!(
+                    "satisfied weight {satisfied_weight}/{total_weight} ({ones}/{} vars true)",
+                    assignment.len()
+                )
+            }
             Solution::Infeasible { x } => {
                 format!("infeasible assignment ({} variables)", x.len())
             }
@@ -209,7 +239,7 @@ impl Solution {
 /// One typed solve surface for every workload: encode to an
 /// [`IsingModel`], anneal on any backend, decode back to the domain.
 ///
-/// Implemented by all six workloads in [`crate::problems`]; the
+/// Implemented by all eight workloads in [`crate::problems`]; the
 /// coordinator carries problems as `Arc<dyn Problem>` so one pool can
 /// interleave MAX-CUT, TSP and QUBO jobs. See the module docs for the
 /// decode/objective/energy contract.
@@ -247,5 +277,73 @@ pub trait Problem: Send + Sync + std::fmt::Debug {
     /// Optimization direction of the domain objective.
     fn sense(&self) -> Sense {
         self.kind().sense()
+    }
+}
+
+/// A problem with coupling patches layered over its encoding — the
+/// incremental re-solve path behind the serve layer's `resolve` verb
+/// (DESIGN.md §11.3).
+///
+/// `to_ising` builds the inner encoding and applies the patches via
+/// [`IsingModel::patched`] (upper-triangle `(i, j, w)` replacements;
+/// `w = 0` removes the edge). Everything else — decode, objective
+/// mapping, feasibility — delegates to the inner problem: the domain
+/// semantics of a patched instance are the *inner* problem's read
+/// against the patched energy landscape, which is exact for the
+/// direct encodings (MAX-CUT at `j_scale` granularity, raw QUBO) and
+/// approximate for penalty encodings whose penalty structure the patch
+/// touches.
+#[derive(Debug, Clone)]
+pub struct PatchedProblem {
+    inner: Arc<dyn Problem>,
+    patches: Vec<(u32, u32, i32)>,
+}
+
+impl PatchedProblem {
+    pub fn new(inner: Arc<dyn Problem>, patches: Vec<(u32, u32, i32)>) -> Self {
+        let n = inner.num_vars();
+        for &(i, j, _) in &patches {
+            assert!(i != j, "patch ({i},{j}) is a self-loop");
+            assert!((i as usize) < n && (j as usize) < n, "patch ({i},{j}) out of 0..{n}");
+        }
+        Self { inner, patches }
+    }
+
+    pub fn inner(&self) -> &Arc<dyn Problem> {
+        &self.inner
+    }
+
+    pub fn patches(&self) -> &[(u32, u32, i32)] {
+        &self.patches
+    }
+}
+
+impl Problem for PatchedProblem {
+    fn kind(&self) -> ProblemKind {
+        self.inner.kind()
+    }
+
+    fn label(&self) -> String {
+        format!("{}+patch{}", self.inner.label(), self.patches.len())
+    }
+
+    fn num_vars(&self) -> usize {
+        self.inner.num_vars()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        self.inner.to_ising().patched(&self.patches)
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        self.inner.decode(sigma)
+    }
+
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        self.inner.objective_from_energy(energy)
+    }
+
+    fn feasible(&self, sigma: &[i32]) -> bool {
+        self.inner.feasible(sigma)
     }
 }

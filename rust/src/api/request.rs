@@ -80,6 +80,16 @@ pub struct SolveRequest {
     /// cancel flag every step; other backends at seed boundaries). A
     /// cancelled solve still reports a valid partial result.
     pub control: Option<RunControl>,
+    /// Warm-start configuration: every run's replicas start from this
+    /// ±1 configuration (length = the model's spin count) instead of
+    /// the seeded random init. Clamp pins still win over the warm
+    /// values. Software SSQA backend only; other backends ignore it,
+    /// like `early_stop` (DESIGN.md §11.3).
+    pub init_sigma: Option<Arc<Vec<i32>>>,
+    /// Evaluate the Q/noise schedules at `t + offset` — a warm-started
+    /// re-solve *resumes* the annealing schedule where the prior run
+    /// left off instead of replaying its noisy prefix (§11.3).
+    pub schedule_offset: usize,
 }
 
 impl SolveRequest {
@@ -99,6 +109,8 @@ impl SolveRequest {
             trace: None,
             solve_id: None,
             control: None,
+            init_sigma: None,
+            schedule_offset: 0,
         }
     }
 
@@ -186,6 +198,23 @@ impl SolveRequest {
         self
     }
 
+    /// Warm-start every run from an explicit ±1 configuration, resuming
+    /// the Q/noise schedules `offset` steps in (0 replays them).
+    pub fn init_sigma(mut self, sigma: Arc<Vec<i32>>, offset: usize) -> Self {
+        self.init_sigma = Some(sigma);
+        self.schedule_offset = offset;
+        self
+    }
+
+    /// Warm-start from a prior report: seed σ from its best
+    /// configuration and resume the schedules after its step budget —
+    /// the incremental re-solve idiom behind the `resolve` verb.
+    pub fn init_from(self, prior: &SolveReport) -> Self {
+        let sigma = Arc::new(prior.best_sigma.clone());
+        let offset = prior.steps;
+        self.init_sigma(sigma, offset)
+    }
+
     /// Problem-aware default parameters. MAX-CUT gets the paper's
     /// calibrated G-set configuration; the penalty/QUBO encodings need a
     /// wider dynamic range, so `I0` scales with the largest per-spin
@@ -248,6 +277,18 @@ impl SolveRequest {
             params.replicas = r;
         }
 
+        if let Some(init) = &self.init_sigma {
+            anyhow::ensure!(
+                init.len() == model.n(),
+                "init_sigma length {} does not match the model's {} spins",
+                init.len(),
+                model.n()
+            );
+            anyhow::ensure!(
+                init.iter().all(|&s| s == 1 || s == -1),
+                "init_sigma must be a ±1 configuration"
+            );
+        }
         let mut batch = BatchJob::from_seed_range(spec, steps, self.seed, self.runs);
         batch.params = params;
         batch.backend = self.backend;
@@ -257,6 +298,8 @@ impl SolveRequest {
         batch.solve_id = solve_id;
         batch.trace = self.trace;
         batch.control = self.control.clone();
+        batch.init_sigma = self.init_sigma.clone();
+        batch.schedule_offset = self.schedule_offset;
         pool.submit_batch(batch);
         let mut outcomes = pool.drain();
         // drain yields worker-completion order; chunk ids are assigned
@@ -326,6 +369,7 @@ impl SolveRequest {
             feasible,
             solution,
             best_energy: best_o.best_energy,
+            best_sigma: best_o.best_sigma.clone(),
             replica_energies: best_o.replica_energies.clone(),
             runs: total_runs,
             feasible_runs: outcomes.iter().map(|o| o.feasible_runs).sum(),
@@ -382,6 +426,9 @@ pub struct SolveReport {
     pub solution: Solution,
     /// Lowest Ising energy over all runs.
     pub best_energy: i64,
+    /// The ±1 configuration achieving `best_energy` — what
+    /// [`SolveRequest::init_from`] seeds a warm-started re-solve with.
+    pub best_sigma: Vec<i32>,
     /// Final per-replica energies of the lowest-energy run.
     pub replica_energies: Vec<i64>,
     /// Seeds annealed.

@@ -15,6 +15,10 @@
 //!           penalty=A [12] conflict=B [6]
 //! graphiso  nodes=N [8] edges=M [3N/2] pseed=S penalty=A [2N]
 //! partition n=N [20] maxv=V [9] pseed=S
+//! factor    n=N [35]                           — odd semiprime target;
+//!                                                 product bits clamped (§11)
+//! maxsat    vars=V [24] clauses=C [60] pseed=S — random weighted 3-SAT,
+//!           | wcnf=PATH                           or a DIMACS-WCNF file
 //! ```
 //!
 //! Every builder **consumes** its keys from the map; callers consume
@@ -25,8 +29,8 @@
 use super::problem::{Problem, ProblemKind};
 use crate::graph::{power_law, random_graph, random_regular, torus_2d, GraphSpec};
 use crate::problems::{
-    ColoringInstance, ColoringProblem, GiInstance, GiProblem, MaxCut, PartitionInstance, Qubo,
-    QuboProblem, TspInstance, TspProblem,
+    ColoringInstance, ColoringProblem, FactorProblem, GiInstance, GiProblem, MaxCut,
+    MaxSatProblem, PartitionInstance, Qubo, QuboProblem, TspInstance, TspProblem,
 };
 use crate::Result;
 use anyhow::{anyhow, bail, ensure};
@@ -201,6 +205,34 @@ pub fn build_problem(kind: &str, f: &mut BTreeMap<String, String>) -> Result<Arc
             ensure!((1..=255).contains(&maxv), "maxv={maxv}: must be in 1..=255");
             let pseed: u64 = take(f, "pseed", 42)?;
             Arc::new(PartitionInstance::random(n, maxv, pseed))
+        }
+        ProblemKind::Factor => {
+            let n: u64 = take(f, "n", 35)?;
+            ensure!(n % 2 == 1, "n={n}: factor target must be odd");
+            ensure!((9..=0xFFFF_FFFF).contains(&n), "n={n}: must be in 9..=2^32−1");
+            Arc::new(FactorProblem::new(n))
+        }
+        ProblemKind::MaxSat => {
+            if let Some(path) = f.remove("wcnf") {
+                ensure!(
+                    !f.contains_key("vars") && !f.contains_key("clauses") && !f.contains_key("pseed"),
+                    "wcnf= is exclusive with vars=/clauses=/pseed="
+                );
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|e| anyhow!("wcnf={path:?}: {e}"))?;
+                let label = std::path::Path::new(&path)
+                    .file_stem()
+                    .map(|s| format!("wcnf-{}", s.to_string_lossy()))
+                    .unwrap_or_else(|| "wcnf".into());
+                Arc::new(MaxSatProblem::from_wcnf(&text, label).map_err(|e| anyhow!("wcnf={path:?}: {e}"))?)
+            } else {
+                let vars: usize = take(f, "vars", 24)?;
+                ensure!((3..=4096).contains(&vars), "vars={vars}: must be in 3..=4096");
+                let clauses: usize = take(f, "clauses", 60)?;
+                ensure!((1..=65536).contains(&clauses), "clauses={clauses}: must be in 1..=65536");
+                let pseed: u64 = take(f, "pseed", 7)?;
+                Arc::new(MaxSatProblem::random(vars, clauses, pseed))
+            }
         }
     })
 }

@@ -102,6 +102,12 @@ pub struct Job {
     /// backends stop at the next seed boundary) and live progress
     /// streaming (software SSQA only, like `trace`).
     pub control: Option<RunControl>,
+    /// Warm-start configuration (software SSQA only; other backends
+    /// ignore it, like `early_stop`): replicas start from this ±1
+    /// configuration instead of the seeded random init.
+    pub init_sigma: Option<Arc<Vec<i32>>>,
+    /// Schedule resume offset for warm starts (DESIGN.md §11.3).
+    pub schedule_offset: usize,
 }
 
 impl Job {
@@ -120,6 +126,8 @@ impl Job {
             solve_id: SolveId::NONE,
             trace: None,
             control: None,
+            init_sigma: None,
+            schedule_offset: 0,
         }
     }
 }
@@ -156,6 +164,12 @@ pub struct BatchJob {
     /// handle is shared by every chunk of the batch, so a single cancel
     /// stops the whole fan-out.
     pub control: Option<RunControl>,
+    /// Warm-start configuration shared by every chunk (software SSQA
+    /// only): each run's replicas start from this ±1 configuration,
+    /// clamp pins still winning over the warm values.
+    pub init_sigma: Option<Arc<Vec<i32>>>,
+    /// Schedule resume offset for warm starts (DESIGN.md §11.3).
+    pub schedule_offset: usize,
 }
 
 impl BatchJob {
@@ -175,6 +189,8 @@ impl BatchJob {
             solve_id: SolveId::NONE,
             trace: None,
             control: None,
+            init_sigma: None,
+            schedule_offset: 0,
         }
     }
 
@@ -210,6 +226,10 @@ pub(crate) struct BatchChunk {
     pub trace: Option<TraceConfig>,
     /// Serving-layer cancellation/progress handle (shared batch-wide).
     pub control: Option<RunControl>,
+    /// Warm-start configuration (software SSQA only).
+    pub init_sigma: Option<Arc<Vec<i32>>>,
+    /// Schedule resume offset for warm starts.
+    pub schedule_offset: usize,
     pub problem: Arc<dyn Problem>,
     pub model: Arc<IsingModel>,
 }
@@ -394,6 +414,8 @@ impl BackendInstance {
         steps: usize,
         run_threads: usize,
         kernel: KernelChoice,
+        init_sigma: Option<&Arc<Vec<i32>>>,
+        schedule_offset: usize,
     ) -> crate::Result<Self> {
         use crate::annealer::{SaEngine, SsaEngine, SsaParams, SsqaEngine};
         use crate::hw::{HwConfig, HwEngine};
@@ -402,7 +424,13 @@ impl BackendInstance {
         Ok(match backend {
             super::BackendKind::Software => {
                 let step_kernel = kernel.resolve(model, run_threads);
-                Self::Software(SsqaEngine::new(params, steps).with_kernel(step_kernel))
+                let mut eng = SsqaEngine::new(params, steps).with_kernel(step_kernel);
+                if let Some(init) = init_sigma {
+                    // warm start rides the software SSQA backend only
+                    // (the others ignore it, like `early_stop`)
+                    eng = eng.with_warm_start(Arc::clone(init), schedule_offset);
+                }
+                Self::Software(eng)
             }
             super::BackendKind::SoftwareSsa => {
                 let mut eng = SsaEngine::new(SsaParams::gset_default(), steps);
@@ -458,6 +486,8 @@ pub fn execute(job: &Job, backend: super::BackendKind) -> JobOutcome {
         solve_id: job.solve_id,
         trace: job.trace,
         control: job.control.clone(),
+        init_sigma: job.init_sigma.clone(),
+        schedule_offset: job.schedule_offset,
         problem: Arc::clone(job.spec.problem()),
         model: job.spec.model(),
     };
@@ -491,6 +521,8 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
         chunk.steps,
         chunk.run_threads,
         chunk.kernel,
+        chunk.init_sigma.as_ref(),
+        chunk.schedule_offset,
     );
     stages.record_ns("chunk.build", build_span.elapsed_ns());
     // the recorder outlives the anneal match so the trace can be

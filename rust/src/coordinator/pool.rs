@@ -186,6 +186,8 @@ impl WorkerPool {
                 solve_id: batch.solve_id,
                 trace: batch.trace,
                 control: batch.control.clone(),
+                init_sigma: batch.init_sigma.clone(),
+                schedule_offset: batch.schedule_offset,
                 problem: Arc::clone(&problem),
                 model: Arc::clone(&model),
             };

@@ -333,6 +333,7 @@ fn step_rows(
 ) {
     let r = job.replicas;
     let rows = prev_b.len() / r;
+    let pins = job.model.clamp_pins();
     let StepScratch { acc, prev_row, noise_row } = scratch;
     let acc = &mut acc[..r];
     let coupled = &mut prev_row[..r];
@@ -340,6 +341,17 @@ fn step_rows(
     for li in 0..rows {
         let i = base_row + li;
         let row = li * r;
+        // clamped row (DESIGN.md §11): the stochastic update is skipped
+        // — σ stays pinned, `Is` untouched — but the row's RNG cells
+        // still advance exactly once, so every free spin's noise stream
+        // is independent of the mask and identical across kernels
+        if let Some(p) = pins {
+            if p[i] != 0 {
+                draw_slice_pm1(&mut rng_b[row..row + r], noise);
+                prev_b[row..row + r].fill(p[i] as i32);
+                continue;
+            }
+        }
         // Eq. (6a) field: Σ_j J_ij σ_j,k(t) + h_i, all lanes at once,
         // CSR column order (identical order to the scalar reference)
         acc.fill(job.model.h[i]);
@@ -471,8 +483,19 @@ pub fn step_delta(
 
     // pass 1 — cell updates, the field plane standing in for the lane
     // kernel's per-row accumulator (same value, same per-cell chain)
+    let pins = job.model.clamp_pins();
     for i in 0..n {
         let row = i * r;
+        // clamped row: same skip-with-RNG-advance contract as
+        // `step_rows`; a pinned row never flips (σ == σ_prev == pin
+        // since init), so pass 2's frontier never sees it either
+        if let Some(p) = pins {
+            if p[i] != 0 {
+                draw_slice_pm1(&mut states[row..row + r], noise);
+                sigma_prev[row..row + r].fill(p[i] as i32);
+                continue;
+            }
+        }
         let fields_row = &delta.fields[row..row + r];
         let out = &mut sigma_prev[row..row + r];
         rotate_left1(coupled, out);

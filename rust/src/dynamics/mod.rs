@@ -124,6 +124,34 @@ pub fn init_sigma_into(rng: &RngMatrix, sigma: &mut [i32]) {
     }
 }
 
+/// Apply the shared post-init state overrides, in order (DESIGN.md §11):
+/// first the optional warm-start configuration (length-N ±1 vector
+/// broadcast across the replica axis — every replica resumes from the
+/// prior best σ), then the model's clamp mask (pins always win). Called
+/// on **both** σ generations at init/reinit time by every engine, so a
+/// pinned spin never flips and the delta kernel's flip frontier, the
+/// hardware delay lines and the replica-coupling latch all see a
+/// consistent fixed value.
+pub fn prime_sigma(
+    model: &IsingModel,
+    init: Option<&[i32]>,
+    sigma: &mut [i32],
+    replicas: usize,
+) {
+    let n = model.n();
+    assert_eq!(sigma.len(), n * replicas, "sigma buffer shape mismatch");
+    if let Some(warm) = init {
+        assert_eq!(warm.len(), n, "warm-start σ length mismatch");
+        for (i, &s) in warm.iter().enumerate() {
+            debug_assert!(s == 1 || s == -1, "warm-start σ[{i}] = {s} not ±1");
+            sigma[i * replicas..(i + 1) * replicas].fill(s);
+        }
+    }
+    if let Some(clamp) = model.clamp() {
+        clamp.apply(sigma, replicas);
+    }
+}
+
 /// Final-state readout of one run (paper §4.2: "the configuration
 /// yielding the highest cut value among the R replicas is selected" —
 /// equivalently the lowest Ising energy).

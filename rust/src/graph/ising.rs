@@ -13,6 +13,98 @@
 
 use super::Graph;
 use std::borrow::Cow;
+use std::sync::Arc;
+
+/// Per-spin pinned values — the clamped-spin capability every kernel
+/// and engine honors (DESIGN.md §11).
+///
+/// A pinned spin keeps its fixed σ for the whole run: it still
+/// contributes `J_ij σ_j` to its neighbors' Eq. (6a) input sums, but its
+/// own stochastic update is skipped (σ, `Is` untouched; its RNG cells
+/// still advance once per step so free spins' noise streams are
+/// independent of the mask — the cross-kernel bit-exactness contract).
+///
+/// Encoders use this for inverse-logic workloads: `FactorProblem` pins
+/// the product bits of its multiplier Hamiltonian, and warm-started
+/// re-solves pin nothing but reuse the same plumbing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClampMask {
+    /// `0` = free, `±1` = pinned to that σ.
+    pins: Vec<i8>,
+    pinned: usize,
+}
+
+impl ClampMask {
+    /// All-free mask over `n` spins.
+    pub fn free(n: usize) -> Self {
+        Self { pins: vec![0; n], pinned: 0 }
+    }
+
+    /// Build from `(spin, value)` pairs; values must be ±1.
+    pub fn from_pairs(n: usize, pairs: &[(usize, i32)]) -> Self {
+        let mut m = Self::free(n);
+        for &(i, v) in pairs {
+            m.pin(i, v);
+        }
+        m
+    }
+
+    /// Pin spin `i` to `value` (±1). Re-pinning overwrites.
+    pub fn pin(&mut self, i: usize, value: i32) {
+        assert!(value == 1 || value == -1, "pin value must be ±1, got {value}");
+        assert!(i < self.pins.len(), "pin index {i} out of range");
+        if self.pins[i] == 0 {
+            self.pinned += 1;
+        }
+        self.pins[i] = value as i8;
+    }
+
+    /// Number of spins the mask covers.
+    pub fn n(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// Pinned value of spin `i` (`None` = free).
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> Option<i32> {
+        match self.pins[i] {
+            0 => None,
+            v => Some(v as i32),
+        }
+    }
+
+    /// Whether spin `i` updates stochastically.
+    #[inline(always)]
+    pub fn is_free(&self, i: usize) -> bool {
+        self.pins[i] == 0
+    }
+
+    /// Count of pinned spins.
+    pub fn num_pinned(&self) -> usize {
+        self.pinned
+    }
+
+    /// Raw per-spin pin values (`0` free, `±1` pinned) — the flat form
+    /// kernels read in their row loops and fingerprints hash.
+    pub fn pins(&self) -> &[i8] {
+        &self.pins
+    }
+
+    /// Force the pinned values into a row-major `[spin][replica]` σ
+    /// plane (`replicas = 1` for flat single-network state). Called at
+    /// init/reinit time by every engine, so a pinned spin never flips.
+    pub fn apply(&self, sigma: &mut [i32], replicas: usize) {
+        assert_eq!(sigma.len(), self.pins.len() * replicas);
+        if self.pinned == 0 {
+            return;
+        }
+        for (i, &p) in self.pins.iter().enumerate() {
+            if p != 0 {
+                sigma[i * replicas..(i + 1) * replicas].fill(p as i32);
+            }
+        }
+    }
+}
 
 /// Compressed sparse row matrix over i32 weights (symmetric couplings,
 /// both triangles stored for row-major streaming).
@@ -109,6 +201,9 @@ pub struct IsingModel {
     j_dense: Option<Vec<i32>>,
     /// Canonical coupling storage for kernels and energy.
     j_sparse: CsrMatrix,
+    /// Pinned spins (`None` = everything free). Shared by `Arc` so the
+    /// coordinator's model clones stay O(1).
+    clamp: Option<Arc<ClampMask>>,
 }
 
 impl IsingModel {
@@ -129,7 +224,7 @@ impl IsingModel {
     /// Storage is [`JStorage::SparseOnly`]: memory is O(n + nnz).
     pub fn from_edges(n: usize, h: Vec<i32>, edges: &[(u32, u32, i32)]) -> Self {
         assert_eq!(h.len(), n);
-        Self { n, h, j_dense: None, j_sparse: CsrMatrix::from_edges(n, edges) }
+        Self { n, h, j_dense: None, j_sparse: CsrMatrix::from_edges(n, edges), clamp: None }
     }
 
     /// Build from explicit dense parts (BRAM image replay, fixture
@@ -148,7 +243,65 @@ impl IsingModel {
             }
         }
         let j_sparse = CsrMatrix::from_edges(n, &edges);
-        Self { n, h, j_dense: Some(j_dense), j_sparse }
+        Self { n, h, j_dense: Some(j_dense), j_sparse, clamp: None }
+    }
+
+    /// Attach a clamp mask (builder style). Panics on length mismatch.
+    pub fn with_clamp(mut self, clamp: ClampMask) -> Self {
+        assert_eq!(clamp.n(), self.n, "clamp mask covers {} spins, model has {}", clamp.n(), self.n);
+        self.clamp = if clamp.num_pinned() == 0 { None } else { Some(Arc::new(clamp)) };
+        self
+    }
+
+    /// The clamp mask, if any spin is pinned.
+    pub fn clamp(&self) -> Option<&ClampMask> {
+        self.clamp.as_deref()
+    }
+
+    /// Flat pin values for kernel row loops (`None` = all free), fetched
+    /// once per step outside the hot loop.
+    #[inline]
+    pub fn clamp_pins(&self) -> Option<&[i8]> {
+        self.clamp.as_deref().map(ClampMask::pins)
+    }
+
+    /// Rebuild with a handful of couplings replaced — the incremental
+    /// re-solve path behind the `resolve` protocol verb (DESIGN.md §11).
+    ///
+    /// Each patch `(i, j, w)` **replaces** the coupling on that edge
+    /// (`w = 0` removes it; a new pair inserts it). The CSR is rebuilt
+    /// from the patched upper-triangle edge list in O(nnz + patches);
+    /// biases and the clamp mask carry over, any retained dense image is
+    /// dropped (the result is sparse-only).
+    pub fn patched(&self, patches: &[(u32, u32, i32)]) -> Self {
+        use std::collections::BTreeMap;
+        let mut edges: BTreeMap<(u32, u32), i32> = BTreeMap::new();
+        for i in 0..self.n {
+            let (cols, vals) = self.j_sparse.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                if *c as usize > i {
+                    edges.insert((i as u32, *c), *v);
+                }
+            }
+        }
+        for &(i, j, w) in patches {
+            assert!((i as usize) < self.n && (j as usize) < self.n, "patch ({i},{j}) out of range");
+            assert_ne!(i, j, "patch self-loop at node {i}");
+            let key = (i.min(j), i.max(j));
+            if w == 0 {
+                edges.remove(&key);
+            } else {
+                edges.insert(key, w);
+            }
+        }
+        let list: Vec<(u32, u32, i32)> = edges.into_iter().map(|((i, j), w)| (i, j, w)).collect();
+        Self {
+            n: self.n,
+            h: self.h.clone(),
+            j_dense: None,
+            j_sparse: CsrMatrix::from_edges(self.n, &list),
+            clamp: self.clamp.clone(),
+        }
     }
 
     pub fn n(&self) -> usize {

@@ -18,7 +18,7 @@ pub use generate::{
     complete_graph, planar_like, power_law, random_graph, random_regular, torus_2d, GraphSpec,
 };
 pub use gset::{parse_gset, write_gset};
-pub use ising::{CsrMatrix, IsingModel, JStorage};
+pub use ising::{ClampMask, CsrMatrix, IsingModel, JStorage};
 pub use quantize::{quantize, sparsify, QuantizeReport};
 
 

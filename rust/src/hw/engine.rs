@@ -109,7 +109,11 @@ impl HwEngine {
         // the shared cross-layer convention; the row-major layout is
         // transposed into one column per replica delay line.
         let rng_init = RngMatrix::seeded(seed, n, r);
-        let flat_init = dynamics::init_sigma(&rng_init);
+        let mut flat_init = dynamics::init_sigma(&rng_init);
+        // clamp pins are forced before the delay lines are built, so
+        // both σ generations of every replica start pinned (the same
+        // init contract as the software engines, DESIGN.md §11)
+        dynamics::prime_sigma(model, None, &mut flat_init, r);
         let mut delays: Vec<Box<dyn DelayLine>> = (0..r)
             .map(|k| -> Box<dyn DelayLine> {
                 let column: Vec<i32> = (0..n).map(|i| flat_init[i * r + k]).collect();
@@ -169,9 +173,21 @@ impl HwEngine {
                 for (k, d) in delayed.iter_mut().enumerate() {
                     *d = delays[(k + 1) % r].read_delayed(i);
                 }
+                let pin = model.clamp().and_then(|c| c.get(i));
                 for k in 0..r {
                     let rnd = rng.draw_pm1(i, k);
                     stats.rng_draws += 1;
+                    // clamped spin gate: the write-enable of the Eq. (6)
+                    // datapath is gated off — `Is` is copied through the
+                    // bank swap unchanged and the pinned σ rewrites the
+                    // delay line, while the RNG still advanced above
+                    // (the software engines' skip-with-draw contract)
+                    if let Some(p) = pin {
+                        let is_old = is_banks[k][is_parity].read(i);
+                        is_banks[k][1 - is_parity].write(i, is_old);
+                        delays[k].write_new(i, p);
+                        continue;
+                    }
                     // Eq. (6a–c) — the shared dynamics datapath; this
                     // model contributes only the memory traffic around it
                     let inp = CellUpdate::input(acc[k] + h_i, noise_t, rnd, q_t, delayed[k]);

@@ -112,7 +112,7 @@ fn print_help() {
         "ssqa — p-bit SSQA fully-connected annealer (dual-BRAM architecture reproduction)\n\n\
          USAGE: ssqa <command> [--flags]\n\n\
          COMMANDS\n\
-         \x20 solve       [--problem maxcut|qubo|tsp|coloring|graphiso|partition]\n\
+         \x20 solve       [--problem maxcut|qubo|tsp|coloring|graphiso|partition|factor|maxsat]\n\
          \x20             instance keys per kind (DESIGN.md \u{a7}6.3):\n\
          \x20               maxcut:    --graph G11 | --nodes 800 [--gseed S]\n\
          \x20               qubo:      --n 32 [--pseed S]\n\
@@ -120,6 +120,8 @@ fn print_help() {
          \x20               coloring:  --nodes 16 --colors 3 [--edges M] [--pseed S]\n\
          \x20               graphiso:  --nodes 8 [--edges M] [--pseed S]\n\
          \x20               partition: --n 20 [--maxv 9] [--pseed S]\n\
+         \x20               factor:    --n 35  (odd composite; product bits clamped)\n\
+         \x20               maxsat:    --vars 24 --clauses 60 [--pseed S] | --wcnf FILE\n\
          \x20             [--steps 500] [--seed 1] [--runs 1] [--replicas R]\n\
          \x20             [--threads T]  (per-run step-kernel threads; default: auto)\n\
          \x20             [--kernel auto|scalar|lanes|delta]  (bit-identical; auto = density heuristic)\n\

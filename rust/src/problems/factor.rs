@@ -1,0 +1,223 @@
+//! Prime factorization via an inverse multiplier Hamiltonian.
+//!
+//! The multiplier circuit `a × b` is compiled into gate penalties — AND
+//! gates for the partial products, full/half adders for the column
+//! sums — and then run *backwards*: the product wires are **clamped**
+//! to the bits of `n` (the [`crate::graph::ClampMask`] capability of
+//! DESIGN.md §11), so the annealer's only freedom is the factor bits
+//! and the internal carry wires, and every zero-energy configuration
+//! reads out a genuine factorization `a · b = n`.
+//!
+//! Gate penalties (all integer, minimum 0 exactly at consistency):
+//!
+//! * AND `z = x∧y`:  `xy − 2xz − 2yz + 3z`
+//! * full adder `(a, b, cin) → (s, cout)`:  `(a + b + cin − s − 2·cout)²`
+//! * half adder:  the full adder with `cin = 0`
+//!
+//! Every violated gate costs ≥ 1, so the spectral gap between "is a
+//! factorization" and "is not" is at least 1 — the exhaustive
+//! ground-truth proptests in `problems::tests` verify both directions.
+//!
+//! `n` must be odd (both factors odd, so the low factor bits are
+//! clamped to 1) and composite for a zero-energy state to exist; the
+//! factor widths `na = ⌈bits(n)/2⌉`, `nb = bits(n) + 1 − na` exclude
+//! the trivial `1 × n` split for every odd `n ≥ 9`.
+
+use crate::api::{Problem, ProblemKind, Solution};
+use crate::graph::{ClampMask, IsingModel};
+use crate::problems::qubo::{sigma_to_x, Qubo, QuboIsingMap};
+
+/// Prime factorization as a [`Problem`] (see the module docs).
+#[derive(Debug, Clone)]
+pub struct FactorProblem {
+    n: u64,
+    na: usize,
+    nb: usize,
+    qubo: Qubo,
+    map: QuboIsingMap,
+    /// `(spin, ±1)` clamp pairs: `a_0`, `b_0` and the product wires.
+    pins: Vec<(usize, i32)>,
+}
+
+impl FactorProblem {
+    /// Build the multiplier Hamiltonian for `n` (odd, `9 ≤ n < 2^32`).
+    pub fn new(n: u64) -> Self {
+        assert!(n % 2 == 1, "factor target must be odd (got {n})");
+        assert!((9..1u64 << 32).contains(&n), "factor target out of range (got {n})");
+        let bits = 64 - n.leading_zeros() as usize;
+        let na = bits.div_ceil(2);
+        let nb = bits + 1 - na;
+
+        // variable allocation: a bits, b bits, then gate wires on demand
+        let mut next_var = na + nb;
+        let mut alloc = || {
+            let v = next_var;
+            next_var += 1;
+            v
+        };
+
+        // columns of the multiplier: cols[c] holds the wires whose
+        // weighted sum (weight 2^c) the product bit c must equal
+        let mut cols: Vec<Vec<usize>> = vec![Vec::new(); na + nb + 1];
+        let mut gates: Vec<Gate> = Vec::new();
+        for i in 0..na {
+            for j in 0..nb {
+                let p = alloc();
+                gates.push(Gate::And { x: i, y: na + j, z: p });
+                cols[i + j].push(p);
+            }
+        }
+        // ripple column reduction: fold each column to one wire with
+        // full/half adders, pushing the carries one column up
+        for c in 0..na + nb {
+            while cols[c].len() > 1 {
+                let s = alloc();
+                let t = alloc();
+                if cols[c].len() >= 3 {
+                    let (x, y, z) =
+                        (cols[c].pop().unwrap(), cols[c].pop().unwrap(), cols[c].pop().unwrap());
+                    gates.push(Gate::FullAdd { a: x, b: y, cin: Some(z), s, cout: t });
+                } else {
+                    let (x, y) = (cols[c].pop().unwrap(), cols[c].pop().unwrap());
+                    gates.push(Gate::FullAdd { a: x, b: y, cin: None, s, cout: t });
+                }
+                cols[c].push(s);
+                cols[c + 1].push(t);
+            }
+        }
+
+        // emit the gate penalties
+        let mut qubo = Qubo::new(next_var);
+        for g in &gates {
+            g.emit(&mut qubo);
+        }
+
+        // clamps: odd factors (a_0 = b_0 = 1) and the product wires
+        // pinned to the bits of n (x = 1 ↔ σ = +1)
+        let mut pins: Vec<(usize, i32)> = vec![(0, 1), (na, 1)];
+        for (c, col) in cols.iter().enumerate() {
+            let bit = if c < 64 { (n >> c) & 1 } else { 0 };
+            match col.as_slice() {
+                [w] => pins.push((*w, if bit == 1 { 1 } else { -1 })),
+                [] => assert_eq!(bit, 0, "product bit {c} of {n} has no wire"),
+                _ => unreachable!("column {c} not reduced"),
+            }
+        }
+
+        let map = qubo.ising_map();
+        Self { n, na, nb, qubo, map, pins }
+    }
+
+    /// The factorization target.
+    pub fn target(&self) -> u64 {
+        self.n
+    }
+
+    /// Bit widths of the two factor registers `(na, nb)`.
+    pub fn factor_bits(&self) -> (usize, usize) {
+        (self.na, self.nb)
+    }
+
+    /// The gate-penalty QUBO (test oracle access).
+    pub fn qubo(&self) -> &Qubo {
+        &self.qubo
+    }
+
+    /// The clamp pairs `to_ising` pins (test oracle access).
+    pub fn pins(&self) -> &[(usize, i32)] {
+        &self.pins
+    }
+
+    /// Total gate-violation cost of a 0/1 assignment (0 ⇔ consistent
+    /// circuit whose clamped product wires multiply out to `n`).
+    pub fn violations(&self, x: &[u8]) -> i64 {
+        self.qubo.value(x)
+    }
+
+    /// Read the factor registers out of a 0/1 assignment.
+    pub fn factors_of(&self, x: &[u8]) -> (u64, u64) {
+        let a = (0..self.na).map(|i| (x[i] as u64) << i).sum();
+        let b = (0..self.nb).map(|j| (x[self.na + j] as u64) << j).sum();
+        (a, b)
+    }
+}
+
+/// A multiplier-circuit gate, held symbolically so tests can audit the
+/// emitted penalty structure.
+#[derive(Debug, Clone, Copy)]
+enum Gate {
+    /// `z = x ∧ y`.
+    And { x: usize, y: usize, z: usize },
+    /// `a + b + cin = s + 2·cout` (`cin = None` is the half adder).
+    FullAdd { a: usize, b: usize, cin: Option<usize>, s: usize, cout: usize },
+}
+
+impl Gate {
+    fn emit(&self, q: &mut Qubo) {
+        match *self {
+            Gate::And { x, y, z } => {
+                q.add_quadratic(x, y, 1);
+                q.add_quadratic(x, z, -2);
+                q.add_quadratic(y, z, -2);
+                q.add_linear(z, 3);
+            }
+            Gate::FullAdd { a, b, cin, s, cout } => {
+                // (a + b + cin − s − 2·cout)², expanded with x² = x
+                let ins: &[usize] = match cin {
+                    Some(c) => &[a, b, c],
+                    None => &[a, b],
+                };
+                for (idx, &u) in ins.iter().enumerate() {
+                    q.add_linear(u, 1);
+                    for &v in &ins[idx + 1..] {
+                        q.add_quadratic(u, v, 2);
+                    }
+                    q.add_quadratic(u, s, -2);
+                    q.add_quadratic(u, cout, -4);
+                }
+                q.add_linear(s, 1);
+                q.add_linear(cout, 4);
+                q.add_quadratic(s, cout, 4);
+            }
+        }
+    }
+}
+
+impl Problem for FactorProblem {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::Factor
+    }
+
+    fn label(&self) -> String {
+        format!("factor-{}", self.n)
+    }
+
+    fn num_vars(&self) -> usize {
+        self.qubo.n()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        let (model, _) = self.qubo.to_ising();
+        model.with_clamp(ClampMask::from_pairs(self.qubo.n(), &self.pins))
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        let x = sigma_to_x(sigma);
+        if self.violations(&x) != 0 {
+            return Solution::Infeasible { x };
+        }
+        let (a, b) = self.factors_of(&x);
+        debug_assert_eq!(a * b, self.n, "zero-violation circuit must multiply out");
+        Solution::Factorization { a, b, n: self.n }
+    }
+
+    /// Gate-violation count recovered from a raw Ising energy (0 at any
+    /// factorization; the penalty gap makes every non-factorization ≥ 1).
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        self.map.energy_to_value(energy)
+    }
+
+    fn feasible(&self, sigma: &[i32]) -> bool {
+        self.violations(&sigma_to_x(sigma)) == 0
+    }
+}

@@ -1,0 +1,330 @@
+//! Weighted MAX-SAT via the standard clause→QUBO penalty encoding.
+//!
+//! Each clause contributes `w · Π_l y(l)` — the product of its
+//! *unsatisfied-literal* indicators `y(l) = 1 − x_v` (positive literal)
+//! or `y(l) = x_v` (negative literal) — so the QUBO value of a
+//! consistent assignment is exactly the weighted unsatisfied-clause
+//! total, and minimizing it maximizes satisfied weight.
+//!
+//! Clause arities:
+//!
+//! * `k = 1` — the product is linear; folded directly.
+//! * `k = 2` — already quadratic; folded directly, no auxiliaries.
+//! * `k ≥ 3` — Rosenberg chain: auxiliary variables
+//!   `a_1 = y_1·y_2, a_2 = a_1·y_3, …` with the product penalty
+//!   `P·(uv − 2ua − 2va + 3a)` at `P = w + 1` enforcing each
+//!   definition, then cost `w · a_{k−2} · y_k`. An inconsistent
+//!   auxiliary costs ≥ P > w, so every global minimum (and every
+//!   `feasible` configuration) has consistent auxiliaries — the
+//!   penalty-gap argument the encoder proptests verify.
+//!
+//! The expansion produces constant terms (e.g. `w(1−x)` for a unit
+//! positive clause); [`crate::problems::Qubo`] is linear+quadratic
+//! only, so the constant is carried alongside in `offset` and folded
+//! back in [`MaxSatProblem::objective_from_energy`].
+
+use crate::api::{Problem, ProblemKind, Solution};
+use crate::graph::IsingModel;
+use crate::problems::qubo::{sigma_to_x, Qubo, QuboIsingMap};
+use crate::rng::Xorshift64Star;
+
+/// Largest accepted clause weight — keeps every penalty coefficient
+/// (≤ 4·(w+1)) and the accumulated per-variable bias safely inside the
+/// integer datapath's `i32` weight words.
+pub const MAX_CLAUSE_WEIGHT: i32 = 10_000;
+
+/// One weighted clause in DIMACS literal convention: literal `+v`
+/// means variable `v−1` true, `−v` means it false.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Clause {
+    pub weight: i32,
+    pub lits: Vec<i32>,
+}
+
+/// Weighted MAX-SAT as a [`Problem`] (see the module docs).
+#[derive(Debug, Clone)]
+pub struct MaxSatProblem {
+    /// Decision variables (clause literals range over these).
+    nv: usize,
+    clauses: Vec<Clause>,
+    total_weight: i64,
+    label: String,
+    qubo: Qubo,
+    /// Constant term of the penalty expansion (see module docs).
+    offset: i64,
+    map: QuboIsingMap,
+}
+
+/// An unsatisfied-literal indicator (or chain auxiliary) as the linear
+/// form `c + s·x_v` — what the product expansion multiplies out.
+#[derive(Debug, Clone, Copy)]
+struct Term {
+    c: i32,
+    s: i32,
+    v: usize,
+}
+
+impl Term {
+    /// `y(lit)`: 1 iff the literal is *unsatisfied*.
+    fn of_lit(lit: i32) -> Self {
+        if lit > 0 {
+            Term { c: 1, s: -1, v: (lit - 1) as usize } // 1 − x
+        } else {
+            Term { c: 0, s: 1, v: (-lit - 1) as usize } // x
+        }
+    }
+
+    /// A bare auxiliary variable.
+    fn of_var(v: usize) -> Self {
+        Term { c: 0, s: 1, v }
+    }
+}
+
+/// Fold `p · u · v` into the QUBO + constant offset, with `x² = x`
+/// idempotence when both terms read the same variable (duplicate or
+/// complementary literals in one clause — tautologies cancel exactly).
+fn add_product(q: &mut Qubo, offset: &mut i64, p: i32, u: Term, v: Term) {
+    *offset += p as i64 * u.c as i64 * v.c as i64;
+    if u.v == v.v {
+        q.add_linear(u.v, p * (u.c * v.s + v.c * u.s + u.s * v.s));
+    } else {
+        q.add_linear(u.v, p * v.c * u.s);
+        q.add_linear(v.v, p * u.c * v.s);
+        q.add_quadratic(u.v, v.v, p * u.s * v.s);
+    }
+}
+
+impl MaxSatProblem {
+    /// Build the penalty QUBO for `clauses` over `num_vars` variables.
+    pub fn new(num_vars: usize, clauses: Vec<Clause>, label: impl Into<String>) -> Self {
+        assert!(num_vars > 0, "maxsat needs at least one variable");
+        assert!(!clauses.is_empty(), "maxsat needs at least one clause");
+        let mut total_weight: i64 = 0;
+        let mut aux_total = 0usize;
+        for cl in &clauses {
+            assert!(
+                (1..=MAX_CLAUSE_WEIGHT).contains(&cl.weight),
+                "clause weight {} out of 1..={MAX_CLAUSE_WEIGHT}",
+                cl.weight
+            );
+            assert!(!cl.lits.is_empty(), "empty clause");
+            for &l in &cl.lits {
+                assert!(l != 0 && l.unsigned_abs() as usize <= num_vars, "bad literal {l}");
+            }
+            total_weight += cl.weight as i64;
+            aux_total += cl.lits.len().saturating_sub(2);
+        }
+
+        let mut qubo = Qubo::new(num_vars + aux_total);
+        let mut offset: i64 = 0;
+        let mut next_aux = num_vars;
+        for cl in &clauses {
+            let w = cl.weight;
+            let ys: Vec<Term> = cl.lits.iter().map(|&l| Term::of_lit(l)).collect();
+            match ys.as_slice() {
+                [y] => {
+                    // w·y
+                    offset += w as i64 * y.c as i64;
+                    qubo.add_linear(y.v, w * y.s);
+                }
+                [y1, y2] => add_product(&mut qubo, &mut offset, w, *y1, *y2),
+                _ => {
+                    // Rosenberg chain: u ← y1, then a = u·y_{j} gate by gate
+                    let p = w + 1;
+                    let mut u = ys[0];
+                    for &y in &ys[1..ys.len() - 1] {
+                        let a = Term::of_var(next_aux);
+                        next_aux += 1;
+                        // P·(u·y − 2·u·a − 2·y·a + 3·a)
+                        add_product(&mut qubo, &mut offset, p, u, y);
+                        add_product(&mut qubo, &mut offset, -2 * p, u, a);
+                        add_product(&mut qubo, &mut offset, -2 * p, y, a);
+                        qubo.add_linear(a.v, 3 * p);
+                        u = a;
+                    }
+                    add_product(&mut qubo, &mut offset, w, u, ys[ys.len() - 1]);
+                }
+            }
+        }
+        debug_assert_eq!(next_aux, num_vars + aux_total);
+
+        let map = qubo.ising_map();
+        Self { nv: num_vars, clauses, total_weight, label: label.into(), qubo, offset, map }
+    }
+
+    /// Deterministic random 3-SAT-style instance: `clauses` clauses of
+    /// 3 distinct variables with random polarities and weights 1..=9.
+    pub fn random(vars: usize, clauses: usize, seed: u64) -> Self {
+        assert!(vars >= 3, "random maxsat needs ≥ 3 variables");
+        let mut rng = Xorshift64Star::new(seed ^ 0x3A7_5EED);
+        let mut out = Vec::with_capacity(clauses);
+        for _ in 0..clauses.max(1) {
+            let mut picked: Vec<usize> = Vec::with_capacity(3);
+            while picked.len() < 3 {
+                let v = rng.next_below(vars);
+                if !picked.contains(&v) {
+                    picked.push(v);
+                }
+            }
+            let lits = picked
+                .into_iter()
+                .map(|v| {
+                    let sign = if rng.next_f64() < 0.5 { -1 } else { 1 };
+                    sign * (v as i32 + 1)
+                })
+                .collect();
+            out.push(Clause { weight: rng.next_below(9) as i32 + 1, lits });
+        }
+        Self::new(vars, out, format!("maxsat-v{vars}c{}s{seed}", clauses.max(1)))
+    }
+
+    /// Parse DIMACS WCNF (`p wcnf nv nc [top]`, clause lines
+    /// `w l1 … lk 0`); plain CNF is accepted with every weight 1.
+    /// Hard clauses (weight = top) are clamped to [`MAX_CLAUSE_WEIGHT`],
+    /// i.e. treated as maximally heavy soft clauses.
+    pub fn from_wcnf(text: &str, label: impl Into<String>) -> Result<Self, String> {
+        let mut nv = 0usize;
+        let mut weighted = true;
+        let mut top: i64 = i64::MAX;
+        let mut clauses = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('c') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('p') {
+                let f: Vec<&str> = rest.split_whitespace().collect();
+                match f.as_slice() {
+                    ["wcnf", n, _nc] | ["wcnf", n, _nc, _] => {
+                        nv = n.parse().map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                        if let ["wcnf", _, _, t] = f.as_slice() {
+                            top = t.parse().map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                        }
+                    }
+                    ["cnf", n, _nc] => {
+                        nv = n.parse().map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                        weighted = false;
+                    }
+                    _ => return Err(format!("line {}: bad problem line {line:?}", lineno + 1)),
+                }
+                continue;
+            }
+            let mut nums = line.split_whitespace().map(str::parse::<i64>);
+            let weight: i64 = if weighted {
+                match nums.next() {
+                    Some(Ok(w)) => w,
+                    _ => return Err(format!("line {}: missing clause weight", lineno + 1)),
+                }
+            } else {
+                1
+            };
+            let mut lits = Vec::new();
+            for v in nums {
+                let v = v.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                if v == 0 {
+                    break;
+                }
+                lits.push(v as i32);
+            }
+            if lits.is_empty() {
+                return Err(format!("line {}: empty clause", lineno + 1));
+            }
+            let w = if weight >= top { MAX_CLAUSE_WEIGHT as i64 } else { weight };
+            let w = i32::try_from(w.clamp(1, MAX_CLAUSE_WEIGHT as i64))
+                .expect("clamped weight fits i32");
+            clauses.push(Clause { weight: w, lits });
+        }
+        if nv == 0 {
+            return Err("missing `p wcnf` / `p cnf` problem line".into());
+        }
+        if clauses.is_empty() {
+            return Err("no clauses".into());
+        }
+        Ok(Self::new(nv, clauses, label))
+    }
+
+    /// Decision-variable count (spins beyond this are chain auxiliaries).
+    pub fn decision_vars(&self) -> usize {
+        self.nv
+    }
+
+    pub fn clauses(&self) -> &[Clause] {
+        &self.clauses
+    }
+
+    pub fn total_weight(&self) -> i64 {
+        self.total_weight
+    }
+
+    /// The penalty QUBO and its constant offset (test oracle access).
+    pub fn qubo(&self) -> (&Qubo, i64) {
+        (&self.qubo, self.offset)
+    }
+
+    /// Direct weighted unsatisfied-clause total of an assignment
+    /// (auxiliary-free ground truth the encoding must reproduce).
+    pub fn unsat_weight(&self, x: &[u8]) -> i64 {
+        self.clauses
+            .iter()
+            .filter(|cl| {
+                !cl.lits
+                    .iter()
+                    .any(|&l| if l > 0 { x[(l - 1) as usize] == 1 } else { x[(-l - 1) as usize] == 0 })
+            })
+            .map(|cl| cl.weight as i64)
+            .sum()
+    }
+
+    /// Penalized QUBO objective of a full assignment (decision + aux):
+    /// equals [`Self::unsat_weight`] exactly iff the chain auxiliaries
+    /// are consistent with their defining products.
+    pub fn penalized_value(&self, x: &[u8]) -> i64 {
+        self.qubo.value(x) + self.offset
+    }
+}
+
+impl Problem for MaxSatProblem {
+    fn kind(&self) -> ProblemKind {
+        ProblemKind::MaxSat
+    }
+
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.qubo.n()
+    }
+
+    fn to_ising(&self) -> IsingModel {
+        self.qubo.to_ising().0
+    }
+
+    fn decode(&self, sigma: &[i32]) -> Solution {
+        let mut x = sigma_to_x(sigma);
+        let unsat = self.unsat_weight(&x);
+        if self.penalized_value(&x) != unsat {
+            // an inconsistent chain auxiliary — the energy lies about
+            // the clause score, so the configuration is not decodable
+            return Solution::Infeasible { x };
+        }
+        x.truncate(self.nv);
+        Solution::MaxSat {
+            assignment: x,
+            satisfied_weight: self.total_weight - unsat,
+            total_weight: self.total_weight,
+        }
+    }
+
+    /// Satisfied weight recovered from a raw Ising energy — exact for
+    /// feasible configurations, a lower bound otherwise (penalties only
+    /// subtract).
+    fn objective_from_energy(&self, energy: i64) -> i64 {
+        self.total_weight - self.offset - self.map.energy_to_value(energy)
+    }
+
+    fn feasible(&self, sigma: &[i32]) -> bool {
+        let x = sigma_to_x(sigma);
+        self.penalized_value(&x) == self.unsat_weight(&x)
+    }
+}

@@ -9,19 +9,26 @@
 //! Every workload also implements the [`crate::api::Problem`] trait —
 //! the crate's single typed solve surface (encode → anneal → decode):
 //! [`MaxCut`], [`QuboProblem`], [`TspProblem`], [`ColoringProblem`],
-//! [`GiProblem`] and [`PartitionInstance`] all flow through
-//! `api::SolveRequest`, the coordinator and the tuner unchanged.
+//! [`GiProblem`], [`PartitionInstance`], [`FactorProblem`] and
+//! [`MaxSatProblem`] all flow through `api::SolveRequest`, the
+//! coordinator and the tuner unchanged. The factorization encoding is
+//! the first consumer of the clamped-spin capability (DESIGN.md §11):
+//! its product wires are pinned, not annealed.
 
 pub mod coloring;
+pub mod factor;
 pub mod graph_iso;
 pub mod maxcut;
+pub mod maxsat;
 pub mod partition;
 pub mod qubo;
 pub mod tsp;
 
 pub use coloring::{ColoringInstance, ColoringProblem};
+pub use factor::FactorProblem;
 pub use graph_iso::{GiInstance, GiProblem};
 pub use maxcut::MaxCut;
+pub use maxsat::{Clause, MaxSatProblem};
 pub use partition::PartitionInstance;
 pub use qubo::{Qubo, QuboProblem};
 pub use tsp::{TspInstance, TspProblem};

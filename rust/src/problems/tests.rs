@@ -302,3 +302,274 @@ mod coloring_tests {
         assert_eq!(inst.decode(&x), None);
     }
 }
+
+mod factor_tests {
+    use super::*;
+    use crate::api::{Problem, Solution};
+    use factor::FactorProblem;
+
+    /// Enumerate every assignment of the *free* (unpinned) variables,
+    /// with the pinned variables fixed to their clamp values, and feed
+    /// each full assignment to `visit`.
+    fn for_each_clamped_assignment(p: &FactorProblem, mut visit: impl FnMut(&[u8])) {
+        let nv = p.qubo().n();
+        let mut x = vec![0u8; nv];
+        let mut pinned = vec![false; nv];
+        for &(i, v) in p.pins() {
+            pinned[i] = true;
+            x[i] = if v > 0 { 1 } else { 0 };
+        }
+        let free: Vec<usize> = (0..nv).filter(|&i| !pinned[i]).collect();
+        // bits-4 targets have 10 free wires, bits-5 targets 19 — keep the
+        // sweep under 2^20 so debug-mode tier-1 stays fast
+        assert!(free.len() <= 20, "instance too large for exhaustion ({} free)", free.len());
+        for mask in 0u32..1 << free.len() {
+            for (bit, &i) in free.iter().enumerate() {
+                x[i] = ((mask >> bit) & 1) as u8;
+            }
+            visit(&x);
+        }
+    }
+
+    /// Exhaustive ground truth over small targets: a zero-violation
+    /// assignment exists, every one of them multiplies out to `n` with
+    /// both factors non-trivial, and every non-factorization costs ≥ 1
+    /// (the gate-penalty gap).
+    #[test]
+    fn exhaustive_small_targets_ground_truth() {
+        for n in [9u64, 15, 25] {
+            let p = FactorProblem::new(n);
+            let mut zero_count = 0usize;
+            for_each_clamped_assignment(&p, |x| {
+                let v = p.violations(x);
+                if v == 0 {
+                    let (a, b) = p.factors_of(x);
+                    assert_eq!(a * b, n, "zero-violation witness must factor {n}");
+                    assert!(a > 1 && b > 1, "trivial split {a}×{b} leaked for {n}");
+                    zero_count += 1;
+                } else {
+                    assert!(v >= 1, "n={n}: negative penalty {v}");
+                }
+            });
+            assert!(zero_count > 0, "n={n}: no zero-energy factorization state");
+        }
+    }
+
+    /// A prime target has **no** zero-violation state under the clamp —
+    /// the annealer can only report an infeasible best effort.
+    #[test]
+    fn exhaustive_prime_target_has_no_ground_state() {
+        for n in [11u64, 13, 17] {
+            let p = FactorProblem::new(n);
+            for_each_clamped_assignment(&p, |x| {
+                assert!(p.violations(x) >= 1, "prime {n} produced a factorization state");
+            });
+        }
+    }
+
+    /// The QUBO↔Ising map is exact on the factor encoding: for every
+    /// clamped assignment the Ising energy maps back to the violation
+    /// count, and `feasible`/`decode` agree with it.
+    #[test]
+    fn ising_energy_maps_to_violations_exhaustively() {
+        let p = FactorProblem::new(9);
+        let model = p.to_ising();
+        for_each_clamped_assignment(&p, |x| {
+            let sigma: Vec<i32> = x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+            let v = p.violations(x);
+            assert_eq!(p.objective_from_energy(model.energy(&sigma)), v);
+            assert_eq!(p.feasible(&sigma), v == 0);
+            match p.decode(&sigma) {
+                Solution::Factorization { a, b, n } => {
+                    assert_eq!(v, 0, "decode accepted a violated circuit");
+                    assert_eq!(a * b, n);
+                }
+                Solution::Infeasible { .. } => assert!(v != 0, "decode rejected a factorization"),
+                other => panic!("unexpected solution variant {other:?}"),
+            }
+        });
+    }
+
+    /// The clamp mask `to_ising` attaches matches the pin list: product
+    /// wires carry the bits of n, and both low factor bits are 1.
+    #[test]
+    fn clamp_mask_matches_pins() {
+        let p = FactorProblem::new(35);
+        let model = p.to_ising();
+        let pins = model.clamp_pins().expect("factor model must be clamped");
+        let mut expected = vec![0i8; p.num_vars()];
+        for &(i, v) in p.pins() {
+            expected[i] = v as i8;
+        }
+        assert_eq!(pins, &expected[..]);
+        let (na, nb) = p.factor_bits();
+        assert_eq!(expected[0], 1, "a_0 pinned odd");
+        assert_eq!(expected[na], 1, "b_0 pinned odd");
+        assert_eq!((na, nb), (3, 4), "35 is 6 bits wide → 3+4 factor registers");
+    }
+
+    /// Width rule: the registers always exclude the trivial 1×n split.
+    #[test]
+    fn factor_widths_exclude_trivial_split() {
+        for n in [9u64, 15, 35, 143, 899, 3127] {
+            let p = FactorProblem::new(n);
+            let (na, nb) = p.factor_bits();
+            let bits = 64 - n.leading_zeros() as usize;
+            assert_eq!(na + nb, bits + 1, "n={n}");
+            // neither register can hold n itself while the other holds 1
+            assert!(((1u64 << nb) - 1) < n, "n={n}: b register fits n — 1×n reachable");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "odd")]
+    fn even_target_rejected() {
+        FactorProblem::new(10);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn tiny_target_rejected() {
+        FactorProblem::new(7);
+    }
+}
+
+mod maxsat_tests {
+    use super::*;
+    use crate::api::{Problem, Sense, Solution};
+    use maxsat::{Clause, MaxSatProblem, MAX_CLAUSE_WEIGHT};
+
+    /// Enumerate every full assignment (decision + auxiliaries) of `p`,
+    /// tracking for each decision prefix the minimum penalized value
+    /// over all auxiliary completions.
+    fn min_penalized_by_decision(p: &MaxSatProblem) -> Vec<(Vec<u8>, i64)> {
+        let nv = p.decision_vars();
+        let total = p.num_vars();
+        let aux = total - nv;
+        assert!(total <= 20, "instance too large for exhaustion ({total} vars)");
+        let mut out = Vec::with_capacity(1 << nv);
+        for dmask in 0u32..1 << nv {
+            let mut x = vec![0u8; total];
+            for i in 0..nv {
+                x[i] = ((dmask >> i) & 1) as u8;
+            }
+            let mut best = i64::MAX;
+            for amask in 0u32..1 << aux {
+                for j in 0..aux {
+                    x[nv + j] = ((amask >> j) & 1) as u8;
+                }
+                best = best.min(p.penalized_value(&x));
+            }
+            out.push((x[..nv].to_vec(), best));
+        }
+        out
+    }
+
+    /// The exact-map property: for every decision assignment, the
+    /// minimum penalized QUBO value over auxiliary completions equals
+    /// the weighted unsatisfied-clause total — the encoding's objective
+    /// *is* weighted MAX-SAT, not an approximation of it.
+    #[test]
+    fn penalized_minimum_equals_unsat_weight_exhaustively() {
+        for seed in [1u64, 7, 42] {
+            let p = MaxSatProblem::random(5, 4, seed);
+            for (decision, best) in min_penalized_by_decision(&p) {
+                assert_eq!(
+                    best,
+                    p.unsat_weight(&decision),
+                    "seed {seed}: decision {decision:?}"
+                );
+            }
+        }
+    }
+
+    /// Handwritten mixed-arity instance (units, pairs, a 4-literal
+    /// clause): same exact-map property, plus the Ising round trip.
+    #[test]
+    fn mixed_arity_instance_exact_map_and_ising_round_trip() {
+        let p = MaxSatProblem::new(
+            4,
+            vec![
+                Clause { weight: 3, lits: vec![1] },
+                Clause { weight: 2, lits: vec![-2, 3] },
+                Clause { weight: 5, lits: vec![1, -2, 3, -4] },
+                Clause { weight: 1, lits: vec![-1, -3] },
+            ],
+            "mixed",
+        );
+        let model = p.to_ising();
+        for (decision, best) in min_penalized_by_decision(&p) {
+            assert_eq!(best, p.unsat_weight(&decision), "decision {decision:?}");
+        }
+        // full-assignment round trip: energy ↦ satisfied weight
+        let total = p.num_vars();
+        for mask in 0u32..1 << total {
+            let x: Vec<u8> = (0..total).map(|i| ((mask >> i) & 1) as u8).collect();
+            let sigma: Vec<i32> = x.iter().map(|&b| if b == 1 { 1 } else { -1 }).collect();
+            let pen = p.penalized_value(&x);
+            assert_eq!(
+                p.objective_from_energy(model.energy(&sigma)),
+                p.total_weight() - pen,
+                "mask {mask:b}"
+            );
+            let consistent = pen == p.unsat_weight(&x);
+            assert_eq!(p.feasible(&sigma), consistent, "mask {mask:b}");
+            match p.decode(&sigma) {
+                Solution::MaxSat { assignment, satisfied_weight, total_weight } => {
+                    assert!(consistent, "decode accepted an inconsistent auxiliary");
+                    assert_eq!(assignment.len(), p.decision_vars());
+                    assert_eq!(total_weight, p.total_weight());
+                    assert_eq!(satisfied_weight, total_weight - p.unsat_weight(&x));
+                }
+                Solution::Infeasible { .. } => {
+                    assert!(!consistent, "decode rejected a consistent assignment")
+                }
+                other => panic!("unexpected solution variant {other:?}"),
+            }
+        }
+    }
+
+    /// Duplicate and complementary literals in one clause fold exactly
+    /// (x² = x idempotence): a tautological clause is always satisfied.
+    #[test]
+    fn tautology_and_duplicate_literals_fold_exactly() {
+        let p = MaxSatProblem::new(
+            2,
+            vec![
+                Clause { weight: 4, lits: vec![1, -1] }, // tautology
+                Clause { weight: 3, lits: vec![2, 2] },  // duplicate
+            ],
+            "degenerate",
+        );
+        for mask in 0u32..1 << p.num_vars() {
+            let x: Vec<u8> = (0..p.num_vars()).map(|i| ((mask >> i) & 1) as u8).collect();
+            assert_eq!(p.penalized_value(&x), p.unsat_weight(&x), "mask {mask:b}");
+        }
+    }
+
+    #[test]
+    fn wcnf_parser_round_trip() {
+        let text = "c toy wcnf\np wcnf 3 4 100\n2 1 -2 0\n1 2 3 0\n100 -1 0\n3 1 2 -3 0\n";
+        let p = MaxSatProblem::from_wcnf(text, "toy").expect("parses");
+        assert_eq!(p.decision_vars(), 3);
+        assert_eq!(p.clauses().len(), 4);
+        // the hard clause (weight = top) clamps to MAX_CLAUSE_WEIGHT
+        assert_eq!(p.clauses()[2].weight, MAX_CLAUSE_WEIGHT);
+        assert_eq!(p.clauses()[0], Clause { weight: 2, lits: vec![1, -2] });
+        // plain CNF: every weight 1
+        let cnf = MaxSatProblem::from_wcnf("p cnf 2 2\n1 2 0\n-1 -2 0\n", "cnf").expect("parses");
+        assert!(cnf.clauses().iter().all(|c| c.weight == 1));
+        // malformed inputs are errors, not panics
+        assert!(MaxSatProblem::from_wcnf("p wcnf 2 1\n2 0\n", "bad").is_err());
+        assert!(MaxSatProblem::from_wcnf("1 2 0\n", "bad").is_err());
+    }
+
+    /// MAX-SAT is a maximization problem with the satisfied weight as
+    /// its objective — the sense drives tuner/report comparisons.
+    #[test]
+    fn sense_and_kind() {
+        let p = MaxSatProblem::random(4, 3, 5);
+        assert_eq!(p.kind().sense(), Sense::Maximize);
+        assert!(p.label().starts_with("maxsat-v4c3"));
+    }
+}

@@ -93,12 +93,44 @@ pub(crate) fn solve_fingerprint(
             mx.word((c as u64) << 32 | (v as u32 as u64));
         }
     }
+    // the clamp mask is part of the instance: the same couplings with
+    // different pins anneal to different replies (DESIGN.md §11.1)
+    match model.clamp_pins() {
+        None => mx.word(0),
+        Some(pins) => {
+            mx.word(1);
+            let bytes: Vec<u8> = pins.iter().map(|&p| p as u8).collect();
+            mx.bytes(&bytes);
+        }
+    }
     // execution policy that shapes the reply
     mx.word(req.steps as u64);
     mx.word(req.seed as u64);
     mx.word(req.runs as u64);
     mx.word(req.replicas.map(|r| r as u64 + 1).unwrap_or(0));
     mx.word(req.early_stop.is_some() as u64);
+    // warm starts change the initial state and the schedule phase, so a
+    // warm-started repeat must not hit the cold entry (§11.3)
+    mx.word(req.schedule_offset as u64);
+    match &req.init_sigma {
+        None => mx.word(0),
+        Some(init) => {
+            mx.word(1);
+            mx.word(init.len() as u64);
+            // σ ∈ {−1,+1}: pack 1 bit per spin through the word lane
+            let mut acc = 0u64;
+            for (i, &s) in init.iter().enumerate() {
+                acc = acc << 1 | (s > 0) as u64;
+                if i % 64 == 63 {
+                    mx.word(acc);
+                    acc = 0;
+                }
+            }
+            if init.len() % 64 != 0 {
+                mx.word(acc);
+            }
+        }
+    }
     match req.backend {
         Some(b) => mx.bytes(b.name().as_bytes()),
         None => mx.bytes(policy.name().as_bytes()),
@@ -152,6 +184,13 @@ impl ResultCache {
                 None
             }
         }
+    }
+
+    /// Drop a fingerprint's entry (the `resolve` verb invalidates the
+    /// patched job's original reply — its couplings changed, so the
+    /// cached line no longer describes any reachable solve).
+    pub fn remove(&mut self, key: Fingerprint) -> bool {
+        self.map.remove(&key).is_some()
     }
 
     /// Insert a computed reply, evicting the least-recently-used entry
@@ -209,5 +248,55 @@ mod tests {
         assert!(!c.enabled());
         assert_eq!(c.len(), 0);
         assert_eq!(c.get(fp(1)), None);
+    }
+
+    #[test]
+    fn remove_drops_entry() {
+        let mut c = ResultCache::new(4);
+        c.insert(fp(1), "one".into());
+        assert!(c.remove(fp(1)));
+        assert!(!c.remove(fp(1)));
+        assert_eq!(c.get(fp(1)), None);
+    }
+
+    fn toy_request() -> SolveRequest {
+        use crate::problems::MaxCut;
+        use std::sync::Arc;
+        let g = crate::graph::torus_2d(2, 40, true, 5);
+        SolveRequest::new(Arc::new(MaxCut::new(g, MaxCut::GSET_J_SCALE))).steps(40)
+    }
+
+    #[test]
+    fn clamp_mask_changes_fingerprint() {
+        use crate::graph::ClampMask;
+        let req = toy_request();
+        let model = req.problem.to_ising();
+        let pinned = model.clone().with_clamp(ClampMask::from_pairs(model.n(), &[(3, 1)]));
+        let other = model.clone().with_clamp(ClampMask::from_pairs(model.n(), &[(3, -1)]));
+        let base = solve_fingerprint(&req, &model, RoutingPolicy::AllSoftware);
+        let a = solve_fingerprint(&req, &pinned, RoutingPolicy::AllSoftware);
+        let b = solve_fingerprint(&req, &other, RoutingPolicy::AllSoftware);
+        assert_ne!(base, a, "pinned model must not collide with the free model");
+        assert_ne!(a, b, "opposite pin values must not collide");
+    }
+
+    #[test]
+    fn warm_start_changes_fingerprint() {
+        use std::sync::Arc;
+        let req = toy_request();
+        let model = req.problem.to_ising();
+        let cold = solve_fingerprint(&req, &model, RoutingPolicy::AllSoftware);
+        let sigma = Arc::new(vec![1i32; model.n()]);
+        let warm = req.clone().init_sigma(Arc::clone(&sigma), 40);
+        let w = solve_fingerprint(&warm, &model, RoutingPolicy::AllSoftware);
+        assert_ne!(cold, w, "warm repeat must not hit the cold entry");
+        // a different warm σ is a different solve
+        let mut flipped = (*sigma).clone();
+        flipped[0] = -1;
+        let warm2 = req.clone().init_sigma(Arc::new(flipped), 40);
+        assert_ne!(w, solve_fingerprint(&warm2, &model, RoutingPolicy::AllSoftware));
+        // and so is a different schedule offset with the same σ
+        let warm3 = req.init_sigma(sigma, 80);
+        assert_ne!(w, solve_fingerprint(&warm3, &model, RoutingPolicy::AllSoftware));
     }
 }

@@ -13,6 +13,7 @@
 //! would stall every session behind one large instance.
 
 use super::cache::{cacheable, solve_fingerprint, ResultCache};
+use super::warm::{WarmEntry, WarmTable};
 use crate::coordinator::server::{solve_reply, tune_reply, ParsedSolve};
 use crate::coordinator::{lock_clean, Metrics, Router, RoutingPolicy, TuneJob, WorkerPool};
 use crate::telemetry::{ProgressEvent, RunControl};
@@ -49,6 +50,7 @@ impl ExecPool {
         policy: RoutingPolicy,
         metrics: Arc<Metrics>,
         cache: Arc<Mutex<ResultCache>>,
+        warm: Arc<Mutex<WarmTable>>,
         done: mpsc::Sender<LoopMsg>,
         wake: WakeHandle,
     ) -> Self {
@@ -59,6 +61,7 @@ impl ExecPool {
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
             let cache = Arc::clone(&cache);
+            let warm = Arc::clone(&warm);
             let done = done.clone();
             let wake = wake.clone();
             handles.push(std::thread::spawn(move || {
@@ -75,7 +78,7 @@ impl ExecPool {
                         pool = make_pool();
                     }
                     let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_one(&pool, &metrics, &cache, policy, work)
+                        run_one(&pool, &metrics, &cache, &warm, policy, job, work)
                     }))
                     .unwrap_or_else(|_| "err internal execution panic".to_string());
                     if done.send(LoopMsg::Done { job, reply }).is_err() {
@@ -111,7 +114,9 @@ fn run_one(
     pool: &WorkerPool,
     metrics: &Metrics,
     cache: &Mutex<ResultCache>,
+    warm: &Mutex<WarmTable>,
     policy: RoutingPolicy,
+    job: u64,
     work: ExecWork,
 ) -> String {
     match work {
@@ -135,19 +140,35 @@ fn run_one(
                 }
                 metrics.serve.cache_misses.fetch_add(1, Ordering::Relaxed);
             }
+            // the warm template is the request as admitted — control is
+            // attached afterwards so the template never carries a
+            // spent cancellation flag
+            let template = parsed.req.clone();
             parsed.req.control = Some(control.clone());
+            let mut warm_entry: Option<WarmEntry> = None;
             let reply = match parsed.req.run_on(pool) {
                 Ok(report) => {
+                    warm_entry = Some(WarmEntry {
+                        req: template,
+                        runs: parsed.runs,
+                        best_sigma: Arc::new(report.best_sigma.clone()),
+                        steps: report.steps,
+                        fingerprint: key,
+                    });
                     let table = parsed.span.then(|| metrics.timings.render());
                     solve_reply(&report, parsed.runs, table.as_deref())
                 }
                 Err(e) => format!("err {e}"),
             };
             // a cancelled run is a valid *partial* result — never cache
-            // it as the instance's answer
-            if let Some(k) = key {
-                if reply.starts_with("ok") && !control.cancelled() {
+            // it as the instance's answer, and never let `resolve`
+            // continue from it as if the full budget ran
+            if reply.starts_with("ok") && !control.cancelled() {
+                if let Some(k) = key {
                     lock_clean(cache).insert(k, reply.clone());
+                }
+                if let Some(entry) = warm_entry.take() {
+                    lock_clean(warm).insert(job, entry);
                 }
             }
             reply

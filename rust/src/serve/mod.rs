@@ -18,12 +18,21 @@
 //! * **Result cache** ([`cache`]) — canonical-instance-fingerprint →
 //!   verbatim-reply LRU; a repeat solve answers bit-identically with
 //!   zero spin updates recomputed.
+//! * **Warm table** ([`warm`]) — every computed solve leaves its request
+//!   template, best σ and step budget behind (bounded FIFO), so later
+//!   requests can warm-start from it or `resolve` it incrementally.
 //!
 //! Protocol additions over the sync verbs (see `coordinator::server`
 //! for the shared grammar; DESIGN.md §6.3 for the full reference):
 //!
 //! ```text
 //! submit <solve keys…>      — async solve; replies `ok submitted job=J`
+//! solve/submit … warm=J     — warm-start from job J's best σ, resuming
+//!                             its annealing schedule (DESIGN.md §11.3)
+//! resolve job=J patch=i:j:w[,…] [steps=N]
+//!                           — re-solve job J with patched couplings,
+//!                             warm-started from its best σ; invalidates
+//!                             J's result-cache line
 //! poll job=J                — `ok job=J state=queued|running|cancelled`
 //!                             or `ok job=J state=done lines=K` + the
 //!                             job's verbatim reply as the framed body
@@ -45,12 +54,14 @@ mod exec;
 mod poll;
 mod sched;
 mod session;
+mod warm;
 
 pub use session::MAX_LINE;
 
 use crate::api::spec::{ensure_consumed, take, take_opt};
-use crate::coordinator::server::{frame, kv_map, parse_solve, parse_tune};
-use crate::coordinator::{Metrics, RoutingPolicy};
+use crate::api::PatchedProblem;
+use crate::coordinator::server::{frame, kv_map, parse_solve, parse_tune, ParsedSolve};
+use crate::coordinator::{lock_clean, Metrics, RoutingPolicy};
 use crate::telemetry::{ProgressEvent, ProgressSink, RunControl};
 use crate::Result;
 use anyhow::anyhow;
@@ -64,9 +75,10 @@ use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
+use warm::{WarmTable, WARM_RETENTION};
 
 const SERVE_VERBS: &str =
-    "solve, tune, submit, poll, cancel, subscribe, metrics, health, ping, quit";
+    "solve, tune, submit, resolve, poll, cancel, subscribe, metrics, health, ping, quit";
 
 /// Poll timeout when nothing is pending — the waker interrupts it for
 /// completions and progress, so this only bounds shutdown latency.
@@ -182,6 +194,7 @@ impl Server {
         // clients — keep the prefix stable
         eprintln!("ssqa coordinator listening on {local}");
         let cache = Arc::new(Mutex::new(ResultCache::new(cfg.cache_entries)));
+        let warm = Arc::new(Mutex::new(WarmTable::new(WARM_RETENTION)));
         let (loop_tx, loop_rx) = mpsc::channel::<LoopMsg>();
         let (prog_tx, prog_rx) = mpsc::channel::<ProgressEvent>();
         {
@@ -204,6 +217,7 @@ impl Server {
             cfg.policy,
             Arc::clone(&metrics),
             Arc::clone(&cache),
+            Arc::clone(&warm),
             loop_tx.clone(),
             waker.handle(),
         );
@@ -308,7 +322,10 @@ impl Server {
                             ));
                         }
                         InLine::Line(line) => {
-                            handle_line(&line, s, &mut sched, &metrics, &cfg, &prog_tx, &exec);
+                            handle_line(
+                                &line, s, &mut sched, &metrics, &cfg, &prog_tx, &exec, &cache,
+                                &warm,
+                            );
                         }
                     }
                 }
@@ -379,6 +396,7 @@ fn accept_ready(
 
 /// Parse and act on one request line. Sync verbs leave the session
 /// blocked; everything else queues its reply immediately.
+#[allow(clippy::too_many_arguments)]
 fn handle_line(
     line: &str,
     session: &mut Session,
@@ -387,6 +405,8 @@ fn handle_line(
     cfg: &ServeConfig,
     prog_tx: &mpsc::Sender<ProgressEvent>,
     exec: &ExecPool,
+    cache: &Arc<Mutex<ResultCache>>,
+    warm: &Arc<Mutex<WarmTable>>,
 ) {
     let mut parts = line.split_whitespace();
     let verb = parts.next().unwrap_or("");
@@ -438,7 +458,23 @@ fn handle_line(
         }
         "solve" | "submit" => {
             let sync = verb == "solve";
-            match kv_map(parts).and_then(parse_solve) {
+            // warm= is a serve-layer key: resolve it against the warm
+            // table *before* the shared grammar sees the map, so the
+            // sync handler's grammar stays untouched
+            let parsed = kv_map(parts).and_then(|mut f| {
+                let warm_job: Option<u64> = take_opt(&mut f, "warm")?;
+                let mut parsed = parse_solve(f)?;
+                if let Some(w) = warm_job {
+                    let table = lock_clean(warm);
+                    let entry = table
+                        .get(w)
+                        .ok_or_else(|| anyhow!("unknown or expired warm job {w}"))?;
+                    parsed.req =
+                        parsed.req.init_sigma(Arc::clone(&entry.best_sigma), entry.steps);
+                }
+                Ok(parsed)
+            });
+            match parsed {
                 Err(e) => {
                     session.queue_reply(&format!("err {e}"));
                 }
@@ -482,6 +518,53 @@ fn handle_line(
                 }
             }
         },
+        "resolve" => {
+            let parsed = (|| -> Result<ParsedSolve> {
+                let mut f = kv_map(parts)?;
+                let job: u64 = take_opt(&mut f, "job")?
+                    .ok_or_else(|| anyhow!("resolve requires job=<id>"))?;
+                let patch: String = take_opt(&mut f, "patch")?
+                    .ok_or_else(|| anyhow!("resolve requires patch=i:j:w[,i:j:w…]"))?;
+                let steps: Option<usize> = take_opt(&mut f, "steps")?;
+                ensure_consumed(&f, "resolve")?;
+                let entry = lock_clean(warm)
+                    .get(job)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("unknown or expired warm job {job}"))?;
+                let patches = parse_patches(&patch, entry.req.problem.num_vars())?;
+                // the patched couplings make the cached cold reply
+                // unreachable — drop it before the re-solve lands
+                if let Some(fp) = entry.fingerprint {
+                    lock_clean(cache).remove(fp);
+                }
+                let mut req = entry
+                    .req
+                    .init_sigma(Arc::clone(&entry.best_sigma), entry.steps);
+                req.problem = Arc::new(PatchedProblem::new(Arc::clone(&req.problem), patches));
+                if let Some(s) = steps {
+                    req = req.steps(s);
+                }
+                // the re-solve is a new solve, not a replay of the old id
+                req.solve_id = None;
+                Ok(ParsedSolve { req, span: false, runs: entry.runs })
+            })();
+            match parsed {
+                Err(e) => {
+                    session.queue_reply(&format!("err {e}"));
+                }
+                Ok(parsed) => {
+                    let id = sched.reserve_id();
+                    let control = RunControl::new();
+                    let work = ExecWork::Solve { parsed, control: control.clone() };
+                    if sched.admit(id, session.id, true, work, Some(control)) {
+                        session.blocked_on = Some(id);
+                    } else {
+                        session
+                            .queue_reply(&format!("err busy queue_depth={}", cfg.queue_depth));
+                    }
+                }
+            }
+        }
         "poll" => match job_arg(parts, "poll") {
             Err(e) => {
                 session.queue_reply(&format!("err {e}"));
@@ -553,6 +636,31 @@ fn handle_line(
             ));
         }
     }
+}
+
+/// Parse a `resolve` coupling-patch spec: `i:j:w[,i:j:w…]`, validated
+/// against the problem's variable count so a malformed patch is an
+/// `err` reply rather than a backend panic.
+fn parse_patches(spec: &str, n: usize) -> Result<Vec<(u32, u32, i32)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let mut it = part.split(':');
+        let (Some(i), Some(j), Some(w), None) = (it.next(), it.next(), it.next(), it.next())
+        else {
+            return Err(anyhow!("bad patch {part:?} (want i:j:w)"));
+        };
+        let i: u32 = i.parse().map_err(|_| anyhow!("bad patch index {i:?}"))?;
+        let j: u32 = j.parse().map_err(|_| anyhow!("bad patch index {j:?}"))?;
+        let w: i32 = w.parse().map_err(|_| anyhow!("bad patch weight {w:?}"))?;
+        if i == j {
+            return Err(anyhow!("patch {i}:{j} couples a spin to itself"));
+        }
+        if i as usize >= n || j as usize >= n {
+            return Err(anyhow!("patch index out of range (problem has {n} variables)"));
+        }
+        out.push((i, j, w));
+    }
+    Ok(out)
 }
 
 fn job_arg<'a>(parts: impl Iterator<Item = &'a str>, verb: &str) -> Result<u64> {

@@ -1,0 +1,119 @@
+//! Warm-start table: completed-job state the `resolve` verb and the
+//! `warm=` solve key re-solve from (DESIGN.md §11.3).
+//!
+//! Every *computed* (non-cache-hit, non-cancelled) solve deposits its
+//! request, best σ and executed step count here, keyed by job id and
+//! bounded FIFO at [`WARM_RETENTION`] entries — the same retention
+//! philosophy as the scheduler's done-job table. Cache hits deposit
+//! nothing: a verbatim-replayed reply carries no configuration to
+//! resume from, so only jobs that actually annealed are resolvable.
+
+use super::cache::Fingerprint;
+use crate::api::SolveRequest;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+/// Completed warm-start entries retained (FIFO eviction).
+pub(crate) const WARM_RETENTION: usize = 256;
+
+/// What a completed solve leaves behind for incremental re-solving.
+#[derive(Clone)]
+pub(crate) struct WarmEntry {
+    /// The executed request, control handle stripped — the template a
+    /// `resolve` clones, patches and warm-starts.
+    pub req: SolveRequest,
+    /// Requested batch width (reply shaping, like `ParsedSolve::runs`).
+    pub runs: usize,
+    /// Best ±1 configuration over the job's runs.
+    pub best_sigma: Arc<Vec<i32>>,
+    /// Steps the job budgeted — the re-solve's schedule resume offset.
+    pub steps: usize,
+    /// The job's result-cache line, when it was cacheable: `resolve`
+    /// invalidates it because the patched couplings make the cached
+    /// reply unreachable.
+    pub fingerprint: Option<Fingerprint>,
+}
+
+/// Bounded job-id → [`WarmEntry`] map (FIFO eviction at capacity).
+pub(crate) struct WarmTable {
+    cap: usize,
+    map: HashMap<u64, WarmEntry>,
+    order: VecDeque<u64>,
+}
+
+impl WarmTable {
+    pub fn new(cap: usize) -> Self {
+        Self { cap, map: HashMap::new(), order: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Record a completed job, evicting the oldest entry at capacity.
+    pub fn insert(&mut self, job: u64, entry: WarmEntry) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.map.insert(job, entry).is_none() {
+            self.order.push_back(job);
+            if self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Look up a job's warm state (kept — one job can seed many
+    /// re-solves).
+    pub fn get(&self, job: u64) -> Option<&WarmEntry> {
+        self.map.get(&job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::MaxCut;
+    use crate::graph::GraphSpec;
+
+    fn entry(tag: usize) -> WarmEntry {
+        WarmEntry {
+            req: SolveRequest::new(Arc::new(MaxCut::named(GraphSpec::G11))),
+            runs: 1,
+            best_sigma: Arc::new(vec![1; tag]),
+            steps: tag,
+            fingerprint: None,
+        }
+    }
+
+    #[test]
+    fn fifo_eviction_at_capacity() {
+        let mut t = WarmTable::new(2);
+        t.insert(1, entry(1));
+        t.insert(2, entry(2));
+        t.insert(3, entry(3));
+        assert_eq!(t.len(), 2);
+        assert!(t.get(1).is_none(), "oldest entry evicted");
+        assert_eq!(t.get(2).unwrap().steps, 2);
+        assert_eq!(t.get(3).unwrap().steps, 3);
+    }
+
+    #[test]
+    fn reinsert_same_job_does_not_double_count() {
+        let mut t = WarmTable::new(2);
+        t.insert(1, entry(1));
+        t.insert(1, entry(9));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(1).unwrap().steps, 9, "latest entry wins");
+    }
+
+    #[test]
+    fn zero_capacity_disables_table() {
+        let mut t = WarmTable::new(0);
+        t.insert(1, entry(1));
+        assert_eq!(t.len(), 0);
+        assert!(t.get(1).is_none());
+    }
+}

@@ -171,3 +171,130 @@ fn early_stop_reduces_spin_updates() {
         assert!(monitored.spin_updates < full.spin_updates);
     }
 }
+
+#[test]
+fn factor_end_to_end() {
+    use ssqa::problems::FactorProblem;
+    let p = Arc::new(FactorProblem::new(35));
+    let pool = pool();
+    // bound the stochastic ground-state search over a handful of seeds
+    let mut solved = None;
+    for seed in 1..=5 {
+        let report =
+            SolveRequest::new(p.clone()).steps(4000).seed(seed).runs(4).run_on(&pool).unwrap();
+        check_report(&report, ProblemKind::Factor);
+        if report.feasible {
+            solved = Some(report);
+            break;
+        }
+    }
+    let report = solved.expect("factor 35 should reach a factorization within 5 seeds");
+    assert_eq!(report.best_objective, 0, "a factorization has zero gate violations");
+    let Solution::Factorization { a, b, n } = report.solution else {
+        panic!("feasible factor decode must be a Factorization")
+    };
+    assert_eq!(n, 35);
+    assert_eq!(a * b, 35, "clamped product wires force a·b = n");
+    assert!(a > 1 && b > 1, "trivial split {a}×{b} escaped the register widths");
+}
+
+#[test]
+fn maxsat_end_to_end() {
+    use ssqa::problems::MaxSatProblem;
+    let p = Arc::new(MaxSatProblem::random(12, 30, 3));
+    // brute-force optimum over the 2^12 decision assignments (the
+    // auxiliary-free ground truth)
+    let optimum = (0u32..1 << 12)
+        .map(|m| {
+            let x: Vec<u8> = (0..12).map(|i| ((m >> i) & 1) as u8).collect();
+            p.total_weight() - p.unsat_weight(&x)
+        })
+        .max()
+        .unwrap();
+    let pool = pool();
+    let mut feasible = None;
+    for seed in [5u32, 6, 7] {
+        let report =
+            SolveRequest::new(p.clone()).steps(600).seed(seed).runs(4).run_on(&pool).unwrap();
+        check_report(&report, ProblemKind::MaxSat);
+        assert!(report.best_objective <= optimum, "cannot beat the true optimum");
+        if report.feasible {
+            feasible = Some(report);
+            break;
+        }
+    }
+    // the Rosenberg penalty gap makes annealed minima consistent — a
+    // feasible decode should land within a few seeds
+    let report = feasible.expect("maxsat decode should be feasible within 3 seeds");
+    let Solution::MaxSat { ref assignment, satisfied_weight, total_weight } = report.solution
+    else {
+        panic!("feasible maxsat decode must be a MaxSat solution")
+    };
+    assert_eq!(total_weight, p.total_weight());
+    assert_eq!(assignment.len(), p.decision_vars());
+    assert_eq!(
+        satisfied_weight,
+        total_weight - p.unsat_weight(assignment),
+        "decoded assignment re-scores to the reported weight"
+    );
+}
+
+/// First traced step whose instantaneous best replica energy is at or
+/// below `target` (the trace samples every `stride` steps).
+fn first_step_at_or_below(report: &ssqa::api::SolveReport, target: i64) -> Option<usize> {
+    report
+        .trace
+        .as_ref()?
+        .runs
+        .iter()
+        .flat_map(|r| r.samples.iter())
+        .filter(|s| s.best_energy <= target)
+        .map(|s| s.step)
+        .min()
+}
+
+/// DESIGN.md §11.3 acceptance: a warm-started re-solve on G14 revisits
+/// the cold run's best traced energy in strictly fewer steps — the warm
+/// σ plus the resumed schedule skip the random-init burn-in entirely.
+#[test]
+fn warm_started_resolve_reaches_cold_best_in_fewer_steps() {
+    use ssqa::graph::GraphSpec;
+    use ssqa::telemetry::TraceConfig;
+    let p = Arc::new(MaxCut::named(GraphSpec::G14));
+    let pool = pool();
+    let cold = SolveRequest::new(p.clone())
+        .steps(1200)
+        .seed(3)
+        .trace(TraceConfig::with_stride(8))
+        .run_on(&pool)
+        .unwrap();
+    // target = the best energy the cold *trace* visited, so both reach
+    // times are measured against the same sampled signal
+    let e_star = cold
+        .trace
+        .as_ref()
+        .expect("cold trace recorded")
+        .runs
+        .iter()
+        .flat_map(|r| r.samples.iter())
+        .map(|s| s.best_energy)
+        .min()
+        .expect("cold trace has samples");
+    let cold_reach =
+        first_step_at_or_below(&cold, e_star).expect("the cold trace visits its own minimum");
+    assert!(cold_reach > 0, "a 1200-step G14 anneal cannot start at its optimum");
+    let warm = SolveRequest::new(p)
+        .steps(300)
+        .seed(11)
+        .trace(TraceConfig::with_stride(8))
+        .init_from(&cold)
+        .run_on(&pool)
+        .unwrap();
+    assert_eq!(warm.steps, 300, "warm budget is its own, not the prior's");
+    let warm_reach = first_step_at_or_below(&warm, e_star)
+        .expect("the warm run revisits the cold best energy");
+    assert!(
+        warm_reach < cold_reach,
+        "warm start must reach the cold best faster (warm {warm_reach} vs cold {cold_reach})"
+    );
+}

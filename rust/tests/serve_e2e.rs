@@ -317,6 +317,117 @@ fn session_cap_refuses_excess_connections() {
     join.join().unwrap().unwrap();
 }
 
+/// Poll `job` to completion and return the framed reply body verbatim
+/// (the same bytes a sync `solve` of the job's request would answer).
+fn poll_until_done(c: &mut Client, job: u64) -> String {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let p = c.roundtrip(&format!("poll job={job}"));
+        if p.contains("state=done") {
+            let (head, body) = p.split_once('\n').expect("done poll is framed");
+            assert!(head.contains("lines="), "{head}");
+            return body.to_string();
+        }
+        assert!(Instant::now() < deadline, "job {job} never finished: {p}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn warm_start_has_its_own_cache_fingerprint() {
+    let (handle, join) = spawn_server(small_cfg(1));
+    let mut c = Client::connect(handle.addr());
+    // a *computed* solve leaves its warm entry behind (cache hits don't)
+    let r = c.roundtrip(&format!("submit {SOLVE}"));
+    assert!(r.starts_with("ok submitted job="), "{r}");
+    let job: u64 = r.rsplit("job=").next().unwrap().parse().unwrap();
+    let body = poll_until_done(&mut c, job);
+    assert!(body.starts_with("ok id="), "{body}");
+    // the cold fingerprint is cached: a sync repeat replays it verbatim
+    let cold = c.roundtrip(SOLVE);
+    assert_eq!(cold, body, "repeat solve must replay the computed reply");
+    // warm=J folds the prior best σ + schedule offset into the request —
+    // a *different* fingerprint. If the cache key ignored the warm
+    // fields this would replay `cold` byte-for-byte.
+    let warm1 = c.roundtrip(&format!("{SOLVE} warm={job}"));
+    assert!(warm1.starts_with("ok id="), "{warm1}");
+    assert_ne!(warm1, cold, "warm start must not be served the cold cache line");
+    // …while the warm request is itself deterministic and cacheable
+    let warm2 = c.roundtrip(&format!("{SOLVE} warm={job}"));
+    assert_eq!(warm2, warm1, "repeat warm solve must hit its own cache line");
+    // warm-started async submit works end to end too
+    let r = c.roundtrip(&format!("submit {SOLVE} warm={job}"));
+    assert!(r.starts_with("ok submitted job="), "{r}");
+    let wjob: u64 = r.rsplit("job=").next().unwrap().parse().unwrap();
+    assert!(poll_until_done(&mut c, wjob).starts_with("ok id="), "warm submit completes");
+    // err paths: unknown warm job; σ-length mismatch against another model
+    let e = c.roundtrip(&format!("{SOLVE} warm=999999"));
+    assert!(e.starts_with("err ") && e.contains("warm job"), "{e}");
+    let e = c.roundtrip(&format!("solve problem=qubo n=16 steps=5 seed=3 warm={job}"));
+    assert!(e.starts_with("err ") && e.contains("init_sigma"), "{e}");
+    handle.stop();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn resolve_patches_couplings_and_invalidates_the_cache() {
+    let (handle, join) = spawn_server(small_cfg(1));
+    let mut c = Client::connect(handle.addr());
+    let r = c.roundtrip(&format!("submit {SOLVE}"));
+    assert!(r.starts_with("ok submitted job="), "{r}");
+    let job: u64 = r.rsplit("job=").next().unwrap().parse().unwrap();
+    let body = poll_until_done(&mut c, job);
+    let cold = c.roundtrip(SOLVE);
+    assert_eq!(cold, body, "cold line is cached before the resolve");
+    // resolve = warm-started re-anneal of job J's request with patched
+    // couplings; answered synchronously like solve
+    let rr = c.roundtrip(&format!("resolve job={job} patch=0:1:3,2:3:-2 steps=40"));
+    assert!(rr.starts_with("ok id="), "{rr}");
+    assert_ne!(rr, cold, "a patched model must not replay the cold reply");
+    // the resolve dropped J's cache line: repeating the original request
+    // recomputes (fresh outcome id ⇒ different bytes), never replays
+    let recold = c.roundtrip(SOLVE);
+    assert!(recold.starts_with("ok id="), "{recold}");
+    assert_ne!(recold, cold, "resolve must invalidate the stale cache line");
+    // err paths: unknown job, self-loop patch, malformed patch, missing keys
+    let e = c.roundtrip("resolve job=424242 patch=0:1:1");
+    assert!(e.starts_with("err ") && e.contains("warm job"), "{e}");
+    let e = c.roundtrip(&format!("resolve job={job} patch=0:0:1"));
+    assert!(e.starts_with("err "), "self-loop patch must be refused: {e}");
+    let e = c.roundtrip(&format!("resolve job={job} patch=nonsense"));
+    assert!(e.starts_with("err "), "{e}");
+    let e = c.roundtrip(&format!("resolve job={job}"));
+    assert!(e.starts_with("err ") && e.contains("patch"), "{e}");
+    let e = c.roundtrip("resolve patch=0:1:1");
+    assert!(e.starts_with("err ") && e.contains("job"), "{e}");
+    handle.stop();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn factorization_solves_over_the_wire() {
+    let (handle, join) = spawn_server(small_cfg(1));
+    let mut c = Client::connect(handle.addr());
+    // the clamped factor-35 instance: product wires pinned to 100011₂;
+    // objective = gate violations, 0 ⇔ a genuine factorization decoded.
+    // A handful of seeds bounds the stochastic search without flaking.
+    let mut solved = false;
+    for seed in 1..=5 {
+        let r = c.roundtrip(&format!(
+            "solve problem=factor n=35 steps=4000 seed={seed} replicas=16 runs=4"
+        ));
+        assert!(r.starts_with("ok id="), "{r}");
+        assert!(r.contains("problem=factor"), "{r}");
+        if r.contains(" objective=0 ") {
+            solved = true;
+            break;
+        }
+    }
+    assert!(solved, "factor 35 should reach a zero-violation (5×7) state within 5 seeds");
+    handle.stop();
+    join.join().unwrap().unwrap();
+}
+
 /// Soak smoke: the actual `ssqa serve` binary under concurrent scripted
 /// clients. Run explicitly (CI does): `cargo test --test serve_e2e -- --ignored`.
 #[test]

@@ -17,7 +17,7 @@ use ssqa::annealer::{
     SsqaState, StepObserver,
 };
 use ssqa::dynamics::{KernelScratch, StepKernel};
-use ssqa::graph::random_graph;
+use ssqa::graph::{random_graph, ClampMask, IsingModel};
 use ssqa::hw::{DelayKind, HwConfig, HwEngine};
 use ssqa::problems::maxcut;
 use ssqa::rng::Xorshift64Star;
@@ -217,6 +217,173 @@ fn prop_kernel_matches_hw_both_delay_kinds() {
                 assert_eq!(sw.replica_energies, hwr.replica_energies, "{ctx}");
                 assert_eq!(sw.best_sigma, hwr.best_sigma, "{ctx}");
                 assert_eq!(sw.best_energy, hwr.best_energy, "{ctx}");
+            }
+        }
+    }
+}
+
+/// The clamp-mask families the differential wall sweeps (DESIGN.md
+/// §11.1): none pinned (an explicit all-free mask, exercising the
+/// `with_clamp` normalization), everything pinned, everything pinned
+/// but one random free spin, and a random subset.
+fn arb_masks(rng: &mut Xorshift64Star, n: usize) -> Vec<(String, ClampMask)> {
+    let pin_val = |rng: &mut Xorshift64Star| if rng.next_below(2) == 0 { 1 } else { -1 };
+    let mut all = ClampMask::free(n);
+    for i in 0..n {
+        all.pin(i, pin_val(rng));
+    }
+    let mut one_free = ClampMask::free(n);
+    let free_spin = rng.next_below(n);
+    for i in 0..n {
+        if i != free_spin {
+            one_free.pin(i, pin_val(rng));
+        }
+    }
+    let mut subset = ClampMask::free(n);
+    for i in 0..n {
+        if rng.next_below(3) == 0 {
+            subset.pin(i, pin_val(rng));
+        }
+    }
+    vec![
+        ("none".into(), ClampMask::free(n)),
+        ("all".into(), all),
+        (format!("one-free@{free_spin}"), one_free),
+        ("subset".into(), subset),
+    ]
+}
+
+/// Every pinned spin holds its value in every replica of the final
+/// state — the clamp is an invariant, not an initial condition.
+fn assert_pins_hold(st: &SsqaState, model: &IsingModel, r: usize, ctx: &str) {
+    let Some(pins) = model.clamp_pins() else { return };
+    for (i, &p) in pins.iter().enumerate() {
+        if p == 0 {
+            continue;
+        }
+        for k in 0..r {
+            assert_eq!(st.sigma[i * r + k], p as i32, "{ctx}: pin lost at spin {i} replica {k}");
+            assert_eq!(
+                st.sigma_prev[i * r + k],
+                p as i32,
+                "{ctx}: prev-generation pin lost at spin {i} replica {k}"
+            );
+        }
+    }
+}
+
+/// Clamp-mask differential wall (DESIGN.md §11.1): for every mask
+/// family, every kernel and thread count produces a state bit-identical
+/// to the scalar reference under the same mask — σ, σ_prev, Is and the
+/// per-cell RNG streams. Additionally the RNG streams must equal the
+/// *unmasked* run's streams (skip-with-draw: a pinned cell still burns
+/// its draw every step), and pinned spins must hold their values in
+/// both σ generations.
+#[test]
+fn prop_kernel_bit_exact_under_clamp() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x66_0000 + case);
+        let n = 2 + rng.next_below(24);
+        let max_m = n * (n - 1) / 2;
+        let m = (1 + rng.next_below(3 * n)).min(max_m);
+        let g = random_graph(n, m, &[-2, -1, 1, 2], rng.next_u64() | 1);
+        let steps = 4 + rng.next_below(20);
+        let p = arb_params(&mut rng, steps);
+        let free_model = maxcut::ising_from_graph(&g, p.j_scale);
+        let seed = rng.next_u64() as u32;
+
+        let scalar = SsqaEngine::new(p, steps).with_kernel(StepKernel::Scalar);
+        let (free_state, _) = scalar.run(&free_model, steps, seed);
+        for (mask_name, mask) in arb_masks(&mut rng, n) {
+            let model = free_model.clone().with_clamp(mask);
+            let (ref_state, ref_res) = scalar.run(&model, steps, seed);
+            let base = format!("case {case} N={n} R={} mask={mask_name}", p.replicas);
+            assert_pins_hold(&ref_state, &model, p.replicas, &base);
+            // skip-with-draw: the mask must not perturb any noise stream
+            assert_eq!(
+                free_state.rng.states(),
+                ref_state.rng.states(),
+                "{base}: mask changed an RNG stream"
+            );
+            for kernel in variant_kernels() {
+                let eng = SsqaEngine::new(p, steps).with_kernel(kernel);
+                let (st, res) = eng.run(&model, steps, seed);
+                let ctx = format!("{base} kernel={}", kernel.name());
+                assert_states_eq(&ref_state, &st, p.replicas, &ctx);
+                assert_pins_hold(&st, &model, p.replicas, &ctx);
+                assert_eq!(ref_res.replica_energies, res.replica_energies, "{ctx}");
+                assert_eq!(ref_res.best_sigma, res.best_sigma, "{ctx}");
+                assert_eq!(ref_res.best_energy, res.best_energy, "{ctx}");
+            }
+        }
+    }
+}
+
+/// An all-clamped network is frozen: every kernel executes the full
+/// step budget without a single spin leaving its pinned value, and the
+/// energies equal the pinned configuration's energy exactly.
+#[test]
+fn prop_all_clamped_network_is_frozen() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x77_0000 + case);
+        let n = 1 + rng.next_below(20);
+        let m = (rng.next_below(2 * n) + 1).min(n * (n.max(2) - 1) / 2);
+        let g = random_graph(n, m, &[-2, 1], rng.next_u64() | 1);
+        let steps = 3 + rng.next_below(12);
+        let p = arb_params(&mut rng, steps);
+        let mut mask = ClampMask::free(n);
+        let pinned: Vec<i32> =
+            (0..n).map(|_| if rng.next_below(2) == 0 { 1 } else { -1 }).collect();
+        for (i, &v) in pinned.iter().enumerate() {
+            mask.pin(i, v);
+        }
+        let model = maxcut::ising_from_graph(&g, p.j_scale).with_clamp(mask);
+        let frozen_energy = model.energy(&pinned);
+        let seed = rng.next_u64() as u32;
+        for kernel in [StepKernel::Scalar].into_iter().chain(variant_kernels()) {
+            let eng = SsqaEngine::new(p, steps).with_kernel(kernel);
+            let (st, res) = eng.run(&model, steps, seed);
+            let ctx = format!("case {case} N={n} kernel={}", kernel.name());
+            assert_pins_hold(&st, &model, p.replicas, &ctx);
+            assert_eq!(res.best_sigma, pinned, "{ctx}: best σ is the pinned configuration");
+            assert_eq!(res.best_energy, frozen_energy, "{ctx}: frozen energy");
+            for (k, &e) in res.replica_energies.iter().enumerate() {
+                assert_eq!(e, frozen_energy, "{ctx}: replica {k} energy drifted");
+            }
+        }
+    }
+}
+
+/// The clamp contract holds across the software/hardware boundary too:
+/// under every mask family both delay architectures of the
+/// cycle-accurate hardware model agree with every software kernel.
+#[test]
+fn prop_kernel_matches_hw_under_clamp() {
+    for case in 0..CASES {
+        let mut rng = Xorshift64Star::new(0x88_0000 + case);
+        let n = 4 + rng.next_below(16);
+        let m = (1 + rng.next_below(3 * n)).min(n * (n - 1) / 2);
+        let g = random_graph(n, m, &[-2, -1, 1, 2], rng.next_u64() | 1);
+        let steps = 4 + rng.next_below(10);
+        let p = arb_params(&mut rng, steps);
+        let seed = rng.next_u64() as u32;
+        for (mask_name, mask) in arb_masks(&mut rng, n) {
+            let model = maxcut::ising_from_graph(&g, p.j_scale).with_clamp(mask);
+            for kernel in [StepKernel::Scalar].into_iter().chain(variant_kernels()) {
+                let eng = SsqaEngine::new(p, steps).with_kernel(kernel);
+                let (_, sw) = eng.run(&model, steps, seed);
+                for delay in [DelayKind::DualBram, DelayKind::ShiftReg] {
+                    let mut hw = HwEngine::new(HwConfig { delay, ..HwConfig::default() }, p);
+                    let hwr = hw.run(&model, steps, seed);
+                    let ctx = format!(
+                        "case {case} mask={mask_name} kernel={} {delay:?} R={}",
+                        kernel.name(),
+                        p.replicas
+                    );
+                    assert_eq!(sw.replica_energies, hwr.replica_energies, "{ctx}");
+                    assert_eq!(sw.best_sigma, hwr.best_sigma, "{ctx}");
+                    assert_eq!(sw.best_energy, hwr.best_energy, "{ctx}");
+                }
             }
         }
     }
