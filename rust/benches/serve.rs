@@ -84,7 +84,42 @@ fn main() {
         },
     );
 
-    // 3. cache replay: one miss primes it, then every round trip is a
+    // 3. shard scaling: the same concurrent-solve load against a
+    // 4-shard loop — what splitting sessions across event loops buys
+    // when parse/flush work (not the lanes) is the bottleneck
+    let shard_cfg = ServeConfig { workers: 2, shards: 4, ..ServeConfig::default() };
+    let (shard_handle, shard_join) =
+        Server::bind("127.0.0.1:0", shard_cfg).expect("bind sharded").spawn();
+    let shard_addr = shard_handle.addr();
+    let solve_load_4s = bench(
+        &format!("serve/loop 4 shards, {clients} clients × {rounds} solves {steps}st"),
+        3,
+        || {
+            let mut threads = Vec::new();
+            for c in 0..clients {
+                threads.push(std::thread::spawn(move || {
+                    let s = TcpStream::connect(shard_addr).expect("connect");
+                    let mut reader = BufReader::new(s.try_clone().expect("clone"));
+                    let mut writer = s;
+                    for i in 0..rounds {
+                        let req = format!(
+                            "solve graph=G11 steps={steps} replicas=4 seed={}",
+                            1 + c * 1000 + i
+                        );
+                        let rep = roundtrip(&mut reader, &mut writer, &req);
+                        assert!(rep.starts_with("ok id="), "{rep}");
+                    }
+                }));
+            }
+            for t in threads {
+                t.join().expect("bench client");
+            }
+        },
+    );
+    shard_handle.stop();
+    shard_join.join().expect("sharded server thread").expect("clean exit");
+
+    // 4. cache replay: one miss primes it, then every round trip is a
     // verbatim replay — measures the full hit path (socket + lookup)
     let (mut r, mut w) = connect();
     let prime = roundtrip(&mut r, &mut w, "solve graph=G11 steps=200 replicas=8 seed=7");
@@ -101,8 +136,9 @@ fn main() {
 
     let total_solves = (clients * rounds) as f64;
     println!(
-        "  → {:.0} solves/s under concurrent load; cached replay {:.1} µs/req vs ping floor {:.1} µs/req",
+        "  → {:.0} solves/s (1 shard) vs {:.0} solves/s (4 shards); cached replay {:.1} µs/req vs ping floor {:.1} µs/req",
         total_solves / solve_load.min.as_secs_f64(),
+        total_solves / solve_load_4s.min.as_secs_f64(),
         cached.min.as_secs_f64() * 1e6 / 100.0,
         ping.min.as_secs_f64() * 1e6 / 1000.0,
     );
@@ -114,9 +150,11 @@ fn main() {
     let record = format!(
         "{{\"unix_time\": {stamp}, \"bench\": \"serve/loop\", \"clients\": {clients}, \
          \"rounds\": {rounds}, \"steps\": {steps}, \"ping_us\": {:.2}, \
-         \"solves_per_s\": {:.1}, \"cached_replay_us\": {:.2}}}",
+         \"solves_per_s\": {:.1}, \"solves_per_s_4shards\": {:.1}, \
+         \"cached_replay_us\": {:.2}}}",
         ping.min.as_secs_f64() * 1e6 / 1000.0,
         total_solves / solve_load.min.as_secs_f64(),
+        total_solves / solve_load_4s.min.as_secs_f64(),
         cached.min.as_secs_f64() * 1e6 / 100.0,
     );
     let json_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");

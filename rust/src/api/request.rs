@@ -207,11 +207,14 @@ impl SolveRequest {
     }
 
     /// Warm-start from a prior report: seed σ from its best
-    /// configuration and resume the schedules after its step budget —
-    /// the incremental re-solve idiom behind the `resolve` verb.
+    /// configuration and resume the schedules after the steps that run
+    /// actually *executed* — the incremental re-solve idiom behind the
+    /// `resolve` verb. An early-stopped donor resumes at its executed
+    /// count, not its budget, so the schedule picks up exactly where
+    /// the prior anneal left off.
     pub fn init_from(self, prior: &SolveReport) -> Self {
         let sigma = Arc::new(prior.best_sigma.clone());
-        let offset = prior.steps;
+        let offset = prior.executed_steps;
         self.init_sigma(sigma, offset)
     }
 
@@ -375,6 +378,7 @@ impl SolveRequest {
             feasible_runs: outcomes.iter().map(|o| o.feasible_runs).sum(),
             mean_objective,
             steps,
+            executed_steps: best_o.best_run_steps,
             params,
             spin_updates: outcomes.iter().map(|o| o.spin_updates).sum(),
             early_stops: outcomes.iter().map(|o| o.early_stops).sum(),
@@ -440,6 +444,13 @@ pub struct SolveReport {
     /// Steps per run actually budgeted (the tuned budget when
     /// auto-tuning ran).
     pub steps: usize,
+    /// Steps the `best_sigma` run actually *executed* — equal to
+    /// `steps` unless convergence early-stop ended that run sooner.
+    /// This, not the budget, is where a warm-started re-solve resumes
+    /// the annealing schedule ([`SolveRequest::init_from`], §11.3):
+    /// resuming at the budget of an early-stopped donor would skip the
+    /// schedule phase the donor never annealed through.
+    pub executed_steps: usize,
     /// Engine parameters the solve ran with.
     pub params: SsqaParams,
     /// Spin updates executed across all runs (early stops included).

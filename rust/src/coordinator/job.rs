@@ -326,6 +326,13 @@ pub struct JobOutcome {
     pub spin_updates: u64,
     /// Runs stopped before their step budget by convergence monitoring.
     pub early_stops: usize,
+    /// Steps the `best_sigma` run actually *executed* — strictly less
+    /// than the chunk budget when that run early-stopped. This is the
+    /// schedule point a warm-started re-solve must resume from: resuming
+    /// at the budget would skip the annealing phase the run never
+    /// reached (0 for tune evaluations and failed outcomes, which carry
+    /// no resumable configuration).
+    pub best_run_steps: usize,
     pub wall: std::time::Duration,
     /// Modeled FPGA energy for hw-sim jobs (J), summed over seeds.
     pub modeled_energy_j: Option<f64>,
@@ -375,6 +382,7 @@ impl JobOutcome {
             mean_energy: 0.0,
             spin_updates: 0,
             early_stops: 0,
+            best_run_steps: 0,
             wall,
             modeled_energy_j: None,
             error: Some(error),
@@ -641,6 +649,7 @@ pub(crate) fn execute_chunk(chunk: &BatchChunk, backend: super::BackendKind) -> 
         mean_energy: sum_energy / runs as f64,
         spin_updates,
         early_stops,
+        best_run_steps: results[best_idx].steps,
         wall: t0.elapsed(),
         modeled_energy_j,
         error: None,
@@ -683,6 +692,7 @@ pub(crate) fn execute_tune_eval(chunk: &TuneEvalChunk, backend: super::BackendKi
         mean_energy: score.mean_energy,
         spin_updates: score.spin_updates,
         early_stops: score.early_stops,
+        best_run_steps: 0,
         wall: t0.elapsed(),
         modeled_energy_j: None,
         error: None,

@@ -25,6 +25,11 @@ pub struct ServeCounters {
     pub rejected_busy: AtomicU64,
     /// Connections refused because the session table was full.
     pub rejected_sessions: AtomicU64,
+    /// Jobs refused with `err busy quota=…` because one session's
+    /// admitted-job or queued-byte budget was exhausted.
+    pub rejected_quota: AtomicU64,
+    /// `batch` frames completed (each admits up to its `count=` jobs).
+    pub batches: AtomicU64,
     /// Jobs cancelled (queued or in flight) via the `cancel` verb or a
     /// vanished session.
     pub cancelled: AtomicU64,
@@ -314,6 +319,19 @@ impl Metrics {
             "ssqa_serve_rejected_total",
             &[("reason", "sessions")],
             s.rejected_sessions.load(Ordering::Relaxed),
+        );
+        write_sample(
+            &mut out,
+            "ssqa_serve_rejected_total",
+            &[("reason", "quota")],
+            s.rejected_quota.load(Ordering::Relaxed),
+        );
+        write_type(&mut out, "ssqa_serve_batches_total", "counter");
+        write_sample(
+            &mut out,
+            "ssqa_serve_batches_total",
+            &[],
+            s.batches.load(Ordering::Relaxed),
         );
         write_type(&mut out, "ssqa_serve_cancelled_total", "counter");
         write_sample(

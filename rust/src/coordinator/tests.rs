@@ -491,6 +491,7 @@ fn metrics_count_infeasible_decodes() {
         mean_energy: -3.5,
         spin_updates: 100,
         early_stops: 0,
+        best_run_steps: 25,
         wall: std::time::Duration::from_millis(1),
         modeled_energy_j: None,
         error: None,

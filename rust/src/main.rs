@@ -139,6 +139,8 @@ fn print_help() {
          \x20 serve       [--addr 127.0.0.1:7090] [--workers 4] [--max-sessions 128]\n\
          \x20             [--queue-depth 256] [--cache-entries 128] [--sub-stride 64]\n\
          \x20             [--policy software|prefer-pjrt|prefer-hw]\n\
+         \x20             [--shards 1] [--quota-jobs 64] [--quota-bytes 1048576]\n\
+         \x20             [--persist snapshot.ssqa]  (cache+warm table across restarts)\n\
          \x20 export-gset --graph G11 --out g11.gset"
     );
 }
@@ -391,6 +393,12 @@ fn cmd_serve(f: &BTreeMap<String, String>) -> Result<()> {
     cfg.queue_depth = get(f, "queue-depth", cfg.queue_depth)?;
     cfg.cache_entries = get(f, "cache-entries", cfg.cache_entries)?;
     cfg.sub_stride = get(f, "sub-stride", cfg.sub_stride)?;
+    cfg.shards = get(f, "shards", cfg.shards)?;
+    cfg.quota_jobs = get(f, "quota-jobs", cfg.quota_jobs)?;
+    cfg.quota_bytes = get(f, "quota-bytes", cfg.quota_bytes)?;
+    if let Some(p) = f.get("persist") {
+        cfg.persist = Some(std::path::PathBuf::from(p));
+    }
     if let Some(p) = f.get("policy") {
         cfg.policy = RoutingPolicy::parse(p).ok_or_else(|| {
             anyhow::anyhow!("unknown --policy {p:?} (use software|prefer-pjrt|prefer-hw)")
@@ -398,6 +406,12 @@ fn cmd_serve(f: &BTreeMap<String, String>) -> Result<()> {
     }
     if cfg.max_sessions == 0 || cfg.queue_depth == 0 {
         anyhow::bail!("--max-sessions and --queue-depth must be >= 1");
+    }
+    if cfg.shards == 0 || cfg.shards > 256 {
+        anyhow::bail!("--shards must be in 1..=256, got {}", cfg.shards);
+    }
+    if cfg.quota_jobs == 0 || cfg.quota_bytes == 0 {
+        anyhow::bail!("--quota-jobs and --quota-bytes must be >= 1");
     }
     // smoke the request path before binding
     let pool = WorkerPool::new(1, Router::new(RoutingPolicy::AllSoftware));

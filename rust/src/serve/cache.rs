@@ -30,7 +30,7 @@ use std::collections::HashMap;
 /// birthday-improbable; the second lane (different init, input tweak)
 /// guards against the structured, low-entropy inputs CSR images are.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub(crate) struct Fingerprint(u64, u64);
+pub(crate) struct Fingerprint(pub(crate) u64, pub(crate) u64);
 
 struct Mixer {
     a: u64,
@@ -208,6 +208,15 @@ impl ResultCache {
             }
         }
         self.map.insert(key, CacheEntry { reply, last_used: self.tick });
+    }
+
+    /// Every entry, least-recently-used first — the persistence order:
+    /// re-inserting a snapshot front to back rebuilds the same relative
+    /// recency, so post-restart eviction picks the same victims.
+    pub fn entries_by_recency(&self) -> Vec<(Fingerprint, &str)> {
+        let mut all: Vec<_> = self.map.iter().collect();
+        all.sort_by_key(|(_, e)| e.last_used);
+        all.into_iter().map(|(k, e)| (*k, e.reply.as_str())).collect()
     }
 }
 

@@ -29,6 +29,12 @@ pub(crate) enum ExecWork {
         /// Shared with the scheduler's job entry: `cancel` flips it,
         /// the in-run observer sees it.
         control: RunControl,
+        /// The raw request key-text for a *cold* solve (no `warm=`),
+        /// carried into the warm entry so it can be persisted and
+        /// re-parsed on restart. `None` for warm-started and `resolve`
+        /// jobs — their requests reference in-memory donor state and
+        /// don't round-trip through text.
+        spec: Option<String>,
     },
     Tune(TuneJob),
 }
@@ -124,7 +130,7 @@ fn run_one(
             let report = pool.run_tune(&tune);
             tune_reply(&tune, &report)
         }
-        ExecWork::Solve { mut parsed, control } => {
+        ExecWork::Solve { mut parsed, control, spec } => {
             // cache first: a hit answers verbatim with zero spin
             // updates recomputed (model build is the only work done)
             let key = if cacheable(&parsed.req, parsed.span) && lock_clean(cache).enabled() {
@@ -152,8 +158,12 @@ fn run_one(
                         req: template,
                         runs: parsed.runs,
                         best_sigma: Arc::new(report.best_sigma.clone()),
-                        steps: report.steps,
+                        // the *executed* count of the best run, not the
+                        // budget — an early-stopped donor's re-solve
+                        // resumes the schedule where it actually left off
+                        steps: report.executed_steps,
                         fingerprint: key,
+                        spec,
                     });
                     let table = parsed.span.then(|| metrics.timings.render());
                     solve_reply(&report, parsed.runs, table.as_deref())

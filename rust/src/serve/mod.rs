@@ -1,34 +1,56 @@
 //! Multiplexed serving layer (DESIGN.md §10): the production face of
 //! the coordinator, replacing the one-connection-at-a-time accept loop.
 //!
-//! Architecture — five cooperating pieces, all dependency-free:
+//! Architecture — cooperating pieces, all dependency-free:
 //!
-//! * **Event loop** (this module) — one thread, nonblocking sockets,
-//!   readiness via [`poll`] (`poll(2)` on unix, a sleep fallback
-//!   elsewhere). Handles every session's I/O, request parsing and reply
-//!   routing; never executes a solve.
+//! * **Accept thread** (this module, [`Server::run`]) — owns the
+//!   listener, enforces the session cap, and hands each accepted
+//!   connection to an event-loop shard round-robin. Session ids carry
+//!   the owning shard in their high bits ([`SHARD_SHIFT`]).
+//! * **Event-loop shards** (this module, `run_shard`) — `shards`
+//!   threads, each a nonblocking poll loop ([`poll`]: `poll(2)` on
+//!   unix, a sleep fallback elsewhere) owning its own session set,
+//!   [`Scheduler`] and executor lanes. Shards exchange
+//!   cross-shard work through mpsc mailboxes (`ShardMsg`), never
+//!   through shared scheduler state. One shard (the default) behaves
+//!   exactly like the previous single-threaded loop.
 //! * **Sessions** ([`session`]) — bounded read/write buffers, a hard
 //!   request-line cap (`err line_too_long`), hard/soft write caps that
 //!   disconnect slow reply consumers but merely shed progress events.
 //! * **Scheduler** ([`sched`]) — bounded admission queue (`err busy`
-//!   backpressure) + per-session round-robin dispatch + the job table
-//!   driving the async verbs.
-//! * **Executor lanes** ([`exec`]) — `workers` threads, each owning a
-//!   single-worker [`WorkerPool`]; all share one [`Metrics`] registry.
+//!   backpressure) + per-session quotas (`err busy quota=…`) +
+//!   priority tiers (`prio=high|normal|low`) with per-session
+//!   round-robin dispatch inside each tier, plus the job table driving
+//!   the async verbs. Job ids carry their shard tag, so every shard
+//!   can route `poll`/`cancel`/`subscribe` to the owner.
+//! * **Executor lanes** ([`exec`]) — `workers` threads split across
+//!   shards, each owning a single-worker [`WorkerPool`]; all share one
+//!   [`Metrics`] registry.
 //! * **Result cache** ([`cache`]) — canonical-instance-fingerprint →
-//!   verbatim-reply LRU; a repeat solve answers bit-identically with
-//!   zero spin updates recomputed.
+//!   verbatim-reply LRU, shared by every shard; a repeat solve answers
+//!   bit-identically with zero spin updates recomputed.
 //! * **Warm table** ([`warm`]) — every computed solve leaves its request
-//!   template, best σ and step budget behind (bounded FIFO), so later
-//!   requests can warm-start from it or `resolve` it incrementally.
+//!   template, best σ and executed step count behind (bounded FIFO), so
+//!   later requests can warm-start from it or `resolve` it incrementally.
+//! * **Persistence** ([`persist`]) — with `--persist PATH`, the cache
+//!   and the warm table snapshot to a versioned text file on shutdown
+//!   and reload on start, so cached replies stay bit-identical and
+//!   warm jobs stay resolvable across a restart (DESIGN.md §10.7).
 //!
 //! Protocol additions over the sync verbs (see `coordinator::server`
 //! for the shared grammar; DESIGN.md §6.3 for the full reference):
 //!
 //! ```text
-//! submit <solve keys…>      — async solve; replies `ok submitted job=J`
+//! submit [solve] <solve keys…>
+//!                           — async solve; replies `ok submitted job=J`
+//!                             (the `solve` sub-verb is optional noise)
 //! solve/submit … warm=J     — warm-start from job J's best σ, resuming
 //!                             its annealing schedule (DESIGN.md §11.3)
+//! solve/submit/tune … prio=high|normal|low
+//!                           — dispatch priority (default normal)
+//! batch count=K             — the next K request lines are submit
+//!                             entries; one framed reply carries their
+//!                             K per-entry status lines
 //! resolve job=J patch=i:j:w[,…] [steps=N]
 //!                           — re-solve job J with patched couplings,
 //!                             warm-started from its best σ; invalidates
@@ -47,10 +69,14 @@
 //! through the same queue: the session is marked blocked, the loop
 //! keeps serving everyone else, and the reply is routed when the lane
 //! finishes. Strict per-session request→reply ordering is preserved by
-//! not processing a blocked session's further input.
+//! not processing a blocked session's further input; a cross-shard
+//! `poll`/`cancel`/`subscribe` blocks the session the same way until
+//! the owner shard's reply routes home (mailbox FIFO guarantees the
+//! reply precedes any event the owner fans out afterwards).
 
 mod cache;
 mod exec;
+mod persist;
 mod poll;
 mod sched;
 mod session;
@@ -67,34 +93,57 @@ use crate::Result;
 use anyhow::anyhow;
 use cache::ResultCache;
 use exec::{ExecPool, ExecWork, LoopMsg};
-use poll::{raw_fd, Waker};
-use sched::{CancelOutcome, JobState, Scheduler};
-use session::{InLine, Session};
-use std::collections::HashMap;
-use std::net::{SocketAddr, TcpListener};
+use poll::{raw_fd, WakeHandle, Waker};
+use sched::{AdmitOutcome, CancelOutcome, JobState, Prio, Scheduler};
+use session::{BatchState, InLine, Session};
+use std::collections::{BTreeMap, HashMap};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 use warm::{WarmTable, WARM_RETENTION};
 
 const SERVE_VERBS: &str =
-    "solve, tune, submit, resolve, poll, cancel, subscribe, metrics, health, ping, quit";
+    "solve, tune, submit, batch, resolve, poll, cancel, subscribe, metrics, health, ping, quit";
 
 /// Poll timeout when nothing is pending — the waker interrupts it for
 /// completions and progress, so this only bounds shutdown latency.
 const TICK: Duration = Duration::from_millis(250);
 
-/// Serving-layer knobs (`ssqa serve --max-sessions --queue-depth
-/// --cache-entries --policy`).
+/// Job and session ids carry their owning shard in the bits above this
+/// — `id = shard << SHARD_SHIFT | local` — so any shard can route a
+/// `poll`/`cancel`/`subscribe` to the owner. Shard 0's tag is zero:
+/// single-shard ids read exactly as they did before sharding existed.
+pub(crate) const SHARD_SHIFT: u32 = 48;
+
+/// The per-shard id space (2⁴⁸ ids — unreachable in practice).
+const LOCAL_MASK: u64 = (1 << SHARD_SHIFT) - 1;
+
+/// Shard-count ceiling (the id scheme supports 2¹⁶; this keeps thread
+/// counts sane long before that).
+pub(crate) const MAX_SHARDS: usize = 256;
+
+/// `batch count=K` ceiling — bounds the statuses buffered per session.
+const MAX_BATCH: usize = 256;
+
+/// Which shard minted (and owns) an id.
+pub(crate) fn shard_of(id: u64) -> usize {
+    (id >> SHARD_SHIFT) as usize
+}
+
+/// Serving-layer knobs (`ssqa serve --workers --max-sessions
+/// --queue-depth --cache-entries --policy --sub-stride --shards
+/// --quota-jobs --persist`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Executor lanes (concurrent jobs in flight).
+    /// Executor lanes (concurrent jobs in flight), split across shards.
     pub workers: usize,
     /// Concurrent client sessions; further connects get `err busy` and
     /// are dropped.
     pub max_sessions: usize,
-    /// Bound on *queued* (admitted, not yet running) jobs across all
-    /// sessions; over-admission is refused with `err busy`.
+    /// Per-shard bound on *queued* (admitted, not yet running) jobs
+    /// across that shard's sessions; over-admission is refused with
+    /// `err busy`.
     pub queue_depth: usize,
     /// Result-cache capacity in entries; 0 disables caching.
     pub cache_entries: usize,
@@ -103,6 +152,28 @@ pub struct ServeConfig {
     /// Progress-event sampling stride for `subscribe` (steps between
     /// events).
     pub sub_stride: usize,
+    /// Event-loop shards. 1 (the default) is the classic single loop;
+    /// more split sessions round-robin across independent poll loops
+    /// so one loop's parse/flush work doesn't serialize everyone.
+    /// Overridable via `SSQA_SERVE_SHARDS` (the CI matrix knob).
+    pub shards: usize,
+    /// Per-session cap on admitted-unfinished jobs (`err busy
+    /// quota=jobs` past it) — one client cannot hold every lane.
+    pub quota_jobs: usize,
+    /// Per-session cap on queued request-line bytes (`err busy
+    /// quota=bytes`) — refunded as jobs dispatch.
+    pub quota_bytes: usize,
+    /// Snapshot file for the result cache + warm table: loaded at
+    /// start, written at shutdown. `None` disables persistence.
+    pub persist: Option<std::path::PathBuf>,
+}
+
+fn default_shards() -> usize {
+    std::env::var("SSQA_SERVE_SHARDS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
 }
 
 impl Default for ServeConfig {
@@ -114,17 +185,21 @@ impl Default for ServeConfig {
             cache_entries: 128,
             policy: RoutingPolicy::AllSoftware,
             sub_stride: 64,
+            shards: default_shards(),
+            quota_jobs: 64,
+            quota_bytes: 1 << 20,
+            persist: None,
         }
     }
 }
 
 /// Control handle for a running server (tests, embedding): the resolved
-/// address plus a stop switch that interrupts the event loop.
+/// address plus a stop switch that interrupts every event loop.
 #[derive(Clone)]
 pub struct ServerHandle {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    wake: poll::WakeHandle,
+    wakes: Vec<WakeHandle>,
 }
 
 impl ServerHandle {
@@ -134,12 +209,72 @@ impl ServerHandle {
         self.addr
     }
 
-    /// Ask the event loop to exit; it finishes the current tick, joins
-    /// the executor lanes and returns from [`Server::run`].
+    /// Ask the server to exit; the accept thread and every shard finish
+    /// their current tick, the executor lanes join, and [`Server::run`]
+    /// returns (writing the persistence snapshot if configured).
     pub fn stop(&self) {
         self.stop.store(true, Ordering::Relaxed);
-        self.wake.wake();
+        for w in &self.wakes {
+            w.wake();
+        }
     }
+}
+
+/// One shard's mailbox endpoint: the channel plus the waker that makes
+/// the shard notice the message inside its poll tick.
+struct ShardPost {
+    tx: mpsc::Sender<ShardMsg>,
+    wake: WakeHandle,
+}
+
+fn post(p: &ShardPost, msg: ShardMsg) {
+    if p.tx.send(msg).is_ok() {
+        p.wake.wake();
+    }
+}
+
+/// The job verbs that route to the shard owning the job id.
+#[derive(Debug, Clone, Copy)]
+enum RemoteVerb {
+    Poll,
+    Cancel,
+    Subscribe,
+}
+
+/// Cross-shard traffic. Senders never block (unbounded mpsc) and each
+/// sender's messages arrive FIFO, which is what guarantees a routed
+/// reply reaches the requester before any event fanned out after it.
+enum ShardMsg {
+    /// Accept-thread handoff of a fresh connection. The session gauge
+    /// was already incremented at accept time.
+    Conn { id: u64, stream: TcpStream },
+    /// Execute `verb` against this shard's job table on behalf of
+    /// session `from` (which lives on `shard_of(from)`).
+    Remote { verb: RemoteVerb, job: u64, from: u64 },
+    /// The owner shard's answer to a `Remote`; unblocks the session.
+    Reply { session: u64, job: u64, reply: String },
+    /// A subscription event for a session on this shard. `must` events
+    /// ride the reply path (a subscriber must never miss its stream's
+    /// terminator); others shed at the soft cap like local events.
+    Event { session: u64, line: String, must: bool },
+    /// A session died on its shard: forget its subscriptions here.
+    Unsubscribe { session: u64 },
+}
+
+/// Everything a shard loop needs, bundled so the verb handlers stay
+/// readable.
+struct ShardCtx {
+    shard: usize,
+    shards: usize,
+    /// This shard's executor-lane count.
+    lanes: usize,
+    /// Server-wide lane total (the `health` reply's `workers=`).
+    total_lanes: usize,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+    cache: Arc<Mutex<ResultCache>>,
+    warm: Arc<Mutex<WarmTable>>,
+    peers: Arc<Vec<ShardPost>>,
 }
 
 /// A bound, not-yet-running server.
@@ -148,22 +283,26 @@ pub struct Server {
     local: SocketAddr,
     cfg: ServeConfig,
     stop: Arc<AtomicBool>,
-    waker: Waker,
+    /// One waker per shard, moved into the shard threads at `run`.
+    wakers: Vec<Waker>,
     metrics: Arc<Metrics>,
 }
 
 impl Server {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port).
-    pub fn bind(addr: &str, cfg: ServeConfig) -> Result<Self> {
+    pub fn bind(addr: &str, mut cfg: ServeConfig) -> Result<Self> {
+        cfg.shards = cfg.shards.clamp(1, MAX_SHARDS);
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
+        let wakers =
+            (0..cfg.shards).map(|_| Waker::new()).collect::<std::io::Result<Vec<_>>>()?;
         Ok(Self {
             listener,
             local,
             cfg,
             stop: Arc::new(AtomicBool::new(false)),
-            waker: Waker::new()?,
+            wakers,
             metrics: Arc::new(Metrics::new()),
         })
     }
@@ -176,7 +315,7 @@ impl Server {
         ServerHandle {
             addr: self.local,
             stop: Arc::clone(&self.stop),
-            wake: self.waker.handle(),
+            wakes: self.wakers.iter().map(|w| w.handle()).collect(),
         }
     }
 
@@ -186,191 +325,128 @@ impl Server {
         (handle, std::thread::spawn(move || self.run()))
     }
 
-    /// Run the event loop until [`ServerHandle::stop`] or a listener
-    /// failure.
+    /// Run the accept loop (and the shard event loops it feeds) until
+    /// [`ServerHandle::stop`] or a listener failure.
     pub fn run(self) -> Result<()> {
-        let Server { listener, local, cfg, stop, mut waker, metrics } = self;
+        let Server { listener, local, cfg, stop, wakers, metrics } = self;
         // the resolved address, parsed by the soak harness and scripted
         // clients — keep the prefix stable
         eprintln!("ssqa coordinator listening on {local}");
+        let shards = wakers.len();
         let cache = Arc::new(Mutex::new(ResultCache::new(cfg.cache_entries)));
         let warm = Arc::new(Mutex::new(WarmTable::new(WARM_RETENTION)));
-        let (loop_tx, loop_rx) = mpsc::channel::<LoopMsg>();
-        let (prog_tx, prog_rx) = mpsc::channel::<ProgressEvent>();
-        {
-            // progress forwarder: blocking-recv on the observers'
-            // channel, nudging the poll loop per event — observers stay
-            // ignorant of the loop's wake mechanics
-            let loop_tx = loop_tx.clone();
-            let wake = waker.handle();
-            std::thread::spawn(move || {
-                for ev in prog_rx.iter() {
-                    if loop_tx.send(LoopMsg::Progress(ev)).is_err() {
-                        break;
-                    }
-                    wake.wake();
+
+        // restore the snapshot before any shard mints an id, tracking
+        // the highest restored local id per shard so re-minting can't
+        // collide with a persisted job
+        let mut floors = vec![0u64; shards];
+        if let Some(path) = &cfg.persist {
+            let state = persist::load(path);
+            {
+                let mut c = lock_clean(&cache);
+                for (fp, reply) in state.cache {
+                    c.insert(fp, reply);
                 }
-            });
+            }
+            let mut w = lock_clean(&warm);
+            for (job, entry) in state.warm {
+                let owner = shard_of(job);
+                if owner < shards {
+                    floors[owner] = floors[owner].max(job & LOCAL_MASK);
+                }
+                w.insert(job, entry);
+            }
         }
-        let exec = ExecPool::new(
-            cfg.workers,
-            cfg.policy,
-            Arc::clone(&metrics),
-            Arc::clone(&cache),
-            Arc::clone(&warm),
-            loop_tx.clone(),
-            waker.handle(),
-        );
-        let mut sched = Scheduler::new(cfg.queue_depth, Arc::clone(&metrics));
-        let mut sessions: HashMap<u64, Session> = HashMap::new();
-        let mut next_session: u64 = 1;
 
-        while !stop.load(Ordering::Relaxed) {
-            // 1. readiness: listener + waker + every live session
-            let order: Vec<u64> = sessions.keys().copied().collect();
-            let mut fds = Vec::with_capacity(2 + order.len());
-            fds.push((raw_fd(&listener), true, false));
-            fds.push((raw_fd(&waker.rx), true, false));
-            for id in &order {
-                let s = &sessions[id];
-                fds.push((raw_fd(&s.stream), s.wants_read(), s.wants_write()));
-            }
-            let ready = poll::wait(&fds, TICK)?;
-            if stop.load(Ordering::Relaxed) {
-                break;
-            }
-            waker.drain();
+        // split the lanes across shards, remainder to the low shards;
+        // every shard gets at least one
+        let workers = cfg.workers.max(1);
+        let lanes: Vec<usize> = (0..shards)
+            .map(|i| (workers / shards + usize::from(i < workers % shards)).max(1))
+            .collect();
+        let total_lanes: usize = lanes.iter().sum();
 
-            // 2. accept new sessions (up to the cap)
-            if ready[0].readable {
-                accept_ready(&listener, &cfg, &metrics, &mut sessions, &mut next_session);
-            }
-
-            // 3. pull input off ready sessions
-            for (i, id) in order.iter().enumerate() {
-                if let Some(s) = sessions.get_mut(id) {
-                    if ready[2 + i].readable && s.wants_read() {
-                        s.fill();
-                    }
-                }
-            }
-
-            // 4. route completions and progress events — before line
-            // processing, so a session a reply just unblocked gets its
-            // pipelined follow-up requests handled this very tick
-            while let Ok(msg) = loop_rx.try_recv() {
-                match msg {
-                    LoopMsg::Done { job, reply } => {
-                        let Some((sid, sync, subscribers, reply)) = sched.complete(job, reply)
-                        else {
-                            continue;
-                        };
-                        let status = reply.split_whitespace().next().unwrap_or("-").to_string();
-                        eprintln!("ssqa: job={job} session={sid} status={status}");
-                        if sync {
-                            if let Some(s) = sessions.get_mut(&sid) {
-                                if s.blocked_on == Some(job) {
-                                    s.blocked_on = None;
-                                    s.queue_reply(&reply);
-                                }
-                            }
-                        }
-                        for sub in subscribers {
-                            if let Some(s) = sessions.get_mut(&sub) {
-                                // completion events ride the reply path
-                                // (hard cap): a subscriber must never
-                                // miss the end of its stream
-                                s.queue_reply(&format!("event job={job} done=1"));
-                            }
-                        }
-                    }
-                    LoopMsg::Progress(ev) => {
-                        let subs = sched.subscribers(ev.job).to_vec();
-                        if subs.is_empty() {
-                            continue;
-                        }
-                        let line = format!(
-                            "event job={} seed={} step={} best_e={} mean_e={:.3}",
-                            ev.job, ev.seed, ev.step, ev.best_energy, ev.mean_energy
-                        );
-                        for sub in subs {
-                            if let Some(s) = sessions.get_mut(&sub) {
-                                if !s.queue_event(&line) {
-                                    metrics
-                                        .serve
-                                        .events_dropped
-                                        .fetch_add(1, Ordering::Relaxed);
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-
-            // 5. process buffered request lines (stops at a sync verb:
-            // the session blocks until its reply routes back)
-            for id in &order {
-                let Some(s) = sessions.get_mut(id) else { continue };
-                while s.blocked_on.is_none() && !s.closing && !s.dead {
-                    let Some(item) = s.pending.pop_front() else { break };
-                    match item {
-                        InLine::TooLong => {
-                            metrics.serve.lines_too_long.fetch_add(1, Ordering::Relaxed);
-                            s.queue_reply(&format!(
-                                "err line_too_long max_bytes={} (request line discarded)",
-                                MAX_LINE
-                            ));
-                        }
-                        InLine::Line(line) => {
-                            handle_line(
-                                &line, s, &mut sched, &metrics, &cfg, &prog_tx, &exec, &cache,
-                                &warm,
-                            );
-                        }
-                    }
-                }
-            }
-
-            // 6. feed idle lanes, fairly
-            while sched.running() < exec.lanes() {
-                match sched.next_ready() {
-                    Some((id, work)) => exec.send(id, work),
-                    None => break,
-                }
-            }
-
-            // 7. push replies out; reap finished/broken sessions
-            for id in sessions.keys().copied().collect::<Vec<_>>() {
-                let s = sessions.get_mut(&id).expect("key just listed");
-                if s.wants_write() || s.closing {
-                    s.flush();
-                }
-                if s.dead {
-                    sessions.remove(&id);
-                    sched.drop_session(id);
-                    eprintln!("ssqa: session={id} closed");
-                }
-            }
-            metrics.serve.sessions.store(sessions.len() as i64, Ordering::Relaxed);
+        let mut posts = Vec::with_capacity(shards);
+        let mut rxs = Vec::with_capacity(shards);
+        for w in &wakers {
+            let (tx, rx) = mpsc::channel::<ShardMsg>();
+            posts.push(ShardPost { tx, wake: w.handle() });
+            rxs.push(rx);
         }
-        // lanes join on drop; in-flight jobs finish, their completions
-        // are simply never routed
-        drop(exec);
-        Ok(())
+        let peers: Arc<Vec<ShardPost>> = Arc::new(posts);
+
+        let mut joins = Vec::with_capacity(shards);
+        for (i, (waker, rx)) in wakers.into_iter().zip(rxs).enumerate() {
+            let ctx = ShardCtx {
+                shard: i,
+                shards,
+                lanes: lanes[i],
+                total_lanes,
+                cfg: cfg.clone(),
+                metrics: Arc::clone(&metrics),
+                cache: Arc::clone(&cache),
+                warm: Arc::clone(&warm),
+                peers: Arc::clone(&peers),
+            };
+            let stop = Arc::clone(&stop);
+            let floor = floors[i];
+            joins.push(std::thread::spawn(move || run_shard(ctx, waker, rx, floor, stop)));
+        }
+
+        // the accept loop: the listener is this thread's only fd; every
+        // accepted connection is handed to a shard round-robin
+        let result = (|| -> Result<()> {
+            let mut counters = vec![0u64; shards];
+            let mut rr = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let ready = poll::wait(&[(raw_fd(&listener), true, false)], TICK)?;
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if ready[0].readable {
+                    accept_ready(&listener, &cfg, &metrics, &peers, &mut counters, &mut rr);
+                }
+            }
+            Ok(())
+        })();
+
+        stop.store(true, Ordering::Relaxed);
+        for p in peers.iter() {
+            p.wake.wake();
+        }
+        for j in joins {
+            let _ = j.join();
+        }
+        // snapshot after the shards (and their lanes) are done, so the
+        // cache and warm table are quiescent
+        if let Some(path) = &cfg.persist {
+            if let Err(e) = persist::save(path, &lock_clean(&cache), &lock_clean(&warm)) {
+                eprintln!(
+                    "ssqa: persist: save to {} failed: {e} (snapshot lost)",
+                    path.display()
+                );
+            }
+        }
+        result
     }
 }
 
+/// Drain the listener's accept backlog, handing each connection to a
+/// shard. The shared session gauge is the admission signal — counted
+/// *here*, before the handoff, so a connect burst can't overshoot the
+/// cap while shards are mid-tick; shards decrement when they reap.
 fn accept_ready(
     listener: &TcpListener,
     cfg: &ServeConfig,
     metrics: &Metrics,
-    sessions: &mut HashMap<u64, Session>,
-    next_session: &mut u64,
+    peers: &[ShardPost],
+    counters: &mut [u64],
+    rr: &mut usize,
 ) {
     loop {
         match listener.accept() {
             Ok((stream, _peer)) => {
-                if sessions.len() >= cfg.max_sessions {
+                if metrics.serve.sessions.load(Ordering::Relaxed) >= cfg.max_sessions as i64 {
                     metrics.serve.rejected_sessions.fetch_add(1, Ordering::Relaxed);
                     // best-effort goodbye; a full socket buffer just
                     // means the client learns from the close instead
@@ -380,10 +456,16 @@ fn accept_ready(
                         .write_all(format!("err busy sessions={}\n", cfg.max_sessions).as_bytes());
                     continue;
                 }
-                let id = *next_session;
-                *next_session += 1;
-                if let Ok(s) = Session::new(id, stream) {
-                    sessions.insert(id, s);
+                let shard = *rr % peers.len();
+                *rr += 1;
+                counters[shard] += 1;
+                let id = (shard as u64) << SHARD_SHIFT | counters[shard];
+                metrics.serve.sessions.fetch_add(1, Ordering::Relaxed);
+                if peers[shard].tx.send(ShardMsg::Conn { id, stream }).is_ok() {
+                    peers[shard].wake.wake();
+                } else {
+                    // shard already gone (shutdown race): undo the count
+                    metrics.serve.sessions.fetch_add(-1, Ordering::Relaxed);
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
@@ -391,24 +473,301 @@ fn accept_ready(
             Err(_) => break,
         }
     }
-    metrics.serve.sessions.store(sessions.len() as i64, Ordering::Relaxed);
 }
 
-/// Parse and act on one request line. Sync verbs leave the session
-/// blocked; everything else queues its reply immediately.
-#[allow(clippy::too_many_arguments)]
+/// One shard's event loop: its own sessions, scheduler and executor
+/// lanes, fed connections and cross-shard verbs through `shard_rx`.
+fn run_shard(
+    ctx: ShardCtx,
+    mut waker: Waker,
+    shard_rx: mpsc::Receiver<ShardMsg>,
+    id_floor: u64,
+    stop: Arc<AtomicBool>,
+) {
+    let metrics = Arc::clone(&ctx.metrics);
+    let (loop_tx, loop_rx) = mpsc::channel::<LoopMsg>();
+    let (prog_tx, prog_rx) = mpsc::channel::<ProgressEvent>();
+    {
+        // progress forwarder: blocking-recv on the observers' channel,
+        // nudging the poll loop per event — observers stay ignorant of
+        // the loop's wake mechanics
+        let loop_tx = loop_tx.clone();
+        let wake = waker.handle();
+        std::thread::spawn(move || {
+            for ev in prog_rx.iter() {
+                if loop_tx.send(LoopMsg::Progress(ev)).is_err() {
+                    break;
+                }
+                wake.wake();
+            }
+        });
+    }
+    let exec = ExecPool::new(
+        ctx.lanes,
+        ctx.cfg.policy,
+        Arc::clone(&metrics),
+        Arc::clone(&ctx.cache),
+        Arc::clone(&ctx.warm),
+        loop_tx.clone(),
+        waker.handle(),
+    );
+    let mut sched = Scheduler::new(
+        ctx.cfg.queue_depth,
+        ctx.cfg.quota_jobs,
+        ctx.cfg.quota_bytes,
+        (ctx.shard as u64) << SHARD_SHIFT,
+        Arc::clone(&metrics),
+    );
+    sched.reseed_above(id_floor);
+    let mut sessions: HashMap<u64, Session> = HashMap::new();
+
+    while !stop.load(Ordering::Relaxed) {
+        // 1. readiness: waker + every live session (the listener lives
+        //    on the accept thread; connections arrive via the mailbox)
+        let order: Vec<u64> = sessions.keys().copied().collect();
+        let mut fds = Vec::with_capacity(1 + order.len());
+        fds.push((raw_fd(&waker.rx), true, false));
+        for id in &order {
+            let s = &sessions[id];
+            fds.push((raw_fd(&s.stream), s.wants_read(), s.wants_write()));
+        }
+        let Ok(ready) = poll::wait(&fds, TICK) else { break };
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        waker.drain();
+
+        // 2. drain the mailbox: handed-off connections, cross-shard
+        //    verbs and their replies/events
+        while let Ok(msg) = shard_rx.try_recv() {
+            match msg {
+                ShardMsg::Conn { id, stream } => match Session::new(id, stream) {
+                    Ok(s) => {
+                        sessions.insert(id, s);
+                    }
+                    Err(_) => {
+                        // the accept thread counted it; give it back
+                        metrics.serve.sessions.fetch_add(-1, Ordering::Relaxed);
+                    }
+                },
+                ShardMsg::Remote { verb, job, from } => {
+                    let (reply, done) = match verb {
+                        RemoteVerb::Poll => (poll_reply(&sched, job), false),
+                        RemoteVerb::Cancel => (cancel_reply(&mut sched, job), false),
+                        RemoteVerb::Subscribe => subscribe_reply(&mut sched, from, job),
+                    };
+                    let home = &ctx.peers[shard_of(from)];
+                    post(home, ShardMsg::Reply { session: from, job, reply });
+                    if done {
+                        // the stream terminator for an already-done
+                        // subscription — FIFO puts it after the reply
+                        post(
+                            home,
+                            ShardMsg::Event {
+                                session: from,
+                                line: format!("event job={job} done=1"),
+                                must: true,
+                            },
+                        );
+                    }
+                }
+                ShardMsg::Reply { session, job, reply } => {
+                    if let Some(s) = sessions.get_mut(&session) {
+                        if s.blocked_on == Some(job) {
+                            s.blocked_on = None;
+                            s.queue_reply(&reply);
+                        }
+                    }
+                }
+                ShardMsg::Event { session, line, must } => {
+                    if let Some(s) = sessions.get_mut(&session) {
+                        if must {
+                            s.queue_reply(&line);
+                        } else if !s.queue_event(&line) {
+                            metrics.serve.events_dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                ShardMsg::Unsubscribe { session } => {
+                    sched.purge_subscriber(session);
+                }
+            }
+        }
+
+        // 3. pull input off ready sessions (fds[0] is the waker, so
+        //    session i sits at ready[1 + i])
+        for (i, id) in order.iter().enumerate() {
+            if let Some(s) = sessions.get_mut(id) {
+                if ready[1 + i].readable && s.wants_read() {
+                    s.fill();
+                }
+            }
+        }
+
+        // 4. route completions and progress events — before line
+        // processing, so a session a reply just unblocked gets its
+        // pipelined follow-up requests handled this very tick
+        while let Ok(msg) = loop_rx.try_recv() {
+            match msg {
+                LoopMsg::Done { job, reply } => {
+                    let Some((sid, sync, subscribers, reply)) = sched.complete(job, reply)
+                    else {
+                        continue;
+                    };
+                    let status = reply.split_whitespace().next().unwrap_or("-").to_string();
+                    eprintln!("ssqa: job={job} session={sid} status={status}");
+                    if sync {
+                        // sync jobs are only admitted by this shard's
+                        // own sessions — never remote
+                        if let Some(s) = sessions.get_mut(&sid) {
+                            if s.blocked_on == Some(job) {
+                                s.blocked_on = None;
+                                s.queue_reply(&reply);
+                            }
+                        }
+                    }
+                    let done_line = format!("event job={job} done=1");
+                    for sub in subscribers {
+                        if shard_of(sub) == ctx.shard {
+                            if let Some(s) = sessions.get_mut(&sub) {
+                                // completion events ride the reply path
+                                // (hard cap): a subscriber must never
+                                // miss the end of its stream
+                                s.queue_reply(&done_line);
+                            }
+                        } else {
+                            post(
+                                &ctx.peers[shard_of(sub)],
+                                ShardMsg::Event {
+                                    session: sub,
+                                    line: done_line.clone(),
+                                    must: true,
+                                },
+                            );
+                        }
+                    }
+                }
+                LoopMsg::Progress(ev) => {
+                    let subs = sched.subscribers(ev.job).to_vec();
+                    if subs.is_empty() {
+                        continue;
+                    }
+                    let line = format!(
+                        "event job={} seed={} step={} best_e={} mean_e={:.3}",
+                        ev.job, ev.seed, ev.step, ev.best_energy, ev.mean_energy
+                    );
+                    for sub in subs {
+                        if shard_of(sub) == ctx.shard {
+                            if let Some(s) = sessions.get_mut(&sub) {
+                                if !s.queue_event(&line) {
+                                    metrics
+                                        .serve
+                                        .events_dropped
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        } else {
+                            post(
+                                &ctx.peers[shard_of(sub)],
+                                ShardMsg::Event { session: sub, line: line.clone(), must: false },
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // 5. process buffered request lines (stops at a sync verb or a
+        // routed job verb: the session blocks until its reply routes
+        // back). A session mid-`batch` consumes lines as batch entries.
+        for id in &order {
+            let Some(s) = sessions.get_mut(id) else { continue };
+            while s.blocked_on.is_none() && !s.closing && !s.dead {
+                let Some(item) = s.pending.pop_front() else { break };
+                if s.batch.is_some() {
+                    let status = match item {
+                        InLine::TooLong => {
+                            metrics.serve.lines_too_long.fetch_add(1, Ordering::Relaxed);
+                            format!(
+                                "err line_too_long max_bytes={MAX_LINE} (batch entry discarded)"
+                            )
+                        }
+                        InLine::Line(l) => batch_entry(&l, s.id, &mut sched, &ctx, &prog_tx),
+                    };
+                    let b = s.batch.as_mut().expect("checked above");
+                    b.statuses.push(status);
+                    if b.statuses.len() >= b.want {
+                        let b = s.batch.take().expect("still collecting");
+                        metrics.serve.batches.fetch_add(1, Ordering::Relaxed);
+                        s.queue_reply(&frame(
+                            &format!("ok batch count={}", b.want),
+                            &b.statuses.join("\n"),
+                        ));
+                    }
+                    continue;
+                }
+                match item {
+                    InLine::TooLong => {
+                        metrics.serve.lines_too_long.fetch_add(1, Ordering::Relaxed);
+                        s.queue_reply(&format!(
+                            "err line_too_long max_bytes={} (request line discarded)",
+                            MAX_LINE
+                        ));
+                    }
+                    InLine::Line(line) => {
+                        handle_line(&line, s, &mut sched, &ctx, &prog_tx);
+                    }
+                }
+            }
+        }
+
+        // 6. feed idle lanes, fairly
+        while sched.running() < exec.lanes() {
+            match sched.next_ready() {
+                Some((id, work)) => exec.send(id, work),
+                None => break,
+            }
+        }
+
+        // 7. push replies out; reap finished/broken sessions
+        for id in sessions.keys().copied().collect::<Vec<_>>() {
+            let s = sessions.get_mut(&id).expect("key just listed");
+            if s.wants_write() || s.closing {
+                s.flush();
+            }
+            if s.dead {
+                sessions.remove(&id);
+                sched.drop_session(id);
+                metrics.serve.sessions.fetch_add(-1, Ordering::Relaxed);
+                if ctx.shards > 1 {
+                    // its cross-shard subscriptions die with it
+                    for (i, p) in ctx.peers.iter().enumerate() {
+                        if i != ctx.shard {
+                            post(p, ShardMsg::Unsubscribe { session: id });
+                        }
+                    }
+                }
+                eprintln!("ssqa: session={id} closed");
+            }
+        }
+    }
+    // lanes join on drop; in-flight jobs finish, their completions
+    // are simply never routed
+    drop(exec);
+}
+
+/// Parse and act on one request line. Sync verbs and routed job verbs
+/// leave the session blocked; everything else queues its reply
+/// immediately.
 fn handle_line(
     line: &str,
     session: &mut Session,
     sched: &mut Scheduler,
-    metrics: &Arc<Metrics>,
-    cfg: &ServeConfig,
+    ctx: &ShardCtx,
     prog_tx: &mpsc::Sender<ProgressEvent>,
-    exec: &ExecPool,
-    cache: &Arc<Mutex<ResultCache>>,
-    warm: &Arc<Mutex<WarmTable>>,
 ) {
-    let mut parts = line.split_whitespace();
+    let metrics = &ctx.metrics;
+    let mut parts = line.split_whitespace().peekable();
     let verb = parts.next().unwrap_or("");
     match verb {
         "quit" => session.closing = true,
@@ -441,9 +800,9 @@ fn handle_line(
             session.queue_reply(&format!(
                 "ok health uptime_s={:.3} workers={} sessions={} queue_depth={} running={} cache_hits={} cache_misses={} cache_hit_rate={:.3} jobs={} errors={} cancelled={} rejected={} last_error=\"{}\"",
                 metrics.uptime().as_secs_f64(),
-                exec.lanes(),
+                ctx.total_lanes,
                 sv.session_count(),
-                sched.depth(),
+                sv.depth(),
                 sched.running(),
                 sv.cache_hits.load(Ordering::Relaxed),
                 sv.cache_misses.load(Ordering::Relaxed),
@@ -452,82 +811,94 @@ fn handle_line(
                 errors,
                 sv.cancelled.load(Ordering::Relaxed),
                 sv.rejected_busy.load(Ordering::Relaxed)
-                    + sv.rejected_sessions.load(Ordering::Relaxed),
+                    + sv.rejected_sessions.load(Ordering::Relaxed)
+                    + sv.rejected_quota.load(Ordering::Relaxed),
                 last,
             ));
         }
         "solve" | "submit" => {
             let sync = verb == "solve";
-            // warm= is a serve-layer key: resolve it against the warm
-            // table *before* the shared grammar sees the map, so the
-            // sync handler's grammar stays untouched
-            let parsed = kv_map(parts).and_then(|mut f| {
-                let warm_job: Option<u64> = take_opt(&mut f, "warm")?;
-                let mut parsed = parse_solve(f)?;
-                if let Some(w) = warm_job {
-                    let table = lock_clean(warm);
-                    let entry = table
-                        .get(w)
-                        .ok_or_else(|| anyhow!("unknown or expired warm job {w}"))?;
-                    parsed.req =
-                        parsed.req.init_sigma(Arc::clone(&entry.best_sigma), entry.steps);
+            // tolerate `submit solve key=…` — the sub-verb names what
+            // the submit is, and scripted clients habitually write it
+            if !sync && parts.peek() == Some(&"solve") {
+                parts.next();
+            }
+            match parse_serve_solve(parts, &ctx.warm) {
+                Err(e) => {
+                    session.queue_reply(&format!("err {e}"));
                 }
-                Ok(parsed)
+                Ok(sa) => {
+                    if sync {
+                        let id = sched.reserve_id();
+                        // cancellable only through session teardown —
+                        // the session itself is blocked on the reply
+                        let control = RunControl::new();
+                        let work = ExecWork::Solve {
+                            parsed: sa.parsed,
+                            control: control.clone(),
+                            spec: sa.spec,
+                        };
+                        match sched.admit(
+                            id,
+                            session.id,
+                            true,
+                            work,
+                            Some(control),
+                            sa.prio,
+                            line.len(),
+                        ) {
+                            AdmitOutcome::Admitted => session.blocked_on = Some(id),
+                            out => {
+                                session.queue_reply(&busy_reply(&out, &ctx.cfg));
+                            }
+                        }
+                    } else {
+                        let reply =
+                            admit_async_solve(sa, line.len(), session.id, sched, ctx, prog_tx);
+                        session.queue_reply(&reply);
+                    }
+                }
+            }
+        }
+        "tune" => {
+            let parsed = kv_map(parts).and_then(|mut f| {
+                let prio = take_prio(&mut f)?;
+                Ok((parse_tune(f)?, prio))
             });
             match parsed {
                 Err(e) => {
                     session.queue_reply(&format!("err {e}"));
                 }
-                Ok(parsed) => {
+                Ok((job, prio)) => {
                     let id = sched.reserve_id();
-                    let control = if sync {
-                        // cancellable only through session teardown —
-                        // the session itself is blocked on the reply
-                        RunControl::new()
-                    } else {
-                        RunControl::with_sink(ProgressSink::new(
-                            id,
-                            cfg.sub_stride,
-                            prog_tx.clone(),
-                        ))
-                    };
-                    let work = ExecWork::Solve { parsed, control: control.clone() };
-                    if sched.admit(id, session.id, sync, work, Some(control)) {
-                        if sync {
-                            session.blocked_on = Some(id);
-                        } else {
-                            session.queue_reply(&format!("ok submitted job={id}"));
+                    match sched.admit(
+                        id,
+                        session.id,
+                        true,
+                        ExecWork::Tune(job),
+                        None,
+                        prio,
+                        line.len(),
+                    ) {
+                        AdmitOutcome::Admitted => session.blocked_on = Some(id),
+                        out => {
+                            session.queue_reply(&busy_reply(&out, &ctx.cfg));
                         }
-                    } else {
-                        session
-                            .queue_reply(&format!("err busy queue_depth={}", cfg.queue_depth));
                     }
                 }
             }
         }
-        "tune" => match kv_map(parts).and_then(parse_tune) {
-            Err(e) => {
-                session.queue_reply(&format!("err {e}"));
-            }
-            Ok(job) => {
-                let id = sched.reserve_id();
-                if sched.admit(id, session.id, true, ExecWork::Tune(job), None) {
-                    session.blocked_on = Some(id);
-                } else {
-                    session.queue_reply(&format!("err busy queue_depth={}", cfg.queue_depth));
-                }
-            }
-        },
         "resolve" => {
-            let parsed = (|| -> Result<ParsedSolve> {
+            let parsed = (|| -> Result<(ParsedSolve, Prio)> {
                 let mut f = kv_map(parts)?;
                 let job: u64 = take_opt(&mut f, "job")?
                     .ok_or_else(|| anyhow!("resolve requires job=<id>"))?;
                 let patch: String = take_opt(&mut f, "patch")?
                     .ok_or_else(|| anyhow!("resolve requires patch=i:j:w[,i:j:w…]"))?;
                 let steps: Option<usize> = take_opt(&mut f, "steps")?;
+                let prio = take_prio(&mut f)?;
                 ensure_consumed(&f, "resolve")?;
-                let entry = lock_clean(warm)
+                let entry = lock_clean(&ctx.warm)
                     .get(job)
                     .cloned()
                     .ok_or_else(|| anyhow!("unknown or expired warm job {job}"))?;
@@ -535,7 +906,7 @@ fn handle_line(
                 // the patched couplings make the cached cold reply
                 // unreachable — drop it before the re-solve lands
                 if let Some(fp) = entry.fingerprint {
-                    lock_clean(cache).remove(fp);
+                    lock_clean(&ctx.cache).remove(fp);
                 }
                 let mut req = entry
                     .req
@@ -546,22 +917,54 @@ fn handle_line(
                 }
                 // the re-solve is a new solve, not a replay of the old id
                 req.solve_id = None;
-                Ok(ParsedSolve { req, span: false, runs: entry.runs })
+                Ok((ParsedSolve { req, span: false, runs: entry.runs }, prio))
             })();
             match parsed {
                 Err(e) => {
                     session.queue_reply(&format!("err {e}"));
                 }
-                Ok(parsed) => {
+                Ok((parsed, prio)) => {
                     let id = sched.reserve_id();
                     let control = RunControl::new();
-                    let work = ExecWork::Solve { parsed, control: control.clone() };
-                    if sched.admit(id, session.id, true, work, Some(control)) {
-                        session.blocked_on = Some(id);
-                    } else {
-                        session
-                            .queue_reply(&format!("err busy queue_depth={}", cfg.queue_depth));
+                    // a patched request references in-memory donor
+                    // state — never persisted (spec: None)
+                    let work =
+                        ExecWork::Solve { parsed, control: control.clone(), spec: None };
+                    match sched.admit(
+                        id,
+                        session.id,
+                        true,
+                        work,
+                        Some(control),
+                        prio,
+                        line.len(),
+                    ) {
+                        AdmitOutcome::Admitted => session.blocked_on = Some(id),
+                        out => {
+                            session.queue_reply(&busy_reply(&out, &ctx.cfg));
+                        }
                     }
+                }
+            }
+        }
+        "batch" => {
+            let want = (|| -> Result<usize> {
+                let mut f = kv_map(parts)?;
+                let count: Option<usize> = take_opt(&mut f, "count")?;
+                ensure_consumed(&f, "batch")?;
+                count.ok_or_else(|| anyhow!("batch requires count=<n>"))
+            })();
+            match want {
+                Err(e) => {
+                    session.queue_reply(&format!("err {e}"));
+                }
+                Ok(n) if !(1..=MAX_BATCH).contains(&n) => {
+                    session.queue_reply(&format!(
+                        "err batch count= must be in 1..={MAX_BATCH}, got {n}"
+                    ));
+                }
+                Ok(n) => {
+                    session.batch = Some(BatchState { want: n, statuses: Vec::new() });
                 }
             }
         }
@@ -569,63 +972,19 @@ fn handle_line(
             Err(e) => {
                 session.queue_reply(&format!("err {e}"));
             }
-            Ok(job) => {
-                let reply = match sched.poll(session.id, job) {
-                    None => format!("err unknown job {job}"),
-                    Some(JobState::Queued) => format!("ok job={job} state=queued"),
-                    Some(JobState::Running) => format!("ok job={job} state=running"),
-                    Some(JobState::Cancelled) => format!("ok job={job} state=cancelled"),
-                    Some(JobState::Done(reply)) => {
-                        frame(&format!("ok job={job} state=done"), reply)
-                    }
-                };
-                session.queue_reply(&reply);
-            }
+            Ok(job) => route_job_verb(RemoteVerb::Poll, job, session, sched, ctx),
         },
         "cancel" => match job_arg(parts, "cancel") {
             Err(e) => {
                 session.queue_reply(&format!("err {e}"));
             }
-            Ok(job) => {
-                let reply = match sched.cancel(session.id, job) {
-                    CancelOutcome::Dequeued => format!("ok job={job} cancel=dequeued"),
-                    CancelOutcome::Signalled => format!("ok job={job} cancel=signalled"),
-                    CancelOutcome::Late => format!("ok job={job} cancel=late"),
-                    CancelOutcome::NotCancellable => {
-                        format!("err job {job} is not cancellable")
-                    }
-                    CancelOutcome::Unknown => format!("err unknown job {job}"),
-                };
-                session.queue_reply(&reply);
-            }
+            Ok(job) => route_job_verb(RemoteVerb::Cancel, job, session, sched, ctx),
         },
         "subscribe" => match job_arg(parts, "subscribe") {
             Err(e) => {
                 session.queue_reply(&format!("err {e}"));
             }
-            Ok(job) => {
-                let (reply, done) = match sched.subscribe(session.id, job) {
-                    None => (format!("err unknown job {job}"), false),
-                    Some(JobState::Queued) => {
-                        (format!("ok job={job} subscribed state=queued"), false)
-                    }
-                    Some(JobState::Running) => {
-                        (format!("ok job={job} subscribed state=running"), false)
-                    }
-                    Some(JobState::Cancelled) => {
-                        (format!("ok job={job} subscribed state=cancelled"), false)
-                    }
-                    Some(JobState::Done(_)) => {
-                        (format!("ok job={job} subscribed state=done"), true)
-                    }
-                };
-                session.queue_reply(&reply);
-                if done {
-                    // the stream's terminator, so a late subscriber's
-                    // read loop still ends
-                    session.queue_reply(&format!("event job={job} done=1"));
-                }
-            }
+            Ok(job) => route_job_verb(RemoteVerb::Subscribe, job, session, sched, ctx),
         },
         "" => {
             session.queue_reply("err empty request");
@@ -635,6 +994,170 @@ fn handle_line(
                 "err unknown verb {other:?} (supported: {SERVE_VERBS})"
             ));
         }
+    }
+}
+
+/// A validated solve/submit admission: the parsed request, its
+/// dispatch priority, and (cold solves only) the raw key-text the
+/// persistence layer can re-parse after a restart.
+struct SolveAdmit {
+    parsed: ParsedSolve,
+    prio: Prio,
+    spec: Option<String>,
+}
+
+/// Shared `solve`/`submit`/batch-entry request parsing: the solve
+/// grammar plus the serve-layer `warm=` and `prio=` keys, which are
+/// stripped *before* the shared grammar sees the map so the sync
+/// handler's grammar stays untouched.
+fn parse_serve_solve<'a>(
+    parts: impl Iterator<Item = &'a str>,
+    warm: &Mutex<WarmTable>,
+) -> Result<SolveAdmit> {
+    let toks: Vec<&str> = parts.collect();
+    let mut f = kv_map(toks.iter().copied())?;
+    let warm_job: Option<u64> = take_opt(&mut f, "warm")?;
+    let prio = take_prio(&mut f)?;
+    let mut parsed = parse_solve(f)?;
+    let spec = match warm_job {
+        Some(w) => {
+            let table = lock_clean(warm);
+            let entry = table
+                .get(w)
+                .ok_or_else(|| anyhow!("unknown or expired warm job {w}"))?;
+            parsed.req = parsed.req.init_sigma(Arc::clone(&entry.best_sigma), entry.steps);
+            // a warm-started request references in-memory donor state
+            // and doesn't round-trip through text — not persistable
+            None
+        }
+        None => Some(toks.join(" ")),
+    };
+    Ok(SolveAdmit { parsed, prio, spec })
+}
+
+/// Strip and parse the serve-layer `prio=` key (default `normal`).
+fn take_prio(f: &mut BTreeMap<String, String>) -> Result<Prio> {
+    match take_opt::<String>(f, "prio")? {
+        None => Ok(Prio::Normal),
+        Some(p) => Prio::parse(&p)
+            .ok_or_else(|| anyhow!("unknown prio {p:?} (use high|normal|low)")),
+    }
+}
+
+/// Admit an async solve, returning its immediate status line.
+fn admit_async_solve(
+    sa: SolveAdmit,
+    cost: usize,
+    session: u64,
+    sched: &mut Scheduler,
+    ctx: &ShardCtx,
+    prog_tx: &mpsc::Sender<ProgressEvent>,
+) -> String {
+    let id = sched.reserve_id();
+    let control =
+        RunControl::with_sink(ProgressSink::new(id, ctx.cfg.sub_stride, prog_tx.clone()));
+    let work = ExecWork::Solve { parsed: sa.parsed, control: control.clone(), spec: sa.spec };
+    match sched.admit(id, session, false, work, Some(control), sa.prio, cost) {
+        AdmitOutcome::Admitted => format!("ok submitted job={id}"),
+        out => busy_reply(&out, &ctx.cfg),
+    }
+}
+
+/// The `err busy …` reply naming the refused budget.
+fn busy_reply(out: &AdmitOutcome, cfg: &ServeConfig) -> String {
+    match out {
+        AdmitOutcome::QueueFull => format!("err busy queue_depth={}", cfg.queue_depth),
+        AdmitOutcome::QuotaJobs(n) => format!("err busy quota=jobs limit={n}"),
+        AdmitOutcome::QuotaBytes(n) => format!("err busy quota=bytes limit={n}"),
+        // defensive: an admitted job never reaches here
+        AdmitOutcome::Admitted => "err busy".to_string(),
+    }
+}
+
+fn poll_reply(sched: &Scheduler, job: u64) -> String {
+    match sched.poll(job) {
+        None => format!("err unknown job {job}"),
+        Some(JobState::Queued) => format!("ok job={job} state=queued"),
+        Some(JobState::Running) => format!("ok job={job} state=running"),
+        Some(JobState::Cancelled) => format!("ok job={job} state=cancelled"),
+        Some(JobState::Done(reply)) => frame(&format!("ok job={job} state=done"), reply),
+    }
+}
+
+fn cancel_reply(sched: &mut Scheduler, job: u64) -> String {
+    match sched.cancel(job) {
+        CancelOutcome::Dequeued => format!("ok job={job} cancel=dequeued"),
+        CancelOutcome::Signalled => format!("ok job={job} cancel=signalled"),
+        CancelOutcome::Late => format!("ok job={job} cancel=late"),
+        CancelOutcome::NotCancellable => format!("err job {job} is not cancellable"),
+        CancelOutcome::Unknown => format!("err unknown job {job}"),
+    }
+}
+
+/// Subscribe `subscriber` to `job` on the local table. The bool asks
+/// the caller to follow the reply with the stream's `done=1`
+/// terminator (the job already finished — a late subscriber's read
+/// loop must still end).
+fn subscribe_reply(sched: &mut Scheduler, subscriber: u64, job: u64) -> (String, bool) {
+    match sched.subscribe(subscriber, job) {
+        None => (format!("err unknown job {job}"), false),
+        Some(JobState::Queued) => (format!("ok job={job} subscribed state=queued"), false),
+        Some(JobState::Running) => (format!("ok job={job} subscribed state=running"), false),
+        Some(JobState::Cancelled) => {
+            (format!("ok job={job} subscribed state=cancelled"), false)
+        }
+        Some(JobState::Done(_)) => (format!("ok job={job} subscribed state=done"), true),
+    }
+}
+
+/// Execute a job verb locally, or route it to the owning shard and
+/// block the session on the routed reply. A tag outside the shard
+/// range never matches a real table and falls through to the local
+/// `err unknown job`.
+fn route_job_verb(
+    verb: RemoteVerb,
+    job: u64,
+    session: &mut Session,
+    sched: &mut Scheduler,
+    ctx: &ShardCtx,
+) {
+    let owner = shard_of(job);
+    if owner == ctx.shard || owner >= ctx.shards {
+        let (reply, done) = match verb {
+            RemoteVerb::Poll => (poll_reply(sched, job), false),
+            RemoteVerb::Cancel => (cancel_reply(sched, job), false),
+            RemoteVerb::Subscribe => subscribe_reply(sched, session.id, job),
+        };
+        session.queue_reply(&reply);
+        if done {
+            session.queue_reply(&format!("event job={job} done=1"));
+        }
+    } else {
+        post(&ctx.peers[owner], ShardMsg::Remote { verb, job, from: session.id });
+        session.blocked_on = Some(job);
+    }
+}
+
+/// One `batch` entry: must be a `submit` (async — a blocking verb
+/// inside a batch would deadlock the collection), admitted immediately;
+/// its status line joins the framed batch reply.
+fn batch_entry(
+    line: &str,
+    session: u64,
+    sched: &mut Scheduler,
+    ctx: &ShardCtx,
+    prog_tx: &mpsc::Sender<ProgressEvent>,
+) -> String {
+    let mut parts = line.split_whitespace().peekable();
+    if parts.next() != Some("submit") {
+        return "err batch entries must be submit requests".to_string();
+    }
+    if parts.peek() == Some(&"solve") {
+        parts.next();
+    }
+    match parse_serve_solve(parts, &ctx.warm) {
+        Err(e) => format!("err {e}"),
+        Ok(sa) => admit_async_solve(sa, line.len(), session, sched, ctx, prog_tx),
     }
 }
 

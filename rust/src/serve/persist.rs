@@ -1,0 +1,331 @@
+//! Cache + warm-table persistence (DESIGN.md §10.7): a versioned text
+//! snapshot written on clean shutdown and reloaded at start, so a
+//! restarted server answers repeat solves bit-identically from the
+//! cache and keeps serving `warm=`/`resolve` against pre-restart jobs.
+//!
+//! §Format (`ssqa-persist v1`, line-oriented):
+//!
+//! ```text
+//! ssqa-persist v1
+//! cache fp=<hex>:<hex> lines=<K>
+//! <K verbatim reply lines>
+//! warm job=<id> steps=<executed> fp=<hex>:<hex>|- n=<spins> sigma=<hex>
+//! <the job's raw request key-text, one line>
+//! ```
+//!
+//! Cache records are ordered least-recently-used first and warm records
+//! in FIFO-insertion order, so reloading front to back rebuilds the
+//! same eviction sequence. Warm σ is persisted 1 bit per spin (σ>0),
+//! hex-encoded; the request itself is persisted as its wire key-text
+//! and re-parsed through the shared grammar — only *cold* solves carry
+//! that text (see [`WarmEntry::spec`]), warm-started and `resolve`
+//! entries reference in-memory donor state and are skipped.
+//!
+//! §Failure posture: a missing file is a silent cold start (first run);
+//! an unreadable or malformed file is a *loud* cold start (`eprintln`
+//! warning) — a serving layer must come up even when its snapshot is
+//! from a future version or a torn write. Saving writes a temp file and
+//! renames it into place so a crash mid-save never corrupts the
+//! previous snapshot.
+
+use super::cache::{Fingerprint, ResultCache};
+use super::warm::{WarmEntry, WarmTable};
+use crate::coordinator::server::{kv_map, parse_solve, ParsedSolve};
+use crate::api::spec::take_opt;
+use anyhow::anyhow;
+use std::fs;
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: &str = "ssqa-persist v1";
+
+/// What a snapshot restores: cache entries (LRU order, oldest first)
+/// and warm entries (FIFO order).
+#[derive(Default)]
+pub(crate) struct PersistedState {
+    pub cache: Vec<(Fingerprint, String)>,
+    pub warm: Vec<(u64, WarmEntry)>,
+}
+
+/// Load a snapshot, or an empty state when there is none (silently) or
+/// it cannot be used (loudly).
+pub(crate) fn load(path: &Path) -> PersistedState {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return PersistedState::default(),
+        Err(e) => {
+            eprintln!("ssqa: persist: cannot read {}: {e} (starting cold)", path.display());
+            return PersistedState::default();
+        }
+    };
+    match parse(&text) {
+        Ok(state) => state,
+        Err(why) => {
+            eprintln!("ssqa: persist: malformed {}: {why} (starting cold)", path.display());
+            PersistedState::default()
+        }
+    }
+}
+
+/// Write a snapshot atomically (temp file + rename).
+pub(crate) fn save(path: &Path, cache: &ResultCache, warm: &WarmTable) -> io::Result<()> {
+    let mut out = String::new();
+    out.push_str(MAGIC);
+    out.push('\n');
+    for (fp, reply) in cache.entries_by_recency() {
+        let k = reply.split('\n').count();
+        out.push_str(&format!("cache fp={:016x}:{:016x} lines={k}\n", fp.0, fp.1));
+        out.push_str(reply);
+        out.push('\n');
+    }
+    for (job, entry) in warm.entries_in_order() {
+        // only cold solves round-trip through the wire grammar
+        let Some(spec) = &entry.spec else { continue };
+        out.push_str(&format!(
+            "warm job={job} steps={} fp={} n={} sigma={}\n",
+            entry.steps,
+            fp_text(entry.fingerprint),
+            entry.best_sigma.len(),
+            sigma_hex(&entry.best_sigma),
+        ));
+        out.push_str(spec);
+        out.push('\n');
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(out.as_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)
+}
+
+fn parse(text: &str) -> Result<PersistedState, String> {
+    let mut lines = text.lines();
+    if lines.next() != Some(MAGIC) {
+        return Err(format!("bad or missing header (want {MAGIC:?})"));
+    }
+    let mut out = PersistedState::default();
+    while let Some(line) = lines.next() {
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("cache") => {
+                let fp = parse_fp(field(parts.next(), "fp")?)?
+                    .ok_or_else(|| "cache record without fingerprint".to_string())?;
+                let k: usize = field(parts.next(), "lines")?
+                    .parse()
+                    .map_err(|_| "bad cache lines= count".to_string())?;
+                let mut body = Vec::with_capacity(k);
+                for _ in 0..k {
+                    body.push(lines.next().ok_or_else(|| "truncated cache body".to_string())?);
+                }
+                out.cache.push((fp, body.join("\n")));
+            }
+            Some("warm") => {
+                let job: u64 = field(parts.next(), "job")?
+                    .parse()
+                    .map_err(|_| "bad warm job= id".to_string())?;
+                let steps: usize = field(parts.next(), "steps")?
+                    .parse()
+                    .map_err(|_| "bad warm steps=".to_string())?;
+                let fingerprint = parse_fp(field(parts.next(), "fp")?)?;
+                let n: usize = field(parts.next(), "n")?
+                    .parse()
+                    .map_err(|_| "bad warm n=".to_string())?;
+                let sigma = sigma_from_hex(field(parts.next(), "sigma")?, n)
+                    .ok_or_else(|| "bad warm sigma encoding".to_string())?;
+                let spec = lines
+                    .next()
+                    .ok_or_else(|| "truncated warm record (missing spec line)".to_string())?;
+                let parsed = parse_spec(spec)
+                    .map_err(|e| format!("unparseable warm spec {spec:?}: {e}"))?;
+                out.warm.push((
+                    job,
+                    WarmEntry {
+                        req: parsed.req,
+                        runs: parsed.runs,
+                        best_sigma: Arc::new(sigma),
+                        steps,
+                        fingerprint,
+                        spec: Some(spec.to_string()),
+                    },
+                ));
+            }
+            Some(other) => return Err(format!("unknown record kind {other:?}")),
+            None => continue,
+        }
+    }
+    Ok(out)
+}
+
+/// Re-parse a persisted request key-text through the shared grammar,
+/// stripping the serve-layer keys the live path strips (`prio=` is
+/// scheduling state, not request state; `warm=` must not appear — a
+/// cold spec never carries one).
+fn parse_spec(spec: &str) -> crate::Result<ParsedSolve> {
+    let mut f = kv_map(spec.split_whitespace())?;
+    let warm: Option<u64> = take_opt(&mut f, "warm")?;
+    if warm.is_some() {
+        return Err(anyhow!("persisted spec cannot be warm-started"));
+    }
+    let _prio: Option<String> = take_opt(&mut f, "prio")?;
+    parse_solve(f)
+}
+
+fn field<'a>(tok: Option<&'a str>, key: &str) -> Result<&'a str, String> {
+    tok.and_then(|t| t.strip_prefix(key))
+        .and_then(|t| t.strip_prefix('='))
+        .ok_or_else(|| format!("missing {key}= field"))
+}
+
+fn fp_text(fp: Option<Fingerprint>) -> String {
+    match fp {
+        Some(f) => format!("{:016x}:{:016x}", f.0, f.1),
+        None => "-".to_string(),
+    }
+}
+
+fn parse_fp(s: &str) -> Result<Option<Fingerprint>, String> {
+    if s == "-" {
+        return Ok(None);
+    }
+    let (a, b) = s.split_once(':').ok_or_else(|| "bad fingerprint (want a:b)".to_string())?;
+    let a = u64::from_str_radix(a, 16).map_err(|_| "bad fingerprint hex".to_string())?;
+    let b = u64::from_str_radix(b, 16).map_err(|_| "bad fingerprint hex".to_string())?;
+    Ok(Some(Fingerprint(a, b)))
+}
+
+/// Pack σ ∈ {−1,+1} one bit per spin (bit set ⇔ σ>0), hex-encoded
+/// bytes, spin `i` in bit `i%8` of byte `i/8`.
+fn sigma_hex(sigma: &[i32]) -> String {
+    let mut bytes = vec![0u8; sigma.len().div_ceil(8)];
+    for (i, &s) in sigma.iter().enumerate() {
+        if s > 0 {
+            bytes[i / 8] |= 1 << (i % 8);
+        }
+    }
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+fn sigma_from_hex(hex: &str, n: usize) -> Option<Vec<i32>> {
+    if hex.len() != n.div_ceil(8) * 2 {
+        return None;
+    }
+    let mut bytes = Vec::with_capacity(hex.len() / 2);
+    let raw = hex.as_bytes();
+    for pair in raw.chunks(2) {
+        let s = std::str::from_utf8(pair).ok()?;
+        bytes.push(u8::from_str_radix(s, 16).ok()?);
+    }
+    Some((0..n).map(|i| if bytes[i / 8] >> (i % 8) & 1 == 1 { 1 } else { -1 }).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_packing_round_trips() {
+        for n in [1usize, 7, 8, 9, 64, 65, 100] {
+            let sigma: Vec<i32> =
+                (0..n).map(|i| if i % 3 == 0 || i % 7 == 2 { 1 } else { -1 }).collect();
+            let hex = sigma_hex(&sigma);
+            assert_eq!(sigma_from_hex(&hex, n).as_deref(), Some(sigma.as_slice()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sigma_length_mismatch_is_rejected() {
+        let hex = sigma_hex(&[1, -1, 1]);
+        assert!(sigma_from_hex(&hex, 9).is_none(), "9 spins need 2 bytes, got 1");
+        assert!(sigma_from_hex("zz", 3).is_none(), "non-hex rejected");
+    }
+
+    #[test]
+    fn fingerprint_text_round_trips() {
+        let fp = Fingerprint(0xDEAD_BEEF_0123_4567, 0x0000_0000_0000_0001);
+        assert_eq!(parse_fp(&fp_text(Some(fp))), Ok(Some(fp)));
+        assert_eq!(parse_fp("-"), Ok(None));
+        assert!(parse_fp("nope").is_err());
+    }
+
+    #[test]
+    fn snapshot_round_trips_cache_and_warm_entries() {
+        let dir = std::env::temp_dir().join(format!("ssqa-persist-test-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.v1");
+
+        let mut cache = ResultCache::new(8);
+        cache.insert(Fingerprint(1, 2), "ok id=7 best=-3 lines=0".into());
+        cache.insert(Fingerprint(3, 4), "ok metrics lines=2\nline one\nline two".into());
+        // bump the first entry so recency order differs from insertion
+        let _ = cache.get(Fingerprint(1, 2));
+
+        let spec = "graph=G11 steps=5 seed=3 replicas=4";
+        let parsed = parse_spec(spec).expect("spec parses");
+        let mut warm = WarmTable::new(8);
+        warm.insert(
+            9,
+            WarmEntry {
+                req: parsed.req,
+                runs: parsed.runs,
+                best_sigma: Arc::new(vec![1, -1, 1, 1, -1]),
+                steps: 4,
+                fingerprint: Some(Fingerprint(5, 6)),
+                spec: Some(spec.to_string()),
+            },
+        );
+        // no spec ⇒ not persisted (warm-started / resolve entries)
+        warm.insert(
+            10,
+            WarmEntry {
+                req: parse_spec(spec).unwrap().req,
+                runs: 1,
+                best_sigma: Arc::new(vec![1, 1]),
+                steps: 2,
+                fingerprint: None,
+                spec: None,
+            },
+        );
+
+        save(&path, &cache, &warm).expect("save");
+        let state = load(&path);
+        assert_eq!(state.cache.len(), 2);
+        // LRU order: (3,4) is older than the re-touched (1,2)
+        assert_eq!(state.cache[0].0, Fingerprint(3, 4));
+        assert_eq!(state.cache[0].1, "ok metrics lines=2\nline one\nline two");
+        assert_eq!(state.cache[1].0, Fingerprint(1, 2));
+        assert_eq!(state.warm.len(), 1, "spec-less entries are skipped");
+        let (job, entry) = &state.warm[0];
+        assert_eq!(*job, 9);
+        assert_eq!(entry.steps, 4);
+        assert_eq!(entry.runs, 1);
+        assert_eq!(entry.best_sigma.as_slice(), &[1, -1, 1, 1, -1]);
+        assert_eq!(entry.fingerprint, Some(Fingerprint(5, 6)));
+        assert_eq!(entry.spec.as_deref(), Some(spec));
+
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_snapshot_loads_cold() {
+        let dir = std::env::temp_dir().join(format!("ssqa-persist-bad-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.v1");
+        fs::write(&path, "ssqa-persist v99\ngarbage").unwrap();
+        let state = load(&path);
+        assert!(state.cache.is_empty() && state.warm.is_empty());
+        // missing file: silent cold start
+        let state = load(&dir.join("nope.v1"));
+        assert!(state.cache.is_empty() && state.warm.is_empty());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -3,13 +3,18 @@
 //!
 //! Every `solve`/`tune`/`submit` becomes a job: admitted into a
 //! **bounded** queue (over-admission is refused loudly with `err busy`
-//! — backpressure, not buffering), then dispatched to executor lanes in
-//! **per-session round-robin** order: the scheduler rotates over
-//! sessions with queued work and takes one job per visit, so a client
-//! that enqueues fifty solves cannot starve one that enqueues one.
+//! — backpressure, not buffering) under per-client quotas, then
+//! dispatched to executor lanes in priority order (`high` → `normal` →
+//! `low`) with **per-session round-robin** inside each tier: the
+//! scheduler rotates over sessions with queued work and takes one job
+//! per visit, so a client that enqueues fifty solves cannot starve one
+//! that enqueues one.
 //!
-//! State is owned single-threaded by the event loop; executors interact
-//! only through the completion channel and each job's [`RunControl`].
+//! State is owned single-threaded by one event-loop shard; executors
+//! interact only through the completion channel and each job's
+//! [`RunControl`]. Job ids carry the owning shard in their high bits
+//! ([`Scheduler::new`]'s `tag`), so a `poll`/`cancel`/`subscribe`
+//! arriving on any shard routes to the owner (DESIGN.md §10.6).
 
 use crate::coordinator::Metrics;
 use crate::telemetry::RunControl;
@@ -23,7 +28,38 @@ use super::exec::ExecWork;
 /// Retain at most this many finished async jobs for `poll` — older
 /// replies are evicted oldest-first (the table must not grow without
 /// bound under a client that never polls).
-const DONE_RETENTION: usize = 256;
+pub(crate) const DONE_RETENTION: usize = 256;
+
+/// Dispatch priority, parsed from the `prio=` request key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Prio {
+    High,
+    Normal,
+    Low,
+}
+
+impl Prio {
+    /// Tier count / ring index (drain order: high before normal
+    /// before low).
+    const TIERS: usize = 3;
+
+    fn ring(self) -> usize {
+        match self {
+            Prio::High => 0,
+            Prio::Normal => 1,
+            Prio::Low => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "high" => Some(Prio::High),
+            "normal" => Some(Prio::Normal),
+            "low" => Some(Prio::Low),
+            _ => None,
+        }
+    }
+}
 
 /// Lifecycle of one admitted job.
 #[derive(Debug)]
@@ -52,6 +88,10 @@ pub(crate) struct JobEntry {
     work: Option<ExecWork>,
     /// Admission time — closes the `serve.request` span at completion.
     pub admitted: Instant,
+    prio: Prio,
+    /// Request-line bytes charged against the session's queued-byte
+    /// quota; refunded at dispatch (or queued-cancel).
+    cost: usize,
 }
 
 /// What `cancel` did.
@@ -66,48 +106,100 @@ pub(crate) enum CancelOutcome {
     Late,
     /// Running but has no control handle (tune jobs).
     NotCancellable,
-    /// No such job owned by this session.
+    /// No such job on this shard.
     Unknown,
+}
+
+/// What `admit` did (refusals name the exhausted budget so the serve
+/// layer can reply `err busy …` with the binding limit).
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum AdmitOutcome {
+    Admitted,
+    /// The shared queue is full (`queue_depth` bound).
+    QueueFull,
+    /// This session already holds `quota_jobs` admitted-unfinished jobs.
+    QuotaJobs(usize),
+    /// This session's queued request bytes would exceed `quota_bytes`.
+    QuotaBytes(usize),
+}
+
+/// One priority tier's dispatch state.
+#[derive(Default)]
+struct Ring {
+    /// Round-robin rotation over sessions with queued work in this tier.
+    rr: VecDeque<u64>,
+    /// Admitted-not-dispatched job ids, per session.
+    per_session: HashMap<u64, VecDeque<u64>>,
+}
+
+/// Per-session admission budget (quota enforcement).
+#[derive(Default)]
+struct Budget {
+    /// Admitted and not yet finished (queued + running).
+    jobs: usize,
+    /// Request-line bytes of *queued* jobs.
+    bytes: usize,
 }
 
 pub(crate) struct Scheduler {
     queue_cap: usize,
+    /// Per-session cap on admitted-unfinished jobs.
+    quota_jobs: usize,
+    /// Per-session cap on queued request-line bytes.
+    quota_bytes: usize,
     jobs: HashMap<u64, JobEntry>,
-    /// Admitted-not-dispatched job ids, per session.
-    per_session: HashMap<u64, VecDeque<u64>>,
-    /// Round-robin rotation over sessions with queued work.
-    rr: VecDeque<u64>,
+    rings: [Ring; Prio::TIERS],
+    budgets: HashMap<u64, Budget>,
     queued: usize,
     running: usize,
     /// Finished async jobs, oldest first (retention eviction order).
     done_order: VecDeque<u64>,
     next_job: u64,
+    /// Shard tag OR-ed into every minted id (`shard << SHARD_SHIFT`);
+    /// zero on shard 0, so single-shard ids read exactly as before.
+    tag: u64,
+    /// Last gauge value published — the shared `queue_depth` gauge is
+    /// updated by *delta* so concurrent shards don't clobber each
+    /// other's contribution.
+    published: i64,
     metrics: Arc<Metrics>,
 }
 
 impl Scheduler {
-    pub fn new(queue_cap: usize, metrics: Arc<Metrics>) -> Self {
+    pub fn new(
+        queue_cap: usize,
+        quota_jobs: usize,
+        quota_bytes: usize,
+        tag: u64,
+        metrics: Arc<Metrics>,
+    ) -> Self {
         Self {
             queue_cap: queue_cap.max(1),
+            quota_jobs: quota_jobs.max(1),
+            quota_bytes: quota_bytes.max(1),
             jobs: HashMap::new(),
-            per_session: HashMap::new(),
-            rr: VecDeque::new(),
+            rings: Default::default(),
+            budgets: HashMap::new(),
             queued: 0,
             running: 0,
             done_order: VecDeque::new(),
             next_job: 1,
+            tag,
+            published: 0,
             metrics,
         }
     }
 
-    fn publish_depth(&self) {
-        self.metrics
-            .serve
-            .queue_depth
-            .store((self.queued + self.running) as i64, Ordering::Relaxed);
+    fn publish_depth(&mut self) {
+        let now = (self.queued + self.running) as i64;
+        let delta = now - self.published;
+        if delta != 0 {
+            self.metrics.serve.queue_depth.fetch_add(delta, Ordering::Relaxed);
+            self.published = now;
+        }
     }
 
-    /// Jobs admitted and not yet finished.
+    /// Jobs admitted and not yet finished on this shard.
     pub fn depth(&self) -> usize {
         self.queued + self.running
     }
@@ -116,18 +208,27 @@ impl Scheduler {
         self.running
     }
 
-    /// Mint the next job id. Minted before [`Self::admit`] so the
-    /// caller can bake the id into the job's progress sink.
+    /// Mint the next job id (shard tag baked in). Minted before
+    /// [`Self::admit`] so the caller can bake the id into the job's
+    /// progress sink.
     pub fn reserve_id(&mut self) -> u64 {
-        let id = self.next_job;
+        let id = self.tag | self.next_job;
         self.next_job += 1;
         id
     }
 
-    /// Admit a job under a reserved id, or refuse (`false`) when the
-    /// queue is full — the caller replies `err busy`. Running jobs
-    /// don't count against the cap; it bounds *waiting* work, which is
-    /// what backpressure is about.
+    /// Raise the id floor so restored (persisted) job ids are never
+    /// re-minted. `local` is the id *without* its shard tag.
+    pub fn reseed_above(&mut self, local: u64) {
+        self.next_job = self.next_job.max(local + 1);
+    }
+
+    /// Admit a job under a reserved id, or refuse with the exhausted
+    /// budget — the caller replies `err busy`. Running jobs don't count
+    /// against the queue cap (it bounds *waiting* work, which is what
+    /// backpressure is about) but do count against the session's job
+    /// quota, which bounds what one client may hold in flight.
+    #[allow(clippy::too_many_arguments)]
     pub fn admit(
         &mut self,
         id: u64,
@@ -135,11 +236,26 @@ impl Scheduler {
         sync: bool,
         work: ExecWork,
         control: Option<RunControl>,
-    ) -> bool {
+        prio: Prio,
+        cost: usize,
+    ) -> AdmitOutcome {
         if self.queued >= self.queue_cap {
             self.metrics.serve.rejected_busy.fetch_add(1, Ordering::Relaxed);
-            return false;
+            return AdmitOutcome::QueueFull;
         }
+        let (held_jobs, held_bytes) =
+            self.budgets.get(&session).map(|b| (b.jobs, b.bytes)).unwrap_or((0, 0));
+        if held_jobs >= self.quota_jobs {
+            self.metrics.serve.rejected_quota.fetch_add(1, Ordering::Relaxed);
+            return AdmitOutcome::QuotaJobs(self.quota_jobs);
+        }
+        if held_bytes + cost > self.quota_bytes {
+            self.metrics.serve.rejected_quota.fetch_add(1, Ordering::Relaxed);
+            return AdmitOutcome::QuotaBytes(self.quota_bytes);
+        }
+        let budget = self.budgets.entry(session).or_default();
+        budget.jobs += 1;
+        budget.bytes += cost;
         self.jobs.insert(
             id,
             JobEntry {
@@ -150,38 +266,75 @@ impl Scheduler {
                 subscribers: Vec::new(),
                 work: Some(work),
                 admitted: Instant::now(),
+                prio,
+                cost,
             },
         );
-        let q = self.per_session.entry(session).or_default();
+        let ring = &mut self.rings[prio.ring()];
+        let q = ring.per_session.entry(session).or_default();
         if q.is_empty() {
-            self.rr.push_back(session);
+            ring.rr.push_back(session);
         }
         q.push_back(id);
         self.queued += 1;
         self.publish_depth();
-        true
+        AdmitOutcome::Admitted
     }
 
-    /// Take the next job to dispatch, in per-session round-robin order.
+    /// Take the next job to dispatch: drain `high` before `normal`
+    /// before `low`, in per-session round-robin order inside each tier.
     pub fn next_ready(&mut self) -> Option<(u64, ExecWork)> {
-        while let Some(session) = self.rr.pop_front() {
-            let Some(q) = self.per_session.get_mut(&session) else { continue };
-            let Some(id) = q.pop_front() else { continue };
-            if q.is_empty() {
-                self.per_session.remove(&session);
-            } else {
-                // one job per visit: the session rejoins at the back
-                self.rr.push_back(session);
+        for ring in &mut self.rings {
+            while let Some(session) = ring.rr.pop_front() {
+                let Some(q) = ring.per_session.get_mut(&session) else { continue };
+                let Some(id) = q.pop_front() else { continue };
+                if q.is_empty() {
+                    ring.per_session.remove(&session);
+                } else {
+                    // one job per visit: the session rejoins at the back
+                    ring.rr.push_back(session);
+                }
+                let entry = self.jobs.get_mut(&id).expect("queued job is in the table");
+                entry.state = JobState::Running;
+                let work = entry.work.take().expect("queued job still holds its work");
+                let (session, cost) = (entry.session, entry.cost);
+                self.queued -= 1;
+                self.running += 1;
+                // dispatched bytes leave the queued-byte budget; the
+                // job itself stays charged until completion
+                if let Some(b) = self.budgets.get_mut(&session) {
+                    b.bytes = b.bytes.saturating_sub(cost);
+                }
+                self.publish_depth();
+                return Some((id, work));
             }
-            let entry = self.jobs.get_mut(&id).expect("queued job is in the table");
-            entry.state = JobState::Running;
-            let work = entry.work.take().expect("queued job still holds its work");
-            self.queued -= 1;
-            self.running += 1;
-            self.publish_depth();
-            return Some((id, work));
         }
         None
+    }
+
+    /// Retain a finished (or cancelled-while-queued) async job for
+    /// `poll`, trimming the retention window. Both completion and
+    /// queued-cancel MUST route through here: the cancel path once
+    /// pushed onto `done_order` without trimming, so a cancel storm
+    /// grew the job table without bound.
+    fn retire_done(&mut self, id: u64) {
+        self.done_order.push_back(id);
+        while self.done_order.len() > DONE_RETENTION {
+            if let Some(old) = self.done_order.pop_front() {
+                self.jobs.remove(&old);
+            }
+        }
+    }
+
+    /// Release one finished job from its session's quota (no-op after
+    /// `drop_session` already reclaimed the whole budget).
+    fn credit_job(&mut self, session: u64) {
+        if let Some(b) = self.budgets.get_mut(&session) {
+            b.jobs = b.jobs.saturating_sub(1);
+            if b.jobs == 0 && b.bytes == 0 {
+                self.budgets.remove(&session);
+            }
+        }
     }
 
     /// Record a completion. Returns the entry's routing info; sync
@@ -199,13 +352,9 @@ impl Scheduler {
         if sync {
             self.jobs.remove(&id);
         } else {
-            self.done_order.push_back(id);
-            while self.done_order.len() > DONE_RETENTION {
-                if let Some(old) = self.done_order.pop_front() {
-                    self.jobs.remove(&old);
-                }
-            }
+            self.retire_done(id);
         }
+        self.credit_job(session);
         self.running = self.running.saturating_sub(1);
         self.publish_depth();
         self.metrics.timings.record_ns(
@@ -215,35 +364,38 @@ impl Scheduler {
         Some((session, sync, subscribers, reply))
     }
 
-    /// Current state of a session's job, for `poll`.
-    pub fn poll(&self, session: u64, id: u64) -> Option<&JobState> {
-        let entry = self.jobs.get(&id)?;
-        if entry.session != session {
-            return None;
-        }
-        Some(&entry.state)
+    /// Current state of a job, for `poll`. Not session-scoped: job ids
+    /// are unguessable enough for a cooperative protocol, and shard
+    /// routing means the poller's session lives on another shard's
+    /// table (DESIGN.md §10.6).
+    pub fn poll(&self, id: u64) -> Option<&JobState> {
+        self.jobs.get(&id).map(|e| &e.state)
     }
 
-    /// Cancel a session's job.
-    pub fn cancel(&mut self, session: u64, id: u64) -> CancelOutcome {
+    /// Cancel a job (any session's — see [`Self::poll`] on scoping).
+    pub fn cancel(&mut self, id: u64) -> CancelOutcome {
         let Some(entry) = self.jobs.get_mut(&id) else { return CancelOutcome::Unknown };
-        if entry.session != session {
-            return CancelOutcome::Unknown;
-        }
         match entry.state {
             JobState::Queued => {
                 entry.state = JobState::Cancelled;
                 entry.work = None;
-                if let Some(q) = self.per_session.get_mut(&session) {
+                let (session, prio, cost) = (entry.session, entry.prio, entry.cost);
+                let ring = &mut self.rings[prio.ring()];
+                if let Some(q) = ring.per_session.get_mut(&session) {
                     q.retain(|&j| j != id);
                     if q.is_empty() {
-                        self.per_session.remove(&session);
-                        self.rr.retain(|&s| s != session);
+                        ring.per_session.remove(&session);
+                        ring.rr.retain(|&s| s != session);
                     }
                 }
                 self.queued -= 1;
-                // retain for poll like a finished job
-                self.done_order.push_back(id);
+                if let Some(b) = self.budgets.get_mut(&session) {
+                    b.bytes = b.bytes.saturating_sub(cost);
+                }
+                self.credit_job(session);
+                // retain for poll like a finished job — through the
+                // shared retention trim, so a cancel storm stays bounded
+                self.retire_done(id);
                 self.publish_depth();
                 self.metrics.serve.cancelled.fetch_add(1, Ordering::Relaxed);
                 CancelOutcome::Dequeued
@@ -264,9 +416,6 @@ impl Scheduler {
     /// current state (`None`: unknown job).
     pub fn subscribe(&mut self, session: u64, id: u64) -> Option<&JobState> {
         let entry = self.jobs.get_mut(&id)?;
-        if entry.session != session {
-            return None;
-        }
         if matches!(entry.state, JobState::Queued | JobState::Running)
             && !entry.subscribers.contains(&session)
         {
@@ -280,18 +429,30 @@ impl Scheduler {
         self.jobs.get(&id).map(|e| e.subscribers.as_slice()).unwrap_or(&[])
     }
 
+    /// Forget every subscription a session holds on this shard (the
+    /// session died on *its* shard; cross-shard subscriptions are torn
+    /// down by an `Unsubscribe` routing message).
+    pub fn purge_subscriber(&mut self, session: u64) {
+        for entry in self.jobs.values_mut() {
+            entry.subscribers.retain(|&s| s != session);
+        }
+    }
+
     /// A session vanished: dequeue its queued jobs, signal its running
     /// ones, forget its subscriptions. Cancelled-because-gone jobs are
     /// dropped from the table outright (nobody can poll them again).
     pub fn drop_session(&mut self, session: u64) {
-        if let Some(q) = self.per_session.remove(&session) {
-            for id in q {
-                self.jobs.remove(&id);
-                self.queued -= 1;
-                self.metrics.serve.cancelled.fetch_add(1, Ordering::Relaxed);
+        for ring in &mut self.rings {
+            if let Some(q) = ring.per_session.remove(&session) {
+                for id in q {
+                    self.jobs.remove(&id);
+                    self.queued -= 1;
+                    self.metrics.serve.cancelled.fetch_add(1, Ordering::Relaxed);
+                }
             }
+            ring.rr.retain(|&s| s != session);
         }
-        self.rr.retain(|&s| s != session);
+        self.budgets.remove(&session);
         let mut drop_ids = Vec::new();
         for (&id, entry) in &mut self.jobs {
             entry.subscribers.retain(|&s| s != session);
@@ -313,5 +474,262 @@ impl Scheduler {
             self.jobs.remove(&id);
         }
         self.publish_depth();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{JobSpec, TuneJob};
+    use crate::graph::GraphSpec;
+
+    fn work() -> ExecWork {
+        ExecWork::Tune(TuneJob::new(JobSpec::named(GraphSpec::G11), 7))
+    }
+
+    fn sched(queue_cap: usize, quota_jobs: usize, quota_bytes: usize) -> Scheduler {
+        Scheduler::new(queue_cap, quota_jobs, quota_bytes, 0, Arc::new(Metrics::new()))
+    }
+
+    fn admit(s: &mut Scheduler, session: u64, prio: Prio, cost: usize) -> (u64, AdmitOutcome) {
+        let id = s.reserve_id();
+        let out = s.admit(id, session, false, work(), None, prio, cost);
+        (id, out)
+    }
+
+    /// Regression: cancelling queued jobs retains them for `poll` but
+    /// MUST trim retention like `complete` does — the cancel arm once
+    /// pushed onto `done_order` with no trim, so a client submitting
+    /// and immediately cancelling grew `jobs` without bound.
+    #[test]
+    fn cancel_storm_keeps_job_table_bounded() {
+        let mut s = sched(4096, 4096, usize::MAX / 2);
+        for _ in 0..(DONE_RETENTION * 2 + 100) {
+            let (id, out) = admit(&mut s, 1, Prio::Normal, 10);
+            assert_eq!(out, AdmitOutcome::Admitted);
+            assert_eq!(s.cancel(id), CancelOutcome::Dequeued);
+        }
+        assert!(
+            s.done_order.len() <= DONE_RETENTION,
+            "retention window blown: {}",
+            s.done_order.len()
+        );
+        assert!(
+            s.jobs.len() <= DONE_RETENTION,
+            "job table leaked cancelled entries: {}",
+            s.jobs.len()
+        );
+        // recent cancellations still poll; ancient ones are evicted
+        let (last, _) = admit(&mut s, 1, Prio::Normal, 10);
+        s.cancel(last);
+        assert!(matches!(s.poll(last), Some(JobState::Cancelled)));
+    }
+
+    #[test]
+    fn job_quota_refuses_the_flood_but_not_the_neighbor() {
+        let mut s = sched(1024, 3, usize::MAX / 2);
+        for _ in 0..3 {
+            assert_eq!(admit(&mut s, 1, Prio::Normal, 10).1, AdmitOutcome::Admitted);
+        }
+        assert_eq!(admit(&mut s, 1, Prio::Normal, 10).1, AdmitOutcome::QuotaJobs(3));
+        // another session is unaffected by session 1's exhaustion
+        assert_eq!(admit(&mut s, 2, Prio::Normal, 10).1, AdmitOutcome::Admitted);
+        assert_eq!(s.metrics.serve.rejected_quota.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn byte_quota_counts_queued_bytes_and_refunds_at_dispatch() {
+        let mut s = sched(1024, 64, 100);
+        assert_eq!(admit(&mut s, 1, Prio::Normal, 60).1, AdmitOutcome::Admitted);
+        assert_eq!(admit(&mut s, 1, Prio::Normal, 60).1, AdmitOutcome::QuotaBytes(100));
+        // dispatch refunds the queued bytes; the job quota still holds
+        assert!(s.next_ready().is_some());
+        assert_eq!(admit(&mut s, 1, Prio::Normal, 60).1, AdmitOutcome::Admitted);
+    }
+
+    #[test]
+    fn quota_is_released_on_completion_and_queued_cancel() {
+        let mut s = sched(1024, 2, 1 << 20);
+        let (a, _) = admit(&mut s, 1, Prio::Normal, 10);
+        let (b, _) = admit(&mut s, 1, Prio::Normal, 10);
+        assert_eq!(admit(&mut s, 1, Prio::Normal, 10).1, AdmitOutcome::QuotaJobs(2));
+        // queued-cancel releases one slot
+        assert_eq!(s.cancel(b), CancelOutcome::Dequeued);
+        let (c, out) = admit(&mut s, 1, Prio::Normal, 10);
+        assert_eq!(out, AdmitOutcome::Admitted);
+        // run + complete `a` — the slot frees even though the job is
+        // retained for poll
+        let (ra, _) = s.next_ready().expect("a is queued");
+        assert_eq!(ra, a);
+        s.complete(a, "ok done".into());
+        assert_eq!(admit(&mut s, 1, Prio::Normal, 10).1, AdmitOutcome::Admitted);
+        let _ = c;
+    }
+
+    #[test]
+    fn priorities_drain_high_before_normal_before_low() {
+        let mut s = sched(1024, 64, 1 << 20);
+        let (lo, _) = admit(&mut s, 1, Prio::Low, 10);
+        let (no, _) = admit(&mut s, 1, Prio::Normal, 10);
+        let (hi, _) = admit(&mut s, 2, Prio::High, 10);
+        assert_eq!(s.next_ready().unwrap().0, hi);
+        assert_eq!(s.next_ready().unwrap().0, no);
+        assert_eq!(s.next_ready().unwrap().0, lo);
+        assert!(s.next_ready().is_none());
+    }
+
+    #[test]
+    fn round_robin_is_fair_within_a_tier() {
+        let mut s = sched(1024, 64, 1 << 20);
+        let (a1, _) = admit(&mut s, 1, Prio::Normal, 10);
+        let (a2, _) = admit(&mut s, 1, Prio::Normal, 10);
+        let (b1, _) = admit(&mut s, 2, Prio::Normal, 10);
+        // session 2's single job is not starved behind session 1's two
+        assert_eq!(s.next_ready().unwrap().0, a1);
+        assert_eq!(s.next_ready().unwrap().0, b1);
+        assert_eq!(s.next_ready().unwrap().0, a2);
+    }
+
+    #[test]
+    fn shard_tag_is_baked_into_minted_ids() {
+        let tag = 3u64 << crate::serve::SHARD_SHIFT;
+        let mut s = Scheduler::new(16, 16, 1 << 20, tag, Arc::new(Metrics::new()));
+        let id = s.reserve_id();
+        assert_eq!(id >> crate::serve::SHARD_SHIFT, 3);
+        assert_eq!(id & ((1 << crate::serve::SHARD_SHIFT) - 1), 1);
+        s.reseed_above(500);
+        assert_eq!(s.reserve_id(), tag | 501);
+    }
+
+    /// Hand-rolled property test (no external crates): a seeded random
+    /// walk over admit/dispatch/complete/cancel/drop_session never
+    /// breaks the scheduler's accounting invariants.
+    #[test]
+    fn random_op_walk_preserves_accounting_invariants() {
+        struct Xorshift64Star(u64);
+        impl Xorshift64Star {
+            fn next(&mut self) -> u64 {
+                let mut x = self.0;
+                x ^= x >> 12;
+                x ^= x << 25;
+                x ^= x >> 27;
+                self.0 = x;
+                x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+            }
+        }
+
+        fn check_invariants(s: &Scheduler, seed: u64, step: usize) {
+            let ctx = || format!("seed={seed:#x} step={step}");
+            // queued matches the rings' contents exactly
+            let mut ring_ids = 0usize;
+            for ring in &s.rings {
+                for (session, q) in &ring.per_session {
+                    assert!(!q.is_empty(), "empty per-session queue retained ({})", ctx());
+                    assert!(
+                        ring.rr.contains(session),
+                        "session with queued work missing from rotation ({})",
+                        ctx()
+                    );
+                    for id in q {
+                        let e = s.jobs.get(id).unwrap_or_else(|| {
+                            panic!("ring id {id} not in job table ({})", ctx())
+                        });
+                        assert!(
+                            matches!(e.state, JobState::Queued),
+                            "ring holds non-queued job ({})",
+                            ctx()
+                        );
+                        assert_eq!(e.session, *session, "{}", ctx());
+                    }
+                    ring_ids += q.len();
+                }
+            }
+            assert_eq!(s.queued, ring_ids, "queued counter drifted ({})", ctx());
+            assert!(s.done_order.len() <= DONE_RETENTION, "{}", ctx());
+            // budgets mirror the table: jobs = queued+running per
+            // session, bytes = queued costs per session
+            let mut jobs_by: HashMap<u64, usize> = HashMap::new();
+            let mut bytes_by: HashMap<u64, usize> = HashMap::new();
+            for e in s.jobs.values() {
+                match e.state {
+                    JobState::Queued => {
+                        *jobs_by.entry(e.session).or_default() += 1;
+                        *bytes_by.entry(e.session).or_default() += e.cost;
+                    }
+                    JobState::Running => {
+                        *jobs_by.entry(e.session).or_default() += 1;
+                    }
+                    _ => {}
+                }
+            }
+            for (session, b) in &s.budgets {
+                // a dropped session's surviving Running entries carry no
+                // budget; live sessions must match exactly
+                let expect_jobs = jobs_by.get(session).copied().unwrap_or(0);
+                let expect_bytes = bytes_by.get(session).copied().unwrap_or(0);
+                assert_eq!(b.jobs, expect_jobs, "job budget drifted ({})", ctx());
+                assert_eq!(b.bytes, expect_bytes, "byte budget drifted ({})", ctx());
+            }
+        }
+
+        const CASES: u64 = 25;
+        const OPS: usize = 400;
+        for case in 0..CASES {
+            let seed = 0x5EED_0D0A ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15)) | 1;
+            let mut rng = Xorshift64Star(seed);
+            let mut s = sched(64, 8, 4096);
+            // session ids are monotonic like the real server's — a
+            // dropped id is retired, never re-minted
+            let mut sessions: Vec<u64> = (1..=4).collect();
+            let mut next_session = 5u64;
+            let mut live: Vec<u64> = Vec::new(); // admitted ids, any state
+            let mut running: Vec<u64> = Vec::new();
+            for step in 0..OPS {
+                match rng.next() % 10 {
+                    // admit dominates so queues actually fill
+                    0..=4 => {
+                        let session = sessions[(rng.next() as usize) % sessions.len()];
+                        let prio = match rng.next() % 3 {
+                            0 => Prio::High,
+                            1 => Prio::Normal,
+                            _ => Prio::Low,
+                        };
+                        let cost = (rng.next() % 700) as usize;
+                        let (id, out) = admit(&mut s, session, prio, cost);
+                        if out == AdmitOutcome::Admitted {
+                            live.push(id);
+                        }
+                    }
+                    5 | 6 => {
+                        if let Some((id, _)) = s.next_ready() {
+                            running.push(id);
+                        }
+                    }
+                    7 => {
+                        if !running.is_empty() {
+                            let id = running.swap_remove((rng.next() as usize) % running.len());
+                            s.complete(id, "ok done".into());
+                        }
+                    }
+                    8 => {
+                        if !live.is_empty() {
+                            let id = live[(rng.next() as usize) % live.len()];
+                            s.cancel(id);
+                        }
+                    }
+                    _ => {
+                        let i = (rng.next() as usize) % sessions.len();
+                        s.drop_session(sessions[i]);
+                        sessions[i] = next_session;
+                        next_session += 1;
+                        // dropped queued jobs are gone; running ones
+                        // still complete through the lane
+                        live.retain(|id| s.jobs.contains_key(id));
+                        running.retain(|id| s.jobs.contains_key(id));
+                    }
+                }
+                check_invariants(&s, seed, step);
+            }
+        }
     }
 }

@@ -39,6 +39,14 @@ pub(crate) enum InLine {
     TooLong,
 }
 
+/// Mid-`batch` collect state: the next `want - statuses.len()` request
+/// lines are batch entries whose per-entry status lines accumulate here
+/// until the framed batch reply can be emitted.
+pub(crate) struct BatchState {
+    pub want: usize,
+    pub statuses: Vec<String>,
+}
+
 pub(crate) struct Session {
     pub id: u64,
     pub stream: TcpStream,
@@ -55,6 +63,8 @@ pub(crate) struct Session {
     /// the reply is routed, preserving the protocol's strict
     /// request→reply ordering.
     pub blocked_on: Option<u64>,
+    /// Collecting the entries of an open `batch` frame.
+    pub batch: Option<BatchState>,
     /// `quit` received: flush the write buffer, then close.
     pub closing: bool,
     /// Socket closed or errored; reap at end of tick.
@@ -73,6 +83,7 @@ impl Session {
             pending: VecDeque::new(),
             wbuf: Vec::new(),
             blocked_on: None,
+            batch: None,
             closing: false,
             dead: false,
         })
@@ -127,6 +138,14 @@ impl Session {
                         // tail of an over-long line — the TooLong marker
                         // was already emitted when the cap tripped
                         self.discarding = false;
+                        continue;
+                    }
+                    if line.len() > MAX_LINE {
+                        // the cap holds even when the newline arrives in
+                        // the same absorbed chunk as the overflow (the
+                        // no-newline branch below only catches lines
+                        // still awaiting their terminator)
+                        self.pending.push_back(InLine::TooLong);
                         continue;
                     }
                     let text = String::from_utf8_lossy(&line);
@@ -193,5 +212,146 @@ impl Session {
         if self.closing && self.wbuf.is_empty() {
             self.dead = true;
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::time::{Duration, Instant};
+
+    /// A connected loopback pair: (peer end, session end).
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let peer = TcpStream::connect(l.local_addr().unwrap()).expect("connect");
+        let (sess, _) = l.accept().expect("accept");
+        (peer, sess)
+    }
+
+    fn session() -> (TcpStream, Session) {
+        let (peer, s) = pair();
+        (peer, Session::new(1, s).expect("session"))
+    }
+
+    /// Regression: an over-long line whose terminating newline arrives
+    /// in the **same** absorbed chunk must still trip the cap. Before
+    /// the fix only the no-newline branch enforced `MAX_LINE`, so a
+    /// 10 KiB single-write line (8 KiB < len ≤ cap + one 4 KiB read)
+    /// was parsed as a normal request.
+    #[test]
+    fn overlong_line_with_newline_in_same_chunk_is_rejected() {
+        let (_peer, mut s) = session();
+        let mut bytes = vec![b'x'; MAX_LINE + 2048];
+        bytes.push(b'\n');
+        // one absorb call = newline and overflow in the same chunk
+        s.absorb(&bytes);
+        assert_eq!(s.pending.len(), 1, "exactly one marker");
+        assert!(
+            matches!(s.pending.pop_front(), Some(InLine::TooLong)),
+            "over-long line must be marked TooLong, not parsed"
+        );
+        // the session survives and the next request parses normally
+        s.absorb(b"ping\n");
+        match s.pending.pop_front() {
+            Some(InLine::Line(l)) => assert_eq!(l, "ping"),
+            other => panic!("expected the follow-up line, got {other:?}"),
+        }
+    }
+
+    /// The original (no-newline-yet) path still emits a single marker
+    /// even when the overflow spans many reads.
+    #[test]
+    fn overlong_line_split_across_reads_emits_one_marker() {
+        let (_peer, mut s) = session();
+        let chunk = vec![b'y'; 4096];
+        for _ in 0..4 {
+            s.absorb(&chunk); // 16 KiB, no newline: cap trips mid-stream
+        }
+        s.absorb(b"tail\n"); // terminator of the discarded line
+        s.absorb(b"ping\n");
+        assert!(matches!(s.pending.pop_front(), Some(InLine::TooLong)));
+        match s.pending.pop_front() {
+            Some(InLine::Line(l)) => assert_eq!(l, "ping"),
+            other => panic!("expected the follow-up line, got {other:?}"),
+        }
+        assert!(s.pending.is_empty(), "discarded tail must not surface");
+    }
+
+    /// `queue_reply` past `WBUF_HARD` disconnects: a consumer that
+    /// stopped reading while requesting replies loses its session.
+    #[test]
+    fn queue_reply_hard_cap_disconnects() {
+        let (_peer, mut s) = session();
+        let big = "r".repeat(WBUF_HARD / 4);
+        for _ in 0..3 {
+            assert!(s.queue_reply(&big), "under the hard cap");
+            assert!(!s.dead);
+        }
+        assert!(!s.queue_reply(&big), "fourth reply blows the cap");
+        assert!(s.dead, "hard-cap overflow is a disconnect");
+    }
+
+    /// `queue_event` past `WBUF_EVENT_SOFT` sheds the event and keeps
+    /// the session: a slow subscriber loses samples, not its stream.
+    #[test]
+    fn queue_event_sheds_at_soft_cap_without_killing_session() {
+        let (_peer, mut s) = session();
+        let chunk = "e".repeat(16 * 1024);
+        for _ in 0..4 {
+            assert!(s.queue_reply(&chunk)); // 64 KiB + framing > soft cap
+        }
+        let backlog = s.wbuf.len();
+        assert!(!s.queue_event("event job=1 step=8 best_e=-3"), "event shed");
+        assert!(!s.dead, "shedding never kills the session");
+        assert_eq!(s.wbuf.len(), backlog, "a shed event appends nothing");
+        // the reply path (hard cap) still accepts
+        assert!(s.queue_reply("ok"), "replies ride the hard cap, not the soft one");
+    }
+
+    /// `flush` against a full kernel buffer leaves the remainder queued
+    /// (partial write), then drains completely once the peer reads.
+    #[test]
+    fn flush_partial_write_then_drain() {
+        let (peer, mut s) = session();
+        let payload = "f".repeat(8 * 1024);
+        let mut queued = 0usize;
+        let mut stalled = false;
+        // the peer never reads: the loopback send buffer must fill well
+        // before 32 MiB, leaving bytes in wbuf after a flush
+        for _ in 0..4096 {
+            assert!(s.queue_reply(&payload));
+            queued += payload.len() + 1;
+            s.flush();
+            assert!(!s.dead, "a blocked socket is WouldBlock, not an error");
+            if !s.wbuf.is_empty() {
+                stalled = true;
+                break;
+            }
+        }
+        assert!(stalled, "kernel buffers should fill before 32 MiB");
+        assert!(s.wants_write(), "left-over bytes keep write interest");
+        // drain: the peer consumes, the session flushes the remainder
+        peer.set_nonblocking(true).expect("nonblocking peer");
+        let mut received = 0usize;
+        let mut buf = [0u8; 64 * 1024];
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while received < queued {
+            match (&peer).read(&mut buf) {
+                Ok(0) => panic!("peer saw EOF mid-drain"),
+                Ok(n) => received += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    s.flush();
+                    assert!(!s.dead);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("peer read failed: {e}"),
+            }
+            assert!(Instant::now() < deadline, "drain stalled");
+        }
+        s.flush();
+        assert!(s.wbuf.is_empty(), "everything flushed once the peer drained");
+        assert!(!s.dead);
+        assert_eq!(received, queued, "every queued byte arrived exactly once");
     }
 }

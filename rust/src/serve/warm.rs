@@ -26,12 +26,22 @@ pub(crate) struct WarmEntry {
     pub runs: usize,
     /// Best ±1 configuration over the job's runs.
     pub best_sigma: Arc<Vec<i32>>,
-    /// Steps the job budgeted — the re-solve's schedule resume offset.
+    /// Steps the job's best run actually *executed* (strictly less than
+    /// its budget when convergence early-stop ended it sooner) — the
+    /// re-solve's schedule resume offset. Resuming at the budget would
+    /// skip the annealing phase the donor never reached.
     pub steps: usize,
     /// The job's result-cache line, when it was cacheable: `resolve`
     /// invalidates it because the patched couplings make the cached
     /// reply unreachable.
     pub fingerprint: Option<Fingerprint>,
+    /// Raw request key-text for a cold solve — what [`persist`]
+    /// serializes so the entry survives a restart. `None` (not
+    /// persisted) for warm-started and `resolve` entries, whose
+    /// requests don't round-trip through the wire grammar.
+    ///
+    /// [`persist`]: super::persist
+    pub spec: Option<String>,
 }
 
 /// Bounded job-id → [`WarmEntry`] map (FIFO eviction at capacity).
@@ -70,6 +80,12 @@ impl WarmTable {
     pub fn get(&self, job: u64) -> Option<&WarmEntry> {
         self.map.get(&job)
     }
+
+    /// Every entry in insertion (FIFO-eviction) order — the persistence
+    /// order, so a reloaded table evicts in the same sequence.
+    pub fn entries_in_order(&self) -> impl Iterator<Item = (u64, &WarmEntry)> {
+        self.order.iter().filter_map(move |id| self.map.get(id).map(|e| (*id, e)))
+    }
 }
 
 #[cfg(test)]
@@ -85,6 +101,7 @@ mod tests {
             best_sigma: Arc::new(vec![1; tag]),
             steps: tag,
             fingerprint: None,
+            spec: None,
         }
     }
 

@@ -172,6 +172,40 @@ fn early_stop_reduces_spin_updates() {
     }
 }
 
+/// Regression (serving-layer warm-resume drift): a warm start seeded
+/// from an early-stopped donor must resume the annealing schedule at
+/// the donor's *executed* step count, not its budget — resuming at the
+/// budget would skip the schedule phase the donor never annealed
+/// through.
+#[test]
+fn warm_resume_offset_tracks_executed_steps_of_early_stopped_donor() {
+    let p = Arc::new(MaxCut::new(torus_2d(4, 8, true, 0xC0), 8));
+    // a generous budget under an aggressive monitor: a 32-node instance
+    // plateaus long before 4000 steps, so every run stops early
+    let donor = SolveRequest::new(p.clone())
+        .steps(4000)
+        .runs(4)
+        .early_stop(ssqa::tuner::MonitorConfig { stride: 8, patience: 2, min_steps: 16, tol: 0 })
+        .run_on(&pool())
+        .unwrap();
+    assert_eq!(
+        donor.early_stops, donor.runs,
+        "every run of the over-budgeted donor should converge early"
+    );
+    assert!(
+        donor.executed_steps < donor.steps,
+        "the best run early-stopped, so executed ({}) < budget ({})",
+        donor.executed_steps,
+        donor.steps
+    );
+    let warm = SolveRequest::new(p).steps(100).init_from(&donor);
+    assert_eq!(
+        warm.schedule_offset, donor.executed_steps,
+        "resume offset is the donor's executed count, not its budget"
+    );
+    assert!(warm.schedule_offset < donor.steps, "no schedule drift past the annealed point");
+}
+
 #[test]
 fn factor_end_to_end() {
     use ssqa::problems::FactorProblem;

@@ -80,6 +80,12 @@ const SOLVE: &str = "solve graph=G11 steps=5 seed=3 replicas=4";
 /// Long enough that cancel lands while the anneal is in flight.
 const LONG_SOLVE: &str = "solve graph=G14 steps=20000 seed=5 replicas=16";
 
+/// [`SOLVE`] with its seed swapped out — the grammar rejects repeated
+/// keys, so appending a second `seed=` is not an option.
+fn solve_seed(seed: impl std::fmt::Display) -> String {
+    SOLVE.replace("seed=3", &format!("seed={seed}"))
+}
+
 #[test]
 fn concurrent_clients_mix_verbs_and_all_complete() {
     let (handle, join) = spawn_server(small_cfg(2));
@@ -93,12 +99,12 @@ fn concurrent_clients_mix_verbs_and_all_complete() {
             match i % 4 {
                 // sync solve
                 0 => {
-                    let r = c.roundtrip(&format!("{SOLVE} seed={}", 100 + i));
+                    let r = c.roundtrip(&solve_seed(100 + i));
                     assert!(r.starts_with("ok id="), "{r}");
                 }
                 // async submit → poll to completion
                 1 => {
-                    let r = c.roundtrip(&format!("submit {SOLVE} seed={}", 200 + i));
+                    let r = c.roundtrip(&format!("submit {}", solve_seed(200 + i)));
                     assert!(r.starts_with("ok submitted job="), "{r}");
                     let job: u64 = r.rsplit("job=").next().unwrap().parse().unwrap();
                     let deadline = Instant::now() + Duration::from_secs(30);
@@ -130,7 +136,7 @@ fn concurrent_clients_mix_verbs_and_all_complete() {
                 _ => {
                     let e = c.roundtrip("solve graph=NOPE");
                     assert!(e.starts_with("err "), "{e}");
-                    let r = c.roundtrip(&format!("{SOLVE} seed={}", 300 + i));
+                    let r = c.roundtrip(&solve_seed(300 + i));
                     assert!(r.starts_with("ok id="), "{r}");
                 }
             }
@@ -428,6 +434,173 @@ fn factorization_solves_over_the_wire() {
     join.join().unwrap().unwrap();
 }
 
+/// Regression for the request-line cap bypass: when an overlong line
+/// arrived *with its newline in the same read chunk*, the newline
+/// branch skipped the length check and parsed it as a normal request.
+/// A 10 KiB single write is the deterministic socket-level repro.
+#[test]
+fn ten_kib_single_write_line_is_rejected_and_session_survives() {
+    let (handle, join) = spawn_server(small_cfg(1));
+    let mut c = Client::connect(handle.addr());
+    let mut payload = vec![b'x'; 10 * 1024];
+    payload.push(b'\n');
+    c.writer.write_all(&payload).expect("single write");
+    let r = c.read_reply();
+    assert!(r.starts_with("err line_too_long"), "{r}");
+    assert_eq!(c.roundtrip("ping"), "pong", "session survives the cap");
+    handle.stop();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn four_shards_route_cross_shard_poll_cancel_subscribe() {
+    let cfg =
+        ServeConfig { workers: 4, shards: 4, sub_stride: 16, ..ServeConfig::default() };
+    let (handle, join) = spawn_server(cfg);
+    let addr = handle.addr();
+    // round-robin accept: the first connection lands on shard 0, the
+    // second on shard 1 — so b's job ids carry shard 1's tag while a
+    // and c live elsewhere, forcing every verb below across shards
+    let mut a = Client::connect(addr);
+    assert_eq!(a.roundtrip("ping"), "pong");
+    let mut b = Client::connect(addr);
+    assert_eq!(b.roundtrip("ping"), "pong");
+    let r = b.roundtrip(&format!("submit {LONG_SOLVE}"));
+    assert!(r.starts_with("ok submitted job="), "{r}");
+    let job: u64 = r.rsplit("job=").next().unwrap().parse().unwrap();
+    assert_eq!(job >> 48, 1, "job id carries its owner shard's tag: {job}");
+    // cross-shard poll routes to the owner and the reply routes home
+    let p = a.roundtrip(&format!("poll job={job}"));
+    assert!(p.starts_with(&format!("ok job={job} state=")), "{p}");
+    // cross-shard subscribe: a streams a shard-1 job's events
+    let s = a.roundtrip(&format!("subscribe job={job}"));
+    assert!(s.starts_with(&format!("ok job={job} subscribed state=")), "{s}");
+    // cross-shard cancel from a third session (shard 2)
+    let mut c = Client::connect(addr);
+    let cr = c.roundtrip(&format!("cancel job={job}"));
+    assert!(cr.starts_with(&format!("ok job={job} cancel=")), "{cr}");
+    // the cancelled job winds down and a's subscription still ends in
+    // the cross-shard done terminator
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let line = a.read_line();
+        assert!(line.starts_with(&format!("event job={job} ")), "{line}");
+        if line.contains("done=1") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no done terminator across shards");
+    }
+    // unknown ids err whichever shard is asked, local tag or not
+    let e = a.roundtrip("poll job=77777");
+    assert!(e.starts_with("err unknown job"), "{e}");
+    let e = b.roundtrip(&format!("poll job={}", (3u64 << 48) | 9999));
+    assert!(e.starts_with("err unknown job"), "{e}");
+    handle.stop();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn job_quota_refuses_a_flooding_client_but_not_its_neighbor() {
+    let cfg = ServeConfig { workers: 1, quota_jobs: 2, ..ServeConfig::default() };
+    let (handle, join) = spawn_server(cfg);
+    let addr = handle.addr();
+    let mut flood = Client::connect(addr);
+    let mut jobs: Vec<u64> = Vec::new();
+    // one running + one queued exhausts a quota of 2 …
+    for _ in 0..2 {
+        let r = flood.roundtrip(&format!("submit {LONG_SOLVE}"));
+        assert!(r.starts_with("ok submitted job="), "{r}");
+        jobs.push(r.rsplit("job=").next().unwrap().parse().unwrap());
+    }
+    let r = flood.roundtrip(&format!("submit {LONG_SOLVE}"));
+    assert!(r.starts_with("err busy quota=jobs limit=2"), "{r}");
+    // … while a neighbor session is still admitted (the whole point:
+    // the shared queue is empty enough, one client just can't own it)
+    let mut neighbor = Client::connect(addr);
+    let r = neighbor
+        .roundtrip(&format!("submit {}", LONG_SOLVE.replace("seed=5", "seed=77")));
+    assert!(r.starts_with("ok submitted job="), "{r}");
+    jobs.push(r.rsplit("job=").next().unwrap().parse().unwrap());
+    // cancelling a queued job releases its quota slot immediately
+    let cr = flood.roundtrip(&format!("cancel job={}", jobs[1]));
+    assert!(cr.starts_with("ok job="), "{cr}");
+    let r = flood
+        .roundtrip(&format!("submit {}", LONG_SOLVE.replace("seed=5", "seed=78")));
+    assert!(r.starts_with("ok submitted job="), "quota released by cancel: {r}");
+    jobs.push(r.rsplit("job=").next().unwrap().parse().unwrap());
+    // teardown: cancel the backlog so the server exits promptly
+    for j in jobs {
+        let _ = flood.roundtrip(&format!("cancel job={j}"));
+    }
+    handle.stop();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn batch_verb_frames_per_entry_statuses() {
+    let (handle, join) = spawn_server(small_cfg(2));
+    let mut c = Client::connect(handle.addr());
+    // three pipelined entries behind the header; one framed reply
+    c.send("batch count=3");
+    c.send(&format!("submit {SOLVE}"));
+    c.send("submit solve graph=NOPE");
+    c.send("ping"); // not a submit: a per-entry error, batch continues
+    let r = c.read_reply();
+    assert!(r.starts_with("ok batch count=3 lines=3"), "{r}");
+    let body: Vec<&str> = r.lines().skip(1).collect();
+    assert_eq!(body.len(), 3, "{r}");
+    assert!(body[0].starts_with("ok submitted job="), "{}", body[0]);
+    assert!(body[1].starts_with("err "), "{}", body[1]);
+    assert!(body[2].starts_with("err batch entries must be submit"), "{}", body[2]);
+    // the admitted entry is a real job
+    let job: u64 = body[0].rsplit("job=").next().unwrap().parse().unwrap();
+    assert!(poll_until_done(&mut c, job).starts_with("ok id="), "batch job completes");
+    // malformed headers never enter collect mode
+    let e = c.roundtrip("batch");
+    assert!(e.starts_with("err batch requires count="), "{e}");
+    let e = c.roundtrip("batch count=0");
+    assert!(e.starts_with("err batch count="), "{e}");
+    assert_eq!(c.roundtrip("ping"), "pong");
+    handle.stop();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn persistence_round_trips_cache_and_warm_table_across_restart() {
+    let dir = std::env::temp_dir().join(format!("ssqa-persist-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("snapshot.ssqa");
+    let cfg =
+        || ServeConfig { workers: 1, persist: Some(path.clone()), ..ServeConfig::default() };
+    // first server: compute one solve (a cache line + a warm entry)
+    let (handle, join) = spawn_server(cfg());
+    let mut c = Client::connect(handle.addr());
+    let r = c.roundtrip(&format!("submit {SOLVE}"));
+    assert!(r.starts_with("ok submitted job="), "{r}");
+    let job: u64 = r.rsplit("job=").next().unwrap().parse().unwrap();
+    let first = poll_until_done(&mut c, job);
+    assert!(first.starts_with("ok id="), "{first}");
+    drop(c);
+    handle.stop();
+    join.join().unwrap().unwrap();
+    assert!(path.exists(), "snapshot written at shutdown");
+    // second server: the reply replays bit-identically from the
+    // restored cache, and the warm job is still warm-startable AND
+    // resolvable under its old id
+    let (handle, join) = spawn_server(cfg());
+    let mut c = Client::connect(handle.addr());
+    let replay = c.roundtrip(SOLVE);
+    assert_eq!(replay, first, "restored cache must replay the reply verbatim");
+    let w = c.roundtrip(&format!("{SOLVE} warm={job}"));
+    assert!(w.starts_with("ok id="), "restored warm entry seeds a warm start: {w}");
+    let rr = c.roundtrip(&format!("resolve job={job} patch=0:1:2 steps=20"));
+    assert!(rr.starts_with("ok id="), "restored warm entry resolves: {rr}");
+    handle.stop();
+    join.join().unwrap().unwrap();
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir(&dir);
+}
+
 /// Soak smoke: the actual `ssqa serve` binary under concurrent scripted
 /// clients. Run explicitly (CI does): `cargo test --test serve_e2e -- --ignored`.
 #[test]
@@ -484,7 +657,7 @@ fn soak_binary_under_concurrent_clients() {
         threads.push(std::thread::spawn(move || {
             let mut c = Client::connect(addr);
             for round in 0..4u32 {
-                let r = c.roundtrip(&format!("{SOLVE} seed={}", i * 100 + round));
+                let r = c.roundtrip(&solve_seed(i * 100 + round));
                 assert!(r.starts_with("ok id="), "{r}");
                 let h = c.roundtrip("health");
                 assert!(h.starts_with("ok health"), "{h}");
